@@ -1,0 +1,93 @@
+//! §Perf instrumentation (P3/P5): batch-size amortization of the PJRT
+//! dispatch floor on the tiny nets, and the interpret-mode Pallas kernel
+//! tax (pallas vs XLA-native variant of the same folded graph).
+//!
+//! ```bash
+//! cargo run --release --example batch_amortization
+//! ```
+
+use std::time::Instant;
+
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+use compiled_nn::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let m = Manifest::load_default()?;
+    let rt = Runtime::new()?;
+
+    println!("== P3: batch amortization (compiled engine)");
+    for name in ["c_htwk", "c_bh"] {
+        let entry = m.entry(name)?;
+        let model = CompiledModel::load(&rt, &m, name)?;
+        for b in [1usize, 8, 32] {
+            let mut rng = SplitMix64::new(1);
+            let mut shape = vec![b];
+            shape.extend_from_slice(&entry.input_shape);
+            let n: usize = shape.iter().product();
+            let x = Tensor::from_vec(&shape, rng.uniform_vec(n));
+            for _ in 0..20 {
+                model.execute(&rt, &x)?;
+            }
+            let iters = 2000 / b.max(1);
+            let t = Instant::now();
+            for _ in 0..iters {
+                model.execute(&rt, &x)?;
+            }
+            let us = t.elapsed().as_secs_f64() * 1e6 / iters as f64;
+            println!("{name} b{b}: {:>8.1} µs/batch = {:>7.2} µs/item", us, us / b as f64);
+        }
+    }
+
+    println!("\n== P5: interpret-mode Pallas kernel tax (batch 1)");
+    println!("{:<12} {:>12} {:>14} {:>8}", "model", "pallas µs", "xla-native µs", "tax");
+    for name in ["c_htwk", "c_bh", "detector", "segmenter"] {
+        let entry = m.entry(name)?;
+        // regular artifact (pallas kernels inside)
+        let model = CompiledModel::load_buckets(&rt, &m, entry, &[1])?;
+        // nopallas variant compiled directly from its HLO file
+        let var = m
+            .artifacts_dir
+            .join(format!("{name}.nopallas.b1.hlo.txt"));
+        let (exe, _) = rt.compile_hlo(&var)?;
+
+        let mut rng = SplitMix64::new(2);
+        let mut shape = vec![1usize];
+        shape.extend_from_slice(&entry.input_shape);
+        let n: usize = shape.iter().product();
+        let x = Tensor::from_vec(&shape, rng.uniform_vec(n));
+
+        let t_pallas = {
+            for _ in 0..20 {
+                model.execute(&rt, &x)?;
+            }
+            let t = Instant::now();
+            for _ in 0..500 {
+                model.execute(&rt, &x)?;
+            }
+            t.elapsed().as_secs_f64() * 1e6 / 500.0
+        };
+        let t_native = {
+            let buf = rt.client().buffer_from_host_buffer::<f32>(x.data(), x.shape(), None)?;
+            for _ in 0..20 {
+                exe.execute_b(&[&buf])?[0][0].to_literal_sync()?;
+            }
+            let t = Instant::now();
+            for _ in 0..500 {
+                exe.execute_b(&[&buf])?[0][0].to_literal_sync()?;
+            }
+            t.elapsed().as_secs_f64() * 1e6 / 500.0
+        };
+        println!(
+            "{:<12} {:>12.1} {:>14.1} {:>7.2}×",
+            name,
+            t_pallas,
+            t_native,
+            t_pallas / t_native
+        );
+    }
+    println!("\n(the tax is the CPU interpret-mode cost of the in-HLO Pallas loops; a\n\
+             real TPU Mosaic lowering replaces exactly these ops — see EXPERIMENTS.md P5)");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Model zoo walk-through: register every evaluation network with the
+//! coordinator (exercising the compile cache), print the §3 analysis for
+//! each (folding, memory plan, cost model), and run one inference through
+//! the serving path.
+//!
+//! ```bash
+//! cargo run --release --example model_zoo
+//! ```
+
+use compiled_nn::compiler::{cost, fuse, memory};
+use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
+use compiled_nn::model::load::load_model;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load_default()?;
+    let coord = Coordinator::start(manifest.clone(), CoordinatorConfig::default())?;
+    let mut rng = SplitMix64::new(1);
+
+    println!(
+        "{:<14} {:>10} {:>8} {:>11} {:>9} {:>10} {:>10} {:>9}",
+        "model", "params", "layers", "compile ms", "BN→0", "mem saved", "MACs(M)", "serve ms"
+    );
+    for name in manifest.models.keys() {
+        let spec = load_model(&manifest.models_dir, name)?;
+        let folded = fuse::fold_batchnorm(&spec);
+        let plan = memory::plan(&folded, true)?;
+        let naive_plan = memory::plan(&folded, false)?;
+        let saved = 100.0 * (1.0 - plan.peak_elements() as f64 / naive_plan.naive_total as f64);
+        let macs = cost::total_macs(&folded) as f64 / 1e6;
+
+        // through the serving path (registers → compiles → one inference)
+        let client = coord.register(name)?;
+        let item: usize = client.info.input_shape.iter().product();
+        let x = Tensor::from_vec(&client.info.input_shape.clone(), rng.uniform_vec(item));
+        let t = std::time::Instant::now();
+        let _out = client.infer(x)?;
+        let serve_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        println!(
+            "{:<14} {:>10} {:>8} {:>11.1} {:>4}→{:<4} {:>9.1}% {:>10.1} {:>9.2}",
+            name,
+            spec.param_count(),
+            spec.layers.len(),
+            client.info.compile_ms,
+            fuse::bn_count(&spec),
+            fuse::bn_count(&folded),
+            saved,
+            macs,
+            serve_ms
+        );
+    }
+
+    // registry idempotency: re-registering returns the existing client
+    // without touching the executor (the compile cache additionally dedups
+    // artifact-identical loads inside the executor thread).
+    let t = std::time::Instant::now();
+    let again = coord.register("c_bh")?;
+    println!(
+        "\nre-register c_bh: returned existing client in {:.3} ms (original compile was {:.1} ms)",
+        t.elapsed().as_secs_f64() * 1e3,
+        again.info.compile_ms
+    );
+    print!("\nserving metrics:\n{}", coord.render_metrics());
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Field segmentation demo — the paper's 80×80 field/non-field network on a
+//! synthetic pitch image, run through all three engines, with an ASCII
+//! rendering of the predicted mask and agreement statistics.
+//!
+//! ```bash
+//! cargo run --release --example segmenter_demo
+//! ```
+
+use compiled_nn::compiler::exec::{CompileOptions, OptInterp};
+use compiled_nn::model::load::load_model;
+use compiled_nn::nn::interp::NaiveInterp;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+use compiled_nn::util::rng::SplitMix64;
+
+const S: usize = 80;
+
+/// Synthetic camera image: green-ish field in the lower ~60%, bright sky
+/// above a noisy horizon, plus a few field lines.
+fn synth_pitch(rng: &mut SplitMix64) -> (Tensor, Vec<bool>) {
+    let mut data = vec![0.0f32; S * S * 3];
+    let mut truth = vec![false; S * S];
+    for y in 0..S {
+        let horizon = 28 + (rng.next_uniform() * 3.0) as isize;
+        for x in 0..S {
+            let i = (y * S + x) * 3;
+            let is_field = (y as isize) > horizon;
+            truth[y * S + x] = is_field;
+            if is_field {
+                // field: strong G, weak R/B (+ white lines)
+                let line = y % 20 == 0 || x % 26 == 0;
+                let g = if line { 0.9 } else { rng.range(0.45, 0.7) };
+                data[i] = if line { 0.9 } else { rng.range(0.05, 0.2) };
+                data[i + 1] = g;
+                data[i + 2] = if line { 0.9 } else { rng.range(0.05, 0.2) };
+            } else {
+                // sky/stands: bright, desaturated
+                let v = rng.range(0.6, 0.95);
+                data[i] = v;
+                data[i + 1] = v * rng.range(0.85, 1.0);
+                data[i + 2] = v;
+            }
+        }
+    }
+    (Tensor::from_vec(&[1, S, S, 3], data), truth)
+}
+
+fn mask_from(out: &Tensor) -> Vec<bool> {
+    // output [1, 80, 80, 2] softmax; class 1 = field
+    out.data()
+        .chunks_exact(2)
+        .map(|p| p[1] > p[0])
+        .collect()
+}
+
+fn render(mask: &[bool]) {
+    for y in (0..S).step_by(4) {
+        let mut line = String::new();
+        for x in (0..S).step_by(2) {
+            line.push(if mask[y * S + x] { '█' } else { '·' });
+        }
+        println!("{line}");
+    }
+}
+
+fn agreement(a: &[bool], b: &[bool]) -> f64 {
+    a.iter().zip(b).filter(|(x, y)| x == y).count() as f64 / a.len() as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load_default()?;
+    let mut rng = SplitMix64::new(31337);
+    let (img, _truth) = synth_pitch(&mut rng);
+
+    // compiled engine
+    let rt = Runtime::new()?;
+    let model = CompiledModel::load(&rt, &manifest, "segmenter")?;
+    let t = std::time::Instant::now();
+    let compiled = model.execute(&rt, &img)?;
+    let compiled_ms = t.elapsed().as_secs_f64() * 1e3;
+    let mask_c = mask_from(&compiled[0]);
+
+    // interpreters
+    let spec = load_model(&manifest.models_dir, "segmenter")?;
+    let naive_out = NaiveInterp::new(spec.clone())?.infer(&img)?;
+    let mask_n = mask_from(&naive_out[0]);
+    let mut opt = OptInterp::new(&spec, CompileOptions::default())?;
+    let opt_out = opt.infer(&img)?;
+    let mask_o = mask_from(&opt_out[0]);
+
+    println!("predicted field mask (compiled engine, {compiled_ms:.2} ms/frame):\n");
+    render(&mask_c);
+    println!("\nfield coverage: {:.1}%", 100.0 * mask_c.iter().filter(|&&v| v).count() as f64 / mask_c.len() as f64);
+    println!("engine agreement (mask pixels):");
+    println!("  compiled vs naive:     {:.2}%", 100.0 * agreement(&mask_c, &mask_n));
+    println!("  optimized vs naive:    {:.2}%", 100.0 * agreement(&mask_o, &mask_n));
+    println!("max |Δ| on softmax maps:");
+    println!("  compiled vs naive:     {:.2e}", naive_out[0].max_abs_diff(&compiled[0]));
+    println!("  optimized vs naive:    {:.2e}", naive_out[0].max_abs_diff(&opt_out[0]));
+    println!("\n(untrained seeded weights — the mask is arbitrary; what matters is \
+             that three independent execution paths agree within §3.4 bounds)");
+    Ok(())
+}

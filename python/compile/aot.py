@@ -1,0 +1,183 @@
+"""AOT driver: lower every (network, batch-bucket) pair to HLO *text* and
+emit the runtime manifest.
+
+HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Outputs:
+  models/<name>.json + models/<name>.weights.bin   (nnspec, for the Rust
+                                                    interpreter engines)
+  artifacts/<name>.b<B>.hlo.txt                    (per batch bucket)
+  artifacts/golden/<name>.json                     (exact-oracle outputs)
+  artifacts/manifest.json
+
+Python runs only here (`make artifacts`); the Rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import keras_io, networks, optimize
+from .model import BuildConfig, build_forward, weight_arg_order
+from .spec import ModelSpec
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: baked weights ARE the payload (the paper's
+    # weights-as-immediates); the default printer elides them as `{...}`,
+    # which would silently zero the model on the rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def golden_input(spec: ModelSpec, batch: int) -> np.ndarray:
+    """Deterministic test input; the Rust side regenerates it bit-identically
+    (SplitMix64-seeded uniform [-1, 1), see util/rng.rs)."""
+    from .testdata import splitmix_uniform
+
+    return splitmix_uniform(spec.seed ^ 0xDEADBEEF,
+                            (batch, *spec.input_shape))
+
+
+def lower_model(spec: ModelSpec, batch: int, cfg: BuildConfig):
+    fn, ws = build_forward(spec, cfg)
+    x_spec = jax.ShapeDtypeStruct((batch, *spec.input_shape), jnp.float32)
+    if cfg.baked:
+        return jax.jit(fn).lower(x_spec), ws
+    w_specs = [jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in ws]
+    return jax.jit(fn).lower(x_spec, *w_specs), ws
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--models-dir", default="../models")
+    p.add_argument("--only", default=None, help="comma-separated model names")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    os.makedirs(os.path.join(args.out_dir, "golden"), exist_ok=True)
+    os.makedirs(args.models_dir, exist_ok=True)
+
+    names = (args.only.split(",") if args.only else list(networks.ALL))
+    manifest: dict = {"format": "manifest-v1", "models": {}}
+
+    for name in names:
+        t0 = time.time()
+        spec = networks.build(name)
+        spec.save(args.models_dir)
+        keras_io.export_keras(spec, args.models_dir)
+        baked = spec.param_count <= networks.BAKE_THRESHOLD
+        buckets = networks.BATCH_BUCKETS[name]
+
+        # ---- golden: exact oracle (no approx, no pallas, unfolded) -------
+        x1 = golden_input(spec, 1)
+        exact_fn, _ = build_forward(
+            spec, BuildConfig(baked=True, approx=False, use_pallas=False))
+        exact_out = [np.asarray(o) for o in jax.jit(exact_fn)(x1)]
+        golden = {
+            "name": name,
+            "input_seed_xor": "0xDEADBEEF",
+            "outputs": [
+                {
+                    "shape": list(o.shape),
+                    "sample": [float(v) for v in o.ravel()[:64]],
+                    "sum": float(o.sum()),
+                    "absmax": float(np.abs(o).max()),
+                }
+                for o in exact_out
+            ],
+        }
+        with open(os.path.join(args.out_dir, "golden", f"{name}.json"), "w") as f:
+            json.dump(golden, f, indent=1)
+
+        # ---- compiled path: folded + approx + pallas ----------------------
+        folded = optimize.fold_batchnorm(spec)
+        cfg = BuildConfig(baked=baked, approx=True, use_pallas=True)
+        files = {}
+        for b in buckets:
+            lowered, ws = lower_model(folded, b, cfg)
+            text = to_hlo_text(lowered)
+            fname = f"{name}.b{b}.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            files[str(b)] = {
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+        out_shapes = [list(np.asarray(o).shape) for o in exact_out]
+
+        # Ablation variant for the baked nets: same folded graph without the
+        # Pallas kernels (XLA-native dot/conv only). Quantifies the
+        # interpret-mode kernel tax on CPU — see EXPERIMENTS.md §Perf P5;
+        # on a real TPU the Mosaic lowering replaces this path entirely.
+        variants = {}
+        if baked:
+            lowered, _ = lower_model(
+                folded, 1, BuildConfig(baked=True, approx=True,
+                                       use_pallas=False))
+            text = to_hlo_text(lowered)
+            fname = f"{name}.nopallas.b1.hlo.txt"
+            with open(os.path.join(args.out_dir, fname), "w") as f:
+                f.write(text)
+            variants["nopallas_b1"] = {
+                "file": fname,
+                "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                "bytes": len(text),
+            }
+
+        entry = {
+            "input_shape": list(spec.input_shape),
+            "output_shapes_b1": out_shapes,
+            "batches": buckets,
+            "baked": baked,
+            "approx": True,
+            "params": spec.param_count,
+            "seed": spec.seed,
+            "artifacts": files,
+            "spec_file": f"{name}.json",
+        }
+        if variants:
+            entry["variants"] = variants
+        if not baked:
+            # runtime feeds these (from the *folded* spec blob) as args,
+            # in this exact order, after the input literal
+            entry["weights_file"] = f"{name}.folded.weights.bin"
+            folded.weights.astype("<f4").tofile(
+                os.path.join(args.models_dir, f"{name}.folded.weights.bin"))
+            entry["weight_args"] = [
+                {
+                    "layer": ln,
+                    "key": k,
+                    "offset": folded.layer(ln).weights[k].offset,
+                    "shape": folded.layer(ln).weights[k].shape,
+                }
+                for ln, k in weight_arg_order(folded)
+            ]
+        manifest["models"][name] = entry
+        print(f"[aot] {name}: params={spec.param_count} baked={baked} "
+              f"buckets={buckets} ({time.time()-t0:.1f}s)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest for {len(names)} models")
+
+
+if __name__ == "__main__":
+    main()

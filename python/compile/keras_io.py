@@ -1,0 +1,145 @@
+"""Keras-format model export — the paper's front end reads "an HDF5 file as
+written by the Python library Keras" (§3.1). The HDF5 C library is not
+available in this image (DESIGN.md substitution 3), so we emit the same
+information content the paper consumes:
+
+  <name>.keras.json — Keras *Functional* architecture JSON, the exact
+      `model.to_json()` schema (class_name/config/inbound_nodes), and
+  the weight blob stays the nnspec `.weights.bin`, with each Keras layer's
+      variables located via a `weights_map` section appended to the JSON
+      (HDF5 group → (offset, shape) table).
+
+The Rust importer (`model/keras.rs`) parses this subset of the Keras schema
+back into a ModelSpec; `tests/test_keras.py` and rust `tests/keras.rs` check
+the round trip end to end.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .spec import Layer, ModelSpec
+
+_ACT_TO_KERAS = {
+    "linear": "linear",
+    "relu": "relu",
+    "relu6": "relu6",
+    "leaky_relu": "leaky_relu",
+    "sigmoid": "sigmoid",
+    "tanh": "tanh",
+}
+
+
+def _keras_layer(l: Layer, spec: ModelSpec) -> dict:
+    cfg: dict = {"name": l.name, "trainable": False, "dtype": "float32"}
+    a = l.attrs
+    if l.op == "conv2d":
+        class_name = "Conv2D"
+        cfg.update(
+            filters=a["out_ch"],
+            kernel_size=[a["kh"], a["kw"]],
+            strides=[a["stride"], a["stride"]],
+            padding=a["padding"],
+            use_bias=bool(a.get("use_bias")),
+            activation=_ACT_TO_KERAS[l.activation],
+            data_format="channels_last",
+        )
+    elif l.op == "depthwise_conv2d":
+        class_name = "DepthwiseConv2D"
+        cfg.update(
+            kernel_size=[a["kh"], a["kw"]],
+            strides=[a["stride"], a["stride"]],
+            padding=a["padding"],
+            use_bias=bool(a.get("use_bias")),
+            activation=_ACT_TO_KERAS[l.activation],
+            depth_multiplier=1,
+            data_format="channels_last",
+        )
+    elif l.op == "dense":
+        class_name = "Dense"
+        cfg.update(units=a["units"], use_bias="bias" in l.weights,
+                   activation=_ACT_TO_KERAS[l.activation])
+    elif l.op == "batchnorm":
+        class_name = "BatchNormalization"
+        cfg.update(axis=-1, epsilon=a.get("epsilon", 1e-3))
+    elif l.op == "maxpool":
+        class_name = "MaxPooling2D"
+        cfg.update(pool_size=[a["kh"], a["kw"]],
+                   strides=[a["stride"], a["stride"]], padding="valid")
+    elif l.op == "avgpool":
+        class_name = "AveragePooling2D"
+        cfg.update(pool_size=[a["kh"], a["kw"]],
+                   strides=[a["stride"], a["stride"]], padding="valid")
+    elif l.op == "globalavgpool":
+        class_name = "GlobalAveragePooling2D"
+    elif l.op == "upsample":
+        class_name = "UpSampling2D"
+        cfg.update(size=[a["factor"], a["factor"]],
+                   interpolation="nearest")
+    elif l.op == "zeropad":
+        t, b, lf, r = a["pad"]
+        class_name = "ZeroPadding2D"
+        cfg.update(padding=[[t, b], [lf, r]])
+    elif l.op == "activation":
+        class_name = "Activation"
+        cfg.update(activation=_ACT_TO_KERAS[l.activation])
+    elif l.op == "softmax":
+        class_name = "Softmax"
+        cfg.update(axis=-1)
+    elif l.op == "add":
+        class_name = "Add"
+    elif l.op == "concat":
+        class_name = "Concatenate"
+        cfg.update(axis=-1)
+    elif l.op == "flatten":
+        class_name = "Flatten"
+        cfg.update(data_format="channels_last")
+    else:
+        raise ValueError(f"op {l.op} has no Keras equivalent")
+
+    inbound = [[[i, 0, 0, {}] for i in l.inputs]]
+    return {"class_name": class_name, "name": l.name, "config": cfg,
+            "inbound_nodes": inbound}
+
+
+def export_keras(spec: ModelSpec, models_dir: str) -> str:
+    """Write `<name>.keras.json` next to the nnspec files; weights reuse
+    `<name>.weights.bin`. Returns the JSON path."""
+    layers = [
+        {
+            "class_name": "InputLayer",
+            "name": "input",
+            "config": {
+                "name": "input",
+                "batch_input_shape": [None, *spec.input_shape],
+                "dtype": "float32",
+            },
+            "inbound_nodes": [],
+        }
+    ]
+    layers += [_keras_layer(l, spec) for l in spec.layers]
+
+    weights_map = {
+        l.name: {k: w.to_json() for k, w in l.weights.items()}
+        for l in spec.layers
+        if l.weights
+    }
+    doc = {
+        "class_name": "Functional",
+        "config": {
+            "name": spec.name,
+            "layers": layers,
+            "input_layers": [["input", 0, 0]],
+            "output_layers": [[o, 0, 0] for o in spec.outputs],
+        },
+        "keras_version": "2.2.4",  # the era the paper targets
+        "backend": "tensorflow",
+        # substitution for the HDF5 weight groups (DESIGN.md subst. 3):
+        "weights_file": f"{spec.name}.weights.bin",
+        "weights_map": weights_map,
+    }
+    path = os.path.join(models_dir, f"{spec.name}.keras.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path

@@ -1,0 +1,84 @@
+"""L1 Pallas kernels for the paper's activation-function approximations
+(§3.4).
+
+SSE has no exp instruction, so the paper replaces transcendentals with:
+
+* tanh — the continued-fraction truncation, Eq. 5:
+      tanh(x) ≈ (((36x²+6930)x²+270270)x²+2027025)·x /
+                ((((x²+630)x²+51975)x²+945945)x²+2027025)
+* sigmoid — via tanh, Eq. 4: sigmoid(x) = (tanh(x/2) + 1) / 2
+* exp — Schraudolph's IEEE-754 trick [14]: one multiply, one float→int
+  conversion, one integer add, then reinterpret the bits as f32.
+* softmax — two passes (§3.4): x'_i = exp(x_i) while accumulating Σx',
+  then divide. (We subtract the max first for f32 stability; the division
+  by the sum cancels the common factor exactly, so it matches the paper's
+  math.)
+
+Each function exists in three forms: the raw jnp expression (`*_expr`, used
+inside fused layer kernels and by model.py), a standalone Pallas kernel, and
+an exact oracle in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Schraudolph constants for f32: i = A*x + (B - C), bits→f32.
+#   A = 2^23 / ln 2 ; B = 127 * 2^23 ; C chosen to minimize RMS error.
+SCHRAUDOLPH_A = 8388608.0 / 0.6931471805599453  # 12102203.16...
+SCHRAUDOLPH_B = 127.0 * 8388608.0  # 1065353216
+SCHRAUDOLPH_C = 366392.0  # RMS-optimal bias (Schraudolph 1999, f32 analog)
+
+
+def fast_exp_expr(x):
+    """Schraudolph exp: multiply, f32→i32 convert, add, bitcast."""
+    i = (SCHRAUDOLPH_A * x + (SCHRAUDOLPH_B - SCHRAUDOLPH_C)).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(i, jnp.float32)
+
+
+def fast_tanh_expr(x):
+    """Eq. 5 continued-fraction rational approximation (4 CF steps)."""
+    x2 = x * x
+    num = (((36.0 * x2 + 6930.0) * x2 + 270270.0) * x2 + 2027025.0) * x
+    den = (((x2 + 630.0) * x2 + 51975.0) * x2 + 945945.0) * x2 + 2027025.0
+    return num / den
+
+
+def fast_sigmoid_expr(x):
+    """Eq. 4: sigmoid via tanh(x/2)."""
+    return (fast_tanh_expr(0.5 * x) + 1.0) * 0.5
+
+
+def fast_softmax_expr(x, axis=-1):
+    """Two-pass softmax on fast_exp (max-shifted; the shift cancels)."""
+    e = fast_exp_expr(x - jnp.max(x, axis=axis, keepdims=True))
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+EXPRS = {
+    "exp": fast_exp_expr,
+    "tanh": fast_tanh_expr,
+    "sigmoid": fast_sigmoid_expr,
+    "softmax": fast_softmax_expr,
+}
+
+
+def _ew_kernel(expr, x_ref, o_ref):
+    # In-place elementwise pass — the paper's activations are compiled either
+    # fused into the producer's store loop or as one load→compute→store sweep.
+    o_ref[...] = expr(x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("name",))
+def apply_fast(name: str, x: jax.Array) -> jax.Array:
+    """Run activation `name` as a standalone Pallas kernel (interpret)."""
+    expr = EXPRS[name]
+    return pl.pallas_call(
+        functools.partial(_ew_kernel, expr),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,87 @@
+"""L1 Pallas convolution kernels.
+
+§3.3: "the operation of a convolutional layer consists of a subdivision of
+the 3D input tensor along the width and height dimensions, followed by a
+series of multiplications of a kernel matrix with each of the resulting
+input vectors. Thus, the matrix-vector-product is the most important
+operation in our implementation."
+
+Two kernels follow that exact decomposition:
+
+* `conv1x1` — a 1×1 convolution *is* the matvec: reshape NHWC to
+  [B·H·W, C] rows and push them through the rotated-diagonal matvec
+  (`matvec.dense_apply`, Eq. 3). Used by model.py for the baked models'
+  1×1 heads (detector, segmenter).
+
+* `conv2d_direct` — the general small-window case as a Pallas kernel: the
+  grid walks output pixels; each program extracts its input window (the
+  paper's "subdivision") and contracts it against the kernel matrix.
+  interpret=True (CPU PJRT); tested against the lax.conv oracle, and kept
+  for kernel-level experiments rather than wired into the big models
+  (grid-per-pixel interpret overhead would swamp XLA's native conv —
+  the same reason the paper loses on very large nets).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import matvec as mv_k
+
+
+def conv1x1(kernel_c_o: np.ndarray, bias, x_nhwc: jax.Array,
+            scheme: str = "diag") -> jax.Array:
+    """1×1 conv via the Eq. 3 matvec. `kernel_c_o` is [C, O] (numpy, baked);
+    x is [B, H, W, C]."""
+    b, h, w, c = x_nhwc.shape
+    rows = x_nhwc.reshape(b * h * w, c)
+    y = mv_k.dense_apply(kernel_c_o, bias, rows, scheme=scheme)
+    return y.reshape(b, h, w, kernel_c_o.shape[1])
+
+
+def _direct_kernel(kh: int, kw: int, x_ref, k_ref, o_ref):
+    """One output pixel per program: window-extract + matvec contraction.
+
+    The window overlaps its neighbours, which BlockSpec tiling cannot
+    express (blocks stride by their own size), so the program sees the whole
+    image row-plane and slices its window — the §3.3 "subdivision of the 3D
+    input tensor" — with a dynamic slice, then contracts it against the
+    kernel matrix.
+    """
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    c = x_ref.shape[3]
+    window = jax.lax.dynamic_slice(x_ref[...], (0, i, j, 0), (1, kh, kw, c))
+    row = window.reshape(1, -1)  # the §3.3 "input vector"
+    o_ref[...] = (row @ k_ref[...]).reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("kh", "kw"))
+def conv2d_direct(x: jax.Array, kernel: jax.Array, kh: int, kw: int) -> jax.Array:
+    """VALID, stride-1 direct conv as a Pallas kernel. x [B,H,W,C],
+    kernel [kh*kw*C, O] (pre-flattened at compile time)."""
+    b, h, w, c = x.shape
+    oc = kernel.shape[1]
+    oh, ow = h - kh + 1, w - kw + 1
+    return pl.pallas_call(
+        functools.partial(_direct_kernel, kh, kw),
+        grid=(b, oh, ow),
+        in_specs=[
+            pl.BlockSpec((1, h, w, c), lambda n, i, j: (n, 0, 0, 0)),
+            pl.BlockSpec((kh * kw * c, oc), lambda n, i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, oc), lambda n, i, j: (n, i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, oh, ow, oc), x.dtype),
+        interpret=True,
+    )(x, kernel)
+
+
+def flatten_kernel_hwio(k_hwio: np.ndarray) -> np.ndarray:
+    """[kh, kw, C, O] → [kh·kw·C, O], the kernel-matrix layout of §3.3."""
+    kh, kw, c, o = k_hwio.shape
+    return np.asarray(k_hwio).reshape(kh * kw * c, o)

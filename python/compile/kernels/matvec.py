@@ -1,0 +1,142 @@
+"""L1 Pallas kernels for the paper's core operation: the matrix–vector
+product (§3.3).
+
+Two schemes, exactly mirroring the paper's Eq. 2 and Eq. 3:
+
+* Eq. 2 ("broadcast"): y = Σ_j W[:, j] ⊙ broadcast(x_j). Needs a broadcast
+  temporary per step — on SSE a shuffle into a third register, here an extra
+  live tile inside the kernel (k = 3 resident tiles).
+
+* Eq. 3 ("rotated diagonal"): the weight matrix is stored as stacked rotated
+  diagonals D[j][i] = W[i, (i+j) mod n], chosen *at compile time* (weights are
+  static, so the layout is free — the paper's key observation). Then
+      y = Σ_j D[j] ⊙ roll(x, -j)
+  keeps x resident and replaces broadcasts with lane rotations (SSE `shufps`
+  → VPU roll); one fewer live tile (k = 2), which on the paper's target
+  raises the channels-per-batch by 4 and here shrinks the VMEM working set.
+
+Both kernels are written against square n×n tiles; rectangular dense layers
+are zero-padded to n = max(in, out) rounded up to LANE. Pallas runs
+interpret=True (CPU PJRT has no Mosaic), so these lower to plain HLO.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANE = 8  # pad unit; on real TPU this would be 128 (lane width)
+
+
+def pad_to(n: int, unit: int = LANE) -> int:
+    return ((n + unit - 1) // unit) * unit
+
+
+def rotate_diagonals(w: np.ndarray) -> np.ndarray:
+    """Pre-permute a square [n, n] matrix into stacked rotated diagonals:
+    D[j, i] = W[i, (i + j) % n]. Done once at compile time (numpy)."""
+    n = w.shape[0]
+    assert w.shape == (n, n)
+    i = np.arange(n)
+    return np.stack([w[i, (i + j) % n] for j in range(n)], axis=0)
+
+
+def pad_matrix(w: np.ndarray, n: int) -> np.ndarray:
+    """Zero-pad [in_dim, out_dim] (dense layout) to square [n, n] in
+    'y = W x' orientation (rows = outputs)."""
+    in_dim, out_dim = w.shape
+    out = np.zeros((n, n), w.dtype)
+    out[:out_dim, :in_dim] = w.T
+    return out
+
+
+def _matvec_diag_kernel(d_ref, x_ref, o_ref):
+    """Eq. 3: o[b, i] = Σ_j D[j, i] * x[b, (i+j) % n].
+
+    Resident tiles: x (stays put all steps) + accumulator → k = 2.
+    The rotation is realized as a length-n window over the doubled copy
+    [x, x] built once outside the loop — on TPU this is the free lane
+    rotation of the resident tile (SSE shufps analog); in interpret/CPU
+    lowering it turns per-step roll (concat + two slices) into a single
+    dynamic slice, the same restructuring as the Rust P1 fix (§Perf P5).
+    """
+    x = x_ref[...]  # [B, n] — loaded once, never reloaded (paper's scheme)
+    n = x.shape[1]
+    xx = jnp.concatenate([x, x], axis=1)  # doubled once, not per step
+
+    def body(j, acc):
+        xw = jax.lax.dynamic_slice_in_dim(xx, j, n, axis=1)
+        return acc + d_ref[j, :][None, :] * xw
+
+    acc = jnp.zeros_like(x)
+    o_ref[...] = jax.lax.fori_loop(0, n, body, acc)
+
+
+def _matvec_bcast_kernel(w_ref, x_ref, o_ref):
+    """Eq. 2: o[b, i] = Σ_j W[i, j] * x[b, j] with x_j broadcast across
+    lanes each step — the extra broadcast temporary is the third live tile
+    the paper's layout avoids."""
+    x = x_ref[...]  # [B, n]
+    n = x.shape[1]
+
+    def body(j, acc):
+        xj = jax.lax.dynamic_slice_in_dim(x, j, 1, axis=1)  # [B, 1] broadcast temp
+        return acc + w_ref[:, j][None, :] * xj
+
+    acc = jnp.zeros_like(x)
+    o_ref[...] = jax.lax.fori_loop(0, n, body, acc)
+
+
+@functools.partial(jax.jit, static_argnames=("scheme",))
+def _run(d, x, scheme: str):
+    kernel = _matvec_diag_kernel if scheme == "diag" else _matvec_bcast_kernel
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(d, x)
+
+
+def matvec_diag(d: jax.Array, x: jax.Array) -> jax.Array:
+    """y[b] = W x[b] with W pre-permuted by `rotate_diagonals` (Eq. 3)."""
+    return _run(d, x, "diag")
+
+
+def matvec_bcast(w: jax.Array, x: jax.Array) -> jax.Array:
+    """y[b] = W x[b], column-broadcast scheme (Eq. 2), ablation baseline."""
+    return _run(w, x, "bcast")
+
+
+def dense_apply(kernel_in_out: np.ndarray, bias: np.ndarray | None,
+                x: jax.Array, scheme: str = "diag") -> jax.Array:
+    """Apply a dense layer ([in, out] kernel) through the Pallas matvec.
+
+    Pads to square n×n at compile time; the padding columns multiply zeros
+    and the padding rows are sliced off, so results match `x @ W + b`.
+    """
+    in_dim, out_dim = kernel_in_out.shape
+    n = pad_to(max(in_dim, out_dim))
+    w = pad_matrix(np.asarray(kernel_in_out), n)
+    xp = jnp.pad(x, ((0, 0), (0, n - in_dim)))
+    if scheme == "diag":
+        y = matvec_diag(jnp.asarray(rotate_diagonals(w)), xp)
+    else:
+        y = matvec_bcast(jnp.asarray(w), xp)
+    y = y[:, :out_dim]
+    if bias is not None:
+        y = y + jnp.asarray(bias)[None, :]
+    return y
+
+
+# Heuristic from DESIGN.md: the Pallas kernel is used where the paper's
+# scheme applies without blow-up; huge dense layers (VGG19's 4096s) go to
+# the XLA-native GEMM, mirroring the paper being beaten on big nets.
+MAX_PALLAS_DENSE = 512
+
+
+def dense_eligible(in_dim: int, out_dim: int) -> bool:
+    return max(in_dim, out_dim) <= MAX_PALLAS_DENSE

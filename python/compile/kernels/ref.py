@@ -1,0 +1,45 @@
+# Pure-jnp correctness oracle for the kernels: exact math, no Pallas, no
+# approximations. Every kernel test asserts against these.
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def matvec(w: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Exact y[b] = W x[b] for square W [n, n], x [B, n]."""
+    return np.asarray(x) @ np.asarray(w).T
+
+
+def dense(kernel_in_out: np.ndarray, bias, x: np.ndarray) -> np.ndarray:
+    y = np.asarray(x) @ np.asarray(kernel_in_out)
+    if bias is not None:
+        y = y + np.asarray(bias)[None, :]
+    return y
+
+
+def exp(x):
+    return jnp.exp(x)
+
+
+def tanh(x):
+    return jnp.tanh(x)
+
+
+def sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def softmax(x, axis=-1):
+    e = jnp.exp(x - jnp.max(x, axis=axis, keepdims=True))
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+EXACT = {"exp": exp, "tanh": tanh, "sigmoid": sigmoid, "softmax": softmax}
+
+# Error bounds the approximations must satisfy (checked by pytest and
+# mirrored by `compiled-nn precision` on the rust side).
+TANH_MAX_ABS_ERR = 1e-4      # on [-4, 4]
+SIGMOID_MAX_ABS_ERR = 1e-4   # on [-8, 8]
+EXP_MAX_REL_ERR = 0.04       # Schraudolph ~3.95% max relative error
+SOFTMAX_MAX_ABS_ERR = 0.05   # inherits exp's relative error

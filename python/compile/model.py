@@ -1,0 +1,185 @@
+"""L2: spec → JAX forward function (the paper's per-network inference code).
+
+The returned function is pure and shape-specialized per batch size, exactly
+like the paper's generated code. Dense layers on baked models route through
+the L1 Pallas matvec kernel (rotated-diagonal scheme, §3.3); spatial convs
+use `lax.conv_general_dilated` (XLA's native conv — our analog of the parts
+of the paper's codegen we do not specialize); sigmoid/tanh/softmax use the
+§3.4 approximation kernels when `approx=True`.
+
+Weights are either *baked* (numpy constants captured in the closure → HLO
+constants, the paper's weights-as-immediates) or passed as runtime arguments
+(large nets; see DESIGN.md substitution 2).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .kernels import activations as act_k
+from .kernels import conv2d as conv_k
+from .kernels import matvec as mv_k
+from .spec import Layer, ModelSpec
+
+DIMS = ("NHWC", "HWIO", "NHWC")
+
+
+@dataclass(frozen=True)
+class BuildConfig:
+    baked: bool = True       # weights as HLO constants vs runtime args
+    approx: bool = True      # §3.4 fast activations
+    use_pallas: bool = True  # §3.3 Pallas matvec for eligible dense layers
+
+
+def weight_arg_order(spec: ModelSpec) -> list[tuple[str, str]]:
+    """Deterministic (layer, key) order for weights-as-args models; the Rust
+    runtime feeds literals in exactly this order (recorded in the manifest)."""
+    order = []
+    for l in spec.layers:
+        for key in sorted(l.weights):
+            order.append((l.name, key))
+    return order
+
+
+def _activation(name: str, approx: bool):
+    if name == "linear":
+        return lambda x: x
+    if name == "relu":
+        return lambda x: jnp.maximum(x, 0.0)
+    if name == "relu6":
+        return lambda x: jnp.clip(x, 0.0, 6.0)
+    if name == "leaky_relu":
+        return lambda x: jnp.where(x >= 0.0, x, 0.1 * x)
+    if name == "sigmoid":
+        return act_k.fast_sigmoid_expr if approx else (
+            lambda x: 1.0 / (1.0 + jnp.exp(-x)))
+    if name == "tanh":
+        return act_k.fast_tanh_expr if approx else jnp.tanh
+    raise ValueError(f"unknown activation {name}")
+
+
+def build_forward(spec: ModelSpec, cfg: BuildConfig = BuildConfig()):
+    """Returns (fn, example_weights).
+
+    baked:   fn(x) -> tuple of outputs
+    unbaked: fn(x, *weights) -> tuple of outputs, weights in
+             `weight_arg_order` order (example_weights holds the arrays).
+    """
+    order = weight_arg_order(spec)
+    arrays = {
+        (ln, k): spec.weight_array(spec.layer(ln), k) for ln, k in order
+    }
+
+    def forward(x, *ws):
+        if cfg.baked:
+            get = lambda l, k: jnp.asarray(arrays[(l.name, k)])
+        else:
+            idx = {lk: i for i, lk in enumerate(order)}
+            get = lambda l, k: ws[idx[(l.name, k)]]
+
+        env = {"input": x}
+        for l in spec.layers:
+            a = env[l.inputs[0]]
+            if l.op == "conv2d":
+                kh, kw, s = l.attrs["kh"], l.attrs["kw"], l.attrs["stride"]
+                kshape = spec.layer(l.name).weights["kernel"].shape
+                use_1x1 = (cfg.use_pallas and cfg.baked and kh == 1 and kw == 1
+                           and s == 1
+                           and mv_k.dense_eligible(kshape[2], kshape[3]))
+                if use_1x1:
+                    # §3.3: 1×1 conv IS the matvec — L1 kernel path
+                    kernel = arrays[(l.name, "kernel")].reshape(
+                        kshape[2], kshape[3])
+                    bias = (arrays[(l.name, "bias")]
+                            if l.attrs.get("use_bias") else None)
+                    y = conv_k.conv1x1(kernel, bias, a)
+                else:
+                    k = get(l, "kernel")
+                    pad = l.attrs["padding"].upper()
+                    y = lax.conv_general_dilated(
+                        a, k, (s, s), pad, dimension_numbers=DIMS)
+                    if l.attrs.get("use_bias"):
+                        y = y + get(l, "bias")
+                y = _activation(l.activation, cfg.approx)(y)
+            elif l.op == "depthwise_conv2d":
+                k, s = get(l, "kernel"), l.attrs["stride"]
+                c = k.shape[2]
+                k = jnp.transpose(k, (0, 1, 3, 2))  # [kh,kw,C,1] -> [kh,kw,1,C]
+                pad = l.attrs["padding"].upper()
+                y = lax.conv_general_dilated(
+                    a, k, (s, s), pad, dimension_numbers=DIMS,
+                    feature_group_count=c)
+                if l.attrs.get("use_bias"):
+                    y = y + get(l, "bias")
+                y = _activation(l.activation, cfg.approx)(y)
+            elif l.op == "dense":
+                kernel = arrays[(l.name, "kernel")]
+                in_dim, out_dim = kernel.shape
+                use_pallas = (cfg.use_pallas and cfg.baked
+                              and mv_k.dense_eligible(in_dim, out_dim))
+                if use_pallas:
+                    # L1 kernel: rotated-diagonal matvec over baked weights.
+                    bias = (arrays[(l.name, "bias")]
+                            if "bias" in spec.layer(l.name).weights else None)
+                    y = mv_k.dense_apply(kernel, bias, a, scheme="diag")
+                else:
+                    y = a @ get(l, "kernel")
+                    if "bias" in spec.layer(l.name).weights:
+                        y = y + get(l, "bias")
+                y = _activation(l.activation, cfg.approx)(y)
+            elif l.op == "batchnorm":
+                scale = get(l, "gamma") / jnp.sqrt(
+                    get(l, "var") + l.attrs.get("epsilon", 1e-3))
+                y = (a - get(l, "mean")) * scale + get(l, "beta")
+            elif l.op == "maxpool":
+                k, s = l.attrs["kh"], l.attrs["stride"]
+                y = lax.reduce_window(a, -jnp.inf, lax.max,
+                                      (1, k, k, 1), (1, s, s, 1), "VALID")
+            elif l.op == "avgpool":
+                k, s = l.attrs["kh"], l.attrs["stride"]
+                y = lax.reduce_window(a, 0.0, lax.add,
+                                      (1, k, k, 1), (1, s, s, 1), "VALID")
+                y = y / float(k * k)
+            elif l.op == "globalavgpool":
+                y = jnp.mean(a, axis=(1, 2))
+            elif l.op == "upsample":
+                f = l.attrs["factor"]
+                y = jnp.repeat(jnp.repeat(a, f, axis=1), f, axis=2)
+            elif l.op == "zeropad":
+                t, bt, lt, r = l.attrs["pad"]
+                y = jnp.pad(a, ((0, 0), (t, bt), (lt, r), (0, 0)))
+            elif l.op == "activation":
+                y = _activation(l.activation, cfg.approx)(a)
+            elif l.op == "softmax":
+                y = (act_k.fast_softmax_expr(a) if cfg.approx
+                     else jax.nn.softmax(a, axis=-1))
+            elif l.op == "add":
+                y = a + env[l.inputs[1]]
+            elif l.op == "concat":
+                y = jnp.concatenate([a, env[l.inputs[1]]], axis=-1)
+            elif l.op == "flatten":
+                y = a.reshape(a.shape[0], -1)
+            else:
+                raise ValueError(f"unknown op {l.op}")
+            # §3.5: fused post-activation affine (BN merged across activation)
+            if l.attrs.get("post_scale"):
+                y = y * get(l, "post_scale_w") + get(l, "post_shift_w")
+            env[l.name] = y
+        return tuple(env[o] for o in spec.outputs)
+
+    example_weights = [arrays[lk] for lk in order]
+    return forward, example_weights
+
+
+def output_shapes(spec: ModelSpec, batch: int,
+                  cfg: BuildConfig = BuildConfig()) -> list[list[int]]:
+    fn, ws = build_forward(spec, cfg)
+    x = jax.ShapeDtypeStruct((batch, *spec.input_shape), jnp.float32)
+    args = (x,) if cfg.baked else (x, *[jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in ws])
+    out = jax.eval_shape(fn, *args)
+    return [list(o.shape) for o in out]

@@ -1,0 +1,163 @@
+"""The six evaluation networks from Table 1 of the paper, built from scratch
+on the nnspec Builder with deterministic seeded weights.
+
+Paper (NAO V6)                  → here (see DESIGN.md §3 + substitution log)
+  C-HTWK  HTWK patch classifier → `c_htwk`   16×16×1
+  C-BH    B-Human ball classif. → `c_bh`     32×32×1
+  Detector JET-Net robot det.   → `detector` 60×80×3, stride-2 backbone + head
+  Segmenter field/non-field     → `segmenter` 80×80×3 encoder/decoder w/ skip
+  MobileNetV2 (α=1, no top)     → `mobilenetv2` full stack @ 96×96×3
+  VGG19                         → `vgg19`    full stack @ 64×64×3
+"""
+
+from __future__ import annotations
+
+from .spec import Builder, ModelSpec
+
+
+def c_htwk(seed: int = 101) -> ModelSpec:
+    b = Builder("c_htwk", [16, 16, 1], seed)
+    x = b.conv2d("input", 8, k=3, activation="relu")
+    x = b.maxpool(x)
+    x = b.conv2d(x, 12, k=3, activation="relu")
+    x = b.maxpool(x)
+    x = b.flatten(x)
+    x = b.dense(x, 32, activation="relu")
+    x = b.dense(x, 2)
+    x = b.softmax(x)
+    return b.finish(x)
+
+
+def c_bh(seed: int = 102) -> ModelSpec:
+    b = Builder("c_bh", [32, 32, 1], seed)
+    x = b.conv2d("input", 8, k=3, activation="relu")
+    x = b.batchnorm(x)
+    x = b.maxpool(x)
+    x = b.conv2d(x, 16, k=3, activation="relu")
+    x = b.batchnorm(x)
+    x = b.maxpool(x)
+    x = b.conv2d(x, 16, k=3, activation="relu")
+    x = b.maxpool(x)
+    x = b.flatten(x)
+    x = b.dense(x, 32, activation="relu")
+    x = b.dense(x, 1, activation="sigmoid")
+    return b.finish(x)
+
+
+def detector(seed: int = 103) -> ModelSpec:
+    """JET-Net-style single-shot detector: stride-2 conv backbone over the
+    camera image, 1×1 conv head predicting 5 box params × 3 anchors/cell."""
+    b = Builder("detector", [60, 80, 3], seed)
+    x = "input"
+    for ch, stride in [(16, 2), (24, 1), (32, 2), (48, 1), (64, 2), (128, 1)]:
+        x = b.conv2d(x, ch, k=3, stride=stride, activation="leaky_relu")
+        x = b.batchnorm(x)
+    # head: 8×10 grid, 3 anchors × (4 box + 1 obj) = 15 channels
+    x = b.conv2d(x, 15, k=1, activation="sigmoid")
+    return b.finish(x)
+
+
+def segmenter(seed: int = 104) -> ModelSpec:
+    """Field/non-field semantic segmentation on 80×80 (paper §4), U-Net-ish:
+    3 stride-2 encoder convs, 3 upsample+conv decoder stages, one skip."""
+    b = Builder("segmenter", [80, 80, 3], seed)
+    e1 = b.conv2d("input", 8, k=3, stride=2, activation="relu")   # 40
+    e1 = b.batchnorm(e1)
+    e2 = b.conv2d(e1, 16, k=3, stride=2, activation="relu")       # 20
+    e2 = b.batchnorm(e2)
+    e3 = b.conv2d(e2, 32, k=3, stride=2, activation="relu")       # 10
+    d1 = b.upsample(e3, 2)                                        # 20
+    d1 = b.conv2d(d1, 16, k=3, activation="relu")
+    d1 = b.concat(d1, e2)                                         # skip
+    d2 = b.upsample(d1, 2)                                        # 40
+    d2 = b.conv2d(d2, 8, k=3, activation="relu")
+    d3 = b.upsample(d2, 2)                                        # 80
+    d3 = b.conv2d(d3, 8, k=3, activation="relu")
+    out = b.conv2d(d3, 2, k=1)
+    out = b.softmax(out)
+    return b.finish(out)
+
+
+def _bottleneck(b: Builder, x: str, in_ch: int, out_ch: int, stride: int,
+                expand: int) -> str:
+    """MobileNetV2 inverted residual block."""
+    mid = in_ch * expand
+    y = x
+    if expand != 1:
+        y = b.conv2d(y, mid, k=1, activation="relu6", use_bias=False)
+        y = b.batchnorm(y)
+    y = b.depthwise_conv2d(y, k=3, stride=stride, activation="relu6")
+    y = b.batchnorm(y)
+    y = b.conv2d(y, out_ch, k=1, use_bias=False)  # linear bottleneck
+    y = b.batchnorm(y)
+    if stride == 1 and in_ch == out_ch:
+        y = b.add(y, x)
+    return y
+
+
+def mobilenetv2(seed: int = 105) -> ModelSpec:
+    """Full MobileNetV2 α=1 without top (paper's eval model), input 96×96×3
+    (spatial reduction vs the paper's 224 — see DESIGN.md substitution 5)."""
+    b = Builder("mobilenetv2", [96, 96, 3], seed)
+    x = b.conv2d("input", 32, k=3, stride=2, activation="relu6", use_bias=False)
+    x = b.batchnorm(x)
+    # (expansion, out_ch, repeats, first_stride) per the MobileNetV2 paper
+    cfg = [(1, 16, 1, 1), (6, 24, 2, 2), (6, 32, 3, 2), (6, 64, 4, 2),
+           (6, 96, 3, 1), (6, 160, 3, 2), (6, 320, 1, 1)]
+    in_ch = 32
+    for expand, out_ch, repeats, first_stride in cfg:
+        for i in range(repeats):
+            stride = first_stride if i == 0 else 1
+            x = _bottleneck(b, x, in_ch, out_ch, stride, expand)
+            in_ch = out_ch
+    x = b.conv2d(x, 1280, k=1, activation="relu6", use_bias=False)
+    x = b.batchnorm(x)
+    x = b.globalavgpool(x)
+    return b.finish(x)
+
+
+def vgg19(seed: int = 106) -> ModelSpec:
+    """Full VGG19 layer stack (16 conv + 5 pool + 3 dense), input 64×64×3
+    (spatial reduction vs the paper's 224 — see DESIGN.md substitution 5)."""
+    b = Builder("vgg19", [64, 64, 3], seed)
+    x = "input"
+    for block, (ch, n) in enumerate([(64, 2), (128, 2), (256, 4), (512, 4),
+                                     (512, 4)]):
+        for _ in range(n):
+            x = b.conv2d(x, ch, k=3, activation="relu")
+        x = b.maxpool(x)
+    x = b.flatten(x)  # 2*2*512 = 2048
+    x = b.dense(x, 4096, activation="relu")
+    x = b.dense(x, 4096, activation="relu")
+    x = b.dense(x, 1000)
+    x = b.softmax(x)
+    return b.finish(x)
+
+
+ALL = {
+    "c_htwk": c_htwk,
+    "c_bh": c_bh,
+    "detector": detector,
+    "segmenter": segmenter,
+    "mobilenetv2": mobilenetv2,
+    "vgg19": vgg19,
+}
+
+# Batch buckets lowered per network: the serving workload (§4 ball candidates)
+# batches the small classifiers; the big nets run batch-1 like the paper.
+BATCH_BUCKETS = {
+    "c_htwk": [1, 8, 32],
+    "c_bh": [1, 8, 32],
+    "detector": [1],
+    "segmenter": [1],
+    "mobilenetv2": [1],
+    "vgg19": [1],
+}
+
+# Weights are baked into the HLO as constants below this parameter count
+# (the paper's weights-as-immediates). Above it, weights are runtime args.
+BAKE_THRESHOLD = 2_000_000
+
+
+def build(name: str) -> ModelSpec:
+    return ALL[name]()

@@ -1,0 +1,119 @@
+"""L2 mirror of the paper's §3.5 merging passes, applied to a ModelSpec
+before AOT lowering. The Rust `compiler/fuse.rs` implements the identical
+transformation for the optimized-interpreter engine; `tests/test_optimize.py`
+checks they agree numerically.
+
+Batch normalization is an affine map per feature channel:
+    bn(x) = gamma * (x - mean) / sqrt(var + eps) + beta = scale * x + shift
+
+* producer has linear activation  → fold into the producer's weights:
+      W'[..., o] = W[..., o] * scale[o],  b' = b * scale + shift
+  (depthwise kernels scale along their channel axis instead).
+* producer has a nonlinear activation between it and the BN (paper §3.5:
+  "the batch normalization is still fused into the other layer and applied
+  after the activation") → attach (post_scale, post_shift) to the producer's
+  compilation unit; no separate pass over memory remains.
+* BN *before* a linear layer is folded into that consumer only when no
+  spatial zero-padding can leak the shift (dense or 1×1 conv): the shift
+  term becomes an extra bias contribution.
+"""
+
+from __future__ import annotations
+
+import copy
+
+import numpy as np
+
+from .spec import Layer, ModelSpec, WeightRef
+
+FOLDABLE_PRODUCERS = ("conv2d", "depthwise_conv2d", "dense")
+
+
+def _bn_scale_shift(spec: ModelSpec, bn: Layer):
+    gamma = spec.weight_array(bn, "gamma")
+    beta = spec.weight_array(bn, "beta")
+    mean = spec.weight_array(bn, "mean")
+    var = spec.weight_array(bn, "var")
+    eps = bn.attrs.get("epsilon", 1e-3)
+    scale = gamma / np.sqrt(var + eps)
+    shift = beta - mean * scale
+    return scale.astype(np.float32), shift.astype(np.float32)
+
+
+class _BlobEditor:
+    """Copy-on-write editor over the flat weight blob; appends new tensors
+    (e.g. a bias materialized for a previously bias-free conv)."""
+
+    def __init__(self, spec: ModelSpec):
+        self.blob = spec.weights.copy()
+        self.spec = spec
+
+    def get(self, layer: Layer, key: str) -> np.ndarray:
+        ref = layer.weights[key]
+        return self.blob[ref.offset : ref.offset + ref.size].reshape(ref.shape)
+
+    def set(self, layer: Layer, key: str, value: np.ndarray) -> None:
+        ref = layer.weights[key]
+        assert list(value.shape) == list(ref.shape)
+        self.blob[ref.offset : ref.offset + ref.size] = value.ravel()
+
+    def append(self, layer: Layer, key: str, value: np.ndarray) -> None:
+        ref = WeightRef(len(self.blob), list(value.shape))
+        self.blob = np.concatenate([self.blob, value.astype(np.float32).ravel()])
+        layer.weights[key] = ref
+
+
+def _consumers(spec: ModelSpec, name: str) -> list[Layer]:
+    return [l for l in spec.layers if name in l.inputs]
+
+
+def fold_batchnorm(spec: ModelSpec) -> ModelSpec:
+    """Return a new spec with every BN merged into an adjacent linear layer
+    (weight fold) or attached as post_scale/post_shift (fused affine)."""
+    spec = copy.deepcopy(spec)
+    blob = _BlobEditor(spec)
+    by_name = {l.name: l for l in spec.layers}
+    removed: dict[str, str] = {}  # bn name -> replacement producer name
+
+    for bn in [l for l in spec.layers if l.op == "batchnorm"]:
+        src = by_name.get(bn.inputs[0])
+        if src is None or src.op not in FOLDABLE_PRODUCERS:
+            continue
+        if len(_consumers(spec, src.name)) != 1:
+            continue  # producer output also used raw elsewhere
+        if "post_scale" in src.attrs:
+            continue  # already carries a fused affine
+        scale, shift = _bn_scale_shift(spec, bn)
+
+        if src.activation == "linear":
+            kernel = blob.get(src, "kernel")
+            if src.op == "depthwise_conv2d":  # [kh, kw, C, 1]
+                kernel = kernel * scale[None, None, :, None]
+            elif src.op == "conv2d":  # [kh, kw, I, O]
+                kernel = kernel * scale[None, None, None, :]
+            else:  # dense [in, out]
+                kernel = kernel * scale[None, :]
+            blob.set(src, "kernel", kernel)
+            if "bias" in src.weights:
+                blob.set(src, "bias", blob.get(src, "bias") * scale + shift)
+            else:
+                blob.append(src, "bias", shift)
+                src.attrs["use_bias"] = True
+        else:
+            # nonlinear activation in between: fused post-activation affine
+            src.attrs["post_scale"] = True
+            blob.append(src, "post_scale_w", scale)
+            blob.append(src, "post_shift_w", shift)
+
+        removed[bn.name] = src.name
+
+    # rewire and drop removed BNs
+    layers = []
+    for l in spec.layers:
+        if l.name in removed:
+            continue
+        l.inputs = [removed.get(i, i) for i in l.inputs]
+        layers.append(l)
+    outputs = [removed.get(o, o) for o in spec.outputs]
+    return ModelSpec(spec.name, spec.input_shape, layers, outputs, spec.seed,
+                     blob.blob)

@@ -1,0 +1,301 @@
+"""nnspec — the model interchange format shared between the Python compile
+path and the Rust runtime/interpreters.
+
+A model is a JSON graph (`<name>.json`) plus a raw little-endian f32 weight
+blob (`<name>.weights.bin`). The JSON mirrors what the paper reads from Keras
+HDF5: architecture + named weight tensors. Offsets index into the blob in
+*floats*, not bytes.
+
+Layer ops (all tensors NHWC, conv kernels HWIO, dense kernels [in, out]):
+  conv2d, depthwise_conv2d, dense, maxpool, avgpool, globalavgpool,
+  upsample, batchnorm, zeropad, activation, softmax, add, concat, flatten
+
+`activation` may also appear as an attribute of conv2d/depthwise_conv2d/
+dense layers, in which case it is fused into that layer (paper §3.4).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+FORMAT = "nnspec-v1"
+
+# Activations understood by every engine. "linear" is identity.
+ACTIVATIONS = ("linear", "relu", "relu6", "leaky_relu", "sigmoid", "tanh")
+
+
+@dataclass
+class WeightRef:
+    """A named weight tensor stored in the blob."""
+
+    offset: int  # in floats
+    shape: list[int]
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    def to_json(self) -> dict:
+        return {"offset": self.offset, "shape": list(self.shape)}
+
+
+@dataclass
+class Layer:
+    name: str
+    op: str
+    inputs: list[str]
+    attrs: dict = field(default_factory=dict)
+    weights: dict[str, WeightRef] = field(default_factory=dict)
+    activation: str = "linear"
+
+    def to_json(self) -> dict:
+        d = {"name": self.name, "op": self.op, "inputs": list(self.inputs)}
+        d.update(self.attrs)
+        if self.weights:
+            d["weights"] = {k: w.to_json() for k, w in self.weights.items()}
+        if self.activation != "linear":
+            d["activation"] = self.activation
+        return d
+
+
+@dataclass
+class ModelSpec:
+    name: str
+    input_shape: list[int]  # HWC (batch implicit)
+    layers: list[Layer]
+    outputs: list[str]
+    seed: int
+    weights: np.ndarray  # flat f32 blob
+
+    @property
+    def param_count(self) -> int:
+        return int(self.weights.size)
+
+    def layer(self, name: str) -> Layer:
+        for l in self.layers:
+            if l.name == name:
+                return l
+        raise KeyError(name)
+
+    def to_json(self) -> dict:
+        return {
+            "format": FORMAT,
+            "name": self.name,
+            "seed": self.seed,
+            "input": {"shape": list(self.input_shape)},
+            "layers": [l.to_json() for l in self.layers],
+            "outputs": list(self.outputs),
+            "weights_file": f"{self.name}.weights.bin",
+            "weights_len": int(self.weights.size),
+        }
+
+    def save(self, models_dir: str) -> None:
+        os.makedirs(models_dir, exist_ok=True)
+        with open(os.path.join(models_dir, f"{self.name}.json"), "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        self.weights.astype("<f4").tofile(
+            os.path.join(models_dir, f"{self.name}.weights.bin")
+        )
+
+    def weight_array(self, layer: Layer, key: str) -> np.ndarray:
+        ref = layer.weights[key]
+        return self.weights[ref.offset : ref.offset + ref.size].reshape(ref.shape)
+
+
+def load(models_dir: str, name: str) -> ModelSpec:
+    with open(os.path.join(models_dir, f"{name}.json")) as f:
+        j = json.load(f)
+    assert j["format"] == FORMAT, j["format"]
+    layers = []
+    for lj in j["layers"]:
+        lj = dict(lj)
+        lname, op, inputs = lj.pop("name"), lj.pop("op"), lj.pop("inputs")
+        weights = {
+            k: WeightRef(w["offset"], w["shape"])
+            for k, w in lj.pop("weights", {}).items()
+        }
+        activation = lj.pop("activation", "linear")
+        layers.append(Layer(lname, op, inputs, lj, weights, activation))
+    blob = np.fromfile(
+        os.path.join(models_dir, j["weights_file"]), dtype="<f4"
+    )
+    assert blob.size == j["weights_len"]
+    return ModelSpec(
+        j["name"], j["input"]["shape"], layers, j["outputs"], j["seed"], blob
+    )
+
+
+class Builder:
+    """Programmatic model construction with He-normal seeded weights.
+
+    Mirrors rust `model/builder.rs`; weight layout in the blob is the layer
+    declaration order, within a layer the lexicographic key order used below.
+    """
+
+    def __init__(self, name: str, input_shape: list[int], seed: int):
+        self.name = name
+        self.input_shape = list(input_shape)
+        self.seed = seed
+        self.rng = np.random.RandomState(seed)
+        self.layers: list[Layer] = []
+        self.blob: list[np.ndarray] = []
+        self.offset = 0
+        self._shapes: dict[str, tuple] = {"input": tuple(input_shape)}
+        self._n = 0
+
+    # -- weight helpers ----------------------------------------------------
+    def _alloc(self, arr: np.ndarray) -> WeightRef:
+        ref = WeightRef(self.offset, list(arr.shape))
+        self.blob.append(arr.astype(np.float32).ravel())
+        self.offset += arr.size
+        return ref
+
+    def _he(self, shape, fan_in) -> np.ndarray:
+        return self.rng.randn(*shape).astype(np.float32) * np.sqrt(2.0 / fan_in)
+
+    def _name(self, prefix: str) -> str:
+        self._n += 1
+        return f"{prefix}{self._n}"
+
+    def shape_of(self, name: str) -> tuple:
+        return self._shapes[name]
+
+    def _add(self, layer: Layer, out_shape: tuple) -> str:
+        self.layers.append(layer)
+        self._shapes[layer.name] = out_shape
+        return layer.name
+
+    # -- layers ------------------------------------------------------------
+    def conv2d(self, x: str, out_ch: int, k: int = 3, stride: int = 1,
+               padding: str = "same", activation: str = "linear",
+               use_bias: bool = True, name: Optional[str] = None) -> str:
+        h, w, c = self._shapes[x]
+        kernel = self._alloc(self._he((k, k, c, out_ch), k * k * c))
+        weights = {"kernel": kernel}
+        if use_bias:
+            weights["bias"] = self._alloc(np.zeros(out_ch))
+        if padding == "same":
+            oh, ow = (h + stride - 1) // stride, (w + stride - 1) // stride
+        else:
+            oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+        layer = Layer(name or self._name("conv"), "conv2d", [x],
+                      {"kh": k, "kw": k, "out_ch": out_ch, "stride": stride,
+                       "padding": padding, "use_bias": use_bias},
+                      weights, activation)
+        return self._add(layer, (oh, ow, out_ch))
+
+    def depthwise_conv2d(self, x: str, k: int = 3, stride: int = 1,
+                         padding: str = "same", activation: str = "linear",
+                         name: Optional[str] = None) -> str:
+        h, w, c = self._shapes[x]
+        kernel = self._alloc(self._he((k, k, c, 1), k * k))
+        weights = {"kernel": kernel, "bias": self._alloc(np.zeros(c))}
+        if padding == "same":
+            oh, ow = (h + stride - 1) // stride, (w + stride - 1) // stride
+        else:
+            oh, ow = (h - k) // stride + 1, (w - k) // stride + 1
+        layer = Layer(name or self._name("dwconv"), "depthwise_conv2d", [x],
+                      {"kh": k, "kw": k, "stride": stride, "padding": padding,
+                       "use_bias": True},
+                      weights, activation)
+        return self._add(layer, (oh, ow, c))
+
+    def dense(self, x: str, units: int, activation: str = "linear",
+              name: Optional[str] = None) -> str:
+        shape = self._shapes[x]
+        assert len(shape) == 1, f"dense needs flat input, got {shape}"
+        kernel = self._alloc(self._he((shape[0], units), shape[0]))
+        weights = {"kernel": kernel, "bias": self._alloc(np.zeros(units))}
+        layer = Layer(name or self._name("dense"), "dense", [x],
+                      {"units": units}, weights, activation)
+        return self._add(layer, (units,))
+
+    def batchnorm(self, x: str, name: Optional[str] = None) -> str:
+        shape = self._shapes[x]
+        c = shape[-1]
+        # Non-trivial statistics so folding tests actually exercise the math.
+        weights = {
+            "beta": self._alloc(self.rng.randn(c) * 0.1),
+            "gamma": self._alloc(1.0 + self.rng.randn(c) * 0.1),
+            "mean": self._alloc(self.rng.randn(c) * 0.1),
+            "var": self._alloc(1.0 + np.abs(self.rng.randn(c)) * 0.1),
+        }
+        layer = Layer(name or self._name("bn"), "batchnorm", [x],
+                      {"epsilon": 1e-3}, weights)
+        return self._add(layer, shape)
+
+    def maxpool(self, x: str, k: int = 2, stride: int | None = None,
+                name: Optional[str] = None) -> str:
+        stride = stride or k
+        h, w, c = self._shapes[x]
+        layer = Layer(name or self._name("maxpool"), "maxpool", [x],
+                      {"kh": k, "kw": k, "stride": stride})
+        return self._add(layer, (h // stride, w // stride, c))
+
+    def avgpool(self, x: str, k: int = 2, stride: int | None = None,
+                name: Optional[str] = None) -> str:
+        stride = stride or k
+        h, w, c = self._shapes[x]
+        layer = Layer(name or self._name("avgpool"), "avgpool", [x],
+                      {"kh": k, "kw": k, "stride": stride})
+        return self._add(layer, (h // stride, w // stride, c))
+
+    def globalavgpool(self, x: str, name: Optional[str] = None) -> str:
+        h, w, c = self._shapes[x]
+        layer = Layer(name or self._name("gap"), "globalavgpool", [x], {})
+        return self._add(layer, (c,))
+
+    def upsample(self, x: str, factor: int = 2, name: Optional[str] = None) -> str:
+        h, w, c = self._shapes[x]
+        layer = Layer(name or self._name("up"), "upsample", [x],
+                      {"factor": factor})
+        return self._add(layer, (h * factor, w * factor, c))
+
+    def zeropad(self, x: str, pad: list[int], name: Optional[str] = None) -> str:
+        h, w, c = self._shapes[x]
+        t, b, l, r = pad
+        layer = Layer(name or self._name("pad"), "zeropad", [x],
+                      {"pad": [t, b, l, r]})
+        return self._add(layer, (h + t + b, w + l + r, c))
+
+    def activation(self, x: str, fn: str, name: Optional[str] = None) -> str:
+        layer = Layer(name or self._name("act"), "activation", [x],
+                      {}, activation=fn)
+        return self._add(layer, self._shapes[x])
+
+    def softmax(self, x: str, name: Optional[str] = None) -> str:
+        layer = Layer(name or self._name("softmax"), "softmax", [x], {})
+        return self._add(layer, self._shapes[x])
+
+    def add(self, a: str, b: str, name: Optional[str] = None) -> str:
+        assert self._shapes[a] == self._shapes[b], (self._shapes[a], self._shapes[b])
+        layer = Layer(name or self._name("add"), "add", [a, b], {})
+        return self._add(layer, self._shapes[a])
+
+    def concat(self, a: str, b: str, name: Optional[str] = None) -> str:
+        sa, sb = self._shapes[a], self._shapes[b]
+        assert sa[:-1] == sb[:-1]
+        layer = Layer(name or self._name("concat"), "concat", [a, b], {})
+        return self._add(layer, (*sa[:-1], sa[-1] + sb[-1]))
+
+    def flatten(self, x: str, name: Optional[str] = None) -> str:
+        shape = self._shapes[x]
+        n = int(np.prod(shape))
+        layer = Layer(name or self._name("flatten"), "flatten", [x], {})
+        return self._add(layer, (n,))
+
+    def finish(self, outputs: list[str] | str) -> ModelSpec:
+        if isinstance(outputs, str):
+            outputs = [outputs]
+        blob = (np.concatenate(self.blob) if self.blob
+                else np.zeros(0, np.float32))
+        return ModelSpec(self.name, self.input_shape, self.layers, outputs,
+                         self.seed, blob)

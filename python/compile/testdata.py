@@ -1,0 +1,35 @@
+"""Deterministic test-data generation shared bit-identically with Rust.
+
+SplitMix64 (Steele et al. 2014) seeded streams; `splitmix_uniform` draws
+f32 uniforms in [-1, 1) by taking the top 24 bits of each 64-bit output —
+the Rust mirror is `util/rng.rs::SplitMix64::next_uniform`.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+MASK = (1 << 64) - 1
+
+
+def splitmix64_stream(seed: int, n: int) -> np.ndarray:
+    """n raw 64-bit outputs of SplitMix64 starting from `seed`."""
+    out = np.empty(n, dtype=np.uint64)
+    state = seed & MASK
+    for i in range(n):
+        state = (state + 0x9E3779B97F4A7C15) & MASK
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        z = z ^ (z >> 31)
+        out[i] = z
+    return out
+
+
+def splitmix_uniform(seed: int, shape) -> np.ndarray:
+    """f32 uniforms in [-1, 1): top 24 bits / 2^23 - 1."""
+    n = int(np.prod(shape))
+    raw = splitmix64_stream(seed, n)
+    top24 = (raw >> np.uint64(40)).astype(np.float64)  # [0, 2^24)
+    vals = (top24 / float(1 << 23)) - 1.0
+    return vals.astype(np.float32).reshape(shape)

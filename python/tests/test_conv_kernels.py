@@ -1,0 +1,77 @@
+# L1 Pallas conv kernels vs the lax.conv oracle (hypothesis sweeps).
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from jax import lax
+
+from compile.kernels import conv2d as conv_k
+
+DIMS = ("NHWC", "HWIO", "NHWC")
+
+
+def exact_conv(x, k_hwio, padding="VALID", stride=1):
+    return np.asarray(
+        lax.conv_general_dilated(
+            jnp.asarray(x), jnp.asarray(k_hwio), (stride, stride), padding,
+            dimension_numbers=DIMS,
+        )
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    hw=st.integers(2, 10),
+    c=st.integers(1, 8),
+    o=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv1x1_matches_lax(b, hw, c, o, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(b, hw, hw, c).astype(np.float32)
+    k = rng.randn(1, 1, c, o).astype(np.float32)
+    bias = rng.randn(o).astype(np.float32)
+    got = np.asarray(conv_k.conv1x1(k.reshape(c, o), bias, jnp.asarray(x)))
+    want = exact_conv(x, k) + bias
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_conv1x1_no_bias():
+    rng = np.random.RandomState(0)
+    x = rng.randn(2, 4, 4, 8).astype(np.float32)
+    k = rng.randn(1, 1, 8, 16).astype(np.float32)
+    got = np.asarray(conv_k.conv1x1(k.reshape(8, 16), None, jnp.asarray(x)))
+    np.testing.assert_allclose(got, exact_conv(x, k), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    hw=st.integers(3, 8),
+    kk=st.integers(1, 3),
+    c=st.integers(1, 4),
+    o=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_direct_matches_lax(hw, kk, c, o, seed):
+    if kk > hw:
+        return
+    rng = np.random.RandomState(seed)
+    x = rng.randn(1, hw, hw, c).astype(np.float32)
+    k = rng.randn(kk, kk, c, o).astype(np.float32)
+    got = np.asarray(
+        conv_k.conv2d_direct(
+            jnp.asarray(x), jnp.asarray(conv_k.flatten_kernel_hwio(k)), kk, kk
+        )
+    )
+    want = exact_conv(x, k, padding="VALID")
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_flatten_kernel_layout():
+    k = np.arange(2 * 2 * 3 * 4, dtype=np.float32).reshape(2, 2, 3, 4)
+    f = conv_k.flatten_kernel_hwio(k)
+    assert f.shape == (12, 4)
+    # row ordering matches the window.reshape(-1) order used in the kernel
+    np.testing.assert_array_equal(f[0], k[0, 0, 0])
+    np.testing.assert_array_equal(f[3], k[0, 1, 0])

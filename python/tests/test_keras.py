@@ -1,0 +1,73 @@
+# Keras export (§3.1 front-end): schema shape, information preservation.
+import json
+
+import pytest
+
+from compile import keras_io, networks, spec as spec_mod
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    d = tmp_path_factory.mktemp("keras")
+    s = networks.build("c_bh")
+    s.save(str(d))
+    path = keras_io.export_keras(s, str(d))
+    with open(path) as f:
+        return s, json.load(f)
+
+
+def test_schema_is_functional(exported):
+    _, doc = exported
+    assert doc["class_name"] == "Functional"
+    assert doc["config"]["input_layers"] == [["input", 0, 0]]
+    names = [l["name"] for l in doc["config"]["layers"]]
+    assert names[0] == "input"
+    assert len(set(names)) == len(names)
+
+
+def test_every_layer_has_keras_class(exported):
+    spec, doc = exported
+    classes = {l["name"]: l["class_name"] for l in doc["config"]["layers"]}
+    assert classes["input"] == "InputLayer"
+    for l in spec.layers:
+        assert l.name in classes
+    assert any(c == "Conv2D" for c in classes.values())
+    assert any(c == "BatchNormalization" for c in classes.values())
+    assert any(c == "Dense" for c in classes.values())
+
+
+def test_inbound_nodes_preserve_graph(exported):
+    spec, doc = exported
+    by_name = {l["name"]: l for l in doc["config"]["layers"]}
+    for l in spec.layers:
+        inbound = by_name[l.name]["inbound_nodes"][0]
+        assert [n[0] for n in inbound] == l.inputs
+
+
+def test_weights_map_covers_all_weights(exported):
+    spec, doc = exported
+    wm = doc["weights_map"]
+    for l in spec.layers:
+        for k, ref in l.weights.items():
+            assert wm[l.name][k]["offset"] == ref.offset
+            assert wm[l.name][k]["shape"] == list(ref.shape)
+
+
+def test_all_six_networks_export(tmp_path):
+    for name in networks.ALL:
+        s = networks.build(name)
+        s.save(str(tmp_path))
+        path = keras_io.export_keras(s, str(tmp_path))
+        with open(path) as f:
+            doc = json.load(f)
+        assert len(doc["config"]["layers"]) == len(s.layers) + 1  # + InputLayer
+
+
+def test_activation_names_are_keras_valid(exported):
+    _, doc = exported
+    valid = {"linear", "relu", "relu6", "leaky_relu", "sigmoid", "tanh",
+             "softmax"}
+    for l in doc["config"]["layers"]:
+        a = l["config"].get("activation")
+        if a is not None:
+            assert a in valid, a

@@ -1,0 +1,144 @@
+# pytest: Pallas kernels vs the exact ref oracle — the CORE correctness
+# signal for L1. Hypothesis sweeps shapes and value ranges.
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import activations as act_k
+from compile.kernels import matvec as mv_k
+from compile.kernels import ref
+
+
+# ---------------------------------------------------------------- matvec
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 6).map(lambda k: 8 * k),  # square sizes, LANE-aligned
+    batch=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_diag_matches_ref(n, batch, seed):
+    rng = np.random.RandomState(seed)
+    w = rng.randn(n, n).astype(np.float32)
+    x = rng.randn(batch, n).astype(np.float32)
+    d = mv_k.rotate_diagonals(w)
+    got = np.asarray(mv_k.matvec_diag(d, x))
+    np.testing.assert_allclose(got, ref.matvec(w, x), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 6).map(lambda k: 8 * k),
+    batch=st.integers(1, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_bcast_matches_ref(n, batch, seed):
+    rng = np.random.RandomState(seed)
+    w = rng.randn(n, n).astype(np.float32)
+    x = rng.randn(batch, n).astype(np.float32)
+    got = np.asarray(mv_k.matvec_bcast(w, x))
+    np.testing.assert_allclose(got, ref.matvec(w, x), rtol=1e-4, atol=1e-4)
+
+
+def test_matvec_schemes_agree():
+    # Eq. 2 and Eq. 3 are algebraically identical — §3.3's point is that the
+    # rotated-diagonal layout changes the *schedule*, not the math.
+    rng = np.random.RandomState(0)
+    w = rng.randn(32, 32).astype(np.float32)
+    x = rng.randn(3, 32).astype(np.float32)
+    a = np.asarray(mv_k.matvec_diag(mv_k.rotate_diagonals(w), x))
+    b = np.asarray(mv_k.matvec_bcast(w, x))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_rotate_diagonals_layout():
+    # D[j, i] = W[i, (i+j) % n] — the exact Eq. 3 permutation.
+    w = np.arange(16, dtype=np.float32).reshape(4, 4)
+    d = mv_k.rotate_diagonals(w)
+    for j in range(4):
+        for i in range(4):
+            assert d[j, i] == w[i, (i + j) % 4]
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    in_dim=st.integers(1, 80),
+    out_dim=st.integers(1, 80),
+    batch=st.integers(1, 4),
+    scheme=st.sampled_from(["diag", "bcast"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_apply_rectangular(in_dim, out_dim, batch, scheme, seed):
+    # Rectangular layers are zero-padded to square; results must be exact.
+    rng = np.random.RandomState(seed)
+    k = rng.randn(in_dim, out_dim).astype(np.float32)
+    b = rng.randn(out_dim).astype(np.float32)
+    x = rng.randn(batch, in_dim).astype(np.float32)
+    got = np.asarray(mv_k.dense_apply(k, b, x, scheme=scheme))
+    np.testing.assert_allclose(got, ref.dense(k, b, x), rtol=1e-4, atol=1e-4)
+
+
+def test_dense_apply_no_bias():
+    rng = np.random.RandomState(7)
+    k = rng.randn(24, 10).astype(np.float32)
+    x = rng.randn(2, 24).astype(np.float32)
+    got = np.asarray(mv_k.dense_apply(k, None, x))
+    np.testing.assert_allclose(got, ref.dense(k, None, x), rtol=1e-4, atol=1e-4)
+
+
+def test_pad_to():
+    assert mv_k.pad_to(1) == 8
+    assert mv_k.pad_to(8) == 8
+    assert mv_k.pad_to(9) == 16
+
+
+# ---------------------------------------------------------- activations
+def test_fast_tanh_bound():
+    x = np.linspace(-4, 4, 4001, dtype=np.float32)
+    got = np.asarray(act_k.apply_fast("tanh", x))
+    err = np.abs(got - np.asarray(ref.tanh(x)))
+    assert err.max() < ref.TANH_MAX_ABS_ERR, err.max()
+
+
+def test_fast_sigmoid_bound():
+    x = np.linspace(-8, 8, 4001, dtype=np.float32)
+    got = np.asarray(act_k.apply_fast("sigmoid", x))
+    err = np.abs(got - np.asarray(ref.sigmoid(x)))
+    assert err.max() < ref.SIGMOID_MAX_ABS_ERR, err.max()
+
+
+def test_schraudolph_exp_bound():
+    x = np.linspace(-10, 10, 4001, dtype=np.float32)
+    got = np.asarray(act_k.apply_fast("exp", x))
+    rel = np.abs(got - np.asarray(ref.exp(x))) / np.asarray(ref.exp(x))
+    assert rel.max() < ref.EXP_MAX_REL_ERR, rel.max()
+
+
+def test_fast_softmax_bound_and_normalization():
+    rng = np.random.RandomState(3)
+    x = (rng.randn(16, 10) * 3).astype(np.float32)
+    got = np.asarray(act_k.apply_fast("softmax", x))
+    np.testing.assert_allclose(got.sum(axis=-1), 1.0, atol=1e-5)
+    err = np.abs(got - np.asarray(ref.softmax(x)))
+    assert err.max() < ref.SOFTMAX_MAX_ABS_ERR, err.max()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    shape=st.tuples(st.integers(1, 4), st.integers(1, 33)),
+    scale=st.floats(0.1, 3.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_activation_kernels_random_shapes(shape, scale, seed):
+    rng = np.random.RandomState(seed)
+    x = (rng.randn(*shape) * scale).astype(np.float32)
+    for name, bound in [("tanh", 2e-4), ("sigmoid", 2e-4)]:
+        got = np.asarray(act_k.apply_fast(name, x))
+        exact = np.asarray(ref.EXACT[name](x))
+        assert np.abs(got - exact).max() < bound
+
+
+def test_tanh_is_odd_and_bounded():
+    x = np.linspace(-4, 4, 101, dtype=np.float32)
+    y = np.asarray(act_k.apply_fast("tanh", x))
+    np.testing.assert_allclose(y, -y[::-1], atol=1e-6)  # odd function
+    assert np.all(np.abs(y) <= 1.0 + 1e-5)

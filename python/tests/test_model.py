@@ -1,0 +1,75 @@
+# L2 model construction: compiled config (approx+pallas+folded) must stay
+# close to the exact oracle; weights-as-args must equal baked.
+import jax
+import numpy as np
+import pytest
+
+from compile import networks, optimize
+from compile.model import BuildConfig, build_forward, weight_arg_order
+from compile.aot import golden_input
+
+EXACT = BuildConfig(baked=True, approx=False, use_pallas=False)
+
+
+@pytest.mark.parametrize("name,tol", [
+    ("c_htwk", 0.06),    # softmax output — inherits Schraudolph exp error
+    ("c_bh", 2e-3),      # sigmoid output — Eq. 4/5 error
+    ("segmenter", 0.06),
+    ("detector", 2e-3),
+])
+def test_compiled_config_close_to_exact(name, tol):
+    spec = networks.build(name)
+    x = golden_input(spec, 1)
+    exact = np.asarray(jax.jit(build_forward(spec, EXACT)[0])(x)[0])
+    folded = optimize.fold_batchnorm(spec)
+    comp_cfg = BuildConfig(baked=True, approx=True, use_pallas=True)
+    comp = np.asarray(jax.jit(build_forward(folded, comp_cfg)[0])(x)[0])
+    assert comp.shape == exact.shape
+    assert np.abs(comp - exact).max() < tol
+
+
+def test_args_mode_equals_baked():
+    spec = networks.build("c_bh")
+    x = golden_input(spec, 2)
+    baked_fn, _ = build_forward(spec, BuildConfig(baked=True, approx=False,
+                                                  use_pallas=False))
+    args_fn, ws = build_forward(spec, BuildConfig(baked=False, approx=False,
+                                                  use_pallas=False))
+    a = np.asarray(jax.jit(baked_fn)(x)[0])
+    b = np.asarray(jax.jit(args_fn)(x, *ws)[0])
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_weight_arg_order_deterministic():
+    spec = networks.build("mobilenetv2")
+    o1 = weight_arg_order(spec)
+    o2 = weight_arg_order(networks.build("mobilenetv2"))
+    assert o1 == o2
+    assert len(o1) == len(set(o1))
+
+
+def test_batch_consistency():
+    # running batch-3 must equal three batch-1 runs (shape-specialized code,
+    # same math) — the batcher relies on this.
+    spec = networks.build("c_htwk")
+    cfg = BuildConfig(baked=True, approx=False, use_pallas=False)
+    fn = jax.jit(build_forward(spec, cfg)[0])
+    x = golden_input(spec, 3)
+    batched = np.asarray(fn(x)[0])
+    singles = np.concatenate([np.asarray(fn(x[i:i + 1])[0]) for i in range(3)])
+    np.testing.assert_allclose(batched, singles, rtol=1e-5, atol=1e-6)
+
+
+def test_golden_input_deterministic():
+    spec = networks.build("c_htwk")
+    np.testing.assert_array_equal(golden_input(spec, 1), golden_input(spec, 1))
+
+
+def test_splitmix_pinned_vectors():
+    # ABI anchor shared with rust util/rng.rs tests.
+    from compile.testdata import splitmix64_stream, splitmix_uniform
+    assert [hex(v) for v in splitmix64_stream(1, 2)] == [
+        "0x910a2dec89025cc1", "0xbeeb8da1658eec67"]
+    np.testing.assert_allclose(
+        splitmix_uniform(1, (4,)),
+        [0.13312304, 0.49156344, 0.9420054, -0.11128163], atol=1e-7)

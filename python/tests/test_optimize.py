@@ -1,0 +1,114 @@
+# §3.5 merging passes: folding must be numerically equivalent (modulo f32
+# associativity) and must remove every foldable BN.
+import jax
+import numpy as np
+import pytest
+
+from compile import networks, optimize
+from compile.model import BuildConfig, build_forward
+from compile.spec import Builder
+
+EXACT = BuildConfig(baked=True, approx=False, use_pallas=False)
+
+
+def _run(spec, x):
+    return np.asarray(jax.jit(build_forward(spec, EXACT)[0])(x)[0])
+
+
+@pytest.mark.parametrize("name", ["c_bh", "detector", "segmenter"])
+def test_fold_equivalent(name):
+    spec = networks.build(name)
+    folded = optimize.fold_batchnorm(spec)
+    x = np.random.RandomState(1).randn(2, *spec.input_shape).astype(np.float32)
+    a, b = _run(spec, x), _run(folded, x)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_fold_removes_bns():
+    spec = networks.build("mobilenetv2")
+    folded = optimize.fold_batchnorm(spec)
+    n_before = sum(l.op == "batchnorm" for l in spec.layers)
+    n_after = sum(l.op == "batchnorm" for l in folded.layers)
+    assert n_before > 30
+    assert n_after == 0, "all MobileNetV2 BNs sit after conv/dwconv"
+
+
+def test_fold_linear_producer_changes_weights():
+    # conv (linear) → BN: fold into kernel+bias, no post_scale.
+    b = Builder("t", [8, 8, 3], 0)
+    x = b.conv2d("input", 4, k=3)
+    x = b.batchnorm(x)
+    spec = b.finish(x)
+    folded = optimize.fold_batchnorm(spec)
+    assert len(folded.layers) == 1
+    conv = folded.layers[0]
+    assert not conv.attrs.get("post_scale")
+    xin = np.random.RandomState(2).randn(1, 8, 8, 3).astype(np.float32)
+    np.testing.assert_allclose(_run(spec, xin), _run(folded, xin),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fold_across_activation_uses_post_affine():
+    # conv+relu → BN: paper §3.5 keeps BN applied *after* the activation,
+    # fused into the same unit.
+    b = Builder("t", [8, 8, 3], 0)
+    x = b.conv2d("input", 4, k=3, activation="relu")
+    x = b.batchnorm(x)
+    spec = b.finish(x)
+    folded = optimize.fold_batchnorm(spec)
+    assert len(folded.layers) == 1
+    conv = folded.layers[0]
+    assert conv.attrs.get("post_scale")
+    assert "post_scale_w" in conv.weights and "post_shift_w" in conv.weights
+    xin = np.random.RandomState(3).randn(1, 8, 8, 3).astype(np.float32)
+    np.testing.assert_allclose(_run(spec, xin), _run(folded, xin),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fold_skips_multi_consumer():
+    # BN's producer feeds two consumers → folding would change the raw branch.
+    b = Builder("t", [8, 8, 4], 0)
+    c = b.conv2d("input", 4, k=1)
+    bn = b.batchnorm(c)
+    other = b.activation(c, "relu")  # second consumer of conv output
+    out = b.add(bn, other)
+    spec = b.finish(out)
+    folded = optimize.fold_batchnorm(spec)
+    assert sum(l.op == "batchnorm" for l in folded.layers) == 1
+    xin = np.random.RandomState(4).randn(1, 8, 8, 4).astype(np.float32)
+    np.testing.assert_allclose(_run(spec, xin), _run(folded, xin),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fold_bias_free_conv_gains_bias():
+    b = Builder("t", [8, 8, 3], 0)
+    x = b.conv2d("input", 4, k=1, use_bias=False)
+    x = b.batchnorm(x)
+    spec = b.finish(x)
+    folded = optimize.fold_batchnorm(spec)
+    conv = folded.layers[0]
+    assert conv.attrs["use_bias"] and "bias" in conv.weights
+    xin = np.random.RandomState(5).randn(1, 8, 8, 3).astype(np.float32)
+    np.testing.assert_allclose(_run(spec, xin), _run(folded, xin),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fold_depthwise():
+    b = Builder("t", [8, 8, 6], 0)
+    x = b.depthwise_conv2d("input", k=3)
+    x = b.batchnorm(x)
+    spec = b.finish(x)
+    folded = optimize.fold_batchnorm(spec)
+    assert len(folded.layers) == 1
+    xin = np.random.RandomState(6).randn(1, 8, 8, 6).astype(np.float32)
+    np.testing.assert_allclose(_run(spec, xin), _run(folded, xin),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fold_idempotent_blob_consistency():
+    spec = networks.build("c_bh")
+    folded = optimize.fold_batchnorm(spec)
+    # every weight ref still inside the (possibly grown) blob
+    for l in folded.layers:
+        for w in l.weights.values():
+            assert w.offset + w.size <= folded.weights.size

@@ -1,0 +1,97 @@
+# nnspec format: builder shape inference, save/load round-trip, determinism.
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from compile import networks, spec as spec_mod
+from compile.model import BuildConfig, build_forward, output_shapes
+
+
+@pytest.fixture(scope="module")
+def small_specs():
+    return {n: networks.build(n) for n in ("c_htwk", "c_bh", "segmenter",
+                                           "detector")}
+
+
+def test_builder_shapes_match_jax(small_specs):
+    # The Builder's static shape inference must agree with jax.eval_shape.
+    for name, s in small_specs.items():
+        declared = s.layers[-1]
+        shapes = output_shapes(s, batch=2,
+                               cfg=BuildConfig(baked=True, approx=False,
+                                               use_pallas=False))
+        for out_name, got in zip(s.outputs, shapes):
+            assert got[0] == 2, name
+
+
+def test_roundtrip(tmp_path, small_specs):
+    for name, s in small_specs.items():
+        s.save(str(tmp_path))
+        loaded = spec_mod.load(str(tmp_path), name)
+        assert loaded.name == s.name
+        assert loaded.input_shape == list(s.input_shape)
+        assert [l.name for l in loaded.layers] == [l.name for l in s.layers]
+        assert [l.op for l in loaded.layers] == [l.op for l in s.layers]
+        np.testing.assert_array_equal(loaded.weights, s.weights)
+        # attrs survive
+        for a, b in zip(loaded.layers, s.layers):
+            assert a.activation == b.activation
+            assert a.attrs == b.attrs
+            assert set(a.weights) == set(b.weights)
+
+
+def test_roundtrip_forward_identical(tmp_path):
+    s = networks.build("c_htwk")
+    s.save(str(tmp_path))
+    loaded = spec_mod.load(str(tmp_path), "c_htwk")
+    cfg = BuildConfig(baked=True, approx=False, use_pallas=False)
+    x = np.random.RandomState(0).randn(1, *s.input_shape).astype(np.float32)
+    a = jax.jit(build_forward(s, cfg)[0])(x)
+    b = jax.jit(build_forward(loaded, cfg)[0])(x)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+def test_deterministic_weights():
+    a, b = networks.build("c_bh"), networks.build("c_bh")
+    np.testing.assert_array_equal(a.weights, b.weights)
+    c = networks.c_bh(seed=999)
+    assert not np.array_equal(a.weights, c.weights)
+
+
+def test_param_counts():
+    # Sanity anchors; these pin the architecture against accidental edits.
+    assert networks.build("c_htwk").param_count < 50_000
+    assert networks.build("c_bh").param_count < 50_000
+    mnv2 = networks.build("mobilenetv2")
+    assert 1_500_000 < mnv2.param_count < 3_500_000  # α=1 no-top ≈ 2.2M
+    vgg = networks.build("vgg19")
+    assert vgg.param_count > 20_000_000
+    assert mnv2.param_count > networks.BAKE_THRESHOLD  # weights-as-args
+    assert networks.build("c_bh").param_count <= networks.BAKE_THRESHOLD
+
+
+def test_weight_refs_cover_blob():
+    # Every blob float belongs to exactly one weight tensor (no gaps/overlap).
+    s = networks.build("c_bh")
+    spans = []
+    for l in s.layers:
+        for w in l.weights.values():
+            spans.append((w.offset, w.offset + w.size))
+    spans.sort()
+    assert spans[0][0] == 0
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 == b0, "gap or overlap in weight blob"
+    assert spans[-1][1] == s.param_count
+
+
+def test_json_is_plain(tmp_path):
+    s = networks.build("c_htwk")
+    s.save(str(tmp_path))
+    with open(os.path.join(str(tmp_path), "c_htwk.json")) as f:
+        j = json.load(f)
+    assert j["format"] == spec_mod.FORMAT
+    assert j["weights_len"] == s.param_count
+    assert all("op" in l and "name" in l for l in j["layers"])

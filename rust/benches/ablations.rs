@@ -1,0 +1,68 @@
+//! **A-fusion / A-memory** — ablations of the paper's §3 design choices on
+//! the optimized interpreter, isolating each claim:
+//!
+//!   §3.5 BN folding:   fold_bn on/off        (latency)
+//!   §3.4 approx act:   approx on/off          (latency; precision is in
+//!                                              `compiled-nn precision`)
+//!   §3.2 memory plan:  reuse_memory on/off    (arena bytes + latency)
+//!
+//! Run on the nets that exercise each feature: c_bh (BN + sigmoid),
+//! segmenter (softmax over 80×80), mobilenetv2 (34 BNs, depthwise).
+
+use std::time::Duration;
+
+use compiled_nn::bench::{bench_budget, black_box};
+use compiled_nn::compiler::exec::{CompileOptions, OptInterp};
+use compiled_nn::model::load::load_model;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::util::rng::{golden_seed, SplitMix64};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load_default()?;
+    let budget = Duration::from_secs(2);
+
+    for name in ["c_bh", "segmenter", "mobilenetv2"] {
+        let entry = manifest.entry(name)?;
+        let spec = load_model(&manifest.models_dir, name)?;
+        let mut rng = SplitMix64::new(golden_seed(entry.seed));
+        let mut shape = vec![1];
+        shape.extend_from_slice(&entry.input_shape);
+        let n: usize = shape.iter().product();
+        let x = Tensor::from_vec(&shape, rng.uniform_vec(n));
+        let min_iters = if entry.params > 1_000_000 { 3 } else { 20 };
+
+        println!("\n== {name} ({} params)", entry.params);
+        let base = CompileOptions::default();
+        let variants: [(&str, CompileOptions); 4] = [
+            ("all-on (paper)", base),
+            ("no BN folding", CompileOptions { fold_bn: false, ..base }),
+            ("exact activations", CompileOptions { approx: false, ..base }),
+            ("no memory reuse", CompileOptions { reuse_memory: false, ..base }),
+        ];
+        let mut baseline = 0.0;
+        for (label, opts) in variants {
+            let mut e = OptInterp::new(&spec, opts)?;
+            // touch once so arena exists for the bytes report
+            e.infer(&x)?;
+            let arena = e.arena_bytes();
+            let r = bench_budget(&format!("{name}/{label}"), budget, min_iters, || {
+                black_box(e.infer(&x).unwrap());
+            });
+            if label.starts_with("all-on") {
+                baseline = r.mean_ms;
+            }
+            println!(
+                "{:<22} mean {:>9.3} ms  (×{:>5.2} vs all-on)  arena {:>10} B  [{} iters]",
+                label,
+                r.mean_ms,
+                r.mean_ms / baseline,
+                arena,
+                r.iters
+            );
+        }
+    }
+    println!("\n(expected: each paper optimization is a ≥1.0× win on latency; \
+             memory reuse shrinks the arena; see EXPERIMENTS.md A-fusion/A-memory)");
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! **A-activations** — §3.4 approximation speed: fast tanh/sigmoid/exp/
+//! softmax vs their libm-exact counterparts over large buffers (the
+//! activation pass of a real layer), plus the error table.
+
+use compiled_nn::approx;
+use compiled_nn::bench::{bench, black_box};
+use compiled_nn::util::rng::SplitMix64;
+
+fn main() {
+    let n = 1 << 16;
+    let mut rng = SplitMix64::new(7);
+    let xs: Vec<f32> = (0..n).map(|_| rng.range(-6.0, 6.0)).collect();
+    let mut out = vec![0.0f32; n];
+
+    println!("{:<22} {:>12} {:>12} {:>8}", "function", "exact ms", "fast ms", "speedup");
+    let cases: Vec<(&str, Box<dyn Fn(f32) -> f32>, Box<dyn Fn(f32) -> f32>)> = vec![
+        ("tanh (Eq. 5)", Box::new(|v: f32| v.tanh()), Box::new(approx::fast_tanh)),
+        (
+            "sigmoid (Eq. 4)",
+            Box::new(|v: f32| 1.0 / (1.0 + (-v).exp())),
+            Box::new(approx::fast_sigmoid),
+        ),
+        ("exp (Schraudolph)", Box::new(|v: f32| v.exp()), Box::new(approx::fast_exp)),
+    ];
+    for (name, exact, fast) in cases {
+        let re = bench(&format!("{name}/exact"), 2, 10, || {
+            for (o, &v) in out.iter_mut().zip(&xs) {
+                *o = exact(v);
+            }
+            black_box(&out);
+        });
+        let rf = bench(&format!("{name}/fast"), 2, 10, || {
+            for (o, &v) in out.iter_mut().zip(&xs) {
+                *o = fast(v);
+            }
+            black_box(&out);
+        });
+        println!(
+            "{:<22} {:>12.3} {:>12.3} {:>8.2}×",
+            name,
+            re.mean_ms,
+            rf.mean_ms,
+            re.mean_ms / rf.mean_ms
+        );
+    }
+
+    // softmax rows (the two-pass §3.4 structure)
+    let c = 64;
+    let mut buf = xs.clone();
+    let re = bench("softmax/exact", 2, 10, || {
+        buf.copy_from_slice(&xs);
+        for row in buf.chunks_exact_mut(c) {
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut s = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                s += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= s;
+            }
+        }
+        black_box(&buf);
+    });
+    let rf = bench("softmax/fast", 2, 10, || {
+        buf.copy_from_slice(&xs);
+        for row in buf.chunks_exact_mut(c) {
+            approx::fast_softmax_row(row);
+        }
+        black_box(&buf);
+    });
+    println!(
+        "{:<22} {:>12.3} {:>12.3} {:>8.2}×",
+        "softmax (two-pass)",
+        re.mean_ms,
+        rf.mean_ms,
+        re.mean_ms / rf.mean_ms
+    );
+
+    println!("\nprecision (same numbers as `compiled-nn precision`):");
+    for r in approx::report(4001) {
+        println!(
+            "  {:<20} max abs {:.3e}  mean abs {:.3e}  max rel {:.3e}",
+            r.name, r.max_abs_err, r.mean_abs_err, r.max_rel_err
+        );
+    }
+}

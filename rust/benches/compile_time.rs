@@ -1,0 +1,57 @@
+//! **T1-compile** — the Compilation-Time row of Table 1: for each network,
+//! time to go from artifact on disk to executable native code (HLO-text
+//! parse + XLA:CPU codegen + weight upload), repeated to show variance,
+//! plus the Rust-side graph-pass/planning cost for the interpreter engines.
+//!
+//! Paper anchor: 6.5 ms (C-HTWK) → 13 722 ms (VGG19) on the NAO — compile
+//! cost grows superlinearly with model size; the same shape must hold here.
+
+use compiled_nn::bench::bench;
+use compiled_nn::compiler::exec::{compile, CompileOptions};
+use compiled_nn::model::load::load_model;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load_default()?;
+    let rt = Runtime::new()?;
+    println!(
+        "{:<14} {:>10} {:>12} {:>12} {:>12} {:>14} {:>14}",
+        "model", "params", "parse ms", "codegen ms", "upload ms", "total ms", "plan(rs) ms"
+    );
+    for name in manifest.models.keys() {
+        let entry = manifest.entry(name)?;
+        // repeat full loads to average (3× keeps vgg19 tolerable)
+        let reps = if entry.params > 10_000_000 { 2 } else { 3 };
+        let mut parse = 0.0;
+        let mut codegen = 0.0;
+        let mut upload = 0.0;
+        for _ in 0..reps {
+            let m = CompiledModel::load_buckets(&rt, &manifest, entry, &[1])?;
+            parse += m.timings[&1].parse_ms;
+            codegen += m.timings[&1].compile_ms;
+            upload += m.weights_upload_ms;
+        }
+        let (parse, codegen, upload) =
+            (parse / reps as f64, codegen / reps as f64, upload / reps as f64);
+
+        // Rust-side compile (fold + memory plan) for the optimized engine.
+        let spec = load_model(&manifest.models_dir, name)?;
+        let r = bench(&format!("{name}/plan"), 1, 5, || {
+            let _ = compile(&spec, CompileOptions::default()).unwrap();
+        });
+
+        println!(
+            "{:<14} {:>10} {:>12.1} {:>12.1} {:>12.1} {:>14.1} {:>14.3}",
+            name,
+            entry.params,
+            parse,
+            codegen,
+            upload,
+            parse + codegen + upload,
+            r.mean_ms
+        );
+    }
+    println!("\n(compile-time row of Table 1; paper: 6.5 ms → 13722 ms across the same size span)");
+    Ok(())
+}

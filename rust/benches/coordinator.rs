@@ -1,0 +1,67 @@
+//! **SERVE** — coordinator characterization: throughput and latency of the
+//! batched serving path on the ball classifier, sweeping the batching
+//! deadline. Reproduces the paper's application claim (§4: classify many
+//! more ball-candidate patches per frame) as a serving-throughput curve.
+
+use std::time::{Duration, Instant};
+
+use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::util::rng::SplitMix64;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load_default()?;
+    println!(
+        "{:>10} {:>10} {:>12} {:>10} {:>10} {:>10} {:>8}",
+        "max_wait", "requests", "throughput", "p50 µs", "p95 µs", "fill", "padded"
+    );
+    for wait_us in [200u64, 1000, 4000] {
+        let cfg = CoordinatorConfig {
+            max_wait: Duration::from_micros(wait_us),
+            queue_depth: 4096,
+        };
+        let coord = Coordinator::start(manifest.clone(), cfg)?;
+        let client = coord.register("c_bh")?;
+        let item: usize = client.info.input_shape.iter().product();
+
+        // bursty open-ish loop: frames of 24 candidate patches arrive
+        // together (the §4 workload shape) and are collected per frame —
+        // this is the regime where dynamic batching actually packs.
+        let burst = 24usize;
+        let frames = 80usize;
+        let total = burst * frames;
+        let mut rng = SplitMix64::new(3);
+        let inputs: Vec<Tensor> = (0..burst)
+            .map(|_| Tensor::from_vec(&client.info.input_shape.clone(), rng.uniform_vec(item)))
+            .collect();
+
+        let t0 = Instant::now();
+        for _ in 0..frames {
+            let pending: Vec<_> = inputs
+                .iter()
+                .map(|x| client.infer_async(x.clone()))
+                .collect::<Result<_, _>>()?;
+            for rx in pending {
+                rx.recv().unwrap()?;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let m = coord.metrics("c_bh").unwrap();
+        println!(
+            "{:>8}µs {:>10} {:>10.0}/s {:>10} {:>10} {:>10.2} {:>8}",
+            wait_us,
+            total,
+            total as f64 / secs,
+            m.latency.quantile_us(0.5),
+            m.latency.quantile_us(0.95),
+            m.mean_batch_fill(),
+            m.padded_slots.get()
+        );
+        coord.shutdown();
+        drop(coord);
+    }
+    println!("\n(longer deadlines trade latency for batch fill; padded slots are \
+             the §4 fixed-shape-bucket cost)");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! **A-matvec** — §3.3's Eq. 2 (broadcast) vs Eq. 3 (rotated-diagonal)
+//! matrix–vector schemes, swept over matrix sizes. The paper argues Eq. 3
+//! wins by one register and one shuffle per step; here the rotated layout
+//! turns the inner loop into two contiguous streams (no per-step gather),
+//! which is the CPU analog of the same scheduling argument.
+//!
+//! The §3.3 cost model's predictions (batches/shuffles per scheme) print
+//! alongside the measurements for comparison.
+
+use compiled_nn::bench::{bench, black_box};
+use compiled_nn::compiler::cost::batch_elems;
+use compiled_nn::nn::simd::{matvec_broadcast, matvec_naive, matvec_rotated, rotate_diagonals};
+use compiled_nn::util::rng::SplitMix64;
+
+fn main() {
+    println!(
+        "cost model: batch_elems(k=2, Eq.3) = {}, batch_elems(k=3, Eq.2) = {}",
+        batch_elems(2),
+        batch_elems(3)
+    );
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>10} {:>10}",
+        "n", "naive ms", "Eq.2 ms", "Eq.3 ms", "Eq3/Eq2", "Eq3/naive"
+    );
+    let mut rng = SplitMix64::new(0xBEEF);
+    for n in [4usize, 8, 16, 32, 64, 128, 256, 512] {
+        let w = rng.uniform_vec(n * n);
+        let x = rng.uniform_vec(n);
+        let d = rotate_diagonals(&w, n);
+        let mut y = vec![0.0f32; n];
+        // scale iteration count to keep each cell ~10 ms of work
+        let iters = (20_000_000 / (n * n)).clamp(20, 200_000);
+
+        let rn = bench(&format!("naive/{n}"), 2, 3, || {
+            for _ in 0..iters {
+                matvec_naive(&w, &x, &mut y);
+                black_box(&y);
+            }
+        });
+        let r2 = bench(&format!("eq2/{n}"), 2, 3, || {
+            for _ in 0..iters {
+                matvec_broadcast(&w, &x, &mut y);
+                black_box(&y);
+            }
+        });
+        let r3 = bench(&format!("eq3/{n}"), 2, 3, || {
+            for _ in 0..iters {
+                matvec_rotated(&d, &x, &mut y);
+                black_box(&y);
+            }
+        });
+        println!(
+            "{:>6} {:>12.3} {:>12.3} {:>12.3} {:>10.3} {:>10.3}",
+            n,
+            rn.mean_ms,
+            r2.mean_ms,
+            r3.mean_ms,
+            r3.mean_ms / r2.mean_ms,
+            r3.mean_ms / rn.mean_ms
+        );
+    }
+    println!("\n(Eq3/Eq2 < 1.0 reproduces the paper's register/shuffle argument; \
+             both beat the naive row-major walk at larger n)");
+}

@@ -1,0 +1,158 @@
+//! §3.4 activation-function approximations — bit-identical algorithms to the
+//! L1 Pallas kernels in `python/compile/kernels/activations.py`.
+//!
+//! SSE has no `exp`; the paper substitutes:
+//!  * tanh — continued-fraction truncation (Eq. 5),
+//!  * sigmoid — via tanh (Eq. 4),
+//!  * exp — Schraudolph's IEEE-754 bit trick [14],
+//!  * softmax — two passes over fast exp.
+//!
+//! These run in the optimized interpreter's fused store loops; `report()`
+//! powers the `compiled-nn precision` command reproducing the paper's
+//! precision discussion.
+
+/// Schraudolph constants for f32 (same values as the Python kernel):
+/// `i = A*x + (B - C)`, bits reinterpreted as f32.
+pub const SCHRAUDOLPH_A: f32 = 8388608.0 / core::f32::consts::LN_2;
+pub const SCHRAUDOLPH_B: f32 = 127.0 * 8388608.0;
+pub const SCHRAUDOLPH_C: f32 = 366392.0;
+
+/// Fast exp: one multiply, one float→int conversion, one add, one bitcast.
+#[inline(always)]
+pub fn fast_exp(x: f32) -> f32 {
+    let i = (SCHRAUDOLPH_A * x + (SCHRAUDOLPH_B - SCHRAUDOLPH_C)) as i32;
+    f32::from_bits(i as u32)
+}
+
+/// Fast tanh via the Eq. 5 rational approximation (4 continued-fraction
+/// steps): numerator/denominator of degree-7/8 polynomials in x.
+#[inline(always)]
+pub fn fast_tanh(x: f32) -> f32 {
+    let x2 = x * x;
+    let num = (((36.0 * x2 + 6930.0) * x2 + 270270.0) * x2 + 2027025.0) * x;
+    let den = (((x2 + 630.0) * x2 + 51975.0) * x2 + 945945.0) * x2 + 2027025.0;
+    num / den
+}
+
+/// Fast sigmoid via Eq. 4: `(tanh(x/2) + 1) / 2`.
+#[inline(always)]
+pub fn fast_sigmoid(x: f32) -> f32 {
+    (fast_tanh(0.5 * x) + 1.0) * 0.5
+}
+
+/// Two-pass fast softmax over a row (max-shifted; shift cancels in the
+/// ratio, so this matches the paper's unshifted math for finite inputs).
+pub fn fast_softmax_row(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = fast_exp(*v - m);
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Max absolute / relative error of each approximation over its working
+/// range — the numbers behind `compiled-nn precision`.
+#[derive(Debug, Clone)]
+pub struct PrecisionRow {
+    pub name: &'static str,
+    pub range: (f32, f32),
+    pub max_abs_err: f64,
+    pub mean_abs_err: f64,
+    pub max_rel_err: f64,
+}
+
+pub fn report(samples: usize) -> Vec<PrecisionRow> {
+    let eval = |name: &'static str, lo: f32, hi: f32, approx: fn(f32) -> f32, exact: fn(f32) -> f32| {
+        let mut max_abs = 0f64;
+        let mut sum_abs = 0f64;
+        let mut max_rel = 0f64;
+        for i in 0..samples {
+            let x = lo + (hi - lo) * i as f32 / (samples - 1) as f32;
+            let a = approx(x) as f64;
+            let e = exact(x) as f64;
+            let abs = (a - e).abs();
+            max_abs = max_abs.max(abs);
+            sum_abs += abs;
+            if e.abs() > 1e-30 {
+                max_rel = max_rel.max(abs / e.abs());
+            }
+        }
+        PrecisionRow {
+            name,
+            range: (lo, hi),
+            max_abs_err: max_abs,
+            mean_abs_err: sum_abs / samples as f64,
+            max_rel_err: max_rel,
+        }
+    };
+    vec![
+        eval("tanh (Eq. 5)", -4.0, 4.0, fast_tanh, f32::tanh),
+        eval("sigmoid (Eq. 4)", -8.0, 8.0, fast_sigmoid, |x| 1.0 / (1.0 + (-x).exp())),
+        eval("exp (Schraudolph)", -10.0, 10.0, fast_exp, f32::exp),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tanh_error_bound() {
+        // Same bound the python tests assert (ref.TANH_MAX_ABS_ERR).
+        let r = &report(4001)[0];
+        assert!(r.max_abs_err < 1e-4, "{r:?}");
+    }
+
+    #[test]
+    fn sigmoid_error_bound() {
+        let r = &report(4001)[1];
+        assert!(r.max_abs_err < 1e-4, "{r:?}");
+    }
+
+    #[test]
+    fn exp_relative_error_bound() {
+        // Schraudolph: ~3.95 % worst-case relative error.
+        let r = &report(4001)[2];
+        assert!(r.max_rel_err < 0.04, "{r:?}");
+    }
+
+    #[test]
+    fn exp_matches_python_constants() {
+        // pinned spot values cross-checked with the pallas kernel
+        assert!((fast_exp(0.0) - 1.0).abs() < 0.03);
+        assert!((fast_exp(1.0) - core::f32::consts::E).abs() / core::f32::consts::E < 0.04);
+    }
+
+    #[test]
+    fn tanh_odd_symmetric() {
+        for i in 0..100 {
+            let x = -4.0 + i as f32 * 0.08;
+            assert!((fast_tanh(x) + fast_tanh(-x)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let mut row = [1.0f32, 2.0, 3.0, -1.0];
+        fast_softmax_row(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        // ordering preserved
+        assert!(row[2] > row[1] && row[1] > row[0] && row[0] > row[3]);
+    }
+
+    #[test]
+    fn sigmoid_monotone() {
+        let mut prev = f32::NEG_INFINITY;
+        for i in 0..200 {
+            let v = fast_sigmoid(-8.0 + i as f32 * 0.08);
+            assert!(v >= prev - 1e-6);
+            prev = v;
+        }
+    }
+}

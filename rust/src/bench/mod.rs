@@ -1,0 +1,123 @@
+//! From-scratch benchmark harness (criterion is unavailable offline).
+//!
+//! Methodology matches the paper's §4: "runtimes are the average over
+//! multiple successive calls to the inference routine, after doing some
+//! unmeasured initial runs". Each measured iteration is timed individually
+//! so percentiles are real, not modeled.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub min_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<38} {:>8} iters  mean {:>10.4} ms  min {:>10.4}  p50 {:>10.4}  p95 {:>10.4}",
+            self.name, self.iters, self.mean_ms, self.min_ms, self.p50_ms, self.p95_ms
+        )
+    }
+}
+
+/// Run `f` `warmup` times unmeasured, then `iters` measured times.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(name, samples)
+}
+
+/// Time-budgeted variant: at least `min_iters`, then keep iterating until
+/// `budget` is spent (one warmup call included). For workloads whose cost
+/// spans five orders of magnitude across models (Table 1).
+pub fn bench_budget(
+    name: &str,
+    budget: Duration,
+    min_iters: usize,
+    mut f: impl FnMut(),
+) -> BenchResult {
+    f(); // warmup
+    let start = Instant::now();
+    let mut samples = Vec::new();
+    while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 10_000) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(name, samples)
+}
+
+fn summarize(name: &str, mut samples: Vec<f64>) -> BenchResult {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let q = |p: f64| samples[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: n,
+        mean_ms: samples.iter().sum::<f64>() / n as f64,
+        min_ms: samples[0],
+        p50_ms: q(0.5),
+        p95_ms: q(0.95),
+        max_ms: samples[n - 1],
+    }
+}
+
+/// Pretty table printing for grids of (row, col) → value.
+pub fn print_grid(title: &str, cols: &[&str], rows: &[(String, Vec<Option<f64>>)]) {
+    println!("\n== {title}");
+    print!("{:<14}", "");
+    for c in cols {
+        print!(" {c:>12}");
+    }
+    println!();
+    for (name, vals) in rows {
+        print!("{name:<14}");
+        for v in vals {
+            match v {
+                Some(v) => print!(" {v:>12.4}"),
+                None => print!(" {:>12}", "-"),
+            }
+        }
+        println!();
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let r = bench("t", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.min_ms <= r.p50_ms && r.p50_ms <= r.p95_ms);
+    }
+
+    #[test]
+    fn budget_respects_min_iters() {
+        let r = bench_budget("t", Duration::ZERO, 3, || {});
+        assert!(r.iters >= 3);
+    }
+}

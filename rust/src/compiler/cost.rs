@@ -1,0 +1,135 @@
+//! §3.3 cost model: per-unit instruction/register estimates for the
+//! generated code, using the paper's batching rule — values are grouped in
+//! batches of `4 · (n_xmm − k)` elements, where k is the number of registers
+//! reserved for weights/temporaries (k = 2 for the Eq. 3 rotated-diagonal
+//! scheme, k = 3 for the Eq. 2 broadcast scheme).
+//!
+//! This is a *static* model (it needs no input), used by `compiled-nn
+//! inspect` and by DESIGN.md's §Perf estimates; EXPERIMENTS.md compares its
+//! predictions with the measured Eq. 2/Eq. 3 bench.
+
+use anyhow::Result;
+
+use crate::model::spec::{LayerOp, ModelSpec};
+
+/// Registers available on the paper's target (x86-64 SSE: 16 XMM).
+pub const N_XMM: usize = 16;
+/// Lanes per register (4 × f32 in 128-bit XMM).
+pub const LANES: usize = 4;
+
+#[derive(Debug, Clone)]
+pub struct UnitCost {
+    pub layer: String,
+    pub op: &'static str,
+    /// Multiply–accumulates in the unit.
+    pub macs: usize,
+    pub out_elems: usize,
+    /// Register batches per §3.3: Eq. 3 scheme (k = 2).
+    pub batches_eq3: usize,
+    /// Register batches with the Eq. 2 broadcast scheme (k = 3).
+    pub batches_eq2: usize,
+    /// Shuffle ops per output 4-block: Eq. 3 needs (n−1), Eq. 2 needs n.
+    pub shuffles_eq3: usize,
+    pub shuffles_eq2: usize,
+}
+
+/// Elements processed per batch for a given reserved-register count.
+pub fn batch_elems(k: usize) -> usize {
+    LANES * (N_XMM - k)
+}
+
+pub fn analyze(spec: &ModelSpec) -> Result<Vec<UnitCost>> {
+    let shapes = spec.infer_shapes()?;
+    let mut out = Vec::new();
+    for l in &spec.layers {
+        let oshape = &shapes[&l.name];
+        let out_elems: usize = oshape.iter().product();
+        let in_shape = &shapes[&l.inputs[0]];
+        let (macs, matvec_n) = match &l.op {
+            LayerOp::Conv2d { kh, kw, .. } => {
+                let c = *in_shape.last().unwrap();
+                (out_elems * kh * kw * c, Some(kh * kw * c))
+            }
+            LayerOp::DepthwiseConv2d { kh, kw, .. } => (out_elems * kh * kw, None),
+            LayerOp::Dense { units } => (in_shape[0] * units, Some(in_shape[0])),
+            LayerOp::BatchNorm { .. } => (out_elems, None),
+            LayerOp::Softmax => (out_elems * 2, None),
+            _ => (0, None),
+        };
+        let div = |n: usize, d: usize| (n + d - 1) / d.max(1);
+        let (sh3, sh2) = match matvec_n {
+            Some(n) => (n.saturating_sub(1), n),
+            None => (0, 0),
+        };
+        out.push(UnitCost {
+            layer: l.name.clone(),
+            op: l.op.name(),
+            macs,
+            out_elems,
+            batches_eq3: div(out_elems, batch_elems(2)),
+            batches_eq2: div(out_elems, batch_elems(3)),
+            shuffles_eq3: sh3,
+            shuffles_eq2: sh2,
+        });
+    }
+    Ok(out)
+}
+
+/// Total MACs of the network (for roofline-style comparisons).
+pub fn total_macs(spec: &ModelSpec) -> usize {
+    analyze(spec).map(|v| v.iter().map(|u| u.macs).sum()).unwrap_or(0)
+}
+
+/// Render the analysis as an aligned text table (inspect command).
+pub fn render_table(costs: &[UnitCost]) -> String {
+    let mut s = String::from(format!(
+        "{:<16} {:<18} {:>12} {:>10} {:>9} {:>9} {:>9} {:>9}\n",
+        "layer", "op", "macs", "out", "bat(Eq3)", "bat(Eq2)", "shuf3", "shuf2"
+    ));
+    for c in costs {
+        s.push_str(&format!(
+            "{:<16} {:<18} {:>12} {:>10} {:>9} {:>9} {:>9} {:>9}\n",
+            c.layer, c.op, c.macs, c.out_elems, c.batches_eq3, c.batches_eq2,
+            c.shuffles_eq3, c.shuffles_eq2
+        ));
+    }
+    let total: usize = costs.iter().map(|c| c.macs).sum();
+    s.push_str(&format!("total MACs: {total}\n"));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::tiny_cnn;
+
+    #[test]
+    fn batch_rule_matches_paper() {
+        // §3.3: "batches of up to 4·(n_xmm − k) elements … k usually 2"
+        assert_eq!(batch_elems(2), 56);
+        assert_eq!(batch_elems(3), 52);
+    }
+
+    #[test]
+    fn eq3_needs_fewer_batches_and_shuffles() {
+        let costs = analyze(&tiny_cnn(1)).unwrap();
+        for c in &costs {
+            assert!(c.batches_eq3 <= c.batches_eq2, "{c:?}");
+            assert!(c.shuffles_eq3 <= c.shuffles_eq2, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn conv_macs() {
+        // tiny_cnn conv1: 8×8 out, 4 ch, 3×3×3 kernel = 64*4*27 MACs
+        let costs = analyze(&tiny_cnn(1)).unwrap();
+        let conv = costs.iter().find(|c| c.layer == "conv1").unwrap();
+        assert_eq!(conv.macs, 8 * 8 * 4 * 27);
+    }
+
+    #[test]
+    fn render_contains_total() {
+        let t = render_table(&analyze(&tiny_cnn(1)).unwrap());
+        assert!(t.contains("total MACs"));
+    }
+}

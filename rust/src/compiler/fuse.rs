@@ -1,0 +1,290 @@
+//! §3.5 merging passes on the Rust side — the exact transformation
+//! `python/compile/optimize.py` applies before AOT lowering, here feeding
+//! the optimized interpreter. Integration tests check both sides agree.
+//!
+//! * BN after a *linear* conv/dwconv/dense → folded into kernel + bias.
+//! * BN after a *nonlinear* producer → fused post-activation affine
+//!   (`post_scale`), applied in the producer's store loop.
+//! * Only single-consumer producers are folded (a second consumer would
+//!   observe the un-normalized tensor).
+
+use std::collections::BTreeMap;
+
+use crate::model::spec::{Activation, LayerOp, ModelSpec, WeightRef};
+
+fn consumers(spec: &ModelSpec, name: &str) -> usize {
+    spec.layers.iter().filter(|l| l.inputs.iter().any(|i| i == name)).count()
+        + spec.outputs.iter().filter(|o| *o == name).count()
+}
+
+/// Append a tensor to the blob, returning its ref.
+fn append(blob: &mut Vec<f32>, data: &[f32]) -> WeightRef {
+    let offset = blob.len();
+    blob.extend_from_slice(data);
+    WeightRef { offset, shape: vec![data.len()] }
+}
+
+/// Fold every eligible batchnorm. Returns the rewritten spec; layer count
+/// shrinks by the number of folded BNs and the blob may grow (materialized
+/// biases / post-affine vectors).
+pub fn fold_batchnorm(spec: &ModelSpec) -> ModelSpec {
+    let mut out = spec.clone();
+    let mut blob = std::mem::take(&mut out.weights);
+    let mut removed: BTreeMap<String, String> = BTreeMap::new(); // bn -> producer
+
+    // Pass 1: decide folds and rewrite producers.
+    let producer_names: Vec<String> = out.layers.iter().map(|l| l.name.clone()).collect();
+    for bi in 0..out.layers.len() {
+        let (op, name, input) = {
+            let l = &out.layers[bi];
+            (l.op.clone(), l.name.clone(), l.inputs[0].clone())
+        };
+        let eps = match op {
+            LayerOp::BatchNorm { epsilon } => epsilon,
+            _ => continue,
+        };
+        let Some(pi) = producer_names.iter().position(|n| *n == input) else {
+            continue; // BN directly on the model input
+        };
+        let foldable = matches!(
+            out.layers[pi].op,
+            LayerOp::Conv2d { .. } | LayerOp::DepthwiseConv2d { .. } | LayerOp::Dense { .. }
+        );
+        if !foldable || out.layers[pi].post_scale {
+            continue;
+        }
+        // `spec` (original) is fine for consumer counting: folding never
+        // changes edges of un-removed layers.
+        if consumers(spec, &input) != 1 {
+            continue;
+        }
+        let (scale, shift) = {
+            let bn = &out.layers[bi];
+            // weight refs of BN point into the original blob region, which
+            // is a prefix of `blob` (we only append), so read directly:
+            let g = read(&blob, bn.weights.get("gamma").unwrap());
+            let b = read(&blob, bn.weights.get("beta").unwrap());
+            let m = read(&blob, bn.weights.get("mean").unwrap());
+            let v = read(&blob, bn.weights.get("var").unwrap());
+            let scale: Vec<f32> = (0..g.len()).map(|i| g[i] / (v[i] + eps).sqrt()).collect();
+            let shift: Vec<f32> = (0..g.len()).map(|i| b[i] - m[i] * scale[i]).collect();
+            (scale, shift)
+        };
+
+        let prod = &mut out.layers[pi];
+        if prod.activation == Activation::Linear {
+            // fold into weights
+            let kref = prod.weights.get("kernel").unwrap().clone();
+            let mut kernel = read(&blob, &kref).to_vec();
+            match &prod.op {
+                LayerOp::Conv2d { .. } => {
+                    let oc = *kref.shape.last().unwrap();
+                    for (i, v) in kernel.iter_mut().enumerate() {
+                        *v *= scale[i % oc];
+                    }
+                }
+                LayerOp::DepthwiseConv2d { .. } => {
+                    // [kh, kw, C, 1] — channel axis is dim 2
+                    let c = kref.shape[2];
+                    for (i, v) in kernel.iter_mut().enumerate() {
+                        *v *= scale[i % c];
+                    }
+                }
+                LayerOp::Dense { .. } => {
+                    let oc = kref.shape[1];
+                    for (i, v) in kernel.iter_mut().enumerate() {
+                        *v *= scale[i % oc];
+                    }
+                }
+                _ => unreachable!(),
+            }
+            let new_kref = append(&mut blob, &kernel);
+            prod.weights.insert(
+                "kernel".into(),
+                WeightRef { offset: new_kref.offset, shape: kref.shape.clone() },
+            );
+            let has_bias = prod.weights.contains_key("bias");
+            if has_bias {
+                let bref = prod.weights.get("bias").unwrap().clone();
+                let bias = read(&blob, &bref);
+                let new_bias: Vec<f32> = bias
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &b)| b * scale[i] + shift[i])
+                    .collect();
+                let nref = append(&mut blob, &new_bias);
+                prod.weights.insert("bias".into(), nref);
+            } else {
+                let nref = append(&mut blob, &shift);
+                prod.weights.insert("bias".into(), nref);
+                set_use_bias(&mut prod.op);
+            }
+        } else {
+            // §3.5: BN across the activation → post-activation affine.
+            prod.post_scale = true;
+            let sref = append(&mut blob, &scale);
+            prod.weights.insert("post_scale_w".into(), sref);
+            let href = append(&mut blob, &shift);
+            prod.weights.insert("post_shift_w".into(), href);
+        }
+        removed.insert(name, input);
+    }
+
+    // Pass 2: drop folded BNs, rewire consumers and outputs.
+    out.layers.retain(|l| !removed.contains_key(&l.name));
+    for l in &mut out.layers {
+        for i in &mut l.inputs {
+            if let Some(rep) = removed.get(i) {
+                *i = rep.clone();
+            }
+        }
+    }
+    for o in &mut out.outputs {
+        if let Some(rep) = removed.get(o) {
+            *o = rep.clone();
+        }
+    }
+    out.weights = blob;
+    out
+}
+
+fn read<'a>(blob: &'a [f32], r: &WeightRef) -> &'a [f32] {
+    &blob[r.offset..r.offset + r.size()]
+}
+
+fn set_use_bias(op: &mut LayerOp) {
+    match op {
+        LayerOp::Conv2d { use_bias, .. } | LayerOp::DepthwiseConv2d { use_bias, .. } => {
+            *use_bias = true
+        }
+        _ => {}
+    }
+}
+
+/// Count of BN layers remaining (ablation metric).
+pub fn bn_count(spec: &ModelSpec) -> usize {
+    spec.layers
+        .iter()
+        .filter(|l| matches!(l.op, LayerOp::BatchNorm { .. }))
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::{tiny_cnn, Builder};
+    use crate::nn::interp::NaiveInterp;
+    use crate::nn::tensor::Tensor;
+    use crate::util::rng::SplitMix64;
+
+    fn run(spec: &ModelSpec, x: &Tensor) -> Tensor {
+        NaiveInterp::new(spec.clone()).unwrap().infer(x).unwrap().remove(0)
+    }
+
+    #[test]
+    fn fold_tiny_cnn_equivalent() {
+        let spec = tiny_cnn(11);
+        let folded = fold_batchnorm(&spec);
+        assert_eq!(bn_count(&folded), 0);
+        assert_eq!(folded.layers.len(), spec.layers.len() - 1);
+        folded.validate().unwrap();
+        let mut rng = SplitMix64::new(5);
+        let x = Tensor::from_vec(&[2, 8, 8, 3], rng.uniform_vec(2 * 8 * 8 * 3));
+        let a = run(&spec, &x);
+        let b = run(&folded, &x);
+        assert!(a.max_abs_diff(&b) < 1e-4, "diff {}", a.max_abs_diff(&b));
+    }
+
+    #[test]
+    fn fold_across_activation_sets_post_scale() {
+        // tiny_cnn's conv has ReLU → BN must become post_scale, not weights.
+        let folded = fold_batchnorm(&tiny_cnn(3));
+        let conv = folded.layer("conv1").unwrap();
+        assert!(conv.post_scale);
+        assert!(conv.weights.contains_key("post_scale_w"));
+    }
+
+    #[test]
+    fn fold_linear_conv_into_weights() {
+        let mut b = Builder::new("t", &[6, 6, 2], 9);
+        let c = b.conv2d("input", 3, 3, 1, Activation::Linear);
+        let bn = b.batchnorm(&c);
+        let spec = b.finish(&[&bn]);
+        let folded = fold_batchnorm(&spec);
+        assert_eq!(folded.layers.len(), 1);
+        assert!(!folded.layers[0].post_scale);
+        let mut rng = SplitMix64::new(6);
+        let x = Tensor::from_vec(&[1, 6, 6, 2], rng.uniform_vec(72));
+        assert!(run(&spec, &x).max_abs_diff(&run(&folded, &x)) < 1e-4);
+    }
+
+    #[test]
+    fn fold_skips_bn_on_input() {
+        let mut b = Builder::new("t", &[4, 4, 2], 9);
+        let bn = b.batchnorm("input");
+        let c = b.conv2d(&bn, 2, 1, 1, Activation::Linear);
+        let spec = b.finish(&[&c]);
+        let folded = fold_batchnorm(&spec);
+        assert_eq!(bn_count(&folded), 1); // nothing to fold into upstream
+    }
+
+    #[test]
+    fn fold_agrees_with_python_on_real_model() {
+        // c_bh has conv+relu→bn twice; skipped silently if artifacts absent
+        // (integration tests cover it with the real files).
+        let dir = std::path::Path::new("models");
+        if !dir.join("c_bh.json").exists() {
+            return;
+        }
+        let spec = crate::model::load::load_model(dir, "c_bh").unwrap();
+        let folded = fold_batchnorm(&spec);
+        assert_eq!(bn_count(&folded), 0);
+        let mut rng = SplitMix64::new(1);
+        let x = Tensor::from_vec(&[1, 32, 32, 1], rng.uniform_vec(32 * 32));
+        let a = run(&spec, &x);
+        let b = run(&folded, &x);
+        assert!(a.max_abs_diff(&b) < 1e-4);
+    }
+
+    #[test]
+    fn fold_is_idempotent() {
+        let spec = tiny_cnn(31);
+        let once = fold_batchnorm(&spec);
+        let twice = fold_batchnorm(&once);
+        assert_eq!(once.layers.len(), twice.layers.len());
+        let mut rng = SplitMix64::new(9);
+        let x = Tensor::from_vec(&[1, 8, 8, 3], rng.uniform_vec(8 * 8 * 3));
+        assert!(run(&once, &x).max_abs_diff(&run(&twice, &x)) < 1e-6);
+    }
+
+    #[test]
+    fn property_fold_preserves_semantics_on_random_graphs() {
+        use crate::util::propcheck::check;
+        check("fold_semantics", 25, |r: &mut SplitMix64| {
+            let mut b = Builder::new("rand", &[6, 6, 2], r.next_u64());
+            let mut cur = "input".to_string();
+            for _ in 0..2 + r.below(4) {
+                match r.below(3) {
+                    0 => {
+                        let act = if r.below(2) == 0 { Activation::Relu } else { Activation::Linear };
+                        cur = b.conv2d(&cur, 1 + r.below(4), 1 + 2 * r.below(2), 1, act);
+                    }
+                    1 => cur = b.batchnorm(&cur),
+                    _ => {
+                        let act = if r.below(2) == 0 { Activation::Tanh } else { Activation::Linear };
+                        cur = b.conv2d(&cur, 2, 3, 1, act);
+                    }
+                }
+            }
+            let out = cur.clone();
+            (b.finish(&[&out]), r.next_u64())
+        }, |(spec, seed)| {
+            let folded = fold_batchnorm(spec);
+            folded.validate().map_err(|e| e.to_string())?;
+            let mut rng = SplitMix64::new(*seed);
+            let x = Tensor::from_vec(&[1, 6, 6, 2], rng.uniform_vec(72));
+            let d = run(spec, &x).max_abs_diff(&run(&folded, &x));
+            if d < 1e-3 { Ok(()) } else { Err(format!("diff {d}")) }
+        });
+    }
+}

@@ -1,0 +1,424 @@
+//! Allocation-free layer kernels used by the optimized interpreter: each
+//! writes into a caller-provided buffer and applies the fused epilogue
+//! (activation + §3.5 post-affine) **in the store loop** — the paper's §3.4
+//! fusion ("the activation function is applied before writing the result of
+//! the operation into memory").
+
+use crate::approx;
+use crate::model::spec::{same_pads, Activation, Padding};
+
+/// Fused store epilogue: activation (exact or §3.4 approximation) followed
+/// by the optional folded-BN affine.
+#[derive(Clone, Copy)]
+pub struct Epilogue<'a> {
+    pub act: Activation,
+    pub approx: bool,
+    pub post: Option<(&'a [f32], &'a [f32])>, // (scale, shift) per channel
+}
+
+impl<'a> Epilogue<'a> {
+    pub const NONE: Epilogue<'static> =
+        Epilogue { act: Activation::Linear, approx: false, post: None };
+
+    #[inline(always)]
+    fn activate(&self, v: f32) -> f32 {
+        match self.act {
+            Activation::Linear => v,
+            Activation::Relu => v.max(0.0),
+            Activation::Relu6 => v.clamp(0.0, 6.0),
+            Activation::LeakyRelu => {
+                if v >= 0.0 {
+                    v
+                } else {
+                    0.1 * v
+                }
+            }
+            Activation::Sigmoid => {
+                if self.approx {
+                    approx::fast_sigmoid(v)
+                } else {
+                    1.0 / (1.0 + (-v).exp())
+                }
+            }
+            Activation::Tanh => {
+                if self.approx {
+                    approx::fast_tanh(v)
+                } else {
+                    v.tanh()
+                }
+            }
+        }
+    }
+
+    /// Apply to a channel vector in place.
+    #[inline(always)]
+    pub fn apply(&self, dst: &mut [f32]) {
+        match self.post {
+            None => {
+                for v in dst.iter_mut() {
+                    *v = self.activate(*v);
+                }
+            }
+            Some((scale, shift)) => {
+                for (c, v) in dst.iter_mut().enumerate() {
+                    *v = self.activate(*v) * scale[c] + shift[c];
+                }
+            }
+        }
+    }
+}
+
+/// conv2d, NHWC × HWIO → NHWC, fused epilogue. Shapes are per the planner.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_into(
+    x: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    kernel: &[f32],
+    (kh, kw, oc): (usize, usize, usize),
+    bias: Option<&[f32]>,
+    stride: usize,
+    padding: Padding,
+    ep: Epilogue,
+    out: &mut [f32],
+) {
+    let (pt, pl) = match padding {
+        Padding::Same => (same_pads(h, kh, stride).0, same_pads(w, kw, stride).0),
+        Padding::Valid => (0, 0),
+    };
+    let (oh, ow) = crate::model::spec::conv_out(h, w, kh, kw, stride, padding);
+    debug_assert_eq!(out.len(), b * oh * ow * oc);
+
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut out[((n * oh + oy) * ow + ox) * oc..][..oc];
+                match bias {
+                    Some(bs) => dst.copy_from_slice(bs),
+                    None => dst.fill(0.0),
+                }
+                let y0 = (oy * stride) as isize - pt as isize;
+                let x0 = (ox * stride) as isize - pl as isize;
+                for ky in 0..kh {
+                    let iy = y0 + ky as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = x0 + kx as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        let px = &x[((n * h + iy as usize) * w + ix as usize) * c..][..c];
+                        let kbase = (ky * kw + kx) * c * oc;
+                        for (ci, &xv) in px.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue; // ReLU-sparse inputs
+                            }
+                            let krow = &kernel[kbase + ci * oc..][..oc];
+                            for o in 0..oc {
+                                dst[o] += xv * krow[o];
+                            }
+                        }
+                    }
+                }
+                ep.apply(dst);
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn depthwise_conv2d_into(
+    x: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    kernel: &[f32],
+    (kh, kw): (usize, usize),
+    bias: Option<&[f32]>,
+    stride: usize,
+    padding: Padding,
+    ep: Epilogue,
+    out: &mut [f32],
+) {
+    let (pt, pl) = match padding {
+        Padding::Same => (same_pads(h, kh, stride).0, same_pads(w, kw, stride).0),
+        Padding::Valid => (0, 0),
+    };
+    let (oh, ow) = crate::model::spec::conv_out(h, w, kh, kw, stride, padding);
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut out[((n * oh + oy) * ow + ox) * c..][..c];
+                match bias {
+                    Some(bs) => dst.copy_from_slice(bs),
+                    None => dst.fill(0.0),
+                }
+                let y0 = (oy * stride) as isize - pt as isize;
+                let x0 = (ox * stride) as isize - pl as isize;
+                for ky in 0..kh {
+                    let iy = y0 + ky as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = x0 + kx as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        let px = &x[((n * h + iy as usize) * w + ix as usize) * c..][..c];
+                        let krow = &kernel[(ky * kw + kx) * c..][..c];
+                        for ci in 0..c {
+                            dst[ci] += px[ci] * krow[ci];
+                        }
+                    }
+                }
+                ep.apply(dst);
+            }
+        }
+    }
+}
+
+pub fn dense_into(
+    x: &[f32],
+    (b, in_dim): (usize, usize),
+    kernel: &[f32],
+    out_dim: usize,
+    bias: Option<&[f32]>,
+    ep: Epilogue,
+    out: &mut [f32],
+) {
+    for n in 0..b {
+        let xrow = &x[n * in_dim..][..in_dim];
+        let dst = &mut out[n * out_dim..][..out_dim];
+        match bias {
+            Some(bs) => dst.copy_from_slice(bs),
+            None => dst.fill(0.0),
+        }
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let krow = &kernel[i * out_dim..][..out_dim];
+            for o in 0..out_dim {
+                dst[o] += xv * krow[o];
+            }
+        }
+        ep.apply(dst);
+    }
+}
+
+pub fn maxpool_into(
+    x: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    (kh, kw, stride): (usize, usize, usize),
+    out: &mut [f32],
+) {
+    let (oh, ow) = ((h - kh) / stride + 1, (w - kw) / stride + 1);
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut out[((n * oh + oy) * ow + ox) * c..][..c];
+                dst.fill(f32::NEG_INFINITY);
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let px = &x[((n * h + oy * stride + ky) * w + ox * stride + kx) * c..][..c];
+                        for ci in 0..c {
+                            if px[ci] > dst[ci] {
+                                dst[ci] = px[ci];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+pub fn avgpool_into(
+    x: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    (kh, kw, stride): (usize, usize, usize),
+    out: &mut [f32],
+) {
+    let (oh, ow) = ((h - kh) / stride + 1, (w - kw) / stride + 1);
+    let inv = 1.0 / (kh * kw) as f32;
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = &mut out[((n * oh + oy) * ow + ox) * c..][..c];
+                dst.fill(0.0);
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let px = &x[((n * h + oy * stride + ky) * w + ox * stride + kx) * c..][..c];
+                        for ci in 0..c {
+                            dst[ci] += px[ci];
+                        }
+                    }
+                }
+                for v in dst.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+}
+
+pub fn globalavgpool_into(x: &[f32], (b, h, w, c): (usize, usize, usize, usize), out: &mut [f32]) {
+    let inv = 1.0 / (h * w) as f32;
+    for n in 0..b {
+        let dst = &mut out[n * c..][..c];
+        dst.fill(0.0);
+        for p in 0..h * w {
+            let px = &x[(n * h * w + p) * c..][..c];
+            for ci in 0..c {
+                dst[ci] += px[ci];
+            }
+        }
+        for v in dst.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+pub fn upsample_into(
+    x: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    factor: usize,
+    out: &mut [f32],
+) {
+    let (oh, ow) = (h * factor, w * factor);
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = &x[((n * h + oy / factor) * w + ox / factor) * c..][..c];
+                out[((n * oh + oy) * ow + ox) * c..][..c].copy_from_slice(src);
+            }
+        }
+    }
+}
+
+pub fn zeropad_into(
+    x: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    pad: [usize; 4],
+    out: &mut [f32],
+) {
+    let [t, bo, l, r] = pad;
+    let (oh, ow) = (h + t + bo, w + l + r);
+    out.fill(0.0);
+    for n in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let src = &x[((n * h + y) * w + xx) * c..][..c];
+                out[((n * oh + y + t) * ow + xx + l) * c..][..c].copy_from_slice(src);
+            }
+        }
+    }
+}
+
+/// Per-channel affine (BN at exec time or standalone §3.5 affine). Works
+/// in place (`x` may alias `out` — pass the same buffer).
+pub fn affine_into(x: &[f32], c: usize, scale: &[f32], shift: &[f32], out: &mut [f32]) {
+    for (i, (&v, o)) in x.iter().zip(out.iter_mut()).enumerate() {
+        let ci = i % c;
+        *o = v * scale[ci] + shift[ci];
+    }
+}
+
+/// Softmax over trailing axis; `approx` uses the §3.4 two-pass fast-exp.
+pub fn softmax_into(x: &[f32], c: usize, approx_exp: bool, out: &mut [f32]) {
+    out.copy_from_slice(x);
+    for row in out.chunks_exact_mut(c) {
+        if approx_exp {
+            approx::fast_softmax_row(row);
+        } else {
+            let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - m).exp();
+                sum += *v;
+            }
+            let inv = 1.0 / sum;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    }
+}
+
+pub fn add_into(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
+        *o = x + y;
+    }
+}
+
+pub fn concat_into(a: &[f32], ca: usize, b: &[f32], cb: usize, out: &mut [f32]) {
+    let pixels = a.len() / ca;
+    debug_assert_eq!(b.len() / cb, pixels);
+    for p in 0..pixels {
+        out[p * (ca + cb)..][..ca].copy_from_slice(&a[p * ca..][..ca]);
+        out[p * (ca + cb) + ca..][..cb].copy_from_slice(&b[p * cb..][..cb]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epilogue_fuses_act_and_affine() {
+        let ep = Epilogue {
+            act: Activation::Relu,
+            approx: false,
+            post: Some((&[2.0, 2.0], &[1.0, 1.0])),
+        };
+        let mut v = [-3.0f32, 4.0];
+        ep.apply(&mut v);
+        assert_eq!(v, [1.0, 9.0]); // relu then *2+1
+    }
+
+    #[test]
+    fn conv_into_matches_reference() {
+        use crate::nn::layers::conv::conv2d;
+        use crate::nn::tensor::Tensor;
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        let x = Tensor::from_vec(&[1, 5, 5, 3], rng.uniform_vec(75));
+        let kernel = rng.uniform_vec(3 * 3 * 3 * 4);
+        let bias = rng.uniform_vec(4);
+        let r = conv2d(&x, &kernel, &[3, 3, 3, 4], Some(&bias), 1, Padding::Same);
+        let mut out = vec![0.0; r.len()];
+        conv2d_into(
+            x.data(),
+            (1, 5, 5, 3),
+            &kernel,
+            (3, 3, 4),
+            Some(&bias),
+            1,
+            Padding::Same,
+            Epilogue::NONE,
+            &mut out,
+        );
+        let worst = r.data().iter().zip(&out).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+        assert!(worst < 1e-5, "{worst}");
+    }
+
+    #[test]
+    fn softmax_into_approx_close() {
+        let x = [1.0f32, 2.0, 3.0, 0.5, 0.1, -1.0];
+        let mut exact = [0.0; 6];
+        let mut fast = [0.0; 6];
+        softmax_into(&x, 3, false, &mut exact);
+        softmax_into(&x, 3, true, &mut fast);
+        for (a, b) in exact.iter().zip(&fast) {
+            assert!((a - b).abs() < 0.05);
+        }
+    }
+
+    #[test]
+    fn concat_into_interleaves() {
+        let a = [1.0f32, 2.0, 3.0, 4.0]; // 2 pixels × 2ch
+        let b = [9.0f32, 8.0]; // 2 pixels × 1ch
+        let mut out = [0.0; 6];
+        concat_into(&a, 2, &b, 1, &mut out);
+        assert_eq!(out, [1., 2., 9., 3., 4., 8.]);
+    }
+}

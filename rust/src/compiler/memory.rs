@@ -1,0 +1,260 @@
+//! §3.2 tensor-lifetime analysis and memory planning.
+//!
+//! "the inputs and outputs of all nodes are assigned to actual memory
+//! locations, taking into account that tensors with overlapping lifetimes
+//! must use different memory. At this stage, the individual layer compilers
+//! can indicate whether they want any of their outputs to use the memory of
+//! an input tensor that is not referenced afterwards."
+//!
+//! The planner works on element counts per batch item (shapes are static);
+//! the executor scales by the batch size. Strategy: linear-scan over the
+//! topologically-ordered layers with a free-list of retired buffers,
+//! first-fit by size, plus explicit in-place aliasing for elementwise units.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::model::spec::{LayerOp, ModelSpec};
+
+/// Which layers may write their output over their (dead) first input.
+pub fn can_run_in_place(op: &LayerOp) -> bool {
+    matches!(
+        op,
+        LayerOp::BatchNorm { .. }
+            | LayerOp::Activation
+            | LayerOp::Softmax
+            | LayerOp::Add
+            | LayerOp::Flatten
+    )
+}
+
+#[derive(Debug, Clone)]
+pub struct MemoryPlan {
+    /// tensor name → buffer id ("input" included).
+    pub buffer_of: BTreeMap<String, usize>,
+    /// buffer id → capacity in f32 elements (per batch item).
+    pub buffer_sizes: Vec<usize>,
+    /// Σ tensor sizes (what a no-reuse allocator would use), for the ablation.
+    pub naive_total: usize,
+    /// Count of in-place aliases taken.
+    pub in_place_hits: usize,
+}
+
+impl MemoryPlan {
+    /// Peak arena footprint in elements (per batch item).
+    pub fn peak_elements(&self) -> usize {
+        self.buffer_sizes.iter().sum()
+    }
+}
+
+/// Plan buffers for `spec`. `reuse = false` gives every tensor its own
+/// buffer (the ablation baseline).
+pub fn plan(spec: &ModelSpec, reuse: bool) -> Result<MemoryPlan> {
+    let shapes = spec.infer_shapes()?;
+    let size_of = |name: &str| -> usize { shapes[name].iter().product() };
+
+    // last use index per tensor; outputs live forever.
+    let mut last_use: BTreeMap<&str, usize> = BTreeMap::new();
+    last_use.insert("input", 0);
+    for (i, l) in spec.layers.iter().enumerate() {
+        for inp in &l.inputs {
+            last_use.insert(inp.as_str(), i);
+        }
+    }
+    let eternal = spec.layers.len();
+    for o in &spec.outputs {
+        last_use.insert(o.as_str(), eternal);
+    }
+
+    let mut buffer_of: BTreeMap<String, usize> = BTreeMap::new();
+    let mut buffer_sizes: Vec<usize> = Vec::new();
+    let mut free: Vec<usize> = Vec::new(); // retired buffer ids
+    let mut in_place_hits = 0usize;
+
+    // the model input owns buffer 0
+    buffer_of.insert("input".into(), 0);
+    buffer_sizes.push(size_of("input"));
+
+    let mut naive_total = size_of("input");
+
+    for (i, l) in spec.layers.iter().enumerate() {
+        let need = size_of(&l.name);
+        naive_total += need;
+        if !reuse {
+            buffer_of.insert(l.name.clone(), buffer_sizes.len());
+            buffer_sizes.push(need);
+            continue;
+        }
+
+        // 1) in-place: output overwrites first input if the unit allows it,
+        //    the input dies here, and capacity suffices.
+        let first = l.inputs[0].as_str();
+        let first_dead = last_use.get(first).copied() == Some(i);
+        let mut assigned = None;
+        if can_run_in_place(&l.op) && first_dead {
+            let b = buffer_of[first];
+            if buffer_sizes[b] >= need {
+                assigned = Some(b);
+                in_place_hits += 1;
+            }
+        }
+        // 2) otherwise first-fit from the free list (grow smallest fit).
+        let b = match assigned {
+            Some(b) => b,
+            None => {
+                if let Some(pos) = free
+                    .iter()
+                    .position(|&f| buffer_sizes[f] >= need)
+                    .or_else(|| if free.is_empty() { None } else { Some(0) })
+                {
+                    let id = free.remove(pos);
+                    buffer_sizes[id] = buffer_sizes[id].max(need);
+                    id
+                } else {
+                    buffer_sizes.push(need);
+                    buffer_sizes.len() - 1
+                }
+            }
+        };
+        buffer_of.insert(l.name.clone(), b);
+
+        // 3) retire buffers whose tensor dies at this layer (and wasn't
+        //    just aliased to the new output).
+        for inp in &l.inputs {
+            if last_use.get(inp.as_str()).copied() == Some(i) {
+                let ib = buffer_of[inp.as_str()];
+                if ib != b && !free.contains(&ib) {
+                    free.push(ib);
+                }
+            }
+        }
+    }
+
+    Ok(MemoryPlan { buffer_of, buffer_sizes, naive_total, in_place_hits })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::{tiny_cnn, Builder};
+    use crate::model::spec::Activation;
+    use crate::util::propcheck::check;
+    use crate::util::rng::SplitMix64;
+
+    /// No two tensors with overlapping lifetimes may share a buffer — the
+    /// §3.2 invariant, checked against an O(n²) oracle.
+    fn overlap_free(spec: &ModelSpec, p: &MemoryPlan) -> Result<(), String> {
+        // def index: input = before layer 0; layer i defines at i+1 "time".
+        let mut def: BTreeMap<&str, usize> = BTreeMap::new();
+        def.insert("input", 0);
+        let mut last: BTreeMap<&str, usize> = BTreeMap::new();
+        last.insert("input", 0);
+        for (i, l) in spec.layers.iter().enumerate() {
+            def.insert(&l.name, i + 1);
+            last.insert(&l.name, i + 1);
+            for inp in &l.inputs {
+                last.insert(inp.as_str(), i + 1);
+            }
+        }
+        let eternal = spec.layers.len() + 1;
+        for o in &spec.outputs {
+            last.insert(o.as_str(), eternal);
+        }
+        let names: Vec<&str> = def.keys().copied().collect();
+        for (ai, &a) in names.iter().enumerate() {
+            for &b in &names[ai + 1..] {
+                if p.buffer_of[a] != p.buffer_of[b] {
+                    continue;
+                }
+                // Sharing is legal iff lifetimes are disjoint, or b is the
+                // in-place successor of a (def_b == last_a and unit allows
+                // in-place). Conservatively allow def == last boundary.
+                let (da, la) = (def[a], last[a]);
+                let (db, lb) = (def[b], last[b]);
+                let disjoint = la <= db || lb <= da;
+                if !disjoint {
+                    return Err(format!("`{a}` [{da},{la}] and `{b}` [{db},{lb}] share buffer {}", p.buffer_of[a]));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn plan_tiny_reuses() {
+        let spec = tiny_cnn(2);
+        let p = plan(&spec, true).unwrap();
+        assert!(p.peak_elements() < p.naive_total, "{p:?}");
+        assert!(p.in_place_hits >= 1, "{p:?}"); // bn and softmax are in-place
+        overlap_free(&spec, &p).unwrap();
+    }
+
+    #[test]
+    fn plan_no_reuse_matches_naive() {
+        let spec = tiny_cnn(2);
+        let p = plan(&spec, false).unwrap();
+        assert_eq!(p.peak_elements(), p.naive_total);
+    }
+
+    #[test]
+    fn property_no_overlapping_lifetimes_share_buffers() {
+        check(
+            "planner_no_overlap",
+            60,
+            |r: &mut SplitMix64| random_chain(r),
+            |spec| {
+                let p = plan(spec, true).map_err(|e| e.to_string())?;
+                overlap_free(spec, &p)?;
+                if p.peak_elements() > p.naive_total {
+                    return Err("reuse plan larger than naive".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Random conv/pool/bn/act chains with occasional residual adds.
+    fn random_chain(r: &mut SplitMix64) -> ModelSpec {
+        let mut b = Builder::new("rand", &[8, 8, 2], r.next_u64());
+        let mut cur = "input".to_string();
+        let mut spatial = true;
+        let mut residual: Option<String> = None;
+        let n = 2 + r.below(6);
+        for _ in 0..n {
+            if !spatial {
+                break;
+            }
+            match r.below(5) {
+                0 => {
+                    let ch = b.shape_of(&cur)[2];
+                    cur = b.conv2d(&cur, ch, 3, 1, Activation::Relu);
+                    if residual.is_none() && r.below(2) == 0 {
+                        residual = Some(cur.clone());
+                    }
+                }
+                1 => cur = b.batchnorm(&cur),
+                2 => {
+                    if b.shape_of(&cur)[0] >= 4 {
+                        cur = b.maxpool(&cur, 2);
+                        residual = None; // shapes diverge
+                    }
+                }
+                3 => {
+                    let ch = 1 + r.below(4);
+                    cur = b.conv2d(&cur, ch, 1, 1, Activation::Linear);
+                    residual = None;
+                }
+                _ => {
+                    let f = b.flatten(&cur);
+                    let d = b.dense(&f, 4 + r.below(8), Activation::Relu);
+                    cur = d;
+                    spatial = false;
+                    residual = None;
+                }
+            }
+        }
+        let spec_out = cur.clone();
+        b.finish(&[&spec_out])
+    }
+}

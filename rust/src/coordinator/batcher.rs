@@ -1,0 +1,165 @@
+//! Dynamic batching policy — pure decision logic, unit- and property-tested
+//! separately from the threaded plumbing in `server.rs`.
+//!
+//! Compiled executables are shape-specialized per batch bucket (the paper's
+//! generated code is fixed-shape), so the batcher packs pending requests
+//! into the smallest bucket that fits and zero-pads the remainder. A batch
+//! is flushed when (a) the largest bucket is full, or (b) the oldest request
+//! has waited `max_wait`, or (c) the queue is closing.
+
+use std::time::Duration;
+
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Ascending batch buckets the model was compiled for, e.g. [1, 8, 32].
+    pub buckets: Vec<usize>,
+    /// Deadline: flush once the oldest request has waited this long.
+    pub max_wait: Duration,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Flush {
+    /// Execute now with this bucket size (≥ queued count; pad the rest).
+    Now(usize),
+    /// Wait at most this long for more requests.
+    Wait(Duration),
+    /// Nothing queued.
+    Idle,
+}
+
+impl BatchPolicy {
+    pub fn new(mut buckets: Vec<usize>, max_wait: Duration) -> Self {
+        buckets.sort_unstable();
+        buckets.dedup();
+        assert!(!buckets.is_empty(), "need at least one bucket");
+        Self { buckets, max_wait }
+    }
+
+    pub fn max_bucket(&self) -> usize {
+        *self.buckets.last().unwrap()
+    }
+
+    /// Smallest bucket holding `n` requests (max bucket if n exceeds all —
+    /// the caller then flushes a full batch and keeps the rest queued).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| self.max_bucket())
+    }
+
+    /// Decide given the queue length and the oldest request's wait time.
+    pub fn decide(&self, queued: usize, oldest_wait: Duration) -> Flush {
+        if queued == 0 {
+            return Flush::Idle;
+        }
+        if queued >= self.max_bucket() {
+            return Flush::Now(self.max_bucket());
+        }
+        if oldest_wait >= self.max_wait {
+            return Flush::Now(self.bucket_for(queued));
+        }
+        Flush::Wait(self.max_wait - oldest_wait)
+    }
+
+    /// Padding slots wasted when flushing `queued` requests.
+    pub fn padding(&self, queued: usize) -> usize {
+        self.bucket_for(queued).saturating_sub(queued)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::SplitMix64;
+
+    fn policy() -> BatchPolicy {
+        BatchPolicy::new(vec![1, 8, 32], Duration::from_millis(2))
+    }
+
+    #[test]
+    fn empty_is_idle() {
+        assert_eq!(policy().decide(0, Duration::ZERO), Flush::Idle);
+    }
+
+    #[test]
+    fn full_flushes_immediately() {
+        assert_eq!(policy().decide(32, Duration::ZERO), Flush::Now(32));
+        assert_eq!(policy().decide(40, Duration::ZERO), Flush::Now(32));
+    }
+
+    #[test]
+    fn deadline_flushes_partial() {
+        let p = policy();
+        assert_eq!(p.decide(3, Duration::from_millis(5)), Flush::Now(8));
+        assert_eq!(p.decide(1, Duration::from_millis(5)), Flush::Now(1));
+        assert_eq!(p.decide(9, Duration::from_millis(5)), Flush::Now(32));
+    }
+
+    #[test]
+    fn young_queue_waits_remaining_time() {
+        match policy().decide(3, Duration::from_millis(1)) {
+            Flush::Wait(d) => assert_eq!(d, Duration::from_millis(1)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let p = policy();
+        assert_eq!(p.bucket_for(1), 1);
+        assert_eq!(p.bucket_for(2), 8);
+        assert_eq!(p.bucket_for(8), 8);
+        assert_eq!(p.bucket_for(9), 32);
+        assert_eq!(p.padding(3), 5);
+        assert_eq!(p.padding(8), 0);
+    }
+
+    #[test]
+    fn property_decisions_sound() {
+        check(
+            "batcher_sound",
+            200,
+            |r: &mut SplitMix64| {
+                let nb = 1 + r.below(4);
+                let buckets: Vec<usize> = (0..nb).map(|_| 1 + r.below(64)).collect();
+                let queued = r.below(100);
+                let wait_us = r.below(10_000) as u64;
+                (buckets, queued, wait_us)
+            },
+            |(buckets, queued, wait_us)| {
+                let p = BatchPolicy::new(buckets.clone(), Duration::from_millis(2));
+                match p.decide(*queued, Duration::from_micros(*wait_us)) {
+                    Flush::Idle => {
+                        if *queued != 0 {
+                            return Err("idle with nonempty queue".into());
+                        }
+                    }
+                    Flush::Now(b) => {
+                        if *queued == 0 {
+                            return Err("flush with empty queue".into());
+                        }
+                        if !p.buckets.contains(&b) {
+                            return Err(format!("bucket {b} not compiled"));
+                        }
+                        // must fit all queued or be the max bucket
+                        if b < (*queued).min(p.max_bucket()) {
+                            return Err(format!("bucket {b} < queued {queued}"));
+                        }
+                    }
+                    Flush::Wait(d) => {
+                        if d > p.max_wait {
+                            return Err("wait beyond deadline".into());
+                        }
+                        if *queued >= p.max_bucket() {
+                            return Err("waiting with a full batch".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

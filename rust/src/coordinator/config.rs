@@ -1,0 +1,114 @@
+//! Serving deployment configuration — the launcher's input file.
+//!
+//! ```json
+//! {
+//!   "listen": "127.0.0.1:7878",
+//!   "max_wait_us": 500,
+//!   "queue_depth": 2048,
+//!   "models": ["c_bh", "c_htwk"]
+//! }
+//! ```
+//!
+//! `compiled-nn serve --config serving.json` starts the coordinator,
+//! registers (JIT-compiles) every listed model, and brings up the TCP
+//! front end.
+
+use std::path::Path;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::server::CoordinatorConfig;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServingConfig {
+    pub listen: String,
+    pub models: Vec<String>,
+    pub max_wait: Duration,
+    pub queue_depth: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:7878".into(),
+            models: vec![],
+            max_wait: Duration::from_micros(500),
+            queue_depth: 1024,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn parse(text: &str) -> Result<ServingConfig> {
+        let j = Json::parse(text).context("serving config is not valid JSON")?;
+        let d = ServingConfig::default();
+        let models = j
+            .req_arr("models")?
+            .iter()
+            .map(|m| m.as_str().map(str::to_string).context("model names must be strings"))
+            .collect::<Result<Vec<_>>>()?;
+        if models.is_empty() {
+            bail!("serving config lists no models");
+        }
+        Ok(ServingConfig {
+            listen: j
+                .get("listen")
+                .and_then(Json::as_str)
+                .unwrap_or(&d.listen)
+                .to_string(),
+            models,
+            max_wait: Duration::from_micros(
+                j.get("max_wait_us").and_then(Json::as_f64).unwrap_or(500.0) as u64,
+            ),
+            queue_depth: j
+                .get("queue_depth")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.queue_depth),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ServingConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn coordinator_config(&self) -> CoordinatorConfig {
+        CoordinatorConfig { max_wait: self.max_wait, queue_depth: self.queue_depth }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let c = ServingConfig::parse(
+            r#"{"listen": "0.0.0.0:9000", "max_wait_us": 1500,
+                "queue_depth": 64, "models": ["c_bh", "segmenter"]}"#,
+        )
+        .unwrap();
+        assert_eq!(c.listen, "0.0.0.0:9000");
+        assert_eq!(c.max_wait, Duration::from_micros(1500));
+        assert_eq!(c.queue_depth, 64);
+        assert_eq!(c.models, vec!["c_bh", "segmenter"]);
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = ServingConfig::parse(r#"{"models": ["c_bh"]}"#).unwrap();
+        assert_eq!(c.listen, "127.0.0.1:7878");
+        assert_eq!(c.queue_depth, 1024);
+    }
+
+    #[test]
+    fn rejects_empty_models() {
+        assert!(ServingConfig::parse(r#"{"models": []}"#).is_err());
+        assert!(ServingConfig::parse(r#"{}"#).is_err());
+        assert!(ServingConfig::parse("nope").is_err());
+    }
+}

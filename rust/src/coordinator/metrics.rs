@@ -1,0 +1,173 @@
+//! Lock-free serving metrics: counters and log₂-bucketed latency histograms
+//! (no external metrics crate in the offline build).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Histogram over microseconds with power-of-two buckets: bucket i counts
+/// samples in [2^i, 2^(i+1)) µs; 40 buckets cover > 12 days.
+pub struct Histogram {
+    buckets: [AtomicU64; 40],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn record_us(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(39);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Upper bound of the bucket containing quantile `q` (0..1).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us()
+    }
+}
+
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Per-model serving metrics.
+#[derive(Default)]
+pub struct ModelMetrics {
+    /// end-to-end request latency (enqueue → reply)
+    pub latency: Histogram,
+    /// model execute time per batch
+    pub exec: Histogram,
+    /// time requests wait in the batcher queue
+    pub queue_wait: Histogram,
+    pub requests: Counter,
+    pub batches: Counter,
+    pub padded_slots: Counter,
+    pub errors: Counter,
+}
+
+impl ModelMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mean requests per executed batch.
+    pub fn mean_batch_fill(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            0.0
+        } else {
+            self.requests.get() as f64 / b as f64
+        }
+    }
+
+    pub fn render(&self, name: &str) -> String {
+        format!(
+            "{name}: {} reqs in {} batches (fill {:.2}, padded {}), \
+             latency mean {:.0}µs p50 {}µs p95 {}µs max {}µs, \
+             exec mean {:.0}µs, queue mean {:.0}µs, errors {}",
+            self.requests.get(),
+            self.batches.get(),
+            self.mean_batch_fill(),
+            self.padded_slots.get(),
+            self.latency.mean_us(),
+            self.latency.quantile_us(0.5),
+            self.latency.quantile_us(0.95),
+            self.latency.max_us(),
+            self.exec.mean_us(),
+            self.queue_wait.mean_us(),
+            self.errors.get(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let h = Histogram::new();
+        for us in [10u64, 20, 30, 100, 1000, 5000] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 6);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.95));
+        assert!(h.max_us() == 5000);
+        assert!((h.mean_us() - 1026.66).abs() < 1.0);
+    }
+
+    #[test]
+    fn histogram_bucket_bounds() {
+        let h = Histogram::new();
+        h.record_us(1);
+        assert!(h.quantile_us(1.0) >= 1);
+        let h2 = Histogram::new();
+        h2.record_us(1u64 << 45); // clamps to last bucket
+        assert_eq!(h2.count(), 1);
+    }
+
+    #[test]
+    fn batch_fill() {
+        let m = ModelMetrics::new();
+        m.requests.add(10);
+        m.batches.add(4);
+        assert!((m.mean_batch_fill() - 2.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,8 @@
+//! L3 serving coordinator: model registry + compile cache front (via the
+//! executor thread), dynamic batcher, metrics, TCP front end + config.
+pub mod batcher;
+pub mod config;
+pub mod metrics;
+pub mod protocol;
+pub mod server;
+pub mod tcp;

@@ -1,0 +1,142 @@
+//! Line-delimited JSON wire protocol for the TCP serving front end.
+//!
+//! Request (one line):
+//!   {"id": 7, "model": "c_bh", "input": [0.1, -0.2, …]}    // flattened HWC
+//! Response (one line):
+//!   {"id": 7, "ok": true, "shape": [1, 1], "output": [0.42]}
+//!   {"id": 7, "ok": false, "error": "model `x` not in manifest"}
+//!
+//! JSON is hand-parsed/serialized via `util::json` (same parser the model
+//! specs use). Floats round-trip through f64, lossless for f32 payloads.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::nn::tensor::Tensor;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    pub input: Vec<f32>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Ok { id: u64, shape: Vec<usize>, output: Vec<f32> },
+    Err { id: u64, error: String },
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request> {
+        let j = Json::parse(line).context("request is not valid JSON")?;
+        let input = j
+            .req_arr("input")?
+            .iter()
+            .map(|v| v.as_f64().map(|f| f as f32).context("input must be numbers"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Request {
+            id: j.req_usize("id")? as u64,
+            model: j.req_str("model")?.to_string(),
+            input,
+        })
+    }
+
+    pub fn to_line(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("id".into(), Json::Num(self.id as f64));
+        obj.insert("model".into(), Json::Str(self.model.clone()));
+        obj.insert(
+            "input".into(),
+            Json::Arr(self.input.iter().map(|&v| Json::Num(v as f64)).collect()),
+        );
+        Json::Obj(obj).to_string()
+    }
+}
+
+impl Response {
+    pub fn ok(id: u64, out: &Tensor) -> Response {
+        Response::Ok {
+            id,
+            shape: out.shape().to_vec(),
+            output: out.data().to_vec(),
+        }
+    }
+
+    pub fn parse(line: &str) -> Result<Response> {
+        let j = Json::parse(line).context("response is not valid JSON")?;
+        let id = j.req_usize("id")? as u64;
+        if j.req("ok")?.as_bool().context("ok must be bool")? {
+            Ok(Response::Ok {
+                id,
+                shape: j.req("shape")?.as_usize_vec().context("shape")?,
+                output: j
+                    .req_arr("output")?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32).context("output numbers"))
+                    .collect::<Result<Vec<_>>>()?,
+            })
+        } else {
+            Ok(Response::Err { id, error: j.req_str("error")?.to_string() })
+        }
+    }
+
+    pub fn to_line(&self) -> String {
+        let mut obj = BTreeMap::new();
+        match self {
+            Response::Ok { id, shape, output } => {
+                obj.insert("id".into(), Json::Num(*id as f64));
+                obj.insert("ok".into(), Json::Bool(true));
+                obj.insert(
+                    "shape".into(),
+                    Json::Arr(shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+                );
+                obj.insert(
+                    "output".into(),
+                    Json::Arr(output.iter().map(|&v| Json::Num(v as f64)).collect()),
+                );
+            }
+            Response::Err { id, error } => {
+                obj.insert("id".into(), Json::Num(*id as f64));
+                obj.insert("ok".into(), Json::Bool(false));
+                obj.insert("error".into(), Json::Str(error.clone()));
+            }
+        }
+        Json::Obj(obj).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        let r = Request { id: 7, model: "c_bh".into(), input: vec![0.5, -1.25, 3.0] };
+        let back = Request::parse(&r.to_line()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn response_roundtrip_ok() {
+        let t = Tensor::from_vec(&[1, 2], vec![0.25, 0.75]);
+        let r = Response::ok(9, &t);
+        let back = Response::parse(&r.to_line()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn response_roundtrip_err() {
+        let r = Response::Err { id: 3, error: "no such model".into() };
+        assert_eq!(Response::parse(&r.to_line()).unwrap(), r);
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse("{\"id\": 1}").is_err());
+        assert!(Request::parse("{\"id\": 1, \"model\": \"m\", \"input\": [\"x\"]}").is_err());
+    }
+}

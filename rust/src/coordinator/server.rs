@@ -1,0 +1,385 @@
+//! The serving coordinator (L3): a model registry with an executor thread
+//! that owns all PJRT state (the wrapper types are not `Send`), per-model
+//! batcher threads implementing the `BatchPolicy`, and shared metrics.
+//!
+//! Request path (Python nowhere in sight):
+//!   client → `ModelClient::infer` → batcher thread (dynamic batching, §4's
+//!   many-candidates-per-frame workload) → executor thread (PJRT execute of
+//!   the AOT artifact) → reply channel → client.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::batcher::{BatchPolicy, Flush};
+use crate::coordinator::metrics::ModelMetrics;
+use crate::nn::tensor::Tensor;
+use crate::runtime::artifact::Manifest;
+use crate::runtime::cache::CompileCache;
+use crate::runtime::executor::Runtime;
+
+/// A single inference request: one item (no batch dim); the batcher stacks.
+struct Request {
+    input: Tensor,
+    enqueued: Instant,
+    reply: SyncSender<Result<Tensor>>,
+}
+
+/// Work sent to the executor thread.
+enum ExecMsg {
+    Register {
+        name: String,
+        reply: SyncSender<Result<RegisterInfo>>,
+    },
+    InferBatch {
+        name: String,
+        batch: Tensor,
+        reply: SyncSender<Result<Tensor>>,
+    },
+    Shutdown,
+}
+
+#[derive(Debug, Clone)]
+pub struct RegisterInfo {
+    pub name: String,
+    pub buckets: Vec<usize>,
+    pub input_shape: Vec<usize>,
+    pub compile_ms: f64,
+    pub cache_hit: bool,
+    pub params: usize,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    pub max_wait: Duration,
+    /// Bounded queue per model (backpressure: senders block).
+    pub queue_depth: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self { max_wait: Duration::from_millis(2), queue_depth: 1024 }
+    }
+}
+
+pub struct Coordinator {
+    exec_tx: Sender<ExecMsg>,
+    exec_thread: Option<JoinHandle<()>>,
+    batchers: Vec<JoinHandle<()>>,
+    queues: Mutex<HashMap<String, (SyncSender<Request>, Arc<ModelMetrics>, RegisterInfo)>>,
+    cfg: CoordinatorConfig,
+    stopping: Arc<AtomicBool>,
+}
+
+impl Coordinator {
+    /// Start the executor thread over the given artifact manifest.
+    pub fn start(manifest: Manifest, cfg: CoordinatorConfig) -> Result<Arc<Self>> {
+        let (exec_tx, exec_rx) = mpsc::channel::<ExecMsg>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let exec_thread = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || executor_main(manifest, exec_rx, ready_tx))
+            .context("spawning executor thread")?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(Arc::new(Self {
+            exec_tx,
+            exec_thread: Some(exec_thread),
+            batchers: Vec::new(),
+            queues: Mutex::new(HashMap::new()),
+            cfg,
+            stopping: Arc::new(AtomicBool::new(false)),
+        }))
+    }
+
+    /// Load + PJRT-compile a model (the runtime-JIT step) and start its
+    /// batcher. Idempotent: re-registering returns the existing client.
+    pub fn register(self: &Arc<Self>, name: &str) -> Result<ModelClient> {
+        {
+            let queues = self.queues.lock().unwrap();
+            if let Some((tx, metrics, info)) = queues.get(name) {
+                return Ok(ModelClient {
+                    tx: tx.clone(),
+                    metrics: metrics.clone(),
+                    info: info.clone(),
+                });
+            }
+        }
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        self.exec_tx
+            .send(ExecMsg::Register { name: name.into(), reply: reply_tx })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        let info = reply_rx.recv().map_err(|_| anyhow!("executor thread gone"))??;
+
+        let (req_tx, req_rx) = mpsc::sync_channel::<Request>(self.cfg.queue_depth);
+        let metrics = Arc::new(ModelMetrics::new());
+        let policy = BatchPolicy::new(info.buckets.clone(), self.cfg.max_wait);
+        let exec_tx = self.exec_tx.clone();
+        let m2 = metrics.clone();
+        let info2 = info.clone();
+        let stopping = self.stopping.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("batcher-{name}"))
+            .spawn(move || batcher_main(info2, policy, req_rx, exec_tx, m2, stopping))
+            .context("spawning batcher")?;
+
+        let client = ModelClient { tx: req_tx.clone(), metrics: metrics.clone(), info: info.clone() };
+        let mut queues = self.queues.lock().unwrap();
+        queues.insert(name.to_string(), (req_tx, metrics, info));
+        // Store the join handle (interior mutability not needed; we only
+        // join in shutdown where we have &mut via Arc::try_unwrap fallback).
+        drop(queues);
+        // batcher handles are detached on purpose; they exit when their
+        // request queue closes or `stopping` flips.
+        let _ = handle;
+        Ok(client)
+    }
+
+    /// Registered model names.
+    pub fn models(&self) -> Vec<String> {
+        self.queues.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn metrics(&self, name: &str) -> Option<Arc<ModelMetrics>> {
+        self.queues.lock().unwrap().get(name).map(|(_, m, _)| m.clone())
+    }
+
+    pub fn render_metrics(&self) -> String {
+        let queues = self.queues.lock().unwrap();
+        let mut out = String::new();
+        for (name, (_, m, _)) in queues.iter() {
+            out.push_str(&m.render(name));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Stop batchers and the executor. Outstanding requests get errors.
+    pub fn shutdown(&self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        // Close request queues so batchers drain and exit.
+        self.queues.lock().unwrap().clear();
+        let _ = self.exec_tx.send(ExecMsg::Shutdown);
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.exec_thread.take() {
+            let _ = h.join();
+        }
+        for h in self.batchers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-model handle: submit single-item inputs, get single-item outputs.
+#[derive(Clone)]
+pub struct ModelClient {
+    tx: SyncSender<Request>,
+    pub metrics: Arc<ModelMetrics>,
+    pub info: RegisterInfo,
+}
+
+impl ModelClient {
+    /// Blocking inference of one item (`[H, W, C]`-shaped, no batch dim).
+    pub fn infer(&self, input: Tensor) -> Result<Tensor> {
+        let rx = self.infer_async(input)?;
+        rx.recv().map_err(|_| anyhow!("coordinator dropped request"))?
+    }
+
+    /// Fire-and-collect-later variant; returns the reply channel.
+    pub fn infer_async(&self, input: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        if input.shape() != &self.info.input_shape[..] {
+            bail!(
+                "expected item shape {:?}, got {:?} (submit single items; the \
+                 coordinator batches)",
+                self.info.input_shape,
+                input.shape()
+            );
+        }
+        let (reply, rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request { input, enqueued: Instant::now(), reply })
+            .map_err(|_| anyhow!("model queue closed"))?;
+        Ok(rx)
+    }
+}
+
+// ---------------------------------------------------------------- threads
+
+fn executor_main(
+    manifest: Manifest,
+    rx: Receiver<ExecMsg>,
+    ready: SyncSender<Result<()>>,
+) {
+    let rt = match Runtime::new() {
+        Ok(rt) => {
+            let _ = ready.send(Ok(()));
+            rt
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    let mut cache = CompileCache::new();
+    let mut models: HashMap<String, std::rc::Rc<crate::runtime::executor::CompiledModel>> =
+        HashMap::new();
+
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ExecMsg::Shutdown => break,
+            ExecMsg::Register { name, reply } => {
+                let before_hits = cache.hits;
+                let res = cache.get_or_load(&rt, &manifest, &name).map(|m| {
+                    let info = RegisterInfo {
+                        name: name.clone(),
+                        buckets: m.batch_buckets(),
+                        input_shape: m.entry.input_shape.clone(),
+                        compile_ms: m.total_compile_ms(),
+                        cache_hit: cache.hits > before_hits,
+                        params: m.entry.params,
+                    };
+                    models.insert(name.clone(), m);
+                    info
+                });
+                let _ = reply.send(res);
+            }
+            ExecMsg::InferBatch { name, batch, reply } => {
+                let res = match models.get(&name) {
+                    Some(m) => m.execute(&rt, &batch).map(|mut outs| outs.remove(0)),
+                    None => Err(anyhow!("model `{name}` not registered")),
+                };
+                let _ = reply.send(res);
+            }
+        }
+    }
+}
+
+fn batcher_main(
+    info: RegisterInfo,
+    policy: BatchPolicy,
+    rx: Receiver<Request>,
+    exec_tx: Sender<ExecMsg>,
+    metrics: Arc<ModelMetrics>,
+    stopping: Arc<AtomicBool>,
+) {
+    let item_elems: usize = info.input_shape.iter().product();
+    let mut queue: Vec<Request> = Vec::new();
+
+    loop {
+        if stopping.load(Ordering::SeqCst) {
+            fail_all(&mut queue, "coordinator shutting down");
+            return;
+        }
+        let oldest = queue.first().map(|r| r.enqueued.elapsed()).unwrap_or(Duration::ZERO);
+        match policy.decide(queue.len(), oldest) {
+            Flush::Idle => match rx.recv() {
+                Ok(r) => queue.push(r),
+                Err(_) => return, // queue closed, nothing pending
+            },
+            Flush::Wait(d) => match rx.recv_timeout(d) {
+                Ok(r) => queue.push(r),
+                Err(RecvTimeoutError::Timeout) => {} // deadline → next decide flushes
+                Err(RecvTimeoutError::Disconnected) => {
+                    flush(&info, &policy, &mut queue, &exec_tx, &metrics, item_elems);
+                    return;
+                }
+            },
+            Flush::Now(bucket) => {
+                let take = queue.len().min(bucket);
+                let batch: Vec<Request> = queue.drain(..take).collect();
+                run_batch(&info, bucket, batch, &exec_tx, &metrics, item_elems);
+            }
+        }
+    }
+}
+
+fn flush(
+    info: &RegisterInfo,
+    policy: &BatchPolicy,
+    queue: &mut Vec<Request>,
+    exec_tx: &Sender<ExecMsg>,
+    metrics: &ModelMetrics,
+    item_elems: usize,
+) {
+    while !queue.is_empty() {
+        let bucket = policy.bucket_for(queue.len());
+        let take = queue.len().min(bucket);
+        let batch: Vec<Request> = queue.drain(..take).collect();
+        run_batch(info, bucket, batch, exec_tx, metrics, item_elems);
+    }
+}
+
+fn fail_all(queue: &mut Vec<Request>, msg: &str) {
+    for r in queue.drain(..) {
+        let _ = r.reply.send(Err(anyhow!("{msg}")));
+    }
+}
+
+fn run_batch(
+    info: &RegisterInfo,
+    bucket: usize,
+    batch: Vec<Request>,
+    exec_tx: &Sender<ExecMsg>,
+    metrics: &ModelMetrics,
+    item_elems: usize,
+) {
+    let n = batch.len();
+    debug_assert!(n <= bucket);
+    let t_exec = Instant::now();
+    for r in &batch {
+        metrics.queue_wait.record(r.enqueued.elapsed());
+    }
+
+    // Stack into [bucket, item…], zero-padding unused slots.
+    let mut shape = vec![bucket];
+    shape.extend_from_slice(&info.input_shape);
+    let mut data = vec![0.0f32; bucket * item_elems];
+    for (i, r) in batch.iter().enumerate() {
+        data[i * item_elems..(i + 1) * item_elems].copy_from_slice(r.input.data());
+    }
+    let input = Tensor::from_vec(&shape, data);
+
+    let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+    if exec_tx
+        .send(ExecMsg::InferBatch { name: info.name.clone(), batch: input, reply: reply_tx })
+        .is_err()
+    {
+        let mut q: Vec<Request> = batch;
+        fail_all(&mut q, "executor gone");
+        return;
+    }
+    let result = reply_rx.recv().unwrap_or_else(|_| Err(anyhow!("executor gone")));
+    metrics.exec.record(t_exec.elapsed());
+    metrics.batches.add(1);
+    metrics.requests.add(n as u64);
+    metrics.padded_slots.add((bucket - n) as u64);
+
+    match result {
+        Ok(out) => {
+            for (i, r) in batch.into_iter().enumerate() {
+                let item = out.slice_batch(i, i + 1);
+                metrics.latency.record(r.enqueued.elapsed());
+                let _ = r.reply.send(Ok(item));
+            }
+        }
+        Err(e) => {
+            metrics.errors.add(n as u64);
+            let msg = e.to_string();
+            for r in batch {
+                let _ = r.reply.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! TCP serving front end: newline-delimited JSON requests over plain
+//! sockets (std::net — tokio is unavailable offline; a thread per
+//! connection matches the deployment scale of the paper's robot anyway).
+//!
+//! Each connection thread parses requests, routes them to the registered
+//! `ModelClient` (the dynamic batcher then packs concurrent requests from
+//! *all* connections into shared buckets), and streams responses back in
+//! completion order per connection.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::nn::tensor::Tensor;
+
+use super::protocol::{Request, Response};
+use super::server::{Coordinator, ModelClient};
+
+pub struct TcpServer {
+    addr: SocketAddr,
+    stopping: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    pub connections: Arc<AtomicU64>,
+}
+
+impl TcpServer {
+    /// Bind and start accepting. Models must already be registered on the
+    /// coordinator; unknown-model requests get error responses.
+    pub fn start(coord: Arc<Coordinator>, bind: &str) -> Result<TcpServer> {
+        let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stopping = Arc::new(AtomicBool::new(false));
+        let connections = Arc::new(AtomicU64::new(0));
+
+        let stop2 = stopping.clone();
+        let conns2 = connections.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("tcp-accept".into())
+            .spawn(move || {
+                // pre-resolve clients for every registered model
+                let clients: HashMap<String, ModelClient> = coord
+                    .models()
+                    .into_iter()
+                    .filter_map(|m| coord.register(&m).ok().map(|c| (m, c)))
+                    .collect();
+                let clients = Arc::new(clients);
+                loop {
+                    if stop2.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            conns2.fetch_add(1, Ordering::Relaxed);
+                            let clients = clients.clone();
+                            let stop3 = stop2.clone();
+                            let _ = std::thread::Builder::new()
+                                .name("tcp-conn".into())
+                                .spawn(move || {
+                                    let _ = serve_connection(stream, &clients, &stop3);
+                                });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => return,
+                    }
+                }
+            })?;
+
+        Ok(TcpServer { addr, stopping, accept_thread: Some(accept_thread), connections })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stopping.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    clients: &HashMap<String, ModelClient>,
+    stopping: &AtomicBool,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    for line in reader.lines() {
+        if stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(&line, clients);
+        writer.write_all(resp.to_line().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+fn handle_line(line: &str, clients: &HashMap<String, ModelClient>) -> Response {
+    let req = match Request::parse(line) {
+        Ok(r) => r,
+        Err(e) => return Response::Err { id: 0, error: format!("bad request: {e}") },
+    };
+    let Some(client) = clients.get(&req.model) else {
+        return Response::Err {
+            id: req.id,
+            error: format!("model `{}` not registered (have {:?})",
+                req.model, clients.keys().collect::<Vec<_>>()),
+        };
+    };
+    let item: usize = client.info.input_shape.iter().product();
+    if req.input.len() != item {
+        return Response::Err {
+            id: req.id,
+            error: format!("input has {} floats, model needs {item}", req.input.len()),
+        };
+    }
+    let x = Tensor::from_vec(&client.info.input_shape.clone(), req.input);
+    match client.infer(x) {
+        Ok(out) => Response::ok(req.id, &out),
+        Err(e) => Response::Err { id: req.id, error: e.to_string() },
+    }
+}
+
+/// Minimal blocking client for the wire protocol (used by the CLI `client`
+/// command, the load generator, and the integration tests).
+pub struct TcpClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl TcpClient {
+    pub fn connect(addr: &str) -> Result<TcpClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(TcpClient {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            next_id: 1,
+        })
+    }
+
+    pub fn infer(&mut self, model: &str, input: Vec<f32>) -> Result<Tensor> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Request { id, model: model.into(), input };
+        self.writer.write_all(req.to_line().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        match Response::parse(&line)? {
+            Response::Ok { id: rid, shape, output } => {
+                anyhow::ensure!(rid == id, "response id mismatch");
+                Ok(Tensor::from_vec(&shape, output))
+            }
+            Response::Err { error, .. } => anyhow::bail!("server error: {error}"),
+        }
+    }
+}

@@ -1,0 +1,18 @@
+//! # compiled-nn
+//!
+//! Reproduction of *“A JIT Compiler for Neural Network Inference”*
+//! (Thielke & Hasselbring, RoboCup 2019) as a three-layer
+//! Rust + JAX + Pallas stack: JAX/Pallas author the per-network compute and
+//! AOT-lower it to HLO text; the Rust runtime PJRT-compiles artifacts at
+//! model-registration time (the paper's runtime-JIT analog) and serves
+//! inference; interpreter engines reproduce the paper's baselines.
+//!
+//! See DESIGN.md for the full mapping and EXPERIMENTS.md for results.
+pub mod approx;
+pub mod bench;
+pub mod compiler;
+pub mod coordinator;
+pub mod model;
+pub mod nn;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,368 @@
+//! `compiled-nn` — CLI over the three-layer stack. Subcommands:
+//!
+//! ```text
+//! compiled-nn compile                      # load + PJRT-compile all models, print Table-1 compile row
+//! compiled-nn infer --model c_bh [--engine compiled|naive|optimized] [--batch N]
+//! compiled-nn compare --model c_bh        # all engines vs the golden oracle
+//! compiled-nn inspect --model c_bh        # §3.3 cost table + §3.2 memory plan + §3.5 folding
+//! compiled-nn precision                   # §3.4 approximation error table
+//! compiled-nn table1 [--iters N]          # quick Table-1 analog (benches do it properly)
+//! compiled-nn serve --model c_bh --seconds 5 [--offered RPS]
+//! ```
+//!
+//! Argument parsing is hand-rolled (clap is unavailable offline; the paper
+//! hand-rolled its JSON parser in the same spirit).
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use compiled_nn::compiler::exec::{CompileOptions, OptInterp};
+use compiled_nn::compiler::{cost, fuse, memory};
+use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
+use compiled_nn::model::load::load_model;
+use compiled_nn::nn::interp::NaiveInterp;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+use compiled_nn::util::rng::{golden_seed, SplitMix64};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs after the subcommand.
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .with_context(|| format!("expected --flag, got `{k}`"))?
+                .to_string();
+            let v = it.next().with_context(|| format!("--{key} needs a value"))?;
+            flags.insert(key, v);
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn req(&self, key: &str) -> Result<&str> {
+        self.get(key).with_context(|| format!("missing --{key}"))
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+            None => Ok(default),
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "compile" => cmd_compile(),
+        "infer" => cmd_infer(&args),
+        "compare" => cmd_compare(&args),
+        "inspect" => cmd_inspect(&args),
+        "precision" => cmd_precision(),
+        "table1" => cmd_table1(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{HELP}"),
+    }
+}
+
+const HELP: &str = "compiled-nn — JIT-compiled NN inference (paper reproduction)
+commands: compile | infer | compare | inspect | precision | table1 | serve
+see the module docs in rust/src/main.rs for flags";
+
+/// Deterministic golden input, bit-identical to aot.py's.
+fn golden_input(seed: u64, batch: usize, item_shape: &[usize]) -> Tensor {
+    let mut shape = vec![batch];
+    shape.extend_from_slice(item_shape);
+    let n: usize = shape.iter().product();
+    let mut rng = SplitMix64::new(golden_seed(seed));
+    Tensor::from_vec(&shape, rng.uniform_vec(n))
+}
+
+fn cmd_compile() -> Result<()> {
+    let manifest = Manifest::load_default()?;
+    let rt = Runtime::new()?;
+    println!("platform: {}", rt.platform());
+    println!("{:<14} {:>10} {:>7} {:>12} {:>12} {:>12}", "model", "params", "baked", "parse ms", "codegen ms", "total ms");
+    for name in manifest.models.keys() {
+        let entry = manifest.entry(name)?;
+        let m = CompiledModel::load(&rt, &manifest, name)?;
+        let parse: f64 = m.timings.values().map(|t| t.parse_ms).sum();
+        let codegen: f64 = m.timings.values().map(|t| t.compile_ms).sum();
+        println!(
+            "{:<14} {:>10} {:>7} {:>12.1} {:>12.1} {:>12.1}",
+            name, entry.params, entry.baked, parse, codegen, m.total_compile_ms()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    let name = args.req("model")?;
+    let engine = args.get("engine").unwrap_or("compiled");
+    let batch = args.usize_or("batch", 1)?;
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.entry(name)?;
+    let x = golden_input(entry.seed, batch, &entry.input_shape);
+
+    let t0 = Instant::now();
+    let out = match engine {
+        "compiled" => {
+            let rt = Runtime::new()?;
+            let m = CompiledModel::load(&rt, &manifest, name)?;
+            println!("compile: {:.1} ms", m.total_compile_ms());
+            let t = Instant::now();
+            let out = m.execute(&rt, &x)?;
+            println!("execute: {:.3} ms", t.elapsed().as_secs_f64() * 1e3);
+            out
+        }
+        "naive" => {
+            let spec = load_model(&manifest.models_dir, name)?;
+            let interp = NaiveInterp::new(spec)?;
+            interp.infer(&x)?
+        }
+        "optimized" => {
+            let spec = load_model(&manifest.models_dir, name)?;
+            let mut e = OptInterp::new(&spec, CompileOptions::default())?;
+            e.infer(&x)?
+        }
+        other => bail!("unknown engine `{other}`"),
+    };
+    println!("load+infer total: {:.3} ms", t0.elapsed().as_secs_f64() * 1e3);
+    for (i, o) in out.iter().enumerate() {
+        let head: Vec<f32> = o.data().iter().take(8).copied().collect();
+        println!("output[{i}] shape {:?} head {:?}", o.shape(), head);
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let name = args.req("model")?;
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.entry(name)?;
+    let x = golden_input(entry.seed, 1, &entry.input_shape);
+
+    let spec = load_model(&manifest.models_dir, name)?;
+    let exact = NaiveInterp::new(spec.clone())?.infer(&x)?;
+
+    let mut opt = OptInterp::new(&spec, CompileOptions::default())?;
+    let opt_out = opt.infer(&x)?;
+    println!("optimized vs naive-exact: max |Δ| = {:.2e}", exact[0].max_abs_diff(&opt_out[0]));
+
+    let rt = Runtime::new()?;
+    let m = CompiledModel::load_buckets(&rt, &manifest, entry, &[1])?;
+    let comp = m.execute(&rt, &x)?;
+    println!("compiled  vs naive-exact: max |Δ| = {:.2e}", exact[0].max_abs_diff(&comp[0]));
+    println!("(approx activations bound the differences; see `precision`)");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let name = args.req("model")?;
+    let manifest = Manifest::load_default()?;
+    let spec = load_model(&manifest.models_dir, name)?;
+    println!("== {name}: {} layers, {} params", spec.layers.len(), spec.param_count());
+
+    let folded = fuse::fold_batchnorm(&spec);
+    println!(
+        "§3.5 folding: {} batchnorm layers → {} (layers {} → {})",
+        fuse::bn_count(&spec),
+        fuse::bn_count(&folded),
+        spec.layers.len(),
+        folded.layers.len()
+    );
+
+    let plan = memory::plan(&folded, true)?;
+    let no_reuse = memory::plan(&folded, false)?;
+    println!(
+        "§3.2 memory: {} buffers, {} elements peak vs {} naive ({:.1}% saved), {} in-place aliases",
+        plan.buffer_sizes.len(),
+        plan.peak_elements(),
+        no_reuse.naive_total,
+        100.0 * (1.0 - plan.peak_elements() as f64 / no_reuse.naive_total as f64),
+        plan.in_place_hits
+    );
+
+    println!("§3.3 cost model:");
+    print!("{}", cost::render_table(&cost::analyze(&folded)?));
+    Ok(())
+}
+
+fn cmd_precision() -> Result<()> {
+    println!("§3.4 activation approximations vs exact (4001-point sweeps):");
+    println!("{:<20} {:>14} {:>14} {:>14} {:>14}", "function", "range", "max abs err", "mean abs err", "max rel err");
+    for r in compiled_nn::approx::report(4001) {
+        println!(
+            "{:<20} {:>14} {:>14.3e} {:>14.3e} {:>14.3e}",
+            r.name,
+            format!("[{}, {}]", r.range.0, r.range.1),
+            r.max_abs_err,
+            r.mean_abs_err,
+            r.max_rel_err
+        );
+    }
+    Ok(())
+}
+
+fn cmd_table1(args: &Args) -> Result<()> {
+    let iters = args.usize_or("iters", 5)?;
+    let manifest = Manifest::load_default()?;
+    let rt = Runtime::new()?;
+    println!("Table 1 analog (ms per batch-1 inference, {iters} iters after warmup; see cargo bench --bench table1 for the full run)");
+    println!("{:<14} {:>12} {:>12} {:>12} {:>14}", "model", "compiled", "optimized", "naive", "compile ms");
+    for name in manifest.models.keys() {
+        let entry = manifest.entry(name)?;
+        let x = golden_input(entry.seed, 1, &entry.input_shape);
+        let m = CompiledModel::load_buckets(&rt, &manifest, entry, &[1])?;
+        let compiled_ms = time_ms(iters, || m.execute(&rt, &x).map(|_| ()))?;
+        let spec = load_model(&manifest.models_dir, name)?;
+        // big nets: single iteration for the interpreters
+        let interp_iters = if entry.params > 1_000_000 { 1 } else { iters };
+        let mut opt = OptInterp::new(&spec, CompileOptions::default())?;
+        let optimized_ms = time_ms(interp_iters, || opt.infer(&x).map(|_| ()))?;
+        let naive = NaiveInterp::new(spec.clone())?;
+        let naive_ms = time_ms(interp_iters, || naive.infer(&x).map(|_| ()))?;
+        println!(
+            "{:<14} {:>12.3} {:>12.3} {:>12.3} {:>14.1}",
+            name, compiled_ms, optimized_ms, naive_ms, m.total_compile_ms()
+        );
+    }
+    Ok(())
+}
+
+fn time_ms(iters: usize, mut f: impl FnMut() -> Result<()>) -> Result<f64> {
+    f()?; // warmup
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f()?;
+    }
+    Ok(t0.elapsed().as_secs_f64() * 1e3 / iters as f64)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    // --config path → TCP deployment; --model name → synthetic local load
+    if let Some(cfg_path) = args.get("config") {
+        return cmd_serve_tcp(cfg_path, args);
+    }
+    let name = args.req("model")?.to_string();
+    let seconds = args.usize_or("seconds", 5)?;
+    let offered = args.usize_or("offered", 2000)?; // requests/second
+    let manifest = Manifest::load_default()?;
+    let coord = Coordinator::start(manifest.clone(), CoordinatorConfig::default())?;
+    let client = coord.register(&name)?;
+    println!(
+        "registered `{name}`: buckets {:?}, compile {:.1} ms (cache hit: {})",
+        client.info.buckets, client.info.compile_ms, client.info.cache_hit
+    );
+
+    let entry = manifest.entry(&name)?;
+    let item: usize = entry.input_shape.iter().product();
+    let mut rng = SplitMix64::new(99);
+    let deadline = Instant::now() + Duration::from_secs(seconds as u64);
+    let gap = Duration::from_secs_f64(1.0 / offered as f64);
+    let mut pending = Vec::new();
+    let mut sent = 0u64;
+    while Instant::now() < deadline {
+        let x = Tensor::from_vec(&entry.input_shape.clone(), rng.uniform_vec(item));
+        pending.push(client.infer_async(x)?);
+        sent += 1;
+        if pending.len() >= 256 {
+            for rx in pending.drain(..) {
+                rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+            }
+        }
+        std::thread::sleep(gap);
+    }
+    for rx in pending.drain(..) {
+        rx.recv().map_err(|_| anyhow::anyhow!("dropped"))??;
+    }
+    println!("offered {offered} rps for {seconds}s → {sent} requests");
+    print!("{}", coord.render_metrics());
+    coord.shutdown();
+    Ok(())
+}
+
+/// `serve --config serving.json [--seconds N]`: full TCP deployment — the
+/// launcher path. Runs until the duration elapses (0 = forever).
+fn cmd_serve_tcp(cfg_path: &str, args: &Args) -> Result<()> {
+    use compiled_nn::coordinator::config::ServingConfig;
+    use compiled_nn::coordinator::tcp::TcpServer;
+
+    let cfg = ServingConfig::load(std::path::Path::new(cfg_path))?;
+    let seconds = args.usize_or("seconds", 0)?;
+    let manifest = Manifest::load_default()?;
+    let coord = Coordinator::start(manifest, cfg.coordinator_config())?;
+    for m in &cfg.models {
+        let client = coord.register(m)?;
+        println!(
+            "registered `{m}`: buckets {:?}, compile {:.1} ms",
+            client.info.buckets, client.info.compile_ms
+        );
+    }
+    let mut server = TcpServer::start(coord.clone(), &cfg.listen)?;
+    println!("serving {} models on {}", cfg.models.len(), server.addr());
+    if seconds == 0 {
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    std::thread::sleep(Duration::from_secs(seconds as u64));
+    print!("{}", coord.render_metrics());
+    server.shutdown();
+    coord.shutdown();
+    Ok(())
+}
+
+/// `client --addr host:port --model NAME [--count N]`: drive a running TCP
+/// server with seeded random inputs and report latency.
+fn cmd_client(args: &Args) -> Result<()> {
+    use compiled_nn::coordinator::tcp::TcpClient;
+
+    let addr = args.req("addr")?;
+    let model = args.req("model")?;
+    let count = args.usize_or("count", 10)?;
+    let manifest = Manifest::load_default()?;
+    let entry = manifest.entry(model)?;
+    let item: usize = entry.input_shape.iter().product();
+    let mut rng = SplitMix64::new(7);
+    let mut client = TcpClient::connect(addr)?;
+    let mut total_ms = 0.0;
+    for i in 0..count {
+        let t = Instant::now();
+        let out = client.infer(model, rng.uniform_vec(item))?;
+        let ms = t.elapsed().as_secs_f64() * 1e3;
+        total_ms += ms;
+        if i < 3 {
+            let head: Vec<f32> = out.data().iter().take(4).copied().collect();
+            println!("[{i}] {:.3} ms  shape {:?} head {:?}", ms, out.shape(), head);
+        }
+    }
+    println!("{count} requests, mean {:.3} ms over the wire", total_ms / count as f64);
+    Ok(())
+}

@@ -1,0 +1,250 @@
+//! Programmatic model construction — the Rust-native way to define a network
+//! without going through a spec file (mirrors `python/compile/spec.Builder`).
+//! Weights are He-normal from a SplitMix64 stream, so a given (architecture,
+//! seed) pair is fully deterministic.
+
+use std::collections::BTreeMap;
+
+use crate::util::rng::SplitMix64;
+
+use super::spec::{conv_out, Activation, Layer, LayerOp, ModelSpec, Padding, WeightRef};
+
+pub struct Builder {
+    name: String,
+    input_shape: Vec<usize>,
+    seed: u64,
+    rng: SplitMix64,
+    layers: Vec<Layer>,
+    blob: Vec<f32>,
+    shapes: BTreeMap<String, Vec<usize>>,
+    counter: usize,
+}
+
+impl Builder {
+    pub fn new(name: &str, input_shape: &[usize], seed: u64) -> Self {
+        let mut shapes = BTreeMap::new();
+        shapes.insert("input".to_string(), input_shape.to_vec());
+        Self {
+            name: name.to_string(),
+            input_shape: input_shape.to_vec(),
+            seed,
+            rng: SplitMix64::new(seed),
+            layers: Vec::new(),
+            blob: Vec::new(),
+            shapes,
+            counter: 0,
+        }
+    }
+
+    pub fn shape_of(&self, name: &str) -> &[usize] {
+        &self.shapes[name]
+    }
+
+    fn fresh(&mut self, prefix: &str) -> String {
+        self.counter += 1;
+        format!("{prefix}{}", self.counter)
+    }
+
+    fn alloc_he(&mut self, shape: &[usize], fan_in: usize) -> WeightRef {
+        let n: usize = shape.iter().product();
+        let scale = (2.0 / fan_in as f32).sqrt();
+        let offset = self.blob.len();
+        // Box–Muller over SplitMix64 uniforms (approximate normal is fine
+        // for test weights; python builds its own weights via numpy).
+        for _ in 0..n {
+            let u1 = (self.rng.next_uniform() * 0.5 + 0.5).max(1e-7);
+            let u2 = self.rng.next_uniform() * 0.5 + 0.5;
+            let z = (-2.0 * u1.ln()).sqrt() * (std::f32::consts::TAU * u2).cos();
+            self.blob.push(z * scale);
+        }
+        WeightRef { offset, shape: shape.to_vec() }
+    }
+
+    fn alloc_zeros(&mut self, n: usize) -> WeightRef {
+        let offset = self.blob.len();
+        self.blob.extend(std::iter::repeat(0.0).take(n));
+        WeightRef { offset, shape: vec![n] }
+    }
+
+    fn push(&mut self, layer: Layer, out_shape: Vec<usize>) -> String {
+        let name = layer.name.clone();
+        self.shapes.insert(name.clone(), out_shape);
+        self.layers.push(layer);
+        name
+    }
+
+    pub fn conv2d(&mut self, x: &str, out_ch: usize, k: usize, stride: usize, act: Activation) -> String {
+        let in_shape = self.shapes[x].clone();
+        let (h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+        let kernel = self.alloc_he(&[k, k, c, out_ch], k * k * c);
+        let bias = self.alloc_zeros(out_ch);
+        let (oh, ow) = conv_out(h, w, k, k, stride, Padding::Same);
+        let name = self.fresh("conv");
+        let mut weights = BTreeMap::new();
+        weights.insert("kernel".into(), kernel);
+        weights.insert("bias".into(), bias);
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::Conv2d { kh: k, kw: k, out_ch, stride, padding: Padding::Same, use_bias: true },
+                inputs: vec![x.to_string()],
+                weights,
+                activation: act,
+                post_scale: false,
+            },
+            vec![oh, ow, out_ch],
+        )
+    }
+
+    pub fn batchnorm(&mut self, x: &str) -> String {
+        let shape = self.shapes[x].clone();
+        let c = *shape.last().unwrap();
+        let mut weights = BTreeMap::new();
+        // Non-identity statistics so folding tests exercise real math.
+        let offset = self.blob.len();
+        for _ in 0..c {
+            self.blob.push(self.seed as f32 * 0.0 + 0.1); // beta
+        }
+        weights.insert("beta".into(), WeightRef { offset, shape: vec![c] });
+        let g0 = self.blob.len();
+        for i in 0..c {
+            self.blob.push(1.0 + 0.05 * (i as f32 % 3.0));
+        }
+        weights.insert("gamma".into(), WeightRef { offset: g0, shape: vec![c] });
+        let m0 = self.blob.len();
+        for i in 0..c {
+            self.blob.push(0.02 * i as f32);
+        }
+        weights.insert("mean".into(), WeightRef { offset: m0, shape: vec![c] });
+        let v0 = self.blob.len();
+        for i in 0..c {
+            self.blob.push(1.0 + 0.1 * (i as f32 % 5.0));
+        }
+        weights.insert("var".into(), WeightRef { offset: v0, shape: vec![c] });
+        let name = self.fresh("bn");
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::BatchNorm { epsilon: 1e-3 },
+                inputs: vec![x.to_string()],
+                weights,
+                activation: Activation::Linear,
+                post_scale: false,
+            },
+            shape,
+        )
+    }
+
+    pub fn maxpool(&mut self, x: &str, k: usize) -> String {
+        let s = self.shapes[x].clone();
+        let name = self.fresh("maxpool");
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::MaxPool { kh: k, kw: k, stride: k },
+                inputs: vec![x.to_string()],
+                weights: BTreeMap::new(),
+                activation: Activation::Linear,
+                post_scale: false,
+            },
+            vec![s[0] / k, s[1] / k, s[2]],
+        )
+    }
+
+    pub fn flatten(&mut self, x: &str) -> String {
+        let n: usize = self.shapes[x].iter().product();
+        let name = self.fresh("flatten");
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::Flatten,
+                inputs: vec![x.to_string()],
+                weights: BTreeMap::new(),
+                activation: Activation::Linear,
+                post_scale: false,
+            },
+            vec![n],
+        )
+    }
+
+    pub fn dense(&mut self, x: &str, units: usize, act: Activation) -> String {
+        let in_dim = self.shapes[x][0];
+        let kernel = self.alloc_he(&[in_dim, units], in_dim);
+        let bias = self.alloc_zeros(units);
+        let name = self.fresh("dense");
+        let mut weights = BTreeMap::new();
+        weights.insert("kernel".into(), kernel);
+        weights.insert("bias".into(), bias);
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::Dense { units },
+                inputs: vec![x.to_string()],
+                weights,
+                activation: act,
+                post_scale: false,
+            },
+            vec![units],
+        )
+    }
+
+    pub fn softmax(&mut self, x: &str) -> String {
+        let shape = self.shapes[x].clone();
+        let name = self.fresh("softmax");
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::Softmax,
+                inputs: vec![x.to_string()],
+                weights: BTreeMap::new(),
+                activation: Activation::Linear,
+                post_scale: false,
+            },
+            shape,
+        )
+    }
+
+    pub fn finish(self, outputs: &[&str]) -> ModelSpec {
+        let spec = ModelSpec {
+            name: self.name,
+            input_shape: self.input_shape,
+            layers: self.layers,
+            outputs: outputs.iter().map(|s| s.to_string()).collect(),
+            seed: self.seed,
+            weights: self.blob,
+        };
+        spec.validate().expect("builder produced invalid spec");
+        spec
+    }
+}
+
+/// A small CNN used across unit tests and benches (conv→bn→pool→dense).
+pub fn tiny_cnn(seed: u64) -> ModelSpec {
+    let mut b = Builder::new("tiny_cnn", &[8, 8, 3], seed);
+    let c = b.conv2d("input", 4, 3, 1, Activation::Relu);
+    let bn = b.batchnorm(&c);
+    let p = b.maxpool(&bn, 2);
+    let f = b.flatten(&p);
+    let d = b.dense(&f, 10, Activation::Linear);
+    let s = b.softmax(&d);
+    b.finish(&[&s])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_builds_valid_specs() {
+        let spec = tiny_cnn(3);
+        assert_eq!(spec.layers.len(), 6);
+        let shapes = spec.infer_shapes().unwrap();
+        assert_eq!(shapes["softmax6"], vec![10]);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        assert_eq!(tiny_cnn(3).weights, tiny_cnn(3).weights);
+        assert_ne!(tiny_cnn(3).weights, tiny_cnn(4).weights);
+    }
+}

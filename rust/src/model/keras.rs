@@ -1,0 +1,253 @@
+//! Keras front end — imports the subset of the Keras *Functional*
+//! architecture JSON schema (`model.to_json()`) that CompiledNN supports,
+//! the same role as the paper's HDF5 reader (§3.1: "the Model class allows
+//! to load a network only from an HDF5 file as written by … Keras"; HDF5 is
+//! substituted per DESIGN.md — weights live in the nnspec blob, located via
+//! the `weights_map` table the exporter appends).
+//!
+//! Supported layer classes: InputLayer, Conv2D, DepthwiseConv2D, Dense,
+//! BatchNormalization, MaxPooling2D, AveragePooling2D,
+//! GlobalAveragePooling2D, UpSampling2D, ZeroPadding2D, Activation,
+//! Softmax, Add, Concatenate, Flatten.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::load::load_weights_blob;
+use super::spec::{Activation, Layer, LayerOp, ModelSpec, Padding, WeightRef};
+
+/// Load `<dir>/<name>.keras.json` (+ the blob it references) and validate.
+pub fn load_keras_model(models_dir: &Path, name: &str) -> Result<ModelSpec> {
+    let path = models_dir.join(format!("{name}.keras.json"));
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+    let spec = from_keras_json(&j, models_dir)?;
+    spec.validate()?;
+    Ok(spec)
+}
+
+pub fn from_keras_json(j: &Json, models_dir: &Path) -> Result<ModelSpec> {
+    if j.req_str("class_name")? != "Functional" {
+        bail!("only Functional Keras models are supported");
+    }
+    let cfg = j.req("config")?;
+    let name = cfg.req_str("name")?.to_string();
+    let weights_map = j.req("weights_map")?;
+    let weights_file = j.req_str("weights_file")?;
+    let weights = load_weights_blob(&models_dir.join(weights_file))?;
+
+    let mut input_shape = None;
+    let mut layers = Vec::new();
+    for lj in cfg.req_arr("layers")? {
+        let class = lj.req_str("class_name")?;
+        let lname = lj.req_str("name")?.to_string();
+        let lcfg = lj.req("config")?;
+        if class == "InputLayer" {
+            let bis = lcfg.req_arr("batch_input_shape")?;
+            let dims: Vec<usize> = bis[1..]
+                .iter()
+                .map(|d| d.as_usize().context("input dim"))
+                .collect::<Result<_>>()?;
+            input_shape = Some(dims);
+            if lname != "input" {
+                bail!("input layer must be named `input`");
+            }
+            continue;
+        }
+        let inputs = parse_inbound(lj)?;
+        let (op, activation) = parse_class(class, lcfg, &lname)?;
+        let lweights = parse_weights(weights_map, &lname)?;
+        layers.push(Layer {
+            name: lname,
+            op,
+            inputs,
+            weights: lweights,
+            activation,
+            post_scale: false,
+        });
+    }
+
+    let outputs = cfg
+        .req_arr("output_layers")?
+        .iter()
+        .map(|o| {
+            o.as_arr()
+                .and_then(|a| a.first())
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .context("bad output_layers entry")
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    Ok(ModelSpec {
+        name,
+        input_shape: input_shape.context("no InputLayer found")?,
+        layers,
+        outputs,
+        seed: 0,
+        weights,
+    })
+}
+
+fn parse_inbound(lj: &Json) -> Result<Vec<String>> {
+    let nodes = lj.req_arr("inbound_nodes")?;
+    let first = nodes
+        .first()
+        .and_then(Json::as_arr)
+        .context("layer has no inbound nodes")?;
+    first
+        .iter()
+        .map(|n| {
+            n.as_arr()
+                .and_then(|a| a.first())
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .context("bad inbound node")
+        })
+        .collect()
+}
+
+fn act(cfg: &Json) -> Result<Activation> {
+    match cfg.get("activation").and_then(Json::as_str) {
+        None => Ok(Activation::Linear),
+        Some(s) => Activation::parse(s),
+    }
+}
+
+fn int2(cfg: &Json, key: &str) -> Result<(usize, usize)> {
+    let v = cfg.req(key)?.as_usize_vec().with_context(|| format!("{key} ints"))?;
+    anyhow::ensure!(v.len() == 2, "{key} must have 2 entries");
+    Ok((v[0], v[1]))
+}
+
+fn parse_class(class: &str, cfg: &Json, lname: &str) -> Result<(LayerOp, Activation)> {
+    Ok(match class {
+        "Conv2D" => {
+            let (kh, kw) = int2(cfg, "kernel_size")?;
+            let (sh, sw) = int2(cfg, "strides")?;
+            anyhow::ensure!(sh == sw, "anisotropic strides unsupported");
+            (
+                LayerOp::Conv2d {
+                    kh,
+                    kw,
+                    out_ch: cfg.req_usize("filters")?,
+                    stride: sh,
+                    padding: Padding::parse(cfg.req_str("padding")?)?,
+                    use_bias: cfg.get("use_bias").and_then(Json::as_bool).unwrap_or(true),
+                },
+                act(cfg)?,
+            )
+        }
+        "DepthwiseConv2D" => {
+            let (kh, kw) = int2(cfg, "kernel_size")?;
+            let (sh, _) = int2(cfg, "strides")?;
+            let dm = cfg.get("depth_multiplier").and_then(Json::as_usize).unwrap_or(1);
+            anyhow::ensure!(dm == 1, "depth_multiplier > 1 unsupported");
+            (
+                LayerOp::DepthwiseConv2d {
+                    kh,
+                    kw,
+                    stride: sh,
+                    padding: Padding::parse(cfg.req_str("padding")?)?,
+                    use_bias: cfg.get("use_bias").and_then(Json::as_bool).unwrap_or(true),
+                },
+                act(cfg)?,
+            )
+        }
+        "Dense" => (LayerOp::Dense { units: cfg.req_usize("units")? }, act(cfg)?),
+        "BatchNormalization" => (
+            LayerOp::BatchNorm {
+                epsilon: cfg.get("epsilon").and_then(Json::as_f64).unwrap_or(1e-3) as f32,
+            },
+            Activation::Linear,
+        ),
+        "MaxPooling2D" | "AveragePooling2D" => {
+            let (kh, kw) = int2(cfg, "pool_size")?;
+            let (sh, _) = int2(cfg, "strides")?;
+            let op = if class == "MaxPooling2D" {
+                LayerOp::MaxPool { kh, kw, stride: sh }
+            } else {
+                LayerOp::AvgPool { kh, kw, stride: sh }
+            };
+            (op, Activation::Linear)
+        }
+        "GlobalAveragePooling2D" => (LayerOp::GlobalAvgPool, Activation::Linear),
+        "UpSampling2D" => {
+            let (fh, fw) = int2(cfg, "size")?;
+            anyhow::ensure!(fh == fw, "anisotropic upsampling unsupported");
+            if let Some(interp) = cfg.get("interpolation").and_then(Json::as_str) {
+                anyhow::ensure!(interp == "nearest", "only nearest upsampling");
+            }
+            (LayerOp::Upsample { factor: fh }, Activation::Linear)
+        }
+        "ZeroPadding2D" => {
+            let p = cfg.req_arr("padding")?;
+            let row = p[0].as_usize_vec().context("pad rows")?;
+            let col = p[1].as_usize_vec().context("pad cols")?;
+            (
+                LayerOp::ZeroPad { pad: [row[0], row[1], col[0], col[1]] },
+                Activation::Linear,
+            )
+        }
+        "Activation" => (LayerOp::Activation, act(cfg)?),
+        "Softmax" => (LayerOp::Softmax, Activation::Linear),
+        "Add" => (LayerOp::Add, Activation::Linear),
+        "Concatenate" => (LayerOp::Concat, Activation::Linear),
+        "Flatten" => (LayerOp::Flatten, Activation::Linear),
+        other => bail!("Keras layer class `{other}` (layer `{lname}`) is not supported"),
+    })
+}
+
+fn parse_weights(weights_map: &Json, lname: &str) -> Result<BTreeMap<String, WeightRef>> {
+    let mut out = BTreeMap::new();
+    if let Some(entry) = weights_map.get(lname) {
+        let obj = entry.as_obj().context("weights_map entry")?;
+        for (k, w) in obj {
+            out.insert(
+                k.clone(),
+                WeightRef {
+                    offset: w.req_usize("offset")?,
+                    shape: w.req("shape")?.as_usize_vec().context("weight shape")?,
+                },
+            );
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rejects_sequential() {
+        let j = Json::parse(r#"{"class_name": "Sequential", "config": {}}"#).unwrap();
+        assert!(from_keras_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn unsupported_class_named_in_error() {
+        let doc = r#"{
+          "class_name": "Functional",
+          "config": {"name": "t", "layers": [
+            {"class_name": "InputLayer", "name": "input",
+             "config": {"batch_input_shape": [null, 4, 4, 1]}, "inbound_nodes": []},
+            {"class_name": "LSTM", "name": "l",
+             "config": {}, "inbound_nodes": [[["input", 0, 0, {}]]]}
+          ], "input_layers": [["input", 0, 0]], "output_layers": [["l", 0, 0]]},
+          "weights_file": "t.weights.bin", "weights_map": {}
+        }"#;
+        let dir = std::env::temp_dir().join("keras_t1");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.weights.bin"), []).unwrap();
+        let err = from_keras_json(&Json::parse(doc).unwrap(), &dir)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("LSTM"), "{err}");
+    }
+}

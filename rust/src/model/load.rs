@@ -1,0 +1,210 @@
+//! nnspec loader: `models/<name>.json` + `models/<name>.weights.bin` →
+//! `ModelSpec`. The JSON is parsed with our own parser (util/json.rs), the
+//! blob is raw little-endian f32 — the same two files aot.py writes.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::spec::{Activation, Layer, LayerOp, ModelSpec, Padding, WeightRef};
+
+/// Load `models_dir/<name>.json` (+ its weight blob) and validate.
+pub fn load_model(models_dir: &Path, name: &str) -> Result<ModelSpec> {
+    let json_path = models_dir.join(format!("{name}.json"));
+    let text = std::fs::read_to_string(&json_path)
+        .with_context(|| format!("reading {}", json_path.display()))?;
+    let j = Json::parse(&text).with_context(|| format!("parsing {}", json_path.display()))?;
+    let spec = from_json(&j, models_dir)?;
+    spec.validate()?;
+    Ok(spec)
+}
+
+/// Raw little-endian f32 blob reader (shared with runtime weight feeding).
+pub fn load_weights_blob(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if bytes.len() % 4 != 0 {
+        bail!("weight blob {} has non-multiple-of-4 length", path.display());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+pub fn from_json(j: &Json, models_dir: &Path) -> Result<ModelSpec> {
+    let format = j.req_str("format")?;
+    if format != "nnspec-v1" {
+        bail!("unsupported spec format `{format}`");
+    }
+    let name = j.req_str("name")?.to_string();
+    let input_shape = j
+        .req("input")?
+        .req("shape")?
+        .as_usize_vec()
+        .context("input.shape must be an int array")?;
+
+    let mut layers = Vec::new();
+    for lj in j.req_arr("layers")? {
+        layers.push(parse_layer(lj)?);
+    }
+    let outputs = j
+        .req_arr("outputs")?
+        .iter()
+        .map(|o| o.as_str().map(str::to_string).context("output not a string"))
+        .collect::<Result<Vec<_>>>()?;
+
+    let weights_file = j.req_str("weights_file")?;
+    let weights = load_weights_blob(&models_dir.join(weights_file))?;
+    let expect = j.req_usize("weights_len")?;
+    if weights.len() != expect {
+        bail!("weight blob length {} != declared {expect}", weights.len());
+    }
+
+    Ok(ModelSpec {
+        name,
+        input_shape,
+        layers,
+        outputs,
+        seed: j.req_usize("seed")? as u64,
+        weights,
+    })
+}
+
+fn parse_layer(lj: &Json) -> Result<Layer> {
+    let name = lj.req_str("name")?.to_string();
+    let op_name = lj.req_str("op")?;
+    let inputs = lj
+        .req_arr("inputs")?
+        .iter()
+        .map(|i| i.as_str().map(str::to_string).context("input not a string"))
+        .collect::<Result<Vec<_>>>()?;
+
+    let op = match op_name {
+        "conv2d" => LayerOp::Conv2d {
+            kh: lj.req_usize("kh")?,
+            kw: lj.req_usize("kw")?,
+            out_ch: lj.req_usize("out_ch")?,
+            stride: lj.req_usize("stride")?,
+            padding: Padding::parse(lj.req_str("padding")?)?,
+            use_bias: lj.get("use_bias").and_then(Json::as_bool).unwrap_or(false),
+        },
+        "depthwise_conv2d" => LayerOp::DepthwiseConv2d {
+            kh: lj.req_usize("kh")?,
+            kw: lj.req_usize("kw")?,
+            stride: lj.req_usize("stride")?,
+            padding: Padding::parse(lj.req_str("padding")?)?,
+            use_bias: lj.get("use_bias").and_then(Json::as_bool).unwrap_or(false),
+        },
+        "dense" => LayerOp::Dense { units: lj.req_usize("units")? },
+        "batchnorm" => LayerOp::BatchNorm {
+            epsilon: lj.get("epsilon").and_then(Json::as_f64).unwrap_or(1e-3) as f32,
+        },
+        "maxpool" => LayerOp::MaxPool {
+            kh: lj.req_usize("kh")?,
+            kw: lj.req_usize("kw")?,
+            stride: lj.req_usize("stride")?,
+        },
+        "avgpool" => LayerOp::AvgPool {
+            kh: lj.req_usize("kh")?,
+            kw: lj.req_usize("kw")?,
+            stride: lj.req_usize("stride")?,
+        },
+        "globalavgpool" => LayerOp::GlobalAvgPool,
+        "upsample" => LayerOp::Upsample { factor: lj.req_usize("factor")? },
+        "zeropad" => {
+            let p = lj.req("pad")?.as_usize_vec().context("pad must be ints")?;
+            if p.len() != 4 {
+                bail!("zeropad `{name}` pad must have 4 entries");
+            }
+            LayerOp::ZeroPad { pad: [p[0], p[1], p[2], p[3]] }
+        }
+        "activation" => LayerOp::Activation,
+        "softmax" => LayerOp::Softmax,
+        "add" => LayerOp::Add,
+        "concat" => LayerOp::Concat,
+        "flatten" => LayerOp::Flatten,
+        other => bail!("unknown op `{other}` in layer `{name}`"),
+    };
+
+    let mut weights = BTreeMap::new();
+    if let Some(wj) = lj.get("weights") {
+        let obj = wj.as_obj().context("weights must be an object")?;
+        for (k, w) in obj {
+            weights.insert(
+                k.clone(),
+                WeightRef {
+                    offset: w.req_usize("offset")?,
+                    shape: w.req("shape")?.as_usize_vec().context("weight shape")?,
+                },
+            );
+        }
+    }
+
+    let activation = match lj.get("activation").and_then(Json::as_str) {
+        Some(a) => Activation::parse(a)?,
+        None => Activation::Linear,
+    };
+
+    Ok(Layer {
+        name,
+        op,
+        inputs,
+        weights,
+        activation,
+        post_scale: lj.get("post_scale").and_then(Json::as_bool).unwrap_or(false),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_json() -> String {
+        r#"{
+ "format": "nnspec-v1", "name": "t", "seed": 1,
+ "input": {"shape": [4, 4, 1]},
+ "layers": [
+  {"name": "c1", "op": "conv2d", "inputs": ["input"], "kh": 3, "kw": 3,
+   "out_ch": 2, "stride": 1, "padding": "same", "use_bias": true,
+   "weights": {"kernel": {"offset": 0, "shape": [3, 3, 1, 2]},
+               "bias": {"offset": 18, "shape": [2]}},
+   "activation": "relu"},
+  {"name": "f", "op": "flatten", "inputs": ["c1"]},
+  {"name": "d", "op": "dense", "inputs": ["f"], "units": 3,
+   "weights": {"kernel": {"offset": 20, "shape": [32, 3]},
+               "bias": {"offset": 116, "shape": [3]}}}
+ ],
+ "outputs": ["d"], "weights_file": "t.weights.bin", "weights_len": 119
+}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_tiny_spec() {
+        let dir = std::env::temp_dir().join("nnspec_test_load");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("t.json"), tiny_json()).unwrap();
+        let blob: Vec<u8> = (0..119u32).flat_map(|i| (i as f32).to_le_bytes()).collect();
+        std::fs::write(dir.join("t.weights.bin"), blob).unwrap();
+
+        let spec = load_model(&dir, "t").unwrap();
+        assert_eq!(spec.layers.len(), 3);
+        assert_eq!(spec.input_shape, vec![4, 4, 1]);
+        let shapes = spec.infer_shapes().unwrap();
+        assert_eq!(shapes["c1"], vec![4, 4, 2]);
+        assert_eq!(shapes["f"], vec![32]);
+        assert_eq!(shapes["d"], vec![3]);
+        let c1 = spec.layer("c1").unwrap();
+        assert_eq!(c1.activation, Activation::Relu);
+        assert_eq!(spec.weight(c1, "bias").unwrap(), &[18.0, 19.0]);
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let j = Json::parse(r#"{"format": "nope"}"#).unwrap();
+        assert!(from_json(&j, Path::new("/tmp")).is_err());
+    }
+}

@@ -1,0 +1,5 @@
+//! Model interchange (nnspec): graph IR, loader, programmatic builder.
+pub mod builder;
+pub mod keras;
+pub mod load;
+pub mod spec;

@@ -1,0 +1,329 @@
+//! The model graph IR — the Rust-side view of the nnspec interchange format
+//! (see `python/compile/spec.py`). This is what the paper's `Model` class
+//! holds after reading a Keras HDF5 file: a computational graph of layers
+//! plus the weight tensors referenced by offset into a flat blob.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Elementwise activation, possibly fused into a producing layer (§3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Activation {
+    Linear,
+    Relu,
+    Relu6,
+    LeakyRelu,
+    Sigmoid,
+    Tanh,
+}
+
+impl Activation {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "linear" => Activation::Linear,
+            "relu" => Activation::Relu,
+            "relu6" => Activation::Relu6,
+            "leaky_relu" => Activation::LeakyRelu,
+            "sigmoid" => Activation::Sigmoid,
+            "tanh" => Activation::Tanh,
+            _ => bail!("unknown activation `{s}`"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::Linear => "linear",
+            Activation::Relu => "relu",
+            Activation::Relu6 => "relu6",
+            Activation::LeakyRelu => "leaky_relu",
+            Activation::Sigmoid => "sigmoid",
+            Activation::Tanh => "tanh",
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    Same,
+    Valid,
+}
+
+impl Padding {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "same" => Padding::Same,
+            "valid" => Padding::Valid,
+            _ => bail!("unknown padding `{s}`"),
+        })
+    }
+}
+
+/// Layer operation with its static attributes — everything the compiler
+/// needs is known before any input arrives (the paper's core premise).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerOp {
+    Conv2d { kh: usize, kw: usize, out_ch: usize, stride: usize, padding: Padding, use_bias: bool },
+    DepthwiseConv2d { kh: usize, kw: usize, stride: usize, padding: Padding, use_bias: bool },
+    Dense { units: usize },
+    BatchNorm { epsilon: f32 },
+    MaxPool { kh: usize, kw: usize, stride: usize },
+    AvgPool { kh: usize, kw: usize, stride: usize },
+    GlobalAvgPool,
+    Upsample { factor: usize },
+    ZeroPad { pad: [usize; 4] }, // top, bottom, left, right
+    Activation,
+    Softmax,
+    Add,
+    Concat,
+    Flatten,
+}
+
+impl LayerOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayerOp::Conv2d { .. } => "conv2d",
+            LayerOp::DepthwiseConv2d { .. } => "depthwise_conv2d",
+            LayerOp::Dense { .. } => "dense",
+            LayerOp::BatchNorm { .. } => "batchnorm",
+            LayerOp::MaxPool { .. } => "maxpool",
+            LayerOp::AvgPool { .. } => "avgpool",
+            LayerOp::GlobalAvgPool => "globalavgpool",
+            LayerOp::Upsample { .. } => "upsample",
+            LayerOp::ZeroPad { .. } => "zeropad",
+            LayerOp::Activation => "activation",
+            LayerOp::Softmax => "softmax",
+            LayerOp::Add => "add",
+            LayerOp::Concat => "concat",
+            LayerOp::Flatten => "flatten",
+        }
+    }
+}
+
+/// A named weight tensor: offset (in floats) + shape into the flat blob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightRef {
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl WeightRef {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub op: LayerOp,
+    pub inputs: Vec<String>,
+    pub weights: BTreeMap<String, WeightRef>,
+    pub activation: Activation,
+    /// §3.5 fused post-activation affine (BN merged across a nonlinearity);
+    /// weights `post_scale_w` / `post_shift_w` hold the channel vectors.
+    pub post_scale: bool,
+}
+
+/// A complete model: graph + weights, as loaded from `models/<name>.json`.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    /// HWC input shape; the batch dimension is implicit (shape-specialized
+    /// code is generated per batch size, like the paper's).
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<Layer>,
+    pub outputs: Vec<String>,
+    pub seed: u64,
+    pub weights: Vec<f32>,
+}
+
+impl ModelSpec {
+    pub fn layer(&self, name: &str) -> Result<&Layer> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .with_context(|| format!("no layer `{name}`"))
+    }
+
+    pub fn weight(&self, layer: &Layer, key: &str) -> Result<&[f32]> {
+        let r = layer
+            .weights
+            .get(key)
+            .with_context(|| format!("layer `{}` has no weight `{key}`", layer.name))?;
+        self.weights
+            .get(r.offset..r.offset + r.size())
+            .with_context(|| format!("weight `{key}` of `{}` out of blob bounds", layer.name))
+    }
+
+    pub fn weight_ref<'a>(&self, layer: &'a Layer, key: &str) -> Result<&'a WeightRef> {
+        layer
+            .weights
+            .get(key)
+            .with_context(|| format!("layer `{}` has no weight `{key}`", layer.name))
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Static shape inference for every tensor (HWC / flat, batch implicit).
+    /// Mirrors the Python Builder; `validate()` checks structural sanity.
+    pub fn infer_shapes(&self) -> Result<BTreeMap<String, Vec<usize>>> {
+        let mut shapes: BTreeMap<String, Vec<usize>> = BTreeMap::new();
+        shapes.insert("input".into(), self.input_shape.clone());
+        for l in &self.layers {
+            let input = shapes
+                .get(&l.inputs[0])
+                .with_context(|| format!("layer `{}` input `{}` not yet defined", l.name, l.inputs[0]))?
+                .clone();
+            let out = match &l.op {
+                LayerOp::Conv2d { kh, kw, out_ch, stride, padding, .. } => {
+                    let (h, w) = hw(&input, &l.name)?;
+                    let (oh, ow) = conv_out(h, w, *kh, *kw, *stride, *padding);
+                    vec![oh, ow, *out_ch]
+                }
+                LayerOp::DepthwiseConv2d { kh, kw, stride, padding, .. } => {
+                    let (h, w) = hw(&input, &l.name)?;
+                    let (oh, ow) = conv_out(h, w, *kh, *kw, *stride, *padding);
+                    vec![oh, ow, input[2]]
+                }
+                LayerOp::Dense { units } => {
+                    if input.len() != 1 {
+                        bail!("dense `{}` needs flat input, got {:?}", l.name, input);
+                    }
+                    vec![*units]
+                }
+                LayerOp::BatchNorm { .. } | LayerOp::Activation | LayerOp::Softmax => input,
+                LayerOp::MaxPool { stride, .. } | LayerOp::AvgPool { stride, .. } => {
+                    let (h, w) = hw(&input, &l.name)?;
+                    vec![h / stride, w / stride, input[2]]
+                }
+                LayerOp::GlobalAvgPool => {
+                    let (_, _) = hw(&input, &l.name)?;
+                    vec![input[2]]
+                }
+                LayerOp::Upsample { factor } => {
+                    let (h, w) = hw(&input, &l.name)?;
+                    vec![h * factor, w * factor, input[2]]
+                }
+                LayerOp::ZeroPad { pad } => {
+                    let (h, w) = hw(&input, &l.name)?;
+                    vec![h + pad[0] + pad[1], w + pad[2] + pad[3], input[2]]
+                }
+                LayerOp::Add => {
+                    let b = shapes
+                        .get(&l.inputs[1])
+                        .with_context(|| format!("add `{}` second input missing", l.name))?;
+                    if *b != input {
+                        bail!("add `{}` shape mismatch {:?} vs {:?}", l.name, input, b);
+                    }
+                    input
+                }
+                LayerOp::Concat => {
+                    let b = shapes
+                        .get(&l.inputs[1])
+                        .with_context(|| format!("concat `{}` second input missing", l.name))?;
+                    if b[..b.len() - 1] != input[..input.len() - 1] {
+                        bail!("concat `{}` shape mismatch {:?} vs {:?}", l.name, input, b);
+                    }
+                    let mut out = input.clone();
+                    *out.last_mut().unwrap() += b.last().unwrap();
+                    out
+                }
+                LayerOp::Flatten => vec![input.iter().product()],
+            };
+            shapes.insert(l.name.clone(), out);
+        }
+        Ok(shapes)
+    }
+
+    /// Structural validation: unique names, topological input order, weight
+    /// refs inside the blob, outputs defined, shapes inferable.
+    pub fn validate(&self) -> Result<()> {
+        let mut seen = std::collections::BTreeSet::new();
+        seen.insert("input".to_string());
+        for l in &self.layers {
+            if !seen.insert(l.name.clone()) {
+                bail!("duplicate layer name `{}`", l.name);
+            }
+            for i in &l.inputs {
+                if !seen.contains(i) {
+                    bail!("layer `{}` uses undefined input `{i}` (graph must be topologically ordered)", l.name);
+                }
+            }
+            for (k, w) in &l.weights {
+                if w.offset + w.size() > self.weights.len() {
+                    bail!("weight `{k}` of `{}` exceeds blob ({} > {})",
+                        l.name, w.offset + w.size(), self.weights.len());
+                }
+            }
+            let arity = match l.op {
+                LayerOp::Add | LayerOp::Concat => 2,
+                _ => 1,
+            };
+            if l.inputs.len() != arity {
+                bail!("layer `{}` ({}) expects {arity} inputs, has {}",
+                    l.name, l.op.name(), l.inputs.len());
+            }
+        }
+        for o in &self.outputs {
+            if !seen.contains(o) {
+                bail!("output `{o}` is not a layer");
+            }
+        }
+        self.infer_shapes()?;
+        Ok(())
+    }
+}
+
+fn hw(shape: &[usize], name: &str) -> Result<(usize, usize)> {
+    if shape.len() != 3 {
+        bail!("layer `{name}` needs an HWC input, got {shape:?}");
+    }
+    Ok((shape[0], shape[1]))
+}
+
+/// SAME/VALID output spatial dims (stride ≥ 1), matching Keras/jax.
+pub fn conv_out(h: usize, w: usize, kh: usize, kw: usize, stride: usize, padding: Padding) -> (usize, usize) {
+    match padding {
+        Padding::Same => ((h + stride - 1) / stride, (w + stride - 1) / stride),
+        Padding::Valid => ((h - kh) / stride + 1, (w - kw) / stride + 1),
+    }
+}
+
+/// Paddings (top, bottom, left, right) for SAME conv, matching XLA.
+pub fn same_pads(in_dim: usize, k: usize, stride: usize) -> (usize, usize) {
+    let out = (in_dim + stride - 1) / stride;
+    let total = ((out - 1) * stride + k).saturating_sub(in_dim);
+    (total / 2, total - total / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_same_valid() {
+        assert_eq!(conv_out(32, 32, 3, 3, 1, Padding::Same), (32, 32));
+        assert_eq!(conv_out(32, 32, 3, 3, 2, Padding::Same), (16, 16));
+        assert_eq!(conv_out(32, 32, 3, 3, 1, Padding::Valid), (30, 30));
+        assert_eq!(conv_out(9, 9, 3, 3, 2, Padding::Same), (5, 5));
+    }
+
+    #[test]
+    fn same_pads_matches_xla() {
+        // 32 wide, k=3, s=1 → pad 1/1 ; s=2 → out 16, total (15*2+3)-32 = 1 → 0/1
+        assert_eq!(same_pads(32, 3, 1), (1, 1));
+        assert_eq!(same_pads(32, 3, 2), (0, 1));
+        assert_eq!(same_pads(60, 3, 2), (0, 1));
+    }
+
+    #[test]
+    fn activation_roundtrip() {
+        for n in ["linear", "relu", "relu6", "leaky_relu", "sigmoid", "tanh"] {
+            assert_eq!(Activation::parse(n).unwrap().name(), n);
+        }
+        assert!(Activation::parse("swish").is_err());
+    }
+}

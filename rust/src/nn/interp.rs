@@ -1,0 +1,175 @@
+//! `NaiveInterp` — the exact, scalar, dynamically-dispatched graph
+//! interpreter. This is the `SimpleNN` class from the paper (§3.1): "a
+//! straightforward, but slow implementation … written to be as exact in its
+//! calculations as possible, it can be used to benchmark the compiler in
+//! terms of numeric precision". It doubles as our analog of the
+//! interpreter-style libraries in Table 1 (tiny-dnn / frugally-deep).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::model::spec::{Activation, Layer, LayerOp, ModelSpec};
+use crate::nn::layers::{conv, dense, norm_act, pool, shape_ops};
+use crate::nn::tensor::Tensor;
+
+pub struct NaiveInterp {
+    spec: ModelSpec,
+}
+
+impl NaiveInterp {
+    pub fn new(spec: ModelSpec) -> Result<Self> {
+        spec.validate()?;
+        Ok(Self { spec })
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Run the forward pass on `[B, H, W, C]` (or `[B, n]`) input.
+    pub fn infer(&self, input: &Tensor) -> Result<Vec<Tensor>> {
+        let mut env: HashMap<&str, Tensor> = HashMap::new();
+        env.insert("input", input.clone());
+        for l in &self.spec.layers {
+            let out = self.run_layer(l, &env)?;
+            env.insert(l.name.as_str(), out);
+        }
+        self.spec
+            .outputs
+            .iter()
+            .map(|o| {
+                env.get(o.as_str())
+                    .cloned()
+                    .ok_or_else(|| anyhow::anyhow!("missing output `{o}`"))
+            })
+            .collect()
+    }
+
+    fn run_layer(&self, l: &Layer, env: &HashMap<&str, Tensor>) -> Result<Tensor> {
+        let x = match env.get(l.inputs[0].as_str()) {
+            Some(t) => t,
+            None => bail!("layer `{}` input `{}` missing", l.name, l.inputs[0]),
+        };
+        let spec = &self.spec;
+        let mut y = match &l.op {
+            LayerOp::Conv2d { stride, padding, use_bias, .. } => {
+                let k = spec.weight_ref(l, "kernel")?;
+                let bias = if *use_bias { Some(spec.weight(l, "bias")?) } else { None };
+                conv::conv2d(x, spec.weight(l, "kernel")?, &k.shape, bias, *stride, *padding)
+            }
+            LayerOp::DepthwiseConv2d { stride, padding, use_bias, .. } => {
+                let k = spec.weight_ref(l, "kernel")?;
+                let bias = if *use_bias { Some(spec.weight(l, "bias")?) } else { None };
+                conv::depthwise_conv2d(x, spec.weight(l, "kernel")?, &k.shape, bias, *stride, *padding)
+            }
+            LayerOp::Dense { .. } => {
+                let k = spec.weight_ref(l, "kernel")?;
+                dense::dense(x, spec.weight(l, "kernel")?, &k.shape, spec.weight(l, "bias").ok())
+            }
+            LayerOp::BatchNorm { epsilon } => norm_act::batchnorm(
+                x,
+                spec.weight(l, "gamma")?,
+                spec.weight(l, "beta")?,
+                spec.weight(l, "mean")?,
+                spec.weight(l, "var")?,
+                *epsilon,
+            ),
+            LayerOp::MaxPool { kh, kw, stride } => pool::maxpool(x, *kh, *kw, *stride),
+            LayerOp::AvgPool { kh, kw, stride } => pool::avgpool(x, *kh, *kw, *stride),
+            LayerOp::GlobalAvgPool => pool::globalavgpool(x),
+            LayerOp::Upsample { factor } => shape_ops::upsample(x, *factor),
+            LayerOp::ZeroPad { pad } => shape_ops::zeropad(x, *pad),
+            LayerOp::Activation => x.clone(),
+            LayerOp::Softmax => norm_act::softmax(x),
+            LayerOp::Add => shape_ops::add(x, env[l.inputs[1].as_str()].borrow_tensor()),
+            LayerOp::Concat => shape_ops::concat(x, env[l.inputs[1].as_str()].borrow_tensor()),
+            LayerOp::Flatten => shape_ops::flatten(x),
+        };
+        norm_act::apply_activation(&mut y, l.activation);
+        if l.post_scale {
+            // §3.5: BN folded across the activation → affine after it.
+            y = norm_act::affine_channels(
+                &y,
+                spec.weight(l, "post_scale_w")?,
+                spec.weight(l, "post_shift_w")?,
+            );
+        }
+        Ok(y)
+    }
+}
+
+// Small helper so env lookups above read uniformly.
+trait BorrowTensor {
+    fn borrow_tensor(&self) -> &Tensor;
+}
+impl BorrowTensor for Tensor {
+    fn borrow_tensor(&self) -> &Tensor {
+        self
+    }
+}
+
+/// Which ops an engine supports; used to reproduce the `–` cells of Table 1
+/// (RoboDNN / tiny-dnn lack upsampling and depthwise-separable convolution).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    pub upsample: bool,
+    pub depthwise: bool,
+}
+
+impl Capabilities {
+    pub const FULL: Capabilities = Capabilities { upsample: true, depthwise: true };
+    /// RoboDNN/tiny-dnn-like feature set (for the capability ablation).
+    pub const LEGACY: Capabilities = Capabilities { upsample: false, depthwise: false };
+
+    pub fn supports(&self, spec: &ModelSpec) -> bool {
+        spec.layers.iter().all(|l| match l.op {
+            LayerOp::Upsample { .. } => self.upsample,
+            LayerOp::DepthwiseConv2d { .. } => self.depthwise,
+            _ => true,
+        })
+    }
+}
+
+/// Exact activation used by tests needing scalar access.
+pub fn activate(a: Activation, v: f32) -> f32 {
+    norm_act::activate_exact(a, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::tiny_cnn;
+
+    #[test]
+    fn runs_tiny_cnn() {
+        let interp = NaiveInterp::new(tiny_cnn(7)).unwrap();
+        let x = Tensor::filled(&[2, 8, 8, 3], 0.5);
+        let out = interp.infer(&x).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[2, 10]);
+        // softmax rows sum to 1
+        for row in out[0].data().chunks_exact(10) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn batch_equals_singles() {
+        let interp = NaiveInterp::new(tiny_cnn(8)).unwrap();
+        let mut rng = crate::util::rng::SplitMix64::new(42);
+        let x = Tensor::from_vec(&[3, 8, 8, 3], rng.uniform_vec(3 * 8 * 8 * 3));
+        let full = interp.infer(&x).unwrap();
+        for i in 0..3 {
+            let one = interp.infer(&x.slice_batch(i, i + 1)).unwrap();
+            assert!(one[0].max_abs_diff(&full[0].slice_batch(i, i + 1)) < 1e-6);
+        }
+    }
+
+    #[test]
+    fn capabilities_gate() {
+        let spec = tiny_cnn(1);
+        assert!(Capabilities::FULL.supports(&spec));
+        assert!(Capabilities::LEGACY.supports(&spec)); // no upsample/dw in tiny
+    }
+}

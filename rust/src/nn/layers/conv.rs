@@ -1,0 +1,187 @@
+//! Exact (scalar, f32) convolution layers — the reference semantics every
+//! other engine is checked against. Kernel layout HWIO, tensors NHWC,
+//! SAME/VALID padding matching XLA/Keras.
+
+use crate::model::spec::{same_pads, Padding};
+use crate::nn::tensor::Tensor;
+
+/// Standard 2-D convolution. `kernel` is `[kh, kw, in_ch, out_ch]` (HWIO).
+pub fn conv2d(
+    x: &Tensor,
+    kernel: &[f32],
+    kshape: &[usize],
+    bias: Option<&[f32]>,
+    stride: usize,
+    padding: Padding,
+) -> Tensor {
+    let (b, h, w, c) = dims4(x);
+    let (kh, kw, kc, oc) = (kshape[0], kshape[1], kshape[2], kshape[3]);
+    assert_eq!(kc, c, "kernel in_ch {kc} != input channels {c}");
+    let ((pt, _pb), (pl, _pr)) = pads(h, w, kh, kw, stride, padding);
+    let (oh, ow) = out_dims(h, w, kh, kw, stride, padding);
+
+    let mut out = Tensor::zeros(&[b, oh, ow, oc]);
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = out.pixel_mut(n, oy, ox);
+                if let Some(bs) = bias {
+                    dst.copy_from_slice(bs);
+                }
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        let px = x.pixel(n, iy as usize, ix as usize);
+                        let kbase = (ky * kw + kx) * c * oc;
+                        // Inner product per output channel: this is the
+                        // matrix-vector product the paper identifies as the
+                        // core operation (§3.3) — naive scalar form here.
+                        for (ci, &xv) in px.iter().enumerate() {
+                            let krow = &kernel[kbase + ci * oc..kbase + (ci + 1) * oc];
+                            for (o, &kv) in krow.iter().enumerate() {
+                                dst[o] += xv * kv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Depthwise 2-D convolution, `kernel` `[kh, kw, ch, 1]` (Keras layout).
+pub fn depthwise_conv2d(
+    x: &Tensor,
+    kernel: &[f32],
+    kshape: &[usize],
+    bias: Option<&[f32]>,
+    stride: usize,
+    padding: Padding,
+) -> Tensor {
+    let (b, h, w, c) = dims4(x);
+    let (kh, kw, kc) = (kshape[0], kshape[1], kshape[2]);
+    assert_eq!(kc, c);
+    assert_eq!(kshape[3], 1, "depth multiplier > 1 unsupported");
+    let ((pt, _), (pl, _)) = pads(h, w, kh, kw, stride, padding);
+    let (oh, ow) = out_dims(h, w, kh, kw, stride, padding);
+
+    let mut out = Tensor::zeros(&[b, oh, ow, c]);
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = out.pixel_mut(n, oy, ox);
+                if let Some(bs) = bias {
+                    dst.copy_from_slice(bs);
+                }
+                for ky in 0..kh {
+                    let iy = (oy * stride + ky) as isize - pt as isize;
+                    if iy < 0 || iy as usize >= h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * stride + kx) as isize - pl as isize;
+                        if ix < 0 || ix as usize >= w {
+                            continue;
+                        }
+                        let px = x.pixel(n, iy as usize, ix as usize);
+                        let kbase = (ky * kw + kx) * c;
+                        for ci in 0..c {
+                            dst[ci] += px[ci] * kernel[kbase + ci];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+pub(crate) fn dims4(x: &Tensor) -> (usize, usize, usize, usize) {
+    let s = x.shape();
+    assert_eq!(s.len(), 4, "expected NHWC, got {s:?}");
+    (s[0], s[1], s[2], s[3])
+}
+
+fn pads(
+    h: usize,
+    w: usize,
+    kh: usize,
+    kw: usize,
+    stride: usize,
+    padding: Padding,
+) -> ((usize, usize), (usize, usize)) {
+    match padding {
+        Padding::Same => (same_pads(h, kh, stride), same_pads(w, kw, stride)),
+        Padding::Valid => ((0, 0), (0, 0)),
+    }
+}
+
+fn out_dims(h: usize, w: usize, kh: usize, kw: usize, stride: usize, padding: Padding) -> (usize, usize) {
+    crate::model::spec::conv_out(h, w, kh, kw, stride, padding)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_kernel_1x1() {
+        // 1x1 conv with identity matrix kernel = passthrough
+        let x = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let kernel = vec![1., 0., 0., 1.]; // [1,1,2,2] identity
+        let y = conv2d(&x, &kernel, &[1, 1, 2, 2], None, 1, Padding::Same);
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn valid_3x3_sum_kernel() {
+        // 3x3 all-ones kernel over a 3x3 ones image, VALID → single 9.0
+        let x = Tensor::filled(&[1, 3, 3, 1], 1.0);
+        let kernel = vec![1.0; 9];
+        let y = conv2d(&x, &kernel, &[3, 3, 1, 1], None, 1, Padding::Valid);
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.data()[0], 9.0);
+    }
+
+    #[test]
+    fn same_padding_border() {
+        // SAME keeps shape; corners see only 4 of 9 taps.
+        let x = Tensor::filled(&[1, 3, 3, 1], 1.0);
+        let kernel = vec![1.0; 9];
+        let y = conv2d(&x, &kernel, &[3, 3, 1, 1], None, 1, Padding::Same);
+        assert_eq!(y.shape(), &[1, 3, 3, 1]);
+        assert_eq!(y.at4(0, 1, 1, 0), 9.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 4.0);
+        assert_eq!(y.at4(0, 0, 1, 0), 6.0);
+    }
+
+    #[test]
+    fn stride2_shape() {
+        let x = Tensor::filled(&[1, 8, 8, 1], 1.0);
+        let y = conv2d(&x, &vec![1.0; 9], &[3, 3, 1, 1], None, 2, Padding::Same);
+        assert_eq!(y.shape(), &[1, 4, 4, 1]);
+    }
+
+    #[test]
+    fn bias_applies() {
+        let x = Tensor::zeros(&[1, 2, 2, 1]);
+        let y = conv2d(&x, &[0.0], &[1, 1, 1, 1], Some(&[2.5]), 1, Padding::Same);
+        assert!(y.data().iter().all(|&v| v == 2.5));
+    }
+
+    #[test]
+    fn depthwise_independent_channels() {
+        // channel 0 kernel = 1, channel 1 kernel = 2 (1x1 taps)
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 10., 2., 20.]);
+        let y = depthwise_conv2d(&x, &[1., 2.], &[1, 1, 2, 1], None, 1, Padding::Same);
+        assert_eq!(y.data(), &[1., 20., 2., 40.]);
+    }
+}

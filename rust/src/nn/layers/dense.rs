@@ -1,0 +1,51 @@
+//! Exact dense (fully connected) layer: `y = x W + b`, kernel `[in, out]`.
+
+use crate::nn::tensor::Tensor;
+
+/// `x` is `[batch, in]`; returns `[batch, out]`.
+pub fn dense(x: &Tensor, kernel: &[f32], kshape: &[usize], bias: Option<&[f32]>) -> Tensor {
+    let s = x.shape();
+    assert_eq!(s.len(), 2, "dense expects [batch, in], got {s:?}");
+    let (b, in_dim) = (s[0], s[1]);
+    let (ki, ko) = (kshape[0], kshape[1]);
+    assert_eq!(ki, in_dim, "dense kernel in {ki} != input {in_dim}");
+
+    let mut out = Tensor::zeros(&[b, ko]);
+    for n in 0..b {
+        let xrow = &x.data()[n * in_dim..(n + 1) * in_dim];
+        let orow = &mut out.data_mut()[n * ko..(n + 1) * ko];
+        if let Some(bs) = bias {
+            orow.copy_from_slice(bs);
+        }
+        for (i, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // post-ReLU rows are often sparse
+            }
+            let krow = &kernel[i * ko..(i + 1) * ko];
+            for (o, &kv) in krow.iter().enumerate() {
+                orow[o] += xv * kv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_2x3() {
+        // x = [1, 2], W = [[1, 2, 3], [4, 5, 6]] → y = [9, 12, 15]
+        let x = Tensor::from_vec(&[1, 2], vec![1., 2.]);
+        let y = dense(&x, &[1., 2., 3., 4., 5., 6.], &[2, 3], None);
+        assert_eq!(y.data(), &[9., 12., 15.]);
+    }
+
+    #[test]
+    fn bias_and_batch() {
+        let x = Tensor::from_vec(&[2, 2], vec![1., 0., 0., 1.]);
+        let y = dense(&x, &[1., 2., 3., 4.], &[2, 2], Some(&[10., 20.]));
+        assert_eq!(y.data(), &[11., 22., 13., 24.]);
+    }
+}

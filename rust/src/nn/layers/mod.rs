@@ -1,0 +1,6 @@
+//! Exact reference layer implementations (the `SimpleNN` substrate).
+pub mod conv;
+pub mod dense;
+pub mod norm_act;
+pub mod pool;
+pub mod shape_ops;

@@ -1,0 +1,129 @@
+//! Batch normalization (inference form) and exact activation functions.
+//! The *approximated* activations live in `approx/`; these are the oracles.
+
+use crate::model::spec::Activation;
+use crate::nn::tensor::Tensor;
+
+/// Inference-time batchnorm over the channel (last) axis:
+/// `y = gamma * (x - mean) / sqrt(var + eps) + beta`.
+pub fn batchnorm(
+    x: &Tensor,
+    gamma: &[f32],
+    beta: &[f32],
+    mean: &[f32],
+    var: &[f32],
+    eps: f32,
+) -> Tensor {
+    let c = *x.shape().last().unwrap();
+    assert!(gamma.len() == c && beta.len() == c && mean.len() == c && var.len() == c);
+    let scale: Vec<f32> = (0..c).map(|i| gamma[i] / (var[i] + eps).sqrt()).collect();
+    let shift: Vec<f32> = (0..c).map(|i| beta[i] - mean[i] * scale[i]).collect();
+    affine_channels(x, &scale, &shift)
+}
+
+/// Per-channel affine `y = x * scale + shift` (also the §3.5 fused form).
+pub fn affine_channels(x: &Tensor, scale: &[f32], shift: &[f32]) -> Tensor {
+    let c = *x.shape().last().unwrap();
+    assert!(scale.len() == c && shift.len() == c);
+    let mut out = x.clone();
+    for (i, v) in out.data_mut().iter_mut().enumerate() {
+        let ci = i % c;
+        *v = *v * scale[ci] + shift[ci];
+    }
+    out
+}
+
+/// Exact scalar activation.
+#[inline]
+pub fn activate_exact(a: Activation, v: f32) -> f32 {
+    match a {
+        Activation::Linear => v,
+        Activation::Relu => v.max(0.0),
+        Activation::Relu6 => v.clamp(0.0, 6.0),
+        Activation::LeakyRelu => {
+            if v >= 0.0 {
+                v
+            } else {
+                0.1 * v
+            }
+        }
+        Activation::Sigmoid => 1.0 / (1.0 + (-v).exp()),
+        Activation::Tanh => v.tanh(),
+    }
+}
+
+/// Apply an exact activation in place.
+pub fn apply_activation(x: &mut Tensor, a: Activation) {
+    if a == Activation::Linear {
+        return;
+    }
+    for v in x.data_mut() {
+        *v = activate_exact(a, *v);
+    }
+}
+
+/// Exact softmax over the last axis (max-shifted).
+pub fn softmax(x: &Tensor) -> Tensor {
+    let c = *x.shape().last().unwrap();
+    let mut out = x.clone();
+    for row in out.data_mut().chunks_exact_mut(c) {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batchnorm_identity() {
+        let x = Tensor::from_vec(&[1, 1, 1, 2], vec![3.0, -1.0]);
+        let y = batchnorm(&x, &[1., 1.], &[0., 0.], &[0., 0.], &[1., 1.], 0.0);
+        assert!(y.max_abs_diff(&x) < 1e-6);
+    }
+
+    #[test]
+    fn batchnorm_standardizes() {
+        let x = Tensor::from_vec(&[1, 1, 1, 1], vec![5.0]);
+        // (5 - 3)/sqrt(4) * 2 + 1 = 3
+        let y = batchnorm(&x, &[2.], &[1.], &[3.], &[4.], 0.0);
+        assert!((y.data()[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn activations_exact() {
+        assert_eq!(activate_exact(Activation::Relu, -2.0), 0.0);
+        assert_eq!(activate_exact(Activation::Relu6, 7.5), 6.0);
+        assert_eq!(activate_exact(Activation::LeakyRelu, -1.0), -0.1);
+        assert!((activate_exact(Activation::Sigmoid, 0.0) - 0.5).abs() < 1e-7);
+        assert!((activate_exact(Activation::Tanh, 1.0) - 0.7615942).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_normalizes() {
+        let x = Tensor::from_vec(&[2, 3], vec![1., 2., 3., -1., 0., 1.]);
+        let y = softmax(&x);
+        for row in y.data().chunks_exact(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+            assert!(row[2] > row[1] && row[1] > row[0]);
+        }
+    }
+
+    #[test]
+    fn softmax_shift_invariant() {
+        let a = softmax(&Tensor::from_vec(&[1, 2], vec![1., 2.]));
+        let b = softmax(&Tensor::from_vec(&[1, 2], vec![101., 102.]));
+        assert!(a.max_abs_diff(&b) < 1e-6);
+    }
+}

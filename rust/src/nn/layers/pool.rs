@@ -1,0 +1,117 @@
+//! Pooling layers (VALID windows, stride = window unless given), exact math.
+
+use crate::nn::tensor::Tensor;
+
+use super::conv::dims4;
+
+pub fn maxpool(x: &Tensor, kh: usize, kw: usize, stride: usize) -> Tensor {
+    let (b, h, w, c) = dims4(x);
+    let (oh, ow) = ((h - kh) / stride + 1, (w - kw) / stride + 1);
+    let mut out = Tensor::filled(&[b, oh, ow, c], f32::NEG_INFINITY);
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = out.pixel_mut(n, oy, ox);
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let px = x.pixel(n, oy * stride + ky, ox * stride + kx);
+                        for ci in 0..c {
+                            if px[ci] > dst[ci] {
+                                dst[ci] = px[ci];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+pub fn avgpool(x: &Tensor, kh: usize, kw: usize, stride: usize) -> Tensor {
+    let (b, h, w, c) = dims4(x);
+    let (oh, ow) = ((h - kh) / stride + 1, (w - kw) / stride + 1);
+    let inv = 1.0 / (kh * kw) as f32;
+    let mut out = Tensor::zeros(&[b, oh, ow, c]);
+    for n in 0..b {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let dst = out.pixel_mut(n, oy, ox);
+                for ky in 0..kh {
+                    for kx in 0..kw {
+                        let px = x.pixel(n, oy * stride + ky, ox * stride + kx);
+                        for ci in 0..c {
+                            dst[ci] += px[ci];
+                        }
+                    }
+                }
+                for v in dst.iter_mut() {
+                    *v *= inv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Global average pool: `[B, H, W, C]` → `[B, C]`.
+pub fn globalavgpool(x: &Tensor) -> Tensor {
+    let (b, h, w, c) = dims4(x);
+    let inv = 1.0 / (h * w) as f32;
+    let mut out = Tensor::zeros(&[b, c]);
+    for n in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let px = x.pixel(n, y, xx);
+                let dst = &mut out.data_mut()[n * c..(n + 1) * c];
+                for ci in 0..c {
+                    dst[ci] += px[ci];
+                }
+            }
+        }
+    }
+    for v in out.data_mut() {
+        *v *= inv;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_2x2() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1., 5., 3., 2.]);
+        let y = maxpool(&x, 2, 2, 2);
+        assert_eq!(y.shape(), &[1, 1, 1, 1]);
+        assert_eq!(y.data(), &[5.0]);
+    }
+
+    #[test]
+    fn maxpool_negative_values() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![-1., -5., -3., -2.]);
+        assert_eq!(maxpool(&x, 2, 2, 2).data(), &[-1.0]);
+    }
+
+    #[test]
+    fn avgpool_2x2() {
+        let x = Tensor::from_vec(&[1, 2, 2, 1], vec![1., 5., 3., 3.]);
+        assert_eq!(avgpool(&x, 2, 2, 2).data(), &[3.0]);
+    }
+
+    #[test]
+    fn global_avg() {
+        let x = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.]);
+        let y = globalavgpool(&x);
+        assert_eq!(y.shape(), &[1, 2]);
+        assert_eq!(y.data(), &[2.5, 25.0]);
+    }
+
+    #[test]
+    fn pool_channels_independent() {
+        let x = Tensor::from_vec(&[1, 2, 2, 2], vec![1., 8., 5., 2., 3., 6., 7., 4.]);
+        let y = maxpool(&x, 2, 2, 2);
+        assert_eq!(y.data(), &[7., 8.]);
+    }
+}

@@ -1,0 +1,115 @@
+//! Shape/combination layers: upsample (nearest), zero padding, flatten,
+//! concat (channel axis), elementwise add.
+
+use crate::nn::tensor::Tensor;
+
+use super::conv::dims4;
+
+/// Nearest-neighbour upsampling by an integer factor.
+pub fn upsample(x: &Tensor, factor: usize) -> Tensor {
+    let (b, h, w, c) = dims4(x);
+    let mut out = Tensor::zeros(&[b, h * factor, w * factor, c]);
+    for n in 0..b {
+        for y in 0..h * factor {
+            for xx in 0..w * factor {
+                let src = x.pixel(n, y / factor, xx / factor).to_vec();
+                out.pixel_mut(n, y, xx).copy_from_slice(&src);
+            }
+        }
+    }
+    out
+}
+
+/// Zero padding `[top, bottom, left, right]` on the spatial dims.
+pub fn zeropad(x: &Tensor, pad: [usize; 4]) -> Tensor {
+    let (b, h, w, c) = dims4(x);
+    let [t, bo, l, r] = pad;
+    let mut out = Tensor::zeros(&[b, h + t + bo, w + l + r, c]);
+    for n in 0..b {
+        for y in 0..h {
+            for xx in 0..w {
+                let src = x.pixel(n, y, xx).to_vec();
+                out.pixel_mut(n, y + t, xx + l).copy_from_slice(&src);
+            }
+        }
+    }
+    out
+}
+
+/// `[B, ...]` → `[B, prod(...)]` (NHWC row-major keeps data order).
+pub fn flatten(x: &Tensor) -> Tensor {
+    let b = x.shape()[0];
+    let rest: usize = x.shape()[1..].iter().product();
+    x.clone().reshaped(&[b, rest])
+}
+
+/// Concatenate along the channel (last) axis.
+pub fn concat(a: &Tensor, b: &Tensor) -> Tensor {
+    let (ba, ha, wa, ca) = dims4(a);
+    let (bb, hb, wb, cb) = dims4(b);
+    assert_eq!((ba, ha, wa), (bb, hb, wb), "concat spatial mismatch");
+    let mut out = Tensor::zeros(&[ba, ha, wa, ca + cb]);
+    for n in 0..ba {
+        for y in 0..ha {
+            for x_ in 0..wa {
+                let dst = out.pixel_mut(n, y, x_);
+                dst[..ca].copy_from_slice(a.pixel(n, y, x_));
+                dst[ca..].copy_from_slice(b.pixel(n, y, x_));
+            }
+        }
+    }
+    out
+}
+
+/// Elementwise addition of same-shaped tensors.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "add shape mismatch");
+    let mut out = a.clone();
+    for (o, &v) in out.data_mut().iter_mut().zip(b.data()) {
+        *o += v;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn upsample_2x() {
+        let x = Tensor::from_vec(&[1, 1, 2, 1], vec![1., 2.]);
+        let y = upsample(&x, 2);
+        assert_eq!(y.shape(), &[1, 2, 4, 1]);
+        assert_eq!(y.data(), &[1., 1., 2., 2., 1., 1., 2., 2.]);
+    }
+
+    #[test]
+    fn zeropad_border() {
+        let x = Tensor::filled(&[1, 1, 1, 1], 5.0);
+        let y = zeropad(&x, [1, 0, 0, 1]);
+        assert_eq!(y.shape(), &[1, 2, 2, 1]);
+        assert_eq!(y.data(), &[0., 0., 5., 0.]);
+    }
+
+    #[test]
+    fn concat_channels() {
+        let a = Tensor::from_vec(&[1, 1, 1, 2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[1, 1, 1, 1], vec![9.]);
+        assert_eq!(concat(&a, &b).data(), &[1., 2., 9.]);
+    }
+
+    #[test]
+    fn add_elementwise() {
+        let a = Tensor::from_vec(&[1, 1, 1, 2], vec![1., 2.]);
+        let b = Tensor::from_vec(&[1, 1, 1, 2], vec![10., 20.]);
+        assert_eq!(add(&a, &b).data(), &[11., 22.]);
+    }
+
+    #[test]
+    fn flatten_keeps_order() {
+        let x = Tensor::from_vec(&[2, 1, 1, 2], vec![1., 2., 3., 4.]);
+        let y = flatten(&x);
+        assert_eq!(y.shape(), &[2, 2]);
+        assert_eq!(y.data(), &[1., 2., 3., 4.]);
+    }
+}

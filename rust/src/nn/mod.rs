@@ -1,0 +1,6 @@
+//! Neural-network substrate: tensors, exact layers, the naive interpreter,
+//! and the 4-wide §3.3 matvec kernels.
+pub mod interp;
+pub mod layers;
+pub mod simd;
+pub mod tensor;

@@ -1,0 +1,165 @@
+//! Blocked 4-wide matrix–vector kernels implementing the paper's §3.3
+//! schemes on the CPU side (the Pallas twins live in
+//! `python/compile/kernels/matvec.py`).
+//!
+//! Both operate on a square `n×n` matrix (n multiple of 4) against `x[n]`:
+//!
+//! * `matvec_broadcast` — Eq. 2: for each column j, broadcast `x[j]` and FMA
+//!   with column j. The broadcast temporary is the extra live register the
+//!   paper's layout eliminates.
+//! * `matvec_rotated` — Eq. 3: weights pre-permuted into rotated diagonals
+//!   (`D[j][i] = W[i][(i+j) % n]`, done once at "compile" time), so the hot
+//!   loop is `acc[i] += D[j][i] * x[(i+j) % n]` — x stays resident, the lane
+//!   rotation replaces the shuffle, one register is freed.
+//!
+//! Written with 4-lane arrays ([f32; 4]) so LLVM autovectorizes to SSE — the
+//! offline image has no `std::simd`/`wide`; benches/matvec.rs measures both.
+
+/// Pre-permute W (row-major `[n, n]`, `y = W x` orientation) into stacked
+/// rotated diagonals. O(n²), done once — "the memory layout of the matrix
+/// can be chosen arbitrarily without any impact on performance" (§3.3).
+pub fn rotate_diagonals(w: &[f32], n: usize) -> Vec<f32> {
+    assert_eq!(w.len(), n * n);
+    let mut d = vec![0.0; n * n];
+    for j in 0..n {
+        for i in 0..n {
+            d[j * n + i] = w[i * n + (i + j) % n];
+        }
+    }
+    d
+}
+
+/// Eq. 2 (broadcast scheme): `y[i] = Σ_j W[i][j] * x[j]`, W column-major
+/// blocks of 4 rows. `w` row-major `[n, n]`.
+pub fn matvec_broadcast(w: &[f32], x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n % 4 == 0 && w.len() == n * n && y.len() == n);
+    for yi in (0..n).step_by(4) {
+        let mut acc = [0.0f32; 4];
+        for j in 0..n {
+            let xj = x[j]; // broadcast temp (the third register of Eq. 2)
+            let col = [
+                w[yi * n + j],
+                w[(yi + 1) * n + j],
+                w[(yi + 2) * n + j],
+                w[(yi + 3) * n + j],
+            ];
+            for l in 0..4 {
+                acc[l] += col[l] * xj;
+            }
+        }
+        y[yi..yi + 4].copy_from_slice(&acc);
+    }
+}
+
+/// Eq. 3 (rotated-diagonal scheme) over `rotate_diagonals` output: x is
+/// walked as contiguous rotations; no broadcast needed.
+///
+/// Perf note (§Perf log in EXPERIMENTS.md): the rotation is realized by
+/// reading a length-n window at offset j of a doubled copy `[x, x]` — one
+/// contiguous stream per step instead of a wrap-split pair of loops, which
+/// LLVM vectorizes cleanly even at small n. The doubled copy is the CPU
+/// stand-in for the free lane rotation of the resident register/tile.
+pub fn matvec_rotated(d: &[f32], x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(d.len() == n * n && y.len() == n);
+    // stack buffer for the common small-n case, heap above 512
+    let mut buf = [0.0f32; 1024];
+    let xx: &mut [f32] = if n <= 512 {
+        &mut buf[..2 * n]
+    } else {
+        // rare path; allocation amortized away by caller loops in practice
+        return matvec_rotated_large(d, x, y);
+    };
+    xx[..n].copy_from_slice(x);
+    xx[n..2 * n].copy_from_slice(x);
+    y.fill(0.0);
+    for j in 0..n {
+        let dj = &d[j * n..(j + 1) * n];
+        let xw = &xx[j..j + n];
+        for i in 0..n {
+            y[i] += dj[i] * xw[i];
+        }
+    }
+}
+
+fn matvec_rotated_large(d: &[f32], x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    let mut xx = Vec::with_capacity(2 * n);
+    xx.extend_from_slice(x);
+    xx.extend_from_slice(x);
+    y.fill(0.0);
+    for j in 0..n {
+        let dj = &d[j * n..(j + 1) * n];
+        let xw = &xx[j..j + n];
+        for i in 0..n {
+            y[i] += dj[i] * xw[i];
+        }
+    }
+}
+
+/// Reference exact matvec for the tests.
+pub fn matvec_naive(w: &[f32], x: &[f32], y: &mut [f32]) {
+    let n = x.len();
+    for i in 0..n {
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += w[i * n + j] * x[j];
+        }
+        y[i] = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::check;
+    use crate::util::rng::SplitMix64;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) -> Result<(), String> {
+        let worst = a
+            .iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max);
+        if worst < tol {
+            Ok(())
+        } else {
+            Err(format!("max diff {worst}"))
+        }
+    }
+
+    #[test]
+    fn schemes_agree_with_naive() {
+        check(
+            "matvec_schemes",
+            40,
+            |r: &mut SplitMix64| {
+                let n = 4 * (1 + r.below(16)); // 4..64
+                let w = r.uniform_vec(n * n);
+                let x = r.uniform_vec(n);
+                (n, w, x)
+            },
+            |(n, w, x)| {
+                let mut y0 = vec![0.0; *n];
+                let mut y1 = vec![0.0; *n];
+                let mut y2 = vec![0.0; *n];
+                matvec_naive(w, x, &mut y0);
+                matvec_broadcast(w, x, &mut y1);
+                let d = rotate_diagonals(w, *n);
+                matvec_rotated(&d, x, &mut y2);
+                close(&y0, &y1, 1e-4)?;
+                close(&y0, &y2, 1e-4)
+            },
+        );
+    }
+
+    #[test]
+    fn rotation_layout_pinned() {
+        // D[j][i] = W[i][(i+j) % n] on a 4x4 counter matrix.
+        let w: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let d = rotate_diagonals(&w, 4);
+        assert_eq!(&d[0..4], &[0.0, 5.0, 10.0, 15.0]); // main diagonal
+        assert_eq!(&d[4..8], &[1.0, 6.0, 11.0, 12.0]); // rotated by 1
+    }
+}

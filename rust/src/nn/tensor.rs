@@ -1,0 +1,202 @@
+//! Dense row-major f32 tensor, NHWC for images — the memory layout the
+//! paper's generated code operates on (channels innermost, so per-pixel
+//! channel vectors are contiguous for the matvec-style conv inner loop).
+
+use std::fmt;
+
+/// Dense f32 tensor with explicit shape; data is row-major (last dim fastest).
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Self { shape: shape.to_vec(), data }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Strides in elements (row-major).
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    // -- NHWC accessors ----------------------------------------------------
+    /// Index into an NHWC rank-4 tensor.
+    #[inline]
+    pub fn at4(&self, n: usize, h: usize, w: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (sh, sw, sc) = (self.shape[1], self.shape[2], self.shape[3]);
+        debug_assert!(h < sh && w < sw && c < sc);
+        self.data[((n * sh + h) * sw + w) * sc + c]
+    }
+
+    #[inline]
+    pub fn at4_mut(&mut self, n: usize, h: usize, w: usize, c: usize) -> &mut f32 {
+        debug_assert_eq!(self.shape.len(), 4);
+        let (sh, sw, sc) = (self.shape[1], self.shape[2], self.shape[3]);
+        &mut self.data[((n * sh + h) * sw + w) * sc + c]
+    }
+
+    /// The contiguous channel vector at pixel (n, h, w) of an NHWC tensor.
+    #[inline]
+    pub fn pixel(&self, n: usize, h: usize, w: usize) -> &[f32] {
+        let (sh, sw, sc) = (self.shape[1], self.shape[2], self.shape[3]);
+        let base = ((n * sh + h) * sw + w) * sc;
+        &self.data[base..base + sc]
+    }
+
+    #[inline]
+    pub fn pixel_mut(&mut self, n: usize, h: usize, w: usize) -> &mut [f32] {
+        let (sh, sw, sc) = (self.shape[1], self.shape[2], self.shape[3]);
+        let base = ((n * sh + h) * sw + w) * sc;
+        &mut self.data[base..base + sc]
+    }
+
+    /// Max |a - b| over two same-shaped tensors.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Batch slice of the leading dimension: rows [lo, hi).
+    pub fn slice_batch(&self, lo: usize, hi: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && lo <= hi && hi <= self.shape[0]);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor::from_vec(&shape, self.data[lo * row..hi * row].to_vec())
+    }
+
+    /// Concatenate along the leading (batch) dimension.
+    pub fn concat_batch(parts: &[&Tensor]) -> Tensor {
+        assert!(!parts.is_empty());
+        let tail = &parts[0].shape[1..];
+        let mut shape = parts[0].shape.clone();
+        shape[0] = parts.iter().map(|p| p.shape[0]).sum();
+        let mut data = Vec::with_capacity(shape.iter().product());
+        for p in parts {
+            assert_eq!(&p.shape[1..], tail);
+            data.extend_from_slice(&p.data);
+        }
+        Tensor::from_vec(&shape, data)
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[", self.shape)?;
+        for (i, v) in self.data.iter().take(8).enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.4}")?;
+        }
+        if self.data.len() > 8 {
+            write!(f, ", …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_and_strides() {
+        let t = Tensor::zeros(&[2, 3, 4, 5]);
+        assert_eq!(t.len(), 120);
+        assert_eq!(t.strides(), vec![60, 20, 5, 1]);
+    }
+
+    #[test]
+    fn nhwc_indexing_channels_contiguous() {
+        let mut t = Tensor::zeros(&[1, 2, 2, 3]);
+        *t.at4_mut(0, 1, 0, 2) = 7.0;
+        assert_eq!(t.at4(0, 1, 0, 2), 7.0);
+        assert_eq!(t.pixel(0, 1, 0), &[0.0, 0.0, 7.0]);
+    }
+
+    #[test]
+    fn batch_slice_concat_roundtrip() {
+        let t = Tensor::from_vec(&[4, 2], (0..8).map(|v| v as f32).collect());
+        let a = t.slice_batch(0, 1);
+        let b = t.slice_batch(1, 4);
+        let back = Tensor::concat_batch(&[&a, &b]);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let r = t.clone().reshaped(&[6]);
+        assert_eq!(r.data(), t.data());
+    }
+}

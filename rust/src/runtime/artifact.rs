@@ -1,0 +1,179 @@
+//! Artifact manifest (`artifacts/manifest.json`) — the contract between
+//! `python/compile/aot.py` and the Rust runtime. Describes, per model: batch
+//! buckets, HLO files (+ sha256), whether weights are baked into the HLO as
+//! constants or fed as runtime arguments, and the argument order/offsets for
+//! the latter.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct WeightArg {
+    pub layer: String,
+    pub key: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactFile {
+    pub file: String,
+    pub sha256: String,
+    pub bytes: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub input_shape: Vec<usize>,
+    /// Output shapes at batch 1 (leading dim replaced by the actual batch).
+    pub output_shapes_b1: Vec<Vec<usize>>,
+    pub batches: Vec<usize>,
+    pub baked: bool,
+    pub approx: bool,
+    pub params: usize,
+    pub seed: u64,
+    pub artifacts: BTreeMap<usize, ArtifactFile>,
+    pub spec_file: String,
+    /// For unbaked models: the folded blob + argument order.
+    pub weights_file: Option<String>,
+    pub weight_args: Vec<WeightArg>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelEntry>,
+    pub artifacts_dir: PathBuf,
+    pub models_dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load from `artifacts_dir/manifest.json`; `models_dir` holds specs and
+    /// weight blobs.
+    pub fn load(artifacts_dir: &Path, models_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        if j.req_str("format")? != "manifest-v1" {
+            bail!("unsupported manifest format");
+        }
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.req("models")?.as_obj().context("models must be an object")? {
+            models.insert(name.clone(), parse_entry(name, mj)?);
+        }
+        Ok(Manifest {
+            models,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            models_dir: models_dir.to_path_buf(),
+        })
+    }
+
+    /// Default locations relative to the repo root (or `COMPILED_NN_ROOT`).
+    pub fn load_default() -> Result<Manifest> {
+        let root = std::env::var("COMPILED_NN_ROOT").unwrap_or_else(|_| ".".into());
+        let root = Path::new(&root);
+        Manifest::load(&root.join("artifacts"), &root.join("models"))
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model `{name}` not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, entry: &ModelEntry, batch: usize) -> Result<PathBuf> {
+        let f = entry
+            .artifacts
+            .get(&batch)
+            .with_context(|| format!("model `{}` has no batch-{batch} artifact (buckets {:?})",
+                entry.name, entry.batches))?;
+        Ok(self.artifacts_dir.join(&f.file))
+    }
+}
+
+fn parse_entry(name: &str, j: &Json) -> Result<ModelEntry> {
+    let output_shapes_b1 = j
+        .req_arr("output_shapes_b1")?
+        .iter()
+        .map(|s| s.as_usize_vec().context("bad output shape"))
+        .collect::<Result<Vec<_>>>()?;
+    let batches = j.req("batches")?.as_usize_vec().context("bad batches")?;
+    let mut artifacts = BTreeMap::new();
+    for (b, fj) in j.req("artifacts")?.as_obj().context("artifacts")? {
+        artifacts.insert(
+            b.parse::<usize>().context("artifact batch key")?,
+            ArtifactFile {
+                file: fj.req_str("file")?.to_string(),
+                sha256: fj.req_str("sha256")?.to_string(),
+                bytes: fj.req_usize("bytes")?,
+            },
+        );
+    }
+    let mut weight_args = Vec::new();
+    if let Some(wa) = j.get("weight_args") {
+        for w in wa.as_arr().context("weight_args")? {
+            weight_args.push(WeightArg {
+                layer: w.req_str("layer")?.to_string(),
+                key: w.req_str("key")?.to_string(),
+                offset: w.req_usize("offset")?,
+                shape: w.req("shape")?.as_usize_vec().context("weight shape")?,
+            });
+        }
+    }
+    Ok(ModelEntry {
+        name: name.to_string(),
+        input_shape: j.req("input_shape")?.as_usize_vec().context("input_shape")?,
+        output_shapes_b1,
+        batches,
+        baked: j.req("baked")?.as_bool().context("baked")?,
+        approx: j.get("approx").and_then(Json::as_bool).unwrap_or(false),
+        params: j.req_usize("params")?,
+        seed: j.req_usize("seed")? as u64,
+        artifacts,
+        spec_file: j.req_str("spec_file")?.to_string(),
+        weights_file: j.get("weights_file").and_then(Json::as_str).map(str::to_string),
+        weight_args,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let art = Path::new("artifacts");
+        if !art.join("manifest.json").exists() {
+            return; // unit-test environments without `make artifacts`
+        }
+        let m = Manifest::load(art, Path::new("models")).unwrap();
+        assert!(m.models.contains_key("c_bh"));
+        let e = m.entry("c_bh").unwrap();
+        assert!(e.baked);
+        assert_eq!(e.input_shape, vec![32, 32, 1]);
+        assert_eq!(e.batches, vec![1, 8, 32]);
+        for b in &e.batches {
+            assert!(m.hlo_path(e, *b).unwrap().exists());
+        }
+        let v = m.entry("vgg19").unwrap();
+        assert!(!v.baked);
+        assert!(!v.weight_args.is_empty());
+        assert!(v.weights_file.is_some());
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let art = Path::new("artifacts");
+        if !art.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(art, Path::new("models")).unwrap();
+        assert!(m.entry("nope").is_err());
+    }
+}

@@ -1,0 +1,63 @@
+//! In-process compile cache: artifact sha256 → compiled executable handle.
+//!
+//! The paper pays its JIT cost once per model load; we additionally memoize
+//! by content hash so re-registering an identical artifact (same sha in the
+//! manifest) skips parse + codegen entirely — the `serve` path re-registers
+//! models on config reload.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use super::artifact::Manifest;
+use super::executor::{CompiledModel, Runtime};
+
+/// Not `Send` (PJRT confinement) — lives on the executor thread.
+#[derive(Default)]
+pub struct CompileCache {
+    by_sha: HashMap<String, Rc<CompiledModel>>,
+    pub hits: usize,
+    pub misses: usize,
+}
+
+impl CompileCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Cache key: concatenated shas of every bucket artifact of the model.
+    fn key(manifest: &Manifest, name: &str) -> Result<String> {
+        let e = manifest.entry(name)?;
+        let mut k = String::new();
+        for f in e.artifacts.values() {
+            k.push_str(&f.sha256);
+        }
+        Ok(k)
+    }
+
+    pub fn get_or_load(
+        &mut self,
+        rt: &Runtime,
+        manifest: &Manifest,
+        name: &str,
+    ) -> Result<Rc<CompiledModel>> {
+        let key = Self::key(manifest, name)?;
+        if let Some(m) = self.by_sha.get(&key) {
+            self.hits += 1;
+            return Ok(m.clone());
+        }
+        self.misses += 1;
+        let m = Rc::new(CompiledModel::load(rt, manifest, name)?);
+        self.by_sha.insert(key, m.clone());
+        Ok(m)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_sha.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_sha.is_empty()
+    }
+}

@@ -1,0 +1,203 @@
+//! `CompiledModel` — the runtime-JIT analog of the paper's `CompiledNN`
+//! class. Loading a model = parse HLO text + PJRT-compile to native code
+//! (this *is* the compilation step Table 1's last row times); `execute` then
+//! runs the specialized executable with zero Python anywhere near the path.
+//!
+//! Weights-as-args models upload their (folded) weight blob to device
+//! buffers once at load; per-call traffic is the input tensor only.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::load::load_weights_blob;
+use crate::nn::tensor::Tensor;
+
+use super::artifact::{Manifest, ModelEntry};
+
+/// Thin owner of the PJRT CPU client. NOT `Send` — PJRT wrapper types hold
+/// raw pointers; the coordinator confines all of this to one executor
+/// thread (see `coordinator::server`).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Self> {
+        Ok(Self { client: xla::PjRtClient::cpu().context("creating PJRT CPU client")? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Parse + compile one HLO text file; returns the executable and the
+    /// wall-clock compile time in ms (parse and codegen separately).
+    pub fn compile_hlo(&self, path: &Path) -> Result<(xla::PjRtLoadedExecutable, CompileTiming)> {
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let parse_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let t1 = Instant::now();
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {}", path.display()))?;
+        let compile_ms = t1.elapsed().as_secs_f64() * 1e3;
+        Ok((exe, CompileTiming { parse_ms, compile_ms }))
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompileTiming {
+    /// HLO text → HloModuleProto (the paper's "read model" share).
+    pub parse_ms: f64,
+    /// XLA:CPU codegen (the paper's "generate machine code" share).
+    pub compile_ms: f64,
+}
+
+impl CompileTiming {
+    pub fn total_ms(&self) -> f64 {
+        self.parse_ms + self.compile_ms
+    }
+}
+
+/// A fully loaded model: one specialized executable per batch bucket
+/// (shape-specialized code, exactly like the paper's generated functions).
+pub struct CompiledModel {
+    pub entry: ModelEntry,
+    exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    weight_bufs: Vec<xla::PjRtBuffer>,
+    pub timings: BTreeMap<usize, CompileTiming>,
+    /// Device upload time for the weights-as-args blob (0 for baked).
+    pub weights_upload_ms: f64,
+}
+
+impl CompiledModel {
+    /// Load every batch bucket of `name` from the manifest.
+    pub fn load(rt: &Runtime, manifest: &Manifest, name: &str) -> Result<Self> {
+        let entry = manifest.entry(name)?.clone();
+        Self::load_buckets(rt, manifest, &entry, &entry.batches.clone())
+    }
+
+    /// Load a subset of batch buckets (benches use this to time each).
+    pub fn load_buckets(
+        rt: &Runtime,
+        manifest: &Manifest,
+        entry: &ModelEntry,
+        buckets: &[usize],
+    ) -> Result<Self> {
+        let mut exes = BTreeMap::new();
+        let mut timings = BTreeMap::new();
+        for &b in buckets {
+            let path = manifest.hlo_path(entry, b)?;
+            let (exe, t) = rt.compile_hlo(&path)?;
+            exes.insert(b, exe);
+            timings.insert(b, t);
+        }
+
+        // Weights-as-args: upload the folded blob once, device-resident.
+        let mut weight_bufs = Vec::new();
+        let mut weights_upload_ms = 0.0;
+        if !entry.baked {
+            let file = entry
+                .weights_file
+                .as_ref()
+                .context("unbaked model without weights_file")?;
+            let blob = load_weights_blob(&manifest.models_dir.join(file))?;
+            let t0 = Instant::now();
+            for wa in &entry.weight_args {
+                let n: usize = wa.shape.iter().product();
+                let data = blob
+                    .get(wa.offset..wa.offset + n)
+                    .with_context(|| format!("weight arg {}/{} out of blob", wa.layer, wa.key))?;
+                weight_bufs.push(
+                    rt.client()
+                        .buffer_from_host_buffer::<f32>(data, &wa.shape, None)
+                        .with_context(|| format!("uploading {}/{}", wa.layer, wa.key))?,
+                );
+            }
+            weights_upload_ms = t0.elapsed().as_secs_f64() * 1e3;
+        }
+
+        Ok(Self {
+            entry: entry.clone(),
+            exes,
+            weight_bufs,
+            timings,
+            weights_upload_ms,
+        })
+    }
+
+    pub fn batch_buckets(&self) -> Vec<usize> {
+        self.exes.keys().copied().collect()
+    }
+
+    /// Smallest bucket that fits `n` requests (None if n exceeds the max).
+    pub fn bucket_for(&self, n: usize) -> Option<usize> {
+        self.exes.keys().copied().find(|&b| b >= n)
+    }
+
+    /// Total compile time across buckets (Table 1 last-row analog).
+    pub fn total_compile_ms(&self) -> f64 {
+        self.timings.values().map(|t| t.total_ms()).sum::<f64>() + self.weights_upload_ms
+    }
+
+    /// Run inference on `[B, ...]` input; B must be a loaded bucket.
+    pub fn execute(&self, rt: &Runtime, input: &Tensor) -> Result<Vec<Tensor>> {
+        let batch = input.shape()[0];
+        let exe = match self.exes.get(&batch) {
+            Some(e) => e,
+            None => bail!(
+                "model `{}` compiled for buckets {:?}, got batch {batch}",
+                self.entry.name,
+                self.batch_buckets()
+            ),
+        };
+        if input.shape()[1..] != self.entry.input_shape[..] {
+            bail!(
+                "input shape {:?} does not match model {:?}",
+                input.shape(),
+                self.entry.input_shape
+            );
+        }
+        let in_buf = rt
+            .client()
+            .buffer_from_host_buffer::<f32>(input.data(), input.shape(), None)?;
+
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weight_bufs.len());
+        args.push(&in_buf);
+        args.extend(self.weight_bufs.iter());
+
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = lit.to_tuple()?;
+        if parts.len() != self.entry.output_shapes_b1.len() {
+            bail!(
+                "model `{}` returned {} outputs, manifest says {}",
+                self.entry.name,
+                parts.len(),
+                self.entry.output_shapes_b1.len()
+            );
+        }
+        let mut outs = Vec::new();
+        for (p, s1) in parts.into_iter().zip(&self.entry.output_shapes_b1) {
+            let mut shape = s1.clone();
+            shape[0] = batch;
+            let v = p.to_vec::<f32>()?;
+            if v.len() != shape.iter().product::<usize>() {
+                bail!("output element count {} != shape {:?}", v.len(), shape);
+            }
+            outs.push(Tensor::from_vec(&shape, v));
+        }
+        Ok(outs)
+    }
+}

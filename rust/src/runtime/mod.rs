@@ -1,0 +1,6 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them as native
+//! code. `Runtime::compile_hlo` at model registration is this repo's analog
+//! of the paper's AsmJit codegen at model-load time.
+pub mod artifact;
+pub mod cache;
+pub mod executor;

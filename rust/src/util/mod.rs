@@ -1,0 +1,5 @@
+//! From-scratch substrates: JSON, PRNG, property-testing (see DESIGN.md
+//! substitution log — serde/rand/proptest are unavailable offline).
+pub mod json;
+pub mod propcheck;
+pub mod rng;

@@ -1,0 +1,85 @@
+//! Minimal property-based testing harness (`proptest` is unavailable in the
+//! offline build).
+//!
+//! `check(name, cases, gen, prop)` runs `prop` over `cases` seeded random
+//! inputs produced by `gen`. On failure it reports the seed and the debug
+//! form of the failing case so the run can be reproduced exactly:
+//!
+//! ```text
+//! property `planner_no_overlap` failed on case 37 (seed 0x9E37…):
+//!   <Debug of case>
+//! ```
+
+use std::fmt::Debug;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use super::rng::SplitMix64;
+
+/// Base seed; override with `PROPCHECK_SEED` to replay a failing run.
+fn base_seed() -> u64 {
+    std::env::var("PROPCHECK_SEED")
+        .ok()
+        .and_then(|s| u64::from_str_radix(s.trim_start_matches("0x"), 16).ok())
+        .unwrap_or(0x5EED_CAFE_F00D_0001)
+}
+
+/// Run `prop` on `cases` generated inputs; panics with a reproducible report
+/// on the first failure (either `Err` or an inner panic).
+pub fn check<T, G, P>(name: &str, cases: usize, mut gen: G, prop: P)
+where
+    T: Debug,
+    G: FnMut(&mut SplitMix64) -> T,
+    P: Fn(&T) -> Result<(), String>,
+{
+    let seed0 = base_seed();
+    for i in 0..cases {
+        let case_seed = seed0.wrapping_add(i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = SplitMix64::new(case_seed);
+        let case = gen(&mut rng);
+        let outcome = catch_unwind(AssertUnwindSafe(|| prop(&case)));
+        let failure = match outcome {
+            Ok(Ok(())) => None,
+            Ok(Err(msg)) => Some(msg),
+            Err(p) => Some(format!(
+                "panicked: {}",
+                p.downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "<non-string panic>".into())
+            )),
+        };
+        if let Some(msg) = failure {
+            panic!(
+                "property `{name}` failed on case {i} \
+                 (replay: PROPCHECK_SEED={seed0:#x}):\n  case: {case:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check("true", 50, |r| r.next_u64(), |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fail_even`")]
+    fn reports_failures() {
+        check(
+            "fail_even",
+            50,
+            |r| r.next_u64(),
+            |v| if v % 2 == 0 { Err("even".into()) } else { Ok(()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn catches_panics() {
+        check("panics", 5, |_| 0u32, |_| -> Result<(), String> { panic!("boom") });
+    }
+}

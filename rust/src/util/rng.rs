@@ -1,0 +1,107 @@
+//! From-scratch deterministic PRNG (the `rand` crate is unavailable in the
+//! offline build).
+//!
+//! `SplitMix64` is bit-identical to `python/compile/testdata.py`, so golden
+//! test inputs regenerate exactly on both sides of the artifact boundary.
+
+/// SplitMix64 (Steele, Lea & Flood 2014). Full 2^64 period, passes BigCrush.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// f32 uniform in [-1, 1): top 24 bits / 2^23 − 1. Mirrors
+    /// `testdata.splitmix_uniform` bit-for-bit (computed via f64 then cast).
+    #[inline]
+    pub fn next_uniform(&mut self) -> f32 {
+        let top24 = (self.next_u64() >> 40) as f64;
+        ((top24 / (1u64 << 23) as f64) - 1.0) as f32
+    }
+
+    /// `n` uniforms in [-1, 1).
+    pub fn uniform_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.next_uniform()).collect()
+    }
+
+    /// Uniform usize in [0, bound) via Lemire's multiply-shift reduction
+    /// (bias negligible for the bounds used in tests/benches).
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        ((self.next_u64() as u128 * bound as u128) >> 64) as usize
+    }
+
+    /// f32 uniform in [lo, hi).
+    #[inline]
+    pub fn range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (self.next_uniform() * 0.5 + 0.5) * (hi - lo)
+    }
+}
+
+/// The seed transformation used for golden inputs (matches aot.py).
+pub fn golden_seed(model_seed: u64) -> u64 {
+    model_seed ^ 0xDEAD_BEEF
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pinned_vectors_match_python() {
+        // Anchors printed by python/compile/testdata.py (test_model.py pins
+        // the same values on that side).
+        let mut r = SplitMix64::new(1);
+        assert_eq!(r.next_u64(), 0x910a_2dec_8902_5cc1);
+        assert_eq!(r.next_u64(), 0xbeeb_8da1_658e_ec67);
+        assert_eq!(r.next_u64(), 0xf893_a2ee_fb32_555e);
+        assert_eq!(r.next_u64(), 0x71c1_8690_ee42_c90b);
+
+        let mut r = SplitMix64::new(1);
+        let expect = [0.13312304f32, 0.49156344, 0.9420054, -0.11128163];
+        for e in expect {
+            assert!((r.next_uniform() - e).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = SplitMix64::new(99);
+        for _ in 0..10_000 {
+            let v = r.next_uniform();
+            assert!((-1.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn below_in_bounds_and_spread() {
+        let mut r = SplitMix64::new(7);
+        let mut hits = [0usize; 10];
+        for _ in 0..10_000 {
+            hits[r.below(10)] += 1;
+        }
+        for h in hits {
+            assert!(h > 700, "badly skewed: {hits:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a: Vec<u64> = (0..8).map({ let mut r = SplitMix64::new(5); move |_| r.next_u64() }).collect();
+        let b: Vec<u64> = (0..8).map({ let mut r = SplitMix64::new(5); move |_| r.next_u64() }).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,97 @@
+//! CLI smoke tests: run the built `compiled-nn` binary end to end on every
+//! subcommand and assert on its output (the user-facing launcher surface).
+
+use std::path::Path;
+use std::process::Command;
+
+fn bin() -> Command {
+    // target dir is shared with the test profile (both release)
+    let exe = Path::new(env!("CARGO_BIN_EXE_compiled-nn"));
+    Command::new(exe)
+}
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = bin().args(args).output().expect("spawn compiled-nn");
+    assert!(
+        out.status.success(),
+        "`compiled-nn {}` failed:\n{}",
+        args.join(" "),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn help_lists_commands() {
+    let out = run_ok(&["help"]);
+    for c in ["compile", "infer", "compare", "inspect", "precision", "table1", "serve"] {
+        assert!(out.contains(c), "help missing `{c}`:\n{out}");
+    }
+}
+
+#[test]
+fn unknown_command_fails_with_help() {
+    let out = bin().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("frobnicate"));
+}
+
+#[test]
+fn precision_prints_the_three_approximations() {
+    let out = run_ok(&["precision"]);
+    assert!(out.contains("tanh (Eq. 5)"));
+    assert!(out.contains("sigmoid (Eq. 4)"));
+    assert!(out.contains("exp (Schraudolph)"));
+}
+
+#[test]
+fn inspect_reports_all_three_analyses() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = run_ok(&["inspect", "--model", "c_bh"]);
+    assert!(out.contains("§3.5 folding"), "{out}");
+    assert!(out.contains("§3.2 memory"), "{out}");
+    assert!(out.contains("total MACs"), "{out}");
+    // c_bh has 2 foldable BNs
+    assert!(out.contains("2 batchnorm layers → 0"), "{out}");
+}
+
+#[test]
+fn infer_runs_each_engine() {
+    if !have_artifacts() {
+        return;
+    }
+    for engine in ["naive", "optimized", "compiled"] {
+        let out = run_ok(&["infer", "--model", "c_htwk", "--engine", engine]);
+        assert!(out.contains("output[0] shape [1, 2]"), "{engine}: {out}");
+    }
+}
+
+#[test]
+fn compare_reports_small_deltas() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = run_ok(&["compare", "--model", "c_bh"]);
+    assert!(out.contains("compiled  vs naive-exact"), "{out}");
+    // parse the exponents: all deltas must be < 1e-2 for the sigmoid head
+    for line in out.lines().filter(|l| l.contains("max |Δ|")) {
+        let v: f64 = line.split("= ").nth(1).unwrap().trim().parse::<f64>().unwrap_or_else(|_| {
+            // format like 2.98e-8
+            line.split("= ").nth(1).unwrap().trim().parse().unwrap()
+        });
+        assert!(v < 1e-2, "{line}");
+    }
+}
+
+#[test]
+fn missing_model_flag_is_a_clean_error() {
+    let out = bin().args(["infer"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--model"));
+}

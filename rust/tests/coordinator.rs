@@ -1,0 +1,177 @@
+//! Coordinator integration: correctness of the batched serving path against
+//! direct execution, concurrency from multiple client threads, registry
+//! idempotency, metrics accounting, and shutdown semantics.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+use compiled_nn::util::rng::SplitMix64;
+
+fn manifest() -> Option<Manifest> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping coordinator tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load_default().unwrap())
+}
+
+fn patches(n: usize, seed: u64) -> Vec<Tensor> {
+    let mut rng = SplitMix64::new(seed);
+    (0..n)
+        .map(|_| Tensor::from_vec(&[32, 32, 1], rng.uniform_vec(32 * 32)))
+        .collect()
+}
+
+#[test]
+fn batched_results_match_direct_execution() {
+    let Some(m) = manifest() else { return };
+    let coord = Coordinator::start(
+        m.clone(),
+        CoordinatorConfig { max_wait: Duration::from_micros(500), queue_depth: 256 },
+    )
+    .unwrap();
+    let client = coord.register("c_bh").unwrap();
+
+    let inputs = patches(20, 5);
+    let rxs: Vec<_> = inputs.iter().map(|x| client.infer_async(x.clone()).unwrap()).collect();
+    let served: Vec<Tensor> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+
+    // direct, unbatched reference
+    let rt = Runtime::new().unwrap();
+    let model = CompiledModel::load(&rt, &m, "c_bh").unwrap();
+    for (x, got) in inputs.iter().zip(&served) {
+        let mut shape = vec![1usize];
+        shape.extend_from_slice(x.shape());
+        let direct = model
+            .execute(&rt, &Tensor::from_vec(&shape, x.data().to_vec()))
+            .unwrap();
+        let d = got.max_abs_diff(&direct[0]);
+        assert!(d < 1e-5, "served vs direct: {d}");
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_clients_all_served() {
+    let Some(m) = manifest() else { return };
+    let coord = Coordinator::start(m, CoordinatorConfig::default()).unwrap();
+    let client = coord.register("c_bh").unwrap();
+
+    let n_threads = 4;
+    let per_thread = 25;
+    let mut handles = Vec::new();
+    for t in 0..n_threads {
+        let c = client.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut ok = 0;
+            for x in patches(per_thread, 100 + t as u64) {
+                let out = c.infer(x).unwrap();
+                assert_eq!(out.shape(), &[1, 1]);
+                let v = out.data()[0];
+                assert!((0.0..=1.0).contains(&v), "sigmoid out of range: {v}");
+                ok += 1;
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, n_threads * per_thread);
+
+    let metrics = coord.metrics("c_bh").unwrap();
+    assert_eq!(metrics.requests.get(), total as u64);
+    assert!(metrics.batches.get() <= total as u64);
+    assert_eq!(metrics.errors.get(), 0);
+    assert!(metrics.mean_batch_fill() >= 1.0);
+    coord.shutdown();
+}
+
+#[test]
+fn register_is_idempotent() {
+    let Some(m) = manifest() else { return };
+    let coord = Coordinator::start(m, CoordinatorConfig::default()).unwrap();
+    let a = coord.register("c_htwk").unwrap();
+    let b = coord.register("c_htwk").unwrap();
+    assert_eq!(a.info.buckets, b.info.buckets);
+    assert_eq!(coord.models(), vec!["c_htwk".to_string()]);
+    // both clients funnel to the same queue/metrics
+    let x = patches(1, 1).remove(0);
+    a.infer(Tensor::from_vec(&[16, 16, 1], x.data()[..256].to_vec())).unwrap();
+    b.infer(Tensor::from_vec(&[16, 16, 1], x.data()[..256].to_vec())).unwrap();
+    assert_eq!(a.metrics.requests.get(), 2);
+    coord.shutdown();
+}
+
+#[test]
+fn wrong_item_shape_rejected_before_queueing() {
+    let Some(m) = manifest() else { return };
+    let coord = Coordinator::start(m, CoordinatorConfig::default()).unwrap();
+    let client = coord.register("c_bh").unwrap();
+    let bad = Tensor::zeros(&[16, 16, 1]);
+    let err = client.infer_async(bad).unwrap_err().to_string();
+    assert!(err.contains("item shape"), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn unknown_model_registration_fails() {
+    let Some(m) = manifest() else { return };
+    let coord = Coordinator::start(m, CoordinatorConfig::default()).unwrap();
+    assert!(coord.register("not_a_model").is_err());
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_then_infer_errors_cleanly() {
+    let Some(m) = manifest() else { return };
+    let coord = Coordinator::start(m, CoordinatorConfig::default()).unwrap();
+    let client = coord.register("c_htwk").unwrap();
+    coord.shutdown();
+    std::thread::sleep(Duration::from_millis(50));
+    let x = Tensor::zeros(&[16, 16, 1]);
+    // either the queue is closed or the reply channel errors — never a hang
+    match client.infer_async(x) {
+        Err(_) => {}
+        Ok(rx) => {
+            let r = rx.recv_timeout(Duration::from_secs(5));
+            assert!(matches!(r, Ok(Err(_)) | Err(_)), "should not succeed after shutdown");
+        }
+    }
+}
+
+#[test]
+fn two_models_serve_side_by_side() {
+    let Some(m) = manifest() else { return };
+    let coord = Coordinator::start(m, CoordinatorConfig::default()).unwrap();
+    let bh = coord.register("c_bh").unwrap();
+    let htwk = coord.register("c_htwk").unwrap();
+    let mut rng = SplitMix64::new(9);
+    let out_bh = bh.infer(Tensor::from_vec(&[32, 32, 1], rng.uniform_vec(1024))).unwrap();
+    let out_htwk = htwk.infer(Tensor::from_vec(&[16, 16, 1], rng.uniform_vec(256))).unwrap();
+    assert_eq!(out_bh.shape(), &[1, 1]);
+    assert_eq!(out_htwk.shape(), &[1, 2]);
+    let s: f32 = out_htwk.data().iter().sum();
+    assert!((s - 1.0).abs() < 1e-2); // softmax head
+    let names = {
+        let mut v = coord.models();
+        v.sort();
+        v
+    };
+    assert_eq!(names, vec!["c_bh".to_string(), "c_htwk".to_string()]);
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_is_shareable_across_threads() {
+    let Some(m) = manifest() else { return };
+    let coord: Arc<Coordinator> = Coordinator::start(m, CoordinatorConfig::default()).unwrap();
+    let c2 = coord.clone();
+    let h = std::thread::spawn(move || c2.register("c_htwk").map(|c| c.info.buckets.clone()));
+    let buckets = h.join().unwrap().unwrap();
+    assert_eq!(buckets, vec![1, 8, 32]);
+    coord.shutdown();
+}

@@ -1,0 +1,130 @@
+//! Failure injection: corrupted artifacts, truncated blobs, malformed specs
+//! and manifests must produce *clean, named* errors — never panics, wrong
+//! numbers, or hangs. (The paper's robot loads models at boot; a bad file
+//! must not take the process down.)
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use compiled_nn::model::load::load_model;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+
+fn have_artifacts() -> bool {
+    Path::new("artifacts/manifest.json").exists()
+}
+
+/// Copy the real model files into a scratch dir we can corrupt.
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cnn_fail_{name}_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    for f in [format!("{name}.json"), format!("{name}.weights.bin")] {
+        fs::copy(Path::new("models").join(&f), dir.join(&f)).unwrap();
+    }
+    dir
+}
+
+#[test]
+fn truncated_weight_blob_is_detected() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = scratch("c_htwk");
+    let blob = dir.join("c_htwk.weights.bin");
+    let bytes = fs::read(&blob).unwrap();
+    fs::write(&blob, &bytes[..bytes.len() / 2]).unwrap();
+    let err = load_model(&dir, "c_htwk").unwrap_err().to_string();
+    assert!(err.contains("length") || err.contains("declared"), "{err}");
+}
+
+#[test]
+fn misaligned_weight_blob_is_detected() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = scratch("c_htwk");
+    let blob = dir.join("c_htwk.weights.bin");
+    let mut bytes = fs::read(&blob).unwrap();
+    bytes.pop(); // no longer a multiple of 4
+    fs::write(&blob, &bytes).unwrap();
+    let err = load_model(&dir, "c_htwk").unwrap_err().to_string();
+    assert!(err.contains("multiple-of-4"), "{err}");
+}
+
+#[test]
+fn spec_json_garbage_is_a_parse_error_with_offset() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = scratch("c_htwk");
+    let json = dir.join("c_htwk.json");
+    let text = fs::read_to_string(&json).unwrap();
+    // drop a brace in the middle of the structure
+    let pos = text.find("\"layers\"").unwrap();
+    let mut broken = text.clone();
+    broken.insert(pos, '}');
+    fs::write(&json, broken).unwrap();
+    let err = format!("{:#}", load_model(&dir, "c_htwk").unwrap_err());
+    assert!(err.contains("parse error"), "{err}");
+}
+
+#[test]
+fn out_of_bounds_weight_ref_is_detected() {
+    if !have_artifacts() {
+        return;
+    }
+    let dir = scratch("c_htwk");
+    let json = dir.join("c_htwk.json");
+    let text = fs::read_to_string(&json).unwrap();
+    // blow up the first offset far past the blob
+    let text = text.replacen("\"offset\": 0", "\"offset\": 99999999", 1);
+    fs::write(&json, text).unwrap();
+    let err = load_model(&dir, "c_htwk").unwrap_err().to_string();
+    assert!(err.contains("exceeds blob"), "{err}");
+}
+
+#[test]
+fn corrupted_hlo_text_fails_compile_not_process() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load_default().unwrap();
+    // build a manifest view over a scratch artifacts dir with corrupt HLO
+    let dir = std::env::temp_dir().join(format!("cnn_fail_hlo_{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    fs::copy("artifacts/manifest.json", dir.join("manifest.json")).unwrap();
+    let entry = m.entry("c_htwk").unwrap();
+    let f = &entry.artifacts[&1].file;
+    let text = fs::read_to_string(Path::new("artifacts").join(f)).unwrap();
+    fs::write(dir.join(f), &text[..text.len() / 3]).unwrap();
+    // other buckets don't exist in the scratch dir at all
+    let scratch_manifest = Manifest::load(&dir, Path::new("models")).unwrap();
+    let rt = Runtime::new().unwrap();
+    let entry = scratch_manifest.entry("c_htwk").unwrap().clone();
+    let err = CompiledModel::load_buckets(&rt, &scratch_manifest, &entry, &[1]);
+    assert!(err.is_err(), "corrupt HLO must not load");
+}
+
+#[test]
+fn missing_manifest_names_the_fix() {
+    let dir = std::env::temp_dir().join("cnn_no_manifest");
+    let _ = fs::remove_dir_all(&dir);
+    fs::create_dir_all(&dir).unwrap();
+    let err = format!(
+        "{:#}",
+        Manifest::load(&dir, Path::new("models")).unwrap_err()
+    );
+    assert!(err.contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn manifest_missing_model_lists_available() {
+    if !have_artifacts() {
+        return;
+    }
+    let m = Manifest::load_default().unwrap();
+    let err = m.entry("resnet152").unwrap_err().to_string();
+    assert!(err.contains("resnet152") && err.contains("c_bh"), "{err}");
+}

@@ -1,0 +1,165 @@
+//! Cross-language golden tests: every engine vs the exact JAX oracle
+//! recorded at artifact-build time (`artifacts/golden/<name>.json`).
+//! The input regenerates bit-identically from the shared SplitMix64 stream.
+//!
+//! Tolerances: exact engines ≤ 1e-3 (f32 accumulation-order drift across
+//! conv implementations); compiled/optimized outputs additionally carry the
+//! §3.4 approximation error on softmax/sigmoid heads.
+
+use std::path::Path;
+
+use compiled_nn::compiler::exec::{CompileOptions, OptInterp};
+use compiled_nn::model::load::load_model;
+use compiled_nn::nn::interp::NaiveInterp;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+use compiled_nn::util::json::Json;
+use compiled_nn::util::rng::{golden_seed, SplitMix64};
+
+struct Golden {
+    shape: Vec<usize>,
+    sample: Vec<f32>,
+    sum: f64,
+    absmax: f64,
+}
+
+fn load_golden(name: &str) -> Option<Golden> {
+    let path = Path::new("artifacts/golden").join(format!("{name}.json"));
+    let text = std::fs::read_to_string(path).ok()?;
+    let j = Json::parse(&text).unwrap();
+    let o = &j.req_arr("outputs").unwrap()[0];
+    Some(Golden {
+        shape: o.req("shape").unwrap().as_usize_vec().unwrap(),
+        sample: o
+            .req_arr("sample")
+            .unwrap()
+            .iter()
+            .map(|v| v.as_f64().unwrap() as f32)
+            .collect(),
+        sum: o.req_f64("sum").unwrap(),
+        absmax: o.req_f64("absmax").unwrap(),
+    })
+}
+
+fn golden_input(seed: u64, shape: &[usize]) -> Tensor {
+    let mut full = vec![1];
+    full.extend_from_slice(shape);
+    let n: usize = full.iter().product();
+    let mut rng = SplitMix64::new(golden_seed(seed));
+    Tensor::from_vec(&full, rng.uniform_vec(n))
+}
+
+fn check(out: &Tensor, g: &Golden, tol: f32, label: &str) {
+    assert_eq!(out.shape(), &g.shape[..], "{label}: shape");
+    for (i, (&got, &want)) in out.data().iter().zip(&g.sample).enumerate() {
+        assert!(
+            (got - want).abs() < tol,
+            "{label}: sample[{i}] {got} vs {want} (tol {tol})"
+        );
+    }
+    let sum: f64 = out.data().iter().map(|&v| v as f64).sum();
+    // sum over up to ~12k outputs; scale tolerance with count
+    let sum_tol = tol as f64 * out.len() as f64;
+    assert!((sum - g.sum).abs() < sum_tol.max(1e-3), "{label}: sum {sum} vs {}", g.sum);
+    let absmax = out.data().iter().fold(0.0f32, |m, &v| m.max(v.abs())) as f64;
+    assert!((absmax - g.absmax).abs() < tol as f64 * 10.0, "{label}: absmax");
+}
+
+/// (exact-engine tol, approx-engine tol) per model head type.
+fn tolerances(name: &str) -> (f32, f32) {
+    match name {
+        "c_htwk" | "segmenter" => (1e-3, 0.06), // softmax head → fast-exp error
+        "c_bh" | "detector" => (1e-3, 3e-3),    // sigmoid head → Eq. 4/5 error
+        _ => (1e-3, 3e-3),
+    }
+}
+
+fn manifest() -> Option<Manifest> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping golden tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load_default().unwrap())
+}
+
+#[test]
+fn naive_interpreter_matches_jax_oracle() {
+    let Some(m) = manifest() else { return };
+    for name in ["c_htwk", "c_bh", "detector", "segmenter"] {
+        let g = load_golden(name).unwrap();
+        let entry = m.entry(name).unwrap();
+        let spec = load_model(&m.models_dir, name).unwrap();
+        let out = NaiveInterp::new(spec).unwrap().infer(&golden_input(entry.seed, &entry.input_shape)).unwrap();
+        check(&out[0], &g, tolerances(name).0, &format!("{name}/naive"));
+    }
+}
+
+#[test]
+fn optimized_interpreter_matches_jax_oracle() {
+    let Some(m) = manifest() else { return };
+    for name in ["c_htwk", "c_bh", "detector", "segmenter"] {
+        let g = load_golden(name).unwrap();
+        let entry = m.entry(name).unwrap();
+        let spec = load_model(&m.models_dir, name).unwrap();
+        let mut e = OptInterp::new(&spec, CompileOptions::default()).unwrap();
+        let out = e.infer(&golden_input(entry.seed, &entry.input_shape)).unwrap();
+        check(&out[0], &g, tolerances(name).1, &format!("{name}/optimized"));
+    }
+}
+
+#[test]
+fn compiled_engine_matches_jax_oracle_small_nets() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::new().unwrap();
+    for name in ["c_htwk", "c_bh", "detector", "segmenter"] {
+        let g = load_golden(name).unwrap();
+        let entry = m.entry(name).unwrap();
+        let model = CompiledModel::load_buckets(&rt, &m, entry, &[1]).unwrap();
+        let out = model.execute(&rt, &golden_input(entry.seed, &entry.input_shape)).unwrap();
+        check(&out[0], &g, tolerances(name).1, &format!("{name}/compiled"));
+    }
+}
+
+#[test]
+fn compiled_engine_matches_jax_oracle_big_nets() {
+    // MobileNetV2 + VGG19 exercise the weights-as-args path.
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::new().unwrap();
+    for name in ["mobilenetv2", "vgg19"] {
+        let g = load_golden(name).unwrap();
+        let entry = m.entry(name).unwrap();
+        let model = CompiledModel::load_buckets(&rt, &m, entry, &[1]).unwrap();
+        let out = model.execute(&rt, &golden_input(entry.seed, &entry.input_shape)).unwrap();
+        let tol = if name == "vgg19" { 0.06 } else { 3e-3 }; // vgg19 → softmax
+        check(&out[0], &g, tol, &format!("{name}/compiled"));
+    }
+}
+
+#[test]
+fn batched_buckets_agree_with_batch1() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::new().unwrap();
+    let entry = m.entry("c_bh").unwrap();
+    let model = CompiledModel::load(&rt, &m, "c_bh").unwrap();
+    let mut rng = SplitMix64::new(77);
+    let x8 = Tensor::from_vec(&[8, 32, 32, 1], rng.uniform_vec(8 * 32 * 32));
+    let out8 = model.execute(&rt, &x8).unwrap();
+    for i in 0..8 {
+        let xi = x8.slice_batch(i, i + 1);
+        let oi = model.execute(&rt, &xi).unwrap();
+        let d = oi[0].max_abs_diff(&out8[0].slice_batch(i, i + 1));
+        assert!(d < 1e-5, "row {i}: {d}");
+    }
+    let _ = entry;
+}
+
+#[test]
+fn wrong_batch_is_a_clean_error() {
+    let Some(m) = manifest() else { return };
+    let rt = Runtime::new().unwrap();
+    let model = CompiledModel::load_buckets(&rt, &m, m.entry("c_bh").unwrap(), &[1]).unwrap();
+    let x = Tensor::zeros(&[2, 32, 32, 1]);
+    let err = model.execute(&rt, &x).unwrap_err().to_string();
+    assert!(err.contains("buckets"), "{err}");
+}

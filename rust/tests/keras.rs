@@ -1,0 +1,73 @@
+//! Keras front-end integration: the `.keras.json` exports must load into
+//! specs that are layer-for-layer and numerically identical to the nnspec
+//! versions of the same networks (§3.1 front-end parity).
+
+use std::path::Path;
+
+use compiled_nn::model::keras::load_keras_model;
+use compiled_nn::model::load::load_model;
+use compiled_nn::nn::interp::NaiveInterp;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::util::rng::SplitMix64;
+
+fn have_models() -> bool {
+    Path::new("models/c_bh.keras.json").exists()
+}
+
+#[test]
+fn keras_import_structurally_identical() {
+    if !have_models() {
+        return;
+    }
+    for name in ["c_htwk", "c_bh", "detector", "segmenter", "mobilenetv2", "vgg19"] {
+        let a = load_model(Path::new("models"), name).unwrap();
+        let b = load_keras_model(Path::new("models"), name).unwrap();
+        assert_eq!(a.input_shape, b.input_shape, "{name}");
+        assert_eq!(a.layers.len(), b.layers.len(), "{name}");
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.name, lb.name, "{name}");
+            assert_eq!(la.op, lb.op, "{name}/{}", la.name);
+            assert_eq!(la.inputs, lb.inputs, "{name}/{}", la.name);
+            assert_eq!(la.activation, lb.activation, "{name}/{}", la.name);
+            assert_eq!(
+                la.weights.keys().collect::<Vec<_>>(),
+                lb.weights.keys().collect::<Vec<_>>(),
+                "{name}/{}",
+                la.name
+            );
+        }
+        assert_eq!(a.outputs, b.outputs, "{name}");
+        assert_eq!(a.weights, b.weights, "{name} blob");
+    }
+}
+
+#[test]
+fn keras_import_numerically_identical() {
+    if !have_models() {
+        return;
+    }
+    for name in ["c_htwk", "c_bh", "segmenter"] {
+        let a = load_model(Path::new("models"), name).unwrap();
+        let b = load_keras_model(Path::new("models"), name).unwrap();
+        let mut rng = SplitMix64::new(8);
+        let mut shape = vec![1usize];
+        shape.extend_from_slice(&a.input_shape);
+        let n: usize = shape.iter().product();
+        let x = Tensor::from_vec(&shape, rng.uniform_vec(n));
+        let oa = NaiveInterp::new(a).unwrap().infer(&x).unwrap();
+        let ob = NaiveInterp::new(b).unwrap().infer(&x).unwrap();
+        // identical weights + identical graph → bit-identical outputs
+        assert_eq!(oa[0].data(), ob[0].data(), "{name}");
+    }
+}
+
+#[test]
+fn missing_keras_file_is_clean_error() {
+    if !have_models() {
+        return;
+    }
+    let err = load_keras_model(Path::new("models"), "no_such_model")
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no_such_model"), "{err}");
+}

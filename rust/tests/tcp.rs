@@ -1,0 +1,126 @@
+//! TCP front-end integration: full wire round-trip against the batched
+//! serving path, concurrent connections, protocol error handling.
+
+use std::path::Path;
+use std::time::Duration;
+
+use compiled_nn::coordinator::config::ServingConfig;
+use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
+use compiled_nn::coordinator::tcp::{TcpClient, TcpServer};
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+use compiled_nn::util::rng::SplitMix64;
+
+fn start_server(models: &[&str]) -> Option<(TcpServer, std::sync::Arc<Coordinator>)> {
+    if !Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping tcp tests: run `make artifacts` first");
+        return None;
+    }
+    let manifest = Manifest::load_default().unwrap();
+    let coord = Coordinator::start(
+        manifest,
+        CoordinatorConfig { max_wait: Duration::from_micros(300), queue_depth: 512 },
+    )
+    .unwrap();
+    for m in models {
+        coord.register(m).unwrap();
+    }
+    let server = TcpServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+    Some((server, coord))
+}
+
+#[test]
+fn wire_roundtrip_matches_direct_execution() {
+    let Some((mut server, coord)) = start_server(&["c_bh"]) else { return };
+    let addr = server.addr().to_string();
+    let mut client = TcpClient::connect(&addr).unwrap();
+
+    let mut rng = SplitMix64::new(21);
+    let input = rng.uniform_vec(32 * 32);
+    let via_wire = client.infer("c_bh", input.clone()).unwrap();
+
+    let manifest = Manifest::load_default().unwrap();
+    let rt = Runtime::new().unwrap();
+    let model = CompiledModel::load(&rt, &manifest, "c_bh").unwrap();
+    let direct = model
+        .execute(&rt, &Tensor::from_vec(&[1, 32, 32, 1], input))
+        .unwrap();
+    // f32 → f64 JSON → f32 is exact, so the wire adds no error
+    assert!(via_wire.max_abs_diff(&direct[0]) < 1e-6);
+
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn concurrent_connections_share_batches() {
+    let Some((mut server, coord)) = start_server(&["c_bh"]) else { return };
+    let addr = server.addr().to_string();
+
+    let mut handles = Vec::new();
+    for t in 0..3 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = TcpClient::connect(&addr).unwrap();
+            let mut rng = SplitMix64::new(50 + t);
+            for _ in 0..10 {
+                let out = client.infer("c_bh", rng.uniform_vec(32 * 32)).unwrap();
+                assert_eq!(out.shape(), &[1, 1]);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = coord.metrics("c_bh").unwrap();
+    assert_eq!(m.requests.get(), 30);
+    assert_eq!(m.errors.get(), 0);
+
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn protocol_errors_are_reported_not_fatal() {
+    let Some((mut server, coord)) = start_server(&["c_htwk"]) else { return };
+    let addr = server.addr().to_string();
+    let mut client = TcpClient::connect(&addr).unwrap();
+
+    // unknown model
+    let err = client.infer("nope", vec![0.0; 4]).unwrap_err().to_string();
+    assert!(err.contains("not registered"), "{err}");
+    // wrong input size
+    let err = client.infer("c_htwk", vec![0.0; 3]).unwrap_err().to_string();
+    assert!(err.contains("floats"), "{err}");
+    // connection still usable afterwards
+    let mut rng = SplitMix64::new(1);
+    let ok = client.infer("c_htwk", rng.uniform_vec(16 * 16)).unwrap();
+    assert_eq!(ok.shape(), &[1, 2]);
+
+    server.shutdown();
+    coord.shutdown();
+}
+
+#[test]
+fn serving_config_drives_deployment() {
+    if !Path::new("artifacts/manifest.json").exists() {
+        return;
+    }
+    let cfg = ServingConfig::parse(
+        r#"{"listen": "127.0.0.1:0", "max_wait_us": 300, "models": ["c_htwk", "c_bh"]}"#,
+    )
+    .unwrap();
+    let manifest = Manifest::load_default().unwrap();
+    let coord = Coordinator::start(manifest, cfg.coordinator_config()).unwrap();
+    for m in &cfg.models {
+        coord.register(m).unwrap();
+    }
+    let mut server = TcpServer::start(coord.clone(), &cfg.listen).unwrap();
+    let mut client = TcpClient::connect(&server.addr().to_string()).unwrap();
+    let mut rng = SplitMix64::new(2);
+    assert_eq!(client.infer("c_htwk", rng.uniform_vec(256)).unwrap().shape(), &[1, 2]);
+    assert_eq!(client.infer("c_bh", rng.uniform_vec(1024)).unwrap().shape(), &[1, 1]);
+    server.shutdown();
+    coord.shutdown();
+}
