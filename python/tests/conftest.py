@@ -1,0 +1,6 @@
+# Make `compile.*` importable when pytest runs from the repo root (CI runs
+# `python -m pytest python/tests -q` without installing the package).
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

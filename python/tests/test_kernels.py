@@ -2,6 +2,8 @@
 # signal for L1. Hypothesis sweeps shapes and value ranges.
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import activations as act_k

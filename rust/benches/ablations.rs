@@ -6,13 +6,18 @@
 //!                                              `compiled-nn precision`)
 //!   §3.2 memory plan:  reuse_memory on/off    (arena bytes + latency)
 //!
+//! Each variant is built through the engine registry (`EngineKind::Optimized`
+//! with per-variant `EngineOptions`); the arena footprint is read through
+//! the `Engine::memory_bytes` hook.
+//!
 //! Run on the nets that exercise each feature: c_bh (BN + sigmoid),
 //! segmenter (softmax over 80×80), mobilenetv2 (34 BNs, depthwise).
 
 use std::time::Duration;
 
 use compiled_nn::bench::{bench_budget, black_box};
-use compiled_nn::compiler::exec::{CompileOptions, OptInterp};
+use compiled_nn::compiler::exec::CompileOptions;
+use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
 use compiled_nn::model::load::load_model;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::runtime::artifact::Manifest;
@@ -24,6 +29,7 @@ fn main() -> anyhow::Result<()> {
 
     for name in ["c_bh", "segmenter", "mobilenetv2"] {
         let entry = manifest.entry(name)?;
+        // one spec parse per model, shared by all four variants
         let spec = load_model(&manifest.models_dir, name)?;
         let mut rng = SplitMix64::new(golden_seed(entry.seed));
         let mut shape = vec![1];
@@ -41,11 +47,12 @@ fn main() -> anyhow::Result<()> {
             ("no memory reuse", CompileOptions { reuse_memory: false, ..base }),
         ];
         let mut baseline = 0.0;
-        for (label, opts) in variants {
-            let mut e = OptInterp::new(&spec, opts)?;
+        for (label, compile) in variants {
+            let opts = EngineOptions { compile, buckets: None };
+            let mut e = build_engine_from_spec(EngineKind::Optimized, &spec, &opts)?;
             // touch once so arena exists for the bytes report
             e.infer(&x)?;
-            let arena = e.arena_bytes();
+            let arena = e.memory_bytes().unwrap_or(0);
             let r = bench_budget(&format!("{name}/{label}"), budget, min_iters, || {
                 black_box(e.infer(&x).unwrap());
             });

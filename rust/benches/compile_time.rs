@@ -3,37 +3,73 @@
 //! parse + XLA:CPU codegen + weight upload), repeated to show variance,
 //! plus the Rust-side graph-pass/planning cost for the interpreter engines.
 //!
+//! The parse/codegen/upload split needs the PJRT runtime internals, so the
+//! full report requires `--features pjrt`; a plain build still measures the
+//! interpreter-side plan cost (and says what it skipped).
+//!
 //! Paper anchor: 6.5 ms (C-HTWK) → 13 722 ms (VGG19) on the NAO — compile
 //! cost grows superlinearly with model size; the same shape must hold here.
+
+use std::collections::BTreeMap;
 
 use compiled_nn::bench::bench;
 use compiled_nn::compiler::exec::{compile, CompileOptions};
 use compiled_nn::model::load::load_model;
 use compiled_nn::runtime::artifact::Manifest;
-use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+
+/// (parse ms, codegen ms, upload ms) per model, measured on ONE shared
+/// PJRT client (client creation is expensive and per-process, not
+/// per-model).
+#[cfg(feature = "pjrt")]
+fn pjrt_columns(manifest: &Manifest) -> anyhow::Result<BTreeMap<String, (f64, f64, f64)>> {
+    use compiled_nn::runtime::executor::{CompiledModel, Runtime};
+
+    let rt = Runtime::new()?;
+    let mut out = BTreeMap::new();
+    for name in manifest.models.keys() {
+        let entry = manifest.entry(name)?;
+        // repeat full loads to average (fewer reps keep vgg19 tolerable)
+        let reps = if entry.params > 10_000_000 { 2 } else { 3 };
+        let (mut parse, mut codegen, mut upload) = (0.0, 0.0, 0.0);
+        for _ in 0..reps {
+            let m = CompiledModel::load_buckets(&rt, manifest, entry, &[1])?;
+            parse += m.timings[&1].parse_ms;
+            codegen += m.timings[&1].compile_ms;
+            upload += m.weights_upload_ms;
+        }
+        let reps = reps as f64;
+        out.insert(name.clone(), (parse / reps, codegen / reps, upload / reps));
+    }
+    Ok(out)
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_columns(_manifest: &Manifest) -> anyhow::Result<BTreeMap<String, (f64, f64, f64)>> {
+    anyhow::bail!("pjrt feature off")
+}
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load_default()?;
-    let rt = Runtime::new()?;
+    // A pjrt-enabled build failing here is a real problem (bad artifact,
+    // missing plugin) — surface it instead of silently printing `-`.
+    let pjrt_cols = match pjrt_columns(&manifest) {
+        Ok(map) => Some(map),
+        Err(e) => {
+            if cfg!(feature = "pjrt") {
+                eprintln!("PJRT columns unavailable: {e:#}");
+            } else {
+                println!("(pjrt feature off: PJRT parse/codegen/upload columns print as `-`)");
+            }
+            None
+        }
+    };
     println!(
         "{:<14} {:>10} {:>12} {:>12} {:>12} {:>14} {:>14}",
         "model", "params", "parse ms", "codegen ms", "upload ms", "total ms", "plan(rs) ms"
     );
     for name in manifest.models.keys() {
         let entry = manifest.entry(name)?;
-        // repeat full loads to average (3× keeps vgg19 tolerable)
-        let reps = if entry.params > 10_000_000 { 2 } else { 3 };
-        let mut parse = 0.0;
-        let mut codegen = 0.0;
-        let mut upload = 0.0;
-        for _ in 0..reps {
-            let m = CompiledModel::load_buckets(&rt, &manifest, entry, &[1])?;
-            parse += m.timings[&1].parse_ms;
-            codegen += m.timings[&1].compile_ms;
-            upload += m.weights_upload_ms;
-        }
-        let (parse, codegen, upload) =
-            (parse / reps as f64, codegen / reps as f64, upload / reps as f64);
+        let cols = pjrt_cols.as_ref().and_then(|m| m.get(name));
 
         // Rust-side compile (fold + memory plan) for the optimized engine.
         let spec = load_model(&manifest.models_dir, name)?;
@@ -41,16 +77,22 @@ fn main() -> anyhow::Result<()> {
             let _ = compile(&spec, CompileOptions::default()).unwrap();
         });
 
-        println!(
-            "{:<14} {:>10} {:>12.1} {:>12.1} {:>12.1} {:>14.1} {:>14.3}",
-            name,
-            entry.params,
-            parse,
-            codegen,
-            upload,
-            parse + codegen + upload,
-            r.mean_ms
-        );
+        match cols {
+            Some((parse, codegen, upload)) => println!(
+                "{:<14} {:>10} {:>12.1} {:>12.1} {:>12.1} {:>14.1} {:>14.3}",
+                name,
+                entry.params,
+                parse,
+                codegen,
+                upload,
+                parse + codegen + upload,
+                r.mean_ms
+            ),
+            None => println!(
+                "{:<14} {:>10} {:>12} {:>12} {:>12} {:>14} {:>14.3}",
+                name, entry.params, "-", "-", "-", "-", r.mean_ms
+            ),
+        }
     }
     println!("\n(compile-time row of Table 1; paper: 6.5 ms → 13722 ms across the same size span)");
     Ok(())

@@ -20,6 +20,7 @@ fn main() -> anyhow::Result<()> {
         let cfg = CoordinatorConfig {
             max_wait: Duration::from_micros(wait_us),
             queue_depth: 4096,
+            ..CoordinatorConfig::default()
         };
         let coord = Coordinator::start(manifest.clone(), cfg)?;
         let client = coord.register("c_bh")?;

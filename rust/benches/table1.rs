@@ -1,13 +1,16 @@
 //! **T1-inference** — the Table 1 reproduction: batch-1 inference latency of
 //! all six evaluation networks across the engines:
 //!
-//!   compiled  — AOT HLO + PJRT (the CompiledNN analog)
+//!   compiled  — AOT HLO + PJRT (the CompiledNN analog; `pjrt` feature)
 //!   optimized — folded/fused/arena interpreter (TFLite / RoboDNN analog)
 //!   naive     — exact scalar interpreter (tiny-dnn / frugally-deep analog)
 //!   legacy    — naive restricted to the RoboDNN/tiny-dnn layer set; `-`
 //!               where those libraries print `-` in the paper's Table 1
 //!
 //! plus the compile-time row (paper Table 1 last row).
+//!
+//! Engines come from the `EngineKind` registry: kinds this build lacks
+//! (compiled without `--features pjrt`) render as `-` instead of failing.
 //!
 //! Expected shape (paper): compiled wins big on the four small RoboCup nets;
 //! the gap narrows/inverts on MobileNetV2/VGG19. Absolute numbers differ
@@ -16,22 +19,22 @@
 use std::time::Duration;
 
 use compiled_nn::bench::{bench_budget, black_box, print_grid};
-use compiled_nn::compiler::exec::{CompileOptions, OptInterp};
+use compiled_nn::engine::{build_engine, build_engine_from_spec, Engine, EngineKind, EngineOptions};
 use compiled_nn::model::load::load_model;
-use compiled_nn::nn::interp::{Capabilities, NaiveInterp};
+use compiled_nn::nn::interp::Capabilities;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::runtime::artifact::Manifest;
-use compiled_nn::runtime::executor::{CompiledModel, Runtime};
 use compiled_nn::util::rng::{golden_seed, SplitMix64};
 
 fn main() -> anyhow::Result<()> {
     let manifest = Manifest::load_default()?;
-    let rt = Runtime::new()?;
     let budget = Duration::from_secs(3);
     let names = ["c_htwk", "c_bh", "detector", "segmenter", "mobilenetv2", "vgg19"];
+    // Table-1 column order — shared with main.rs cmd_table1
+    let kinds = EngineKind::ALL;
 
     let mut rows = Vec::new();
-    let mut compile_ms = Vec::new();
+    let mut total_compile_ms: Option<f64> = None;
     for name in names {
         let entry = manifest.entry(name)?;
         let mut rng = SplitMix64::new(golden_seed(entry.seed));
@@ -40,61 +43,68 @@ fn main() -> anyhow::Result<()> {
         let n: usize = shape.iter().product();
         let x = Tensor::from_vec(&shape, rng.uniform_vec(n));
         let big = entry.params > 1_000_000;
-        let min_iters = if big { 2 } else { 10 };
-
-        // compiled (PJRT execute of the AOT artifact)
-        let m = CompiledModel::load_buckets(&rt, &manifest, entry, &[1])?;
-        let r = bench_budget(&format!("{name}/compiled"), budget, min_iters, || {
-            black_box(m.execute(&rt, &x).unwrap());
-        });
-        println!("{}", r.row());
-        let compiled = r.mean_ms;
-        compile_ms.push(Some(m.total_compile_ms()));
-
-        // optimized interpreter
+        // one spec parse per model, shared by both interpreter kinds
         let spec = load_model(&manifest.models_dir, name)?;
-        let mut opt = OptInterp::new(&spec, CompileOptions::default())?;
-        let r = bench_budget(&format!("{name}/optimized"), budget, min_iters, || {
-            black_box(opt.infer(&x).unwrap());
-        });
-        println!("{}", r.row());
-        let optimized = r.mean_ms;
 
-        // naive exact interpreter (hard-capped on the big nets)
-        let naive = NaiveInterp::new(spec.clone())?;
-        let r = bench_budget(&format!("{name}/naive"), budget, min_iters.min(3), || {
-            black_box(naive.infer(&x).unwrap());
-        });
-        println!("{}", r.row());
-        let naive_ms = r.mean_ms;
+        let mut cells: Vec<Option<f64>> = Vec::new();
+        let mut naive_ms = None;
+        for kind in kinds {
+            if !kind.available() {
+                cells.push(None);
+                continue;
+            }
+            let built = match kind {
+                EngineKind::Compiled => {
+                    build_engine(kind, &manifest, name, &EngineOptions::with_buckets(&[1]))
+                }
+                _ => build_engine_from_spec(kind, &spec, &EngineOptions::default()),
+            };
+            let mut engine = match built {
+                Ok(e) => e,
+                Err(err) => {
+                    eprintln!("{name}/{kind}: {err}");
+                    cells.push(None);
+                    continue;
+                }
+            };
+            // hard-cap the scalar interpreter; relax everything on big nets
+            let min_iters = if big {
+                2
+            } else if kind == EngineKind::Naive {
+                3
+            } else {
+                10
+            };
+            let r = bench_budget(&format!("{name}/{kind}"), budget, min_iters, || {
+                black_box(engine.infer(&x).unwrap());
+            });
+            println!("{}", r.row());
+            if kind == EngineKind::Naive {
+                naive_ms = Some(r.mean_ms);
+            }
+            if kind == EngineKind::Compiled {
+                total_compile_ms =
+                    Some(total_compile_ms.unwrap_or(0.0) + engine.compile_ms());
+            }
+            cells.push(Some(r.mean_ms));
+        }
 
         // `-` cells: engines lacking upsample/depthwise (RoboDNN, tiny-dnn)
-        let legacy = Capabilities::LEGACY.supports(&spec).then_some(naive_ms);
-
-        rows.push((
-            name.to_string(),
-            vec![Some(compiled), Some(optimized), Some(naive_ms), legacy],
-        ));
+        let legacy = if Capabilities::LEGACY.supports(&spec) { naive_ms } else { None };
+        cells.push(legacy);
+        rows.push((name.to_string(), cells));
     }
-    rows.push(("compile[ms]".to_string(), {
-        let mut r = compile_ms;
-        r.extend([None, None, None].into_iter().take(0));
-        // compile time applies to the compiled engine column only
-        vec![r.iter().filter_map(|v| *v).sum::<f64>().into(), None, None, None]
-    }));
+    rows.push((
+        "compile[ms]".to_string(),
+        // compile time applies to the compiled engine column only; `-`
+        // (not 0.0) whenever no compiled engine was actually measured
+        vec![total_compile_ms, None, None, None],
+    ));
 
     print_grid(
         "Table 1 analog — batch-1 inference latency [ms] (last row: total compile ms)",
         &["compiled", "optimized", "naive", "legacy"],
         &rows,
     );
-
-    println!("\nper-model compile time [ms] (paper Table 1 last row):");
-    for (name, r) in names.iter().zip(rows.iter()) {
-        let _ = r;
-        let entry = manifest.entry(name)?;
-        let m = CompiledModel::load_buckets(&rt, &manifest, entry, &[1])?;
-        println!("  {:<14} {:>10.1}", name, m.total_compile_ms());
-    }
     Ok(())
 }

@@ -56,7 +56,7 @@ pub fn analyze(spec: &ModelSpec) -> Result<Vec<UnitCost>> {
             LayerOp::Softmax => (out_elems * 2, None),
             _ => (0, None),
         };
-        let div = |n: usize, d: usize| (n + d - 1) / d.max(1);
+        let div = |n: usize, d: usize| n.div_ceil(d.max(1));
         let (sh3, sh2) = match matvec_n {
             Some(n) => (n.saturating_sub(1), n),
             None => (0, 0),
@@ -82,10 +82,10 @@ pub fn total_macs(spec: &ModelSpec) -> usize {
 
 /// Render the analysis as an aligned text table (inspect command).
 pub fn render_table(costs: &[UnitCost]) -> String {
-    let mut s = String::from(format!(
+    let mut s = format!(
         "{:<16} {:<18} {:>12} {:>10} {:>9} {:>9} {:>9} {:>9}\n",
         "layer", "op", "macs", "out", "bat(Eq3)", "bat(Eq2)", "shuf3", "shuf2"
-    ));
+    );
     for c in costs {
         s.push_str(&format!(
             "{:<16} {:<18} {:>12} {:>10} {:>9} {:>9} {:>9} {:>9}\n",

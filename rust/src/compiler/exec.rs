@@ -113,9 +113,7 @@ impl OptInterp {
         let in_buf = self.c.plan.buffer_of["input"];
         self.arena[in_buf][..input.len()].copy_from_slice(input.data());
 
-        // Pre-collect per-layer info to sidestep borrow tangles.
-        let layers: Vec<usize> = (0..self.c.spec.layers.len()).collect();
-        for li in layers {
+        for li in 0..self.c.spec.layers.len() {
             self.run_layer(li, batch)?;
         }
 
@@ -308,6 +306,28 @@ impl OptInterp {
         // Linear activation by construction, except `activation` layers).
         self.arena[out_id] = outbuf;
         Ok(())
+    }
+}
+
+impl crate::engine::Engine for OptInterp {
+    fn name(&self) -> &str {
+        "optimized"
+    }
+
+    fn infer(&mut self, input: &Tensor) -> Result<Vec<Tensor>> {
+        OptInterp::infer(self, input)
+    }
+
+    fn supports(&self, spec: &ModelSpec) -> bool {
+        crate::nn::interp::Capabilities::FULL.supports(spec)
+    }
+
+    fn compile_ms(&self) -> f64 {
+        self.c.compile_ms
+    }
+
+    fn memory_bytes(&self) -> Option<usize> {
+        Some(self.arena_bytes())
     }
 }
 

@@ -32,8 +32,10 @@ pub fn fold_batchnorm(spec: &ModelSpec) -> ModelSpec {
     let mut blob = std::mem::take(&mut out.weights);
     let mut removed: BTreeMap<String, String> = BTreeMap::new(); // bn -> producer
 
-    // Pass 1: decide folds and rewrite producers.
+    // Pass 1: decide folds and rewrite producers. (Index loop: the body
+    // mutates `out.layers[pi]` for other indices, so no iterator borrow.)
     let producer_names: Vec<String> = out.layers.iter().map(|l| l.name.clone()).collect();
+    #[allow(clippy::needless_range_loop)]
     for bi in 0..out.layers.len() {
         let (op, name, input) = {
             let l = &out.layers[bi];

@@ -18,6 +18,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use crate::engine::EngineKind;
 use crate::util::json::Json;
 
 use super::server::CoordinatorConfig;
@@ -28,6 +29,9 @@ pub struct ServingConfig {
     pub models: Vec<String>,
     pub max_wait: Duration,
     pub queue_depth: usize,
+    /// Engine kind to serve with (`"engine": "optimized"`); default is the
+    /// best kind the build supports.
+    pub engine: EngineKind,
 }
 
 impl Default for ServingConfig {
@@ -37,6 +41,7 @@ impl Default for ServingConfig {
             models: vec![],
             max_wait: Duration::from_micros(500),
             queue_depth: 1024,
+            engine: EngineKind::preferred(),
         }
     }
 }
@@ -67,6 +72,10 @@ impl ServingConfig {
                 .get("queue_depth")
                 .and_then(Json::as_usize)
                 .unwrap_or(d.queue_depth),
+            engine: match j.get("engine").and_then(Json::as_str) {
+                Some(s) => EngineKind::parse(s)?,
+                None => d.engine,
+            },
         })
     }
 
@@ -77,7 +86,11 @@ impl ServingConfig {
     }
 
     pub fn coordinator_config(&self) -> CoordinatorConfig {
-        CoordinatorConfig { max_wait: self.max_wait, queue_depth: self.queue_depth }
+        CoordinatorConfig {
+            max_wait: self.max_wait,
+            queue_depth: self.queue_depth,
+            engine: self.engine,
+        }
     }
 }
 
@@ -103,6 +116,15 @@ mod tests {
         let c = ServingConfig::parse(r#"{"models": ["c_bh"]}"#).unwrap();
         assert_eq!(c.listen, "127.0.0.1:7878");
         assert_eq!(c.queue_depth, 1024);
+    }
+
+    #[test]
+    fn engine_key_selects_kind() {
+        let c = ServingConfig::parse(r#"{"models": ["c_bh"], "engine": "naive"}"#).unwrap();
+        assert_eq!(c.engine, EngineKind::Naive);
+        let d = ServingConfig::parse(r#"{"models": ["c_bh"]}"#).unwrap();
+        assert_eq!(d.engine, EngineKind::preferred());
+        assert!(ServingConfig::parse(r#"{"models": ["c_bh"], "engine": "jit"}"#).is_err());
     }
 
     #[test]

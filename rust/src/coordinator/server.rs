@@ -18,10 +18,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::batcher::{BatchPolicy, Flush};
 use crate::coordinator::metrics::ModelMetrics;
+use crate::engine::{build_engine, Engine, EngineKind, EngineOptions};
 use crate::nn::tensor::Tensor;
 use crate::runtime::artifact::Manifest;
-use crate::runtime::cache::CompileCache;
-use crate::runtime::executor::Runtime;
 
 /// A single inference request: one item (no batch dim); the batcher stacks.
 struct Request {
@@ -52,6 +51,8 @@ pub struct RegisterInfo {
     pub compile_ms: f64,
     pub cache_hit: bool,
     pub params: usize,
+    /// Registry name of the engine serving this model.
+    pub engine: String,
 }
 
 /// Coordinator configuration.
@@ -60,11 +61,19 @@ pub struct CoordinatorConfig {
     pub max_wait: Duration,
     /// Bounded queue per model (backpressure: senders block).
     pub queue_depth: usize,
+    /// Engine the executor thread builds for every registered model.
+    /// Defaults to the best kind this build supports (compiled with the
+    /// `pjrt` feature, optimized interpreter otherwise).
+    pub engine: EngineKind,
 }
 
 impl Default for CoordinatorConfig {
     fn default() -> Self {
-        Self { max_wait: Duration::from_millis(2), queue_depth: 1024 }
+        Self {
+            max_wait: Duration::from_millis(2),
+            queue_depth: 1024,
+            engine: EngineKind::preferred(),
+        }
     }
 }
 
@@ -78,17 +87,16 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start the executor thread over the given artifact manifest.
+    /// Start the executor thread over the given artifact manifest. Engine
+    /// construction happens lazily at `register`, which is where failures
+    /// (unavailable engine, bad artifact) surface.
     pub fn start(manifest: Manifest, cfg: CoordinatorConfig) -> Result<Arc<Self>> {
         let (exec_tx, exec_rx) = mpsc::channel::<ExecMsg>();
-        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let engine_kind = cfg.engine;
         let exec_thread = std::thread::Builder::new()
-            .name("pjrt-executor".into())
-            .spawn(move || executor_main(manifest, exec_rx, ready_tx))
+            .name("engine-executor".into())
+            .spawn(move || executor_main(manifest, engine_kind, exec_rx))
             .context("spawning executor thread")?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("executor thread died during startup"))??;
         Ok(Arc::new(Self {
             exec_tx,
             exec_thread: Some(exec_thread),
@@ -217,53 +225,57 @@ impl ModelClient {
 
 // ---------------------------------------------------------------- threads
 
-fn executor_main(
-    manifest: Manifest,
-    rx: Receiver<ExecMsg>,
-    ready: SyncSender<Result<()>>,
-) {
-    let rt = match Runtime::new() {
-        Ok(rt) => {
-            let _ = ready.send(Ok(()));
-            rt
-        }
-        Err(e) => {
-            let _ = ready.send(Err(e));
-            return;
-        }
-    };
-    let mut cache = CompileCache::new();
-    let mut models: HashMap<String, std::rc::Rc<crate::runtime::executor::CompiledModel>> =
-        HashMap::new();
+/// The executor thread: owns every engine (the compiled engine's PJRT
+/// state is not `Send`, so construction *and* execution are confined
+/// here). Engines are built once per model through the registry and kept
+/// for the coordinator's lifetime — re-registering is a cache hit.
+fn executor_main(manifest: Manifest, kind: EngineKind, rx: Receiver<ExecMsg>) {
+    let opts = EngineOptions::default();
+    let mut engines: HashMap<String, Box<dyn Engine>> = HashMap::new();
 
     while let Ok(msg) = rx.recv() {
         match msg {
             ExecMsg::Shutdown => break,
             ExecMsg::Register { name, reply } => {
-                let before_hits = cache.hits;
-                let res = cache.get_or_load(&rt, &manifest, &name).map(|m| {
-                    let info = RegisterInfo {
-                        name: name.clone(),
-                        buckets: m.batch_buckets(),
-                        input_shape: m.entry.input_shape.clone(),
-                        compile_ms: m.total_compile_ms(),
-                        cache_hit: cache.hits > before_hits,
-                        params: m.entry.params,
-                    };
-                    models.insert(name.clone(), m);
-                    info
-                });
+                let res = register_engine(&manifest, kind, &opts, &mut engines, &name);
                 let _ = reply.send(res);
             }
             ExecMsg::InferBatch { name, batch, reply } => {
-                let res = match models.get(&name) {
-                    Some(m) => m.execute(&rt, &batch).map(|mut outs| outs.remove(0)),
+                let res = match engines.get_mut(&name) {
+                    Some(e) => e.infer(&batch).map(|mut outs| outs.remove(0)),
                     None => Err(anyhow!("model `{name}` not registered")),
                 };
                 let _ = reply.send(res);
             }
         }
     }
+}
+
+fn register_engine(
+    manifest: &Manifest,
+    kind: EngineKind,
+    opts: &EngineOptions,
+    engines: &mut HashMap<String, Box<dyn Engine>>,
+    name: &str,
+) -> Result<RegisterInfo> {
+    let entry = manifest.entry(name)?.clone();
+    let cache_hit = engines.contains_key(name);
+    if !cache_hit {
+        let engine = build_engine(kind, manifest, name, opts)?;
+        engines.insert(name.to_string(), engine);
+    }
+    let engine = engines.get(name).expect("engine registered above");
+    Ok(RegisterInfo {
+        name: name.to_string(),
+        // Interpreters take any batch size; they still advertise the
+        // manifest buckets so the batcher packs identically across engines.
+        buckets: engine.batch_buckets().unwrap_or_else(|| entry.batches.clone()),
+        input_shape: entry.input_shape.clone(),
+        compile_ms: engine.compile_ms(),
+        cache_hit,
+        params: entry.params,
+        engine: engine.name().to_string(),
+    })
 }
 
 fn batcher_main(

@@ -1,0 +1,284 @@
+//! The unified engine abstraction: one trait over all three execution
+//! paths and a registry that constructs them by [`EngineKind`].
+//!
+//! The paper's comparison (Table 1) only works if the naive interpreter,
+//! the optimized interpreter and the PJRT-compiled runtime are swappable
+//! behind one seam. Everything above the engines — the CLI, the serving
+//! coordinator, the golden tests, the benches — selects engines through
+//! [`build_engine`] / [`build_engine_from_spec`] instead of constructing
+//! `NaiveInterp` / `OptInterp` / `CompiledModel` by hand:
+//!
+//! ```text
+//! EngineKind::Naive     → nn::interp::NaiveInterp      (exact oracle)
+//! EngineKind::Optimized → compiler::exec::OptInterp    (folded/fused/arena)
+//! EngineKind::Compiled  → runtime::executor::CompiledEngine  (PJRT, `pjrt`
+//!                         cargo feature; unavailable on plain runners)
+//! ```
+//!
+//! Later scaling work (sharding, new backends, batching policies) plugs in
+//! here: add a kind, implement [`Engine`], extend the registry match.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+use crate::compiler::exec::CompileOptions;
+use crate::model::load::load_model;
+use crate::model::spec::ModelSpec;
+use crate::nn::tensor::Tensor;
+use crate::runtime::artifact::Manifest;
+
+/// A ready-to-run inference engine over a fixed model.
+///
+/// `infer` takes `[B, ...item_shape]` input and returns the model outputs
+/// with the same leading batch dimension. Interpreters accept any batch
+/// size; the compiled engine only accepts batch sizes it was specialized
+/// for (see [`Engine::batch_buckets`]) — callers batch/pad accordingly,
+/// exactly like the paper's fixed-shape generated code.
+pub trait Engine {
+    /// Registry name of this engine (`naive` / `optimized` / `compiled`).
+    fn name(&self) -> &str;
+
+    /// Run a forward pass on a `[B, ...]` input tensor.
+    fn infer(&mut self, input: &Tensor) -> Result<Vec<Tensor>>;
+
+    /// Whether this engine can execute the given model graph.
+    fn supports(&self, spec: &ModelSpec) -> bool;
+
+    /// Batch sizes this engine is specialized for (`None` = any batch).
+    fn batch_buckets(&self) -> Option<Vec<usize>> {
+        None
+    }
+
+    /// Engine-side compile/plan time in ms (0 when not applicable).
+    fn compile_ms(&self) -> f64 {
+        0.0
+    }
+
+    /// Working-set bytes currently held (arena/buffers), if tracked.
+    fn memory_bytes(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// The engine registry's keys — every execution path the repo compares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    /// Exact scalar interpreter (the paper's `SimpleNN` baseline).
+    Naive,
+    /// Folded/fused/arena-planned interpreter (TFLite/RoboDNN analog).
+    Optimized,
+    /// PJRT-compiled AOT artifacts (the paper's JIT analog).
+    Compiled,
+}
+
+impl EngineKind {
+    /// Every kind, in Table 1 column order (fastest path first).
+    pub const ALL: [EngineKind; 3] =
+        [EngineKind::Compiled, EngineKind::Optimized, EngineKind::Naive];
+
+    pub fn all() -> &'static [EngineKind] {
+        &Self::ALL
+    }
+
+    pub fn parse(s: &str) -> Result<EngineKind> {
+        Ok(match s {
+            "naive" => EngineKind::Naive,
+            "optimized" => EngineKind::Optimized,
+            "compiled" => EngineKind::Compiled,
+            other => bail!(
+                "unknown engine `{other}` (have: naive | optimized | compiled)"
+            ),
+        })
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EngineKind::Naive => "naive",
+            EngineKind::Optimized => "optimized",
+            EngineKind::Compiled => "compiled",
+        }
+    }
+
+    /// Whether this kind can actually be constructed on this host. The
+    /// compiled engine is behind the `pjrt` cargo feature *and* needs a
+    /// working PJRT client (the vendored `xla` stub never provides one);
+    /// both cases report unavailable instead of erroring per use.
+    pub fn available(self) -> bool {
+        match self {
+            EngineKind::Compiled => compiled_available(),
+            _ => true,
+        }
+    }
+
+    /// The best engine this build can construct: compiled when the PJRT
+    /// runtime is linked, otherwise the optimized interpreter. The serving
+    /// coordinator defaults to this.
+    pub fn preferred() -> EngineKind {
+        if EngineKind::Compiled.available() {
+            EngineKind::Compiled
+        } else {
+            EngineKind::Optimized
+        }
+    }
+}
+
+impl fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Construction options shared by every engine kind.
+#[derive(Debug, Clone, Default)]
+pub struct EngineOptions {
+    /// Graph-pass toggles for the optimized interpreter (folding, approx
+    /// activations, arena reuse) — each is an ablation axis.
+    pub compile: CompileOptions,
+    /// Batch buckets to specialize the compiled engine for
+    /// (`None` = every bucket in the manifest entry).
+    pub buckets: Option<Vec<usize>>,
+}
+
+impl EngineOptions {
+    /// Default options but restricted to the given compiled-engine buckets.
+    pub fn with_buckets(buckets: &[usize]) -> EngineOptions {
+        EngineOptions { buckets: Some(buckets.to_vec()), ..EngineOptions::default() }
+    }
+
+    /// Default options with exact math (no §3.4 approximations) — what
+    /// parity tests use when comparing against the naive oracle.
+    pub fn exact() -> EngineOptions {
+        EngineOptions {
+            compile: CompileOptions { approx: false, ..CompileOptions::default() },
+            buckets: None,
+        }
+    }
+}
+
+/// Build an engine for a model registered in the artifact [`Manifest`].
+///
+/// This is the single constructor every caller goes through: interpreters
+/// load the nnspec from `manifest.models_dir`, the compiled engine loads
+/// and PJRT-compiles the AOT artifacts. Fails with a named error when the
+/// kind is unavailable in this build (see [`EngineKind::available`]).
+pub fn build_engine(
+    kind: EngineKind,
+    manifest: &Manifest,
+    model: &str,
+    opts: &EngineOptions,
+) -> Result<Box<dyn Engine>> {
+    match kind {
+        EngineKind::Naive | EngineKind::Optimized => {
+            let spec = load_model(&manifest.models_dir, model)?;
+            build_engine_from_spec(kind, &spec, opts)
+        }
+        EngineKind::Compiled => build_compiled(manifest, model, opts),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+fn compiled_available() -> bool {
+    crate::runtime::executor::runtime_available()
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn compiled_available() -> bool {
+    false
+}
+
+#[cfg(feature = "pjrt")]
+fn build_compiled(
+    manifest: &Manifest,
+    model: &str,
+    opts: &EngineOptions,
+) -> Result<Box<dyn Engine>> {
+    let engine = crate::runtime::executor::CompiledEngine::build(manifest, model, opts)?;
+    Ok(Box::new(engine))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn build_compiled(
+    _manifest: &Manifest,
+    _model: &str,
+    _opts: &EngineOptions,
+) -> Result<Box<dyn Engine>> {
+    bail!(
+        "engine `compiled` requires a build with `--features pjrt` \
+         (the PJRT runtime is feature-gated off on plain runners)"
+    )
+}
+
+/// Build an interpreter engine directly from an in-memory [`ModelSpec`]
+/// (programmatic models, e.g. `model::builder::tiny_cnn`). The compiled
+/// engine executes AOT artifacts and therefore needs [`build_engine`].
+pub fn build_engine_from_spec(
+    kind: EngineKind,
+    spec: &ModelSpec,
+    opts: &EngineOptions,
+) -> Result<Box<dyn Engine>> {
+    match kind {
+        EngineKind::Naive => Ok(Box::new(crate::nn::interp::NaiveInterp::new(spec.clone())?)),
+        EngineKind::Optimized => {
+            Ok(Box::new(crate::compiler::exec::OptInterp::new(spec, opts.compile)?))
+        }
+        EngineKind::Compiled => bail!(
+            "engine `compiled` executes AOT artifacts; construct it from a \
+             manifest via build_engine()"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::tiny_cnn;
+
+    #[test]
+    fn kind_roundtrip_and_display() {
+        for kind in EngineKind::all() {
+            assert_eq!(EngineKind::parse(kind.as_str()).unwrap(), *kind);
+            assert_eq!(kind.to_string(), kind.as_str());
+        }
+        assert!(EngineKind::parse("jit").is_err());
+    }
+
+    #[test]
+    fn interpreters_always_available() {
+        assert!(EngineKind::Naive.available());
+        assert!(EngineKind::Optimized.available());
+        assert!(EngineKind::ALL.contains(&EngineKind::preferred()));
+        assert_ne!(EngineKind::preferred(), EngineKind::Naive);
+    }
+
+    #[test]
+    fn registry_builds_interpreters_from_spec() {
+        let spec = tiny_cnn(41);
+        let x = crate::nn::tensor::Tensor::filled(&[2, 8, 8, 3], 0.25);
+        for kind in [EngineKind::Naive, EngineKind::Optimized] {
+            let mut e = build_engine_from_spec(kind, &spec, &EngineOptions::default()).unwrap();
+            assert_eq!(e.name(), kind.as_str());
+            assert!(e.supports(&spec));
+            let out = e.infer(&x).unwrap();
+            assert_eq!(out[0].shape(), &[2, 10]);
+        }
+    }
+
+    #[test]
+    fn spec_construction_of_compiled_is_a_named_error() {
+        let err = build_engine_from_spec(
+            EngineKind::Compiled,
+            &tiny_cnn(1),
+            &EngineOptions::default(),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("compiled"), "{err}");
+    }
+
+    #[test]
+    fn exact_options_disable_approx() {
+        assert!(!EngineOptions::exact().compile.approx);
+        assert_eq!(EngineOptions::with_buckets(&[1, 8]).buckets, Some(vec![1, 8]));
+    }
+}

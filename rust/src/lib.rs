@@ -7,11 +7,26 @@
 //! model-registration time (the paper's runtime-JIT analog) and serves
 //! inference; interpreter engines reproduce the paper's baselines.
 //!
+//! ## Engine registry
+//!
+//! All three execution paths implement the [`engine::Engine`] trait and are
+//! constructed exclusively through the [`engine::EngineKind`] registry
+//! ([`engine::build_engine`] for manifest-backed models,
+//! [`engine::build_engine_from_spec`] for programmatic specs):
+//!
+//! * `naive` — [`nn::interp::NaiveInterp`], the exact scalar oracle,
+//! * `optimized` — [`compiler::exec::OptInterp`], §3.2/§3.4/§3.5 applied,
+//! * `compiled` — `runtime::executor::CompiledEngine`, PJRT-compiled AOT
+//!   artifacts. Only present with the `pjrt` cargo feature; plain builds
+//!   report it unavailable and every caller (CLI, coordinator, tests,
+//!   benches) degrades gracefully via [`engine::EngineKind::available`].
+//!
 //! See DESIGN.md for the full mapping and EXPERIMENTS.md for results.
 pub mod approx;
 pub mod bench;
 pub mod compiler;
 pub mod coordinator;
+pub mod engine;
 pub mod model;
 pub mod nn;
 pub mod runtime;

@@ -1,14 +1,18 @@
 //! `compiled-nn` — CLI over the three-layer stack. Subcommands:
 //!
 //! ```text
-//! compiled-nn compile                      # load + PJRT-compile all models, print Table-1 compile row
+//! compiled-nn compile                      # PJRT-compile all models, print Table-1 compile row
 //! compiled-nn infer --model c_bh [--engine compiled|naive|optimized] [--batch N]
 //! compiled-nn compare --model c_bh        # all engines vs the golden oracle
 //! compiled-nn inspect --model c_bh        # §3.3 cost table + §3.2 memory plan + §3.5 folding
 //! compiled-nn precision                   # §3.4 approximation error table
 //! compiled-nn table1 [--iters N]          # quick Table-1 analog (benches do it properly)
-//! compiled-nn serve --model c_bh --seconds 5 [--offered RPS]
+//! compiled-nn serve --model c_bh --seconds 5 [--offered RPS] [--engine KIND]
 //! ```
+//!
+//! Engines are never constructed directly here: every subcommand goes
+//! through the `engine::EngineKind` registry, so the CLI degrades cleanly
+//! when the `pjrt` feature (the compiled engine) is absent.
 //!
 //! Argument parsing is hand-rolled (clap is unavailable offline; the paper
 //! hand-rolled its JSON parser in the same spirit).
@@ -18,14 +22,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use compiled_nn::compiler::exec::{CompileOptions, OptInterp};
 use compiled_nn::compiler::{cost, fuse, memory};
 use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
+use compiled_nn::engine::{build_engine, build_engine_from_spec, Engine, EngineKind, EngineOptions};
 use compiled_nn::model::load::load_model;
-use compiled_nn::nn::interp::NaiveInterp;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::runtime::artifact::Manifest;
-use compiled_nn::runtime::executor::{CompiledModel, Runtime};
 use compiled_nn::util::rng::{golden_seed, SplitMix64};
 
 fn main() {
@@ -94,6 +96,7 @@ fn run() -> Result<()> {
 
 const HELP: &str = "compiled-nn — JIT-compiled NN inference (paper reproduction)
 commands: compile | infer | compare | inspect | precision | table1 | serve
+engines (--engine): compiled (needs the `pjrt` build feature) | optimized | naive
 see the module docs in rust/src/main.rs for flags";
 
 /// Deterministic golden input, bit-identical to aot.py's.
@@ -106,18 +109,20 @@ fn golden_input(seed: u64, batch: usize, item_shape: &[usize]) -> Tensor {
 }
 
 fn cmd_compile() -> Result<()> {
+    if !EngineKind::Compiled.available() {
+        bail!(
+            "`compile` needs the compiled engine, which is unavailable on this \
+             host (requires the `pjrt` build feature and a working PJRT plugin)"
+        );
+    }
     let manifest = Manifest::load_default()?;
-    let rt = Runtime::new()?;
-    println!("platform: {}", rt.platform());
-    println!("{:<14} {:>10} {:>7} {:>12} {:>12} {:>12}", "model", "params", "baked", "parse ms", "codegen ms", "total ms");
+    println!("{:<14} {:>10} {:>7} {:>14}", "model", "params", "baked", "compile ms");
     for name in manifest.models.keys() {
         let entry = manifest.entry(name)?;
-        let m = CompiledModel::load(&rt, &manifest, name)?;
-        let parse: f64 = m.timings.values().map(|t| t.parse_ms).sum();
-        let codegen: f64 = m.timings.values().map(|t| t.compile_ms).sum();
+        let engine = build_engine(EngineKind::Compiled, &manifest, name, &EngineOptions::default())?;
         println!(
-            "{:<14} {:>10} {:>7} {:>12.1} {:>12.1} {:>12.1}",
-            name, entry.params, entry.baked, parse, codegen, m.total_compile_ms()
+            "{:<14} {:>10} {:>7} {:>14.1}",
+            name, entry.params, entry.baked, engine.compile_ms()
         );
     }
     Ok(())
@@ -125,35 +130,31 @@ fn cmd_compile() -> Result<()> {
 
 fn cmd_infer(args: &Args) -> Result<()> {
     let name = args.req("model")?;
-    let engine = args.get("engine").unwrap_or("compiled");
+    // default to the best engine this build provides (compiled on pjrt
+    // builds, optimized otherwise) so the bare command works everywhere
+    let kind = match args.get("engine") {
+        Some(s) => EngineKind::parse(s)?,
+        None => EngineKind::preferred(),
+    };
     let batch = args.usize_or("batch", 1)?;
     let manifest = Manifest::load_default()?;
     let entry = manifest.entry(name)?;
     let x = golden_input(entry.seed, batch, &entry.input_shape);
 
     let t0 = Instant::now();
-    let out = match engine {
-        "compiled" => {
-            let rt = Runtime::new()?;
-            let m = CompiledModel::load(&rt, &manifest, name)?;
-            println!("compile: {:.1} ms", m.total_compile_ms());
-            let t = Instant::now();
-            let out = m.execute(&rt, &x)?;
-            println!("execute: {:.3} ms", t.elapsed().as_secs_f64() * 1e3);
-            out
-        }
-        "naive" => {
-            let spec = load_model(&manifest.models_dir, name)?;
-            let interp = NaiveInterp::new(spec)?;
-            interp.infer(&x)?
-        }
-        "optimized" => {
-            let spec = load_model(&manifest.models_dir, name)?;
-            let mut e = OptInterp::new(&spec, CompileOptions::default())?;
-            e.infer(&x)?
-        }
-        other => bail!("unknown engine `{other}`"),
+    let opts = if kind == EngineKind::Compiled {
+        // only specialize the bucket we are about to run
+        EngineOptions::with_buckets(&[batch])
+    } else {
+        EngineOptions::default()
     };
+    let mut engine = build_engine(kind, &manifest, name, &opts)?;
+    if engine.compile_ms() > 0.0 {
+        println!("compile: {:.1} ms", engine.compile_ms());
+    }
+    let t = Instant::now();
+    let out = engine.infer(&x)?;
+    println!("execute: {:.3} ms", t.elapsed().as_secs_f64() * 1e3);
     println!("load+infer total: {:.3} ms", t0.elapsed().as_secs_f64() * 1e3);
     for (i, o) in out.iter().enumerate() {
         let head: Vec<f32> = o.data().iter().take(8).copied().collect();
@@ -168,17 +169,35 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let entry = manifest.entry(name)?;
     let x = golden_input(entry.seed, 1, &entry.input_shape);
 
+    // one spec parse shared by the oracle and the optimized interpreter
     let spec = load_model(&manifest.models_dir, name)?;
-    let exact = NaiveInterp::new(spec.clone())?.infer(&x)?;
+    let mut oracle = build_engine_from_spec(EngineKind::Naive, &spec, &EngineOptions::default())?;
+    let exact = oracle.infer(&x)?;
 
-    let mut opt = OptInterp::new(&spec, CompileOptions::default())?;
-    let opt_out = opt.infer(&x)?;
-    println!("optimized vs naive-exact: max |Δ| = {:.2e}", exact[0].max_abs_diff(&opt_out[0]));
-
-    let rt = Runtime::new()?;
-    let m = CompiledModel::load_buckets(&rt, &manifest, entry, &[1])?;
-    let comp = m.execute(&rt, &x)?;
-    println!("compiled  vs naive-exact: max |Δ| = {:.2e}", exact[0].max_abs_diff(&comp[0]));
+    for kind in [EngineKind::Optimized, EngineKind::Compiled] {
+        if !kind.available() {
+            println!("{:<9} vs naive-exact: unavailable on this host", kind.as_str());
+            continue;
+        }
+        let built = if kind == EngineKind::Compiled {
+            build_engine(kind, &manifest, name, &EngineOptions::with_buckets(&[1]))
+        } else {
+            build_engine_from_spec(kind, &spec, &EngineOptions::default())
+        };
+        let mut engine = match built {
+            Ok(e) => e,
+            Err(e) => {
+                println!("{:<9} vs naive-exact: skipped ({e})", kind.as_str());
+                continue;
+            }
+        };
+        let out = engine.infer(&x)?;
+        println!(
+            "{:<9} vs naive-exact: max |Δ| = {:.2e}",
+            kind.as_str(),
+            exact[0].max_abs_diff(&out[0])
+        );
+    }
     println!("(approx activations bound the differences; see `precision`)");
     Ok(())
 }
@@ -233,25 +252,56 @@ fn cmd_precision() -> Result<()> {
 fn cmd_table1(args: &Args) -> Result<()> {
     let iters = args.usize_or("iters", 5)?;
     let manifest = Manifest::load_default()?;
-    let rt = Runtime::new()?;
     println!("Table 1 analog (ms per batch-1 inference, {iters} iters after warmup; see cargo bench --bench table1 for the full run)");
     println!("{:<14} {:>12} {:>12} {:>12} {:>14}", "model", "compiled", "optimized", "naive", "compile ms");
     for name in manifest.models.keys() {
         let entry = manifest.entry(name)?;
         let x = golden_input(entry.seed, 1, &entry.input_shape);
-        let m = CompiledModel::load_buckets(&rt, &manifest, entry, &[1])?;
-        let compiled_ms = time_ms(iters, || m.execute(&rt, &x).map(|_| ()))?;
+        // one spec parse per model, shared by both interpreter kinds
         let spec = load_model(&manifest.models_dir, name)?;
-        // big nets: single iteration for the interpreters
-        let interp_iters = if entry.params > 1_000_000 { 1 } else { iters };
-        let mut opt = OptInterp::new(&spec, CompileOptions::default())?;
-        let optimized_ms = time_ms(interp_iters, || opt.infer(&x).map(|_| ()))?;
-        let naive = NaiveInterp::new(spec.clone())?;
-        let naive_ms = time_ms(interp_iters, || naive.infer(&x).map(|_| ()))?;
-        println!(
-            "{:<14} {:>12.3} {:>12.3} {:>12.3} {:>14.1}",
-            name, compiled_ms, optimized_ms, naive_ms, m.total_compile_ms()
-        );
+        let mut cells: Vec<String> = Vec::new();
+        let mut compile_ms: Option<f64> = None;
+        for kind in EngineKind::ALL {
+            if !kind.available() {
+                cells.push(format!("{:>12}", "-"));
+                continue;
+            }
+            let built = match kind {
+                EngineKind::Compiled => {
+                    build_engine(kind, &manifest, name, &EngineOptions::with_buckets(&[1]))
+                }
+                _ => build_engine_from_spec(kind, &spec, &EngineOptions::default()),
+            };
+            let mut engine = match built {
+                Ok(e) => e,
+                Err(err) => {
+                    eprintln!("  {name}/{kind}: {err}");
+                    cells.push(format!("{:>12}", "-"));
+                    continue;
+                }
+            };
+            // big nets: single iteration for the interpreters
+            let n = if entry.params > 1_000_000 && kind != EngineKind::Compiled { 1 } else { iters };
+            match time_ms(n, || engine.infer(&x).map(|_| ())) {
+                Ok(ms) => {
+                    cells.push(format!("{ms:>12.3}"));
+                    if kind == EngineKind::Compiled {
+                        compile_ms = Some(engine.compile_ms());
+                    }
+                }
+                Err(err) => {
+                    // keep rendering the rest of the table
+                    eprintln!("  {name}/{kind}: {err}");
+                    cells.push(format!("{:>12}", "-"));
+                }
+            }
+        }
+        // `-` (not 0.0) whenever no compiled engine was actually measured
+        let compile_cell = match compile_ms {
+            Some(ms) => format!("{ms:>14.1}"),
+            None => format!("{:>14}", "-"),
+        };
+        println!("{:<14} {} {} {} {}", name, cells[0], cells[1], cells[2], compile_cell);
     }
     Ok(())
 }
@@ -273,12 +323,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let name = args.req("model")?.to_string();
     let seconds = args.usize_or("seconds", 5)?;
     let offered = args.usize_or("offered", 2000)?; // requests/second
+    let mut cfg = CoordinatorConfig::default();
+    if let Some(engine) = args.get("engine") {
+        cfg.engine = EngineKind::parse(engine)?;
+    }
     let manifest = Manifest::load_default()?;
-    let coord = Coordinator::start(manifest.clone(), CoordinatorConfig::default())?;
+    let coord = Coordinator::start(manifest.clone(), cfg)?;
     let client = coord.register(&name)?;
     println!(
-        "registered `{name}`: buckets {:?}, compile {:.1} ms (cache hit: {})",
-        client.info.buckets, client.info.compile_ms, client.info.cache_hit
+        "registered `{name}` on `{}`: buckets {:?}, compile {:.1} ms (cache hit: {})",
+        client.info.engine, client.info.buckets, client.info.compile_ms, client.info.cache_hit
     );
 
     let entry = manifest.entry(&name)?;
@@ -321,8 +375,8 @@ fn cmd_serve_tcp(cfg_path: &str, args: &Args) -> Result<()> {
     for m in &cfg.models {
         let client = coord.register(m)?;
         println!(
-            "registered `{m}`: buckets {:?}, compile {:.1} ms",
-            client.info.buckets, client.info.compile_ms
+            "registered `{m}` on `{}`: buckets {:?}, compile {:.1} ms",
+            client.info.engine, client.info.buckets, client.info.compile_ms
         );
     }
     let mut server = TcpServer::start(coord.clone(), &cfg.listen)?;

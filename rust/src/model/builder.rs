@@ -62,7 +62,7 @@ impl Builder {
 
     fn alloc_zeros(&mut self, n: usize) -> WeightRef {
         let offset = self.blob.len();
-        self.blob.extend(std::iter::repeat(0.0).take(n));
+        self.blob.resize(offset + n, 0.0);
         WeightRef { offset, shape: vec![n] }
     }
 
@@ -103,7 +103,7 @@ impl Builder {
         // Non-identity statistics so folding tests exercise real math.
         let offset = self.blob.len();
         for _ in 0..c {
-            self.blob.push(self.seed as f32 * 0.0 + 0.1); // beta
+            self.blob.push(0.1); // beta (same constant for every seed)
         }
         weights.insert("beta".into(), WeightRef { offset, shape: vec![c] });
         let g0 = self.blob.len();

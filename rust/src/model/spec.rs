@@ -287,14 +287,14 @@ fn hw(shape: &[usize], name: &str) -> Result<(usize, usize)> {
 /// SAME/VALID output spatial dims (stride ≥ 1), matching Keras/jax.
 pub fn conv_out(h: usize, w: usize, kh: usize, kw: usize, stride: usize, padding: Padding) -> (usize, usize) {
     match padding {
-        Padding::Same => ((h + stride - 1) / stride, (w + stride - 1) / stride),
+        Padding::Same => (h.div_ceil(stride), w.div_ceil(stride)),
         Padding::Valid => ((h - kh) / stride + 1, (w - kw) / stride + 1),
     }
 }
 
 /// Paddings (top, bottom, left, right) for SAME conv, matching XLA.
 pub fn same_pads(in_dim: usize, k: usize, stride: usize) -> (usize, usize) {
-    let out = (in_dim + stride - 1) / stride;
+    let out = in_dim.div_ceil(stride);
     let total = ((out - 1) * stride + k).saturating_sub(in_dim);
     (total / 2, total - total / 2)
 }

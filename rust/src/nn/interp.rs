@@ -99,6 +99,20 @@ impl NaiveInterp {
     }
 }
 
+impl crate::engine::Engine for NaiveInterp {
+    fn name(&self) -> &str {
+        "naive"
+    }
+
+    fn infer(&mut self, input: &Tensor) -> Result<Vec<Tensor>> {
+        NaiveInterp::infer(self, input)
+    }
+
+    fn supports(&self, spec: &ModelSpec) -> bool {
+        Capabilities::FULL.supports(spec)
+    }
+}
+
 // Small helper so env lookups above read uniformly.
 trait BorrowTensor {
     fn borrow_tensor(&self) -> &Tensor;

@@ -12,7 +12,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+use crate::engine::EngineOptions;
 use crate::model::load::load_weights_blob;
+use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
 
 use super::artifact::{Manifest, ModelEntry};
@@ -199,5 +201,99 @@ impl CompiledModel {
             outs.push(Tensor::from_vec(&shape, v));
         }
         Ok(outs)
+    }
+}
+
+thread_local! {
+    /// One PJRT client per thread: the wrapper types are not `Send`, and a
+    /// process should not multiply clients per model (the pre-registry
+    /// coordinator shared a single `Runtime` the same way).
+    static THREAD_RUNTIME: std::cell::RefCell<Option<std::rc::Rc<Runtime>>> =
+        const { std::cell::RefCell::new(None) };
+    /// Artifact-sha compile cache shared by every engine built on this
+    /// thread (re-registering an identical artifact skips parse + codegen).
+    static THREAD_CACHE: std::cell::RefCell<super::cache::CompileCache> =
+        std::cell::RefCell::new(super::cache::CompileCache::new());
+}
+
+fn thread_runtime() -> Result<std::rc::Rc<Runtime>> {
+    THREAD_RUNTIME.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some(rt) = slot.as_ref() {
+            return Ok(rt.clone());
+        }
+        let rt = std::rc::Rc::new(Runtime::new()?);
+        *slot = Some(rt.clone());
+        Ok(rt)
+    })
+}
+
+/// Whether a PJRT client can actually be created in this process — false
+/// when the vendored `xla` stub is linked or the real plugin is missing.
+/// Probed once with a throwaway client that is dropped immediately (NOT
+/// cached in the probing thread's `THREAD_RUNTIME` — engines built later
+/// on the executor thread own the one long-lived client).
+/// `EngineKind::Compiled.available()` reports this, which is how every
+/// caller degrades gracefully instead of erroring per use.
+pub fn runtime_available() -> bool {
+    static AVAILABLE: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *AVAILABLE.get_or_init(|| Runtime::new().is_ok())
+}
+
+/// The `compiled` entry of the engine registry: the thread's [`Runtime`]
+/// (PJRT client) paired with the [`CompiledModel`] it executes. Constructed
+/// only through `engine::build_engine` — NOT `Send`, like everything PJRT;
+/// the serving coordinator confines it to the executor thread.
+pub struct CompiledEngine {
+    rt: std::rc::Rc<Runtime>,
+    model: std::rc::Rc<CompiledModel>,
+}
+
+impl CompiledEngine {
+    /// Compile the model's artifacts (all manifest buckets, or the subset
+    /// in `opts.buckets`) on this thread's shared PJRT client. Full loads
+    /// go through the sha-keyed compile cache.
+    pub fn build(manifest: &Manifest, name: &str, opts: &EngineOptions) -> Result<CompiledEngine> {
+        let rt = thread_runtime()?;
+        let model = match &opts.buckets {
+            Some(buckets) => {
+                let entry = manifest.entry(name)?.clone();
+                std::rc::Rc::new(CompiledModel::load_buckets(&rt, manifest, &entry, buckets)?)
+            }
+            None => THREAD_CACHE.with(|c| c.borrow_mut().get_or_load(&rt, manifest, name))?,
+        };
+        Ok(CompiledEngine { rt, model })
+    }
+
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+}
+
+impl crate::engine::Engine for CompiledEngine {
+    fn name(&self) -> &str {
+        "compiled"
+    }
+
+    fn infer(&mut self, input: &Tensor) -> Result<Vec<Tensor>> {
+        self.model.execute(&self.rt, input)
+    }
+
+    fn supports(&self, spec: &ModelSpec) -> bool {
+        // Specialized code: this engine only runs the network it was
+        // compiled for.
+        spec.name == self.model.entry.name
+    }
+
+    fn batch_buckets(&self) -> Option<Vec<usize>> {
+        Some(self.model.batch_buckets())
+    }
+
+    fn compile_ms(&self) -> f64 {
+        self.model.total_compile_ms()
     }
 }

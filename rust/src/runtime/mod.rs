@@ -1,6 +1,13 @@
 //! PJRT runtime: loads AOT HLO-text artifacts and executes them as native
 //! code. `Runtime::compile_hlo` at model registration is this repo's analog
 //! of the paper's AsmJit codegen at model-load time.
+//!
+//! The artifact manifest (`artifact`) is plain JSON and always available;
+//! the PJRT-backed executor and compile cache are behind the `pjrt` cargo
+//! feature so plain builds (no XLA plugin) still compile and test — the
+//! engine registry reports `EngineKind::Compiled` unavailable instead.
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod cache;
+#[cfg(feature = "pjrt")]
 pub mod executor;

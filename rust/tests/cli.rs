@@ -4,8 +4,10 @@
 use std::path::Path;
 use std::process::Command;
 
+use compiled_nn::engine::EngineKind;
+
 fn bin() -> Command {
-    // target dir is shared with the test profile (both release)
+    // cargo builds the binary in the test run's own profile
     let exe = Path::new(env!("CARGO_BIN_EXE_compiled-nn"));
     Command::new(exe)
 }
@@ -66,10 +68,22 @@ fn infer_runs_each_engine() {
     if !have_artifacts() {
         return;
     }
-    for engine in ["naive", "optimized", "compiled"] {
-        let out = run_ok(&["infer", "--model", "c_htwk", "--engine", engine]);
-        assert!(out.contains("output[0] shape [1, 2]"), "{engine}: {out}");
+    // registry-driven: only exercise the kinds this build provides
+    for kind in EngineKind::all().iter().filter(|k| k.available()) {
+        let out = run_ok(&["infer", "--model", "c_htwk", "--engine", kind.as_str()]);
+        assert!(out.contains("output[0] shape [1, 2]"), "{kind}: {out}");
     }
+}
+
+#[test]
+fn infer_names_unknown_engines() {
+    let out = bin()
+        .args(["infer", "--model", "c_htwk", "--engine", "frob"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("frob") && err.contains("optimized"), "{err}");
 }
 
 #[test]

@@ -7,9 +7,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
+use compiled_nn::engine::{build_engine, Engine, EngineKind, EngineOptions};
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::runtime::artifact::Manifest;
-use compiled_nn::runtime::executor::{CompiledModel, Runtime};
 use compiled_nn::util::rng::SplitMix64;
 
 fn manifest() -> Option<Manifest> {
@@ -32,7 +32,11 @@ fn batched_results_match_direct_execution() {
     let Some(m) = manifest() else { return };
     let coord = Coordinator::start(
         m.clone(),
-        CoordinatorConfig { max_wait: Duration::from_micros(500), queue_depth: 256 },
+        CoordinatorConfig {
+            max_wait: Duration::from_micros(500),
+            queue_depth: 256,
+            ..CoordinatorConfig::default()
+        },
     )
     .unwrap();
     let client = coord.register("c_bh").unwrap();
@@ -40,15 +44,16 @@ fn batched_results_match_direct_execution() {
     let inputs = patches(20, 5);
     let rxs: Vec<_> = inputs.iter().map(|x| client.infer_async(x.clone()).unwrap()).collect();
     let served: Vec<Tensor> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+    assert_eq!(client.info.engine, EngineKind::preferred().as_str());
 
-    // direct, unbatched reference
-    let rt = Runtime::new().unwrap();
-    let model = CompiledModel::load(&rt, &m, "c_bh").unwrap();
+    // direct, unbatched reference — same engine kind the coordinator used
+    let mut direct_engine =
+        build_engine(EngineKind::preferred(), &m, "c_bh", &EngineOptions::default()).unwrap();
     for (x, got) in inputs.iter().zip(&served) {
         let mut shape = vec![1usize];
         shape.extend_from_slice(x.shape());
-        let direct = model
-            .execute(&rt, &Tensor::from_vec(&shape, x.data().to_vec()))
+        let direct = direct_engine
+            .infer(&Tensor::from_vec(&shape, x.data().to_vec()))
             .unwrap();
         let d = got.max_abs_diff(&direct[0]);
         assert!(d < 1e-5, "served vs direct: {d}");

@@ -2,19 +2,31 @@
 //! optimized interpreter (with exact math) must agree with the naive
 //! interpreter on random inputs, folding must agree with the Python pass's
 //! artifacts, and the capability flags must reproduce Table 1's `-` cells.
+//!
+//! All engines are constructed through the `EngineKind` registry
+//! (`build_engine_from_spec`), never by hand.
 
 use std::path::Path;
 
-use compiled_nn::compiler::exec::{CompileOptions, OptInterp};
+use compiled_nn::compiler::exec::CompileOptions;
 use compiled_nn::compiler::{fuse, memory};
+use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
 use compiled_nn::model::load::load_model;
-use compiled_nn::nn::interp::{Capabilities, NaiveInterp};
+use compiled_nn::nn::interp::Capabilities;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::util::propcheck::check;
 use compiled_nn::util::rng::SplitMix64;
 
 fn have_models() -> bool {
     Path::new("models/c_bh.json").exists()
+}
+
+/// Optimized-interpreter options with every approximation disabled.
+fn exact_opts(fold_bn: bool) -> EngineOptions {
+    EngineOptions {
+        compile: CompileOptions { fold_bn, approx: false, reuse_memory: true },
+        buckets: None,
+    }
 }
 
 #[test]
@@ -24,13 +36,11 @@ fn optimized_exact_equals_naive_on_random_inputs() {
     }
     for name in ["c_htwk", "c_bh", "segmenter", "detector"] {
         let spec = load_model(Path::new("models"), name).unwrap();
-        let naive = NaiveInterp::new(spec.clone()).unwrap();
+        let naive = std::cell::RefCell::new(
+            build_engine_from_spec(EngineKind::Naive, &spec, &EngineOptions::default()).unwrap(),
+        );
         let opt = std::cell::RefCell::new(
-            OptInterp::new(
-                &spec,
-                CompileOptions { fold_bn: true, approx: false, reuse_memory: true },
-            )
-            .unwrap(),
+            build_engine_from_spec(EngineKind::Optimized, &spec, &exact_opts(true)).unwrap(),
         );
         let item: usize = spec.input_shape.iter().product();
         check(
@@ -42,7 +52,7 @@ fn optimized_exact_equals_naive_on_random_inputs() {
                 Tensor::from_vec(&shape, r.uniform_vec(item))
             },
             |x| {
-                let a = naive.infer(x).map_err(|e| e.to_string())?;
+                let a = naive.borrow_mut().infer(x).map_err(|e| e.to_string())?;
                 let b = opt.borrow_mut().infer(x).map_err(|e| e.to_string())?;
                 let d = a[0].max_abs_diff(&b[0]);
                 if d < 1e-3 {
@@ -79,6 +89,11 @@ fn capability_flags_reproduce_table1_dashes() {
             "{name} legacy support"
         );
         assert!(Capabilities::FULL.supports(&spec), "{name} full support");
+        // Engine::supports must mirror the FULL capability set.
+        for kind in [EngineKind::Naive, EngineKind::Optimized] {
+            let e = build_engine_from_spec(kind, &spec, &EngineOptions::default()).unwrap();
+            assert!(e.supports(&spec), "{name}/{kind}");
+        }
     }
 }
 
@@ -93,16 +108,9 @@ fn rust_fold_agrees_with_python_folded_blob() {
     let folded = fuse::fold_batchnorm(&spec);
     assert_eq!(fuse::bn_count(&folded), 0);
     // run both through the optimized interpreter (exact) on one input
-    let mut a = OptInterp::new(
-        &spec,
-        CompileOptions { fold_bn: false, approx: false, reuse_memory: true },
-    )
-    .unwrap();
-    let mut b = OptInterp::new(
-        &folded,
-        CompileOptions { fold_bn: false, approx: false, reuse_memory: true },
-    )
-    .unwrap();
+    let mut a = build_engine_from_spec(EngineKind::Optimized, &spec, &exact_opts(false)).unwrap();
+    let mut b =
+        build_engine_from_spec(EngineKind::Optimized, &folded, &exact_opts(false)).unwrap();
     let mut rng = SplitMix64::new(4);
     let x = Tensor::from_vec(&[1, 96, 96, 3], rng.uniform_vec(96 * 96 * 3));
     let oa = a.infer(&x).unwrap();
@@ -134,14 +142,43 @@ fn memory_plan_savings_on_real_models() {
 }
 
 #[test]
+fn memory_reuse_visible_through_engine_trait() {
+    if !have_models() {
+        return;
+    }
+    // The Engine::memory_bytes hook exposes the §3.2 arena for ablations.
+    let spec = load_model(Path::new("models"), "c_bh").unwrap();
+    let mut with =
+        build_engine_from_spec(EngineKind::Optimized, &spec, &EngineOptions::default()).unwrap();
+    let mut without = build_engine_from_spec(
+        EngineKind::Optimized,
+        &spec,
+        &EngineOptions {
+            compile: CompileOptions { reuse_memory: false, ..CompileOptions::default() },
+            buckets: None,
+        },
+    )
+    .unwrap();
+    let mut rng = SplitMix64::new(6);
+    let x = Tensor::from_vec(&[1, 32, 32, 1], rng.uniform_vec(32 * 32));
+    with.infer(&x).unwrap();
+    without.infer(&x).unwrap();
+    let a = with.memory_bytes().unwrap();
+    let b = without.memory_bytes().unwrap();
+    assert!(a < b, "reuse arena {a} must undercut no-reuse {b}");
+}
+
+#[test]
 fn skip_connection_network_survives_planning() {
     if !have_models() {
         return;
     }
     // segmenter has a concat skip — lifetimes overlap across the decoder.
     let spec = load_model(Path::new("models"), "segmenter").unwrap();
-    let mut e = OptInterp::new(&spec, CompileOptions::default()).unwrap();
-    let naive = NaiveInterp::new(spec.clone()).unwrap();
+    let mut e =
+        build_engine_from_spec(EngineKind::Optimized, &spec, &EngineOptions::default()).unwrap();
+    let mut naive =
+        build_engine_from_spec(EngineKind::Naive, &spec, &EngineOptions::default()).unwrap();
     let mut rng = SplitMix64::new(12);
     let x = Tensor::from_vec(&[1, 80, 80, 3], rng.uniform_vec(80 * 80 * 3));
     let a = naive.infer(&x).unwrap();
@@ -157,12 +194,10 @@ fn residual_network_survives_planning() {
     // mobilenetv2 has residual adds — the in-place planner must not clobber
     // the saved branch.
     let spec = load_model(Path::new("models"), "mobilenetv2").unwrap();
-    let mut opt_exact = OptInterp::new(
-        &spec,
-        CompileOptions { fold_bn: true, approx: false, reuse_memory: true },
-    )
-    .unwrap();
-    let naive = NaiveInterp::new(spec.clone()).unwrap();
+    let mut opt_exact =
+        build_engine_from_spec(EngineKind::Optimized, &spec, &exact_opts(true)).unwrap();
+    let mut naive =
+        build_engine_from_spec(EngineKind::Naive, &spec, &EngineOptions::default()).unwrap();
     let mut rng = SplitMix64::new(13);
     let x = Tensor::from_vec(&[1, 96, 96, 3], rng.uniform_vec(96 * 96 * 3));
     let a = naive.infer(&x).unwrap();

@@ -6,9 +6,9 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
+use compiled_nn::engine::{build_engine, EngineKind, EngineOptions};
 use compiled_nn::model::load::load_model;
 use compiled_nn::runtime::artifact::Manifest;
-use compiled_nn::runtime::executor::{CompiledModel, Runtime};
 
 fn have_artifacts() -> bool {
     Path::new("artifacts/manifest.json").exists()
@@ -101,9 +101,14 @@ fn corrupted_hlo_text_fails_compile_not_process() {
     fs::write(dir.join(f), &text[..text.len() / 3]).unwrap();
     // other buckets don't exist in the scratch dir at all
     let scratch_manifest = Manifest::load(&dir, Path::new("models")).unwrap();
-    let rt = Runtime::new().unwrap();
-    let entry = scratch_manifest.entry("c_htwk").unwrap().clone();
-    let err = CompiledModel::load_buckets(&rt, &scratch_manifest, &entry, &[1]);
+    // Without the pjrt feature this errors as "engine unavailable"; with it
+    // the HLO parse fails — either way: a clean Err, never a crash.
+    let err = build_engine(
+        EngineKind::Compiled,
+        &scratch_manifest,
+        "c_htwk",
+        &EngineOptions::with_buckets(&[1]),
+    );
     assert!(err.is_err(), "corrupt HLO must not load");
 }
 

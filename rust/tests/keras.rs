@@ -4,9 +4,9 @@
 
 use std::path::Path;
 
+use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
 use compiled_nn::model::keras::load_keras_model;
 use compiled_nn::model::load::load_model;
-use compiled_nn::nn::interp::NaiveInterp;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::util::rng::SplitMix64;
 
@@ -54,8 +54,14 @@ fn keras_import_numerically_identical() {
         shape.extend_from_slice(&a.input_shape);
         let n: usize = shape.iter().product();
         let x = Tensor::from_vec(&shape, rng.uniform_vec(n));
-        let oa = NaiveInterp::new(a).unwrap().infer(&x).unwrap();
-        let ob = NaiveInterp::new(b).unwrap().infer(&x).unwrap();
+        let oa = build_engine_from_spec(EngineKind::Naive, &a, &EngineOptions::default())
+            .unwrap()
+            .infer(&x)
+            .unwrap();
+        let ob = build_engine_from_spec(EngineKind::Naive, &b, &EngineOptions::default())
+            .unwrap()
+            .infer(&x)
+            .unwrap();
         // identical weights + identical graph → bit-identical outputs
         assert_eq!(oa[0].data(), ob[0].data(), "{name}");
     }

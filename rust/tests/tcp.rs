@@ -7,9 +7,9 @@ use std::time::Duration;
 use compiled_nn::coordinator::config::ServingConfig;
 use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
 use compiled_nn::coordinator::tcp::{TcpClient, TcpServer};
+use compiled_nn::engine::{build_engine, Engine, EngineKind, EngineOptions};
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::runtime::artifact::Manifest;
-use compiled_nn::runtime::executor::{CompiledModel, Runtime};
 use compiled_nn::util::rng::SplitMix64;
 
 fn start_server(models: &[&str]) -> Option<(TcpServer, std::sync::Arc<Coordinator>)> {
@@ -20,7 +20,11 @@ fn start_server(models: &[&str]) -> Option<(TcpServer, std::sync::Arc<Coordinato
     let manifest = Manifest::load_default().unwrap();
     let coord = Coordinator::start(
         manifest,
-        CoordinatorConfig { max_wait: Duration::from_micros(300), queue_depth: 512 },
+        CoordinatorConfig {
+            max_wait: Duration::from_micros(300),
+            queue_depth: 512,
+            ..CoordinatorConfig::default()
+        },
     )
     .unwrap();
     for m in models {
@@ -41,10 +45,11 @@ fn wire_roundtrip_matches_direct_execution() {
     let via_wire = client.infer("c_bh", input.clone()).unwrap();
 
     let manifest = Manifest::load_default().unwrap();
-    let rt = Runtime::new().unwrap();
-    let model = CompiledModel::load(&rt, &manifest, "c_bh").unwrap();
-    let direct = model
-        .execute(&rt, &Tensor::from_vec(&[1, 32, 32, 1], input))
+    let mut engine =
+        build_engine(EngineKind::preferred(), &manifest, "c_bh", &EngineOptions::default())
+            .unwrap();
+    let direct = engine
+        .infer(&Tensor::from_vec(&[1, 32, 32, 1], input))
         .unwrap();
     // f32 → f64 JSON → f32 is exact, so the wire adds no error
     assert!(via_wire.max_abs_diff(&direct[0]) < 1e-6);

@@ -1,0 +1,149 @@
+//! API-compatible **stub** of the `xla` (PJRT) bindings used by the
+//! `compiled_nn` runtime. The offline build environment ships no XLA/PJRT
+//! plugin, so this crate lets `--features pjrt` builds type-check and run
+//! everywhere: [`PjRtClient::cpu`] fails with a descriptive error, which the
+//! engine registry surfaces as "compiled engine unavailable on this host".
+//!
+//! Deployments with a real PJRT plugin replace this crate via a Cargo
+//! `[patch]` entry pointing at actual bindings with the same surface:
+//! client construction, HLO-text parse, compile, device buffers, execute.
+//!
+//! Every handle type carries an [`Infallible`] field, so instances can never
+//! exist and the method bodies are statically unreachable — the stub can't
+//! silently fake results.
+
+use std::convert::Infallible;
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real bindings' `StdError` behavior.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: &str) -> Self {
+        Error { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// A PJRT device handle (never constructed by the stub).
+pub struct PjRtDevice {
+    _never: Infallible,
+}
+
+/// A PJRT client. [`PjRtClient::cpu`] always fails in the stub.
+pub struct PjRtClient {
+    _never: Infallible,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::new(
+            "PJRT plugin not available: this build links the offline `xla` \
+             stub; patch in real xla/PJRT bindings to run the compiled engine",
+        ))
+    }
+
+    pub fn platform_name(&self) -> String {
+        let _ = &self._never;
+        unreachable!("stub xla handles cannot exist")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        let _ = &self._never;
+        unreachable!("stub xla handles cannot exist")
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        let _ = &self._never;
+        unreachable!("stub xla handles cannot exist")
+    }
+}
+
+/// Parsed HLO module (never constructed by the stub).
+pub struct HloModuleProto {
+    _never: Infallible,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &Path) -> Result<Self> {
+        Err(Error::new("PJRT plugin not available: cannot parse HLO text in the stub"))
+    }
+}
+
+pub struct XlaComputation {
+    _never: Infallible,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> Self {
+        let _ = &proto._never;
+        unreachable!("stub xla handles cannot exist")
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _never: Infallible,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let _ = &self._never;
+        unreachable!("stub xla handles cannot exist")
+    }
+}
+
+pub struct PjRtBuffer {
+    _never: Infallible,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        let _ = &self._never;
+        unreachable!("stub xla handles cannot exist")
+    }
+}
+
+pub struct Literal {
+    _never: Infallible,
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        let _ = &self._never;
+        unreachable!("stub xla handles cannot exist")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        let _ = &self._never;
+        unreachable!("stub xla handles cannot exist")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_client_reports_missing_plugin() {
+        let err = PjRtClient::cpu().err().expect("stub must not create clients");
+        assert!(err.to_string().contains("PJRT plugin not available"), "{err}");
+    }
+}
