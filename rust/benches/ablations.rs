@@ -1,30 +1,90 @@
-//! **A-fusion / A-memory** — ablations of the paper's §3 design choices on
-//! the optimized interpreter, isolating each claim:
+//! **A-fusion / A-memory / A-matvec** — ablations of the paper's §3 design
+//! choices on the Program-backed optimized interpreter, isolating each
+//! claim:
 //!
 //!   §3.5 BN folding:   fold_bn on/off        (latency)
 //!   §3.4 approx act:   approx on/off          (latency; precision is in
 //!                                              `compiled-nn precision`)
 //!   §3.2 memory plan:  reuse_memory on/off    (arena bytes + latency)
+//!   §3.3 matvec:       rotated / broadcast / generic Dense lowering
+//!                      (latency on a square-dense MLP; runs without
+//!                      artifacts, so CI exercises it too)
 //!
 //! Each variant is built through the engine registry (`EngineKind::Optimized`
 //! with per-variant `EngineOptions`); the arena footprint is read through
-//! the `Engine::memory_bytes` hook.
+//! `Engine::memory_bytes` and the lowering decisions through
+//! `Engine::plan_summary`.
 //!
-//! Run on the nets that exercise each feature: c_bh (BN + sigmoid),
-//! segmenter (softmax over 80×80), mobilenetv2 (34 BNs, depthwise).
+//! Model ablations run on the nets that exercise each feature: c_bh
+//! (BN + sigmoid), segmenter (softmax over 80×80), mobilenetv2 (34 BNs,
+//! depthwise).
 
 use std::time::Duration;
 
 use compiled_nn::bench::{bench_budget, black_box};
-use compiled_nn::compiler::exec::CompileOptions;
+use compiled_nn::compiler::exec::{CompileOptions, DenseScheme};
 use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
+use compiled_nn::model::builder::square_mlp;
 use compiled_nn::model::load::load_model;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::runtime::artifact::Manifest;
 use compiled_nn::util::rng::{golden_seed, SplitMix64};
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load_default()?;
+    dense_scheme_ablation()?;
+    match Manifest::load_default() {
+        Ok(m) => model_ablations(&m),
+        Err(e) => {
+            eprintln!("(skipping model ablations: {e})");
+            Ok(())
+        }
+    }
+}
+
+/// §3.3: the same square MLP lowered three ways. The rotated-diagonal
+/// layout is the paper's Eq. 3 claim — it should at least match broadcast
+/// (Eq. 2) by keeping x resident and dropping the broadcast temporary.
+fn dense_scheme_ablation() -> anyhow::Result<()> {
+    let budget = Duration::from_secs(2);
+    let spec = square_mlp(7, 256, 3);
+    let mut rng = SplitMix64::new(11);
+    let x = Tensor::from_vec(&[1, 256], rng.uniform_vec(256));
+
+    println!("== square_mlp 256×256×4 — §3.3 Dense lowering schemes");
+    let mut baseline = 0.0;
+    for (label, scheme) in [
+        ("rotated (Eq. 3)", DenseScheme::Rotated),
+        ("broadcast (Eq. 2)", DenseScheme::Broadcast),
+        ("generic", DenseScheme::Generic),
+    ] {
+        let opts = EngineOptions {
+            compile: CompileOptions { dense: scheme, ..CompileOptions::default() },
+            buckets: None,
+        };
+        let mut e = build_engine_from_spec(EngineKind::Optimized, &spec, &opts)?;
+        let summary = e
+            .plan_summary()
+            .map(|s| format!("{} rotated / {} broadcast", s.rotated_dense, s.broadcast_dense))
+            .unwrap_or_default();
+        let r = bench_budget(&format!("square_mlp/{label}"), budget, 20, || {
+            black_box(e.infer(&x).unwrap());
+        });
+        if baseline == 0.0 {
+            baseline = r.mean_ms;
+        }
+        println!(
+            "{:<20} mean {:>9.4} ms  (×{:>5.2} vs rotated)  lowered: {summary}  [{} iters]",
+            label,
+            r.mean_ms,
+            r.mean_ms / baseline,
+            r.iters
+        );
+    }
+    println!();
+    Ok(())
+}
+
+fn model_ablations(manifest: &Manifest) -> anyhow::Result<()> {
     let budget = Duration::from_secs(2);
 
     for name in ["c_bh", "segmenter", "mobilenetv2"] {

@@ -5,7 +5,9 @@
 //!
 //! The parse/codegen/upload split needs the PJRT runtime internals, so the
 //! full report requires `--features pjrt`; a plain build still measures the
-//! interpreter-side plan cost (and says what it skipped).
+//! interpreter-side lowering cost — the full `Program::lower` pipeline
+//! (§3.5 fold → §3.2 plan → kernel monomorphization + weight transforms) —
+//! and says what it skipped.
 //!
 //! Paper anchor: 6.5 ms (C-HTWK) → 13 722 ms (VGG19) on the NAO — compile
 //! cost grows superlinearly with model size; the same shape must hold here.
@@ -13,7 +15,7 @@
 use std::collections::BTreeMap;
 
 use compiled_nn::bench::bench;
-use compiled_nn::compiler::exec::{compile, CompileOptions};
+use compiled_nn::compiler::program::{CompileOptions, Program};
 use compiled_nn::model::load::load_model;
 use compiled_nn::runtime::artifact::Manifest;
 
@@ -65,16 +67,16 @@ fn main() -> anyhow::Result<()> {
     };
     println!(
         "{:<14} {:>10} {:>12} {:>12} {:>12} {:>14} {:>14}",
-        "model", "params", "parse ms", "codegen ms", "upload ms", "total ms", "plan(rs) ms"
+        "model", "params", "parse ms", "codegen ms", "upload ms", "total ms", "lower(rs) ms"
     );
     for name in manifest.models.keys() {
         let entry = manifest.entry(name)?;
         let cols = pjrt_cols.as_ref().and_then(|m| m.get(name));
 
-        // Rust-side compile (fold + memory plan) for the optimized engine.
+        // Rust-side compile (fold + plan + lower) for the optimized engine.
         let spec = load_model(&manifest.models_dir, name)?;
-        let r = bench(&format!("{name}/plan"), 1, 5, || {
-            let _ = compile(&spec, CompileOptions::default()).unwrap();
+        let r = bench(&format!("{name}/lower"), 1, 5, || {
+            let _ = Program::lower(&spec, CompileOptions::default()).unwrap();
         });
 
         match cols {

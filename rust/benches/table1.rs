@@ -2,7 +2,7 @@
 //! all six evaluation networks across the engines:
 //!
 //!   compiled  — AOT HLO + PJRT (the CompiledNN analog; `pjrt` feature)
-//!   optimized — folded/fused/arena interpreter (TFLite / RoboDNN analog)
+//!   optimized — Program-backed interpreter (TFLite / RoboDNN analog)
 //!   naive     — exact scalar interpreter (tiny-dnn / frugally-deep analog)
 //!   legacy    — naive restricted to the RoboDNN/tiny-dnn layer set; `-`
 //!               where those libraries print `-` in the paper's Table 1
@@ -11,6 +11,12 @@
 //!
 //! Engines come from the `EngineKind` registry: kinds this build lacks
 //! (compiled without `--features pjrt`) render as `-` instead of failing.
+//! Without the artifact manifest (plain CI runners) the bench falls back to
+//! the built-in `tiny_cnn` so a result always exists.
+//!
+//! Besides the human-readable grid, every run writes **BENCH_table1.json**
+//! (per-engine ns/inference), which CI uploads as an artifact — the
+//! cross-PR perf trajectory record.
 //!
 //! Expected shape (paper): compiled wins big on the four small RoboCup nets;
 //! the gap narrows/inverts on MobileNetV2/VGG19. Absolute numbers differ
@@ -20,20 +26,42 @@ use std::time::Duration;
 
 use compiled_nn::bench::{bench_budget, black_box, print_grid};
 use compiled_nn::engine::{build_engine, build_engine_from_spec, Engine, EngineKind, EngineOptions};
+use compiled_nn::model::builder::tiny_cnn;
 use compiled_nn::model::load::load_model;
 use compiled_nn::nn::interp::Capabilities;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::util::json::Json;
 use compiled_nn::util::rng::{golden_seed, SplitMix64};
 
+/// One measured (model, engine) cell for the JSON report.
+struct Cell {
+    model: String,
+    engine: String,
+    ns: f64,
+}
+
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load_default()?;
+    match Manifest::load_default() {
+        Ok(manifest) => table1(&manifest),
+        Err(e) => {
+            eprintln!(
+                "no artifact manifest ({e}); benching the built-in tiny_cnn so the \
+                 perf trajectory still lands in BENCH_table1.json"
+            );
+            fallback_tiny()
+        }
+    }
+}
+
+fn table1(manifest: &Manifest) -> anyhow::Result<()> {
     let budget = Duration::from_secs(3);
     let names = ["c_htwk", "c_bh", "detector", "segmenter", "mobilenetv2", "vgg19"];
     // Table-1 column order — shared with main.rs cmd_table1
     let kinds = EngineKind::ALL;
 
     let mut rows = Vec::new();
+    let mut json_cells: Vec<Cell> = Vec::new();
     let mut total_compile_ms: Option<f64> = None;
     for name in names {
         let entry = manifest.entry(name)?;
@@ -55,7 +83,7 @@ fn main() -> anyhow::Result<()> {
             }
             let built = match kind {
                 EngineKind::Compiled => {
-                    build_engine(kind, &manifest, name, &EngineOptions::with_buckets(&[1]))
+                    build_engine(kind, manifest, name, &EngineOptions::with_buckets(&[1]))
                 }
                 _ => build_engine_from_spec(kind, &spec, &EngineOptions::default()),
             };
@@ -83,14 +111,25 @@ fn main() -> anyhow::Result<()> {
                 naive_ms = Some(r.mean_ms);
             }
             if kind == EngineKind::Compiled {
-                total_compile_ms =
-                    Some(total_compile_ms.unwrap_or(0.0) + engine.compile_ms());
+                total_compile_ms = Some(total_compile_ms.unwrap_or(0.0) + engine.compile_ms());
             }
+            json_cells.push(Cell {
+                model: name.to_string(),
+                engine: kind.as_str().to_string(),
+                ns: r.mean_ms * 1e6,
+            });
             cells.push(Some(r.mean_ms));
         }
 
         // `-` cells: engines lacking upsample/depthwise (RoboDNN, tiny-dnn)
         let legacy = if Capabilities::LEGACY.supports(&spec) { naive_ms } else { None };
+        if let Some(ms) = legacy {
+            json_cells.push(Cell {
+                model: name.to_string(),
+                engine: "legacy".to_string(),
+                ns: ms * 1e6,
+            });
+        }
         cells.push(legacy);
         rows.push((name.to_string(), cells));
     }
@@ -106,5 +145,61 @@ fn main() -> anyhow::Result<()> {
         &["compiled", "optimized", "naive", "legacy"],
         &rows,
     );
+    write_json(&json_cells, total_compile_ms)
+}
+
+/// Artifact-less path (plain CI runners): the built-in tiny_cnn through the
+/// always-available interpreter kinds.
+fn fallback_tiny() -> anyhow::Result<()> {
+    let budget = Duration::from_secs(2);
+    let spec = tiny_cnn(77);
+    let mut rng = SplitMix64::new(1);
+    let x = Tensor::from_vec(&[1, 8, 8, 3], rng.uniform_vec(8 * 8 * 3));
+
+    let mut json_cells: Vec<Cell> = Vec::new();
+    let mut row: Vec<Option<f64>> = Vec::new();
+    for kind in [EngineKind::Optimized, EngineKind::Naive] {
+        let mut engine = build_engine_from_spec(kind, &spec, &EngineOptions::default())?;
+        let r = bench_budget(&format!("tiny_cnn/{kind}"), budget, 10, || {
+            black_box(engine.infer(&x).unwrap());
+        });
+        println!("{}", r.row());
+        json_cells.push(Cell {
+            model: "tiny_cnn".to_string(),
+            engine: kind.as_str().to_string(),
+            ns: r.mean_ms * 1e6,
+        });
+        row.push(Some(r.mean_ms));
+    }
+    let rows = vec![("tiny_cnn".to_string(), row)];
+    print_grid(
+        "Table 1 analog (no artifacts) — tiny_cnn batch-1 latency [ms]",
+        &["optimized", "naive"],
+        &rows,
+    );
+    write_json(&json_cells, None)
+}
+
+/// Machine-readable results → BENCH_table1.json (uploaded as a CI artifact)
+/// so per-engine ns/inference is comparable across PRs. Serialized through
+/// the repo's own `util::json` writer — no hand-rolled escaping.
+fn write_json(cells: &[Cell], compile_ms: Option<f64>) -> anyhow::Result<()> {
+    use std::collections::BTreeMap;
+
+    let mut models: BTreeMap<String, Json> = BTreeMap::new();
+    for c in cells {
+        let entry =
+            models.entry(c.model.clone()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+        if let Json::Obj(m) = entry {
+            m.insert(c.engine.clone(), Json::Num(c.ns));
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("table1".to_string()));
+    root.insert("unit".to_string(), Json::Str("ns_per_inference".to_string()));
+    root.insert("models".to_string(), Json::Obj(models));
+    root.insert("compile_ms".to_string(), compile_ms.map_or(Json::Null, Json::Num));
+    std::fs::write("BENCH_table1.json", format!("{}\n", Json::Obj(root)))?;
+    println!("wrote BENCH_table1.json");
     Ok(())
 }

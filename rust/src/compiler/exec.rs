@@ -1,311 +1,56 @@
-//! `OptInterp` — the optimized interpreter engine: §3.5-folded graph, §3.2
-//! planned arena with in-place reuse, §3.4 fused activation epilogues and
-//! approximations. This is the repo's analog of the optimized interpreter
-//! libraries in Table 1 (TensorFlow Lite / RoboDNN) and the ablation vehicle
-//! for the paper's individual design choices.
-
-use std::collections::BTreeMap;
-use std::time::Instant;
+//! `OptInterp` — the optimized interpreter engine, rebuilt as a thin shell
+//! over the pre-resolved [`Program`] IR (see [`crate::compiler::program`]):
+//! lowering happens once at construction (§3.5 fold → §3.2 plan → kernel
+//! monomorphization), inference is `load input → Program::run → read
+//! outputs` over a pooled [`Arena`](crate::compiler::program::Arena) per
+//! batch size. This is the repo's analog of the optimized interpreter
+//! libraries in Table 1 (TensorFlow Lite / RoboDNN) and the ablation
+//! vehicle for the paper's individual design choices via [`CompileOptions`].
 
 use anyhow::{bail, Result};
 
-use crate::compiler::kernels as k;
-use crate::compiler::memory::{self, MemoryPlan};
-use crate::model::spec::{LayerOp, ModelSpec};
+use crate::compiler::program::{ArenaPool, PlanSummary, Program};
+pub use crate::compiler::program::{CompileOptions, DenseScheme};
+use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
 
-/// Which of the paper's optimizations to apply (each is an ablation axis).
-#[derive(Debug, Clone, Copy)]
-pub struct CompileOptions {
-    /// §3.5 batch-norm folding / fusion.
-    pub fold_bn: bool,
-    /// §3.4 fast activation approximations.
-    pub approx: bool,
-    /// §3.2 lifetime-based buffer reuse (false = one buffer per tensor).
-    pub reuse_memory: bool,
-}
-
-impl Default for CompileOptions {
-    fn default() -> Self {
-        Self { fold_bn: true, approx: true, reuse_memory: true }
-    }
-}
-
-/// The "compiled" execution plan: folded spec + buffer assignment + shapes.
-pub struct CompiledPlan {
-    pub spec: ModelSpec,
-    pub plan: MemoryPlan,
-    pub shapes: BTreeMap<String, Vec<usize>>,
-    pub opts: CompileOptions,
-    /// Graph-pass + planning time (the Rust-side share of "compilation
-    /// time"; the PJRT share is measured by the runtime).
-    pub compile_ms: f64,
-}
-
-pub fn compile(spec: &ModelSpec, opts: CompileOptions) -> Result<CompiledPlan> {
-    let t0 = Instant::now();
-    let spec = if opts.fold_bn {
-        crate::compiler::fuse::fold_batchnorm(spec)
-    } else {
-        spec.clone()
-    };
-    spec.validate()?;
-    let plan = memory::plan(&spec, opts.reuse_memory)?;
-    let shapes = spec.infer_shapes()?;
-    Ok(CompiledPlan {
-        spec,
-        plan,
-        shapes,
-        opts,
-        compile_ms: t0.elapsed().as_secs_f64() * 1e3,
-    })
-}
-
 pub struct OptInterp {
-    c: CompiledPlan,
-    arena: Vec<Vec<f32>>,
-    batch: usize,
+    program: Program,
+    pool: ArenaPool,
 }
 
 impl OptInterp {
     pub fn new(spec: &ModelSpec, opts: CompileOptions) -> Result<Self> {
-        Ok(Self { c: compile(spec, opts)?, arena: Vec::new(), batch: 0 })
+        Ok(Self { program: Program::lower(spec, opts)?, pool: ArenaPool::new() })
     }
 
-    pub fn from_plan(c: CompiledPlan) -> Self {
-        Self { c, arena: Vec::new(), batch: 0 }
+    /// Wrap an already-lowered program.
+    pub fn from_program(program: Program) -> Self {
+        Self { program, pool: ArenaPool::new() }
     }
 
-    pub fn plan(&self) -> &CompiledPlan {
-        &self.c
+    pub fn program(&self) -> &Program {
+        &self.program
     }
 
-    /// Arena bytes currently allocated (ablation metric).
+    /// Arena bytes currently pooled across batch sizes (ablation metric).
     pub fn arena_bytes(&self) -> usize {
-        self.arena.iter().map(|b| b.len() * 4).sum()
-    }
-
-    fn ensure_arena(&mut self, batch: usize) {
-        if batch == self.batch && !self.arena.is_empty() {
-            return;
-        }
-        self.arena = self
-            .c
-            .plan
-            .buffer_sizes
-            .iter()
-            .map(|s| vec![0.0f32; s * batch])
-            .collect();
-        self.batch = batch;
+        self.pool.bytes()
     }
 
     pub fn infer(&mut self, input: &Tensor) -> Result<Vec<Tensor>> {
         let ishape = input.shape();
-        if ishape.len() < 2 || ishape[1..] != self.c.spec.input_shape[..] {
+        if ishape.len() < 2 || ishape[1..] != self.program.input_shape()[..] {
             bail!(
                 "input shape {:?} does not match model {:?}",
                 ishape,
-                self.c.spec.input_shape
+                self.program.input_shape()
             );
         }
-        let batch = ishape[0];
-        self.ensure_arena(batch);
-        let in_buf = self.c.plan.buffer_of["input"];
-        self.arena[in_buf][..input.len()].copy_from_slice(input.data());
-
-        for li in 0..self.c.spec.layers.len() {
-            self.run_layer(li, batch)?;
-        }
-
-        let mut outs = Vec::new();
-        for o in &self.c.spec.outputs {
-            let buf = self.c.plan.buffer_of[o];
-            let mut shape = vec![batch];
-            shape.extend_from_slice(&self.c.shapes[o]);
-            let n: usize = shape.iter().product();
-            outs.push(Tensor::from_vec(&shape, self.arena[buf][..n].to_vec()));
-        }
-        Ok(outs)
-    }
-
-    fn run_layer(&mut self, li: usize, batch: usize) -> Result<()> {
-        let l = &self.c.spec.layers[li];
-        let spec = &self.c.spec;
-        let out_id = self.c.plan.buffer_of[&l.name];
-        let in_id = self.c.plan.buffer_of[&l.inputs[0]];
-        let in_shape = &self.c.shapes[&l.inputs[0]];
-        let out_shape = &self.c.shapes[&l.name];
-        let in_n: usize = batch * in_shape.iter().product::<usize>();
-        let out_n: usize = batch * out_shape.iter().product::<usize>();
-
-        let post = if l.post_scale {
-            Some((spec.weight(l, "post_scale_w")?, spec.weight(l, "post_shift_w")?))
-        } else {
-            None
-        };
-        let ep = k::Epilogue { act: l.activation, approx: self.c.opts.approx, post };
-
-        // In-place path: input and output share a buffer (§3.2).
-        if out_id == in_id {
-            // SAFETY-free path: operate on the single buffer directly.
-            let (scale_shift, c_last);
-            match &l.op {
-                LayerOp::BatchNorm { epsilon } => {
-                    let c = *in_shape.last().unwrap();
-                    let g = spec.weight(l, "gamma")?;
-                    let be = spec.weight(l, "beta")?;
-                    let m = spec.weight(l, "mean")?;
-                    let v = spec.weight(l, "var")?;
-                    let scale: Vec<f32> =
-                        (0..c).map(|i| g[i] / (v[i] + epsilon).sqrt()).collect();
-                    let shift: Vec<f32> = (0..c).map(|i| be[i] - m[i] * scale[i]).collect();
-                    scale_shift = Some((scale, shift));
-                    c_last = c;
-                }
-                _ => {
-                    scale_shift = None;
-                    c_last = *out_shape.last().unwrap();
-                }
-            }
-            let approx = self.c.opts.approx;
-            let second = match &l.op {
-                LayerOp::Add => {
-                    let b_id = self.c.plan.buffer_of[&l.inputs[1]];
-                    if b_id == out_id {
-                        bail!("add with both operands aliased is not plannable");
-                    }
-                    Some(self.arena[b_id][..out_n].to_vec())
-                }
-                _ => None,
-            };
-            let buf = &mut self.arena[out_id];
-            match &l.op {
-                LayerOp::BatchNorm { .. } => {
-                    let (scale, shift) = scale_shift.unwrap();
-                    for (i, v) in buf[..out_n].iter_mut().enumerate() {
-                        let ci = i % c_last;
-                        *v = *v * scale[ci] + shift[ci];
-                    }
-                }
-                LayerOp::Activation => {
-                    ep.apply_whole(&mut buf[..out_n], c_last);
-                }
-                LayerOp::Softmax => {
-                    for row in buf[..out_n].chunks_exact_mut(c_last) {
-                        if approx {
-                            crate::approx::fast_softmax_row(row);
-                        } else {
-                            exact_softmax_row(row);
-                        }
-                    }
-                }
-                LayerOp::Add => {
-                    let b = second.unwrap();
-                    for (v, &bv) in buf[..out_n].iter_mut().zip(&b) {
-                        *v += bv;
-                    }
-                }
-                LayerOp::Flatten => {} // pure reshape — data already in place
-                other => bail!("op {} cannot run in place", other.name()),
-            }
-            return Ok(());
-        }
-
-        // Out-of-place path: take the output buffer, read inputs from arena.
-        let mut outbuf = std::mem::take(&mut self.arena[out_id]);
-        let x = &self.arena[in_id][..in_n];
-        let dims4 = |s: &[usize]| (batch, s[0], s[1], s[2]);
-        match &l.op {
-            LayerOp::Conv2d { kh, kw, out_ch, stride, padding, use_bias } => {
-                let kernel = spec.weight(l, "kernel")?;
-                let bias = if *use_bias { Some(spec.weight(l, "bias")?) } else { None };
-                k::conv2d_into(
-                    x,
-                    dims4(in_shape),
-                    kernel,
-                    (*kh, *kw, *out_ch),
-                    bias,
-                    *stride,
-                    *padding,
-                    ep,
-                    &mut outbuf[..out_n],
-                );
-            }
-            LayerOp::DepthwiseConv2d { kh, kw, stride, padding, use_bias } => {
-                let kernel = spec.weight(l, "kernel")?;
-                let bias = if *use_bias { Some(spec.weight(l, "bias")?) } else { None };
-                k::depthwise_conv2d_into(
-                    x,
-                    dims4(in_shape),
-                    kernel,
-                    (*kh, *kw),
-                    bias,
-                    *stride,
-                    *padding,
-                    ep,
-                    &mut outbuf[..out_n],
-                );
-            }
-            LayerOp::Dense { units } => {
-                let kernel = spec.weight(l, "kernel")?;
-                let bias = spec.weight(l, "bias").ok();
-                k::dense_into(x, (batch, in_shape[0]), kernel, *units, bias, ep, &mut outbuf[..out_n]);
-            }
-            LayerOp::BatchNorm { epsilon } => {
-                let c = *in_shape.last().unwrap();
-                let g = spec.weight(l, "gamma")?;
-                let be = spec.weight(l, "beta")?;
-                let m = spec.weight(l, "mean")?;
-                let v = spec.weight(l, "var")?;
-                let scale: Vec<f32> = (0..c).map(|i| g[i] / (v[i] + epsilon).sqrt()).collect();
-                let shift: Vec<f32> = (0..c).map(|i| be[i] - m[i] * scale[i]).collect();
-                k::affine_into(x, c, &scale, &shift, &mut outbuf[..out_n]);
-            }
-            LayerOp::MaxPool { kh, kw, stride } => {
-                k::maxpool_into(x, dims4(in_shape), (*kh, *kw, *stride), &mut outbuf[..out_n]);
-            }
-            LayerOp::AvgPool { kh, kw, stride } => {
-                k::avgpool_into(x, dims4(in_shape), (*kh, *kw, *stride), &mut outbuf[..out_n]);
-            }
-            LayerOp::GlobalAvgPool => {
-                k::globalavgpool_into(x, dims4(in_shape), &mut outbuf[..out_n]);
-            }
-            LayerOp::Upsample { factor } => {
-                k::upsample_into(x, dims4(in_shape), *factor, &mut outbuf[..out_n]);
-            }
-            LayerOp::ZeroPad { pad } => {
-                k::zeropad_into(x, dims4(in_shape), *pad, &mut outbuf[..out_n]);
-            }
-            LayerOp::Activation => {
-                outbuf[..out_n].copy_from_slice(x);
-                ep.apply_whole(&mut outbuf[..out_n], *out_shape.last().unwrap());
-            }
-            LayerOp::Softmax => {
-                let c = *out_shape.last().unwrap();
-                k::softmax_into(x, c, self.c.opts.approx, &mut outbuf[..out_n]);
-            }
-            LayerOp::Add => {
-                let b_id = self.c.plan.buffer_of[&l.inputs[1]];
-                let b = &self.arena[b_id][..out_n];
-                k::add_into(x, b, &mut outbuf[..out_n]);
-            }
-            LayerOp::Concat => {
-                let b_id = self.c.plan.buffer_of[&l.inputs[1]];
-                let b_shape = &self.c.shapes[&l.inputs[1]];
-                let (ca, cb) = (*in_shape.last().unwrap(), *b_shape.last().unwrap());
-                let b_n: usize = batch * b_shape.iter().product::<usize>();
-                let b = &self.arena[b_id][..b_n];
-                k::concat_into(x, ca, b, cb, &mut outbuf[..out_n]);
-            }
-            LayerOp::Flatten => {
-                outbuf[..out_n].copy_from_slice(x);
-            }
-        }
-        // Standalone activation epilogue for ops that don't fuse internally
-        // is already handled per-op above (conv/dw/dense fuse; others carry
-        // Linear activation by construction, except `activation` layers).
-        self.arena[out_id] = outbuf;
-        Ok(())
+        let arena = self.pool.get(&self.program, ishape[0]);
+        self.program.load_input(arena, input);
+        self.program.run(arena);
+        Ok(self.program.read_outputs(arena))
     }
 }
 
@@ -323,47 +68,29 @@ impl crate::engine::Engine for OptInterp {
     }
 
     fn compile_ms(&self) -> f64 {
-        self.c.compile_ms
+        self.program.compile_ms()
     }
 
     fn memory_bytes(&self) -> Option<usize> {
         Some(self.arena_bytes())
     }
-}
 
-impl k::Epilogue<'_> {
-    /// Apply over a whole buffer, channel-cyclic for the post-affine.
-    pub fn apply_whole(&self, buf: &mut [f32], c: usize) {
-        if self.post.is_none() {
-            // activation only — channel-independent
-            let ep = k::Epilogue { act: self.act, approx: self.approx, post: None };
-            for chunk in buf.chunks_mut(c.max(1)) {
-                ep.apply(chunk);
-            }
-        } else {
-            for chunk in buf.chunks_mut(c) {
-                self.apply(chunk);
-            }
-        }
+    fn prepare(&mut self, batch: usize) {
+        // Pre-size AND pin the pooled arena for this batch bucket: pinned
+        // arenas are never evicted, so every inference at a served bucket
+        // size is allocation-free for the engine's lifetime.
+        self.pool.reserve(&self.program, batch);
     }
-}
 
-fn exact_softmax_row(row: &mut [f32]) {
-    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0;
-    for v in row.iter_mut() {
-        *v = (*v - m).exp();
-        sum += *v;
-    }
-    let inv = 1.0 / sum;
-    for v in row.iter_mut() {
-        *v *= inv;
+    fn plan_summary(&self) -> Option<&PlanSummary> {
+        Some(self.program.summary())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::Engine;
     use crate::model::builder::tiny_cnn;
     use crate::nn::interp::NaiveInterp;
     use crate::util::rng::SplitMix64;
@@ -379,7 +106,7 @@ mod tests {
         let naive = NaiveInterp::new(spec.clone()).unwrap();
         let mut opt = OptInterp::new(
             &spec,
-            CompileOptions { fold_bn: true, approx: false, reuse_memory: true },
+            CompileOptions { approx: false, ..CompileOptions::default() },
         )
         .unwrap();
         let x = input(2, 77);
@@ -387,6 +114,17 @@ mod tests {
         let b = opt.infer(&x).unwrap();
         let d = a[0].max_abs_diff(&b[0]);
         assert!(d < 1e-4, "diff {d}");
+    }
+
+    #[test]
+    fn bit_exact_options_match_naive_exactly() {
+        let spec = tiny_cnn(29);
+        let naive = NaiveInterp::new(spec.clone()).unwrap();
+        let mut opt = OptInterp::new(&spec, CompileOptions::bit_exact()).unwrap();
+        let x = input(2, 78);
+        let a = naive.infer(&x).unwrap();
+        let b = opt.infer(&x).unwrap();
+        assert_eq!(a[0].data(), b[0].data());
     }
 
     #[test]
@@ -408,15 +146,27 @@ mod tests {
         for fold in [false, true] {
             for approx in [false, true] {
                 for reuse in [false, true] {
-                    let mut e = OptInterp::new(
-                        &spec,
-                        CompileOptions { fold_bn: fold, approx, reuse_memory: reuse },
-                    )
-                    .unwrap();
-                    let out = e.infer(&x).unwrap();
-                    assert_eq!(out[0].shape(), &[1, 10]);
-                    let s: f32 = out[0].data().iter().sum();
-                    assert!((s - 1.0).abs() < 1e-3, "fold={fold} approx={approx}: {s}");
+                    for dense in
+                        [DenseScheme::Rotated, DenseScheme::Broadcast, DenseScheme::Generic]
+                    {
+                        let mut e = OptInterp::new(
+                            &spec,
+                            CompileOptions {
+                                fold_bn: fold,
+                                approx,
+                                reuse_memory: reuse,
+                                dense,
+                            },
+                        )
+                        .unwrap();
+                        let out = e.infer(&x).unwrap();
+                        assert_eq!(out[0].shape(), &[1, 10]);
+                        let s: f32 = out[0].data().iter().sum();
+                        assert!(
+                            (s - 1.0).abs() < 1e-3,
+                            "fold={fold} approx={approx} dense={dense:?}: {s}"
+                        );
+                    }
                 }
             }
         }
@@ -459,12 +209,42 @@ mod tests {
     }
 
     #[test]
-    fn batch_switch_reallocates() {
+    fn batch_switch_pools_arenas() {
         let spec = tiny_cnn(26);
         let mut e = OptInterp::new(&spec, CompileOptions::default()).unwrap();
         e.infer(&input(1, 1)).unwrap();
+        let one = e.arena_bytes();
         let out = e.infer(&input(4, 2)).unwrap();
         assert_eq!(out[0].shape(), &[4, 10]);
+        // both arenas stay pooled; flipping back allocates nothing new
+        assert!(e.arena_bytes() > one);
+        let both = e.arena_bytes();
+        e.infer(&input(1, 3)).unwrap();
+        e.infer(&input(4, 4)).unwrap();
+        assert_eq!(e.arena_bytes(), both);
+    }
+
+    #[test]
+    fn prepare_preallocates_buckets() {
+        let spec = tiny_cnn(28);
+        let mut e = OptInterp::new(&spec, CompileOptions::default()).unwrap();
+        Engine::prepare(&mut e, 1);
+        Engine::prepare(&mut e, 8);
+        let before = e.arena_bytes();
+        assert!(before > 0);
+        e.infer(&input(8, 3)).unwrap();
+        e.infer(&input(1, 4)).unwrap();
+        assert_eq!(e.arena_bytes(), before, "prepared buckets must not regrow");
+    }
+
+    #[test]
+    fn plan_summary_reports_lowering() {
+        let spec = tiny_cnn(30);
+        let e = OptInterp::new(&spec, CompileOptions::default()).unwrap();
+        let s = Engine::plan_summary(&e).expect("optimized engine lowers a program");
+        assert_eq!(s.folded_bn, 1, "{s}");
+        assert!(s.steps.len() >= 4, "{s}");
+        assert!(s.arena_item_elems > 0, "{s}");
     }
 
     #[test]

@@ -66,6 +66,19 @@ impl<'a> Epilogue<'a> {
             }
         }
     }
+
+    /// Apply over a whole buffer of row-major `c`-channel vectors (the
+    /// post-affine is channel-cyclic; a bare activation is elementwise and
+    /// takes one whole-slice pass).
+    pub fn apply_whole(&self, buf: &mut [f32], c: usize) {
+        if self.post.is_none() {
+            self.apply(buf);
+        } else {
+            for chunk in buf.chunks_mut(c) {
+                self.apply(chunk);
+            }
+        }
+    }
 }
 
 /// conv2d, NHWC × HWIO → NHWC, fused epilogue. Shapes are per the planner.
@@ -315,19 +328,36 @@ pub fn zeropad_into(
     }
 }
 
-/// Per-channel affine (BN at exec time or standalone §3.5 affine). Works
-/// in place (`x` may alias `out` — pass the same buffer).
+/// Per-channel affine (BN at exec time or standalone §3.5 affine).
 pub fn affine_into(x: &[f32], c: usize, scale: &[f32], shift: &[f32], out: &mut [f32]) {
-    for (i, (&v, o)) in x.iter().zip(out.iter_mut()).enumerate() {
+    out.copy_from_slice(x);
+    affine_rows(out, c, scale, shift);
+}
+
+/// Per-channel affine applied in place (the §3.2 aliased-buffer path).
+pub fn affine_rows(buf: &mut [f32], c: usize, scale: &[f32], shift: &[f32]) {
+    for (i, v) in buf.iter_mut().enumerate() {
         let ci = i % c;
-        *o = v * scale[ci] + shift[ci];
+        *v = *v * scale[ci] + shift[ci];
+    }
+}
+
+/// `dst += src`, elementwise (the in-place residual add).
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    for (v, &s) in dst.iter_mut().zip(src) {
+        *v += s;
     }
 }
 
 /// Softmax over trailing axis; `approx` uses the §3.4 two-pass fast-exp.
 pub fn softmax_into(x: &[f32], c: usize, approx_exp: bool, out: &mut [f32]) {
     out.copy_from_slice(x);
-    for row in out.chunks_exact_mut(c) {
+    softmax_rows(out, c, approx_exp);
+}
+
+/// In-place softmax over rows of length `c` (the §3.2 aliased-buffer path).
+pub fn softmax_rows(buf: &mut [f32], c: usize, approx_exp: bool) {
+    for row in buf.chunks_exact_mut(c) {
         if approx_exp {
             approx::fast_softmax_row(row);
         } else {

@@ -137,8 +137,7 @@ pub fn plan(spec: &ModelSpec, reuse: bool) -> Result<MemoryPlan> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::builder::{tiny_cnn, Builder};
-    use crate::model::spec::Activation;
+    use crate::model::builder::{random_chain, tiny_cnn};
     use crate::util::propcheck::check;
     use crate::util::rng::SplitMix64;
 
@@ -212,49 +211,5 @@ mod tests {
                 Ok(())
             },
         );
-    }
-
-    /// Random conv/pool/bn/act chains with occasional residual adds.
-    fn random_chain(r: &mut SplitMix64) -> ModelSpec {
-        let mut b = Builder::new("rand", &[8, 8, 2], r.next_u64());
-        let mut cur = "input".to_string();
-        let mut spatial = true;
-        let mut residual: Option<String> = None;
-        let n = 2 + r.below(6);
-        for _ in 0..n {
-            if !spatial {
-                break;
-            }
-            match r.below(5) {
-                0 => {
-                    let ch = b.shape_of(&cur)[2];
-                    cur = b.conv2d(&cur, ch, 3, 1, Activation::Relu);
-                    if residual.is_none() && r.below(2) == 0 {
-                        residual = Some(cur.clone());
-                    }
-                }
-                1 => cur = b.batchnorm(&cur),
-                2 => {
-                    if b.shape_of(&cur)[0] >= 4 {
-                        cur = b.maxpool(&cur, 2);
-                        residual = None; // shapes diverge
-                    }
-                }
-                3 => {
-                    let ch = 1 + r.below(4);
-                    cur = b.conv2d(&cur, ch, 1, 1, Activation::Linear);
-                    residual = None;
-                }
-                _ => {
-                    let f = b.flatten(&cur);
-                    let d = b.dense(&f, 4 + r.below(8), Activation::Relu);
-                    cur = d;
-                    spatial = false;
-                    residual = None;
-                }
-            }
-        }
-        let spec_out = cur.clone();
-        b.finish(&[&spec_out])
     }
 }

@@ -1,9 +1,12 @@
 //! The paper's compiler: §3.5 merging passes (`fuse`), §3.2 lifetime/memory
 //! planning (`memory`), §3.3 cost model (`cost`), fused allocation-free
-//! kernels (`kernels`) and the optimized-interpreter engine (`exec`).
+//! kernels (`kernels`), the pre-resolved execution IR (`program`: spec →
+//! fold → plan → lower → run) and the optimized-interpreter engine shell
+//! over it (`exec`).
 pub mod cost;
 pub mod exec;
 pub mod fuse;
 pub mod kernels;
 pub mod memory;
+pub mod program;
 pub mod silvermont;

@@ -1,0 +1,1413 @@
+//! The pre-resolved execution IR: lower a (folded) [`ModelSpec`] **once**
+//! into a [`Program`] — a flat, topologically ordered list of steps whose
+//! kernels are concrete structs with their weights pre-sliced out of the
+//! blob (pre-transformed where profitable: folded BN scale/shift vectors,
+//! §3.3 rotated-diagonal Dense layouts) and their input/output positions
+//! pre-resolved as offsets into a single [`Arena`] laid out from the §3.2
+//! [`memory::MemoryPlan`].
+//!
+//! This is the paper's core move applied to the interpreter tier: every
+//! statically known property of the network — shapes, buffer addresses,
+//! kernel variants, fused epilogues — is resolved at compile time, so
+//! [`Program::run`] contains **no name lookups, no allocation and no
+//! `LayerOp` dispatch** per inference (asserted by `tests/program_alloc.rs`
+//! and the [`PlanSummary`] counters). The pipeline is:
+//!
+//! ```text
+//! ModelSpec ──fuse::fold_batchnorm──► folded spec          (§3.5)
+//!           ──memory::plan──────────► MemoryPlan           (§3.2)
+//!           ──Program::lower────────► Vec<Step> + spans    (this module)
+//!           ──Program::run──────────► kernels over &mut Arena
+//! ```
+//!
+//! [`OptInterp`](crate::compiler::exec::OptInterp) is a thin engine shell
+//! over a `Program` plus an [`ArenaPool`] (one arena per batch size, so
+//! bucketed serving is allocation-free in steady state).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::ops::Range;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::compiler::fuse;
+use crate::compiler::kernels as k;
+use crate::compiler::memory;
+use crate::model::spec::{Activation, LayerOp, ModelSpec, Padding};
+use crate::nn::simd;
+use crate::nn::tensor::Tensor;
+
+/// How Dense layers are lowered (the §3.3 matrix–vector schemes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenseScheme {
+    /// Eq. 3: weights pre-rotated into stacked diagonals at lowering time;
+    /// eligible square layers use [`simd::matvec_rotated`].
+    Rotated,
+    /// Eq. 2: broadcast scheme ([`simd::matvec_broadcast`]) on eligible
+    /// square layers — the ablation baseline for the rotated layout.
+    Broadcast,
+    /// The generic fused kernel for every layer (also the bit-exact path:
+    /// it accumulates in the same order as the naive oracle).
+    Generic,
+}
+
+/// Which of the paper's optimizations the lowering applies (each is an
+/// ablation axis exercised by `benches/ablations.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CompileOptions {
+    /// §3.5 batch-norm folding / fusion.
+    pub fold_bn: bool,
+    /// §3.4 fast activation approximations.
+    pub approx: bool,
+    /// §3.2 lifetime-based buffer reuse (false = one buffer per tensor).
+    pub reuse_memory: bool,
+    /// §3.3 Dense matvec scheme selection.
+    pub dense: DenseScheme,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        Self { fold_bn: true, approx: true, reuse_memory: true, dense: DenseScheme::Rotated }
+    }
+}
+
+impl CompileOptions {
+    /// Options under which the lowered program is **bit-identical** to the
+    /// naive oracle: approximations off and every value-reassociating
+    /// transform disabled (folding a BN into a *linear* producer re-orders
+    /// multiplications; the matvec schemes re-order accumulation). The
+    /// §3.2 memory plan stays on — address assignment never changes math.
+    pub fn bit_exact() -> Self {
+        Self { fold_bn: false, approx: false, reuse_memory: true, dense: DenseScheme::Generic }
+    }
+}
+
+/// A tensor's pre-resolved position in the arena, in **per-item** element
+/// units: the owning buffer starts at `start * batch`, the tensor occupies
+/// the first `elems * batch` elements of it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    /// Per-item element offset of the owning planned buffer.
+    pub start: usize,
+    /// Per-item element count of the tensor.
+    pub elems: usize,
+}
+
+impl Span {
+    #[inline]
+    fn range(self, batch: usize) -> Range<usize> {
+        self.start * batch..(self.start + self.elems) * batch
+    }
+
+    /// Concrete element range for a batch size (tests/diagnostics).
+    pub fn arena_range(self, batch: usize) -> Range<usize> {
+        self.range(batch)
+    }
+}
+
+/// The single flat execution buffer a [`Program`] runs in. One allocation
+/// per (program, batch); reusable across inferences and poolable across
+/// batch buckets.
+#[derive(Debug)]
+pub struct Arena {
+    data: Vec<f32>,
+    batch: usize,
+    item_elems: usize,
+}
+
+impl Arena {
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Backing-store size in bytes (the §3.2 working-set metric).
+    pub fn bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// A pool of arenas keyed by batch size. Bucketed serving flips between
+/// batch sizes (1 vs 8 vs 32); pooling one arena per bucket makes the
+/// steady state allocation-free instead of reallocating on every flip.
+/// Serving buckets are **pinned** via [`ArenaPool::reserve`] and never
+/// evicted; ad-hoc batch sizes beyond that are bounded — the smallest
+/// unpinned arena is evicted instead of growing without bound.
+#[derive(Debug, Default)]
+pub struct ArenaPool {
+    arenas: Vec<Arena>,
+    /// Batch sizes pinned by [`ArenaPool::reserve`] (serving buckets).
+    pinned: Vec<usize>,
+}
+
+/// Most *unpinned* arenas pooled at once; beyond it the smallest is
+/// evicted (the big ones are the re-allocations worth avoiding).
+const MAX_UNPINNED_ARENAS: usize = 4;
+
+impl ArenaPool {
+    pub fn new() -> ArenaPool {
+        ArenaPool::default()
+    }
+
+    /// Pre-size and pin the arena for a serving bucket. Pinned arenas are
+    /// exempt from eviction, so bucketed serving stays allocation-free no
+    /// matter how many buckets are advertised.
+    pub fn reserve(&mut self, program: &Program, batch: usize) {
+        if !self.pinned.contains(&batch) {
+            self.pinned.push(batch);
+        }
+        let _ = self.get(program, batch);
+    }
+
+    /// The pooled arena for `batch`, created on first use.
+    pub fn get(&mut self, program: &Program, batch: usize) -> &mut Arena {
+        if let Some(i) = self
+            .arenas
+            .iter()
+            .position(|a| a.batch == batch && a.item_elems == program.item_elems)
+        {
+            return &mut self.arenas[i];
+        }
+        let unpinned =
+            self.arenas.iter().filter(|a| !self.pinned.contains(&a.batch)).count();
+        if unpinned >= MAX_UNPINNED_ARENAS && !self.pinned.contains(&batch) {
+            let evict = self
+                .arenas
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| !self.pinned.contains(&a.batch))
+                .min_by_key(|(_, a)| a.data.len())
+                .map(|(i, _)| i)
+                .expect("unpinned arena exists");
+            self.arenas.swap_remove(evict);
+        }
+        self.arenas.push(program.new_arena(batch));
+        self.arenas.last_mut().expect("arena just pushed")
+    }
+
+    /// Total pooled bytes across batch sizes.
+    pub fn bytes(&self) -> usize {
+        self.arenas.iter().map(Arena::bytes).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.arenas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arenas.is_empty()
+    }
+}
+
+/// A pre-monomorphized kernel: a concrete struct holding its weights,
+/// shapes and arena spans (and any scratch), resolved entirely at lowering
+/// time. `run` is the only per-inference code — it must not allocate, look
+/// anything up by name, or match on [`LayerOp`].
+trait Kernel: Send {
+    fn run(&mut self, batch: usize, data: &mut [f32]);
+}
+
+/// One executed step. The human/test-readable labels live in
+/// [`PlanSummary::steps`]; the step itself is just the kernel.
+struct Step {
+    kernel: Box<dyn Kernel>,
+}
+
+/// A model output: where it lives and its per-item shape.
+#[derive(Debug, Clone)]
+pub struct OutputSpec {
+    pub span: Span,
+    pub shape: Vec<usize>,
+}
+
+/// Machine-checkable record of what the lowering produced; exposed through
+/// [`Engine::plan_summary`](crate::engine::Engine::plan_summary) so tests
+/// and benches can assert on the lowered form instead of re-deriving it.
+#[derive(Debug, Clone, Default)]
+pub struct PlanSummary {
+    pub model: String,
+    /// One label per emitted step, in execution order.
+    pub steps: Vec<String>,
+    /// Planned buffer count (the §3.2 reuse metric).
+    pub buffers: usize,
+    /// Arena elements per batch item (Σ buffer capacities).
+    pub arena_item_elems: usize,
+    /// Steps writing over their (dead) input buffer.
+    pub in_place_steps: usize,
+    /// Steps elided entirely (in-place flattens are pure reshapes).
+    pub elided_steps: usize,
+    /// BN layers removed by §3.5 folding.
+    pub folded_bn: usize,
+    /// Dense layers lowered to the §3.3 rotated-diagonal matvec.
+    pub rotated_dense: usize,
+    /// Dense layers lowered to the §3.3 broadcast matvec.
+    pub broadcast_dense: usize,
+    /// Weight elements copied/transformed out of the blob into kernels.
+    pub weight_elems: usize,
+}
+
+impl fmt::Display for PlanSummary {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "{}: {} steps ({} in-place, {} elided), {} buffers × {} arena elems/item, \
+             {} BN folded, dense {} rotated / {} broadcast, {} weight elems",
+            self.model,
+            self.steps.len(),
+            self.in_place_steps,
+            self.elided_steps,
+            self.buffers,
+            self.arena_item_elems,
+            self.folded_bn,
+            self.rotated_dense,
+            self.broadcast_dense,
+            self.weight_elems
+        )?;
+        for s in &self.steps {
+            writeln!(f, "  {s}")?;
+        }
+        Ok(())
+    }
+}
+
+/// The compiled execution program: everything `run` needs, nothing it has
+/// to look up.
+pub struct Program {
+    steps: Vec<Step>,
+    outputs: Vec<OutputSpec>,
+    input: Span,
+    input_shape: Vec<usize>,
+    item_elems: usize,
+    /// tensor name → span, for tests/diagnostics (never read by `run`).
+    spans: BTreeMap<String, Span>,
+    summary: PlanSummary,
+    compile_ms: f64,
+}
+
+impl Program {
+    /// Lower `spec` through fold → plan → kernel selection. This is the
+    /// entire per-model compile cost of the optimized engine; everything
+    /// it resolves is resolved exactly once.
+    pub fn lower(spec: &ModelSpec, opts: CompileOptions) -> Result<Program> {
+        let t0 = Instant::now();
+        let bn_before = fuse::bn_count(spec);
+        let folded =
+            if opts.fold_bn { fuse::fold_batchnorm(spec) } else { spec.clone() };
+        folded.validate()?;
+        let plan = memory::plan(&folded, opts.reuse_memory)?;
+        let shapes = folded.infer_shapes()?;
+
+        // Arena layout: prefix-sum the planned buffer capacities so every
+        // buffer becomes a fixed per-item offset.
+        let mut offsets = Vec::with_capacity(plan.buffer_sizes.len());
+        let mut item_elems = 0usize;
+        for &s in &plan.buffer_sizes {
+            offsets.push(item_elems);
+            item_elems += s;
+        }
+        let span_of = |name: &str| -> Span {
+            Span {
+                start: offsets[plan.buffer_of[name]],
+                elems: shapes[name].iter().product(),
+            }
+        };
+
+        let mut summary = PlanSummary {
+            model: spec.name.clone(),
+            buffers: plan.buffer_sizes.len(),
+            arena_item_elems: item_elems,
+            folded_bn: bn_before - fuse::bn_count(&folded),
+            ..PlanSummary::default()
+        };
+        let mut spans = BTreeMap::new();
+        spans.insert("input".to_string(), span_of("input"));
+        let mut steps: Vec<Step> = Vec::with_capacity(folded.layers.len());
+
+        for l in &folded.layers {
+            let src = span_of(&l.inputs[0]);
+            let dst = span_of(&l.name);
+            spans.insert(l.name.clone(), dst);
+            let in_shape = &shapes[&l.inputs[0]];
+            let out_shape = &shapes[&l.name];
+            let in_place = plan.buffer_of[&l.name] == plan.buffer_of[&l.inputs[0]];
+            let hwc = |s: &[usize]| (s[0], s[1], s[2]);
+            let post = if l.post_scale {
+                Some((
+                    folded.weight(l, "post_scale_w")?.to_vec(),
+                    folded.weight(l, "post_shift_w")?.to_vec(),
+                ))
+            } else {
+                None
+            };
+            if let Some((s, h)) = &post {
+                summary.weight_elems += s.len() + h.len();
+            }
+            let ep = EpSpec { act: l.activation, approx: opts.approx, post };
+
+            let (kernel, kind): (Box<dyn Kernel>, String) = match &l.op {
+                LayerOp::Conv2d { kh, kw, out_ch, stride, padding, use_bias } => {
+                    if in_place {
+                        bail!("conv2d `{}` cannot run in place", l.name);
+                    }
+                    let kernel = folded.weight(l, "kernel")?.to_vec();
+                    let bias = if *use_bias {
+                        Some(folded.weight(l, "bias")?.to_vec())
+                    } else {
+                        None
+                    };
+                    summary.weight_elems +=
+                        kernel.len() + bias.as_ref().map_or(0, Vec::len);
+                    let kind = format!(
+                        "conv2d[{kh}x{kw}x{}→{out_ch} s{stride}]{}",
+                        in_shape[2],
+                        ep.label()
+                    );
+                    (
+                        Box::new(Conv2dK {
+                            src,
+                            dst,
+                            in_hwc: hwc(in_shape),
+                            khw_oc: (*kh, *kw, *out_ch),
+                            stride: *stride,
+                            padding: *padding,
+                            kernel,
+                            bias,
+                            ep,
+                        }),
+                        kind,
+                    )
+                }
+                LayerOp::DepthwiseConv2d { kh, kw, stride, padding, use_bias } => {
+                    if in_place {
+                        bail!("depthwise_conv2d `{}` cannot run in place", l.name);
+                    }
+                    let kernel = folded.weight(l, "kernel")?.to_vec();
+                    let bias = if *use_bias {
+                        Some(folded.weight(l, "bias")?.to_vec())
+                    } else {
+                        None
+                    };
+                    summary.weight_elems +=
+                        kernel.len() + bias.as_ref().map_or(0, Vec::len);
+                    let kind =
+                        format!("dwconv[{kh}x{kw} s{stride}]{}", ep.label());
+                    (
+                        Box::new(DwConv2dK {
+                            src,
+                            dst,
+                            in_hwc: hwc(in_shape),
+                            khw: (*kh, *kw),
+                            stride: *stride,
+                            padding: *padding,
+                            kernel,
+                            bias,
+                            ep,
+                        }),
+                        kind,
+                    )
+                }
+                LayerOp::Dense { units } => {
+                    if in_place {
+                        bail!("dense `{}` cannot run in place", l.name);
+                    }
+                    let in_dim = in_shape[0];
+                    let kernel = folded.weight(l, "kernel")?.to_vec();
+                    let bias = folded.weight(l, "bias").ok().map(<[f32]>::to_vec);
+                    summary.weight_elems +=
+                        kernel.len() + bias.as_ref().map_or(0, Vec::len);
+                    // §3.3 scheme eligibility: square and 4-lane divisible;
+                    // the rotated layout additionally needs the stack-
+                    // resident doubled-x window (so `run` never allocates).
+                    let square = in_dim == *units && *units % 4 == 0;
+                    let rotatable = square && *units <= simd::ROTATED_STACK_MAX;
+                    match (opts.dense, square) {
+                        (DenseScheme::Rotated, true) if rotatable => {
+                            let diag =
+                                simd::rotate_diagonals(&transpose(&kernel, in_dim), in_dim);
+                            summary.rotated_dense += 1;
+                            let kind = format!("dense[rotated n={in_dim}]{}", ep.label());
+                            (
+                                Box::new(DenseRotatedK {
+                                    src,
+                                    dst,
+                                    n: in_dim,
+                                    diag,
+                                    bias,
+                                    scratch: vec![0.0; 2 * in_dim],
+                                    ep,
+                                }),
+                                kind,
+                            )
+                        }
+                        (DenseScheme::Broadcast, true) => {
+                            let w = transpose(&kernel, in_dim);
+                            summary.broadcast_dense += 1;
+                            let kind = format!("dense[broadcast n={in_dim}]{}", ep.label());
+                            (
+                                Box::new(DenseBroadcastK {
+                                    src,
+                                    dst,
+                                    n: in_dim,
+                                    w,
+                                    bias,
+                                    ep,
+                                }),
+                                kind,
+                            )
+                        }
+                        _ => {
+                            let kind = format!("dense[{in_dim}→{units}]{}", ep.label());
+                            (
+                                Box::new(DenseK {
+                                    src,
+                                    dst,
+                                    in_dim,
+                                    units: *units,
+                                    kernel,
+                                    bias,
+                                    ep,
+                                }),
+                                kind,
+                            )
+                        }
+                    }
+                }
+                LayerOp::BatchNorm { epsilon } => {
+                    // Fold the four BN vectors into scale/shift once, with
+                    // the exact expressions the naive oracle evaluates.
+                    let c = *in_shape.last().expect("BN input has a channel axis");
+                    let g = folded.weight(l, "gamma")?;
+                    let be = folded.weight(l, "beta")?;
+                    let m = folded.weight(l, "mean")?;
+                    let v = folded.weight(l, "var")?;
+                    let scale: Vec<f32> =
+                        (0..c).map(|i| g[i] / (v[i] + epsilon).sqrt()).collect();
+                    let shift: Vec<f32> =
+                        (0..c).map(|i| be[i] - m[i] * scale[i]).collect();
+                    summary.weight_elems += 2 * c;
+                    let kind = format!("batchnorm[c={c}]");
+                    if in_place {
+                        (Box::new(AffineInPlaceK { dst, c, scale, shift }), kind)
+                    } else {
+                        (Box::new(AffineK { src, dst, c, scale, shift }), kind)
+                    }
+                }
+                LayerOp::MaxPool { kh, kw, stride } => (
+                    Box::new(MaxPoolK {
+                        src,
+                        dst,
+                        in_hwc: hwc(in_shape),
+                        khw_stride: (*kh, *kw, *stride),
+                    }),
+                    format!("maxpool[{kh}x{kw} s{stride}]"),
+                ),
+                LayerOp::AvgPool { kh, kw, stride } => (
+                    Box::new(AvgPoolK {
+                        src,
+                        dst,
+                        in_hwc: hwc(in_shape),
+                        khw_stride: (*kh, *kw, *stride),
+                    }),
+                    format!("avgpool[{kh}x{kw} s{stride}]"),
+                ),
+                LayerOp::GlobalAvgPool => (
+                    Box::new(GlobalAvgPoolK { src, dst, in_hwc: hwc(in_shape) }),
+                    "globalavgpool".to_string(),
+                ),
+                LayerOp::Upsample { factor } => (
+                    Box::new(UpsampleK {
+                        src,
+                        dst,
+                        in_hwc: hwc(in_shape),
+                        factor: *factor,
+                    }),
+                    format!("upsample[x{factor}]"),
+                ),
+                LayerOp::ZeroPad { pad } => (
+                    Box::new(ZeroPadK { src, dst, in_hwc: hwc(in_shape), pad: *pad }),
+                    format!("zeropad{pad:?}"),
+                ),
+                LayerOp::Activation => {
+                    let c = *out_shape.last().expect("activation output non-scalar");
+                    let kind = format!("activation[{}]", l.activation.name());
+                    if in_place {
+                        (Box::new(ActInPlaceK { dst, c, ep }), kind)
+                    } else {
+                        (Box::new(ActK { src, dst, c, ep }), kind)
+                    }
+                }
+                LayerOp::Softmax => {
+                    let c = *out_shape.last().expect("softmax output non-scalar");
+                    let kind = if opts.approx {
+                        format!("softmax[c={c} fast-exp]")
+                    } else {
+                        format!("softmax[c={c}]")
+                    };
+                    if in_place {
+                        (
+                            Box::new(SoftmaxInPlaceK { dst, c, approx: opts.approx }),
+                            kind,
+                        )
+                    } else {
+                        (
+                            Box::new(SoftmaxK { src, dst, c, approx: opts.approx }),
+                            kind,
+                        )
+                    }
+                }
+                LayerOp::Add => {
+                    let other = span_of(&l.inputs[1]);
+                    if in_place {
+                        if plan.buffer_of[&l.inputs[1]] == plan.buffer_of[&l.name] {
+                            bail!(
+                                "add `{}` with both operands aliased is not plannable",
+                                l.name
+                            );
+                        }
+                        (Box::new(AddInPlaceK { dst, other }), "add".to_string())
+                    } else {
+                        if plan.buffer_of[&l.inputs[1]] == plan.buffer_of[&l.name] {
+                            bail!(
+                                "add `{}` output aliases its second operand",
+                                l.name
+                            );
+                        }
+                        (Box::new(AddK { a: src, b: other, dst }), "add".to_string())
+                    }
+                }
+                LayerOp::Concat => {
+                    if in_place {
+                        bail!("concat `{}` cannot run in place", l.name);
+                    }
+                    let other = span_of(&l.inputs[1]);
+                    if plan.buffer_of[&l.inputs[1]] == plan.buffer_of[&l.name] {
+                        bail!("concat `{}` output aliases its second operand", l.name);
+                    }
+                    let ca = *in_shape.last().expect("concat input has channels");
+                    let cb = *shapes[&l.inputs[1]]
+                        .last()
+                        .expect("concat input has channels");
+                    (
+                        Box::new(ConcatK { a: src, b: other, dst, ca, cb }),
+                        format!("concat[{ca}+{cb}]"),
+                    )
+                }
+                LayerOp::Flatten => {
+                    if in_place {
+                        // Pure reshape over the same buffer: no step at all.
+                        summary.elided_steps += 1;
+                        summary
+                            .steps
+                            .push(format!("{}: flatten (elided, in-place reshape)", l.name));
+                        continue;
+                    }
+                    (Box::new(CopyK { src, dst }), "flatten[copy]".to_string())
+                }
+            };
+
+            if in_place {
+                summary.in_place_steps += 1;
+                summary.steps.push(format!("{}: {kind} (in-place)", l.name));
+            } else {
+                summary.steps.push(format!("{}: {kind}", l.name));
+            }
+            steps.push(Step { kernel });
+        }
+
+        let outputs = folded
+            .outputs
+            .iter()
+            .map(|o| OutputSpec { span: span_of(o), shape: shapes[o].clone() })
+            .collect();
+
+        Ok(Program {
+            steps,
+            outputs,
+            input: span_of("input"),
+            input_shape: folded.input_shape.clone(),
+            item_elems,
+            spans,
+            summary,
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Allocate a fresh arena sized for `batch` items.
+    pub fn new_arena(&self, batch: usize) -> Arena {
+        Arena { data: vec![0.0; self.item_elems * batch], batch, item_elems: self.item_elems }
+    }
+
+    /// Copy a `[B, ...item_shape]` input into its pre-resolved span.
+    pub fn load_input(&self, arena: &mut Arena, input: &Tensor) {
+        let r = self.input.range(arena.batch);
+        assert_eq!(input.len(), r.len(), "input does not fill its arena span");
+        arena.data[r].copy_from_slice(input.data());
+    }
+
+    /// Execute every step. The hot path: no allocation, no lookups, no
+    /// per-layer dispatch beyond one virtual call per step. (`&mut self`
+    /// because kernels may carry owned scratch, e.g. the rotated-dense
+    /// doubled-x window.)
+    pub fn run(&mut self, arena: &mut Arena) {
+        debug_assert_eq!(arena.item_elems, self.item_elems, "arena from another program");
+        let batch = arena.batch;
+        let data = arena.data.as_mut_slice();
+        for step in &mut self.steps {
+            step.kernel.run(batch, data);
+        }
+    }
+
+    /// Copy the model outputs out of the arena as owned tensors (the only
+    /// allocating part of inference, at the engine API boundary).
+    pub fn read_outputs(&self, arena: &Arena) -> Vec<Tensor> {
+        self.outputs
+            .iter()
+            .map(|o| {
+                let mut shape = vec![arena.batch];
+                shape.extend_from_slice(&o.shape);
+                Tensor::from_slice(&shape, &arena.data[o.span.range(arena.batch)])
+            })
+            .collect()
+    }
+
+    /// Per-item HWC (or flat) input shape.
+    pub fn input_shape(&self) -> &[usize] {
+        &self.input_shape
+    }
+
+    /// Arena elements per batch item (Σ planned buffer capacities).
+    pub fn item_elems(&self) -> usize {
+        self.item_elems
+    }
+
+    /// What was lowered, as counters + step labels.
+    pub fn summary(&self) -> &PlanSummary {
+        &self.summary
+    }
+
+    /// Lowering wall time in ms (the Rust-side share of "compile time").
+    pub fn compile_ms(&self) -> f64 {
+        self.compile_ms
+    }
+
+    /// Tensor name → arena span (tests/diagnostics only).
+    pub fn spans(&self) -> &BTreeMap<String, Span> {
+        &self.spans
+    }
+}
+
+/// Transpose a `[n, out]`-layout Dense kernel (`y[o] = Σ_i x[i] K[i][o]`)
+/// into the row-major `y = W x` orientation the §3.3 matvec kernels use
+/// (`W[i][j] = K[j][i]`). Square only; done once at lowering.
+fn transpose(kernel: &[f32], n: usize) -> Vec<f32> {
+    debug_assert_eq!(kernel.len(), n * n);
+    let mut w = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            w[i * n + j] = kernel[j * n + i];
+        }
+    }
+    w
+}
+
+/// Owned fused-epilogue spec (activation + §3.5 post-affine); borrowed into
+/// a [`k::Epilogue`] per kernel invocation — no allocation, no lookup.
+#[derive(Clone)]
+struct EpSpec {
+    act: Activation,
+    approx: bool,
+    post: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl EpSpec {
+    #[inline]
+    fn epilogue(&self) -> k::Epilogue<'_> {
+        k::Epilogue {
+            act: self.act,
+            approx: self.approx,
+            post: self.post.as_ref().map(|(s, h)| (s.as_slice(), h.as_slice())),
+        }
+    }
+
+    fn label(&self) -> String {
+        let mut s = String::new();
+        if self.act != Activation::Linear {
+            s.push('+');
+            s.push_str(self.act.name());
+            if self.approx && matches!(self.act, Activation::Sigmoid | Activation::Tanh) {
+                s.push('~');
+            }
+        }
+        if self.post.is_some() {
+            s.push_str("+affine");
+        }
+        s
+    }
+}
+
+// ------------------------------------------------------------------ borrows
+
+/// Disjoint (src, dst) borrow of two arena ranges. Lowering guarantees
+/// out-of-place steps read and write different planned buffers.
+fn src_dst(data: &mut [f32], src: Range<usize>, dst: Range<usize>) -> (&[f32], &mut [f32]) {
+    debug_assert!(src.end <= dst.start || dst.end <= src.start, "overlapping spans");
+    if src.start < dst.start {
+        let (lo, hi) = data.split_at_mut(dst.start);
+        let dlen = dst.end - dst.start;
+        (&lo[src.start..src.end], &mut hi[..dlen])
+    } else {
+        let (lo, hi) = data.split_at_mut(src.start);
+        let slen = src.end - src.start;
+        (&hi[..slen], &mut lo[dst.start..dst.end])
+    }
+}
+
+/// Disjoint (a, b, dst) borrow for binary steps. `a == b` (the same tensor
+/// used twice, e.g. `add(x, x)`) is handled by returning the same slice.
+fn srcs_dst(
+    data: &mut [f32],
+    a: Range<usize>,
+    b: Range<usize>,
+    dst: Range<usize>,
+) -> (&[f32], &[f32], &mut [f32]) {
+    if a == b {
+        let (x, out) = src_dst(data, a, dst);
+        return (x, x, out);
+    }
+    // Three pairwise-disjoint ranges in arbitrary order: peel slices off in
+    // address order, then hand each range its piece.
+    let mut tagged = [(a, 0u8), (b, 1), (dst, 2)];
+    tagged.sort_by_key(|(r, _)| r.start);
+    let (p0, rest) = data.split_at_mut(tagged[1].0.start);
+    let (p1, p2) = rest.split_at_mut(tagged[2].0.start - tagged[1].0.start);
+    let p0 = &mut p0[tagged[0].0.start..tagged[0].0.end];
+    let p1 = &mut p1[..tagged[1].0.end - tagged[1].0.start];
+    let p2 = &mut p2[..tagged[2].0.end - tagged[2].0.start];
+    let mut srcs: [&[f32]; 2] = [&[], &[]];
+    let mut out: Option<&mut [f32]> = None;
+    for (piece, tag) in [(p0, tagged[0].1), (p1, tagged[1].1), (p2, tagged[2].1)] {
+        match tag {
+            0 => srcs[0] = piece,
+            1 => srcs[1] = piece,
+            _ => out = Some(piece),
+        }
+    }
+    (srcs[0], srcs[1], out.expect("dst range present"))
+}
+
+// ------------------------------------------------------------------ kernels
+
+struct Conv2dK {
+    src: Span,
+    dst: Span,
+    in_hwc: (usize, usize, usize),
+    khw_oc: (usize, usize, usize),
+    stride: usize,
+    padding: Padding,
+    kernel: Vec<f32>,
+    bias: Option<Vec<f32>>,
+    ep: EpSpec,
+}
+
+impl Kernel for Conv2dK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        let (h, w, c) = self.in_hwc;
+        k::conv2d_into(
+            x,
+            (batch, h, w, c),
+            &self.kernel,
+            self.khw_oc,
+            self.bias.as_deref(),
+            self.stride,
+            self.padding,
+            self.ep.epilogue(),
+            out,
+        );
+    }
+}
+
+struct DwConv2dK {
+    src: Span,
+    dst: Span,
+    in_hwc: (usize, usize, usize),
+    khw: (usize, usize),
+    stride: usize,
+    padding: Padding,
+    kernel: Vec<f32>,
+    bias: Option<Vec<f32>>,
+    ep: EpSpec,
+}
+
+impl Kernel for DwConv2dK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        let (h, w, c) = self.in_hwc;
+        k::depthwise_conv2d_into(
+            x,
+            (batch, h, w, c),
+            &self.kernel,
+            self.khw,
+            self.bias.as_deref(),
+            self.stride,
+            self.padding,
+            self.ep.epilogue(),
+            out,
+        );
+    }
+}
+
+struct DenseK {
+    src: Span,
+    dst: Span,
+    in_dim: usize,
+    units: usize,
+    kernel: Vec<f32>,
+    bias: Option<Vec<f32>>,
+    ep: EpSpec,
+}
+
+impl Kernel for DenseK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        k::dense_into(
+            x,
+            (batch, self.in_dim),
+            &self.kernel,
+            self.units,
+            self.bias.as_deref(),
+            self.ep.epilogue(),
+            out,
+        );
+    }
+}
+
+/// §3.3 Eq. 3: pre-rotated diagonals, x walked as contiguous rotations.
+/// The doubled-x window is owned scratch sized at lowering, so each row is
+/// two copies + the FMA loop — no zero-fill, no allocation.
+struct DenseRotatedK {
+    src: Span,
+    dst: Span,
+    n: usize,
+    diag: Vec<f32>,
+    bias: Option<Vec<f32>>,
+    scratch: Vec<f32>,
+    ep: EpSpec,
+}
+
+impl Kernel for DenseRotatedK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        let n = self.n;
+        let ep = self.ep.epilogue();
+        for row in 0..batch {
+            let xrow = &x[row * n..(row + 1) * n];
+            let dst = &mut out[row * n..(row + 1) * n];
+            simd::matvec_rotated_with(&self.diag, xrow, &mut self.scratch, dst);
+            if let Some(bias) = &self.bias {
+                for (v, &b) in dst.iter_mut().zip(bias) {
+                    *v += b;
+                }
+            }
+            ep.apply(dst);
+        }
+    }
+}
+
+/// §3.3 Eq. 2: broadcast scheme (the ablation baseline for the rotation).
+struct DenseBroadcastK {
+    src: Span,
+    dst: Span,
+    n: usize,
+    w: Vec<f32>,
+    bias: Option<Vec<f32>>,
+    ep: EpSpec,
+}
+
+impl Kernel for DenseBroadcastK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        let n = self.n;
+        let ep = self.ep.epilogue();
+        for row in 0..batch {
+            let xrow = &x[row * n..(row + 1) * n];
+            let dst = &mut out[row * n..(row + 1) * n];
+            simd::matvec_broadcast(&self.w, xrow, dst);
+            if let Some(bias) = &self.bias {
+                for (v, &b) in dst.iter_mut().zip(bias) {
+                    *v += b;
+                }
+            }
+            ep.apply(dst);
+        }
+    }
+}
+
+/// BN lowered to its per-channel affine, scale/shift precomputed.
+struct AffineK {
+    src: Span,
+    dst: Span,
+    c: usize,
+    scale: Vec<f32>,
+    shift: Vec<f32>,
+}
+
+impl Kernel for AffineK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        k::affine_into(x, self.c, &self.scale, &self.shift, out);
+    }
+}
+
+struct AffineInPlaceK {
+    dst: Span,
+    c: usize,
+    scale: Vec<f32>,
+    shift: Vec<f32>,
+}
+
+impl Kernel for AffineInPlaceK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        k::affine_rows(&mut data[self.dst.range(batch)], self.c, &self.scale, &self.shift);
+    }
+}
+
+struct MaxPoolK {
+    src: Span,
+    dst: Span,
+    in_hwc: (usize, usize, usize),
+    khw_stride: (usize, usize, usize),
+}
+
+impl Kernel for MaxPoolK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        let (h, w, c) = self.in_hwc;
+        k::maxpool_into(x, (batch, h, w, c), self.khw_stride, out);
+    }
+}
+
+struct AvgPoolK {
+    src: Span,
+    dst: Span,
+    in_hwc: (usize, usize, usize),
+    khw_stride: (usize, usize, usize),
+}
+
+impl Kernel for AvgPoolK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        let (h, w, c) = self.in_hwc;
+        k::avgpool_into(x, (batch, h, w, c), self.khw_stride, out);
+    }
+}
+
+struct GlobalAvgPoolK {
+    src: Span,
+    dst: Span,
+    in_hwc: (usize, usize, usize),
+}
+
+impl Kernel for GlobalAvgPoolK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        let (h, w, c) = self.in_hwc;
+        k::globalavgpool_into(x, (batch, h, w, c), out);
+    }
+}
+
+struct UpsampleK {
+    src: Span,
+    dst: Span,
+    in_hwc: (usize, usize, usize),
+    factor: usize,
+}
+
+impl Kernel for UpsampleK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        let (h, w, c) = self.in_hwc;
+        k::upsample_into(x, (batch, h, w, c), self.factor, out);
+    }
+}
+
+struct ZeroPadK {
+    src: Span,
+    dst: Span,
+    in_hwc: (usize, usize, usize),
+    pad: [usize; 4],
+}
+
+impl Kernel for ZeroPadK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        let (h, w, c) = self.in_hwc;
+        k::zeropad_into(x, (batch, h, w, c), self.pad, out);
+    }
+}
+
+struct ActK {
+    src: Span,
+    dst: Span,
+    c: usize,
+    ep: EpSpec,
+}
+
+impl Kernel for ActK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        out.copy_from_slice(x);
+        self.ep.epilogue().apply_whole(out, self.c);
+    }
+}
+
+struct ActInPlaceK {
+    dst: Span,
+    c: usize,
+    ep: EpSpec,
+}
+
+impl Kernel for ActInPlaceK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let buf = &mut data[self.dst.range(batch)];
+        self.ep.epilogue().apply_whole(buf, self.c);
+    }
+}
+
+struct SoftmaxK {
+    src: Span,
+    dst: Span,
+    c: usize,
+    approx: bool,
+}
+
+impl Kernel for SoftmaxK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        k::softmax_into(x, self.c, self.approx, out);
+    }
+}
+
+struct SoftmaxInPlaceK {
+    dst: Span,
+    c: usize,
+    approx: bool,
+}
+
+impl Kernel for SoftmaxInPlaceK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        k::softmax_rows(&mut data[self.dst.range(batch)], self.c, self.approx);
+    }
+}
+
+struct AddK {
+    a: Span,
+    b: Span,
+    dst: Span,
+}
+
+impl Kernel for AddK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (a, b, out) = srcs_dst(
+            data,
+            self.a.range(batch),
+            self.b.range(batch),
+            self.dst.range(batch),
+        );
+        k::add_into(a, b, out);
+    }
+}
+
+/// Residual add writing over its (dead) first operand — no copy of the
+/// second operand, unlike the pre-`Program` interpreter.
+struct AddInPlaceK {
+    dst: Span,
+    other: Span,
+}
+
+impl Kernel for AddInPlaceK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (other, buf) = src_dst(data, self.other.range(batch), self.dst.range(batch));
+        k::add_assign(buf, other);
+    }
+}
+
+struct ConcatK {
+    a: Span,
+    b: Span,
+    dst: Span,
+    ca: usize,
+    cb: usize,
+}
+
+impl Kernel for ConcatK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (a, b, out) = srcs_dst(
+            data,
+            self.a.range(batch),
+            self.b.range(batch),
+            self.dst.range(batch),
+        );
+        k::concat_into(a, self.ca, b, self.cb, out);
+    }
+}
+
+/// Out-of-place flatten: a reshape across buffers is a straight copy.
+struct CopyK {
+    src: Span,
+    dst: Span,
+}
+
+impl Kernel for CopyK {
+    fn run(&mut self, batch: usize, data: &mut [f32]) {
+        let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
+        out.copy_from_slice(x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::builder::{random_chain, square_mlp, tiny_cnn};
+    use crate::nn::interp::NaiveInterp;
+    use crate::util::propcheck::check;
+    use crate::util::rng::SplitMix64;
+
+    fn run_program(spec: &ModelSpec, opts: CompileOptions, x: &Tensor) -> Vec<Tensor> {
+        let mut p = Program::lower(spec, opts).unwrap();
+        let mut arena = p.new_arena(x.shape()[0]);
+        p.load_input(&mut arena, x);
+        p.run(&mut arena);
+        p.read_outputs(&arena)
+    }
+
+    #[test]
+    fn lowered_tiny_cnn_matches_naive() {
+        let spec = tiny_cnn(61);
+        let mut rng = SplitMix64::new(3);
+        let x = Tensor::from_vec(&[2, 8, 8, 3], rng.uniform_vec(2 * 8 * 8 * 3));
+        let want = NaiveInterp::new(spec.clone()).unwrap().infer(&x).unwrap();
+        let opts = CompileOptions { approx: false, ..CompileOptions::default() };
+        let got = run_program(&spec, opts, &x);
+        let d = want[0].max_abs_diff(&got[0]);
+        assert!(d < 1e-4, "diff {d}");
+    }
+
+    #[test]
+    fn bit_exact_options_are_bit_exact() {
+        let spec = tiny_cnn(62);
+        let mut rng = SplitMix64::new(4);
+        let x = Tensor::from_vec(&[1, 8, 8, 3], rng.uniform_vec(8 * 8 * 3));
+        let want = NaiveInterp::new(spec.clone()).unwrap().infer(&x).unwrap();
+        let got = run_program(&spec, CompileOptions::bit_exact(), &x);
+        assert_eq!(want[0].data(), got[0].data());
+    }
+
+    #[test]
+    fn summary_counts_the_lowering() {
+        let spec = tiny_cnn(63);
+        let p = Program::lower(&spec, CompileOptions::default()).unwrap();
+        let s = p.summary();
+        assert_eq!(s.folded_bn, 1, "{s}");
+        // conv, maxpool, dense, softmax survive; flatten elides in place.
+        assert!(s.steps.len() >= 4, "{s}");
+        assert!(s.elided_steps >= 1, "{s}");
+        assert!(s.weight_elems > 0 && s.arena_item_elems > 0, "{s}");
+        // tiny_cnn's dense is 48→10 — not square, so never rotated.
+        assert_eq!(s.rotated_dense, 0, "{s}");
+    }
+
+    #[test]
+    fn dense_schemes_agree_and_are_counted() {
+        let spec = square_mlp(9, 16, 2);
+        let mut rng = SplitMix64::new(8);
+        let x = Tensor::from_vec(&[3, 16], rng.uniform_vec(3 * 16));
+        let want = NaiveInterp::new(spec.clone()).unwrap().infer(&x).unwrap();
+        for scheme in [DenseScheme::Rotated, DenseScheme::Broadcast, DenseScheme::Generic] {
+            let opts =
+                CompileOptions { approx: false, dense: scheme, ..CompileOptions::default() };
+            let mut p = Program::lower(&spec, opts).unwrap();
+            let s = p.summary();
+            match scheme {
+                DenseScheme::Rotated => assert_eq!(s.rotated_dense, 3, "{s}"),
+                DenseScheme::Broadcast => assert_eq!(s.broadcast_dense, 3, "{s}"),
+                DenseScheme::Generic => {
+                    assert_eq!(s.rotated_dense + s.broadcast_dense, 0, "{s}")
+                }
+            }
+            let mut arena = p.new_arena(3);
+            p.load_input(&mut arena, &x);
+            p.run(&mut arena);
+            let got = p.read_outputs(&arena);
+            let d = want[0].max_abs_diff(&got[0]);
+            assert!(d < 1e-4, "{scheme:?}: diff {d}");
+        }
+    }
+
+    /// Deterministic coverage of every binary-op lowering path: out-of-place
+    /// add (3-way disjoint borrow), duplicated-operand add (`x + x`),
+    /// in-place add, and concat — checked bit-for-bit against the oracle.
+    #[test]
+    fn binary_lowerings_cover_all_borrow_paths() {
+        use crate::model::builder::Builder;
+
+        let mut b = Builder::new("residuals", &[4, 4, 2], 5);
+        let a = b.conv2d("input", 2, 3, 1, Activation::Relu);
+        let m1 = b.add(&a, "input"); // `a` lives on → out-of-place AddK
+        let cat = b.concat(&m1, &a); // ConcatK (3-way srcs_dst)
+        let m2 = b.add(&cat, &cat); // x + x while cat lives on → a == b path
+        let m3 = b.add(&m2, &cat); // m2 dies here → AddInPlaceK
+        let spec = b.finish(&[&m3]);
+
+        let mut p = Program::lower(&spec, CompileOptions::bit_exact()).unwrap();
+        let s = p.summary();
+        assert_eq!(s.steps.iter().filter(|l| l.contains("add")).count(), 3, "{s}");
+        assert!(s.steps.iter().any(|l| l.contains("add") && l.contains("in-place")), "{s}");
+        assert!(s.steps.iter().any(|l| l.contains("concat")), "{s}");
+
+        let mut rng = SplitMix64::new(17);
+        let x = Tensor::from_vec(&[2, 4, 4, 2], rng.uniform_vec(2 * 4 * 4 * 2));
+        let want = NaiveInterp::new(spec.clone()).unwrap().infer(&x).unwrap();
+        let mut arena = p.new_arena(2);
+        p.load_input(&mut arena, &x);
+        p.run(&mut arena);
+        let got = p.read_outputs(&arena);
+        assert_eq!(want[0].data(), got[0].data());
+    }
+
+    #[test]
+    fn arena_pool_reuses_per_batch() {
+        let spec = tiny_cnn(64);
+        let p = Program::lower(&spec, CompileOptions::default()).unwrap();
+        let mut pool = ArenaPool::new();
+        let b1 = pool.get(&p, 1).bytes();
+        pool.get(&p, 4);
+        assert_eq!(pool.len(), 2);
+        let total = pool.bytes();
+        // asking again for either batch creates nothing new
+        pool.get(&p, 1);
+        pool.get(&p, 4);
+        assert_eq!(pool.len(), 2);
+        assert_eq!(pool.bytes(), total);
+        assert_eq!(pool.get(&p, 1).bytes(), b1);
+    }
+
+    #[test]
+    fn arena_pool_is_bounded() {
+        // cycling through many ad-hoc batch sizes must not grow the pool
+        // without bound — the smallest unpinned arena is evicted past the
+        // cap, and the largest (most expensive to re-create) stays.
+        let spec = tiny_cnn(65);
+        let p = Program::lower(&spec, CompileOptions::default()).unwrap();
+        let mut pool = ArenaPool::new();
+        for batch in 1..=10 {
+            pool.get(&p, batch);
+        }
+        assert!(pool.len() <= MAX_UNPINNED_ARENAS, "{} arenas pooled", pool.len());
+        let biggest = p.new_arena(10).bytes();
+        assert!(pool.arenas.iter().any(|a| a.bytes() == biggest));
+    }
+
+    #[test]
+    fn reserved_buckets_are_never_evicted() {
+        // a serving bucket set larger than the unpinned cap stays fully
+        // pooled: ad-hoc sizes churn, pinned buckets never miss.
+        let spec = tiny_cnn(66);
+        let p = Program::lower(&spec, CompileOptions::default()).unwrap();
+        let mut pool = ArenaPool::new();
+        let buckets = [1usize, 2, 4, 8, 16, 32];
+        for &b in &buckets {
+            pool.reserve(&p, b);
+        }
+        let reserved = pool.bytes();
+        for batch in 40..=60 {
+            pool.get(&p, batch); // ad-hoc churn
+        }
+        for &b in &buckets {
+            pool.get(&p, b);
+        }
+        assert!(pool.bytes() >= reserved);
+        assert!(pool.len() <= buckets.len() + MAX_UNPINNED_ARENAS);
+        for &b in &buckets {
+            assert!(pool.arenas.iter().any(|a| a.batch == b), "bucket {b} evicted");
+        }
+    }
+
+    /// §3.2 satellite: on randomized graphs, tensors with overlapping
+    /// lifetimes must land in disjoint arena *ranges* (not just distinct
+    /// buffer ids — this checks the flattened offsets the kernels use).
+    #[test]
+    fn property_overlapping_lifetimes_get_disjoint_arena_ranges() {
+        check(
+            "program_arena_disjoint",
+            50,
+            |r: &mut SplitMix64| random_chain(r),
+            |spec| {
+                // fold off so the lifetime analysis below matches the
+                // lowered graph layer-for-layer
+                let opts = CompileOptions { fold_bn: false, ..CompileOptions::default() };
+                let p = Program::lower(spec, opts).map_err(|e| e.to_string())?;
+                // def/last-use indices, same convention as the §3.2 planner
+                let mut def: BTreeMap<&str, usize> = BTreeMap::new();
+                let mut last: BTreeMap<&str, usize> = BTreeMap::new();
+                def.insert("input", 0);
+                last.insert("input", 0);
+                for (i, l) in spec.layers.iter().enumerate() {
+                    def.insert(&l.name, i + 1);
+                    last.insert(&l.name, i + 1);
+                    for inp in &l.inputs {
+                        last.insert(inp.as_str(), i + 1);
+                    }
+                }
+                let eternal = spec.layers.len() + 1;
+                for o in &spec.outputs {
+                    last.insert(o.as_str(), eternal);
+                }
+                let names: Vec<&str> = def.keys().copied().collect();
+                for (ai, &a) in names.iter().enumerate() {
+                    for &b in &names[ai + 1..] {
+                        let (da, la) = (def[a], last[a]);
+                        let (db, lb) = (def[b], last[b]);
+                        if la <= db || lb <= da {
+                            continue; // lifetimes disjoint — sharing is legal
+                        }
+                        let ra = p.spans()[a].arena_range(1);
+                        let rb = p.spans()[b].arena_range(1);
+                        if ra.start < rb.end && rb.start < ra.end {
+                            return Err(format!(
+                                "`{a}` {ra:?} and `{b}` {rb:?} overlap while both live"
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn random_graphs_lower_and_match_naive() {
+        check(
+            "program_matches_naive",
+            25,
+            |r: &mut SplitMix64| (random_chain(r), r.next_u64()),
+            |(spec, seed)| {
+                let naive = NaiveInterp::new(spec.clone()).map_err(|e| e.to_string())?;
+                let opts = CompileOptions { approx: false, ..CompileOptions::default() };
+                let mut rng = SplitMix64::new(*seed);
+                let n: usize = spec.input_shape.iter().product();
+                let mut shape = vec![1usize];
+                shape.extend_from_slice(&spec.input_shape);
+                let x = Tensor::from_vec(&shape, rng.uniform_vec(n));
+                let want = naive.infer(&x).map_err(|e| e.to_string())?;
+                let got = run_program(spec, opts, &x);
+                let d = want[0].max_abs_diff(&got[0]);
+                if d < 1e-3 {
+                    Ok(())
+                } else {
+                    Err(format!("max |Δ| = {d}"))
+                }
+            },
+        );
+    }
+}

@@ -38,7 +38,10 @@ enum ExecMsg {
     InferBatch {
         name: String,
         batch: Tensor,
-        reply: SyncSender<Result<Tensor>>,
+        /// Replies with the result AND the input buffer, which the batcher
+        /// recycles as its next stacking scratch — the batch path allocates
+        /// nothing once capacities have grown to the largest bucket.
+        reply: SyncSender<(Result<Tensor>, Vec<f32>)>,
     },
     Shutdown,
 }
@@ -245,7 +248,8 @@ fn executor_main(manifest: Manifest, kind: EngineKind, rx: Receiver<ExecMsg>) {
                     Some(e) => e.infer(&batch).map(|mut outs| outs.remove(0)),
                     None => Err(anyhow!("model `{name}` not registered")),
                 };
-                let _ = reply.send(res);
+                // hand the input buffer back for the batcher to recycle
+                let _ = reply.send((res, batch.into_vec()));
             }
         }
     }
@@ -261,7 +265,14 @@ fn register_engine(
     let entry = manifest.entry(name)?.clone();
     let cache_hit = engines.contains_key(name);
     if !cache_hit {
-        let engine = build_engine(kind, manifest, name, opts)?;
+        let mut engine = build_engine(kind, manifest, name, opts)?;
+        // Pool one arena per advertised batch bucket up front (cheap: just
+        // allocation, no inference) so steady-state serving never allocates
+        // engine-side — the §3.2 plan fixed every buffer size at lowering.
+        let buckets = engine.batch_buckets().unwrap_or_else(|| entry.batches.clone());
+        for &b in &buckets {
+            engine.prepare(b);
+        }
         engines.insert(name.to_string(), engine);
     }
     let engine = engines.get(name).expect("engine registered above");
@@ -288,6 +299,9 @@ fn batcher_main(
 ) {
     let item_elems: usize = info.input_shape.iter().product();
     let mut queue: Vec<Request> = Vec::new();
+    // Stacking scratch, recycled through the executor round-trip: after the
+    // first max-bucket flush its capacity never grows again.
+    let mut scratch: Vec<f32> = Vec::new();
 
     loop {
         if stopping.load(Ordering::SeqCst) {
@@ -304,19 +318,20 @@ fn batcher_main(
                 Ok(r) => queue.push(r),
                 Err(RecvTimeoutError::Timeout) => {} // deadline → next decide flushes
                 Err(RecvTimeoutError::Disconnected) => {
-                    flush(&info, &policy, &mut queue, &exec_tx, &metrics, item_elems);
+                    flush(&info, &policy, &mut queue, &exec_tx, &metrics, item_elems, &mut scratch);
                     return;
                 }
             },
             Flush::Now(bucket) => {
                 let take = queue.len().min(bucket);
                 let batch: Vec<Request> = queue.drain(..take).collect();
-                run_batch(&info, bucket, batch, &exec_tx, &metrics, item_elems);
+                run_batch(&info, bucket, batch, &exec_tx, &metrics, item_elems, &mut scratch);
             }
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn flush(
     info: &RegisterInfo,
     policy: &BatchPolicy,
@@ -324,12 +339,13 @@ fn flush(
     exec_tx: &Sender<ExecMsg>,
     metrics: &ModelMetrics,
     item_elems: usize,
+    scratch: &mut Vec<f32>,
 ) {
     while !queue.is_empty() {
         let bucket = policy.bucket_for(queue.len());
         let take = queue.len().min(bucket);
         let batch: Vec<Request> = queue.drain(..take).collect();
-        run_batch(info, bucket, batch, exec_tx, metrics, item_elems);
+        run_batch(info, bucket, batch, exec_tx, metrics, item_elems, scratch);
     }
 }
 
@@ -339,6 +355,7 @@ fn fail_all(queue: &mut Vec<Request>, msg: &str) {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     info: &RegisterInfo,
     bucket: usize,
@@ -346,6 +363,7 @@ fn run_batch(
     exec_tx: &Sender<ExecMsg>,
     metrics: &ModelMetrics,
     item_elems: usize,
+    scratch: &mut Vec<f32>,
 ) {
     let n = batch.len();
     debug_assert!(n <= bucket);
@@ -354,25 +372,33 @@ fn run_batch(
         metrics.queue_wait.record(r.enqueued.elapsed());
     }
 
-    // Stack into [bucket, item…], zero-padding unused slots.
+    // Stack into [bucket, item…] on the recycled scratch: clear+resize
+    // zero-fills (covering the padded slots) without reallocating once the
+    // capacity has reached the largest bucket.
     let mut shape = vec![bucket];
     shape.extend_from_slice(&info.input_shape);
-    let mut data = vec![0.0f32; bucket * item_elems];
+    let mut data = std::mem::take(scratch);
+    data.clear();
+    data.resize(bucket * item_elems, 0.0);
     for (i, r) in batch.iter().enumerate() {
         data[i * item_elems..(i + 1) * item_elems].copy_from_slice(r.input.data());
     }
     let input = Tensor::from_vec(&shape, data);
 
     let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-    if exec_tx
-        .send(ExecMsg::InferBatch { name: info.name.clone(), batch: input, reply: reply_tx })
-        .is_err()
+    if let Err(send_err) =
+        exec_tx.send(ExecMsg::InferBatch { name: info.name.clone(), batch: input, reply: reply_tx })
     {
+        if let ExecMsg::InferBatch { batch: unsent, .. } = send_err.0 {
+            *scratch = unsent.into_vec();
+        }
         let mut q: Vec<Request> = batch;
         fail_all(&mut q, "executor gone");
         return;
     }
-    let result = reply_rx.recv().unwrap_or_else(|_| Err(anyhow!("executor gone")));
+    let (result, recycled) =
+        reply_rx.recv().unwrap_or_else(|_| (Err(anyhow!("executor gone")), Vec::new()));
+    *scratch = recycled;
     metrics.exec.record(t_exec.elapsed());
     metrics.batches.add(1);
     metrics.requests.add(n as u64);

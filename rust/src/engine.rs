@@ -10,7 +10,8 @@
 //!
 //! ```text
 //! EngineKind::Naive     → nn::interp::NaiveInterp      (exact oracle)
-//! EngineKind::Optimized → compiler::exec::OptInterp    (folded/fused/arena)
+//! EngineKind::Optimized → compiler::exec::OptInterp    (pre-lowered
+//!                         compiler::program::Program — folded/fused/arena)
 //! EngineKind::Compiled  → runtime::executor::CompiledEngine  (PJRT, `pjrt`
 //!                         cargo feature; unavailable on plain runners)
 //! ```
@@ -23,6 +24,7 @@ use std::fmt;
 use anyhow::{bail, Result};
 
 use crate::compiler::exec::CompileOptions;
+use crate::compiler::program::PlanSummary;
 use crate::model::load::load_model;
 use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
@@ -57,6 +59,19 @@ pub trait Engine {
 
     /// Working-set bytes currently held (arena/buffers), if tracked.
     fn memory_bytes(&self) -> Option<usize> {
+        None
+    }
+
+    /// Pre-size engine state for a batch bucket (arena pooling). The
+    /// serving coordinator calls this once per advertised bucket at
+    /// registration so steady-state inference is allocation-free. No-op
+    /// for engines without poolable state.
+    fn prepare(&mut self, _batch: usize) {}
+
+    /// What the engine's compile/lowering stage produced — step kinds,
+    /// kernel variants, arena footprint — so tests and benches can assert
+    /// on the lowered form. `None` for engines without a lowering stage.
+    fn plan_summary(&self) -> Option<&PlanSummary> {
         None
     }
 }
@@ -153,6 +168,14 @@ impl EngineOptions {
             compile: CompileOptions { approx: false, ..CompileOptions::default() },
             buckets: None,
         }
+    }
+
+    /// Options under which the optimized engine's lowered program is
+    /// **bit-identical** to the naive oracle (approximations off and every
+    /// value-reassociating lowering transform disabled — see
+    /// [`CompileOptions::bit_exact`]).
+    pub fn bit_exact() -> EngineOptions {
+        EngineOptions { compile: CompileOptions::bit_exact(), buckets: None }
     }
 }
 
@@ -280,5 +303,19 @@ mod tests {
     fn exact_options_disable_approx() {
         assert!(!EngineOptions::exact().compile.approx);
         assert_eq!(EngineOptions::with_buckets(&[1, 8]).buckets, Some(vec![1, 8]));
+        let bits = EngineOptions::bit_exact().compile;
+        assert!(!bits.approx && !bits.fold_bn);
+    }
+
+    #[test]
+    fn plan_summary_only_on_lowering_engines() {
+        let spec = tiny_cnn(43);
+        let naive =
+            build_engine_from_spec(EngineKind::Naive, &spec, &EngineOptions::default()).unwrap();
+        assert!(naive.plan_summary().is_none());
+        let opt = build_engine_from_spec(EngineKind::Optimized, &spec, &EngineOptions::default())
+            .unwrap();
+        let s = opt.plan_summary().expect("optimized engine lowers a program");
+        assert!(!s.steps.is_empty());
     }
 }

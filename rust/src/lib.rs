@@ -15,7 +15,9 @@
 //! [`engine::build_engine_from_spec`] for programmatic specs):
 //!
 //! * `naive` — [`nn::interp::NaiveInterp`], the exact scalar oracle,
-//! * `optimized` — [`compiler::exec::OptInterp`], §3.2/§3.4/§3.5 applied,
+//! * `optimized` — [`compiler::exec::OptInterp`], a thin shell over the
+//!   pre-resolved [`compiler::program::Program`] IR (spec → §3.5 fold →
+//!   §3.2 plan → lower → run; zero lookups/allocation per inference),
 //! * `compiled` — `runtime::executor::CompiledEngine`, PJRT-compiled AOT
 //!   artifacts. Only present with the `pjrt` cargo feature; plain builds
 //!   report it unavailable and every caller (CLI, coordinator, tests,

@@ -230,6 +230,18 @@ fn cmd_inspect(args: &Args) -> Result<()> {
 
     println!("§3.3 cost model:");
     print!("{}", cost::render_table(&cost::analyze(&folded)?));
+
+    // Lower from the already-folded spec (fold_bn off — the §3.5 line above
+    // reports folding) so inspect pays one fold, not two.
+    let program = compiled_nn::compiler::program::Program::lower(
+        &folded,
+        compiled_nn::compiler::program::CompileOptions {
+            fold_bn: false,
+            ..Default::default()
+        },
+    )?;
+    println!("lowered program (folded spec → plan → lower):");
+    print!("{}", program.summary());
     Ok(())
 }
 

@@ -188,6 +188,45 @@ impl Builder {
         )
     }
 
+    /// Elementwise residual add of two same-shaped tensors.
+    pub fn add(&mut self, a: &str, b: &str) -> String {
+        let shape = self.shapes[a].clone();
+        assert_eq!(shape, self.shapes[b], "add shape mismatch");
+        let name = self.fresh("add");
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::Add,
+                inputs: vec![a.to_string(), b.to_string()],
+                weights: BTreeMap::new(),
+                activation: Activation::Linear,
+                post_scale: false,
+            },
+            shape,
+        )
+    }
+
+    /// Channel-axis concatenation of two spatially identical tensors.
+    pub fn concat(&mut self, a: &str, b: &str) -> String {
+        let sa = self.shapes[a].clone();
+        let sb = self.shapes[b].clone();
+        assert_eq!(sa[..sa.len() - 1], sb[..sb.len() - 1], "concat spatial mismatch");
+        let mut out = sa;
+        *out.last_mut().unwrap() += *sb.last().unwrap();
+        let name = self.fresh("concat");
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::Concat,
+                inputs: vec![a.to_string(), b.to_string()],
+                weights: BTreeMap::new(),
+                activation: Activation::Linear,
+                post_scale: false,
+            },
+            out,
+        )
+    }
+
     pub fn softmax(&mut self, x: &str) -> String {
         let shape = self.shapes[x].clone();
         let name = self.fresh("softmax");
@@ -228,6 +267,76 @@ pub fn tiny_cnn(seed: u64) -> ModelSpec {
     let d = b.dense(&f, 10, Activation::Linear);
     let s = b.softmax(&d);
     b.finish(&[&s])
+}
+
+/// An MLP of square `n×n` dense layers (`depth` hidden + 1 head + softmax)
+/// — every layer is eligible for the §3.3 matvec schemes, which makes it
+/// the rotated-vs-broadcast ablation vehicle.
+pub fn square_mlp(seed: u64, n: usize, depth: usize) -> ModelSpec {
+    let mut b = Builder::new("square_mlp", &[n], seed);
+    let mut cur = "input".to_string();
+    for _ in 0..depth {
+        cur = b.dense(&cur, n, Activation::Relu);
+    }
+    let d = b.dense(&cur, n, Activation::Linear);
+    let s = b.softmax(&d);
+    b.finish(&[&s])
+}
+
+/// Random conv/pool/bn/act chain with occasional residual adds/concats —
+/// the propcheck workhorse behind the §3.2 planner and `Program` lowering
+/// properties (shared by `compiler::memory` and `compiler::program` tests).
+pub fn random_chain(r: &mut SplitMix64) -> ModelSpec {
+    let mut b = Builder::new("rand", &[8, 8, 2], r.next_u64());
+    let mut cur = "input".to_string();
+    let mut spatial = true;
+    let mut residual: Option<String> = None;
+    let n = 2 + r.below(6);
+    for _ in 0..n {
+        if !spatial {
+            break;
+        }
+        match r.below(5) {
+            0 => {
+                let ch = b.shape_of(&cur)[2];
+                cur = b.conv2d(&cur, ch, 3, 1, Activation::Relu);
+                if let Some(res) = residual.take() {
+                    // merge the saved branch — exercises the binary-op
+                    // lowerings (in-place add + 3-way concat borrows)
+                    if b.shape_of(&res) == b.shape_of(&cur) {
+                        cur = if r.below(2) == 0 {
+                            b.add(&cur, &res)
+                        } else {
+                            b.concat(&cur, &res)
+                        };
+                    }
+                } else if r.below(2) == 0 {
+                    residual = Some(cur.clone());
+                }
+            }
+            1 => cur = b.batchnorm(&cur),
+            2 => {
+                if b.shape_of(&cur)[0] >= 4 {
+                    cur = b.maxpool(&cur, 2);
+                    residual = None; // shapes diverge
+                }
+            }
+            3 => {
+                let ch = 1 + r.below(4);
+                cur = b.conv2d(&cur, ch, 1, 1, Activation::Linear);
+                residual = None;
+            }
+            _ => {
+                let f = b.flatten(&cur);
+                let d = b.dense(&f, 4 + r.below(8), Activation::Relu);
+                cur = d;
+                spatial = false;
+                residual = None;
+            }
+        }
+    }
+    let out = cur.clone();
+    b.finish(&[&out])
 }
 
 #[cfg(test)]

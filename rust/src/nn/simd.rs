@@ -15,6 +15,11 @@
 //! Written with 4-lane arrays ([f32; 4]) so LLVM autovectorizes to SSE — the
 //! offline image has no `std::simd`/`wide`; benches/matvec.rs measures both.
 
+/// Largest `n` for which [`matvec_rotated`] stays on its stack-resident
+/// doubled-`x` window. The `Program` lowering only selects the rotated
+/// scheme at or below this bound, keeping the hot path allocation-free.
+pub const ROTATED_STACK_MAX: usize = 512;
+
 /// Pre-permute W (row-major `[n, n]`, `y = W x` orientation) into stacked
 /// rotated diagonals. O(n²), done once — "the memory layout of the matrix
 /// can be chosen arbitrarily without any impact on performance" (§3.3).
@@ -62,36 +67,29 @@ pub fn matvec_broadcast(w: &[f32], x: &[f32], y: &mut [f32]) {
 /// stand-in for the free lane rotation of the resident register/tile.
 pub fn matvec_rotated(d: &[f32], x: &[f32], y: &mut [f32]) {
     let n = x.len();
-    debug_assert!(d.len() == n * n && y.len() == n);
-    // stack buffer for the common small-n case, heap above 512
-    let mut buf = [0.0f32; 1024];
-    let xx: &mut [f32] = if n <= 512 {
-        &mut buf[..2 * n]
+    if n <= ROTATED_STACK_MAX {
+        // stack buffer for the common small-n case
+        let mut buf = [0.0f32; 2 * ROTATED_STACK_MAX];
+        matvec_rotated_with(d, x, &mut buf[..2 * n], y);
     } else {
         // rare path; allocation amortized away by caller loops in practice
-        return matvec_rotated_large(d, x, y);
-    };
-    xx[..n].copy_from_slice(x);
-    xx[n..2 * n].copy_from_slice(x);
-    y.fill(0.0);
-    for j in 0..n {
-        let dj = &d[j * n..(j + 1) * n];
-        let xw = &xx[j..j + n];
-        for i in 0..n {
-            y[i] += dj[i] * xw[i];
-        }
+        let mut xx = vec![0.0f32; 2 * n];
+        matvec_rotated_with(d, x, &mut xx, y);
     }
 }
 
-fn matvec_rotated_large(d: &[f32], x: &[f32], y: &mut [f32]) {
+/// Eq. 3 with a caller-provided doubled-`x` scratch (`len == 2n`) — the
+/// zero-setup form the `Program` Dense kernel uses: its scratch is sized
+/// once at lowering, so the hot path neither allocates nor zero-fills.
+pub fn matvec_rotated_with(d: &[f32], x: &[f32], scratch: &mut [f32], y: &mut [f32]) {
     let n = x.len();
-    let mut xx = Vec::with_capacity(2 * n);
-    xx.extend_from_slice(x);
-    xx.extend_from_slice(x);
+    debug_assert!(d.len() == n * n && y.len() == n && scratch.len() == 2 * n);
+    scratch[..n].copy_from_slice(x);
+    scratch[n..2 * n].copy_from_slice(x);
     y.fill(0.0);
     for j in 0..n {
         let dj = &d[j * n..(j + 1) * n];
-        let xw = &xx[j..j + n];
+        let xw = &scratch[j..j + n];
         for i in 0..n {
             y[i] += dj[i] * xw[i];
         }

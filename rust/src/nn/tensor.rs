@@ -27,6 +27,12 @@ impl Tensor {
         Self { shape: shape.to_vec(), data }
     }
 
+    /// Copying constructor from a borrowed slice (how `Program` turns an
+    /// arena view into an owned output tensor).
+    pub fn from_slice(shape: &[usize], data: &[f32]) -> Self {
+        Self::from_vec(shape, data.to_vec())
+    }
+
     pub fn filled(shape: &[usize], v: f32) -> Self {
         let n = shape.iter().product();
         Self { shape: shape.to_vec(), data: vec![v; n] }

@@ -24,7 +24,7 @@ fn have_models() -> bool {
 /// Optimized-interpreter options with every approximation disabled.
 fn exact_opts(fold_bn: bool) -> EngineOptions {
     EngineOptions {
-        compile: CompileOptions { fold_bn, approx: false, reuse_memory: true },
+        compile: CompileOptions { fold_bn, approx: false, ..CompileOptions::default() },
         buckets: None,
     }
 }
@@ -166,6 +166,26 @@ fn memory_reuse_visible_through_engine_trait() {
     let a = with.memory_bytes().unwrap();
     let b = without.memory_bytes().unwrap();
     assert!(a < b, "reuse arena {a} must undercut no-reuse {b}");
+}
+
+#[test]
+fn plan_summary_reports_real_model_lowering() {
+    if !have_models() {
+        return;
+    }
+    // mobilenetv2: 34 BNs to fold, depthwise towers, residual adds — the
+    // plan_summary hook must surface what the Program lowering did.
+    let spec = load_model(Path::new("models"), "mobilenetv2").unwrap();
+    let e = build_engine_from_spec(EngineKind::Optimized, &spec, &EngineOptions::default())
+        .unwrap();
+    let s = e.plan_summary().expect("optimized engine lowers a program");
+    assert!(s.folded_bn >= 30, "{s}");
+    assert!(s.in_place_steps + s.elided_steps >= 1, "{s}");
+    assert!(s.steps.iter().any(|l| l.contains("dwconv")), "{s}");
+    // the naive oracle has no lowering stage
+    let naive =
+        build_engine_from_spec(EngineKind::Naive, &spec, &EngineOptions::default()).unwrap();
+    assert!(naive.plan_summary().is_none());
 }
 
 #[test]

@@ -227,6 +227,50 @@ fn every_available_engine_agrees_with_the_oracle() {
     }
 }
 
+/// The `Program`-backed optimized engine must match the naive oracle
+/// **bit-for-bit** with `approx: false` once the value-reassociating
+/// lowering transforms are also off (`EngineOptions::bit_exact`): the §3.2
+/// memory plan, arena spans, in-place aliasing and fused epilogues may
+/// never change a single ulp. Runs on the built-in `tiny_cnn` always and
+/// on the keras fixtures when the model files are present.
+#[test]
+fn program_backed_optimized_is_bit_exact_vs_naive() {
+    fn assert_bits(spec: &compiled_nn::model::spec::ModelSpec, x: &Tensor) {
+        let mut naive =
+            build_engine_from_spec(EngineKind::Naive, spec, &EngineOptions::default()).unwrap();
+        let mut opt =
+            build_engine_from_spec(EngineKind::Optimized, spec, &EngineOptions::bit_exact())
+                .unwrap();
+        let a = naive.infer(x).unwrap();
+        let b = opt.infer(x).unwrap();
+        assert_eq!(a.len(), b.len(), "{}", spec.name);
+        for (ta, tb) in a.iter().zip(&b) {
+            assert_eq!(ta.shape(), tb.shape(), "{}", spec.name);
+            assert_eq!(ta.data(), tb.data(), "bit drift on {}", spec.name);
+        }
+    }
+
+    let spec = tiny_cnn(123);
+    let mut rng = SplitMix64::new(41);
+    let x = Tensor::from_vec(&[3, 8, 8, 3], rng.uniform_vec(3 * 8 * 8 * 3));
+    assert_bits(&spec, &x);
+
+    if !Path::new("models/c_bh.keras.json").exists() {
+        eprintln!("skipping keras-fixture bit-exact cases: models/ absent");
+        return;
+    }
+    for name in ["c_htwk", "c_bh", "detector", "segmenter"] {
+        let spec =
+            compiled_nn::model::keras::load_keras_model(Path::new("models"), name).unwrap();
+        let mut shape = vec![1usize];
+        shape.extend_from_slice(&spec.input_shape);
+        let n: usize = shape.iter().product();
+        let mut rng = SplitMix64::new(7);
+        let x = Tensor::from_vec(&shape, rng.uniform_vec(n));
+        assert_bits(&spec, &x);
+    }
+}
+
 #[test]
 fn batched_buckets_agree_with_batch1() {
     let Some(m) = manifest() else { return };

@@ -1,0 +1,84 @@
+//! Proves the `Program` acceptance property at the allocator: after
+//! lowering and arena creation, `Program::run` (and `load_input`) perform
+//! **zero heap allocations** — every shape, arena offset, kernel variant
+//! and weight slice was resolved at lowering time. A counting allocator
+//! wraps the system one; this file intentionally holds a single `#[test]`
+//! so no concurrently running test can touch the counter mid-measurement.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use compiled_nn::compiler::program::{CompileOptions, Program};
+use compiled_nn::model::builder::{square_mlp, tiny_cnn};
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::util::rng::SplitMix64;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn program_run_is_allocation_free() {
+    let spec = tiny_cnn(55);
+    let mut program = Program::lower(&spec, CompileOptions::default()).unwrap();
+    let mut arena = program.new_arena(2);
+    let mut rng = SplitMix64::new(7);
+    let x = Tensor::from_vec(&[2, 8, 8, 3], rng.uniform_vec(2 * 8 * 8 * 3));
+
+    // warm-up (nothing lazily allocates, but keep the window symmetric)
+    program.load_input(&mut arena, &x);
+    program.run(&mut arena);
+
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..16 {
+        program.load_input(&mut arena, &x);
+        program.run(&mut arena);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(
+        after, before,
+        "Program::run allocated on the hot path ({} allocations over 16 runs)",
+        after - before
+    );
+
+    // Reading outputs allocates owned tensors — that is the engine API
+    // boundary, outside `run`.
+    let outs = program.read_outputs(&arena);
+    assert_eq!(outs[0].shape(), &[2, 10]);
+
+    // The §3.3 rotated-dense path (owned doubled-x scratch) must be just
+    // as clean as the conv/pool path above.
+    let mlp = square_mlp(9, 16, 2);
+    let mut mlp_program = Program::lower(&mlp, CompileOptions::default()).unwrap();
+    assert!(mlp_program.summary().rotated_dense > 0);
+    let mut mlp_arena = mlp_program.new_arena(1);
+    let mx = Tensor::from_vec(&[1, 16], rng.uniform_vec(16));
+    mlp_program.load_input(&mut mlp_arena, &mx);
+    mlp_program.run(&mut mlp_arena);
+    let before = ALLOCS.load(Ordering::SeqCst);
+    for _ in 0..16 {
+        mlp_program.load_input(&mut mlp_arena, &mx);
+        mlp_program.run(&mut mlp_arena);
+    }
+    let after = ALLOCS.load(Ordering::SeqCst);
+    assert_eq!(after, before, "rotated-dense Program::run allocated on the hot path");
+}
