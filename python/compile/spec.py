@@ -236,17 +236,23 @@ class Builder:
                 name: Optional[str] = None) -> str:
         stride = stride or k
         h, w, c = self._shapes[x]
+        if h < k or w < k:
+            raise ValueError(f"maxpool window {k} larger than input {h}x{w}")
         layer = Layer(name or self._name("maxpool"), "maxpool", [x],
                       {"kh": k, "kw": k, "stride": stride})
-        return self._add(layer, (h // stride, w // stride, c))
+        # VALID pooling dims: identical to h // stride when stride == k,
+        # correct when the windows overlap (stride < k).
+        return self._add(layer, ((h - k) // stride + 1, (w - k) // stride + 1, c))
 
     def avgpool(self, x: str, k: int = 2, stride: int | None = None,
                 name: Optional[str] = None) -> str:
         stride = stride or k
         h, w, c = self._shapes[x]
+        if h < k or w < k:
+            raise ValueError(f"avgpool window {k} larger than input {h}x{w}")
         layer = Layer(name or self._name("avgpool"), "avgpool", [x],
                       {"kh": k, "kw": k, "stride": stride})
-        return self._add(layer, (h // stride, w // stride, c))
+        return self._add(layer, ((h - k) // stride + 1, (w - k) // stride + 1, c))
 
     def globalavgpool(self, x: str, name: Optional[str] = None) -> str:
         h, w, c = self._shapes[x]

@@ -1,6 +1,6 @@
-//! **A-fusion / A-memory / A-matvec** — ablations of the paper's §3 design
-//! choices on the Program-backed optimized interpreter, isolating each
-//! claim:
+//! **A-fusion / A-memory / A-matvec / A-conv** — ablations of the paper's
+//! §3 design choices on the Program-backed optimized interpreter, isolating
+//! each claim:
 //!
 //!   §3.5 BN folding:   fold_bn on/off        (latency)
 //!   §3.4 approx act:   approx on/off          (latency; precision is in
@@ -9,6 +9,8 @@
 //!   §3.3 matvec:       rotated / broadcast / generic Dense lowering
 //!                      (latency on a square-dense MLP; runs without
 //!                      artifacts, so CI exercises it too)
+//!   §3.3/§3.4 conv:    direct / im2col / generic Conv2d lowering × pool
+//!                      fusion on tiny_cnn (also artifact-less)
 //!
 //! Each variant is built through the engine registry (`EngineKind::Optimized`
 //! with per-variant `EngineOptions`); the arena footprint is read through
@@ -18,33 +20,108 @@
 //! Model ablations run on the nets that exercise each feature: c_bh
 //! (BN + sigmoid), segmenter (softmax over 80×80), mobilenetv2 (34 BNs,
 //! depthwise).
+//!
+//! Every run writes **BENCH_ablations.json** (per-variant ns/inference),
+//! which CI uploads as an artifact alongside BENCH_table1.json.
 
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 use compiled_nn::bench::{bench_budget, black_box};
-use compiled_nn::compiler::exec::{CompileOptions, DenseScheme};
+use compiled_nn::compiler::exec::{CompileOptions, ConvScheme, DenseScheme};
 use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
-use compiled_nn::model::builder::square_mlp;
+use compiled_nn::model::builder::{square_mlp, tiny_cnn};
 use compiled_nn::model::load::load_model;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::util::json::Json;
 use compiled_nn::util::rng::{golden_seed, SplitMix64};
 
+/// One measured (case, variant) cell for the JSON report.
+struct Cell {
+    case: String,
+    variant: String,
+    ns: f64,
+}
+
 fn main() -> anyhow::Result<()> {
-    dense_scheme_ablation()?;
+    let mut cells: Vec<Cell> = Vec::new();
+    conv_scheme_ablation(&mut cells)?;
+    dense_scheme_ablation(&mut cells)?;
     match Manifest::load_default() {
-        Ok(m) => model_ablations(&m),
-        Err(e) => {
-            eprintln!("(skipping model ablations: {e})");
-            Ok(())
-        }
+        Ok(m) => model_ablations(&m, &mut cells)?,
+        Err(e) => eprintln!("(skipping model ablations: {e})"),
     }
+    write_json(&cells)
+}
+
+/// §3.3 conv schemes × §3.4 pool fusion on the built-in tiny_cnn — the
+/// paper's "conv core is a matvec, merge adjacent ops into the store loop"
+/// claim, runnable on artifact-less CI. Expected: the fused SIMD path
+/// beats the stand-alone scalar `generic` scheme.
+fn conv_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<()> {
+    let budget = Duration::from_secs(2);
+    let spec = tiny_cnn(91);
+    let mut rng = SplitMix64::new(13);
+    let x = Tensor::from_vec(&[1, 8, 8, 3], rng.uniform_vec(8 * 8 * 3));
+
+    println!("== tiny_cnn — §3.3 conv lowering schemes × §3.4 pool fusion");
+    let base = CompileOptions::default();
+    let variants: [(&str, CompileOptions); 5] = [
+        ("fused-auto (paper)", base),
+        ("fused-direct", CompileOptions { conv: ConvScheme::Direct, ..base }),
+        ("im2col-nofuse", CompileOptions { conv: ConvScheme::Im2col, fuse_pool: false, ..base }),
+        ("direct-nofuse", CompileOptions { conv: ConvScheme::Direct, fuse_pool: false, ..base }),
+        (
+            "generic-nofuse",
+            CompileOptions { conv: ConvScheme::Generic, fuse_pool: false, ..base },
+        ),
+    ];
+    let mut fused_ms = 0.0;
+    let mut generic_ms = 0.0;
+    for (label, compile) in variants {
+        let opts = EngineOptions { compile, buckets: None };
+        let mut e = build_engine_from_spec(EngineKind::Optimized, &spec, &opts)?;
+        let lowered = e
+            .plan_summary()
+            .map(|s| {
+                format!(
+                    "{} direct / {} im2col, {} pool-fused",
+                    s.direct_conv, s.im2col_conv, s.fused_maxpool
+                )
+            })
+            .unwrap_or_default();
+        let r = bench_budget(&format!("tiny_cnn/{label}"), budget, 50, || {
+            black_box(e.infer(&x).unwrap());
+        });
+        if label.starts_with("fused-auto") {
+            fused_ms = r.mean_ms;
+        }
+        if label.starts_with("generic") {
+            generic_ms = r.mean_ms;
+        }
+        println!(
+            "{:<20} mean {:>9.5} ms  lowered: {lowered}  [{} iters]",
+            label, r.mean_ms, r.iters
+        );
+        cells.push(Cell {
+            case: "tiny_cnn_conv".into(),
+            variant: label.to_string(),
+            ns: r.mean_ms * 1e6,
+        });
+    }
+    println!(
+        "fused SIMD vs scalar generic: ×{:.2} ({})\n",
+        generic_ms / fused_ms,
+        if fused_ms < generic_ms { "fused wins" } else { "REGRESSION: generic wins" }
+    );
+    Ok(())
 }
 
 /// §3.3: the same square MLP lowered three ways. The rotated-diagonal
 /// layout is the paper's Eq. 3 claim — it should at least match broadcast
 /// (Eq. 2) by keeping x resident and dropping the broadcast temporary.
-fn dense_scheme_ablation() -> anyhow::Result<()> {
+fn dense_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<()> {
     let budget = Duration::from_secs(2);
     let spec = square_mlp(7, 256, 3);
     let mut rng = SplitMix64::new(11);
@@ -79,12 +156,17 @@ fn dense_scheme_ablation() -> anyhow::Result<()> {
             r.mean_ms / baseline,
             r.iters
         );
+        cells.push(Cell {
+            case: "square_mlp_dense".into(),
+            variant: label.to_string(),
+            ns: r.mean_ms * 1e6,
+        });
     }
     println!();
     Ok(())
 }
 
-fn model_ablations(manifest: &Manifest) -> anyhow::Result<()> {
+fn model_ablations(manifest: &Manifest, cells: &mut Vec<Cell>) -> anyhow::Result<()> {
     let budget = Duration::from_secs(2);
 
     for name in ["c_bh", "segmenter", "mobilenetv2"] {
@@ -127,9 +209,34 @@ fn model_ablations(manifest: &Manifest) -> anyhow::Result<()> {
                 arena,
                 r.iters
             );
+            cells.push(Cell {
+                case: name.to_string(),
+                variant: label.to_string(),
+                ns: r.mean_ms * 1e6,
+            });
         }
     }
     println!("\n(expected: each paper optimization is a ≥1.0× win on latency; \
              memory reuse shrinks the arena; see EXPERIMENTS.md A-fusion/A-memory)");
+    Ok(())
+}
+
+/// Machine-readable results → BENCH_ablations.json (uploaded as a CI
+/// artifact alongside BENCH_table1.json) so per-variant ns/inference is
+/// comparable across PRs.
+fn write_json(cells: &[Cell]) -> anyhow::Result<()> {
+    let mut cases: BTreeMap<String, Json> = BTreeMap::new();
+    for c in cells {
+        let entry = cases.entry(c.case.clone()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+        if let Json::Obj(m) = entry {
+            m.insert(c.variant.clone(), Json::Num(c.ns));
+        }
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("ablations".to_string()));
+    root.insert("unit".to_string(), Json::Str("ns_per_inference".to_string()));
+    root.insert("cases".to_string(), Json::Obj(cases));
+    std::fs::write("BENCH_ablations.json", format!("{}\n", Json::Obj(root)))?;
+    println!("wrote BENCH_ablations.json");
     Ok(())
 }

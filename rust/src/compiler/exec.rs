@@ -10,7 +10,7 @@
 use anyhow::{bail, Result};
 
 use crate::compiler::program::{ArenaPool, PlanSummary, Program};
-pub use crate::compiler::program::{CompileOptions, DenseScheme};
+pub use crate::compiler::program::{CompileOptions, ConvScheme, DenseScheme};
 use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
 
@@ -146,26 +146,38 @@ mod tests {
         for fold in [false, true] {
             for approx in [false, true] {
                 for reuse in [false, true] {
-                    for dense in
-                        [DenseScheme::Rotated, DenseScheme::Broadcast, DenseScheme::Generic]
-                    {
-                        let mut e = OptInterp::new(
-                            &spec,
-                            CompileOptions {
-                                fold_bn: fold,
-                                approx,
-                                reuse_memory: reuse,
-                                dense,
-                            },
-                        )
-                        .unwrap();
-                        let out = e.infer(&x).unwrap();
-                        assert_eq!(out[0].shape(), &[1, 10]);
-                        let s: f32 = out[0].data().iter().sum();
-                        assert!(
-                            (s - 1.0).abs() < 1e-3,
-                            "fold={fold} approx={approx} dense={dense:?}: {s}"
-                        );
+                    for fuse_pool in [false, true] {
+                        for dense in
+                            [DenseScheme::Rotated, DenseScheme::Broadcast, DenseScheme::Generic]
+                        {
+                            for conv in [
+                                ConvScheme::Auto,
+                                ConvScheme::Direct,
+                                ConvScheme::Im2col,
+                                ConvScheme::Generic,
+                            ] {
+                                let mut e = OptInterp::new(
+                                    &spec,
+                                    CompileOptions {
+                                        fold_bn: fold,
+                                        approx,
+                                        reuse_memory: reuse,
+                                        dense,
+                                        conv,
+                                        fuse_pool,
+                                    },
+                                )
+                                .unwrap();
+                                let out = e.infer(&x).unwrap();
+                                assert_eq!(out[0].shape(), &[1, 10]);
+                                let s: f32 = out[0].data().iter().sum();
+                                assert!(
+                                    (s - 1.0).abs() < 1e-3,
+                                    "fold={fold} approx={approx} dense={dense:?} \
+                                     conv={conv:?} fuse_pool={fuse_pool}: {s}"
+                                );
+                            }
+                        }
                     }
                 }
             }

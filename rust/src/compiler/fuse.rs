@@ -7,6 +7,10 @@
 //!   (`post_scale`), applied in the producer's store loop.
 //! * Only single-consumer producers are folded (a second consumer would
 //!   observe the un-normalized tensor).
+//! * Conv → single-consumer MaxPool pairs are selected here
+//!   ([`fusible_maxpool_pairs`]) for the §3.4 store-loop merge: the
+//!   `Program` lowering runs the pool inside the conv kernel and the conv
+//!   intermediate never materializes.
 
 use std::collections::BTreeMap;
 
@@ -163,6 +167,40 @@ fn set_use_bias(op: &mut LayerOp) {
     }
 }
 
+/// §3.4 operation merging: conv → MaxPool pairs whose pool can run inside
+/// the conv's store loop. Returns conv name → pool name. Requirements:
+///
+/// * the pool's input is a `Conv2d` with no other consumer (a second
+///   consumer would need the un-pooled tensor materialized);
+/// * pool windows do not overlap (`stride >= max(kh, kw)`), so no conv
+///   pixel is computed twice;
+/// * the pool layer carries no activation/affine of its own (those belong
+///   to the conv's epilogue, which runs *before* the max — the unfused
+///   order).
+pub fn fusible_maxpool_pairs(spec: &ModelSpec) -> BTreeMap<String, String> {
+    let mut pairs = BTreeMap::new();
+    for l in &spec.layers {
+        let LayerOp::MaxPool { kh, kw, stride } = l.op else {
+            continue;
+        };
+        if stride < kh.max(kw) || l.activation != Activation::Linear || l.post_scale {
+            continue;
+        }
+        let src = &l.inputs[0];
+        let Some(producer) = spec.layers.iter().find(|p| &p.name == src) else {
+            continue; // pooling the model input directly
+        };
+        if !matches!(producer.op, LayerOp::Conv2d { .. }) {
+            continue;
+        }
+        if consumers(spec, src) != 1 {
+            continue;
+        }
+        pairs.insert(src.clone(), l.name.clone());
+    }
+    pairs
+}
+
 /// Count of BN layers remaining (ablation metric).
 pub fn bn_count(spec: &ModelSpec) -> usize {
     spec.layers
@@ -257,6 +295,27 @@ mod tests {
         let mut rng = SplitMix64::new(9);
         let x = Tensor::from_vec(&[1, 8, 8, 3], rng.uniform_vec(8 * 8 * 3));
         assert!(run(&once, &x).max_abs_diff(&run(&twice, &x)) < 1e-6);
+    }
+
+    #[test]
+    fn maxpool_pairs_require_single_consumer_conv() {
+        // tiny_cnn after folding: conv (ReLU + post-affine) → maxpool,
+        // single consumer → fusible.
+        let folded = fold_batchnorm(&tiny_cnn(12));
+        let pairs = fusible_maxpool_pairs(&folded);
+        assert_eq!(pairs.len(), 1, "{pairs:?}");
+        assert!(pairs.contains_key("conv1"), "{pairs:?}");
+
+        // unfolded: the BN between conv and pool means the pool's input is
+        // not a conv → nothing fusible.
+        assert!(fusible_maxpool_pairs(&tiny_cnn(12)).is_empty());
+
+        // a second consumer of the conv blocks fusion.
+        let mut b = Builder::new("t", &[4, 4, 2], 7);
+        let c = b.conv2d("input", 2, 3, 1, Activation::Relu);
+        let p = b.maxpool(&c, 2);
+        let spec = b.finish(&[&p, &c]); // conv is also a model output
+        assert!(fusible_maxpool_pairs(&spec).is_empty());
     }
 
     #[test]

@@ -3,9 +3,16 @@
 //! (activation + §3.5 post-affine) **in the store loop** — the paper's §3.4
 //! fusion ("the activation function is applied before writing the result of
 //! the operation into memory").
+//!
+//! Convolution additionally fuses a single-consumer following MaxPool into
+//! the same store loop ([`conv2d_run`] with `pool`): each output pixel is
+//! computed, activated, then max-merged straight into the pool cell, so the
+//! conv intermediate never materializes in the arena.
 
 use crate::approx;
 use crate::model::spec::{same_pads, Activation, Padding};
+use crate::nn::simd;
+use crate::nn::simd::CONV_BLOCK;
 
 /// Fused store epilogue: activation (exact or §3.4 approximation) followed
 /// by the optional folded-BN affine.
@@ -81,17 +88,45 @@ impl<'a> Epilogue<'a> {
     }
 }
 
-/// conv2d, NHWC × HWIO → NHWC, fused epilogue. Shapes are per the planner.
+/// How one conv output pixel is computed — the §3.3 lowering decision,
+/// made once per layer at compile time (see `ConvScheme` in
+/// [`crate::compiler::program`]) and monomorphized into the kernel struct.
+/// `Direct`/`Im2col` own [`simd::pack_conv_panels`] layouts; `Im2col`
+/// additionally owns its gather-row scratch so the hot path never
+/// allocates.
+pub enum ConvAlgo {
+    /// Scalar reference accumulation order — the bit-exact path, identical
+    /// tap order to `nn::layers::conv::conv2d`.
+    Generic { kernel: Vec<f32> },
+    /// 4-lane blocked panels read straight off the NHWC window (1×1
+    /// kernels and VALID windows are always fully in bounds).
+    Direct { panels: Vec<f32> },
+    /// 4-lane blocked panels over a gathered, zero-padded im2col row — one
+    /// contiguous FMA stream per pixel regardless of border clipping.
+    Im2col { panels: Vec<f32>, row: Vec<f32> },
+}
+
+/// conv2d, NHWC × HWIO → NHWC, fused epilogue, optional §3.4 fused MaxPool.
+///
+/// Without `pool` this writes the conv output (epilogue applied in the
+/// store loop). With `pool = Some((pkh, pkw, ps))` it writes the **pooled**
+/// output instead: each conv pixel is computed into `cell` (len `oc`),
+/// activated, and max-merged into its pool cell — the conv tensor never
+/// exists in memory, and conv pixels no pool window covers are never
+/// computed. Pool windows must not overlap (`ps >= max(pkh, pkw)`, the
+/// lowering's fusion gate), so no conv pixel is computed twice.
 #[allow(clippy::too_many_arguments)]
-pub fn conv2d_into(
+pub fn conv2d_run(
     x: &[f32],
     (b, h, w, c): (usize, usize, usize, usize),
-    kernel: &[f32],
+    algo: &mut ConvAlgo,
     (kh, kw, oc): (usize, usize, usize),
     bias: Option<&[f32]>,
     stride: usize,
     padding: Padding,
     ep: Epilogue,
+    pool: Option<(usize, usize, usize)>,
+    cell: &mut [f32],
     out: &mut [f32],
 ) {
     let (pt, pl) = match padding {
@@ -99,45 +134,242 @@ pub fn conv2d_into(
         Padding::Valid => (0, 0),
     };
     let (oh, ow) = crate::model::spec::conv_out(h, w, kh, kw, stride, padding);
-    debug_assert_eq!(out.len(), b * oh * ow * oc);
-
-    for n in 0..b {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let dst = &mut out[((n * oh + oy) * ow + ox) * oc..][..oc];
-                match bias {
-                    Some(bs) => dst.copy_from_slice(bs),
-                    None => dst.fill(0.0),
-                }
-                let y0 = (oy * stride) as isize - pt as isize;
-                let x0 = (ox * stride) as isize - pl as isize;
-                for ky in 0..kh {
-                    let iy = y0 + ky as isize;
-                    if iy < 0 || iy as usize >= h {
-                        continue;
-                    }
-                    for kx in 0..kw {
-                        let ix = x0 + kx as isize;
-                        if ix < 0 || ix as usize >= w {
-                            continue;
-                        }
-                        let px = &x[((n * h + iy as usize) * w + ix as usize) * c..][..c];
-                        let kbase = (ky * kw + kx) * c * oc;
-                        for (ci, &xv) in px.iter().enumerate() {
-                            if xv == 0.0 {
-                                continue; // ReLU-sparse inputs
-                            }
-                            let krow = &kernel[kbase + ci * oc..][..oc];
-                            for o in 0..oc {
-                                dst[o] += xv * krow[o];
-                            }
-                        }
+    match pool {
+        None => {
+            debug_assert_eq!(out.len(), b * oh * ow * oc);
+            for n in 0..b {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let dst = &mut out[((n * oh + oy) * ow + ox) * oc..][..oc];
+                        let y0 = (oy * stride) as isize - pt as isize;
+                        let x0 = (ox * stride) as isize - pl as isize;
+                        conv_pixel(x, (n, h, w, c), algo, (kh, kw, oc), bias, y0, x0, dst);
+                        ep.apply(dst);
                     }
                 }
-                ep.apply(dst);
+            }
+        }
+        Some((pkh, pkw, ps)) => {
+            let (ph, pw) = ((oh - pkh) / ps + 1, (ow - pkw) / ps + 1);
+            debug_assert_eq!(out.len(), b * ph * pw * oc);
+            debug_assert_eq!(cell.len(), oc);
+            for n in 0..b {
+                for py in 0..ph {
+                    for px in 0..pw {
+                        let dst = &mut out[((n * ph + py) * pw + px) * oc..][..oc];
+                        dst.fill(f32::NEG_INFINITY);
+                        for wy in 0..pkh {
+                            for wx in 0..pkw {
+                                let (oy, ox) = (py * ps + wy, px * ps + wx);
+                                let y0 = (oy * stride) as isize - pt as isize;
+                                let x0 = (ox * stride) as isize - pl as isize;
+                                conv_pixel(
+                                    x,
+                                    (n, h, w, c),
+                                    algo,
+                                    (kh, kw, oc),
+                                    bias,
+                                    y0,
+                                    x0,
+                                    cell,
+                                );
+                                ep.apply(cell);
+                                for (d, &v) in dst.iter_mut().zip(cell.iter()) {
+                                    if v > *d {
+                                        *d = v;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
             }
         }
     }
+}
+
+/// One output pixel's `oc` vector into `dst`, by the lowered algorithm.
+/// `(y0, x0)` is the window origin in input coordinates (may be negative
+/// under SAME padding).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn conv_pixel(
+    x: &[f32],
+    (n, h, w, c): (usize, usize, usize, usize),
+    algo: &mut ConvAlgo,
+    (kh, kw, oc): (usize, usize, usize),
+    bias: Option<&[f32]>,
+    y0: isize,
+    x0: isize,
+    dst: &mut [f32],
+) {
+    match algo {
+        ConvAlgo::Generic { kernel } => {
+            generic_pixel(x, (n, h, w, c), kernel, (kh, kw, oc), bias, y0, x0, dst)
+        }
+        ConvAlgo::Direct { panels } => {
+            direct_pixel(x, (n, h, w, c), panels, (kh, kw, oc), bias, y0, x0, dst)
+        }
+        ConvAlgo::Im2col { panels, row } => {
+            gather_row(x, (n, h, w, c), (kh, kw), y0, x0, row);
+            panel_row_pixel(panels, row, oc, bias, dst)
+        }
+    }
+}
+
+/// Scalar reference order (the pre-SIMD `conv2d_into` body): bias, then
+/// taps in (ky, kx, ci) order with the ReLU-sparsity skip — bit-identical
+/// to the naive oracle per output channel.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn generic_pixel(
+    x: &[f32],
+    (n, h, w, c): (usize, usize, usize, usize),
+    kernel: &[f32],
+    (kh, kw, oc): (usize, usize, usize),
+    bias: Option<&[f32]>,
+    y0: isize,
+    x0: isize,
+    dst: &mut [f32],
+) {
+    match bias {
+        Some(bs) => dst.copy_from_slice(bs),
+        None => dst.fill(0.0),
+    }
+    for ky in 0..kh {
+        let iy = y0 + ky as isize;
+        if iy < 0 || iy as usize >= h {
+            continue;
+        }
+        for kx in 0..kw {
+            let ix = x0 + kx as isize;
+            if ix < 0 || ix as usize >= w {
+                continue;
+            }
+            let px = &x[((n * h + iy as usize) * w + ix as usize) * c..][..c];
+            let kbase = (ky * kw + kx) * c * oc;
+            for (ci, &xv) in px.iter().enumerate() {
+                if xv == 0.0 {
+                    continue; // ReLU-sparse inputs
+                }
+                let krow = &kernel[kbase + ci * oc..][..oc];
+                for o in 0..oc {
+                    dst[o] += xv * krow[o];
+                }
+            }
+        }
+    }
+}
+
+/// §3.3 blocked direct-window path: per output-channel block of 4, the
+/// accumulators stay in registers across every in-bounds tap run (one
+/// contiguous channel vector per (ky, kx)).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn direct_pixel(
+    x: &[f32],
+    (n, h, w, c): (usize, usize, usize, usize),
+    panels: &[f32],
+    (kh, kw, oc): (usize, usize, usize),
+    bias: Option<&[f32]>,
+    y0: isize,
+    x0: isize,
+    dst: &mut [f32],
+) {
+    let taps = kh * kw * c;
+    let blocks = oc.div_ceil(CONV_BLOCK);
+    for ob in 0..blocks {
+        let panel = &panels[ob * taps * CONV_BLOCK..][..taps * CONV_BLOCK];
+        let mut acc = bias_lanes(bias, ob, oc);
+        for ky in 0..kh {
+            let iy = y0 + ky as isize;
+            if iy < 0 || iy as usize >= h {
+                continue;
+            }
+            for kx in 0..kw {
+                let ix = x0 + kx as isize;
+                if ix < 0 || ix as usize >= w {
+                    continue;
+                }
+                let px = &x[((n * h + iy as usize) * w + ix as usize) * c..][..c];
+                let t0 = (ky * kw + kx) * c;
+                simd::conv_fma_run(&panel[t0 * CONV_BLOCK..][..c * CONV_BLOCK], px, &mut acc);
+            }
+        }
+        store_lanes(&acc, ob, dst);
+    }
+}
+
+/// §3.3 blocked im2col path: one dense FMA stream over the gathered row.
+#[inline(always)]
+fn panel_row_pixel(
+    panels: &[f32],
+    row: &[f32],
+    oc: usize,
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+) {
+    let taps = row.len();
+    let blocks = oc.div_ceil(CONV_BLOCK);
+    for ob in 0..blocks {
+        let panel = &panels[ob * taps * CONV_BLOCK..][..taps * CONV_BLOCK];
+        let mut acc = bias_lanes(bias, ob, oc);
+        simd::conv_fma_run(panel, row, &mut acc);
+        store_lanes(&acc, ob, dst);
+    }
+}
+
+/// Gather one output pixel's zero-padded window into a contiguous im2col
+/// row: per kernel row, a single memcpy of the in-bounds kx span.
+#[inline(always)]
+fn gather_row(
+    x: &[f32],
+    (n, h, w, c): (usize, usize, usize, usize),
+    (kh, kw): (usize, usize),
+    y0: isize,
+    x0: isize,
+    row: &mut [f32],
+) {
+    debug_assert_eq!(row.len(), kh * kw * c);
+    row.fill(0.0);
+    let kx_lo = (-x0).max(0) as usize;
+    let kx_hi = ((w as isize - x0).min(kw as isize)).max(0) as usize;
+    if kx_lo >= kx_hi {
+        return;
+    }
+    for ky in 0..kh {
+        let iy = y0 + ky as isize;
+        if iy < 0 || iy as usize >= h {
+            continue;
+        }
+        let ix0 = (x0 + kx_lo as isize) as usize;
+        let src = &x[((n * h + iy as usize) * w + ix0) * c..][..(kx_hi - kx_lo) * c];
+        row[(ky * kw + kx_lo) * c..][..src.len()].copy_from_slice(src);
+    }
+}
+
+/// Accumulator init for output-channel block `ob`: bias lanes, zeros past
+/// `oc` (tail lanes are never stored).
+#[inline(always)]
+fn bias_lanes(bias: Option<&[f32]>, ob: usize, oc: usize) -> [f32; CONV_BLOCK] {
+    let mut acc = [0.0f32; CONV_BLOCK];
+    if let Some(bs) = bias {
+        for (l, a) in acc.iter_mut().enumerate() {
+            let o = ob * CONV_BLOCK + l;
+            if o < oc {
+                *a = bs[o];
+            }
+        }
+    }
+    acc
+}
+
+/// Store the real lanes of block `ob` into the `oc`-length pixel vector.
+#[inline(always)]
+fn store_lanes(acc: &[f32; CONV_BLOCK], ob: usize, dst: &mut [f32]) {
+    let o0 = ob * CONV_BLOCK;
+    let real = CONV_BLOCK.min(dst.len() - o0);
+    dst[o0..o0 + real].copy_from_slice(&acc[..real]);
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -406,29 +638,100 @@ mod tests {
         assert_eq!(v, [1.0, 9.0]); // relu then *2+1
     }
 
+    fn algo_for(scheme: &str, kernel: &[f32], taps: usize, oc: usize) -> ConvAlgo {
+        match scheme {
+            "generic" => ConvAlgo::Generic { kernel: kernel.to_vec() },
+            "direct" => ConvAlgo::Direct { panels: simd::pack_conv_panels(kernel, taps, oc) },
+            "im2col" => ConvAlgo::Im2col {
+                panels: simd::pack_conv_panels(kernel, taps, oc),
+                row: vec![0.0; taps],
+            },
+            other => panic!("unknown scheme {other}"),
+        }
+    }
+
     #[test]
-    fn conv_into_matches_reference() {
+    fn conv_run_all_schemes_match_reference() {
         use crate::nn::layers::conv::conv2d;
         use crate::nn::tensor::Tensor;
-        let mut rng = crate::util::rng::SplitMix64::new(3);
-        let x = Tensor::from_vec(&[1, 5, 5, 3], rng.uniform_vec(75));
-        let kernel = rng.uniform_vec(3 * 3 * 3 * 4);
-        let bias = rng.uniform_vec(4);
-        let r = conv2d(&x, &kernel, &[3, 3, 3, 4], Some(&bias), 1, Padding::Same);
-        let mut out = vec![0.0; r.len()];
-        conv2d_into(
-            x.data(),
-            (1, 5, 5, 3),
-            &kernel,
-            (3, 3, 4),
-            Some(&bias),
-            1,
-            Padding::Same,
-            Epilogue::NONE,
-            &mut out,
-        );
-        let worst = r.data().iter().zip(&out).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
-        assert!(worst < 1e-5, "{worst}");
+        // channels deliberately not multiples of 4 (c=3, oc=5) so the
+        // blocked paths exercise their padded tail lanes.
+        for (stride, padding) in
+            [(1, Padding::Same), (2, Padding::Same), (1, Padding::Valid), (2, Padding::Valid)]
+        {
+            let mut rng = crate::util::rng::SplitMix64::new(3);
+            let x = Tensor::from_vec(&[2, 5, 5, 3], rng.uniform_vec(2 * 5 * 5 * 3));
+            let kernel = rng.uniform_vec(3 * 3 * 3 * 5);
+            let bias = rng.uniform_vec(5);
+            let r = conv2d(&x, &kernel, &[3, 3, 3, 5], Some(&bias), stride, padding);
+            for scheme in ["generic", "direct", "im2col"] {
+                let mut algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
+                let mut out = vec![0.0; r.len()];
+                conv2d_run(
+                    x.data(),
+                    (2, 5, 5, 3),
+                    &mut algo,
+                    (3, 3, 5),
+                    Some(&bias),
+                    stride,
+                    padding,
+                    Epilogue::NONE,
+                    None,
+                    &mut [],
+                    &mut out,
+                );
+                let worst = r
+                    .data()
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(worst < 1e-5, "{scheme} s{stride} {padding:?}: {worst}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_pool_matches_conv_then_maxpool() {
+        use crate::nn::layers::conv::conv2d;
+        use crate::nn::layers::pool::maxpool;
+        use crate::nn::tensor::Tensor;
+        let mut rng = crate::util::rng::SplitMix64::new(9);
+        let x = Tensor::from_vec(&[1, 7, 7, 3], rng.uniform_vec(7 * 7 * 3));
+        let kernel = rng.uniform_vec(3 * 3 * 3 * 5);
+        let bias = rng.uniform_vec(5);
+        let ep = Epilogue { act: Activation::Relu, approx: false, post: None };
+        // reference: conv → relu → maxpool, all separate
+        let mut conv_ref = conv2d(&x, &kernel, &[3, 3, 3, 5], Some(&bias), 1, Padding::Same);
+        for v in conv_ref.data_mut() {
+            *v = v.max(0.0);
+        }
+        let want = maxpool(&conv_ref, 2, 2, 2);
+        for scheme in ["generic", "direct", "im2col"] {
+            let mut algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
+            let mut cell = vec![0.0; 5];
+            let mut out = vec![0.0; want.len()];
+            conv2d_run(
+                x.data(),
+                (1, 7, 7, 3),
+                &mut algo,
+                (3, 3, 5),
+                Some(&bias),
+                1,
+                Padding::Same,
+                ep,
+                Some((2, 2, 2)),
+                &mut cell,
+                &mut out,
+            );
+            let worst = want
+                .data()
+                .iter()
+                .zip(&out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(worst < 1e-5, "{scheme}: {worst}");
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 //! topologically-ordered layers with a free-list of retired buffers,
 //! first-fit by size, plus explicit in-place aliasing for elementwise units.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::Result;
 
@@ -51,15 +51,46 @@ impl MemoryPlan {
 /// Plan buffers for `spec`. `reuse = false` gives every tensor its own
 /// buffer (the ablation baseline).
 pub fn plan(spec: &ModelSpec, reuse: bool) -> Result<MemoryPlan> {
+    plan_elided(spec, reuse, &BTreeSet::new())
+}
+
+/// Follow §3.4-elided producer edges to the tensor a consumer actually
+/// reads (a fused conv's consumer reads the conv's *input*).
+fn resolve<'a>(source_of: &BTreeMap<&'a str, &'a str>, name: &'a str) -> &'a str {
+    let mut n = name;
+    while let Some(&s) = source_of.get(n) {
+        n = s;
+    }
+    n
+}
+
+/// [`plan`] with §3.4-fused intermediates elided: tensors in `elided` never
+/// materialize (their single consumer runs the producer inside its own
+/// store loop, reading the producer's input), so they get no buffer — and
+/// their consumer extends the producer's *input* lifetime to the consumer's
+/// position instead.
+pub fn plan_elided(
+    spec: &ModelSpec,
+    reuse: bool,
+    elided: &BTreeSet<String>,
+) -> Result<MemoryPlan> {
     let shapes = spec.infer_shapes()?;
     let size_of = |name: &str| -> usize { shapes[name].iter().product() };
 
-    // last use index per tensor; outputs live forever.
+    // elided tensor → the tensor its consumer reads in its place.
+    let source_of: BTreeMap<&str, &str> = spec
+        .layers
+        .iter()
+        .filter(|l| elided.contains(&l.name))
+        .map(|l| (l.name.as_str(), l.inputs[0].as_str()))
+        .collect();
+
+    // last use index per materialized tensor; outputs live forever.
     let mut last_use: BTreeMap<&str, usize> = BTreeMap::new();
     last_use.insert("input", 0);
     for (i, l) in spec.layers.iter().enumerate() {
         for inp in &l.inputs {
-            last_use.insert(inp.as_str(), i);
+            last_use.insert(resolve(&source_of, inp.as_str()), i);
         }
     }
     let eternal = spec.layers.len();
@@ -79,6 +110,9 @@ pub fn plan(spec: &ModelSpec, reuse: bool) -> Result<MemoryPlan> {
     let mut naive_total = size_of("input");
 
     for (i, l) in spec.layers.iter().enumerate() {
+        if elided.contains(&l.name) {
+            continue; // never materializes: no buffer, nothing to retire
+        }
         let need = size_of(&l.name);
         naive_total += need;
         if !reuse {
@@ -89,7 +123,7 @@ pub fn plan(spec: &ModelSpec, reuse: bool) -> Result<MemoryPlan> {
 
         // 1) in-place: output overwrites first input if the unit allows it,
         //    the input dies here, and capacity suffices.
-        let first = l.inputs[0].as_str();
+        let first = resolve(&source_of, l.inputs[0].as_str());
         let first_dead = last_use.get(first).copied() == Some(i);
         let mut assigned = None;
         if can_run_in_place(&l.op) && first_dead {
@@ -122,8 +156,9 @@ pub fn plan(spec: &ModelSpec, reuse: bool) -> Result<MemoryPlan> {
         // 3) retire buffers whose tensor dies at this layer (and wasn't
         //    just aliased to the new output).
         for inp in &l.inputs {
-            if last_use.get(inp.as_str()).copied() == Some(i) {
-                let ib = buffer_of[inp.as_str()];
+            let inp = resolve(&source_of, inp.as_str());
+            if last_use.get(inp).copied() == Some(i) {
+                let ib = buffer_of[inp];
                 if ib != b && !free.contains(&ib) {
                     free.push(ib);
                 }
@@ -194,6 +229,28 @@ mod tests {
         let spec = tiny_cnn(2);
         let p = plan(&spec, false).unwrap();
         assert_eq!(p.peak_elements(), p.naive_total);
+    }
+
+    #[test]
+    fn elided_intermediates_get_no_buffer_and_keep_input_alive() {
+        use crate::model::builder::Builder;
+        use crate::model::spec::Activation;
+        let mut b = Builder::new("t", &[4, 4, 2], 5);
+        let c = b.conv2d("input", 2, 3, 1, Activation::Relu);
+        let p = b.maxpool(&c, 2);
+        let spec = b.finish(&[&p]);
+        let mut elided = BTreeSet::new();
+        elided.insert(c.clone());
+        let fused = plan_elided(&spec, true, &elided).unwrap();
+        // the fused-away conv tensor owns no buffer …
+        assert!(!fused.buffer_of.contains_key(&c), "{fused:?}");
+        // … its consumer reads the conv's input, so the pool output must
+        // not alias it …
+        assert_ne!(fused.buffer_of[&p], fused.buffer_of["input"], "{fused:?}");
+        // … and dropping the intermediate never grows the arena.
+        let unfused = plan(&spec, true).unwrap();
+        assert!(fused.peak_elements() <= unfused.peak_elements());
+        assert!(fused.naive_total < unfused.naive_total);
     }
 
     #[test]

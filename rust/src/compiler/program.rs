@@ -24,7 +24,7 @@
 //! over a `Program` plus an [`ArenaPool`] (one arena per batch size, so
 //! bucketed serving is allocation-free in steady state).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::ops::Range;
 use std::time::Instant;
@@ -34,7 +34,7 @@ use anyhow::{bail, Result};
 use crate::compiler::fuse;
 use crate::compiler::kernels as k;
 use crate::compiler::memory;
-use crate::model::spec::{Activation, LayerOp, ModelSpec, Padding};
+use crate::model::spec::{Activation, Layer, LayerOp, ModelSpec, Padding};
 use crate::nn::simd;
 use crate::nn::tensor::Tensor;
 
@@ -52,6 +52,26 @@ pub enum DenseScheme {
     Generic,
 }
 
+/// How Conv2d layers are lowered (the §3.3 conv→matvec core): which inner
+/// loop computes each output pixel's channel vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvScheme {
+    /// Pick per layer from the statically known `kh/kw/stride/padding`:
+    /// 1×1 and VALID windows (always fully in bounds) go
+    /// [`ConvScheme::Direct`]; padded multi-tap windows go
+    /// [`ConvScheme::Im2col`].
+    Auto,
+    /// 4-lane output-channel-blocked FMA straight over the NHWC window
+    /// ([`simd::pack_conv_panels`] layout, border taps skipped).
+    Direct,
+    /// The same blocked FMA over a gathered, zero-padded im2col row — one
+    /// contiguous stream per pixel regardless of border clipping.
+    Im2col,
+    /// The scalar reference loop (also the bit-exact path: it accumulates
+    /// in the same order as the naive oracle).
+    Generic,
+}
+
 /// Which of the paper's optimizations the lowering applies (each is an
 /// ablation axis exercised by `benches/ablations.rs`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -64,11 +84,24 @@ pub struct CompileOptions {
     pub reuse_memory: bool,
     /// §3.3 Dense matvec scheme selection.
     pub dense: DenseScheme,
+    /// §3.3 Conv2d kernel scheme selection.
+    pub conv: ConvScheme,
+    /// §3.4 operation merging: run a single-consumer MaxPool inside its
+    /// producing conv's store loop (the conv intermediate never
+    /// materializes in the arena).
+    pub fuse_pool: bool,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        Self { fold_bn: true, approx: true, reuse_memory: true, dense: DenseScheme::Rotated }
+        Self {
+            fold_bn: true,
+            approx: true,
+            reuse_memory: true,
+            dense: DenseScheme::Rotated,
+            conv: ConvScheme::Auto,
+            fuse_pool: true,
+        }
     }
 }
 
@@ -76,10 +109,19 @@ impl CompileOptions {
     /// Options under which the lowered program is **bit-identical** to the
     /// naive oracle: approximations off and every value-reassociating
     /// transform disabled (folding a BN into a *linear* producer re-orders
-    /// multiplications; the matvec schemes re-order accumulation). The
-    /// §3.2 memory plan stays on — address assignment never changes math.
+    /// multiplications; the matvec and blocked-conv schemes re-order or
+    /// pad accumulation; pool fusion is off so the reference kernels run
+    /// stand-alone). The §3.2 memory plan stays on — address assignment
+    /// never changes math.
     pub fn bit_exact() -> Self {
-        Self { fold_bn: false, approx: false, reuse_memory: true, dense: DenseScheme::Generic }
+        Self {
+            fold_bn: false,
+            approx: false,
+            reuse_memory: true,
+            dense: DenseScheme::Generic,
+            conv: ConvScheme::Generic,
+            fuse_pool: false,
+        }
     }
 }
 
@@ -242,6 +284,12 @@ pub struct PlanSummary {
     pub rotated_dense: usize,
     /// Dense layers lowered to the §3.3 broadcast matvec.
     pub broadcast_dense: usize,
+    /// Conv layers lowered to the blocked direct-window scheme.
+    pub direct_conv: usize,
+    /// Conv layers lowered to the blocked im2col-row scheme.
+    pub im2col_conv: usize,
+    /// §3.4 MaxPools merged into their producing conv's store loop.
+    pub fused_maxpool: usize,
     /// Weight elements copied/transformed out of the blob into kernels.
     pub weight_elems: usize,
 }
@@ -251,7 +299,8 @@ impl fmt::Display for PlanSummary {
         writeln!(
             f,
             "{}: {} steps ({} in-place, {} elided), {} buffers × {} arena elems/item, \
-             {} BN folded, dense {} rotated / {} broadcast, {} weight elems",
+             {} BN folded, dense {} rotated / {} broadcast, \
+             conv {} direct / {} im2col, {} maxpool fused, {} weight elems",
             self.model,
             self.steps.len(),
             self.in_place_steps,
@@ -261,6 +310,9 @@ impl fmt::Display for PlanSummary {
             self.folded_bn,
             self.rotated_dense,
             self.broadcast_dense,
+            self.direct_conv,
+            self.im2col_conv,
+            self.fused_maxpool,
             self.weight_elems
         )?;
         for s in &self.steps {
@@ -294,7 +346,18 @@ impl Program {
         let folded =
             if opts.fold_bn { fuse::fold_batchnorm(spec) } else { spec.clone() };
         folded.validate()?;
-        let plan = memory::plan(&folded, opts.reuse_memory)?;
+        // §3.4 operation merging: single-consumer conv → MaxPool pairs run
+        // as one kernel; the conv intermediate is elided from the §3.2 plan
+        // (its buffer never exists, its input lives until the pool runs).
+        let pool_of: BTreeMap<String, String> = if opts.fuse_pool {
+            fuse::fusible_maxpool_pairs(&folded)
+        } else {
+            BTreeMap::new()
+        };
+        let conv_of: BTreeMap<&str, &str> =
+            pool_of.iter().map(|(c, p)| (p.as_str(), c.as_str())).collect();
+        let elided: BTreeSet<String> = pool_of.keys().cloned().collect();
+        let plan = memory::plan_elided(&folded, opts.reuse_memory, &elided)?;
         let shapes = folded.infer_shapes()?;
 
         // Arena layout: prefix-sum the planned buffer capacities so every
@@ -324,6 +387,57 @@ impl Program {
         let mut steps: Vec<Step> = Vec::with_capacity(folded.layers.len());
 
         for l in &folded.layers {
+            if let Some(pool) = pool_of.get(&l.name) {
+                // §3.4: this conv runs inside its MaxPool consumer's store
+                // loop; the fused kernel is emitted at the pool's position.
+                summary
+                    .steps
+                    .push(format!("{}: conv2d (fused into `{pool}`)", l.name));
+                continue;
+            }
+            if let (LayerOp::MaxPool { kh, kw, stride }, Some(&conv_name)) =
+                (&l.op, conv_of.get(l.name.as_str()))
+            {
+                let dst = span_of(&l.name);
+                spans.insert(l.name.clone(), dst);
+                let conv = folded.layer(conv_name)?;
+                let LayerOp::Conv2d { kh: ckh, kw: ckw, out_ch, stride: cs, padding, .. } =
+                    &conv.op
+                else {
+                    bail!("fused pool `{}` producer `{conv_name}` is not a conv", l.name);
+                };
+                let src = span_of(&conv.inputs[0]);
+                let cin = &shapes[&conv.inputs[0]];
+                // The conv's own epilogue (activation + folded-BN affine)
+                // runs per pixel *before* the max — the unfused order.
+                let ep = ep_spec(&folded, conv, opts.approx, &mut summary)?;
+                let (algo, bias, scheme) =
+                    lower_conv_weights(&folded, conv, cin[2], opts, &mut summary)?;
+                summary.fused_maxpool += 1;
+                let kind = format!(
+                    "conv2d+maxpool[{ckh}x{ckw}x{}→{out_ch} s{cs}; pool {kh}x{kw} s{stride}]\
+                     [{scheme}]{}",
+                    cin[2],
+                    ep.label()
+                );
+                summary.steps.push(format!("{}: {kind}", l.name));
+                steps.push(Step {
+                    kernel: Box::new(ConvK {
+                        src,
+                        dst,
+                        in_hwc: (cin[0], cin[1], cin[2]),
+                        khw_oc: (*ckh, *ckw, *out_ch),
+                        stride: *cs,
+                        padding: *padding,
+                        algo,
+                        bias,
+                        ep,
+                        pool: Some((*kh, *kw, *stride)),
+                        cell: vec![0.0; *out_ch],
+                    }),
+                });
+                continue;
+            }
             let src = span_of(&l.inputs[0]);
             let dst = span_of(&l.name);
             spans.insert(l.name.clone(), dst);
@@ -331,48 +445,33 @@ impl Program {
             let out_shape = &shapes[&l.name];
             let in_place = plan.buffer_of[&l.name] == plan.buffer_of[&l.inputs[0]];
             let hwc = |s: &[usize]| (s[0], s[1], s[2]);
-            let post = if l.post_scale {
-                Some((
-                    folded.weight(l, "post_scale_w")?.to_vec(),
-                    folded.weight(l, "post_shift_w")?.to_vec(),
-                ))
-            } else {
-                None
-            };
-            if let Some((s, h)) = &post {
-                summary.weight_elems += s.len() + h.len();
-            }
-            let ep = EpSpec { act: l.activation, approx: opts.approx, post };
+            let ep = ep_spec(&folded, l, opts.approx, &mut summary)?;
 
             let (kernel, kind): (Box<dyn Kernel>, String) = match &l.op {
-                LayerOp::Conv2d { kh, kw, out_ch, stride, padding, use_bias } => {
+                LayerOp::Conv2d { kh, kw, out_ch, stride, padding, .. } => {
                     if in_place {
                         bail!("conv2d `{}` cannot run in place", l.name);
                     }
-                    let kernel = folded.weight(l, "kernel")?.to_vec();
-                    let bias = if *use_bias {
-                        Some(folded.weight(l, "bias")?.to_vec())
-                    } else {
-                        None
-                    };
-                    summary.weight_elems +=
-                        kernel.len() + bias.as_ref().map_or(0, Vec::len);
+                    let (algo, bias, scheme) =
+                        lower_conv_weights(&folded, l, in_shape[2], opts, &mut summary)?;
                     let kind = format!(
-                        "conv2d[{kh}x{kw}x{}→{out_ch} s{stride}]{}",
+                        "conv2d[{kh}x{kw}x{}→{out_ch} s{stride}][{scheme}]{}",
                         in_shape[2],
                         ep.label()
                     );
                     (
-                        Box::new(Conv2dK {
+                        Box::new(ConvK {
                             src,
                             dst,
                             in_hwc: hwc(in_shape),
                             khw_oc: (*kh, *kw, *out_ch),
                             stride: *stride,
                             padding: *padding,
-                            kernel,
+                            algo,
                             bias,
                             ep,
+                            pool: None,
+                            cell: Vec::new(),
                         }),
                         kind,
                     )
@@ -696,6 +795,95 @@ impl Program {
     }
 }
 
+/// A layer's fused store epilogue (activation + §3.5 post-affine), with
+/// the post-affine weight accounting. Shared by every lowering arm and the
+/// fused conv+maxpool branch.
+fn ep_spec(
+    folded: &ModelSpec,
+    l: &Layer,
+    approx: bool,
+    summary: &mut PlanSummary,
+) -> Result<EpSpec> {
+    let post = if l.post_scale {
+        Some((
+            folded.weight(l, "post_scale_w")?.to_vec(),
+            folded.weight(l, "post_shift_w")?.to_vec(),
+        ))
+    } else {
+        None
+    };
+    if let Some((s, h)) = &post {
+        summary.weight_elems += s.len() + h.len();
+    }
+    Ok(EpSpec { act: l.activation, approx, post })
+}
+
+/// Fetch a conv layer's kernel + bias out of the blob and lower them to
+/// the selected §3.3 algo (weight accounting included). Shared by the
+/// stand-alone Conv2d arm and the §3.4 fused conv+maxpool branch so the
+/// two can never drift apart.
+fn lower_conv_weights(
+    folded: &ModelSpec,
+    conv: &Layer,
+    in_ch: usize,
+    opts: CompileOptions,
+    summary: &mut PlanSummary,
+) -> Result<(k::ConvAlgo, Option<Vec<f32>>, &'static str)> {
+    let LayerOp::Conv2d { kh, kw, out_ch, use_bias, padding, .. } = &conv.op else {
+        bail!("`{}` is not a conv2d", conv.name);
+    };
+    let kernel = folded.weight(conv, "kernel")?.to_vec();
+    let bias =
+        if *use_bias { Some(folded.weight(conv, "bias")?.to_vec()) } else { None };
+    summary.weight_elems += kernel.len() + bias.as_ref().map_or(0, Vec::len);
+    let (algo, scheme) =
+        lower_conv_algo(opts.conv, kernel, (*kh, *kw, in_ch, *out_ch), *padding, summary);
+    Ok((algo, bias, scheme))
+}
+
+/// Pick the §3.3 conv lowering for a layer's statically known shape and
+/// pack the kernel accordingly; returns the algo plus its summary label.
+/// `Auto` resolves from the window geometry: 1×1 and VALID windows are
+/// always fully in bounds (read NHWC directly); padded multi-tap windows
+/// gather one contiguous im2col row instead of branching per tap.
+fn lower_conv_algo(
+    scheme: ConvScheme,
+    kernel: Vec<f32>,
+    (kh, kw, c, oc): (usize, usize, usize, usize),
+    padding: Padding,
+    summary: &mut PlanSummary,
+) -> (k::ConvAlgo, &'static str) {
+    let taps = kh * kw * c;
+    debug_assert_eq!(kernel.len(), taps * oc);
+    let pick = match scheme {
+        ConvScheme::Auto => {
+            if (kh == 1 && kw == 1) || padding == Padding::Valid {
+                ConvScheme::Direct
+            } else {
+                ConvScheme::Im2col
+            }
+        }
+        forced => forced,
+    };
+    match pick {
+        ConvScheme::Direct => {
+            summary.direct_conv += 1;
+            (k::ConvAlgo::Direct { panels: simd::pack_conv_panels(&kernel, taps, oc) }, "direct")
+        }
+        ConvScheme::Im2col => {
+            summary.im2col_conv += 1;
+            (
+                k::ConvAlgo::Im2col {
+                    panels: simd::pack_conv_panels(&kernel, taps, oc),
+                    row: vec![0.0; taps],
+                },
+                "im2col",
+            )
+        }
+        _ => (k::ConvAlgo::Generic { kernel }, "generic"),
+    }
+}
+
 /// Transpose a `[n, out]`-layout Dense kernel (`y[o] = Σ_i x[i] K[i][o]`)
 /// into the row-major `y = W x` orientation the §3.3 matvec kernels use
 /// (`W[i][j] = K[j][i]`). Square only; done once at lowering.
@@ -797,31 +985,39 @@ fn srcs_dst(
 
 // ------------------------------------------------------------------ kernels
 
-struct Conv2dK {
+/// Conv2d under any §3.3 scheme ([`k::ConvAlgo`] chosen at lowering), with
+/// the §3.4 epilogue in the store loop and optionally a fused
+/// single-consumer MaxPool (`pool` window + owned per-pixel `cell`
+/// scratch, so the conv intermediate never exists in the arena).
+struct ConvK {
     src: Span,
     dst: Span,
     in_hwc: (usize, usize, usize),
     khw_oc: (usize, usize, usize),
     stride: usize,
     padding: Padding,
-    kernel: Vec<f32>,
+    algo: k::ConvAlgo,
     bias: Option<Vec<f32>>,
     ep: EpSpec,
+    pool: Option<(usize, usize, usize)>,
+    cell: Vec<f32>,
 }
 
-impl Kernel for Conv2dK {
+impl Kernel for ConvK {
     fn run(&mut self, batch: usize, data: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
-        k::conv2d_into(
+        k::conv2d_run(
             x,
             (batch, h, w, c),
-            &self.kernel,
+            &mut self.algo,
             self.khw_oc,
             self.bias.as_deref(),
             self.stride,
             self.padding,
             self.ep.epilogue(),
+            self.pool,
+            &mut self.cell,
             out,
         );
     }
@@ -1209,12 +1405,80 @@ mod tests {
         let p = Program::lower(&spec, CompileOptions::default()).unwrap();
         let s = p.summary();
         assert_eq!(s.folded_bn, 1, "{s}");
-        // conv, maxpool, dense, softmax survive; flatten elides in place.
+        // conv+maxpool fuse into one step; dense, softmax survive; flatten
+        // elides in place.
         assert!(s.steps.len() >= 4, "{s}");
         assert!(s.elided_steps >= 1, "{s}");
         assert!(s.weight_elems > 0 && s.arena_item_elems > 0, "{s}");
         // tiny_cnn's dense is 48→10 — not square, so never rotated.
         assert_eq!(s.rotated_dense, 0, "{s}");
+        // §3.4: the single-consumer maxpool merges into the conv, which is
+        // 3×3 SAME → Auto picks the im2col scheme.
+        assert_eq!(s.fused_maxpool, 1, "{s}");
+        assert_eq!(s.im2col_conv, 1, "{s}");
+        assert!(s.steps.iter().any(|l| l.contains("conv2d+maxpool")), "{s}");
+    }
+
+    #[test]
+    fn conv_schemes_agree_and_are_counted() {
+        let spec = tiny_cnn(67);
+        let mut rng = SplitMix64::new(21);
+        let x = Tensor::from_vec(&[2, 8, 8, 3], rng.uniform_vec(2 * 8 * 8 * 3));
+        let want = NaiveInterp::new(spec.clone()).unwrap().infer(&x).unwrap();
+        for fuse_pool in [false, true] {
+            for scheme in
+                [ConvScheme::Auto, ConvScheme::Direct, ConvScheme::Im2col, ConvScheme::Generic]
+            {
+                let opts = CompileOptions {
+                    approx: false,
+                    conv: scheme,
+                    fuse_pool,
+                    ..CompileOptions::default()
+                };
+                let mut p = Program::lower(&spec, opts).unwrap();
+                let s = p.summary();
+                match scheme {
+                    ConvScheme::Direct => assert_eq!(s.direct_conv, 1, "{s}"),
+                    // tiny_cnn's conv is 3×3 SAME → Auto resolves to im2col
+                    ConvScheme::Im2col | ConvScheme::Auto => {
+                        assert_eq!(s.im2col_conv, 1, "{s}")
+                    }
+                    ConvScheme::Generic => {
+                        assert_eq!(s.direct_conv + s.im2col_conv, 0, "{s}")
+                    }
+                }
+                assert_eq!(s.fused_maxpool, usize::from(fuse_pool), "{s}");
+                let mut arena = p.new_arena(2);
+                p.load_input(&mut arena, &x);
+                p.run(&mut arena);
+                let got = p.read_outputs(&arena);
+                let d = want[0].max_abs_diff(&got[0]);
+                assert!(d < 1e-4, "{scheme:?} fuse_pool={fuse_pool}: diff {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn overlapping_pool_windows_are_not_fused() {
+        use crate::model::builder::Builder;
+
+        // pool stride < window → fusing would recompute conv pixels; the
+        // lowering must keep the two kernels separate (and stay correct).
+        let mut b = Builder::new("overlap", &[6, 6, 2], 13);
+        let c = b.conv2d("input", 3, 3, 1, Activation::Relu);
+        let p = b.maxpool_with_stride(&c, 3, 1);
+        let spec = b.finish(&[&p]);
+        let mut prog = Program::lower(&spec, CompileOptions::default()).unwrap();
+        assert_eq!(prog.summary().fused_maxpool, 0, "{}", prog.summary());
+
+        let mut rng = SplitMix64::new(14);
+        let x = Tensor::from_vec(&[1, 6, 6, 2], rng.uniform_vec(72));
+        let want = NaiveInterp::new(spec.clone()).unwrap().infer(&x).unwrap();
+        let mut arena = prog.new_arena(1);
+        prog.load_input(&mut arena, &x);
+        prog.run(&mut arena);
+        let got = prog.read_outputs(&arena);
+        assert!(want[0].max_abs_diff(&got[0]) < 1e-4);
     }
 
     #[test]
@@ -1308,6 +1572,44 @@ mod tests {
         assert!(pool.arenas.iter().any(|a| a.bytes() == biggest));
     }
 
+    /// Interleaved serving across batch buckets must be allocation-stable:
+    /// after the first pass per bucket, neither the pool length, nor the
+    /// pooled byte total, nor any per-bucket arena size may grow again.
+    #[test]
+    fn interleaved_buckets_stabilize_after_first_pass() {
+        let spec = tiny_cnn(68);
+        let mut p = Program::lower(&spec, CompileOptions::default()).unwrap();
+        let mut pool = ArenaPool::new();
+        let buckets = [1usize, 3, 5];
+        let mut rng = SplitMix64::new(19);
+
+        let mut run = |pool: &mut ArenaPool, p: &mut Program, batch: usize| -> usize {
+            let x = Tensor::from_vec(
+                &[batch, 8, 8, 3],
+                rng.uniform_vec(batch * 8 * 8 * 3),
+            );
+            let arena = pool.get(p, batch);
+            p.load_input(arena, &x);
+            p.run(arena);
+            arena.bytes()
+        };
+
+        // first pass per bucket: each allocates its arena exactly once
+        let first: Vec<usize> = buckets.iter().map(|&b| run(&mut pool, &mut p, b)).collect();
+        let (len0, bytes0) = (pool.len(), pool.bytes());
+        assert_eq!(len0, buckets.len());
+
+        // interleave the buckets for several rounds: steady state
+        for _ in 0..4 {
+            for (i, &b) in buckets.iter().enumerate() {
+                let per_bucket = run(&mut pool, &mut p, b);
+                assert_eq!(per_bucket, first[i], "bucket {b} arena regrew");
+            }
+            assert_eq!(pool.len(), len0, "pool length grew in steady state");
+            assert_eq!(pool.bytes(), bytes0, "pool bytes grew in steady state");
+        }
+    }
+
     #[test]
     fn reserved_buckets_are_never_evicted() {
         // a serving bucket set larger than the unpinned cap stays fully
@@ -1343,9 +1645,14 @@ mod tests {
             50,
             |r: &mut SplitMix64| random_chain(r),
             |spec| {
-                // fold off so the lifetime analysis below matches the
-                // lowered graph layer-for-layer
-                let opts = CompileOptions { fold_bn: false, ..CompileOptions::default() };
+                // fold + pool fusion off so the lifetime analysis below
+                // matches the lowered graph layer-for-layer (fused convs
+                // have no span; the fuzz suite covers fused value parity)
+                let opts = CompileOptions {
+                    fold_bn: false,
+                    fuse_pool: false,
+                    ..CompileOptions::default()
+                };
                 let p = Program::lower(spec, opts).map_err(|e| e.to_string())?;
                 // def/last-use indices, same convention as the §3.2 planner
                 let mut def: BTreeMap<&str, usize> = BTreeMap::new();

@@ -217,15 +217,21 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         folded.layers.len()
     );
 
-    let plan = memory::plan(&folded, true)?;
-    let no_reuse = memory::plan(&folded, false)?;
+    // Plan with the same §3.4 pool-fusion elision the default lowering
+    // applies, so the reported peak matches the arena the engine allocates.
+    let elided: std::collections::BTreeSet<String> =
+        fuse::fusible_maxpool_pairs(&folded).into_keys().collect();
+    let plan = memory::plan_elided(&folded, true, &elided)?;
+    let no_reuse = memory::plan_elided(&folded, false, &elided)?;
     println!(
-        "§3.2 memory: {} buffers, {} elements peak vs {} naive ({:.1}% saved), {} in-place aliases",
+        "§3.2 memory: {} buffers, {} elements peak vs {} naive ({:.1}% saved), \
+         {} in-place aliases, {} fused intermediates elided",
         plan.buffer_sizes.len(),
         plan.peak_elements(),
         no_reuse.naive_total,
         100.0 * (1.0 - plan.peak_elements() as f64 / no_reuse.naive_total as f64),
-        plan.in_place_hits
+        plan.in_place_hits,
+        elided.len()
     );
 
     println!("§3.3 cost model:");

@@ -96,6 +96,87 @@ impl Builder {
         )
     }
 
+    /// Full-control conv2d: padding mode and bias on/off (the differential
+    /// fuzz generator exercises every combination).
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv2d_cfg(
+        &mut self,
+        x: &str,
+        out_ch: usize,
+        k: usize,
+        stride: usize,
+        padding: Padding,
+        use_bias: bool,
+        act: Activation,
+    ) -> String {
+        let in_shape = self.shapes[x].clone();
+        let (h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+        assert!(
+            padding == Padding::Same || (h >= k && w >= k),
+            "VALID conv kernel {k} larger than input {h}x{w}"
+        );
+        let kernel = self.alloc_he(&[k, k, c, out_ch], k * k * c);
+        let (oh, ow) = conv_out(h, w, k, k, stride, padding);
+        let name = self.fresh("conv");
+        let mut weights = BTreeMap::new();
+        weights.insert("kernel".into(), kernel);
+        if use_bias {
+            // uniform (not zero) bias so use_bias=true is observable
+            let offset = self.blob.len();
+            for _ in 0..out_ch {
+                let v = self.rng.next_uniform() * 0.1;
+                self.blob.push(v);
+            }
+            weights.insert("bias".into(), WeightRef { offset, shape: vec![out_ch] });
+        }
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::Conv2d { kh: k, kw: k, out_ch, stride, padding, use_bias },
+                inputs: vec![x.to_string()],
+                weights,
+                activation: act,
+                post_scale: false,
+            },
+            vec![oh, ow, out_ch],
+        )
+    }
+
+    /// Depthwise conv2d (`[k, k, C, 1]` kernel, Keras layout).
+    pub fn dwconv2d(
+        &mut self,
+        x: &str,
+        k: usize,
+        stride: usize,
+        padding: Padding,
+        act: Activation,
+    ) -> String {
+        let in_shape = self.shapes[x].clone();
+        let (h, w, c) = (in_shape[0], in_shape[1], in_shape[2]);
+        assert!(
+            padding == Padding::Same || (h >= k && w >= k),
+            "VALID dwconv kernel {k} larger than input {h}x{w}"
+        );
+        let kernel = self.alloc_he(&[k, k, c, 1], k * k);
+        let bias = self.alloc_zeros(c);
+        let (oh, ow) = conv_out(h, w, k, k, stride, padding);
+        let name = self.fresh("dwconv");
+        let mut weights = BTreeMap::new();
+        weights.insert("kernel".into(), kernel);
+        weights.insert("bias".into(), bias);
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::DepthwiseConv2d { kh: k, kw: k, stride, padding, use_bias: true },
+                inputs: vec![x.to_string()],
+                weights,
+                activation: act,
+                post_scale: false,
+            },
+            vec![oh, ow, c],
+        )
+    }
+
     pub fn batchnorm(&mut self, x: &str) -> String {
         let shape = self.shapes[x].clone();
         let c = *shape.last().unwrap();
@@ -136,12 +217,36 @@ impl Builder {
     }
 
     pub fn maxpool(&mut self, x: &str, k: usize) -> String {
+        self.maxpool_with_stride(x, k, k)
+    }
+
+    /// MaxPool with stride ≠ window (stride < k makes windows overlap,
+    /// which gates the §3.4 conv+pool fusion off).
+    pub fn maxpool_with_stride(&mut self, x: &str, k: usize, stride: usize) -> String {
         let s = self.shapes[x].clone();
+        assert!(s[0] >= k && s[1] >= k, "maxpool window {k} larger than input");
         let name = self.fresh("maxpool");
         self.push(
             Layer {
                 name,
-                op: LayerOp::MaxPool { kh: k, kw: k, stride: k },
+                op: LayerOp::MaxPool { kh: k, kw: k, stride },
+                inputs: vec![x.to_string()],
+                weights: BTreeMap::new(),
+                activation: Activation::Linear,
+                post_scale: false,
+            },
+            vec![(s[0] - k) / stride + 1, (s[1] - k) / stride + 1, s[2]],
+        )
+    }
+
+    pub fn avgpool(&mut self, x: &str, k: usize) -> String {
+        let s = self.shapes[x].clone();
+        assert!(s[0] >= k && s[1] >= k, "avgpool window {k} larger than input");
+        let name = self.fresh("avgpool");
+        self.push(
+            Layer {
+                name,
+                op: LayerOp::AvgPool { kh: k, kw: k, stride: k },
                 inputs: vec![x.to_string()],
                 weights: BTreeMap::new(),
                 activation: Activation::Linear,
@@ -339,6 +444,66 @@ pub fn random_chain(r: &mut SplitMix64) -> ModelSpec {
     b.finish(&[&out])
 }
 
+/// Random conv/dwconv/pool/dense graphs for the cross-engine differential
+/// fuzz suite (`tests/fuzz_engines.rs`): odd spatial dims, stride 2, SAME
+/// *and* VALID padding, channel counts off the 4-lane grid, bias on/off,
+/// overlapping and non-overlapping pools — the shapes where a blocked SIMD
+/// conv kernel or a fused store loop can go wrong.
+pub fn random_conv_net(r: &mut SplitMix64) -> ModelSpec {
+    let h = 5 + 2 * r.below(3); // 5 | 7 | 9 — always odd
+    let w = 4 + r.below(6); // 4..=9 — odd and even
+    let c = 1 + r.below(5); // 1..=5 — rarely a multiple of 4
+    let mut b = Builder::new("fuzz", &[h, w, c], r.next_u64());
+    let mut cur = "input".to_string();
+    let acts = [Activation::Relu, Activation::Linear, Activation::Tanh, Activation::Sigmoid];
+    for _ in 0..1 + r.below(4) {
+        let s = b.shape_of(&cur).to_vec();
+        match r.below(6) {
+            0 | 1 => {
+                let k = 1 + r.below(3); // 1..=3
+                let stride = 1 + r.below(2); // 1..=2
+                let padding = if r.below(2) == 0 || s[0] < k || s[1] < k {
+                    Padding::Same
+                } else {
+                    Padding::Valid
+                };
+                let oc = 1 + r.below(6); // 1..=6
+                let act = acts[r.below(acts.len())];
+                cur = b.conv2d_cfg(&cur, oc, k, stride, padding, r.below(2) == 0, act);
+            }
+            2 => {
+                let k = 1 + r.below(3);
+                let stride = 1 + r.below(2);
+                let padding = if r.below(2) == 0 || s[0] < k || s[1] < k {
+                    Padding::Same
+                } else {
+                    Padding::Valid
+                };
+                let act = acts[r.below(acts.len())];
+                cur = b.dwconv2d(&cur, k, stride, padding, act);
+            }
+            3 => {
+                if s[0] >= 2 && s[1] >= 2 {
+                    // stride 1 overlaps (fusion gated off), stride 2 fuses
+                    cur = b.maxpool_with_stride(&cur, 2, 1 + r.below(2));
+                }
+            }
+            4 => {
+                if s[0] >= 2 && s[1] >= 2 {
+                    cur = b.avgpool(&cur, 2);
+                }
+            }
+            _ => cur = b.batchnorm(&cur),
+        }
+    }
+    if r.below(2) == 0 {
+        let f = b.flatten(&cur);
+        cur = b.dense(&f, 3 + r.below(8), acts[r.below(acts.len())]);
+    }
+    let out = cur.clone();
+    b.finish(&[&out])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -355,5 +520,30 @@ mod tests {
     fn deterministic_per_seed() {
         assert_eq!(tiny_cnn(3).weights, tiny_cnn(3).weights);
         assert_ne!(tiny_cnn(3).weights, tiny_cnn(4).weights);
+    }
+
+    #[test]
+    fn random_conv_net_always_validates_and_covers_the_edge_cases() {
+        use crate::model::spec::LayerOp;
+        let mut r = SplitMix64::new(33);
+        let (mut valid_pad, mut strided, mut biasless, mut dw) = (0, 0, 0, 0);
+        for _ in 0..200 {
+            let spec = random_conv_net(&mut r);
+            spec.validate().unwrap();
+            for l in &spec.layers {
+                match l.op {
+                    LayerOp::Conv2d { stride, padding, use_bias, .. } => {
+                        valid_pad += usize::from(padding == Padding::Valid);
+                        strided += usize::from(stride > 1);
+                        biasless += usize::from(!use_bias);
+                    }
+                    LayerOp::DepthwiseConv2d { .. } => dw += 1,
+                    _ => {}
+                }
+            }
+        }
+        // the generator must actually reach the hard cases it exists for
+        assert!(valid_pad > 0 && strided > 0 && biasless > 0 && dw > 0,
+            "coverage: valid={valid_pad} strided={strided} biasless={biasless} dw={dw}");
     }
 }

@@ -195,9 +195,14 @@ impl ModelSpec {
                     vec![*units]
                 }
                 LayerOp::BatchNorm { .. } | LayerOp::Activation | LayerOp::Softmax => input,
-                LayerOp::MaxPool { stride, .. } | LayerOp::AvgPool { stride, .. } => {
+                LayerOp::MaxPool { kh, kw, stride } | LayerOp::AvgPool { kh, kw, stride } => {
                     let (h, w) = hw(&input, &l.name)?;
-                    vec![h / stride, w / stride, input[2]]
+                    if h < *kh || w < *kw {
+                        bail!("pool `{}` window {kh}x{kw} larger than input {h}x{w}", l.name);
+                    }
+                    // VALID pooling dims; identical to h/stride when the
+                    // stride equals the window, correct when it does not.
+                    vec![(h - kh) / stride + 1, (w - kw) / stride + 1, input[2]]
                 }
                 LayerOp::GlobalAvgPool => {
                     let (_, _) = hw(&input, &l.name)?;

@@ -178,6 +178,56 @@ mod tests {
     }
 
     #[test]
+    fn conv_1x1_is_a_per_pixel_matvec() {
+        // 1×1 conv ≡ channel matvec: hand-computed against K = [[1,2],[3,4]]
+        // (HWIO: k[ci*oc + o]). Pixel [1,2] → [1·1+2·3, 1·2+2·4] = [7,10].
+        let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]);
+        let kernel = vec![1., 2., 3., 4.];
+        let y = conv2d(&x, &kernel, &[1, 1, 2, 2], None, 1, Padding::Same);
+        assert_eq!(y.shape(), &[1, 1, 2, 2]);
+        assert_eq!(y.data(), &[7., 10., 15., 22.]);
+    }
+
+    #[test]
+    fn same_padding_kernel_larger_than_input() {
+        // 5×5 kernel over a 3×3 input under SAME: every window covers the
+        // whole input (pads (2,2) both axes), so with an all-ones kernel
+        // every output pixel is the full input sum = 9.
+        let x = Tensor::filled(&[1, 3, 3, 1], 1.0);
+        let kernel = vec![1.0; 25];
+        let y = conv2d(&x, &kernel, &[5, 5, 1, 1], None, 1, Padding::Same);
+        assert_eq!(y.shape(), &[1, 3, 3, 1]);
+        assert!(y.data().iter().all(|&v| v == 9.0), "{:?}", y.data());
+    }
+
+    #[test]
+    fn stride2_output_rounding_same_vs_valid() {
+        // 5-wide input, 2×2 kernel, stride 2:
+        //   SAME  → ceil(5/2) = 3 columns (XLA pads (0,1): the last window
+        //           hangs one column off the edge)
+        //   VALID → (5-2)/2+1 = 2 columns
+        let data: Vec<f32> = (1..=25).map(|v| v as f32).collect(); // row-major 1..25
+        let x = Tensor::from_vec(&[1, 5, 5, 1], data);
+        let kernel = vec![1.0; 4]; // 2×2 sum
+
+        let same = conv2d(&x, &kernel, &[2, 2, 1, 1], None, 2, Padding::Same);
+        assert_eq!(same.shape(), &[1, 3, 3, 1]);
+        // window at (0,0): rows 0-1 × cols 0-1 = 1+2+6+7 = 16
+        assert_eq!(same.at4(0, 0, 0, 0), 16.0);
+        // (0,2): cols 4-5, right column padded → 5+10 = 15
+        assert_eq!(same.at4(0, 0, 2, 0), 15.0);
+        // (2,0): rows 4-5, bottom row padded → 21+22 = 43
+        assert_eq!(same.at4(0, 2, 0, 0), 43.0);
+        // (2,2): only pixel 25 in bounds
+        assert_eq!(same.at4(0, 2, 2, 0), 25.0);
+
+        let valid = conv2d(&x, &kernel, &[2, 2, 1, 1], None, 2, Padding::Valid);
+        assert_eq!(valid.shape(), &[1, 2, 2, 1]);
+        assert_eq!(valid.at4(0, 0, 0, 0), 16.0); // 1+2+6+7
+        assert_eq!(valid.at4(0, 1, 1, 0), 13.0 + 14.0 + 18.0 + 19.0);
+    }
+
+    #[test]
     fn depthwise_independent_channels() {
         // channel 0 kernel = 1, channel 1 kernel = 2 (1x1 taps)
         let x = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 10., 2., 20.]);

@@ -1,5 +1,5 @@
-//! Blocked 4-wide matrix–vector kernels implementing the paper's §3.3
-//! schemes on the CPU side (the Pallas twins live in
+//! Blocked 4-wide matrix–vector and convolution microkernels implementing
+//! the paper's §3.3 schemes on the CPU side (the Pallas twins live in
 //! `python/compile/kernels/matvec.py`).
 //!
 //! Both operate on a square `n×n` matrix (n multiple of 4) against `x[n]`:
@@ -19,6 +19,54 @@
 /// doubled-`x` window. The `Program` lowering only selects the rotated
 /// scheme at or below this bound, keeping the hot path allocation-free.
 pub const ROTATED_STACK_MAX: usize = 512;
+
+/// Output-channel block width of the conv microkernel — 4 f32 lanes, the
+/// same SSE-sized unit the matvec schemes use.
+pub const CONV_BLOCK: usize = 4;
+
+/// Pre-pack an HWIO conv kernel (flattened `[taps, oc]`, `taps = kh*kw*c`)
+/// into output-channel-blocked panels:
+///
+/// ```text
+/// panels[(ob * taps + t) * 4 + l] = kernel[t * oc + ob * 4 + l]
+/// ```
+///
+/// so the hot loop reads one contiguous 4-float lane group per tap while
+/// the accumulators stay register-resident. Tail lanes (oc not a multiple
+/// of 4) are zero and never stored back. O(taps·oc), done once at lowering
+/// — "the memory layout of the matrix can be chosen arbitrarily" (§3.3).
+pub fn pack_conv_panels(kernel: &[f32], taps: usize, oc: usize) -> Vec<f32> {
+    assert_eq!(kernel.len(), taps * oc);
+    let blocks = oc.div_ceil(CONV_BLOCK);
+    let mut panels = vec![0.0; blocks * taps * CONV_BLOCK];
+    for ob in 0..blocks {
+        for t in 0..taps {
+            for l in 0..CONV_BLOCK {
+                let o = ob * CONV_BLOCK + l;
+                if o < oc {
+                    panels[(ob * taps + t) * CONV_BLOCK + l] = kernel[t * oc + o];
+                }
+            }
+        }
+    }
+    panels
+}
+
+/// The 4-lane FMA microkernel: `acc[l] += Σ_i x[i] * panel[i*4 + l]` over a
+/// run of taps whose input values are contiguous (a channel vector of one
+/// in-bounds pixel, or a whole im2col row). `panel` is a
+/// [`pack_conv_panels`] slice of the same tap run. The accumulators live in
+/// the caller's registers across runs, so one output-channel block costs
+/// one store per pixel regardless of kernel size.
+#[inline(always)]
+pub fn conv_fma_run(panel: &[f32], x: &[f32], acc: &mut [f32; CONV_BLOCK]) {
+    debug_assert_eq!(panel.len(), x.len() * CONV_BLOCK);
+    for (lanes, &xv) in panel.chunks_exact(CONV_BLOCK).zip(x) {
+        for l in 0..CONV_BLOCK {
+            acc[l] += xv * lanes[l];
+        }
+    }
+}
 
 /// Pre-permute W (row-major `[n, n]`, `y = W x` orientation) into stacked
 /// rotated diagonals. O(n²), done once — "the memory layout of the matrix
@@ -159,5 +207,35 @@ mod tests {
         let d = rotate_diagonals(&w, 4);
         assert_eq!(&d[0..4], &[0.0, 5.0, 10.0, 15.0]); // main diagonal
         assert_eq!(&d[4..8], &[1.0, 6.0, 11.0, 12.0]); // rotated by 1
+    }
+
+    #[test]
+    fn conv_panel_layout_pinned() {
+        // taps = 2, oc = 6 → 2 blocks, second block half-padded.
+        let kernel: Vec<f32> = (0..12).map(|v| v as f32).collect(); // K[t][o] = 6t + o
+        let p = pack_conv_panels(&kernel, 2, 6);
+        assert_eq!(p.len(), 2 * 2 * CONV_BLOCK);
+        // block 0: taps 0,1 × lanes 0..4
+        assert_eq!(&p[0..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(&p[4..8], &[6.0, 7.0, 8.0, 9.0]);
+        // block 1: lanes 4,5 real, 6,7 zero-padded
+        assert_eq!(&p[8..12], &[4.0, 5.0, 0.0, 0.0]);
+        assert_eq!(&p[12..16], &[10.0, 11.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn conv_fma_run_matches_scalar_dot() {
+        let mut r = SplitMix64::new(17);
+        let taps = 9;
+        let oc = 4;
+        let kernel = r.uniform_vec(taps * oc);
+        let x = r.uniform_vec(taps);
+        let p = pack_conv_panels(&kernel, taps, oc);
+        let mut acc = [0.0f32; CONV_BLOCK];
+        conv_fma_run(&p, &x, &mut acc);
+        for o in 0..oc {
+            let want: f32 = (0..taps).map(|t| x[t] * kernel[t * oc + o]).sum();
+            assert!((acc[o] - want).abs() < 1e-5, "lane {o}: {} vs {want}", acc[o]);
+        }
     }
 }

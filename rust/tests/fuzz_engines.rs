@@ -1,0 +1,145 @@
+//! Cross-engine differential fuzzing: random conv/dwconv/pool/dense graphs
+//! (odd spatial dims, stride 2, SAME and VALID padding, channel counts off
+//! the 4-lane grid, bias on/off — see `model::builder::random_conv_net`)
+//! run through **every available `EngineKind` × every `CompileOptions`
+//! scheme combination** and must match the `NaiveInterp` oracle within
+//! 1e-4 (relative to the output magnitude).
+//!
+//! Failures print the propcheck seed (`PROPCHECK_SEED=0x… cargo test
+//! fuzz_`) plus the failing spec's own seed, so any case replays exactly.
+//! CI pins `PROPCHECK_SEED` so the suite is deterministic in the pipeline.
+
+use compiled_nn::compiler::exec::{CompileOptions, ConvScheme, DenseScheme};
+use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
+use compiled_nn::model::builder::random_conv_net;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::util::propcheck::check;
+use compiled_nn::util::rng::SplitMix64;
+
+/// Every lowering-option combination the differential suite covers: all
+/// four conv schemes, pool fusion on/off, plus the non-conv axes that
+/// change kernel selection (dense scheme, folding, memory reuse) and the
+/// fully pinned bit-exact reference path. Approximations stay off so every
+/// combo shares the oracle tolerance.
+fn combos() -> Vec<(&'static str, CompileOptions)> {
+    let base = CompileOptions { approx: false, ..CompileOptions::default() };
+    vec![
+        ("auto", base),
+        ("bit-exact", CompileOptions::bit_exact()),
+        ("direct", CompileOptions { conv: ConvScheme::Direct, ..base }),
+        ("im2col", CompileOptions { conv: ConvScheme::Im2col, ..base }),
+        ("generic", CompileOptions { conv: ConvScheme::Generic, ..base }),
+        (
+            "direct-nofuse",
+            CompileOptions { conv: ConvScheme::Direct, fuse_pool: false, ..base },
+        ),
+        (
+            "im2col-nofuse",
+            CompileOptions { conv: ConvScheme::Im2col, fuse_pool: false, ..base },
+        ),
+        ("no-reuse", CompileOptions { reuse_memory: false, ..base }),
+        ("no-fold", CompileOptions { fold_bn: false, ..base }),
+        ("dense-broadcast", CompileOptions { dense: DenseScheme::Broadcast, ..base }),
+    ]
+}
+
+#[test]
+fn fuzz_every_engine_and_scheme_matches_naive() {
+    check(
+        "fuzz_engines_differential",
+        48,
+        |r: &mut SplitMix64| (random_conv_net(r), r.next_u64()),
+        |(spec, input_seed)| {
+            let mut rng = SplitMix64::new(*input_seed);
+            let batch = 1 + (*input_seed % 2) as usize; // 1 or 2
+            let item: usize = spec.input_shape.iter().product();
+            let mut shape = vec![batch];
+            shape.extend_from_slice(&spec.input_shape);
+            let x = Tensor::from_vec(&shape, rng.uniform_vec(batch * item));
+
+            let mut oracle =
+                build_engine_from_spec(EngineKind::Naive, spec, &EngineOptions::default())
+                    .map_err(|e| e.to_string())?;
+            let want = oracle.infer(&x).map_err(|e| e.to_string())?;
+            let scale =
+                want[0].data().iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+
+            for &kind in EngineKind::all() {
+                if !kind.available() {
+                    continue; // compiled: needs a pjrt build + PJRT plugin
+                }
+                if kind == EngineKind::Naive {
+                    continue; // the oracle itself — already run above
+                }
+                for (label, opts) in combos() {
+                    let eopts = EngineOptions { compile: opts, buckets: None };
+                    let mut e = match build_engine_from_spec(kind, spec, &eopts) {
+                        Ok(e) => e,
+                        // only the compiled engine may beg off (it executes
+                        // AOT artifacts); an interpreter failing to lower a
+                        // generated graph is a real regression
+                        Err(_) if kind == EngineKind::Compiled => continue,
+                        Err(err) => {
+                            return Err(format!(
+                                "spec seed {}: {kind}/{label} failed to build: {err}",
+                                spec.seed
+                            ))
+                        }
+                    };
+                    let got = e
+                        .infer(&x)
+                        .map_err(|e| format!("spec seed {}: {kind}/{label}: {e}", spec.seed))?;
+                    if got.len() != want.len() {
+                        return Err(format!(
+                            "spec seed {}: {kind}/{label}: {} outputs vs {}",
+                            spec.seed,
+                            got.len(),
+                            want.len()
+                        ));
+                    }
+                    let d = want[0].max_abs_diff(&got[0]);
+                    if d > 1e-4 * scale {
+                        return Err(format!(
+                            "spec seed {}: {kind}/{label}: max |Δ| = {d} (scale {scale})",
+                            spec.seed
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The §3.4 merged store loops must hold up under repeated inference over
+/// pooled arenas too (state carried in kernel scratch would show up here).
+#[test]
+fn fuzz_fused_programs_are_stable_across_repeated_inference() {
+    check(
+        "fuzz_fused_repeat_stability",
+        12,
+        |r: &mut SplitMix64| (random_conv_net(r), r.next_u64()),
+        |(spec, input_seed)| {
+            let mut rng = SplitMix64::new(*input_seed);
+            let item: usize = spec.input_shape.iter().product();
+            let mut shape = vec![1usize];
+            shape.extend_from_slice(&spec.input_shape);
+            let x = Tensor::from_vec(&shape, rng.uniform_vec(item));
+            let eopts = EngineOptions::exact();
+            let mut e = build_engine_from_spec(EngineKind::Optimized, spec, &eopts)
+                .map_err(|e| e.to_string())?;
+            let first = e.infer(&x).map_err(|e| e.to_string())?;
+            for round in 0..3 {
+                let again = e.infer(&x).map_err(|e| e.to_string())?;
+                let d = first[0].max_abs_diff(&again[0]);
+                if d != 0.0 {
+                    return Err(format!(
+                        "spec seed {}: round {round} drifted by {d}",
+                        spec.seed
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
