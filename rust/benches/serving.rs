@@ -1,0 +1,175 @@
+//! **SERVE-POOL** — the shared-`Program` worker-pool characterization: two
+//! spec-registered models served over the TCP front end by M concurrent
+//! connections, at `workers = 1` vs `workers = 4`. The paper's fixed
+//! lowered artifact makes concurrency cheap: scaling workers adds arenas,
+//! never a second lowering (asserted here via the `Program::lower` counting
+//! hook — exactly one per model per coordinator).
+//!
+//! Runs without the artifact manifest, so CI always produces
+//! **BENCH_serving.json** (req/s + p50/p99 per worker count, and the
+//! workers=4 / workers=1 speedup) — the cross-PR record of whether the
+//! serving path actually scales with cores.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use compiled_nn::compiler::program::lower_count;
+use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
+use compiled_nn::coordinator::tcp::{TcpClient, TcpServer};
+use compiled_nn::engine::EngineKind;
+use compiled_nn::model::builder::Builder;
+use compiled_nn::model::spec::{Activation, ModelSpec};
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::util::json::Json;
+use compiled_nn::util::rng::SplitMix64;
+
+/// Connections hammering the front end (half per model).
+const CONNS: usize = 8;
+/// Closed-loop measurement window per worker count.
+const WINDOW: Duration = Duration::from_millis(2500);
+
+/// A serving-weight CNN (~6 MFLOP/item over a 512-float input): execution,
+/// not wire framing, dominates — the regime where worker scaling shows.
+fn serving_model(name: &str, seed: u64) -> ModelSpec {
+    let mut b = Builder::new(name, &[8, 8, 8], seed);
+    let c1 = b.conv2d("input", 48, 3, 1, Activation::Relu);
+    let c2 = b.conv2d(&c1, 64, 3, 1, Activation::Relu);
+    let p = b.maxpool(&c2, 2);
+    let c3 = b.conv2d(&p, 96, 3, 1, Activation::Relu);
+    let f = b.flatten(&c3);
+    let d = b.dense(&f, 128, Activation::Relu);
+    let head = b.dense(&d, 10, Activation::Linear);
+    let s = b.softmax(&head);
+    b.finish(&[&s])
+}
+
+struct RunResult {
+    workers: usize,
+    requests: u64,
+    req_per_s: f64,
+    p50_us: u64,
+    p99_us: u64,
+    lowers: u64,
+}
+
+fn run_config(workers: usize) -> anyhow::Result<RunResult> {
+    let lowers_before = lower_count();
+    let cfg = CoordinatorConfig {
+        max_wait: Duration::from_micros(300),
+        queue_depth: 1024,
+        engine: EngineKind::Optimized,
+        workers,
+    };
+    let coord = Coordinator::start(Manifest::empty(), cfg)?;
+    coord.register_spec(&serving_model("pool_a", 61), &[1, 2, 4, 8])?;
+    coord.register_spec(&serving_model("pool_b", 62), &[1, 2, 4, 8])?;
+    let lowers = lower_count() - lowers_before;
+    let server = TcpServer::start(coord.clone(), "127.0.0.1:0")?;
+    let addr = server.addr().to_string();
+
+    let item = 8 * 8 * 8;
+    let handles: Vec<_> = (0..CONNS)
+        .map(|t| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> anyhow::Result<Vec<u64>> {
+                let name = if t % 2 == 0 { "pool_a" } else { "pool_b" };
+                let mut client = TcpClient::connect(&addr)?;
+                let mut rng = SplitMix64::new(100 + t as u64);
+                let input = rng.uniform_vec(item);
+                // warmup outside the window
+                client.infer(name, input.clone())?;
+                let mut lat_us = Vec::with_capacity(4096);
+                let deadline = Instant::now() + WINDOW;
+                while Instant::now() < deadline {
+                    let t0 = Instant::now();
+                    client.infer(name, input.clone())?;
+                    lat_us.push(t0.elapsed().as_micros() as u64);
+                }
+                Ok(lat_us)
+            })
+        })
+        .collect();
+
+    let mut lat_us: Vec<u64> = Vec::new();
+    for h in handles {
+        lat_us.extend(h.join().expect("client thread panicked")?);
+    }
+    drop(server);
+    coord.shutdown();
+
+    lat_us.sort_unstable();
+    let n = lat_us.len();
+    anyhow::ensure!(n > 0, "no requests completed inside the measurement window");
+    let q = |p: f64| lat_us[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    Ok(RunResult {
+        workers,
+        requests: n as u64,
+        req_per_s: n as f64 / WINDOW.as_secs_f64(),
+        p50_us: q(0.5),
+        p99_us: q(0.99),
+        lowers,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "serving bench: 2 models × {CONNS} TCP connections, {:.1}s window, {cores} cores",
+        WINDOW.as_secs_f64()
+    );
+    println!(
+        "{:>8} {:>10} {:>12} {:>10} {:>10} {:>8}",
+        "workers", "requests", "req/s", "p50 µs", "p99 µs", "lowers"
+    );
+
+    let mut results = Vec::new();
+    for workers in [1usize, 4] {
+        let r = run_config(workers)?;
+        // the counting-hook acceptance: one Program::lower per model, no
+        // matter how many workers serve it
+        assert_eq!(r.lowers, 2, "expected one lowering per model, got {}", r.lowers);
+        println!(
+            "{:>8} {:>10} {:>12.0} {:>10} {:>10} {:>8}",
+            r.workers, r.requests, r.req_per_s, r.p50_us, r.p99_us, r.lowers
+        );
+        results.push(r);
+    }
+    let speedup = results[1].req_per_s / results[0].req_per_s.max(1e-9);
+    println!(
+        "workers=4 vs workers=1: {speedup:.2}× req/s \
+         (shared Program: lowered once per model in both configs)"
+    );
+    if cores < 4 {
+        println!("(note: only {cores} cores — pool scaling is capped by the host)");
+    }
+    write_json(&results, speedup)?;
+    Ok(())
+}
+
+/// Machine-readable results → BENCH_serving.json (uploaded as a CI
+/// artifact alongside BENCH_table1.json / BENCH_ablations.json).
+fn write_json(results: &[RunResult], speedup: f64) -> anyhow::Result<()> {
+    let mut configs: BTreeMap<String, Json> = BTreeMap::new();
+    for r in results {
+        let mut m = BTreeMap::new();
+        m.insert("requests".to_string(), Json::Num(r.requests as f64));
+        m.insert("req_per_s".to_string(), Json::Num(r.req_per_s));
+        m.insert("p50_us".to_string(), Json::Num(r.p50_us as f64));
+        m.insert("p99_us".to_string(), Json::Num(r.p99_us as f64));
+        m.insert("lower_calls".to_string(), Json::Num(r.lowers as f64));
+        configs.insert(format!("workers_{}", r.workers), Json::Obj(m));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("serving".to_string()));
+    root.insert("models".to_string(), Json::Num(2.0));
+    root.insert("connections".to_string(), Json::Num(CONNS as f64));
+    root.insert(
+        "cores".to_string(),
+        Json::Num(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64),
+    );
+    root.insert("configs".to_string(), Json::Obj(configs));
+    root.insert("speedup_workers4_vs_1".to_string(), Json::Num(speedup));
+    std::fs::write("BENCH_serving.json", format!("{}\n", Json::Obj(root)))?;
+    println!("wrote BENCH_serving.json");
+    Ok(())
+}

@@ -6,27 +6,35 @@
 //! batch size. This is the repo's analog of the optimized interpreter
 //! libraries in Table 1 (TensorFlow Lite / RoboDNN) and the ablation
 //! vehicle for the paper's individual design choices via [`CompileOptions`].
+//!
+//! The lowered program is held behind an `Arc`, and the engine opts into
+//! the coordinator's shared-serving path ([`Engine::shareable`]): N workers
+//! each get the same `Arc<Program>` plus their own [`ArenaPool`], so a
+//! model is lowered once no matter how many threads serve it.
 
-use anyhow::{bail, Result};
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
 
 use crate::compiler::program::{ArenaPool, PlanSummary, Program};
 pub use crate::compiler::program::{CompileOptions, ConvScheme, DenseScheme};
+use crate::engine::{Engine, SharedInfer, WorkerScratch};
 use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
 
 pub struct OptInterp {
-    program: Program,
+    program: Arc<Program>,
     pool: ArenaPool,
 }
 
 impl OptInterp {
     pub fn new(spec: &ModelSpec, opts: CompileOptions) -> Result<Self> {
-        Ok(Self { program: Program::lower(spec, opts)?, pool: ArenaPool::new() })
+        Ok(Self { program: Arc::new(Program::lower(spec, opts)?), pool: ArenaPool::new() })
     }
 
     /// Wrap an already-lowered program.
     pub fn from_program(program: Program) -> Self {
-        Self { program, pool: ArenaPool::new() }
+        Self { program: Arc::new(program), pool: ArenaPool::new() }
     }
 
     pub fn program(&self) -> &Program {
@@ -39,22 +47,34 @@ impl OptInterp {
     }
 
     pub fn infer(&mut self, input: &Tensor) -> Result<Vec<Tensor>> {
-        let ishape = input.shape();
-        if ishape.len() < 2 || ishape[1..] != self.program.input_shape()[..] {
-            bail!(
-                "input shape {:?} does not match model {:?}",
-                ishape,
-                self.program.input_shape()
-            );
-        }
-        let arena = self.pool.get(&self.program, ishape[0]);
-        self.program.load_input(arena, input);
-        self.program.run(arena);
-        Ok(self.program.read_outputs(arena))
+        self.program.infer_pooled(input, &mut self.pool)
     }
 }
 
-impl crate::engine::Engine for OptInterp {
+/// The shared-inference path: the immutable lowered [`Program`] *is* the
+/// shared artifact; per-worker state is just an [`ArenaPool`].
+impl SharedInfer for Program {
+    fn new_scratch(&self, buckets: &[usize]) -> WorkerScratch {
+        let mut pool = ArenaPool::new();
+        for &b in buckets {
+            pool.reserve(self, b);
+        }
+        WorkerScratch::new(pool)
+    }
+
+    fn infer_shared(&self, input: &Tensor, scratch: &mut WorkerScratch) -> Result<Vec<Tensor>> {
+        let pool = scratch
+            .get_mut::<ArenaPool>()
+            .context("worker scratch is not an ArenaPool (scratch from another engine?)")?;
+        self.infer_pooled(input, pool)
+    }
+
+    fn plan_summary(&self) -> Option<&PlanSummary> {
+        Some(self.summary())
+    }
+}
+
+impl Engine for OptInterp {
     fn name(&self) -> &str {
         "optimized"
     }
@@ -84,6 +104,10 @@ impl crate::engine::Engine for OptInterp {
 
     fn plan_summary(&self) -> Option<&PlanSummary> {
         Some(self.program.summary())
+    }
+
+    fn shareable(&self) -> Option<Arc<dyn SharedInfer>> {
+        Some(self.program.clone())
     }
 }
 

@@ -91,9 +91,9 @@ impl<'a> Epilogue<'a> {
 /// How one conv output pixel is computed — the §3.3 lowering decision,
 /// made once per layer at compile time (see `ConvScheme` in
 /// [`crate::compiler::program`]) and monomorphized into the kernel struct.
-/// `Direct`/`Im2col` own [`simd::pack_conv_panels`] layouts; `Im2col`
-/// additionally owns its gather-row scratch so the hot path never
-/// allocates.
+/// `Direct`/`Im2col` own [`simd::pack_conv_panels`] layouts. The algo is
+/// **immutable at run time** — the im2col gather-row scratch is caller-
+/// owned (one per worker), so a lowered conv is shareable across threads.
 pub enum ConvAlgo {
     /// Scalar reference accumulation order — the bit-exact path, identical
     /// tap order to `nn::layers::conv::conv2d`.
@@ -102,8 +102,9 @@ pub enum ConvAlgo {
     /// kernels and VALID windows are always fully in bounds).
     Direct { panels: Vec<f32> },
     /// 4-lane blocked panels over a gathered, zero-padded im2col row — one
-    /// contiguous FMA stream per pixel regardless of border clipping.
-    Im2col { panels: Vec<f32>, row: Vec<f32> },
+    /// contiguous FMA stream per pixel regardless of border clipping. The
+    /// `kh*kw*c`-element row scratch is passed into [`conv2d_run`].
+    Im2col { panels: Vec<f32> },
 }
 
 /// conv2d, NHWC × HWIO → NHWC, fused epilogue, optional §3.4 fused MaxPool.
@@ -115,11 +116,14 @@ pub enum ConvAlgo {
 /// exists in memory, and conv pixels no pool window covers are never
 /// computed. Pool windows must not overlap (`ps >= max(pkh, pkw)`, the
 /// lowering's fusion gate), so no conv pixel is computed twice.
+///
+/// All mutable scratch (`row` for the im2col gather, `cell` for the fused
+/// pool) is caller-owned, so `algo` is shared read-only across workers.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_run(
     x: &[f32],
     (b, h, w, c): (usize, usize, usize, usize),
-    algo: &mut ConvAlgo,
+    algo: &ConvAlgo,
     (kh, kw, oc): (usize, usize, usize),
     bias: Option<&[f32]>,
     stride: usize,
@@ -127,6 +131,7 @@ pub fn conv2d_run(
     ep: Epilogue,
     pool: Option<(usize, usize, usize)>,
     cell: &mut [f32],
+    row: &mut [f32],
     out: &mut [f32],
 ) {
     let (pt, pl) = match padding {
@@ -143,7 +148,7 @@ pub fn conv2d_run(
                         let dst = &mut out[((n * oh + oy) * ow + ox) * oc..][..oc];
                         let y0 = (oy * stride) as isize - pt as isize;
                         let x0 = (ox * stride) as isize - pl as isize;
-                        conv_pixel(x, (n, h, w, c), algo, (kh, kw, oc), bias, y0, x0, dst);
+                        conv_pixel(x, (n, h, w, c), algo, (kh, kw, oc), bias, y0, x0, row, dst);
                         ep.apply(dst);
                     }
                 }
@@ -171,6 +176,7 @@ pub fn conv2d_run(
                                     bias,
                                     y0,
                                     x0,
+                                    row,
                                     cell,
                                 );
                                 ep.apply(cell);
@@ -190,17 +196,19 @@ pub fn conv2d_run(
 
 /// One output pixel's `oc` vector into `dst`, by the lowered algorithm.
 /// `(y0, x0)` is the window origin in input coordinates (may be negative
-/// under SAME padding).
+/// under SAME padding). `row` is the caller-owned im2col gather scratch
+/// (len `kh*kw*c` for the im2col scheme, unused otherwise).
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn conv_pixel(
     x: &[f32],
     (n, h, w, c): (usize, usize, usize, usize),
-    algo: &mut ConvAlgo,
+    algo: &ConvAlgo,
     (kh, kw, oc): (usize, usize, usize),
     bias: Option<&[f32]>,
     y0: isize,
     x0: isize,
+    row: &mut [f32],
     dst: &mut [f32],
 ) {
     match algo {
@@ -210,7 +218,7 @@ fn conv_pixel(
         ConvAlgo::Direct { panels } => {
             direct_pixel(x, (n, h, w, c), panels, (kh, kw, oc), bias, y0, x0, dst)
         }
-        ConvAlgo::Im2col { panels, row } => {
+        ConvAlgo::Im2col { panels } => {
             gather_row(x, (n, h, w, c), (kh, kw), y0, x0, row);
             panel_row_pixel(panels, row, oc, bias, dst)
         }
@@ -642,10 +650,7 @@ mod tests {
         match scheme {
             "generic" => ConvAlgo::Generic { kernel: kernel.to_vec() },
             "direct" => ConvAlgo::Direct { panels: simd::pack_conv_panels(kernel, taps, oc) },
-            "im2col" => ConvAlgo::Im2col {
-                panels: simd::pack_conv_panels(kernel, taps, oc),
-                row: vec![0.0; taps],
-            },
+            "im2col" => ConvAlgo::Im2col { panels: simd::pack_conv_panels(kernel, taps, oc) },
             other => panic!("unknown scheme {other}"),
         }
     }
@@ -665,12 +670,13 @@ mod tests {
             let bias = rng.uniform_vec(5);
             let r = conv2d(&x, &kernel, &[3, 3, 3, 5], Some(&bias), stride, padding);
             for scheme in ["generic", "direct", "im2col"] {
-                let mut algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
+                let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
+                let mut row = vec![0.0; 3 * 3 * 3];
                 let mut out = vec![0.0; r.len()];
                 conv2d_run(
                     x.data(),
                     (2, 5, 5, 3),
-                    &mut algo,
+                    &algo,
                     (3, 3, 5),
                     Some(&bias),
                     stride,
@@ -678,6 +684,7 @@ mod tests {
                     Epilogue::NONE,
                     None,
                     &mut [],
+                    &mut row,
                     &mut out,
                 );
                 let worst = r
@@ -708,13 +715,14 @@ mod tests {
         }
         let want = maxpool(&conv_ref, 2, 2, 2);
         for scheme in ["generic", "direct", "im2col"] {
-            let mut algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
+            let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
             let mut cell = vec![0.0; 5];
+            let mut row = vec![0.0; 3 * 3 * 3];
             let mut out = vec![0.0; want.len()];
             conv2d_run(
                 x.data(),
                 (1, 7, 7, 3),
-                &mut algo,
+                &algo,
                 (3, 3, 5),
                 Some(&bias),
                 1,
@@ -722,6 +730,7 @@ mod tests {
                 ep,
                 Some((2, 2, 2)),
                 &mut cell,
+                &mut row,
                 &mut out,
             );
             let worst = want

@@ -27,6 +27,7 @@
 use std::collections::{BTreeMap, BTreeSet};
 use std::fmt;
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -148,12 +149,20 @@ impl Span {
     }
 }
 
-/// The single flat execution buffer a [`Program`] runs in. One allocation
-/// per (program, batch); reusable across inferences and poolable across
-/// batch buckets.
+/// The single flat execution buffer a [`Program`] runs in, plus the
+/// kernels' mutable scratch (im2col gather rows, fused-pool cells, rotated-
+/// dense doubled-x windows). One allocation pair per (program, batch);
+/// reusable across inferences and poolable across batch buckets.
+///
+/// Every mutable word of an inference lives here, which is what makes the
+/// `Program` itself an immutable `Send + Sync` artifact: N workers share
+/// one `Arc<Program>` and each owns its arena.
 #[derive(Debug)]
 pub struct Arena {
     data: Vec<f32>,
+    /// Kernel-private scratch, laid out from the [`Scratch`] spans assigned
+    /// at lowering (batch-independent sizes).
+    scratch: Vec<f32>,
     batch: usize,
     item_elems: usize,
 }
@@ -165,7 +174,7 @@ impl Arena {
 
     /// Backing-store size in bytes (the §3.2 working-set metric).
     pub fn bytes(&self) -> usize {
-        self.data.len() * std::mem::size_of::<f32>()
+        (self.data.len() + self.scratch.len()) * std::mem::size_of::<f32>()
     }
 }
 
@@ -201,13 +210,17 @@ impl ArenaPool {
         let _ = self.get(program, batch);
     }
 
-    /// The pooled arena for `batch`, created on first use.
+    /// The pooled arena for `batch`, created on first use. An arena only
+    /// matches if its kernel-scratch size also fits the program — two
+    /// lowerings of one spec can share `item_elems` yet differ in scratch
+    /// (e.g. bit-exact vs default options), and handing one's arena to the
+    /// other would hand its kernels an undersized scratch buffer.
     pub fn get(&mut self, program: &Program, batch: usize) -> &mut Arena {
-        if let Some(i) = self
-            .arenas
-            .iter()
-            .position(|a| a.batch == batch && a.item_elems == program.item_elems)
-        {
+        if let Some(i) = self.arenas.iter().position(|a| {
+            a.batch == batch
+                && a.item_elems == program.item_elems
+                && a.scratch.len() == program.scratch_elems
+        }) {
             return &mut self.arenas[i];
         }
         let unpinned =
@@ -241,12 +254,31 @@ impl ArenaPool {
     }
 }
 
+/// A kernel's span in the arena's batch-independent scratch buffer,
+/// assigned at lowering. Scratch is the only memory a kernel mutates
+/// besides the arena itself, so handing it to the caller is what lets
+/// `run` take `&self`.
+#[derive(Debug, Clone, Copy, Default)]
+struct Scratch {
+    start: usize,
+    len: usize,
+}
+
+impl Scratch {
+    #[inline]
+    fn slice<'a>(&self, scratch: &'a mut [f32]) -> &'a mut [f32] {
+        &mut scratch[self.start..self.start + self.len]
+    }
+}
+
 /// A pre-monomorphized kernel: a concrete struct holding its weights,
-/// shapes and arena spans (and any scratch), resolved entirely at lowering
-/// time. `run` is the only per-inference code — it must not allocate, look
-/// anything up by name, or match on [`LayerOp`].
-trait Kernel: Send {
-    fn run(&mut self, batch: usize, data: &mut [f32]);
+/// shapes and arena spans, resolved entirely at lowering time. `run` is
+/// the only per-inference code — it must not allocate, look anything up by
+/// name, or match on [`LayerOp`]. Kernels are immutable at run time (all
+/// mutable state lives in the caller's [`Arena`]), which makes the whole
+/// [`Program`] `Send + Sync` and shareable across worker threads.
+trait Kernel: Send + Sync {
+    fn run(&self, batch: usize, data: &mut [f32], scratch: &mut [f32]);
 }
 
 /// One executed step. The human/test-readable labels live in
@@ -292,6 +324,9 @@ pub struct PlanSummary {
     pub fused_maxpool: usize,
     /// Weight elements copied/transformed out of the blob into kernels.
     pub weight_elems: usize,
+    /// Batch-independent per-arena scratch elements (im2col rows, fused-
+    /// pool cells, rotated-dense windows) — per worker, not per program.
+    pub scratch_elems: usize,
 }
 
 impl fmt::Display for PlanSummary {
@@ -300,7 +335,8 @@ impl fmt::Display for PlanSummary {
             f,
             "{}: {} steps ({} in-place, {} elided), {} buffers × {} arena elems/item, \
              {} BN folded, dense {} rotated / {} broadcast, \
-             conv {} direct / {} im2col, {} maxpool fused, {} weight elems",
+             conv {} direct / {} im2col, {} maxpool fused, {} weight elems, \
+             {} scratch elems/worker",
             self.model,
             self.steps.len(),
             self.in_place_steps,
@@ -313,7 +349,8 @@ impl fmt::Display for PlanSummary {
             self.direct_conv,
             self.im2col_conv,
             self.fused_maxpool,
-            self.weight_elems
+            self.weight_elems,
+            self.scratch_elems
         )?;
         for s in &self.steps {
             writeln!(f, "  {s}")?;
@@ -322,14 +359,28 @@ impl fmt::Display for PlanSummary {
     }
 }
 
+/// Process-wide count of [`Program::lower`] calls — the counting hook the
+/// serving tests/bench use to prove "lowered once per model, shared across
+/// N workers" (not once per worker).
+static LOWER_CALLS: AtomicU64 = AtomicU64::new(0);
+
+/// How many times [`Program::lower`] has run in this process.
+pub fn lower_count() -> u64 {
+    LOWER_CALLS.load(Ordering::SeqCst)
+}
+
 /// The compiled execution program: everything `run` needs, nothing it has
-/// to look up.
+/// to look up. Immutable after lowering (`run` takes `&self`; all mutable
+/// state lives in the caller-owned [`Arena`]), so one `Arc<Program>` is
+/// shared read-only across every worker serving the model.
 pub struct Program {
     steps: Vec<Step>,
     outputs: Vec<OutputSpec>,
     input: Span,
     input_shape: Vec<usize>,
     item_elems: usize,
+    /// Batch-independent scratch elements every arena carries for kernels.
+    scratch_elems: usize,
     /// tensor name → span, for tests/diagnostics (never read by `run`).
     spans: BTreeMap<String, Span>,
     summary: PlanSummary,
@@ -341,6 +392,7 @@ impl Program {
     /// entire per-model compile cost of the optimized engine; everything
     /// it resolves is resolved exactly once.
     pub fn lower(spec: &ModelSpec, opts: CompileOptions) -> Result<Program> {
+        LOWER_CALLS.fetch_add(1, Ordering::SeqCst);
         let t0 = Instant::now();
         let bn_before = fuse::bn_count(spec);
         let folded =
@@ -385,6 +437,15 @@ impl Program {
         let mut spans = BTreeMap::new();
         spans.insert("input".to_string(), span_of("input"));
         let mut steps: Vec<Step> = Vec::with_capacity(folded.layers.len());
+        // Kernel scratch planner: each kernel that needs mutable per-run
+        // scratch (batch-independent) gets a span in the arena's scratch
+        // buffer, so kernels stay immutable and the program shareable.
+        let mut scratch_elems = 0usize;
+        let mut alloc_scratch = |n: usize| -> Scratch {
+            let s = Scratch { start: scratch_elems, len: n };
+            scratch_elems += n;
+            s
+        };
 
         for l in &folded.layers {
             if let Some(pool) = pool_of.get(&l.name) {
@@ -421,6 +482,8 @@ impl Program {
                     ep.label()
                 );
                 summary.steps.push(format!("{}: {kind}", l.name));
+                let cell_len = *out_ch;
+                let row_len = conv_row_len(&algo, (*ckh, *ckw, cin[2]));
                 steps.push(Step {
                     kernel: Box::new(ConvK {
                         src,
@@ -433,7 +496,8 @@ impl Program {
                         bias,
                         ep,
                         pool: Some((*kh, *kw, *stride)),
-                        cell: vec![0.0; *out_ch],
+                        cell_len,
+                        scratch: alloc_scratch(cell_len + row_len),
                     }),
                 });
                 continue;
@@ -459,6 +523,7 @@ impl Program {
                         in_shape[2],
                         ep.label()
                     );
+                    let row_len = conv_row_len(&algo, (*kh, *kw, in_shape[2]));
                     (
                         Box::new(ConvK {
                             src,
@@ -471,7 +536,8 @@ impl Program {
                             bias,
                             ep,
                             pool: None,
-                            cell: Vec::new(),
+                            cell_len: 0,
+                            scratch: alloc_scratch(row_len),
                         }),
                         kind,
                     )
@@ -532,7 +598,7 @@ impl Program {
                                     n: in_dim,
                                     diag,
                                     bias,
-                                    scratch: vec![0.0; 2 * in_dim],
+                                    scratch: alloc_scratch(2 * in_dim),
                                     ep,
                                 }),
                                 kind,
@@ -719,21 +785,29 @@ impl Program {
             .map(|o| OutputSpec { span: span_of(o), shape: shapes[o].clone() })
             .collect();
 
+        summary.scratch_elems = scratch_elems;
         Ok(Program {
             steps,
             outputs,
             input: span_of("input"),
             input_shape: folded.input_shape.clone(),
             item_elems,
+            scratch_elems,
             spans,
             summary,
             compile_ms: t0.elapsed().as_secs_f64() * 1e3,
         })
     }
 
-    /// Allocate a fresh arena sized for `batch` items.
+    /// Allocate a fresh arena sized for `batch` items (plus the program's
+    /// batch-independent kernel scratch).
     pub fn new_arena(&self, batch: usize) -> Arena {
-        Arena { data: vec![0.0; self.item_elems * batch], batch, item_elems: self.item_elems }
+        Arena {
+            data: vec![0.0; self.item_elems * batch],
+            scratch: vec![0.0; self.scratch_elems],
+            batch,
+            item_elems: self.item_elems,
+        }
     }
 
     /// Copy a `[B, ...item_shape]` input into its pre-resolved span.
@@ -744,16 +818,34 @@ impl Program {
     }
 
     /// Execute every step. The hot path: no allocation, no lookups, no
-    /// per-layer dispatch beyond one virtual call per step. (`&mut self`
-    /// because kernels may carry owned scratch, e.g. the rotated-dense
-    /// doubled-x window.)
-    pub fn run(&mut self, arena: &mut Arena) {
+    /// per-layer dispatch beyond one virtual call per step. Takes `&self` —
+    /// every mutable word (including kernel scratch) lives in the caller's
+    /// arena, so any number of threads may run one program concurrently,
+    /// each over its own `Arena`.
+    pub fn run(&self, arena: &mut Arena) {
         debug_assert_eq!(arena.item_elems, self.item_elems, "arena from another program");
+        debug_assert_eq!(arena.scratch.len(), self.scratch_elems, "arena scratch mismatch");
         let batch = arena.batch;
         let data = arena.data.as_mut_slice();
-        for step in &mut self.steps {
-            step.kernel.run(batch, data);
+        let scratch = arena.scratch.as_mut_slice();
+        for step in &self.steps {
+            step.kernel.run(batch, data, scratch);
         }
+    }
+
+    /// Full inference over a caller-owned [`ArenaPool`]: validate the
+    /// `[B, ...item]` shape, pick the pooled arena for `B`, load → run →
+    /// read. This is the shared-serving entry point — `&self` only, so one
+    /// `Arc<Program>` plus one pool per worker is a complete engine.
+    pub fn infer_pooled(&self, input: &Tensor, pool: &mut ArenaPool) -> Result<Vec<Tensor>> {
+        let ishape = input.shape();
+        if ishape.len() < 2 || ishape[1..] != self.input_shape[..] {
+            bail!("input shape {:?} does not match model {:?}", ishape, self.input_shape);
+        }
+        let arena = pool.get(self, ishape[0]);
+        self.load_input(arena, input);
+        self.run(arena);
+        Ok(self.read_outputs(arena))
     }
 
     /// Copy the model outputs out of the arena as owned tensors (the only
@@ -884,6 +976,16 @@ fn lower_conv_algo(
     }
 }
 
+/// Per-run scratch the lowered conv algo needs per worker: the im2col
+/// scheme gathers each pixel's window into a `kh*kw*c` row; the other
+/// schemes read the arena directly.
+fn conv_row_len(algo: &k::ConvAlgo, (kh, kw, c): (usize, usize, usize)) -> usize {
+    match algo {
+        k::ConvAlgo::Im2col { .. } => kh * kw * c,
+        _ => 0,
+    }
+}
+
 /// Transpose a `[n, out]`-layout Dense kernel (`y[o] = Σ_i x[i] K[i][o]`)
 /// into the row-major `y = W x` orientation the §3.3 matvec kernels use
 /// (`W[i][j] = K[j][i]`). Square only; done once at lowering.
@@ -987,8 +1089,10 @@ fn srcs_dst(
 
 /// Conv2d under any §3.3 scheme ([`k::ConvAlgo`] chosen at lowering), with
 /// the §3.4 epilogue in the store loop and optionally a fused
-/// single-consumer MaxPool (`pool` window + owned per-pixel `cell`
-/// scratch, so the conv intermediate never exists in the arena).
+/// single-consumer MaxPool. Its [`Scratch`] span packs the per-pixel pool
+/// `cell` (first `cell_len` elements) followed by the im2col gather row,
+/// so the conv intermediate never exists in the arena and the kernel never
+/// mutates itself.
 struct ConvK {
     src: Span,
     dst: Span,
@@ -1000,24 +1104,27 @@ struct ConvK {
     bias: Option<Vec<f32>>,
     ep: EpSpec,
     pool: Option<(usize, usize, usize)>,
-    cell: Vec<f32>,
+    cell_len: usize,
+    scratch: Scratch,
 }
 
 impl Kernel for ConvK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
+        let (cell, row) = self.scratch.slice(scratch).split_at_mut(self.cell_len);
         k::conv2d_run(
             x,
             (batch, h, w, c),
-            &mut self.algo,
+            &self.algo,
             self.khw_oc,
             self.bias.as_deref(),
             self.stride,
             self.padding,
             self.ep.epilogue(),
             self.pool,
-            &mut self.cell,
+            cell,
+            row,
             out,
         );
     }
@@ -1036,7 +1143,7 @@ struct DwConv2dK {
 }
 
 impl Kernel for DwConv2dK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
         k::depthwise_conv2d_into(
@@ -1064,7 +1171,7 @@ struct DenseK {
 }
 
 impl Kernel for DenseK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         k::dense_into(
             x,
@@ -1079,27 +1186,28 @@ impl Kernel for DenseK {
 }
 
 /// §3.3 Eq. 3: pre-rotated diagonals, x walked as contiguous rotations.
-/// The doubled-x window is owned scratch sized at lowering, so each row is
-/// two copies + the FMA loop — no zero-fill, no allocation.
+/// The doubled-x window lives in the arena scratch (sized at lowering), so
+/// each row is two copies + the FMA loop — no zero-fill, no allocation.
 struct DenseRotatedK {
     src: Span,
     dst: Span,
     n: usize,
     diag: Vec<f32>,
     bias: Option<Vec<f32>>,
-    scratch: Vec<f32>,
+    scratch: Scratch,
     ep: EpSpec,
 }
 
 impl Kernel for DenseRotatedK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let n = self.n;
+        let window = self.scratch.slice(scratch);
         let ep = self.ep.epilogue();
         for row in 0..batch {
             let xrow = &x[row * n..(row + 1) * n];
             let dst = &mut out[row * n..(row + 1) * n];
-            simd::matvec_rotated_with(&self.diag, xrow, &mut self.scratch, dst);
+            simd::matvec_rotated_with(&self.diag, xrow, window, dst);
             if let Some(bias) = &self.bias {
                 for (v, &b) in dst.iter_mut().zip(bias) {
                     *v += b;
@@ -1121,7 +1229,7 @@ struct DenseBroadcastK {
 }
 
 impl Kernel for DenseBroadcastK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let n = self.n;
         let ep = self.ep.epilogue();
@@ -1149,7 +1257,7 @@ struct AffineK {
 }
 
 impl Kernel for AffineK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         k::affine_into(x, self.c, &self.scale, &self.shift, out);
     }
@@ -1163,7 +1271,7 @@ struct AffineInPlaceK {
 }
 
 impl Kernel for AffineInPlaceK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         k::affine_rows(&mut data[self.dst.range(batch)], self.c, &self.scale, &self.shift);
     }
 }
@@ -1176,7 +1284,7 @@ struct MaxPoolK {
 }
 
 impl Kernel for MaxPoolK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
         k::maxpool_into(x, (batch, h, w, c), self.khw_stride, out);
@@ -1191,7 +1299,7 @@ struct AvgPoolK {
 }
 
 impl Kernel for AvgPoolK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
         k::avgpool_into(x, (batch, h, w, c), self.khw_stride, out);
@@ -1205,7 +1313,7 @@ struct GlobalAvgPoolK {
 }
 
 impl Kernel for GlobalAvgPoolK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
         k::globalavgpool_into(x, (batch, h, w, c), out);
@@ -1220,7 +1328,7 @@ struct UpsampleK {
 }
 
 impl Kernel for UpsampleK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
         k::upsample_into(x, (batch, h, w, c), self.factor, out);
@@ -1235,7 +1343,7 @@ struct ZeroPadK {
 }
 
 impl Kernel for ZeroPadK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
         k::zeropad_into(x, (batch, h, w, c), self.pad, out);
@@ -1250,7 +1358,7 @@ struct ActK {
 }
 
 impl Kernel for ActK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         out.copy_from_slice(x);
         self.ep.epilogue().apply_whole(out, self.c);
@@ -1264,7 +1372,7 @@ struct ActInPlaceK {
 }
 
 impl Kernel for ActInPlaceK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let buf = &mut data[self.dst.range(batch)];
         self.ep.epilogue().apply_whole(buf, self.c);
     }
@@ -1278,7 +1386,7 @@ struct SoftmaxK {
 }
 
 impl Kernel for SoftmaxK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         k::softmax_into(x, self.c, self.approx, out);
     }
@@ -1291,7 +1399,7 @@ struct SoftmaxInPlaceK {
 }
 
 impl Kernel for SoftmaxInPlaceK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         k::softmax_rows(&mut data[self.dst.range(batch)], self.c, self.approx);
     }
 }
@@ -1303,7 +1411,7 @@ struct AddK {
 }
 
 impl Kernel for AddK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (a, b, out) = srcs_dst(
             data,
             self.a.range(batch),
@@ -1322,7 +1430,7 @@ struct AddInPlaceK {
 }
 
 impl Kernel for AddInPlaceK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (other, buf) = src_dst(data, self.other.range(batch), self.dst.range(batch));
         k::add_assign(buf, other);
     }
@@ -1337,7 +1445,7 @@ struct ConcatK {
 }
 
 impl Kernel for ConcatK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (a, b, out) = srcs_dst(
             data,
             self.a.range(batch),
@@ -1355,7 +1463,7 @@ struct CopyK {
 }
 
 impl Kernel for CopyK {
-    fn run(&mut self, batch: usize, data: &mut [f32]) {
+    fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         out.copy_from_slice(x);
     }
@@ -1370,7 +1478,7 @@ mod tests {
     use crate::util::rng::SplitMix64;
 
     fn run_program(spec: &ModelSpec, opts: CompileOptions, x: &Tensor) -> Vec<Tensor> {
-        let mut p = Program::lower(spec, opts).unwrap();
+        let p = Program::lower(spec, opts).unwrap();
         let mut arena = p.new_arena(x.shape()[0]);
         p.load_input(&mut arena, x);
         p.run(&mut arena);
@@ -1435,7 +1543,7 @@ mod tests {
                     fuse_pool,
                     ..CompileOptions::default()
                 };
-                let mut p = Program::lower(&spec, opts).unwrap();
+                let p = Program::lower(&spec, opts).unwrap();
                 let s = p.summary();
                 match scheme {
                     ConvScheme::Direct => assert_eq!(s.direct_conv, 1, "{s}"),
@@ -1468,7 +1576,7 @@ mod tests {
         let c = b.conv2d("input", 3, 3, 1, Activation::Relu);
         let p = b.maxpool_with_stride(&c, 3, 1);
         let spec = b.finish(&[&p]);
-        let mut prog = Program::lower(&spec, CompileOptions::default()).unwrap();
+        let prog = Program::lower(&spec, CompileOptions::default()).unwrap();
         assert_eq!(prog.summary().fused_maxpool, 0, "{}", prog.summary());
 
         let mut rng = SplitMix64::new(14);
@@ -1490,7 +1598,7 @@ mod tests {
         for scheme in [DenseScheme::Rotated, DenseScheme::Broadcast, DenseScheme::Generic] {
             let opts =
                 CompileOptions { approx: false, dense: scheme, ..CompileOptions::default() };
-            let mut p = Program::lower(&spec, opts).unwrap();
+            let p = Program::lower(&spec, opts).unwrap();
             let s = p.summary();
             match scheme {
                 DenseScheme::Rotated => assert_eq!(s.rotated_dense, 3, "{s}"),
@@ -1523,7 +1631,7 @@ mod tests {
         let m3 = b.add(&m2, &cat); // m2 dies here → AddInPlaceK
         let spec = b.finish(&[&m3]);
 
-        let mut p = Program::lower(&spec, CompileOptions::bit_exact()).unwrap();
+        let p = Program::lower(&spec, CompileOptions::bit_exact()).unwrap();
         let s = p.summary();
         assert_eq!(s.steps.iter().filter(|l| l.contains("add")).count(), 3, "{s}");
         assert!(s.steps.iter().any(|l| l.contains("add") && l.contains("in-place")), "{s}");
@@ -1537,6 +1645,70 @@ mod tests {
         p.run(&mut arena);
         let got = p.read_outputs(&arena);
         assert_eq!(want[0].data(), got[0].data());
+    }
+
+    /// The tentpole property: a lowered `Program` is an immutable
+    /// `Send + Sync` artifact — N threads run the *same* program
+    /// concurrently, each over its own pooled arena, and every one matches
+    /// the oracle. (Pre-refactor, kernels carried owned scratch and `run`
+    /// took `&mut self`, so this could not even compile.)
+    #[test]
+    fn shared_program_runs_concurrently_from_many_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Program>();
+        assert_send_sync::<Arena>();
+
+        let spec = tiny_cnn(71);
+        let mut rng = SplitMix64::new(31);
+        let x = Tensor::from_vec(&[2, 8, 8, 3], rng.uniform_vec(2 * 8 * 8 * 3));
+        let want = NaiveInterp::new(spec.clone()).unwrap().infer(&x).unwrap();
+        let opts = CompileOptions { approx: false, ..CompileOptions::default() };
+        let p = std::sync::Arc::new(Program::lower(&spec, opts).unwrap());
+
+        let threads: Vec<_> = (0..4)
+            .map(|_| {
+                let p = p.clone();
+                let x = x.clone();
+                let want = want[0].clone();
+                std::thread::spawn(move || {
+                    let mut pool = ArenaPool::new();
+                    for _ in 0..8 {
+                        let got = p.infer_pooled(&x, &mut pool).unwrap();
+                        let d = want.max_abs_diff(&got[0]);
+                        assert!(d < 1e-4, "shared run diverged: {d}");
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn kernel_scratch_is_planned_per_program() {
+        // default tiny_cnn lowering: fused conv+maxpool (per-pixel cell)
+        // over the im2col scheme (gather row) — both need arena scratch
+        let spec = tiny_cnn(72);
+        let p = Program::lower(&spec, CompileOptions::default()).unwrap();
+        assert!(p.summary().scratch_elems > 0, "{}", p.summary());
+        // bit-exact: generic conv, no fusion, generic dense — no scratch
+        let exact = Program::lower(&spec, CompileOptions::bit_exact()).unwrap();
+        assert_eq!(exact.summary().scratch_elems, 0, "{}", exact.summary());
+        // rotated dense carries its doubled-x window per layer
+        let mlp = square_mlp(9, 16, 2);
+        let p = Program::lower(&mlp, CompileOptions::default()).unwrap();
+        assert!(p.summary().scratch_elems >= 2 * 16, "{}", p.summary());
+    }
+
+    #[test]
+    fn lower_count_hook_counts_lowerings() {
+        let spec = tiny_cnn(73);
+        let before = lower_count();
+        let _a = Program::lower(&spec, CompileOptions::default()).unwrap();
+        let _b = Program::lower(&spec, CompileOptions::default()).unwrap();
+        // other tests may lower concurrently — assert at least our two
+        assert!(lower_count() >= before + 2);
     }
 
     #[test]
@@ -1578,12 +1750,12 @@ mod tests {
     #[test]
     fn interleaved_buckets_stabilize_after_first_pass() {
         let spec = tiny_cnn(68);
-        let mut p = Program::lower(&spec, CompileOptions::default()).unwrap();
+        let p = Program::lower(&spec, CompileOptions::default()).unwrap();
         let mut pool = ArenaPool::new();
         let buckets = [1usize, 3, 5];
         let mut rng = SplitMix64::new(19);
 
-        let mut run = |pool: &mut ArenaPool, p: &mut Program, batch: usize| -> usize {
+        let mut run = |pool: &mut ArenaPool, p: &Program, batch: usize| -> usize {
             let x = Tensor::from_vec(
                 &[batch, 8, 8, 3],
                 rng.uniform_vec(batch * 8 * 8 * 3),
@@ -1595,14 +1767,14 @@ mod tests {
         };
 
         // first pass per bucket: each allocates its arena exactly once
-        let first: Vec<usize> = buckets.iter().map(|&b| run(&mut pool, &mut p, b)).collect();
+        let first: Vec<usize> = buckets.iter().map(|&b| run(&mut pool, &p, b)).collect();
         let (len0, bytes0) = (pool.len(), pool.bytes());
         assert_eq!(len0, buckets.len());
 
         // interleave the buckets for several rounds: steady state
         for _ in 0..4 {
             for (i, &b) in buckets.iter().enumerate() {
-                let per_bucket = run(&mut pool, &mut p, b);
+                let per_bucket = run(&mut pool, &p, b);
                 assert_eq!(per_bucket, first[i], "bucket {b} arena regrew");
             }
             assert_eq!(pool.len(), len0, "pool length grew in steady state");

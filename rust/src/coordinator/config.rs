@@ -5,6 +5,7 @@
 //!   "listen": "127.0.0.1:7878",
 //!   "max_wait_us": 500,
 //!   "queue_depth": 2048,
+//!   "workers": 4,
 //!   "models": ["c_bh", "c_htwk"]
 //! }
 //! ```
@@ -21,7 +22,7 @@ use anyhow::{bail, Context, Result};
 use crate::engine::EngineKind;
 use crate::util::json::Json;
 
-use super::server::CoordinatorConfig;
+use super::server::{CoordinatorConfig, default_workers};
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
@@ -32,6 +33,10 @@ pub struct ServingConfig {
     /// Engine kind to serve with (`"engine": "optimized"`); default is the
     /// best kind the build supports.
     pub engine: EngineKind,
+    /// Worker threads per model for engines with a shared-inference
+    /// artifact (`"workers": 4`); default `min(4, cores)`. Engines without
+    /// one (naive, PJRT) stay pinned to the executor thread.
+    pub workers: usize,
 }
 
 impl Default for ServingConfig {
@@ -42,6 +47,7 @@ impl Default for ServingConfig {
             max_wait: Duration::from_micros(500),
             queue_depth: 1024,
             engine: EngineKind::preferred(),
+            workers: default_workers(),
         }
     }
 }
@@ -76,6 +82,7 @@ impl ServingConfig {
                 Some(s) => EngineKind::parse(s)?,
                 None => d.engine,
             },
+            workers: j.get("workers").and_then(Json::as_usize).unwrap_or(d.workers).max(1),
         })
     }
 
@@ -90,6 +97,7 @@ impl ServingConfig {
             max_wait: self.max_wait,
             queue_depth: self.queue_depth,
             engine: self.engine,
+            workers: self.workers,
         }
     }
 }
@@ -125,6 +133,19 @@ mod tests {
         let d = ServingConfig::parse(r#"{"models": ["c_bh"]}"#).unwrap();
         assert_eq!(d.engine, EngineKind::preferred());
         assert!(ServingConfig::parse(r#"{"models": ["c_bh"], "engine": "jit"}"#).is_err());
+    }
+
+    #[test]
+    fn workers_key_parses_and_defaults() {
+        let c = ServingConfig::parse(r#"{"models": ["c_bh"], "workers": 7}"#).unwrap();
+        assert_eq!(c.workers, 7);
+        assert_eq!(c.coordinator_config().workers, 7);
+        let d = ServingConfig::parse(r#"{"models": ["c_bh"]}"#).unwrap();
+        assert_eq!(d.workers, default_workers());
+        assert!(d.workers >= 1 && d.workers <= 4);
+        // 0 would mean "no execution lane"; clamp to 1
+        let z = ServingConfig::parse(r#"{"models": ["c_bh"], "workers": 0}"#).unwrap();
+        assert_eq!(z.workers, 1);
     }
 
     #[test]

@@ -87,12 +87,37 @@ impl Counter {
     }
 }
 
+/// An up/down gauge (in-flight batches). Tracks a high-water mark so the
+/// stress tests can assert the worker pool actually overlapped batches.
+#[derive(Default)]
+pub struct Gauge {
+    value: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    pub fn inc(&self) {
+        let now = self.value.fetch_add(1, Ordering::Relaxed) + 1;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+    pub fn dec(&self) {
+        self.value.fetch_sub(1, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+    /// Highest simultaneous value ever observed.
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
 /// Per-model serving metrics.
 #[derive(Default)]
 pub struct ModelMetrics {
     /// end-to-end request latency (enqueue → reply)
     pub latency: Histogram,
-    /// model execute time per batch
+    /// dispatch → reply time per batch (includes lane-queue wait)
     pub exec: Histogram,
     /// time requests wait in the batcher queue
     pub queue_wait: Histogram,
@@ -100,6 +125,9 @@ pub struct ModelMetrics {
     pub batches: Counter,
     pub padded_slots: Counter,
     pub errors: Counter,
+    /// Batches currently dispatched to the execution lane; the peak shows
+    /// how many the worker pool actually overlapped.
+    pub inflight: Gauge,
 }
 
 impl ModelMetrics {
@@ -117,15 +145,17 @@ impl ModelMetrics {
         }
     }
 
-    pub fn render(&self, name: &str) -> String {
+    pub fn render(&self, name: &str, workers: usize) -> String {
         format!(
-            "{name}: {} reqs in {} batches (fill {:.2}, padded {}), \
-             latency mean {:.0}µs p50 {}µs p95 {}µs max {}µs, \
+            "{name} [{workers} worker{}]: {} reqs in {} batches (fill {:.2}, padded {}, \
+             peak inflight {}), latency mean {:.0}µs p50 {}µs p95 {}µs max {}µs, \
              exec mean {:.0}µs, queue mean {:.0}µs, errors {}",
+            if workers == 1 { "" } else { "s" },
             self.requests.get(),
             self.batches.get(),
             self.mean_batch_fill(),
             self.padded_slots.get(),
+            self.inflight.peak(),
             self.latency.mean_us(),
             self.latency.quantile_us(0.5),
             self.latency.quantile_us(0.95),
@@ -161,6 +191,21 @@ mod tests {
         let h2 = Histogram::new();
         h2.record_us(1u64 << 45); // clamps to last bucket
         assert_eq!(h2.count(), 1);
+    }
+
+    #[test]
+    fn gauge_tracks_peak() {
+        let g = Gauge::default();
+        g.inc();
+        g.inc();
+        g.dec();
+        g.inc();
+        assert_eq!(g.get(), 2);
+        assert_eq!(g.peak(), 2);
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 0);
+        assert_eq!(g.peak(), 2);
     }
 
     #[test]

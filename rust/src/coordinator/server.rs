@@ -1,15 +1,25 @@
-//! The serving coordinator (L3): a model registry with an executor thread
-//! that owns all PJRT state (the wrapper types are not `Send`), per-model
-//! batcher threads implementing the `BatchPolicy`, and shared metrics.
+//! The serving coordinator (L3): a model registry, per-model batcher
+//! threads implementing the `BatchPolicy`, and two execution lanes:
+//!
+//! * **Worker pools** — engines that expose a shared-inference artifact
+//!   ([`Engine::shareable`], e.g. the optimized interpreter's immutable
+//!   `Arc<Program>`) get `workers` threads per model. The program is
+//!   lowered **once**; each worker owns only its scratch (arena pool), so
+//!   adding a core costs one arena, not one engine.
+//! * **The pinned executor thread** — engines whose state is not `Send`
+//!   (the PJRT wrapper types) or that don't opt into sharing (the naive
+//!   interpreter) are built *and* executed on one dedicated thread,
+//!   exactly the pre-pool behavior.
 //!
 //! Request path (Python nowhere in sight):
 //!   client → `ModelClient::infer` → batcher thread (dynamic batching, §4's
-//!   many-candidates-per-frame workload) → executor thread (PJRT execute of
-//!   the AOT artifact) → reply channel → client.
+//!   many-candidates-per-frame workload) → worker pool / executor thread →
+//!   per-request replies, sent from the execution site so a batcher can
+//!   keep `workers + 1` batches in flight instead of round-tripping one.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -18,9 +28,24 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::batcher::{BatchPolicy, Flush};
 use crate::coordinator::metrics::ModelMetrics;
-use crate::engine::{build_engine, Engine, EngineKind, EngineOptions};
+use crate::engine::{
+    build_engine, build_engine_from_spec, Engine, EngineKind, EngineOptions, SharedInfer,
+    WorkerScratch,
+};
+use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
 use crate::runtime::artifact::Manifest;
+
+/// How long an idle batcher sleeps between shutdown-flag checks. Clients
+/// may hold their queue sender past `shutdown()`, so the batcher can never
+/// rely on channel disconnection alone to exit.
+const IDLE_TICK: Duration = Duration::from_millis(25);
+
+/// How long a batcher at its in-flight cap waits for a ticket to return
+/// before presuming the ticket died with a crashed lane (worker panic) and
+/// minting a replacement. Orders of magnitude above any sane batch time,
+/// so a merely slow lane never breaks the cap.
+const TICKET_PATIENCE: Duration = Duration::from_secs(5);
 
 /// A single inference request: one item (no batch dim); the batcher stacks.
 struct Request {
@@ -29,21 +54,44 @@ struct Request {
     reply: SyncSender<Result<Tensor>>,
 }
 
-/// Work sent to the executor thread.
+/// A stacked batch in flight from a batcher to an execution lane. The lane
+/// that runs it also fans the replies out and returns the stacking buffer,
+/// so the batcher never blocks on a round-trip.
+struct Job {
+    bucket: usize,
+    /// `[bucket, item…]`, zero-padded past `requests.len()`.
+    batch: Tensor,
+    requests: Vec<Request>,
+    t_exec: Instant,
+    metrics: Arc<ModelMetrics>,
+    /// Returns the consumed stacking buffer to the batcher (its ticket to
+    /// stack another batch — the in-flight cap and the recycling pool).
+    done: Sender<Vec<f32>>,
+}
+
+/// Work sent to the pinned executor thread.
 enum ExecMsg {
     Register {
         name: String,
-        reply: SyncSender<Result<RegisterInfo>>,
+        reply: SyncSender<Result<Registration>>,
+    },
+    RegisterSpec {
+        spec: Box<ModelSpec>,
+        buckets: Vec<usize>,
+        reply: SyncSender<Result<Registration>>,
     },
     InferBatch {
         name: String,
-        batch: Tensor,
-        /// Replies with the result AND the input buffer, which the batcher
-        /// recycles as its next stacking scratch — the batch path allocates
-        /// nothing once capacities have grown to the largest bucket.
-        reply: SyncSender<(Result<Tensor>, Vec<f32>)>,
+        job: Job,
     },
     Shutdown,
+}
+
+/// What engine registration produced: the client-visible info plus the
+/// shared artifact when the engine opts into pool serving.
+struct Registration {
+    info: RegisterInfo,
+    shared: Option<Arc<dyn SharedInfer>>,
 }
 
 #[derive(Debug, Clone)]
@@ -56,6 +104,9 @@ pub struct RegisterInfo {
     pub params: usize,
     /// Registry name of the engine serving this model.
     pub engine: String,
+    /// Threads executing this model: the pool size for shared engines, 1
+    /// for engines pinned to the executor thread.
+    pub workers: usize,
 }
 
 /// Coordinator configuration.
@@ -68,6 +119,15 @@ pub struct CoordinatorConfig {
     /// Defaults to the best kind this build supports (compiled with the
     /// `pjrt` feature, optimized interpreter otherwise).
     pub engine: EngineKind,
+    /// Worker threads per model for engines with a shared-inference
+    /// artifact. Engines without one (naive, PJRT) always get the single
+    /// pinned executor thread regardless of this setting.
+    pub workers: usize,
+}
+
+/// Default per-model pool size: `min(4, cores)`.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(4)
 }
 
 impl Default for CoordinatorConfig {
@@ -76,15 +136,36 @@ impl Default for CoordinatorConfig {
             max_wait: Duration::from_millis(2),
             queue_depth: 1024,
             engine: EngineKind::preferred(),
+            workers: default_workers(),
         }
     }
 }
 
 pub struct Coordinator {
     exec_tx: Sender<ExecMsg>,
-    exec_thread: Option<JoinHandle<()>>,
-    batchers: Vec<JoinHandle<()>>,
+    exec_thread: Mutex<Option<JoinHandle<()>>>,
+    /// One batcher handle per registered model, joined at drop so replies
+    /// in flight at teardown are delivered, not raced.
+    batchers: Mutex<Vec<JoinHandle<()>>>,
+    /// Pool worker handles across all models, joined after the batchers
+    /// (workers exit once their model's batcher drops the job sender).
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Serializes the whole register sequence (lookup → engine build →
+    /// insert), so two threads registering one name can never spawn two
+    /// batchers or leak a queue. The `queues` lock alone can't: engine
+    /// construction must happen outside it, re-opening the race.
+    reg_lock: Mutex<()>,
     queues: Mutex<HashMap<String, (SyncSender<Request>, Arc<ModelMetrics>, RegisterInfo)>>,
+    /// Model names the manifest can register. Unknown names are rejected
+    /// here, O(1) under `reg_lock`, without a round-trip through the
+    /// executor thread — a client spamming bad names must not queue work
+    /// behind pinned-engine inference.
+    manifest_models: std::collections::HashSet<String>,
+    /// Bumped on every successful registration. Lets callers (the TCP
+    /// front end) cache *failed* model resolutions and retry only once the
+    /// registry has actually changed, instead of paying the registry lock
+    /// + executor round-trip per request for a misspelled name.
+    epoch: AtomicU64,
     cfg: CoordinatorConfig,
     stopping: Arc<AtomicBool>,
 }
@@ -96,61 +177,154 @@ impl Coordinator {
     pub fn start(manifest: Manifest, cfg: CoordinatorConfig) -> Result<Arc<Self>> {
         let (exec_tx, exec_rx) = mpsc::channel::<ExecMsg>();
         let engine_kind = cfg.engine;
+        let manifest_models = manifest.models.keys().cloned().collect();
         let exec_thread = std::thread::Builder::new()
             .name("engine-executor".into())
             .spawn(move || executor_main(manifest, engine_kind, exec_rx))
             .context("spawning executor thread")?;
         Ok(Arc::new(Self {
             exec_tx,
-            exec_thread: Some(exec_thread),
-            batchers: Vec::new(),
+            exec_thread: Mutex::new(Some(exec_thread)),
+            batchers: Mutex::new(Vec::new()),
+            workers: Mutex::new(Vec::new()),
+            reg_lock: Mutex::new(()),
             queues: Mutex::new(HashMap::new()),
+            manifest_models,
+            epoch: AtomicU64::new(0),
             cfg,
             stopping: Arc::new(AtomicBool::new(false)),
         }))
     }
 
-    /// Load + PJRT-compile a model (the runtime-JIT step) and start its
-    /// batcher. Idempotent: re-registering returns the existing client.
+    /// Load + compile a model from the manifest (the runtime-JIT step) and
+    /// start its serving lane. Idempotent: re-registering returns the
+    /// existing client, even under concurrent callers.
     pub fn register(self: &Arc<Self>, name: &str) -> Result<ModelClient> {
-        {
-            let queues = self.queues.lock().unwrap();
-            if let Some((tx, metrics, info)) = queues.get(name) {
-                return Ok(ModelClient {
-                    tx: tx.clone(),
-                    metrics: metrics.clone(),
-                    info: info.clone(),
-                });
-            }
+        let _reg = self.reg_lock.lock().unwrap();
+        if self.stopping.load(Ordering::SeqCst) {
+            bail!("coordinator is shut down");
         }
+        if let Some(client) = self.lookup(name) {
+            return Ok(client);
+        }
+        // O(1) rejection of unknown names; only manifest models may queue
+        // an engine build on the executor thread
+        if !self.manifest_models.contains(name) {
+            bail!(
+                "model `{name}` not in manifest (have: {:?})",
+                self.manifest_models.iter().collect::<Vec<_>>()
+            );
+        }
+        let reg = self.exec_round_trip(|reply| ExecMsg::Register { name: name.into(), reply })?;
+        self.finish_register(reg)
+    }
+
+    /// Register a model from an in-memory spec (no artifact manifest
+    /// needed): the executor builds the configured interpreter engine over
+    /// it and the serving lane comes up exactly as for manifest models.
+    /// `buckets` are the batch sizes the batcher packs to.
+    pub fn register_spec(
+        self: &Arc<Self>,
+        spec: &ModelSpec,
+        buckets: &[usize],
+    ) -> Result<ModelClient> {
+        if buckets.is_empty() {
+            bail!("register_spec needs at least one batch bucket");
+        }
+        let _reg = self.reg_lock.lock().unwrap();
+        if self.stopping.load(Ordering::SeqCst) {
+            bail!("coordinator is shut down");
+        }
+        if let Some(client) = self.lookup(&spec.name) {
+            return Ok(client);
+        }
+        let spec = Box::new(spec.clone());
+        let buckets = buckets.to_vec();
+        let reg =
+            self.exec_round_trip(move |reply| ExecMsg::RegisterSpec { spec, buckets, reply })?;
+        self.finish_register(reg)
+    }
+
+    fn lookup(&self, name: &str) -> Option<ModelClient> {
+        let queues = self.queues.lock().unwrap();
+        queues.get(name).map(|(tx, metrics, info)| ModelClient {
+            tx: tx.clone(),
+            metrics: metrics.clone(),
+            info: info.clone(),
+        })
+    }
+
+    fn exec_round_trip(
+        &self,
+        msg: impl FnOnce(SyncSender<Result<Registration>>) -> ExecMsg,
+    ) -> Result<Registration> {
         let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-        self.exec_tx
-            .send(ExecMsg::Register { name: name.into(), reply: reply_tx })
-            .map_err(|_| anyhow!("executor thread gone"))?;
-        let info = reply_rx.recv().map_err(|_| anyhow!("executor thread gone"))??;
+        self.exec_tx.send(msg(reply_tx)).map_err(|_| anyhow!("executor thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("executor thread gone"))?
+    }
+
+    /// Spawn the model's execution lane (pool or pinned dispatch) and its
+    /// batcher, then publish the queue. Caller holds `reg_lock`.
+    fn finish_register(&self, reg: Registration) -> Result<ModelClient> {
+        let Registration { mut info, shared } = reg;
+        let metrics = Arc::new(ModelMetrics::new());
+
+        let dispatch = match shared {
+            Some(shared) => {
+                let pool = self.cfg.workers.max(1);
+                info.workers = pool;
+                // Rendezvous-ish bounded job queue: the ticket pool below
+                // (stacking buffers) is the real in-flight cap; this bound
+                // just keeps teardown prompt.
+                let (work_tx, work_rx) = mpsc::sync_channel::<Job>(pool);
+                let work_rx = Arc::new(Mutex::new(work_rx));
+                let mut handles = self.workers.lock().unwrap();
+                for i in 0..pool {
+                    // One scratch (arena pool, pre-pinned for every serving
+                    // bucket) per worker; the lowered program is shared.
+                    let scratch = shared.new_scratch(&info.buckets);
+                    let shared = shared.clone();
+                    let rx = work_rx.clone();
+                    handles.push(
+                        std::thread::Builder::new()
+                            .name(format!("worker-{}-{i}", info.name))
+                            .spawn(move || worker_main(shared, scratch, rx))
+                            .context("spawning pool worker")?,
+                    );
+                }
+                Dispatch::Pool { work_tx }
+            }
+            None => {
+                info.workers = 1;
+                Dispatch::Pinned { exec_tx: self.exec_tx.clone(), name: info.name.clone() }
+            }
+        };
 
         let (req_tx, req_rx) = mpsc::sync_channel::<Request>(self.cfg.queue_depth);
-        let metrics = Arc::new(ModelMetrics::new());
         let policy = BatchPolicy::new(info.buckets.clone(), self.cfg.max_wait);
-        let exec_tx = self.exec_tx.clone();
         let m2 = metrics.clone();
         let info2 = info.clone();
         let stopping = self.stopping.clone();
+        let max_inflight = info.workers + 1;
         let handle = std::thread::Builder::new()
-            .name(format!("batcher-{name}"))
-            .spawn(move || batcher_main(info2, policy, req_rx, exec_tx, m2, stopping))
+            .name(format!("batcher-{}", info.name))
+            .spawn(move || {
+                batcher_main(info2, policy, req_rx, dispatch, m2, stopping, max_inflight)
+            })
             .context("spawning batcher")?;
+        self.batchers.lock().unwrap().push(handle);
 
-        let client = ModelClient { tx: req_tx.clone(), metrics: metrics.clone(), info: info.clone() };
-        let mut queues = self.queues.lock().unwrap();
-        queues.insert(name.to_string(), (req_tx, metrics, info));
-        // Store the join handle (interior mutability not needed; we only
-        // join in shutdown where we have &mut via Arc::try_unwrap fallback).
-        drop(queues);
-        // batcher handles are detached on purpose; they exit when their
-        // request queue closes or `stopping` flips.
-        let _ = handle;
+        let client =
+            ModelClient { tx: req_tx.clone(), metrics: metrics.clone(), info: info.clone() };
+        self.queues.lock().unwrap().insert(info.name.clone(), (req_tx, metrics, info));
+        self.epoch.fetch_add(1, Ordering::SeqCst);
         Ok(client)
+    }
+
+    /// Monotonic registration counter; changes exactly when a new model
+    /// becomes servable (see `epoch` field).
+    pub fn registration_epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
     }
 
     /// Registered model names.
@@ -165,31 +339,48 @@ impl Coordinator {
     pub fn render_metrics(&self) -> String {
         let queues = self.queues.lock().unwrap();
         let mut out = String::new();
-        for (name, (_, m, _)) in queues.iter() {
-            out.push_str(&m.render(name));
+        for (name, (_, m, info)) in queues.iter() {
+            out.push_str(&m.render(name, info.workers));
             out.push('\n');
         }
         out
     }
 
-    /// Stop batchers and the executor. Outstanding requests get errors.
+    /// Stop batchers and the executor. Outstanding requests get errors;
+    /// every *dispatched* batch is still executed and replied to.
     pub fn shutdown(&self) {
-        self.stopping.store(true, Ordering::SeqCst);
-        // Close request queues so batchers drain and exit.
-        self.queues.lock().unwrap().clear();
+        // Under `reg_lock`: a registration in flight completes (its lane
+        // lands in the handle vectors below and is joined); any later one
+        // sees `stopping` under the same lock and fails cleanly instead of
+        // re-spawning lanes on a torn-down coordinator.
+        {
+            let _reg = self.reg_lock.lock().unwrap();
+            self.stopping.store(true, Ordering::SeqCst);
+            // Close request queues so batchers drain and exit.
+            self.queues.lock().unwrap().clear();
+        }
+        // Join in dependency order: batchers finish dispatching, workers
+        // drain the remaining jobs (delivering their replies). Only THEN
+        // tell the executor to stop — its channel is FIFO, so every pinned
+        // job a batcher managed to send is ahead of the Shutdown message
+        // and completes normally instead of being dropped reply-less.
+        // Safe to call from multiple threads / again from drop.
+        for h in self.batchers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
         let _ = self.exec_tx.send(ExecMsg::Shutdown);
+        if let Some(h) = self.exec_thread.lock().unwrap().take() {
+            let _ = h.join();
+        }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown();
-        if let Some(h) = self.exec_thread.take() {
-            let _ = h.join();
-        }
-        for h in self.batchers.drain(..) {
-            let _ = h.join();
-        }
     }
 }
 
@@ -226,12 +417,60 @@ impl ModelClient {
     }
 }
 
+// ---------------------------------------------------------------- dispatch
+
+/// Where a batcher sends its stacked jobs.
+enum Dispatch {
+    /// The single executor thread (engines that are not `Send`/shareable).
+    Pinned { exec_tx: Sender<ExecMsg>, name: String },
+    /// This model's worker pool over one shared artifact.
+    Pool { work_tx: SyncSender<Job> },
+}
+
+impl Dispatch {
+    /// Hand a job to the execution lane; on a closed lane the job comes
+    /// back so the batcher can fail its requests.
+    fn send(&self, job: Job) -> std::result::Result<(), Job> {
+        match self {
+            Dispatch::Pinned { exec_tx, name } => exec_tx
+                .send(ExecMsg::InferBatch { name: name.clone(), job })
+                .map_err(|e| match e.0 {
+                    ExecMsg::InferBatch { job, .. } => job,
+                    _ => unreachable!("we sent an InferBatch"),
+                }),
+            Dispatch::Pool { work_tx } => work_tx.send(job).map_err(|e| e.0),
+        }
+    }
+}
+
 // ---------------------------------------------------------------- threads
 
-/// The executor thread: owns every engine (the compiled engine's PJRT
-/// state is not `Send`, so construction *and* execution are confined
-/// here). Engines are built once per model through the registry and kept
-/// for the coordinator's lifetime — re-registering is a cache hit.
+/// A pool worker: one clone of the shared artifact, one private scratch.
+/// Workers race on the job queue (`Mutex<Receiver>` — exactly one waiter
+/// gets each job) and exit when the batcher drops the sender.
+fn worker_main(
+    shared: Arc<dyn SharedInfer>,
+    mut scratch: WorkerScratch,
+    rx: Arc<Mutex<Receiver<Job>>>,
+) {
+    loop {
+        // The guard is a temporary of this statement: the lock is held
+        // only while *waiting*, and inference below runs unlocked so the
+        // other workers execute concurrently.
+        let msg = rx.lock().unwrap().recv();
+        let Ok(job) = msg else { return };
+        let result = shared.infer_shared(&job.batch, &mut scratch).map(|mut o| o.remove(0));
+        complete(job, result);
+    }
+}
+
+/// The pinned executor thread: owns every non-shareable engine (the
+/// compiled engine's PJRT state is not `Send`, so construction *and*
+/// execution are confined here). Engines are built once per model through
+/// the registry and kept for the coordinator's lifetime — re-registering
+/// is a cache hit. Shareable engines are also *built* here (one code
+/// path), but their inference traffic never arrives: the worker pool owns
+/// it.
 fn executor_main(manifest: Manifest, kind: EngineKind, rx: Receiver<ExecMsg>) {
     let opts = EngineOptions::default();
     let mut engines: HashMap<String, Box<dyn Engine>> = HashMap::new();
@@ -243,13 +482,16 @@ fn executor_main(manifest: Manifest, kind: EngineKind, rx: Receiver<ExecMsg>) {
                 let res = register_engine(&manifest, kind, &opts, &mut engines, &name);
                 let _ = reply.send(res);
             }
-            ExecMsg::InferBatch { name, batch, reply } => {
-                let res = match engines.get_mut(&name) {
-                    Some(e) => e.infer(&batch).map(|mut outs| outs.remove(0)),
+            ExecMsg::RegisterSpec { spec, buckets, reply } => {
+                let res = register_spec_engine(kind, &opts, &mut engines, &spec, buckets);
+                let _ = reply.send(res);
+            }
+            ExecMsg::InferBatch { name, job } => {
+                let result = match engines.get_mut(&name) {
+                    Some(e) => e.infer(&job.batch).map(|mut outs| outs.remove(0)),
                     None => Err(anyhow!("model `{name}` not registered")),
                 };
-                // hand the input buffer back for the batcher to recycle
-                let _ = reply.send((res, batch.into_vec()));
+                complete(job, result);
             }
         }
     }
@@ -261,152 +503,92 @@ fn register_engine(
     opts: &EngineOptions,
     engines: &mut HashMap<String, Box<dyn Engine>>,
     name: &str,
-) -> Result<RegisterInfo> {
+) -> Result<Registration> {
     let entry = manifest.entry(name)?.clone();
     let cache_hit = engines.contains_key(name);
     if !cache_hit {
-        let mut engine = build_engine(kind, manifest, name, opts)?;
-        // Pool one arena per advertised batch bucket up front (cheap: just
-        // allocation, no inference) so steady-state serving never allocates
-        // engine-side — the §3.2 plan fixed every buffer size at lowering.
+        let engine = build_engine(kind, manifest, name, opts)?;
         let buckets = engine.batch_buckets().unwrap_or_else(|| entry.batches.clone());
-        for &b in &buckets {
-            engine.prepare(b);
-        }
-        engines.insert(name.to_string(), engine);
+        finish_engine(engines, name, engine, &buckets);
     }
     let engine = engines.get(name).expect("engine registered above");
-    Ok(RegisterInfo {
-        name: name.to_string(),
-        // Interpreters take any batch size; they still advertise the
-        // manifest buckets so the batcher packs identically across engines.
-        buckets: engine.batch_buckets().unwrap_or_else(|| entry.batches.clone()),
-        input_shape: entry.input_shape.clone(),
-        compile_ms: engine.compile_ms(),
-        cache_hit,
-        params: entry.params,
-        engine: engine.name().to_string(),
+    Ok(Registration {
+        shared: engine.shareable(),
+        info: RegisterInfo {
+            name: name.to_string(),
+            // Interpreters take any batch size; they still advertise the
+            // manifest buckets so the batcher packs identically across
+            // engines.
+            buckets: engine.batch_buckets().unwrap_or_else(|| entry.batches.clone()),
+            input_shape: entry.input_shape.clone(),
+            compile_ms: engine.compile_ms(),
+            cache_hit,
+            params: entry.params,
+            engine: engine.name().to_string(),
+            workers: 1, // finalized by the coordinator once the lane exists
+        },
     })
 }
 
-fn batcher_main(
-    info: RegisterInfo,
-    policy: BatchPolicy,
-    rx: Receiver<Request>,
-    exec_tx: Sender<ExecMsg>,
-    metrics: Arc<ModelMetrics>,
-    stopping: Arc<AtomicBool>,
-) {
-    let item_elems: usize = info.input_shape.iter().product();
-    let mut queue: Vec<Request> = Vec::new();
-    // Stacking scratch, recycled through the executor round-trip: after the
-    // first max-bucket flush its capacity never grows again.
-    let mut scratch: Vec<f32> = Vec::new();
-
-    loop {
-        if stopping.load(Ordering::SeqCst) {
-            fail_all(&mut queue, "coordinator shutting down");
-            return;
-        }
-        let oldest = queue.first().map(|r| r.enqueued.elapsed()).unwrap_or(Duration::ZERO);
-        match policy.decide(queue.len(), oldest) {
-            Flush::Idle => match rx.recv() {
-                Ok(r) => queue.push(r),
-                Err(_) => return, // queue closed, nothing pending
-            },
-            Flush::Wait(d) => match rx.recv_timeout(d) {
-                Ok(r) => queue.push(r),
-                Err(RecvTimeoutError::Timeout) => {} // deadline → next decide flushes
-                Err(RecvTimeoutError::Disconnected) => {
-                    flush(&info, &policy, &mut queue, &exec_tx, &metrics, item_elems, &mut scratch);
-                    return;
-                }
-            },
-            Flush::Now(bucket) => {
-                let take = queue.len().min(bucket);
-                let batch: Vec<Request> = queue.drain(..take).collect();
-                run_batch(&info, bucket, batch, &exec_tx, &metrics, item_elems, &mut scratch);
-            }
-        }
+fn register_spec_engine(
+    kind: EngineKind,
+    opts: &EngineOptions,
+    engines: &mut HashMap<String, Box<dyn Engine>>,
+    spec: &ModelSpec,
+    buckets: Vec<usize>,
+) -> Result<Registration> {
+    let cache_hit = engines.contains_key(&spec.name);
+    if !cache_hit {
+        let engine = build_engine_from_spec(kind, spec, opts)?;
+        finish_engine(engines, &spec.name, engine, &buckets);
     }
+    let engine = engines.get(&spec.name).expect("engine registered above");
+    Ok(Registration {
+        shared: engine.shareable(),
+        info: RegisterInfo {
+            name: spec.name.clone(),
+            buckets: engine.batch_buckets().unwrap_or(buckets),
+            input_shape: spec.input_shape.clone(),
+            compile_ms: engine.compile_ms(),
+            cache_hit,
+            params: spec.param_count(),
+            engine: engine.name().to_string(),
+            workers: 1,
+        },
+    })
 }
 
-#[allow(clippy::too_many_arguments)]
-fn flush(
-    info: &RegisterInfo,
-    policy: &BatchPolicy,
-    queue: &mut Vec<Request>,
-    exec_tx: &Sender<ExecMsg>,
-    metrics: &ModelMetrics,
-    item_elems: usize,
-    scratch: &mut Vec<f32>,
+/// Shared tail of both register paths: warm the engine's own arenas only
+/// when it will actually execute (pinned lane) — pool workers pre-size
+/// their private scratch instead — then publish it in the cache.
+fn finish_engine(
+    engines: &mut HashMap<String, Box<dyn Engine>>,
+    name: &str,
+    mut engine: Box<dyn Engine>,
+    buckets: &[usize],
 ) {
-    while !queue.is_empty() {
-        let bucket = policy.bucket_for(queue.len());
-        let take = queue.len().min(bucket);
-        let batch: Vec<Request> = queue.drain(..take).collect();
-        run_batch(info, bucket, batch, exec_tx, metrics, item_elems, scratch);
-    }
-}
-
-fn fail_all(queue: &mut Vec<Request>, msg: &str) {
-    for r in queue.drain(..) {
-        let _ = r.reply.send(Err(anyhow!("{msg}")));
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn run_batch(
-    info: &RegisterInfo,
-    bucket: usize,
-    batch: Vec<Request>,
-    exec_tx: &Sender<ExecMsg>,
-    metrics: &ModelMetrics,
-    item_elems: usize,
-    scratch: &mut Vec<f32>,
-) {
-    let n = batch.len();
-    debug_assert!(n <= bucket);
-    let t_exec = Instant::now();
-    for r in &batch {
-        metrics.queue_wait.record(r.enqueued.elapsed());
-    }
-
-    // Stack into [bucket, item…] on the recycled scratch: clear+resize
-    // zero-fills (covering the padded slots) without reallocating once the
-    // capacity has reached the largest bucket.
-    let mut shape = vec![bucket];
-    shape.extend_from_slice(&info.input_shape);
-    let mut data = std::mem::take(scratch);
-    data.clear();
-    data.resize(bucket * item_elems, 0.0);
-    for (i, r) in batch.iter().enumerate() {
-        data[i * item_elems..(i + 1) * item_elems].copy_from_slice(r.input.data());
-    }
-    let input = Tensor::from_vec(&shape, data);
-
-    let (reply_tx, reply_rx) = mpsc::sync_channel(1);
-    if let Err(send_err) =
-        exec_tx.send(ExecMsg::InferBatch { name: info.name.clone(), batch: input, reply: reply_tx })
-    {
-        if let ExecMsg::InferBatch { batch: unsent, .. } = send_err.0 {
-            *scratch = unsent.into_vec();
+    if engine.shareable().is_none() {
+        for &b in buckets {
+            engine.prepare(b);
         }
-        let mut q: Vec<Request> = batch;
-        fail_all(&mut q, "executor gone");
-        return;
     }
-    let (result, recycled) =
-        reply_rx.recv().unwrap_or_else(|_| (Err(anyhow!("executor gone")), Vec::new()));
-    *scratch = recycled;
+    engines.insert(name.to_string(), engine);
+}
+
+/// Deliver a finished job: record metrics, fan replies out per request,
+/// and return the stacking buffer to the batcher.
+fn complete(job: Job, result: Result<Tensor>) {
+    let Job { bucket, batch, requests, t_exec, metrics, done } = job;
+    let n = requests.len();
     metrics.exec.record(t_exec.elapsed());
     metrics.batches.add(1);
     metrics.requests.add(n as u64);
     metrics.padded_slots.add((bucket - n) as u64);
+    metrics.inflight.dec();
 
     match result {
         Ok(out) => {
-            for (i, r) in batch.into_iter().enumerate() {
+            for (i, r) in requests.into_iter().enumerate() {
                 let item = out.slice_batch(i, i + 1);
                 metrics.latency.record(r.enqueued.elapsed());
                 let _ = r.reply.send(Ok(item));
@@ -415,9 +597,179 @@ fn run_batch(
         Err(e) => {
             metrics.errors.add(n as u64);
             let msg = e.to_string();
-            for r in batch {
+            for r in requests {
                 let _ = r.reply.send(Err(anyhow!("{msg}")));
             }
         }
+    }
+    let _ = done.send(batch.into_vec());
+}
+
+fn batcher_main(
+    info: RegisterInfo,
+    policy: BatchPolicy,
+    rx: Receiver<Request>,
+    dispatch: Dispatch,
+    metrics: Arc<ModelMetrics>,
+    stopping: Arc<AtomicBool>,
+    max_inflight: usize,
+) {
+    let (done_tx, done_rx) = mpsc::channel::<Vec<f32>>();
+    let mut queue: Vec<Request> = Vec::new();
+    let mut stacker = Stacker {
+        item_elems: info.input_shape.iter().product(),
+        info,
+        dispatch,
+        metrics,
+        done_tx,
+        done_rx,
+        issued: 0,
+        max_inflight,
+        stopping: stopping.clone(),
+    };
+
+    loop {
+        if stopping.load(Ordering::SeqCst) {
+            fail_all(&mut queue, "coordinator shutting down");
+            return;
+        }
+        let oldest = queue.first().map(|r| r.enqueued.elapsed()).unwrap_or(Duration::ZERO);
+        match policy.decide(queue.len(), oldest) {
+            // recv_timeout, not recv: clients may hold the queue sender
+            // forever, and only this loop observes the stopping flag.
+            Flush::Idle => match rx.recv_timeout(IDLE_TICK) {
+                Ok(r) => queue.push(r),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => return, // nothing pending
+            },
+            Flush::Wait(d) => match rx.recv_timeout(d.min(IDLE_TICK)) {
+                Ok(r) => queue.push(r),
+                Err(RecvTimeoutError::Timeout) => {} // deadline → next decide flushes
+                Err(RecvTimeoutError::Disconnected) => {
+                    stacker.drain(&policy, &mut queue);
+                    return;
+                }
+            },
+            Flush::Now(bucket) => {
+                let take = queue.len().min(bucket);
+                let batch: Vec<Request> = queue.drain(..take).collect();
+                stacker.run_batch(bucket, batch);
+            }
+        }
+    }
+}
+
+/// The batcher's stacking state: the ticket pool of recycled stacking
+/// buffers (each dispatched job carries one away; `complete` sends it
+/// back), which caps in-flight batches at `max_inflight` and makes the
+/// steady state allocation-free.
+struct Stacker {
+    info: RegisterInfo,
+    dispatch: Dispatch,
+    metrics: Arc<ModelMetrics>,
+    item_elems: usize,
+    done_tx: Sender<Vec<f32>>,
+    done_rx: Receiver<Vec<f32>>,
+    issued: usize,
+    max_inflight: usize,
+    stopping: Arc<AtomicBool>,
+}
+
+impl Stacker {
+    /// Acquire a stacking buffer: a recycled one if available, a fresh one
+    /// while under the in-flight cap, otherwise block until a job returns
+    /// its ticket — a merely *slow* lane keeps the cap honored (we wait).
+    /// Two bounded escapes keep the batcher live: teardown (`stopping`),
+    /// and a ticket missing for [`TICKET_PATIENCE`] — presumed lost with a
+    /// crashed lane, so a replacement is minted and the batcher keeps
+    /// serving (the dead lane then fails the requests fast) instead of
+    /// wedging with a full request queue forever.
+    fn acquire(&mut self) -> Vec<f32> {
+        match self.done_rx.try_recv() {
+            Ok(buf) => buf,
+            Err(TryRecvError::Empty) if self.issued >= self.max_inflight => {
+                let patience = Instant::now() + TICKET_PATIENCE;
+                loop {
+                    match self.done_rx.recv_timeout(Duration::from_millis(100)) {
+                        Ok(buf) => break buf,
+                        Err(_) => {
+                            if self.stopping.load(Ordering::SeqCst)
+                                || Instant::now() >= patience
+                            {
+                                // mint a replacement and ACCOUNT for it:
+                                // if the missing ticket ever returns, the
+                                // cap still holds from then on instead of
+                                // growing by one per escape
+                                self.issued += 1;
+                                break Vec::new();
+                            }
+                            // slow lane: keep waiting, keep the cap
+                        }
+                    }
+                }
+            }
+            Err(_) => {
+                self.issued += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Dispatch everything still queued (teardown path) — the same
+    /// bucket/take/stack steps the steady-state `Flush::Now` arm performs.
+    fn drain(&mut self, policy: &BatchPolicy, queue: &mut Vec<Request>) {
+        while !queue.is_empty() {
+            let bucket = policy.bucket_for(queue.len());
+            let take = queue.len().min(bucket);
+            let batch: Vec<Request> = queue.drain(..take).collect();
+            self.run_batch(bucket, batch);
+        }
+    }
+
+    /// Stack a bucket and hand it to the execution lane — fire and forget;
+    /// the lane fans replies out, so this returns as soon as the job is
+    /// queued and the batcher keeps batching while workers execute.
+    fn run_batch(&mut self, bucket: usize, batch: Vec<Request>) {
+        let n = batch.len();
+        debug_assert!(n <= bucket);
+        for r in &batch {
+            self.metrics.queue_wait.record(r.enqueued.elapsed());
+        }
+
+        // Stack into [bucket, item…] on a recycled ticket buffer:
+        // clear+resize zero-fills (covering the padded slots) without
+        // reallocating once every ticket has reached the largest bucket.
+        let mut shape = vec![bucket];
+        shape.extend_from_slice(&self.info.input_shape);
+        let mut data = self.acquire();
+        data.clear();
+        data.resize(bucket * self.item_elems, 0.0);
+        for (i, r) in batch.iter().enumerate() {
+            let dst = &mut data[i * self.item_elems..(i + 1) * self.item_elems];
+            dst.copy_from_slice(r.input.data());
+        }
+        let input = Tensor::from_vec(&shape, data);
+
+        self.metrics.inflight.inc();
+        let job = Job {
+            bucket,
+            batch: input,
+            requests: batch,
+            t_exec: Instant::now(),
+            metrics: self.metrics.clone(),
+            done: self.done_tx.clone(),
+        };
+        if let Err(job) = self.dispatch.send(job) {
+            // dead lane: same delivery + accounting as an executed batch
+            // that errored (metrics, replies, gauge, ticket reclaim), so
+            // the requests/errors counters stay exact even in this path
+            complete(job, Err(anyhow!("execution lane gone")));
+        }
+    }
+}
+
+fn fail_all(queue: &mut Vec<Request>, msg: &str) {
+    for r in queue.drain(..) {
+        let _ = r.reply.send(Err(anyhow!("{msg}")));
     }
 }

@@ -29,8 +29,11 @@ pub struct TcpServer {
 }
 
 impl TcpServer {
-    /// Bind and start accepting. Models must already be registered on the
-    /// coordinator; unknown-model requests get error responses.
+    /// Bind and start accepting. Models are resolved **lazily per
+    /// request** (with a per-connection cache), so anything registered on
+    /// the coordinator after the server starts — or registrable from the
+    /// manifest — is immediately servable; a startup snapshot would return
+    /// "unknown model" forever for late registrations.
     pub fn start(coord: Arc<Coordinator>, bind: &str) -> Result<TcpServer> {
         let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
         let addr = listener.local_addr()?;
@@ -42,34 +45,25 @@ impl TcpServer {
         let conns2 = connections.clone();
         let accept_thread = std::thread::Builder::new()
             .name("tcp-accept".into())
-            .spawn(move || {
-                // pre-resolve clients for every registered model
-                let clients: HashMap<String, ModelClient> = coord
-                    .models()
-                    .into_iter()
-                    .filter_map(|m| coord.register(&m).ok().map(|c| (m, c)))
-                    .collect();
-                let clients = Arc::new(clients);
-                loop {
-                    if stop2.load(Ordering::SeqCst) {
-                        return;
+            .spawn(move || loop {
+                if stop2.load(Ordering::SeqCst) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        conns2.fetch_add(1, Ordering::Relaxed);
+                        let coord = coord.clone();
+                        let stop3 = stop2.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("tcp-conn".into())
+                            .spawn(move || {
+                                let _ = serve_connection(stream, &coord, &stop3);
+                            });
                     }
-                    match listener.accept() {
-                        Ok((stream, _)) => {
-                            conns2.fetch_add(1, Ordering::Relaxed);
-                            let clients = clients.clone();
-                            let stop3 = stop2.clone();
-                            let _ = std::thread::Builder::new()
-                                .name("tcp-conn".into())
-                                .spawn(move || {
-                                    let _ = serve_connection(stream, &clients, &stop3);
-                                });
-                        }
-                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(Duration::from_millis(5));
-                        }
-                        Err(_) => return,
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
                     }
+                    Err(_) => return,
                 }
             })?;
 
@@ -96,12 +90,19 @@ impl Drop for TcpServer {
 
 fn serve_connection(
     stream: TcpStream,
-    clients: &HashMap<String, ModelClient>,
+    coord: &Arc<Coordinator>,
     stopping: &AtomicBool,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
+    // Per-connection caches: resolved clients (the coordinator round-trip
+    // — a registry lock + possibly an engine build — happens once per
+    // (connection, model)) and failed names, remembered with the registry
+    // epoch so a misspelled model costs one lookup per registry change,
+    // not one per request, while late registrations are still picked up.
+    let mut clients: HashMap<String, ModelClient> = HashMap::new();
+    let mut failed: HashMap<String, (u64, String)> = HashMap::new();
     for line in reader.lines() {
         if stopping.load(Ordering::SeqCst) {
             break;
@@ -110,7 +111,7 @@ fn serve_connection(
         if line.trim().is_empty() {
             continue;
         }
-        let resp = handle_line(&line, clients);
+        let resp = handle_line(&line, coord, &mut clients, &mut failed);
         writer.write_all(resp.to_line().as_bytes())?;
         writer.write_all(b"\n")?;
         writer.flush()?;
@@ -118,18 +119,43 @@ fn serve_connection(
     Ok(())
 }
 
-fn handle_line(line: &str, clients: &HashMap<String, ModelClient>) -> Response {
+fn handle_line(
+    line: &str,
+    coord: &Arc<Coordinator>,
+    clients: &mut HashMap<String, ModelClient>,
+    failed: &mut HashMap<String, (u64, String)>,
+) -> Response {
     let req = match Request::parse(line) {
         Ok(r) => r,
         Err(e) => return Response::Err { id: 0, error: format!("bad request: {e}") },
     };
-    let Some(client) = clients.get(&req.model) else {
-        return Response::Err {
-            id: req.id,
-            error: format!("model `{}` not registered (have {:?})",
-                req.model, clients.keys().collect::<Vec<_>>()),
-        };
-    };
+    if !clients.contains_key(&req.model) {
+        if let Some((epoch, error)) = failed.get(&req.model) {
+            if *epoch == coord.registration_epoch() {
+                return Response::Err { id: req.id, error: error.clone() };
+            }
+        }
+        // Epoch sampled *before* the attempt: if a registration races in
+        // after the failure, the cached epoch is stale and we retry.
+        let epoch = coord.registration_epoch();
+        match coord.register(&req.model) {
+            Ok(c) => {
+                failed.remove(&req.model);
+                clients.insert(req.model.clone(), c);
+            }
+            Err(e) => {
+                let error = format!("model `{}` not registered ({e})", req.model);
+                // bounded: a client cycling through unique bad names must
+                // not grow this map forever; clearing only costs a retry
+                if failed.len() >= 64 {
+                    failed.clear();
+                }
+                failed.insert(req.model.clone(), (epoch, error.clone()));
+                return Response::Err { id: req.id, error };
+            }
+        }
+    }
+    let client = &clients[&req.model];
     let item: usize = client.info.input_shape.iter().product();
     if req.input.len() != item {
         return Response::Err {

@@ -19,7 +19,9 @@
 //! Later scaling work (sharding, new backends, batching policies) plugs in
 //! here: add a kind, implement [`Engine`], extend the registry match.
 
+use std::any::Any;
 use std::fmt;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -29,6 +31,46 @@ use crate::model::load::load_model;
 use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
 use crate::runtime::artifact::Manifest;
+
+/// Opaque per-worker mutable state for a [`SharedInfer`] artifact (arena
+/// pools, gather rows, …). The artifact that created it is the only one
+/// that knows the concrete type; workers just own it and hand it back on
+/// every call. `Send` so a worker thread can carry it; deliberately not
+/// `Sync` — scratch belongs to exactly one worker.
+pub struct WorkerScratch(Box<dyn Any + Send>);
+
+impl WorkerScratch {
+    pub fn new<T: Any + Send>(state: T) -> WorkerScratch {
+        WorkerScratch(Box::new(state))
+    }
+
+    /// Downcast back to the concrete scratch type; `None` if this scratch
+    /// came from a different artifact type.
+    pub fn get_mut<T: Any + Send>(&mut self) -> Option<&mut T> {
+        self.0.downcast_mut::<T>()
+    }
+}
+
+/// A shared, immutable inference artifact: `infer_shared` takes `&self`
+/// plus caller-owned scratch, so **one `Arc<dyn SharedInfer>` serves N
+/// worker threads** — the paper's fixed lowered network as a concurrency
+/// primitive. Engines opt in via [`Engine::shareable`]; per the RTNeural
+/// observation, concurrency then costs one scratch allocation per worker,
+/// never a second lowering.
+pub trait SharedInfer: Send + Sync {
+    /// Allocate this worker's mutable state, pre-sized (and pinned) for the
+    /// serving batch buckets so steady-state inference is allocation-free.
+    fn new_scratch(&self, buckets: &[usize]) -> WorkerScratch;
+
+    /// Run a forward pass on a `[B, ...]` input over the worker's scratch.
+    fn infer_shared(&self, input: &Tensor, scratch: &mut WorkerScratch) -> Result<Vec<Tensor>>;
+
+    /// The lowered plan, if this artifact has one (tests/benches assert on
+    /// it — e.g. that N workers report the *same* plan, lowered once).
+    fn plan_summary(&self) -> Option<&PlanSummary> {
+        None
+    }
+}
 
 /// A ready-to-run inference engine over a fixed model.
 ///
@@ -72,6 +114,16 @@ pub trait Engine {
     /// kernel variants, arena footprint — so tests and benches can assert
     /// on the lowered form. `None` for engines without a lowering stage.
     fn plan_summary(&self) -> Option<&PlanSummary> {
+        None
+    }
+
+    /// The engine's shared-inference artifact, if it has one. `Some` means
+    /// the coordinator may serve this model from a worker *pool*: every
+    /// worker gets a clone of the `Arc` plus its own [`WorkerScratch`].
+    /// `None` (the default — naive interpreter, PJRT engine with its
+    /// non-`Send` handles) keeps the model pinned to the single executor
+    /// thread, exactly the pre-pool behavior.
+    fn shareable(&self) -> Option<Arc<dyn SharedInfer>> {
         None
     }
 }
@@ -305,6 +357,58 @@ mod tests {
         assert_eq!(EngineOptions::with_buckets(&[1, 8]).buckets, Some(vec![1, 8]));
         let bits = EngineOptions::bit_exact().compile;
         assert!(!bits.approx && !bits.fold_bn);
+    }
+
+    #[test]
+    fn shareable_is_an_opt_in() {
+        let spec = tiny_cnn(44);
+        let naive =
+            build_engine_from_spec(EngineKind::Naive, &spec, &EngineOptions::default()).unwrap();
+        assert!(naive.shareable().is_none(), "naive stays pinned to the executor thread");
+        let opt = build_engine_from_spec(EngineKind::Optimized, &spec, &EngineOptions::default())
+            .unwrap();
+        assert!(opt.shareable().is_some(), "optimized shares its lowered program");
+    }
+
+    #[test]
+    fn shared_artifact_serves_many_workers_from_one_lowering() {
+        let spec = tiny_cnn(45);
+        let mut opt =
+            build_engine_from_spec(EngineKind::Optimized, &spec, &EngineOptions::exact()).unwrap();
+        let x = crate::nn::tensor::Tensor::filled(&[1, 8, 8, 3], 0.125);
+        let want = opt.infer(&x).unwrap();
+
+        let shared = opt.shareable().expect("optimized is shareable");
+        assert!(shared.plan_summary().is_some());
+        let workers: Vec<_> = (0..3)
+            .map(|_| {
+                let shared = shared.clone();
+                let x = x.clone();
+                let want = want[0].clone();
+                std::thread::spawn(move || {
+                    let mut scratch = shared.new_scratch(&[1, 4]);
+                    for _ in 0..4 {
+                        let got = shared.infer_shared(&x, &mut scratch).unwrap();
+                        assert_eq!(want.data(), got[0].data(), "worker diverged from engine");
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn foreign_scratch_is_rejected_not_ub() {
+        let spec = tiny_cnn(46);
+        let opt = build_engine_from_spec(EngineKind::Optimized, &spec, &EngineOptions::default())
+            .unwrap();
+        let shared = opt.shareable().unwrap();
+        let mut wrong = WorkerScratch::new(42usize);
+        let x = crate::nn::tensor::Tensor::filled(&[1, 8, 8, 3], 0.5);
+        let err = shared.infer_shared(&x, &mut wrong).unwrap_err().to_string();
+        assert!(err.contains("scratch"), "{err}");
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! compiled-nn inspect --model c_bh        # §3.3 cost table + §3.2 memory plan + §3.5 folding
 //! compiled-nn precision                   # §3.4 approximation error table
 //! compiled-nn table1 [--iters N]          # quick Table-1 analog (benches do it properly)
-//! compiled-nn serve --model c_bh --seconds 5 [--offered RPS] [--engine KIND]
+//! compiled-nn serve --model c_bh --seconds 5 [--offered RPS] [--engine KIND] [--workers N]
 //! ```
 //!
 //! Engines are never constructed directly here: every subcommand goes
@@ -345,12 +345,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(engine) = args.get("engine") {
         cfg.engine = EngineKind::parse(engine)?;
     }
+    cfg.workers = args.usize_or("workers", cfg.workers)?.max(1);
     let manifest = Manifest::load_default()?;
     let coord = Coordinator::start(manifest.clone(), cfg)?;
     let client = coord.register(&name)?;
     println!(
-        "registered `{name}` on `{}`: buckets {:?}, compile {:.1} ms (cache hit: {})",
-        client.info.engine, client.info.buckets, client.info.compile_ms, client.info.cache_hit
+        "registered `{name}` on `{}` × {} worker(s): buckets {:?}, compile {:.1} ms \
+         (cache hit: {})",
+        client.info.engine,
+        client.info.workers,
+        client.info.buckets,
+        client.info.compile_ms,
+        client.info.cache_hit
     );
 
     let entry = manifest.entry(&name)?;
@@ -393,8 +399,8 @@ fn cmd_serve_tcp(cfg_path: &str, args: &Args) -> Result<()> {
     for m in &cfg.models {
         let client = coord.register(m)?;
         println!(
-            "registered `{m}` on `{}`: buckets {:?}, compile {:.1} ms",
-            client.info.engine, client.info.buckets, client.info.compile_ms
+            "registered `{m}` on `{}` × {} worker(s): buckets {:?}, compile {:.1} ms",
+            client.info.engine, client.info.workers, client.info.buckets, client.info.compile_ms
         );
     }
     let mut server = TcpServer::start(coord.clone(), &cfg.listen)?;

@@ -73,6 +73,18 @@ impl Manifest {
         })
     }
 
+    /// An artifact-less manifest: no models, placeholder directories. The
+    /// coordinator accepts this when every model is registered from an
+    /// in-memory spec (`Coordinator::register_spec`) — serving benches and
+    /// stress tests run on runners that never ran `make artifacts`.
+    pub fn empty() -> Manifest {
+        Manifest {
+            models: BTreeMap::new(),
+            artifacts_dir: PathBuf::from("."),
+            models_dir: PathBuf::from("."),
+        }
+    }
+
     /// Default locations relative to the repo root (or `COMPILED_NN_ROOT`).
     pub fn load_default() -> Result<Manifest> {
         let root = std::env::var("COMPILED_NN_ROOT").unwrap_or_else(|_| ".".into());

@@ -39,7 +39,7 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 #[test]
 fn program_run_is_allocation_free() {
     let spec = tiny_cnn(55);
-    let mut program = Program::lower(&spec, CompileOptions::default()).unwrap();
+    let program = Program::lower(&spec, CompileOptions::default()).unwrap();
     let mut arena = program.new_arena(2);
     let mut rng = SplitMix64::new(7);
     let x = Tensor::from_vec(&[2, 8, 8, 3], rng.uniform_vec(2 * 8 * 8 * 3));
@@ -68,7 +68,7 @@ fn program_run_is_allocation_free() {
     // The §3.3 rotated-dense path (owned doubled-x scratch) must be just
     // as clean as the conv/pool path above.
     let mlp = square_mlp(9, 16, 2);
-    let mut mlp_program = Program::lower(&mlp, CompileOptions::default()).unwrap();
+    let mlp_program = Program::lower(&mlp, CompileOptions::default()).unwrap();
     assert!(mlp_program.summary().rotated_dense > 0);
     let mut mlp_arena = mlp_program.new_arena(1);
     let mx = Tensor::from_vec(&[1, 16], rng.uniform_vec(16));
