@@ -1,18 +1,31 @@
-//! **A-matvec** — §3.3's Eq. 2 (broadcast) vs Eq. 3 (rotated-diagonal)
-//! matrix–vector schemes, swept over matrix sizes. The paper argues Eq. 3
-//! wins by one register and one shuffle per step; here the rotated layout
-//! turns the inner loop into two contiguous streams (no per-step gather),
-//! which is the CPU analog of the same scheduling argument.
+//! **A-matvec / DENSE-GRID** — the §3.3 dense-path characterization.
 //!
-//! The §3.3 cost model's predictions (batches/shuffles per scheme) print
-//! alongside the measurements for comparison.
+//! Part 1 keeps the paper's Eq. 2 (broadcast) vs Eq. 3 (rotated-diagonal)
+//! matrix–vector sweep: the rotated layout turns the inner loop into two
+//! contiguous streams (no per-step gather), the CPU analog of the paper's
+//! register/shuffle argument.
+//!
+//! Part 2 is the batch grid behind **BENCH_dense.json**: per-item matvec
+//! vs broadcast vs the batch-blocked GEMM microkernel × batch {1, 4, 8,
+//! 32} × square/rectangular dims. The per-item matvec re-streams the full
+//! weight matrix once per batch element; the MR×NR GEMM tile streams each
+//! packed panel once per 4 items — the weight-bandwidth amortization the
+//! batched serving path rides on. CI uploads the JSON as an artifact so
+//! the gain is tracked across PRs.
 
-use compiled_nn::bench::{bench, black_box};
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use compiled_nn::bench::{bench, bench_budget, black_box, BenchResult};
 use compiled_nn::compiler::cost::batch_elems;
-use compiled_nn::nn::simd::{matvec_broadcast, matvec_naive, matvec_rotated, rotate_diagonals};
+use compiled_nn::compiler::kernels::{dense_run, DenseAlgo, DenseTail, Epilogue};
+use compiled_nn::nn::simd::{
+    matvec_broadcast, matvec_naive, matvec_rotated, pack_dense_panels, rotate_diagonals,
+};
+use compiled_nn::util::json::Json;
 use compiled_nn::util::rng::SplitMix64;
 
-fn main() {
+fn eq23_sweep() {
     println!(
         "cost model: batch_elems(k=2, Eq.3) = {}, batch_elems(k=3, Eq.2) = {}",
         batch_elems(2),
@@ -59,6 +72,184 @@ fn main() {
             r3.mean_ms / rn.mean_ms
         );
     }
-    println!("\n(Eq3/Eq2 < 1.0 reproduces the paper's register/shuffle argument; \
-             both beat the naive row-major walk at larger n)");
+    println!(
+        "(Eq3/Eq2 < 1.0 reproduces the paper's register/shuffle argument; \
+         both beat the naive row-major walk at larger n)\n"
+    );
+}
+
+struct Cell {
+    key: String,
+    ns_per_item: f64,
+}
+
+/// ns per batch item from a whole-batch BenchResult.
+fn per_item_ns(r: &BenchResult, batch: usize) -> f64 {
+    r.mean_ms * 1e6 / batch as f64
+}
+
+fn dense_grid() -> anyhow::Result<()> {
+    let budget = Duration::from_millis(350);
+    let mut rng = SplitMix64::new(0xD15E);
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut speedups: BTreeMap<String, f64> = BTreeMap::new();
+    println!("== dense grid: per-item matvec vs broadcast vs batch-blocked GEMM");
+    println!(
+        "{:>10} {:>6} {:>12} {:>12} {:>12} {:>10}",
+        "dims", "batch", "matvec ns", "bcast ns", "gemm ns", "gemm gain"
+    );
+    for &(in_dim, out_dim) in &[(256usize, 256usize), (512usize, 128usize)] {
+        let dims = format!("{in_dim}x{out_dim}");
+        let kernel = rng.uniform_vec(in_dim * out_dim);
+        let bias = rng.uniform_vec(out_dim);
+        let panels = pack_dense_panels(&kernel, in_dim, out_dim);
+        let square = in_dim == out_dim;
+        // y = W x orientation for the broadcast matvec: W[i][j] = K[j][i]
+        let mut wt = vec![0.0f32; if square { in_dim * in_dim } else { 0 }];
+        if square {
+            for i in 0..in_dim {
+                for j in 0..in_dim {
+                    wt[i * in_dim + j] = kernel[j * in_dim + i];
+                }
+            }
+        }
+        for &batch in &[1usize, 4, 8, 32] {
+            let x = rng.uniform_vec(batch * in_dim);
+            let mut out = vec![0.0f32; batch * out_dim];
+            let algo = DenseAlgo::Gemm { panels: panels.clone(), tail: DenseTail::Panels };
+
+            // per-item matvec: the pre-GEMM serving path — one full pass
+            // over the packed weights per batch element
+            let r_mv = bench_budget(&format!("{dims}/b{batch}/matvec"), budget, 20, || {
+                for n in 0..batch {
+                    dense_run(
+                        &x[n * in_dim..(n + 1) * in_dim],
+                        (1, in_dim),
+                        &algo,
+                        out_dim,
+                        Some(&bias),
+                        Epilogue::NONE,
+                        &mut [],
+                        &mut out[n * out_dim..(n + 1) * out_dim],
+                    );
+                }
+                black_box(&out);
+            });
+            let mv_ns = per_item_ns(&r_mv, batch);
+            cells.push(Cell { key: format!("{dims}_matvec_b{batch}"), ns_per_item: mv_ns });
+
+            // Eq. 2 broadcast per item (square layers only)
+            let bc_ns = if square {
+                let r_bc =
+                    bench_budget(&format!("{dims}/b{batch}/broadcast"), budget, 20, || {
+                        for n in 0..batch {
+                            matvec_broadcast(
+                                &wt,
+                                &x[n * in_dim..(n + 1) * in_dim],
+                                &mut out[n * out_dim..(n + 1) * out_dim],
+                            );
+                        }
+                        black_box(&out);
+                    });
+                let ns = per_item_ns(&r_bc, batch);
+                cells.push(Cell {
+                    key: format!("{dims}_broadcast_b{batch}"),
+                    ns_per_item: ns,
+                });
+                Some(ns)
+            } else {
+                None
+            };
+
+            // batch-blocked GEMM: one panel pass per 4 items
+            let r_gemm = bench_budget(&format!("{dims}/b{batch}/gemm"), budget, 20, || {
+                dense_run(
+                    &x,
+                    (batch, in_dim),
+                    &algo,
+                    out_dim,
+                    Some(&bias),
+                    Epilogue::NONE,
+                    &mut [],
+                    &mut out,
+                );
+                black_box(&out);
+            });
+            let gemm_ns = per_item_ns(&r_gemm, batch);
+            cells.push(Cell { key: format!("{dims}_gemm_b{batch}"), ns_per_item: gemm_ns });
+
+            // cross-check: the tile and per-item paths must agree
+            let mut check = vec![0.0f32; batch * out_dim];
+            dense_run(
+                &x,
+                (batch, in_dim),
+                &algo,
+                out_dim,
+                Some(&bias),
+                Epilogue::NONE,
+                &mut [],
+                &mut check,
+            );
+            for n in 0..batch {
+                dense_run(
+                    &x[n * in_dim..(n + 1) * in_dim],
+                    (1, in_dim),
+                    &algo,
+                    out_dim,
+                    Some(&bias),
+                    Epilogue::NONE,
+                    &mut [],
+                    &mut out[n * out_dim..(n + 1) * out_dim],
+                );
+            }
+            let worst = check
+                .iter()
+                .zip(&out)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            anyhow::ensure!(worst < 1e-4, "gemm/matvec diverged by {worst} at b{batch}");
+
+            let gain = mv_ns / gemm_ns;
+            speedups.insert(format!("speedup_gemm_vs_matvec_{dims}_b{batch}"), gain);
+            let bc_str = match bc_ns {
+                Some(v) => format!("{v:.1}"),
+                None => "-".to_string(),
+            };
+            println!(
+                "{:>10} {:>6} {:>12.1} {:>12} {:>12.1} {:>9.2}×",
+                dims, batch, mv_ns, bc_str, gemm_ns, gain
+            );
+        }
+    }
+    println!(
+        "\n(gemm gain > 1 at batch ≥ 8 is the weight-bandwidth amortization: \
+         the per-item matvec re-streams the whole matrix per element, the \
+         MR×NR tile streams each panel once per 4 items)"
+    );
+    write_json(&cells, &speedups)?;
+    Ok(())
+}
+
+/// Machine-readable grid → BENCH_dense.json (uploaded as a CI artifact
+/// alongside the other bench JSONs).
+fn write_json(cells: &[Cell], speedups: &BTreeMap<String, f64>) -> anyhow::Result<()> {
+    let mut grid = BTreeMap::new();
+    for c in cells {
+        grid.insert(c.key.clone(), Json::Num(c.ns_per_item));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("dense".to_string()));
+    root.insert("unit".to_string(), Json::Str("ns_per_item".to_string()));
+    root.insert("grid".to_string(), Json::Obj(grid));
+    for (k, v) in speedups {
+        root.insert(k.clone(), Json::Num(*v));
+    }
+    std::fs::write("BENCH_dense.json", format!("{}\n", Json::Obj(root)))?;
+    println!("wrote BENCH_dense.json");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    eq23_sweep();
+    dense_grid()
 }

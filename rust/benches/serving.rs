@@ -13,7 +13,7 @@
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use compiled_nn::compiler::program::lower_count;
+use compiled_nn::compiler::program::{lower_count, CompileOptions, Program};
 use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
 use compiled_nn::coordinator::tcp::{TcpClient, TcpServer};
 use compiled_nn::engine::EngineKind;
@@ -117,6 +117,17 @@ fn main() -> anyhow::Result<()> {
         "serving bench: 2 models × {CONNS} TCP connections, {:.1}s window, {cores} cores",
         WINDOW.as_secs_f64()
     );
+
+    // The dense-GEMM acceptance proof: under the default options the
+    // serving model's dense layers lower to the batch-blocked GEMM path,
+    // so the batched buckets actually ride the amortized kernels.
+    let probe = Program::lower(&serving_model("pool_a", 61), CompileOptions::default())?;
+    let s = probe.summary().clone();
+    assert!(s.gemm_dense >= 1, "serving model lowered without GEMM dense:\n{s}");
+    println!(
+        "dense lowering: {} gemm ({} rotated / {} broadcast / {} panel tails)",
+        s.gemm_dense, s.rotated_dense, s.broadcast_dense, s.panel_tail_dense
+    );
     println!(
         "{:>8} {:>10} {:>12} {:>10} {:>10} {:>8}",
         "workers", "requests", "req/s", "p50 µs", "p99 µs", "lowers"
@@ -142,13 +153,13 @@ fn main() -> anyhow::Result<()> {
     if cores < 4 {
         println!("(note: only {cores} cores — pool scaling is capped by the host)");
     }
-    write_json(&results, speedup)?;
+    write_json(&results, speedup, s.gemm_dense)?;
     Ok(())
 }
 
 /// Machine-readable results → BENCH_serving.json (uploaded as a CI
 /// artifact alongside BENCH_table1.json / BENCH_ablations.json).
-fn write_json(results: &[RunResult], speedup: f64) -> anyhow::Result<()> {
+fn write_json(results: &[RunResult], speedup: f64, gemm_dense: usize) -> anyhow::Result<()> {
     let mut configs: BTreeMap<String, Json> = BTreeMap::new();
     for r in results {
         let mut m = BTreeMap::new();
@@ -169,6 +180,7 @@ fn write_json(results: &[RunResult], speedup: f64) -> anyhow::Result<()> {
     );
     root.insert("configs".to_string(), Json::Obj(configs));
     root.insert("speedup_workers4_vs_1".to_string(), Json::Num(speedup));
+    root.insert("gemm_dense_layers".to_string(), Json::Num(gemm_dense as f64));
     std::fs::write("BENCH_serving.json", format!("{}\n", Json::Obj(root)))?;
     println!("wrote BENCH_serving.json");
     Ok(())

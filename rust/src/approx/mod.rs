@@ -40,6 +40,39 @@ pub fn fast_sigmoid(x: f32) -> f32 {
     (fast_tanh(0.5 * x) + 1.0) * 0.5
 }
 
+/// 4-lane [`fast_tanh`]: the Eq. 5 polynomials evaluated lane-wise over
+/// one SSE-sized group — the vector form the §3.4 store-loop epilogues
+/// use. Every lane performs exactly the scalar operation sequence, so the
+/// result is **bit-identical** to [`fast_tanh`] per lane (asserted by
+/// `lane_functions_bit_identical_to_scalar_over_working_ranges`).
+#[inline(always)]
+pub fn fast_tanh4(v: &mut [f32; 4]) {
+    let mut num = [0.0f32; 4];
+    let mut den = [0.0f32; 4];
+    for l in 0..4 {
+        let x = v[l];
+        let x2 = x * x;
+        num[l] = (((36.0 * x2 + 6930.0) * x2 + 270270.0) * x2 + 2027025.0) * x;
+        den[l] = (((x2 + 630.0) * x2 + 51975.0) * x2 + 945945.0) * x2 + 2027025.0;
+    }
+    for l in 0..4 {
+        v[l] = num[l] / den[l];
+    }
+}
+
+/// 4-lane [`fast_sigmoid`] (Eq. 4 over [`fast_tanh4`]); bit-identical to
+/// the scalar form per lane.
+#[inline(always)]
+pub fn fast_sigmoid4(v: &mut [f32; 4]) {
+    for x in v.iter_mut() {
+        *x *= 0.5;
+    }
+    fast_tanh4(v);
+    for x in v.iter_mut() {
+        *x = (*x + 1.0) * 0.5;
+    }
+}
+
 /// Two-pass fast softmax over a row (max-shifted; shift cancels in the
 /// ratio, so this matches the paper's unshifted math for finite inputs).
 pub fn fast_softmax_row(row: &mut [f32]) {
@@ -126,6 +159,36 @@ mod tests {
         // pinned spot values cross-checked with the pallas kernel
         assert!((fast_exp(0.0) - 1.0).abs() < 0.03);
         assert!((fast_exp(1.0) - core::f32::consts::E).abs() / core::f32::consts::E < 0.04);
+    }
+
+    /// §3.4 satellite property: the 4-lane epilogue forms are bit-identical
+    /// to the scalar functions — swept with the same linspace the error
+    /// tables use, in 4-lane groups over each approximation's working range.
+    #[test]
+    fn lane_functions_bit_identical_to_scalar_over_working_ranges() {
+        fn sweep(lo: f32, hi: f32, f4: fn(&mut [f32; 4]), f1: fn(f32) -> f32) {
+            let samples = 4000usize;
+            for g in (0..samples).step_by(4) {
+                let mut lanes = [0.0f32; 4];
+                for l in 0..4 {
+                    let i = g + l;
+                    lanes[l] = lo + (hi - lo) * i as f32 / (samples - 1) as f32;
+                }
+                let want = lanes.map(f1);
+                f4(&mut lanes);
+                for l in 0..4 {
+                    assert_eq!(
+                        lanes[l].to_bits(),
+                        want[l].to_bits(),
+                        "lane {l}: {} vs {}",
+                        lanes[l],
+                        want[l]
+                    );
+                }
+            }
+        }
+        sweep(-4.0, 4.0, fast_tanh4, fast_tanh);
+        sweep(-8.0, 8.0, fast_sigmoid4, fast_sigmoid);
     }
 
     #[test]

@@ -284,6 +284,20 @@ mod tests {
     }
 
     #[test]
+    fn plan_summary_counts_gemm_dense() {
+        // the engine-facing proof that batched serving rides the GEMM
+        // path: default options lower tiny_cnn's dense to the blocked
+        // microkernel, bit-exact pins it back to the scalar reference
+        let spec = tiny_cnn(31);
+        let e = OptInterp::new(&spec, CompileOptions::default()).unwrap();
+        let s = Engine::plan_summary(&e).expect("optimized engine lowers a program");
+        assert_eq!(s.gemm_dense, 1, "{s}");
+        let exact = OptInterp::new(&spec, CompileOptions::bit_exact()).unwrap();
+        let s = Engine::plan_summary(&exact).expect("optimized engine lowers a program");
+        assert_eq!(s.gemm_dense, 0, "{s}");
+    }
+
+    #[test]
     fn rejects_wrong_shape() {
         let spec = tiny_cnn(27);
         let mut e = OptInterp::new(&spec, CompileOptions::default()).unwrap();

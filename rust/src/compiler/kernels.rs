@@ -86,6 +86,78 @@ impl<'a> Epilogue<'a> {
             }
         }
     }
+
+    /// The vectorized §3.4 epilogue: apply to one full 4-lane store group
+    /// whose first lane is channel `c0` (`c0 + 4` must not exceed the real
+    /// channel count — tail groups take [`Epilogue::apply_channels`]).
+    /// One `act` dispatch per group instead of per element, and the
+    /// activation approximations run their 4-lane forms
+    /// ([`approx::fast_tanh4`] / [`approx::fast_sigmoid4`]), which are
+    /// bit-identical to the scalar functions per lane — so the blocked
+    /// store loops and the scalar reference epilogue can never drift.
+    #[inline(always)]
+    pub fn apply_lanes(&self, lanes: &mut [f32; 4], c0: usize) {
+        match self.act {
+            Activation::Linear => {}
+            Activation::Relu => {
+                for v in lanes.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            Activation::Relu6 => {
+                for v in lanes.iter_mut() {
+                    *v = v.clamp(0.0, 6.0);
+                }
+            }
+            Activation::LeakyRelu => {
+                for v in lanes.iter_mut() {
+                    *v = if *v >= 0.0 { *v } else { 0.1 * *v };
+                }
+            }
+            Activation::Sigmoid => {
+                if self.approx {
+                    approx::fast_sigmoid4(lanes);
+                } else {
+                    for v in lanes.iter_mut() {
+                        *v = 1.0 / (1.0 + (-*v).exp());
+                    }
+                }
+            }
+            Activation::Tanh => {
+                if self.approx {
+                    approx::fast_tanh4(lanes);
+                } else {
+                    for v in lanes.iter_mut() {
+                        *v = v.tanh();
+                    }
+                }
+            }
+        }
+        if let Some((scale, shift)) = self.post {
+            for (l, v) in lanes.iter_mut().enumerate() {
+                *v = *v * scale[c0 + l] + shift[c0 + l];
+            }
+        }
+    }
+
+    /// Scalar epilogue over a channel sub-range whose first element is
+    /// channel `c0` — the tail-group path of the blocked store loops
+    /// (fewer than 4 real lanes left).
+    #[inline(always)]
+    pub fn apply_channels(&self, dst: &mut [f32], c0: usize) {
+        match self.post {
+            None => {
+                for v in dst.iter_mut() {
+                    *v = self.activate(*v);
+                }
+            }
+            Some((scale, shift)) => {
+                for (i, v) in dst.iter_mut().enumerate() {
+                    *v = self.activate(*v) * scale[c0 + i] + shift[c0 + i];
+                }
+            }
+        }
+    }
 }
 
 /// How one conv output pixel is computed — the §3.3 lowering decision,
@@ -103,8 +175,40 @@ pub enum ConvAlgo {
     Direct { panels: Vec<f32> },
     /// 4-lane blocked panels over a gathered, zero-padded im2col row — one
     /// contiguous FMA stream per pixel regardless of border clipping. The
-    /// `kh*kw*c`-element row scratch is passed into [`conv2d_run`].
+    /// row scratch (`GEMM_NR` rows of `kh*kw*c` for the batch-blocked
+    /// path) is passed into [`conv2d_run`].
     Im2col { panels: Vec<f32> },
+}
+
+/// How a Dense layer computes its output — the §3.3 + batch-blocking
+/// lowering decision, made once per layer at compile time from
+/// `CompileOptions::dense` plus the static in/out dims (see `DenseScheme`
+/// in [`crate::compiler::program`]) and monomorphized into the kernel
+/// struct. Immutable at run time: the rotated tail's doubled-x window is
+/// caller-owned scratch, so a lowered dense is shareable across threads.
+pub enum DenseAlgo {
+    /// Scalar reference accumulation order — the bit-exact path, identical
+    /// per output element to `nn::layers::dense::dense`.
+    Generic { kernel: Vec<f32> },
+    /// Batch-blocked register-tiled GEMM over [`simd::pack_dense_panels`]
+    /// panels: every full `GEMM_NR`-item tile streams each weight panel
+    /// once for 4 batch items; leftover items (and whole batches smaller
+    /// than `GEMM_NR`, including the batch=1 serving bucket) run the
+    /// per-item `tail` matvec.
+    Gemm { panels: Vec<f32>, tail: DenseTail },
+}
+
+/// The per-item matvec serving a GEMM-lowered dense layer's batch tail.
+pub enum DenseTail {
+    /// §3.3 Eq. 3 rotated diagonals (square layers inside the stack
+    /// window); needs the `2n` doubled-x scratch passed to [`dense_run`].
+    Rotated { diag: Vec<f32> },
+    /// §3.3 Eq. 2 broadcast scheme (square layers).
+    Broadcast { w: Vec<f32> },
+    /// One pass over the packed panels (rectangular layers) — the same
+    /// accumulation order as a 1-wide GEMM tile, so blocks and tail agree
+    /// bit-for-bit.
+    Panels,
 }
 
 /// conv2d, NHWC × HWIO → NHWC, fused epilogue, optional §3.4 fused MaxPool.
@@ -142,14 +246,41 @@ pub fn conv2d_run(
     match pool {
         None => {
             debug_assert_eq!(out.len(), b * oh * ow * oc);
+            if let ConvAlgo::Im2col { panels } = algo {
+                if b >= simd::GEMM_NR {
+                    im2col_batch_blocked(
+                        x,
+                        (b, h, w, c),
+                        panels,
+                        (kh, kw, oc),
+                        bias,
+                        (stride, pt, pl),
+                        (oh, ow),
+                        ep,
+                        row,
+                        out,
+                    );
+                    return;
+                }
+            }
             for n in 0..b {
                 for oy in 0..oh {
                     for ox in 0..ow {
                         let dst = &mut out[((n * oh + oy) * ow + ox) * oc..][..oc];
                         let y0 = (oy * stride) as isize - pt as isize;
                         let x0 = (ox * stride) as isize - pl as isize;
-                        conv_pixel(x, (n, h, w, c), algo, (kh, kw, oc), bias, y0, x0, row, dst);
-                        ep.apply(dst);
+                        conv_pixel(
+                            x,
+                            (n, h, w, c),
+                            algo,
+                            (kh, kw, oc),
+                            bias,
+                            y0,
+                            x0,
+                            ep,
+                            row,
+                            dst,
+                        );
                     }
                 }
             }
@@ -168,6 +299,8 @@ pub fn conv2d_run(
                                 let (oy, ox) = (py * ps + wy, px * ps + wx);
                                 let y0 = (oy * stride) as isize - pt as isize;
                                 let x0 = (ox * stride) as isize - pl as isize;
+                                // compute → epilogue (inside the pixel's
+                                // store loop) → max-merge: unfused order.
                                 conv_pixel(
                                     x,
                                     (n, h, w, c),
@@ -176,10 +309,10 @@ pub fn conv2d_run(
                                     bias,
                                     y0,
                                     x0,
+                                    ep,
                                     row,
                                     cell,
                                 );
-                                ep.apply(cell);
                                 for (d, &v) in dst.iter_mut().zip(cell.iter()) {
                                     if v > *d {
                                         *d = v;
@@ -194,10 +327,72 @@ pub fn conv2d_run(
     }
 }
 
-/// One output pixel's `oc` vector into `dst`, by the lowered algorithm.
-/// `(y0, x0)` is the window origin in input coordinates (may be negative
-/// under SAME padding). `row` is the caller-owned im2col gather scratch
-/// (len `kh*kw*c` for the im2col scheme, unused otherwise).
+/// The batch-blocked im2col path: for each output pixel, gather the
+/// `GEMM_NR` batch items' windows into consecutive rows of `row`, then run
+/// one MR×NR register tile per output-channel block — each weight panel is
+/// streamed once per NR items instead of once per item, and every gathered
+/// row is reused across all output-channel blocks of its tile. Leftover
+/// items run the per-item panel pass. `row` must hold `GEMM_NR` im2col
+/// rows (`GEMM_NR * kh*kw*c`, planned at lowering).
+#[allow(clippy::too_many_arguments)]
+fn im2col_batch_blocked(
+    x: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    panels: &[f32],
+    (kh, kw, oc): (usize, usize, usize),
+    bias: Option<&[f32]>,
+    (stride, pt, pl): (usize, usize, usize),
+    (oh, ow): (usize, usize),
+    ep: Epilogue,
+    row: &mut [f32],
+    out: &mut [f32],
+) {
+    let taps = kh * kw * c;
+    debug_assert!(row.len() >= simd::GEMM_NR * taps);
+    let blocks = oc.div_ceil(CONV_BLOCK);
+    let full = b / simd::GEMM_NR * simd::GEMM_NR;
+    for oy in 0..oh {
+        for ox in 0..ow {
+            let y0 = (oy * stride) as isize - pt as isize;
+            let x0 = (ox * stride) as isize - pl as isize;
+            for n0 in (0..full).step_by(simd::GEMM_NR) {
+                for n in 0..simd::GEMM_NR {
+                    gather_row(
+                        x,
+                        (n0 + n, h, w, c),
+                        (kh, kw),
+                        y0,
+                        x0,
+                        &mut row[n * taps..][..taps],
+                    );
+                }
+                let x4 = &row[..simd::GEMM_NR * taps];
+                for ob in 0..blocks {
+                    let panel = &panels[ob * taps * CONV_BLOCK..][..taps * CONV_BLOCK];
+                    let mut acc = [bias_lanes(bias, ob, oc); simd::GEMM_NR];
+                    simd::gemm_fma_run(panel, x4, taps, &mut acc);
+                    for (n, lanes) in acc.iter_mut().enumerate() {
+                        let dst = &mut out[(((n0 + n) * oh + oy) * ow + ox) * oc..][..oc];
+                        store_lanes(lanes, ob, ep, dst);
+                    }
+                }
+            }
+            for n in full..b {
+                let dst = &mut out[((n * oh + oy) * ow + ox) * oc..][..oc];
+                gather_row(x, (n, h, w, c), (kh, kw), y0, x0, &mut row[..taps]);
+                panel_row_pixel(panels, &row[..taps], oc, bias, ep, dst);
+            }
+        }
+    }
+}
+
+/// One output pixel's `oc` vector into `dst` (epilogue applied), by the
+/// lowered algorithm. `(y0, x0)` is the window origin in input coordinates
+/// (may be negative under SAME padding). `row` is the caller-owned im2col
+/// gather scratch (at least `kh*kw*c` long for the im2col scheme, unused
+/// otherwise). The blocked schemes run the epilogue 4-lane inside
+/// [`store_lanes`]; the scalar `Generic` reference applies it per element
+/// after the pixel — the order `bit_exact()` pins.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn conv_pixel(
@@ -208,19 +403,22 @@ fn conv_pixel(
     bias: Option<&[f32]>,
     y0: isize,
     x0: isize,
+    ep: Epilogue,
     row: &mut [f32],
     dst: &mut [f32],
 ) {
     match algo {
         ConvAlgo::Generic { kernel } => {
-            generic_pixel(x, (n, h, w, c), kernel, (kh, kw, oc), bias, y0, x0, dst)
+            generic_pixel(x, (n, h, w, c), kernel, (kh, kw, oc), bias, y0, x0, dst);
+            ep.apply(dst);
         }
         ConvAlgo::Direct { panels } => {
-            direct_pixel(x, (n, h, w, c), panels, (kh, kw, oc), bias, y0, x0, dst)
+            direct_pixel(x, (n, h, w, c), panels, (kh, kw, oc), bias, y0, x0, ep, dst)
         }
         ConvAlgo::Im2col { panels } => {
-            gather_row(x, (n, h, w, c), (kh, kw), y0, x0, row);
-            panel_row_pixel(panels, row, oc, bias, dst)
+            let taps = kh * kw * c;
+            gather_row(x, (n, h, w, c), (kh, kw), y0, x0, &mut row[..taps]);
+            panel_row_pixel(panels, &row[..taps], oc, bias, ep, dst)
         }
     }
 }
@@ -271,7 +469,8 @@ fn generic_pixel(
 
 /// §3.3 blocked direct-window path: per output-channel block of 4, the
 /// accumulators stay in registers across every in-bounds tap run (one
-/// contiguous channel vector per (ky, kx)).
+/// contiguous channel vector per (ky, kx)); the epilogue runs 4-lane in
+/// the store.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn direct_pixel(
@@ -282,6 +481,7 @@ fn direct_pixel(
     bias: Option<&[f32]>,
     y0: isize,
     x0: isize,
+    ep: Epilogue,
     dst: &mut [f32],
 ) {
     let taps = kh * kw * c;
@@ -304,17 +504,20 @@ fn direct_pixel(
                 simd::conv_fma_run(&panel[t0 * CONV_BLOCK..][..c * CONV_BLOCK], px, &mut acc);
             }
         }
-        store_lanes(&acc, ob, dst);
+        store_lanes(&mut acc, ob, ep, dst);
     }
 }
 
-/// §3.3 blocked im2col path: one dense FMA stream over the gathered row.
+/// §3.3 blocked im2col path: one dense FMA stream over the gathered row,
+/// epilogue 4-lane in the store. Shared by the conv im2col scheme and the
+/// dense GEMM batch tail (a dense layer *is* a 1-pixel im2col conv).
 #[inline(always)]
 fn panel_row_pixel(
     panels: &[f32],
     row: &[f32],
     oc: usize,
     bias: Option<&[f32]>,
+    ep: Epilogue,
     dst: &mut [f32],
 ) {
     let taps = row.len();
@@ -323,7 +526,7 @@ fn panel_row_pixel(
         let panel = &panels[ob * taps * CONV_BLOCK..][..taps * CONV_BLOCK];
         let mut acc = bias_lanes(bias, ob, oc);
         simd::conv_fma_run(panel, row, &mut acc);
-        store_lanes(&acc, ob, dst);
+        store_lanes(&mut acc, ob, ep, dst);
     }
 }
 
@@ -372,12 +575,21 @@ fn bias_lanes(bias: Option<&[f32]>, ob: usize, oc: usize) -> [f32; CONV_BLOCK] {
     acc
 }
 
-/// Store the real lanes of block `ob` into the `oc`-length pixel vector.
+/// Apply the §3.4 epilogue to block `ob`'s accumulators and store the real
+/// lanes into the `oc`-length pixel vector: full groups take the 4-lane
+/// [`Epilogue::apply_lanes`] form, the final partial group (channel count
+/// off the 4 grid) falls back to the scalar tail.
 #[inline(always)]
-fn store_lanes(acc: &[f32; CONV_BLOCK], ob: usize, dst: &mut [f32]) {
+fn store_lanes(acc: &mut [f32; CONV_BLOCK], ob: usize, ep: Epilogue, dst: &mut [f32]) {
     let o0 = ob * CONV_BLOCK;
     let real = CONV_BLOCK.min(dst.len() - o0);
-    dst[o0..o0 + real].copy_from_slice(&acc[..real]);
+    if real == CONV_BLOCK {
+        ep.apply_lanes(acc, o0);
+        dst[o0..o0 + CONV_BLOCK].copy_from_slice(acc);
+    } else {
+        dst[o0..o0 + real].copy_from_slice(&acc[..real]);
+        ep.apply_channels(&mut dst[o0..o0 + real], o0);
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -430,32 +642,106 @@ pub fn depthwise_conv2d_into(
     }
 }
 
-pub fn dense_into(
+/// Dense layer under any §3.3 scheme, batch-blocked by [`simd::GEMM_NR`]
+/// when the lowering selected the GEMM path: every full tile holds a
+/// 4-output × 4-item accumulator block across one pass over each packed
+/// panel, so the weight matrix is streamed once per NR items instead of
+/// once per item (the per-item matvec re-reads all of it per batch
+/// element); tail items — and whole batches below NR, including batch=1 —
+/// fall back to the lowered per-item matvec. `scratch` is the rotated
+/// tail's doubled-x window (len `2n`, empty otherwise). Epilogues run
+/// 4-lane in the store tile; the bit-exact `Generic` algo keeps the
+/// scalar reference order end to end.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_run(
     x: &[f32],
     (b, in_dim): (usize, usize),
-    kernel: &[f32],
+    algo: &DenseAlgo,
     out_dim: usize,
     bias: Option<&[f32]>,
     ep: Epilogue,
+    scratch: &mut [f32],
     out: &mut [f32],
 ) {
-    for n in 0..b {
-        let xrow = &x[n * in_dim..][..in_dim];
-        let dst = &mut out[n * out_dim..][..out_dim];
-        match bias {
-            Some(bs) => dst.copy_from_slice(bs),
-            None => dst.fill(0.0),
-        }
-        for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let krow = &kernel[i * out_dim..][..out_dim];
-            for o in 0..out_dim {
-                dst[o] += xv * krow[o];
+    debug_assert_eq!(x.len(), b * in_dim);
+    debug_assert_eq!(out.len(), b * out_dim);
+    match algo {
+        DenseAlgo::Generic { kernel } => {
+            for n in 0..b {
+                let xrow = &x[n * in_dim..][..in_dim];
+                let dst = &mut out[n * out_dim..][..out_dim];
+                dense_item(xrow, kernel, out_dim, bias, dst);
+                ep.apply(dst);
             }
         }
-        ep.apply(dst);
+        DenseAlgo::Gemm { panels, tail } => {
+            let full = b / simd::GEMM_NR * simd::GEMM_NR;
+            let blocks = out_dim.div_ceil(simd::GEMM_MR);
+            for n0 in (0..full).step_by(simd::GEMM_NR) {
+                let x4 = &x[n0 * in_dim..][..simd::GEMM_NR * in_dim];
+                for ob in 0..blocks {
+                    let panel = &panels[ob * in_dim * simd::GEMM_MR..][..in_dim * simd::GEMM_MR];
+                    let mut acc = [bias_lanes(bias, ob, out_dim); simd::GEMM_NR];
+                    simd::gemm_fma_run(panel, x4, in_dim, &mut acc);
+                    for (n, lanes) in acc.iter_mut().enumerate() {
+                        let dst = &mut out[(n0 + n) * out_dim..][..out_dim];
+                        store_lanes(lanes, ob, ep, dst);
+                    }
+                }
+            }
+            for n in full..b {
+                let xrow = &x[n * in_dim..][..in_dim];
+                let dst = &mut out[n * out_dim..][..out_dim];
+                match tail {
+                    DenseTail::Rotated { diag } => {
+                        simd::matvec_rotated_with(diag, xrow, scratch, dst);
+                        add_bias(dst, bias);
+                        ep.apply(dst);
+                    }
+                    DenseTail::Broadcast { w } => {
+                        simd::matvec_broadcast(w, xrow, dst);
+                        add_bias(dst, bias);
+                        ep.apply(dst);
+                    }
+                    DenseTail::Panels => panel_row_pixel(panels, xrow, out_dim, bias, ep, dst),
+                }
+            }
+        }
+    }
+}
+
+/// One item's scalar reference dense: bias, then inputs in ascending order
+/// with **no data-dependent skip** — `0·Inf` and `0·NaN` propagate per
+/// IEEE 754 instead of being silently dropped, and the hot loop carries no
+/// per-element branch (the old `xv == 0.0` shortcut cost a compare per
+/// input and changed results under non-finite weights).
+#[inline(always)]
+fn dense_item(
+    xrow: &[f32],
+    kernel: &[f32],
+    out_dim: usize,
+    bias: Option<&[f32]>,
+    dst: &mut [f32],
+) {
+    match bias {
+        Some(bs) => dst.copy_from_slice(bs),
+        None => dst.fill(0.0),
+    }
+    for (i, &xv) in xrow.iter().enumerate() {
+        let krow = &kernel[i * out_dim..][..out_dim];
+        for o in 0..out_dim {
+            dst[o] += xv * krow[o];
+        }
+    }
+}
+
+/// `dst += bias`, the matvec tails' post-accumulation bias add.
+#[inline(always)]
+fn add_bias(dst: &mut [f32], bias: Option<&[f32]>) {
+    if let Some(bs) = bias {
+        for (v, &bv) in dst.iter_mut().zip(bs) {
+            *v += bv;
+        }
     }
 }
 
@@ -740,6 +1026,205 @@ mod tests {
                 .map(|(a, b)| (a - b).abs())
                 .fold(0.0f32, f32::max);
             assert!(worst < 1e-5, "{scheme}: {worst}");
+        }
+    }
+
+    /// Batch ≥ GEMM_NR routes the im2col scheme through the batch-blocked
+    /// tile path (plus a tail item at b=5); every scheme must still match
+    /// the reference exactly as the per-item path does.
+    #[test]
+    fn conv_run_batch_blocked_matches_reference() {
+        use crate::nn::layers::conv::conv2d;
+        use crate::nn::tensor::Tensor;
+        let b = 5; // one full GEMM tile + one tail item
+        for (stride, padding) in [(1, Padding::Same), (2, Padding::Valid)] {
+            let mut rng = crate::util::rng::SplitMix64::new(41);
+            let x = Tensor::from_vec(&[b, 5, 5, 3], rng.uniform_vec(b * 5 * 5 * 3));
+            let kernel = rng.uniform_vec(3 * 3 * 3 * 5);
+            let bias = rng.uniform_vec(5);
+            let r = conv2d(&x, &kernel, &[3, 3, 3, 5], Some(&bias), stride, padding);
+            for scheme in ["generic", "direct", "im2col"] {
+                let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
+                let mut row = vec![0.0; simd::GEMM_NR * 3 * 3 * 3];
+                let mut out = vec![0.0; r.len()];
+                conv2d_run(
+                    x.data(),
+                    (b, 5, 5, 3),
+                    &algo,
+                    (3, 3, 5),
+                    Some(&bias),
+                    stride,
+                    padding,
+                    Epilogue { act: Activation::Relu, approx: false, post: None },
+                    None,
+                    &mut [],
+                    &mut row,
+                    &mut out,
+                );
+                let relu_ref: Vec<f32> = r.data().iter().map(|v| v.max(0.0)).collect();
+                let worst = relu_ref
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, c)| (a - c).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(worst < 1e-5, "{scheme} s{stride} {padding:?}: {worst}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_run_gemm_matches_reference_across_batches() {
+        use crate::nn::layers::dense::dense as dense_ref;
+        use crate::nn::tensor::Tensor;
+        // rectangular dims off the 4-lane grid; batches hitting full
+        // tiles, tails, and the all-tail batch < NR path
+        let (in_dim, out_dim) = (10usize, 7usize);
+        let mut rng = crate::util::rng::SplitMix64::new(5);
+        let kernel = rng.uniform_vec(in_dim * out_dim);
+        let bias = rng.uniform_vec(out_dim);
+        let panels = simd::pack_dense_panels(&kernel, in_dim, out_dim);
+        for b in [1usize, 3, 4, 5, 8, 9] {
+            let xv = rng.uniform_vec(b * in_dim);
+            let x = Tensor::from_vec(&[b, in_dim], xv.clone());
+            let want = dense_ref(&x, &kernel, &[in_dim, out_dim], Some(&bias));
+            for (label, algo) in [
+                ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
+                ("gemm", DenseAlgo::Gemm { panels: panels.clone(), tail: DenseTail::Panels }),
+            ] {
+                let mut out = vec![0.0; b * out_dim];
+                dense_run(
+                    &xv,
+                    (b, in_dim),
+                    &algo,
+                    out_dim,
+                    Some(&bias),
+                    Epilogue::NONE,
+                    &mut [],
+                    &mut out,
+                );
+                let worst = want
+                    .data()
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, c)| (a - c).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(worst < 1e-5, "{label} b={b}: {worst}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_run_square_tails_match_reference() {
+        use crate::nn::layers::dense::dense as dense_ref;
+        use crate::nn::tensor::Tensor;
+        let n = 8usize;
+        let mut rng = crate::util::rng::SplitMix64::new(7);
+        let kernel = rng.uniform_vec(n * n);
+        let bias = rng.uniform_vec(n);
+        let panels = simd::pack_dense_panels(&kernel, n, n);
+        // y = W x orientation for the matvec tails: W[i][j] = K[j][i]
+        let mut wt = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                wt[i * n + j] = kernel[j * n + i];
+            }
+        }
+        let diag = simd::rotate_diagonals(&wt, n);
+        for b in [1usize, 3, 6] {
+            let xv = rng.uniform_vec(b * n);
+            let x = Tensor::from_vec(&[b, n], xv.clone());
+            let want = dense_ref(&x, &kernel, &[n, n], Some(&bias));
+            for (label, tail) in [
+                ("rotated", DenseTail::Rotated { diag: diag.clone() }),
+                ("broadcast", DenseTail::Broadcast { w: wt.clone() }),
+            ] {
+                let algo = DenseAlgo::Gemm { panels: panels.clone(), tail };
+                let mut scratch = vec![0.0f32; 2 * n];
+                let mut out = vec![0.0; b * n];
+                dense_run(
+                    &xv,
+                    (b, n),
+                    &algo,
+                    n,
+                    Some(&bias),
+                    Epilogue::NONE,
+                    &mut scratch,
+                    &mut out,
+                );
+                let worst = want
+                    .data()
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, c)| (a - c).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(worst < 1e-4, "{label} b={b}: {worst}");
+            }
+        }
+    }
+
+    /// The §3.4 satellite property at the Epilogue level: the 4-lane store
+    /// form is bit-identical to the scalar reference for every activation
+    /// × approximation × post-affine combination.
+    #[test]
+    fn lane_epilogue_bit_identical_to_scalar() {
+        let scale: Vec<f32> = (0..8).map(|i| 0.5 + 0.1 * i as f32).collect();
+        let shift: Vec<f32> = (0..8).map(|i| -0.3 + 0.05 * i as f32).collect();
+        let mut rng = crate::util::rng::SplitMix64::new(11);
+        for act in [
+            Activation::Linear,
+            Activation::Relu,
+            Activation::Relu6,
+            Activation::LeakyRelu,
+            Activation::Sigmoid,
+            Activation::Tanh,
+        ] {
+            for approx_on in [false, true] {
+                for with_post in [false, true] {
+                    let post = if with_post {
+                        Some((scale.as_slice(), shift.as_slice()))
+                    } else {
+                        None
+                    };
+                    let ep = Epilogue { act, approx: approx_on, post };
+                    // values inside the approximations' working ranges
+                    let vals: Vec<f32> = (0..8).map(|_| rng.next_uniform() * 4.0).collect();
+                    let mut whole = vals.clone();
+                    ep.apply(&mut whole);
+                    for c0 in [0usize, 4] {
+                        let mut lanes = [vals[c0], vals[c0 + 1], vals[c0 + 2], vals[c0 + 3]];
+                        ep.apply_lanes(&mut lanes, c0);
+                        for l in 0..4 {
+                            assert_eq!(
+                                lanes[l].to_bits(),
+                                whole[c0 + l].to_bits(),
+                                "{act:?} approx={approx_on} post={with_post} lane {l}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_run_propagates_nonfinite_weights() {
+        // A zero input against an Inf/NaN weight row must produce NaN in
+        // every algo — the removed `xv == 0.0` skip silently dropped it.
+        let (in_dim, out_dim) = (4usize, 3usize);
+        let mut kernel = vec![0.5f32; in_dim * out_dim];
+        kernel[0] = f32::INFINITY; // K[0][0]
+        kernel[1] = f32::NAN; // K[0][1]
+        let panels = simd::pack_dense_panels(&kernel, in_dim, out_dim);
+        let x = [0.0f32, 1.0, -1.0, 0.5];
+        for (label, algo) in [
+            ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
+            ("gemm", DenseAlgo::Gemm { panels, tail: DenseTail::Panels }),
+        ] {
+            let mut out = [0.0f32; 3];
+            dense_run(&x, (1, in_dim), &algo, out_dim, None, Epilogue::NONE, &mut [], &mut out);
+            assert!(out[0].is_nan(), "{label}: 0·Inf must be NaN, got {}", out[0]);
+            assert!(out[1].is_nan(), "{label}: 0·NaN must be NaN, got {}", out[1]);
+            assert!((out[2] - 0.25).abs() < 1e-6, "{label}: finite lane drifted");
         }
     }
 

@@ -444,6 +444,31 @@ pub fn random_chain(r: &mut SplitMix64) -> ModelSpec {
     b.finish(&[&out])
 }
 
+/// Random dense-only networks for the GEMM/matvec differential fuzz
+/// (`tests/fuzz_engines.rs`): widths on and off the 4-lane grid,
+/// occasional square layers (the rotated/broadcast tail paths), every
+/// activation, softmax head or not — the shapes where a batch-blocked
+/// dense tile, its tail handoff, or a vectorized epilogue can go wrong.
+pub fn random_mlp(r: &mut SplitMix64) -> ModelSpec {
+    // half the time a 4-multiple input so square layers hit the
+    // rotated/broadcast eligibility gate (`units % 4 == 0`)
+    let in_dim = if r.below(2) == 0 { 4 * (1 + r.below(4)) } else { 3 + r.below(14) };
+    let mut b = Builder::new("fuzz_mlp", &[in_dim], r.next_u64());
+    let acts = [Activation::Relu, Activation::Linear, Activation::Tanh, Activation::Sigmoid];
+    let mut cur = "input".to_string();
+    for _ in 0..1 + r.below(3) {
+        let cur_dim = b.shape_of(&cur)[0];
+        // every third layer square (keeps its matvec tail), else random
+        let units = if r.below(3) == 0 { cur_dim } else { 2 + r.below(15) };
+        cur = b.dense(&cur, units, acts[r.below(acts.len())]);
+    }
+    if r.below(2) == 0 {
+        cur = b.softmax(&cur);
+    }
+    let out = cur.clone();
+    b.finish(&[&out])
+}
+
 /// Random conv/dwconv/pool/dense graphs for the cross-engine differential
 /// fuzz suite (`tests/fuzz_engines.rs`): odd spatial dims, stride 2, SAME
 /// *and* VALID padding, channel counts off the 4-lane grid, bias on/off,

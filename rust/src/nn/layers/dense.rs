@@ -17,10 +17,10 @@ pub fn dense(x: &Tensor, kernel: &[f32], kshape: &[usize], bias: Option<&[f32]>)
         if let Some(bs) = bias {
             orow.copy_from_slice(bs);
         }
+        // No zero-input skip: it was a data-dependent branch in the hot
+        // loop, and 0·Inf = NaN must propagate (IEEE 754) for the oracle
+        // to agree with the compiled engines on non-finite weights.
         for (i, &xv) in xrow.iter().enumerate() {
-            if xv == 0.0 {
-                continue; // post-ReLU rows are often sparse
-            }
             let krow = &kernel[i * ko..(i + 1) * ko];
             for (o, &kv) in krow.iter().enumerate() {
                 orow[o] += xv * kv;

@@ -24,6 +24,20 @@ pub const ROTATED_STACK_MAX: usize = 512;
 /// same SSE-sized unit the matvec schemes use.
 pub const CONV_BLOCK: usize = 4;
 
+/// Output-dimension block height of the dense GEMM microkernel (MR): each
+/// register tile holds 4 f32 output lanes per batch item.
+pub const GEMM_MR: usize = 4;
+
+/// Batch-tile width of the dense GEMM microkernel (NR): 4 batch items
+/// share one pass over each packed weight panel, so the weight matrix is
+/// streamed once per NR items instead of once per item — the §3.3
+/// "statically known shapes" argument applied to the batch axis.
+pub const GEMM_NR: usize = 4;
+
+// The dense panels reuse the conv panel packer; both block the output
+// axis by the same 4-lane unit.
+const _: () = assert!(CONV_BLOCK == GEMM_MR);
+
 /// Pre-pack an HWIO conv kernel (flattened `[taps, oc]`, `taps = kh*kw*c`)
 /// into output-channel-blocked panels:
 ///
@@ -64,6 +78,51 @@ pub fn conv_fma_run(panel: &[f32], x: &[f32], acc: &mut [f32; CONV_BLOCK]) {
     for (lanes, &xv) in panel.chunks_exact(CONV_BLOCK).zip(x) {
         for l in 0..CONV_BLOCK {
             acc[l] += xv * lanes[l];
+        }
+    }
+}
+
+/// Pre-pack a Dense kernel (row-major `[in_dim, out_dim]`, Keras
+/// orientation `y[o] = Σ_i x[i] * K[i][o]`) into output-dim-blocked
+/// 4-lane panels:
+///
+/// ```text
+/// panels[(ob * in_dim + i) * GEMM_MR + l] = K[i][ob * GEMM_MR + l]
+/// ```
+///
+/// — the same layout as [`pack_conv_panels`] with `taps = in_dim`, so the
+/// GEMM hot loop reads one contiguous 4-float lane group per input while
+/// the MR×NR accumulator tile stays register-resident. Tail lanes
+/// (`out_dim` not a multiple of 4) are zero and never stored back.
+/// O(in_dim·out_dim), done once at lowering.
+pub fn pack_dense_panels(kernel: &[f32], in_dim: usize, out_dim: usize) -> Vec<f32> {
+    pack_conv_panels(kernel, in_dim, out_dim)
+}
+
+/// The register-tiled GEMM microkernel: an MR×NR tile (4 output lanes ×
+/// 4 batch items) held in `acc` across one pass over a packed panel.
+/// `x4` is `GEMM_NR` consecutive batch rows (`len == GEMM_NR * in_dim`,
+/// item `n` at `x4[n * in_dim..]`); `panel` is a [`pack_dense_panels`]
+/// block covering the same `in_dim` inputs. Each panel lane group is read
+/// once and FMA'd against all four items, which is what amortizes the
+/// weight bandwidth a per-item matvec pays `NR` times. Accumulation over
+/// `i` is ascending per (item, lane) — the same order as a 1-wide
+/// [`conv_fma_run`] pass, so tile and tail results agree bit-for-bit.
+#[inline(always)]
+pub fn gemm_fma_run(
+    panel: &[f32],
+    x4: &[f32],
+    in_dim: usize,
+    acc: &mut [[f32; GEMM_MR]; GEMM_NR],
+) {
+    debug_assert_eq!(panel.len(), in_dim * GEMM_MR);
+    debug_assert_eq!(x4.len(), GEMM_NR * in_dim);
+    for (i, lanes) in panel.chunks_exact(GEMM_MR).enumerate() {
+        for n in 0..GEMM_NR {
+            let xv = x4[n * in_dim + i];
+            for l in 0..GEMM_MR {
+                acc[n][l] += xv * lanes[l];
+            }
         }
     }
 }
@@ -221,6 +280,72 @@ mod tests {
         // block 1: lanes 4,5 real, 6,7 zero-padded
         assert_eq!(&p[8..12], &[4.0, 5.0, 0.0, 0.0]);
         assert_eq!(&p[12..16], &[10.0, 11.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn dense_panel_layout_pinned() {
+        // in_dim = 2, out_dim = 6 → 2 blocks, second block half-padded —
+        // identical layout to the conv panels with taps = in_dim.
+        let kernel: Vec<f32> = (0..12).map(|v| v as f32).collect(); // K[i][o] = 6i + o
+        let p = pack_dense_panels(&kernel, 2, 6);
+        assert_eq!(p, pack_conv_panels(&kernel, 2, 6));
+        assert_eq!(&p[0..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(&p[8..12], &[4.0, 5.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn gemm_tile_matches_per_item_dots() {
+        check(
+            "gemm_fma_run",
+            30,
+            |r: &mut SplitMix64| {
+                let in_dim = 1 + r.below(24); // 1..24, mostly off the 4 grid
+                let out_block = 4usize;
+                let kernel = r.uniform_vec(in_dim * out_block);
+                let x4 = r.uniform_vec(GEMM_NR * in_dim);
+                (in_dim, kernel, x4)
+            },
+            |(in_dim, kernel, x4)| {
+                let p = pack_dense_panels(kernel, *in_dim, 4);
+                let mut acc = [[0.0f32; GEMM_MR]; GEMM_NR];
+                gemm_fma_run(&p, x4, *in_dim, &mut acc);
+                for n in 0..GEMM_NR {
+                    for o in 0..4 {
+                        let want: f32 = (0..*in_dim)
+                            .map(|i| x4[n * in_dim + i] * kernel[i * 4 + o])
+                            .sum();
+                        if (acc[n][o] - want).abs() > 1e-4 {
+                            return Err(format!(
+                                "item {n} lane {o}: {} vs {want}",
+                                acc[n][o]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn gemm_tile_bit_matches_one_wide_fma_pass() {
+        // The tile must accumulate in the same order as a per-item
+        // conv_fma_run pass, so GEMM blocks and matvec tails never
+        // disagree bitwise.
+        let mut r = SplitMix64::new(23);
+        let in_dim = 13;
+        let kernel = r.uniform_vec(in_dim * 4);
+        let x4 = r.uniform_vec(GEMM_NR * in_dim);
+        let p = pack_dense_panels(&kernel, in_dim, 4);
+        let mut acc = [[0.0f32; GEMM_MR]; GEMM_NR];
+        gemm_fma_run(&p, &x4, in_dim, &mut acc);
+        for n in 0..GEMM_NR {
+            let mut one = [0.0f32; CONV_BLOCK];
+            conv_fma_run(&p, &x4[n * in_dim..(n + 1) * in_dim], &mut one);
+            for l in 0..4 {
+                assert_eq!(acc[n][l].to_bits(), one[l].to_bits(), "item {n} lane {l}");
+            }
+        }
     }
 
     #[test]

@@ -1,9 +1,14 @@
 //! Cross-engine differential fuzzing: random conv/dwconv/pool/dense graphs
 //! (odd spatial dims, stride 2, SAME and VALID padding, channel counts off
 //! the 4-lane grid, bias on/off — see `model::builder::random_conv_net`)
-//! run through **every available `EngineKind` × every `CompileOptions`
-//! scheme combination** and must match the `NaiveInterp` oracle within
-//! 1e-4 (relative to the output magnitude).
+//! **and** random dense-only MLPs (`model::builder::random_mlp` — widths on
+//! and off the 4-lane grid, square layers for the matvec tails) run through
+//! **every available `EngineKind` × every `CompileOptions` scheme
+//! combination** at batch sizes {1, 3, 8} — covering the all-tail matvec
+//! path, full GEMM tiles, tiles + tail, and the per-batch arena spans —
+//! and must match the `NaiveInterp` oracle within 1e-4 (relative to the
+//! output magnitude). The bit-exact combo is additionally held to
+//! bit-for-bit equality on the MLPs, batched included.
 //!
 //! Failures print the propcheck seed (`PROPCHECK_SEED=0x… cargo test
 //! fuzz_`) plus the failing spec's own seed, so any case replays exactly.
@@ -11,7 +16,8 @@
 
 use compiled_nn::compiler::exec::{CompileOptions, ConvScheme, DenseScheme};
 use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
-use compiled_nn::model::builder::random_conv_net;
+use compiled_nn::model::builder::{random_conv_net, random_mlp};
+use compiled_nn::model::spec::ModelSpec;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::util::propcheck::check;
 use compiled_nn::util::rng::SplitMix64;
@@ -40,7 +46,94 @@ fn combos() -> Vec<(&'static str, CompileOptions)> {
         ("no-reuse", CompileOptions { reuse_memory: false, ..base }),
         ("no-fold", CompileOptions { fold_bn: false, ..base }),
         ("dense-broadcast", CompileOptions { dense: DenseScheme::Broadcast, ..base }),
+        ("dense-generic", CompileOptions { dense: DenseScheme::Generic, ..base }),
     ]
+}
+
+/// Batch sizes the suite draws: 1 (the serving fast path, all-tail
+/// matvec), 3 (below the GEMM tile width — still all-tail), 8 (two full
+/// register tiles, exercising the blocked GEMM paths and per-batch arena
+/// spans).
+const BATCHES: [usize; 3] = [1, 3, 8];
+
+/// One differential case: run `spec` at a seed-drawn batch size through
+/// every engine × combo and compare against the oracle. `strict_bit_exact`
+/// additionally requires the bit-exact combo on the optimized engine to be
+/// bit-for-bit (the MLP generator's ops all share the oracle's exact
+/// accumulation order; conv nets keep the tolerance check only).
+fn differential_case(
+    spec: &ModelSpec,
+    input_seed: u64,
+    strict_bit_exact: bool,
+) -> Result<(), String> {
+    let mut rng = SplitMix64::new(input_seed);
+    let batch = BATCHES[(input_seed % BATCHES.len() as u64) as usize];
+    let item: usize = spec.input_shape.iter().product();
+    let mut shape = vec![batch];
+    shape.extend_from_slice(&spec.input_shape);
+    let x = Tensor::from_vec(&shape, rng.uniform_vec(batch * item));
+
+    let mut oracle =
+        build_engine_from_spec(EngineKind::Naive, spec, &EngineOptions::default())
+            .map_err(|e| e.to_string())?;
+    let want = oracle.infer(&x).map_err(|e| e.to_string())?;
+    let scale = want[0].data().iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+
+    for &kind in EngineKind::all() {
+        if !kind.available() {
+            continue; // compiled: needs a pjrt build + PJRT plugin
+        }
+        if kind == EngineKind::Naive {
+            continue; // the oracle itself — already run above
+        }
+        for (label, opts) in combos() {
+            let eopts = EngineOptions { compile: opts, buckets: None };
+            let mut e = match build_engine_from_spec(kind, spec, &eopts) {
+                Ok(e) => e,
+                // only the compiled engine may beg off (it executes
+                // AOT artifacts); an interpreter failing to lower a
+                // generated graph is a real regression
+                Err(_) if kind == EngineKind::Compiled => continue,
+                Err(err) => {
+                    return Err(format!(
+                        "spec seed {}: {kind}/{label} failed to build: {err}",
+                        spec.seed
+                    ))
+                }
+            };
+            let got = e.infer(&x).map_err(|e| {
+                format!("spec seed {}: batch {batch}: {kind}/{label}: {e}", spec.seed)
+            })?;
+            if got.len() != want.len() {
+                return Err(format!(
+                    "spec seed {}: {kind}/{label}: {} outputs vs {}",
+                    spec.seed,
+                    got.len(),
+                    want.len()
+                ));
+            }
+            if strict_bit_exact && label == "bit-exact" && kind == EngineKind::Optimized {
+                if want[0].data() != got[0].data() {
+                    let d = want[0].max_abs_diff(&got[0]);
+                    return Err(format!(
+                        "spec seed {}: batch {batch}: {kind}/{label}: \
+                         not bit-exact (max |Δ| = {d})",
+                        spec.seed
+                    ));
+                }
+                continue;
+            }
+            let d = want[0].max_abs_diff(&got[0]);
+            if d > 1e-4 * scale {
+                return Err(format!(
+                    "spec seed {}: batch {batch}: {kind}/{label}: \
+                     max |Δ| = {d} (scale {scale})",
+                    spec.seed
+                ));
+            }
+        }
+    }
+    Ok(())
 }
 
 #[test]
@@ -49,65 +142,21 @@ fn fuzz_every_engine_and_scheme_matches_naive() {
         "fuzz_engines_differential",
         48,
         |r: &mut SplitMix64| (random_conv_net(r), r.next_u64()),
-        |(spec, input_seed)| {
-            let mut rng = SplitMix64::new(*input_seed);
-            let batch = 1 + (*input_seed % 2) as usize; // 1 or 2
-            let item: usize = spec.input_shape.iter().product();
-            let mut shape = vec![batch];
-            shape.extend_from_slice(&spec.input_shape);
-            let x = Tensor::from_vec(&shape, rng.uniform_vec(batch * item));
+        |(spec, input_seed)| differential_case(spec, *input_seed, false),
+    );
+}
 
-            let mut oracle =
-                build_engine_from_spec(EngineKind::Naive, spec, &EngineOptions::default())
-                    .map_err(|e| e.to_string())?;
-            let want = oracle.infer(&x).map_err(|e| e.to_string())?;
-            let scale =
-                want[0].data().iter().fold(1.0f32, |m, &v| m.max(v.abs()));
-
-            for &kind in EngineKind::all() {
-                if !kind.available() {
-                    continue; // compiled: needs a pjrt build + PJRT plugin
-                }
-                if kind == EngineKind::Naive {
-                    continue; // the oracle itself — already run above
-                }
-                for (label, opts) in combos() {
-                    let eopts = EngineOptions { compile: opts, buckets: None };
-                    let mut e = match build_engine_from_spec(kind, spec, &eopts) {
-                        Ok(e) => e,
-                        // only the compiled engine may beg off (it executes
-                        // AOT artifacts); an interpreter failing to lower a
-                        // generated graph is a real regression
-                        Err(_) if kind == EngineKind::Compiled => continue,
-                        Err(err) => {
-                            return Err(format!(
-                                "spec seed {}: {kind}/{label} failed to build: {err}",
-                                spec.seed
-                            ))
-                        }
-                    };
-                    let got = e
-                        .infer(&x)
-                        .map_err(|e| format!("spec seed {}: {kind}/{label}: {e}", spec.seed))?;
-                    if got.len() != want.len() {
-                        return Err(format!(
-                            "spec seed {}: {kind}/{label}: {} outputs vs {}",
-                            spec.seed,
-                            got.len(),
-                            want.len()
-                        ));
-                    }
-                    let d = want[0].max_abs_diff(&got[0]);
-                    if d > 1e-4 * scale {
-                        return Err(format!(
-                            "spec seed {}: {kind}/{label}: max |Δ| = {d} (scale {scale})",
-                            spec.seed
-                        ));
-                    }
-                }
-            }
-            Ok(())
-        },
+/// The dense-path suite: random MLPs through the same engine × combo grid.
+/// This is where the batch-blocked GEMM tiles, the rotated/broadcast/panel
+/// tails and the vectorized dense epilogues get differentially hammered —
+/// and where bit-exact is held to bitwise equality even at batch 8.
+#[test]
+fn fuzz_dense_gemm_mlps_match_naive() {
+    check(
+        "fuzz_mlp_differential",
+        48,
+        |r: &mut SplitMix64| (random_mlp(r), r.next_u64()),
+        |(spec, input_seed)| differential_case(spec, *input_seed, true),
     );
 }
 
@@ -121,10 +170,11 @@ fn fuzz_fused_programs_are_stable_across_repeated_inference() {
         |r: &mut SplitMix64| (random_conv_net(r), r.next_u64()),
         |(spec, input_seed)| {
             let mut rng = SplitMix64::new(*input_seed);
+            let batch = BATCHES[(input_seed % BATCHES.len() as u64) as usize];
             let item: usize = spec.input_shape.iter().product();
-            let mut shape = vec![1usize];
+            let mut shape = vec![batch];
             shape.extend_from_slice(&spec.input_shape);
-            let x = Tensor::from_vec(&shape, rng.uniform_vec(item));
+            let x = Tensor::from_vec(&shape, rng.uniform_vec(batch * item));
             let eopts = EngineOptions::exact();
             let mut e = build_engine_from_spec(EngineKind::Optimized, spec, &eopts)
                 .map_err(|e| e.to_string())?;
