@@ -21,8 +21,11 @@
 //! (BN + sigmoid), segmenter (softmax over 80×80), mobilenetv2 (34 BNs,
 //! depthwise).
 //!
-//! Every run writes **BENCH_ablations.json** (per-variant ns/inference),
-//! which CI uploads as an artifact alongside BENCH_table1.json.
+//! Every run writes **BENCH_ablations.json** (per-variant ns/inference,
+//! the cost model's predicted cycles per variant, the default tiny_cnn
+//! lowering report, and a predicted-vs-measured ranking check), which CI
+//! uploads as an artifact alongside BENCH_table1.json. See
+//! docs/BENCHMARKS.md for the schema and how to read the ranking check.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -37,29 +40,42 @@ use compiled_nn::runtime::artifact::Manifest;
 use compiled_nn::util::json::Json;
 use compiled_nn::util::rng::{golden_seed, SplitMix64};
 
+/// Predicted-cycle ratios at or below this are ties: the cost model's
+/// resolution isn't fine enough to assert a measured ordering for them.
+const TIE_BAND: f64 = 2.0;
+
+/// Measurement slack for the ranking check: a predicted-slower variant may
+/// measure up to this factor *faster* before the check flags a mismatch
+/// (CI machines are noisy; the asserted pairs are predicted >2× apart).
+const MEAS_TOL: f64 = 1.25;
+
 /// One measured (case, variant) cell for the JSON report.
 struct Cell {
     case: String,
     variant: String,
     ns: f64,
+    /// Cost-model total for this variant's lowering (cycles/item), when
+    /// the engine exposed a plan summary.
+    predicted: Option<f64>,
 }
 
 fn main() -> anyhow::Result<()> {
     let mut cells: Vec<Cell> = Vec::new();
-    conv_scheme_ablation(&mut cells)?;
+    let lowering_report = conv_scheme_ablation(&mut cells)?;
     dense_scheme_ablation(&mut cells)?;
     match Manifest::load_default() {
         Ok(m) => model_ablations(&m, &mut cells)?,
         Err(e) => eprintln!("(skipping model ablations: {e})"),
     }
-    write_json(&cells)
+    write_json(&cells, lowering_report)
 }
 
 /// §3.3 conv schemes × §3.4 pool fusion on the built-in tiny_cnn — the
 /// paper's "conv core is a matvec, merge adjacent ops into the store loop"
 /// claim, runnable on artifact-less CI. Expected: the fused SIMD path
-/// beats the stand-alone scalar `generic` scheme.
-fn conv_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<()> {
+/// beats the stand-alone scalar `generic` scheme. Returns the default
+/// (cost-model Auto) variant's lowering report for the JSON output.
+fn conv_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<Option<Json>> {
     let budget = Duration::from_secs(2);
     let spec = tiny_cnn(91);
     let mut rng = SplitMix64::new(13);
@@ -79,6 +95,7 @@ fn conv_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<()> {
     ];
     let mut fused_ms = 0.0;
     let mut generic_ms = 0.0;
+    let mut report = None;
     for (label, compile) in variants {
         let opts = EngineOptions { compile, buckets: None };
         let mut e = build_engine_from_spec(EngineKind::Optimized, &spec, &opts)?;
@@ -91,6 +108,10 @@ fn conv_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<()> {
                 )
             })
             .unwrap_or_default();
+        let predicted = e.plan_summary().map(|s| s.report.predicted_total_cycles());
+        if label.starts_with("fused-auto") {
+            report = e.plan_summary().map(|s| s.report.to_json());
+        }
         let r = bench_budget(&format!("tiny_cnn/{label}"), budget, 50, || {
             black_box(e.infer(&x).unwrap());
         });
@@ -101,13 +122,17 @@ fn conv_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<()> {
             generic_ms = r.mean_ms;
         }
         println!(
-            "{:<20} mean {:>9.5} ms  lowered: {lowered}  [{} iters]",
-            label, r.mean_ms, r.iters
+            "{:<20} mean {:>9.5} ms  predicted {:>8.0} cyc  lowered: {lowered}  [{} iters]",
+            label,
+            r.mean_ms,
+            predicted.unwrap_or(0.0),
+            r.iters
         );
         cells.push(Cell {
             case: "tiny_cnn_conv".into(),
             variant: label.to_string(),
             ns: r.mean_ms * 1e6,
+            predicted,
         });
     }
     println!(
@@ -115,7 +140,7 @@ fn conv_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<()> {
         generic_ms / fused_ms,
         if fused_ms < generic_ms { "fused wins" } else { "REGRESSION: generic wins" }
     );
-    Ok(())
+    Ok(report)
 }
 
 /// §3.3: the same square MLP lowered three ways. The rotated-diagonal
@@ -143,6 +168,7 @@ fn dense_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<()> {
             .plan_summary()
             .map(|s| format!("{} rotated / {} broadcast", s.rotated_dense, s.broadcast_dense))
             .unwrap_or_default();
+        let predicted = e.plan_summary().map(|s| s.report.predicted_total_cycles());
         let r = bench_budget(&format!("square_mlp/{label}"), budget, 20, || {
             black_box(e.infer(&x).unwrap());
         });
@@ -160,6 +186,7 @@ fn dense_scheme_ablation(cells: &mut Vec<Cell>) -> anyhow::Result<()> {
             case: "square_mlp_dense".into(),
             variant: label.to_string(),
             ns: r.mean_ms * 1e6,
+            predicted,
         });
     }
     println!();
@@ -195,6 +222,7 @@ fn model_ablations(manifest: &Manifest, cells: &mut Vec<Cell>) -> anyhow::Result
             // touch once so arena exists for the bytes report
             e.infer(&x)?;
             let arena = e.memory_bytes().unwrap_or(0);
+            let predicted = e.plan_summary().map(|s| s.report.predicted_total_cycles());
             let r = bench_budget(&format!("{name}/{label}"), budget, min_iters, || {
                 black_box(e.infer(&x).unwrap());
             });
@@ -213,6 +241,7 @@ fn model_ablations(manifest: &Manifest, cells: &mut Vec<Cell>) -> anyhow::Result
                 case: name.to_string(),
                 variant: label.to_string(),
                 ns: r.mean_ms * 1e6,
+                predicted,
             });
         }
     }
@@ -221,21 +250,80 @@ fn model_ablations(manifest: &Manifest, cells: &mut Vec<Cell>) -> anyhow::Result
     Ok(())
 }
 
+/// Predicted-vs-measured ranking validation: for each (SIMD, generic)
+/// variant pair of one case, if the cost model predicts the generic
+/// lowering slower by more than [`TIE_BAND`], the measurement must agree
+/// in direction within [`MEAS_TOL`]. Pairs inside the tie band (or
+/// missing predictions) assert nothing — the model prices schemes, not
+/// machines, and close calls are expected to flip with cache effects.
+fn ranking_check(cells: &[Cell]) -> Json {
+    let pairs: [(&str, &str, &str); 2] = [
+        ("tiny_cnn_conv", "im2col-nofuse", "generic-nofuse"),
+        ("square_mlp_dense", "rotated (Eq. 3)", "generic"),
+    ];
+    let find =
+        |case: &str, variant: &str| cells.iter().find(|c| c.case == case && c.variant == variant);
+    let mut checks = Vec::new();
+    for (case, simd, generic) in pairs {
+        let (Some(s), Some(g)) = (find(case, simd), find(case, generic)) else { continue };
+        let (Some(sp), Some(gp)) = (s.predicted, g.predicted) else { continue };
+        let predicted_ratio = gp / sp;
+        if predicted_ratio <= TIE_BAND {
+            continue;
+        }
+        let measured_ratio = g.ns / s.ns;
+        let ok = measured_ratio * MEAS_TOL >= 1.0;
+        println!(
+            "ranking {case}: predicted generic ×{predicted_ratio:.2} slower, \
+             measured ×{measured_ratio:.2} → {}",
+            if ok { "agrees" } else { "MISMATCH" }
+        );
+        let mut m = BTreeMap::new();
+        m.insert("case".to_string(), Json::Str(case.to_string()));
+        m.insert("simd_variant".to_string(), Json::Str(simd.to_string()));
+        m.insert("generic_variant".to_string(), Json::Str(generic.to_string()));
+        m.insert("predicted_ratio".to_string(), Json::Num(predicted_ratio));
+        m.insert("measured_ratio".to_string(), Json::Num(measured_ratio));
+        m.insert("ok".to_string(), Json::Bool(ok));
+        checks.push(Json::Obj(m));
+    }
+    let mut root = BTreeMap::new();
+    root.insert("tie_band".to_string(), Json::Num(TIE_BAND));
+    root.insert("meas_tol".to_string(), Json::Num(MEAS_TOL));
+    root.insert("checks".to_string(), Json::Arr(checks));
+    Json::Obj(root)
+}
+
 /// Machine-readable results → BENCH_ablations.json (uploaded as a CI
 /// artifact alongside BENCH_table1.json) so per-variant ns/inference is
-/// comparable across PRs.
-fn write_json(cells: &[Cell]) -> anyhow::Result<()> {
+/// comparable across PRs. Schema documented in docs/BENCHMARKS.md; CI
+/// fails the ablations step if `lowering_report` is missing.
+fn write_json(cells: &[Cell], lowering_report: Option<Json>) -> anyhow::Result<()> {
     let mut cases: BTreeMap<String, Json> = BTreeMap::new();
+    let mut predicted: BTreeMap<String, Json> = BTreeMap::new();
     for c in cells {
         let entry = cases.entry(c.case.clone()).or_insert_with(|| Json::Obj(BTreeMap::new()));
         if let Json::Obj(m) = entry {
             m.insert(c.variant.clone(), Json::Num(c.ns));
+        }
+        if let Some(p) = c.predicted {
+            let entry =
+                predicted.entry(c.case.clone()).or_insert_with(|| Json::Obj(BTreeMap::new()));
+            if let Json::Obj(m) = entry {
+                m.insert(c.variant.clone(), Json::Num(p));
+            }
         }
     }
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("ablations".to_string()));
     root.insert("unit".to_string(), Json::Str("ns_per_inference".to_string()));
     root.insert("cases".to_string(), Json::Obj(cases));
+    root.insert("predicted_cycles".to_string(), Json::Obj(predicted));
+    root.insert(
+        "lowering_report".to_string(),
+        lowering_report.unwrap_or(Json::Null),
+    );
+    root.insert("ranking_check".to_string(), ranking_check(cells));
     std::fs::write("BENCH_ablations.json", format!("{}\n", Json::Obj(root)))?;
     println!("wrote BENCH_ablations.json");
     Ok(())

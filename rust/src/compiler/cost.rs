@@ -7,29 +7,50 @@
 //! This is a *static* model (it needs no input), used by `compiled-nn
 //! inspect` and by DESIGN.md's §Perf estimates; EXPERIMENTS.md compares its
 //! predictions with the measured Eq. 2/Eq. 3 bench.
+//!
+//! Since PR 6 it is also the model that *drives lowering*: the
+//! [`conv_candidates`] / [`dense_candidates`] estimators price every legal
+//! kernel scheme for a layer in predicted Silvermont cycles (per-MAC
+//! constants derived from [`super::silvermont`]'s instruction tables), and
+//! `Program::lower` picks the argmin whenever a scheme is `Auto`. Every
+//! decision — candidates considered, cycles predicted, scheme chosen, why —
+//! is recorded in a [`LoweringReport`] carried on the plan summary,
+//! rendered by the `explain` CLI subcommand and serialized into
+//! `BENCH_ablations.json` where the ablations bench checks the predicted
+//! ranking against measured wall-clock.
+
+use std::fmt;
 
 use anyhow::Result;
 
+use crate::compiler::silvermont;
 use crate::model::spec::{LayerOp, ModelSpec};
+use crate::util::json::Json;
 
 /// Registers available on the paper's target (x86-64 SSE: 16 XMM).
 pub const N_XMM: usize = 16;
 /// Lanes per register (4 × f32 in 128-bit XMM).
 pub const LANES: usize = 4;
 
+/// Per-layer instruction/register estimates (the §3.3 batching-rule view,
+/// independent of which kernel scheme lowering ends up choosing).
 #[derive(Debug, Clone)]
 pub struct UnitCost {
+    /// Layer name from the model spec.
     pub layer: String,
+    /// Operation name (`conv2d`, `dense`, …).
     pub op: &'static str,
     /// Multiply–accumulates in the unit.
     pub macs: usize,
+    /// Elements the unit produces.
     pub out_elems: usize,
     /// Register batches per §3.3: Eq. 3 scheme (k = 2).
     pub batches_eq3: usize,
     /// Register batches with the Eq. 2 broadcast scheme (k = 3).
     pub batches_eq2: usize,
-    /// Shuffle ops per output 4-block: Eq. 3 needs (n−1), Eq. 2 needs n.
+    /// Shuffle ops per output 4-block: Eq. 3 needs (n−1).
     pub shuffles_eq3: usize,
+    /// Shuffle ops per output 4-block with Eq. 2: n (one per column).
     pub shuffles_eq2: usize,
 }
 
@@ -38,6 +59,8 @@ pub fn batch_elems(k: usize) -> usize {
     LANES * (N_XMM - k)
 }
 
+/// Walk the spec and produce one [`UnitCost`] row per layer (shapes are
+/// inferred statically; errors only on malformed graphs).
 pub fn analyze(spec: &ModelSpec) -> Result<Vec<UnitCost>> {
     let shapes = spec.infer_shapes()?;
     let mut out = Vec::new();
@@ -98,6 +121,357 @@ pub fn render_table(costs: &[UnitCost]) -> String {
     s
 }
 
+// ---------------------------------------------------------------------------
+// Scheme auto-tuning: per-layer candidate pricing + the lowering report.
+// ---------------------------------------------------------------------------
+
+/// Static dimensions of a conv layer as seen by the scheme estimator.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvDims {
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Input channels.
+    pub in_ch: usize,
+    /// Output channels.
+    pub out_ch: usize,
+    /// Output spatial height (post-stride).
+    pub out_h: usize,
+    /// Output spatial width (post-stride).
+    pub out_w: usize,
+    /// SAME padding (multi-tap rows need bounds checks; VALID does not).
+    pub same_padding: bool,
+}
+
+/// Static dimensions of a dense layer as seen by the scheme estimator.
+#[derive(Debug, Clone, Copy)]
+pub struct DenseDims {
+    /// Input features.
+    pub in_dim: usize,
+    /// Output units.
+    pub units: usize,
+}
+
+/// One priced lowering candidate for a layer.
+#[derive(Debug, Clone)]
+pub struct CandidateCost {
+    /// Scheme label, matching the plan-summary naming (`"im2col"`,
+    /// `"gemm+rotated"`, …).
+    pub scheme: &'static str,
+    /// Predicted cycles per inference item for this layer under the scheme.
+    pub cycles: f64,
+    /// Bytes of (possibly packed/padded) weights the scheme materializes.
+    pub weight_bytes: usize,
+    /// Whether this candidate fuses the downstream max-pool into its stores.
+    pub fused_pool: bool,
+}
+
+/// Why a layer's scheme ended up chosen.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DecisionReason {
+    /// Argmin of the cost model over the legal candidates.
+    CostModel,
+    /// `CompileOptions` forced the scheme (including `bit_exact()`).
+    Forced,
+    /// The model declined to price the layer (no legal candidates / zero
+    /// work); lowering fell back to the geometry rule, then generic.
+    Fallback,
+}
+
+impl DecisionReason {
+    /// Short label for tables and JSON.
+    pub fn label(self) -> &'static str {
+        match self {
+            DecisionReason::CostModel => "cost-model",
+            DecisionReason::Forced => "forced",
+            DecisionReason::Fallback => "fallback",
+        }
+    }
+}
+
+/// One layer's record in the [`LoweringReport`].
+#[derive(Debug, Clone)]
+pub struct LayerDecision {
+    /// Layer name.
+    pub layer: String,
+    /// Operation name (`conv2d`, `dense`, `maxpool`, …).
+    pub op: &'static str,
+    /// Every candidate that was priced (empty when forced without pricing
+    /// or when the layer was elided into a neighbour).
+    pub candidates: Vec<CandidateCost>,
+    /// Label of the scheme lowering actually emitted.
+    pub chosen: &'static str,
+    /// Predicted cycles of the chosen scheme (0 when unpriced).
+    pub predicted_cycles: f64,
+    /// How the choice was made.
+    pub reason: DecisionReason,
+    /// The emitted kernel fuses a downstream max-pool.
+    pub fused_pool: bool,
+    /// The layer itself emits no kernel (e.g. a max-pool fused upstream).
+    pub elided: bool,
+}
+
+/// The explainable artifact of one `Program::lower` run: what was priced,
+/// what was chosen, and the memory the plan committed to.
+#[derive(Debug, Clone, Default)]
+pub struct LoweringReport {
+    /// Model name.
+    pub model: String,
+    /// Batch size the dense pricing assumed (`CompileOptions::batch_hint`).
+    pub batch_hint: usize,
+    /// Per-layer decisions, in lowering order (conv/dense/elided-pool only).
+    pub decisions: Vec<LayerDecision>,
+    /// Arena bytes per inference item committed by the §3.2 plan.
+    pub arena_bytes: usize,
+    /// Kernel scratch bytes (im2col rows, rotated-matvec staging).
+    pub scratch_bytes: usize,
+}
+
+impl LoweringReport {
+    /// Sum of the chosen candidates' predicted cycles per inference item.
+    pub fn predicted_total_cycles(&self) -> f64 {
+        self.decisions.iter().map(|d| d.predicted_cycles).sum()
+    }
+
+    /// Render the report as an aligned text table (the `explain` command).
+    pub fn render_table(&self) -> String {
+        let mut s = format!(
+            "lowering report — model {:?}, batch hint {}\n",
+            self.model, self.batch_hint
+        );
+        s.push_str(&format!(
+            "{:<16} {:<12} {:<16} {:<10} {:>14}  candidates (cycles)\n",
+            "layer", "op", "chosen", "reason", "pred cycles"
+        ));
+        for d in &self.decisions {
+            let cands = d
+                .candidates
+                .iter()
+                .map(|c| {
+                    let fused = if c.fused_pool { "+pool" } else { "" };
+                    format!("{}{}={:.0}", c.scheme, fused, c.cycles)
+                })
+                .collect::<Vec<_>>()
+                .join(" ");
+            let chosen = if d.fused_pool {
+                format!("{}+pool", d.chosen)
+            } else {
+                d.chosen.to_string()
+            };
+            s.push_str(&format!(
+                "{:<16} {:<12} {:<16} {:<10} {:>14.0}  {}\n",
+                d.layer,
+                d.op,
+                chosen,
+                d.reason.label(),
+                d.predicted_cycles,
+                cands
+            ));
+        }
+        s.push_str(&format!(
+            "predicted total: {:.0} cycles/item · arena {} B/item · scratch {} B\n",
+            self.predicted_total_cycles(),
+            self.arena_bytes,
+            self.scratch_bytes
+        ));
+        s
+    }
+
+    /// Serialize for `BENCH_ablations.json` (and anything else downstream).
+    pub fn to_json(&self) -> Json {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("model".into(), Json::Str(self.model.clone()));
+        root.insert("batch_hint".into(), Json::Num(self.batch_hint as f64));
+        root.insert(
+            "predicted_total_cycles".into(),
+            Json::Num(self.predicted_total_cycles()),
+        );
+        root.insert("arena_bytes".into(), Json::Num(self.arena_bytes as f64));
+        root.insert("scratch_bytes".into(), Json::Num(self.scratch_bytes as f64));
+        let decisions = self
+            .decisions
+            .iter()
+            .map(|d| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("layer".into(), Json::Str(d.layer.clone()));
+                m.insert("op".into(), Json::Str(d.op.into()));
+                m.insert("chosen".into(), Json::Str(d.chosen.into()));
+                m.insert("predicted_cycles".into(), Json::Num(d.predicted_cycles));
+                m.insert("reason".into(), Json::Str(d.reason.label().into()));
+                m.insert("fused_pool".into(), Json::Bool(d.fused_pool));
+                m.insert("elided".into(), Json::Bool(d.elided));
+                let cands = d
+                    .candidates
+                    .iter()
+                    .map(|c| {
+                        let mut cm = std::collections::BTreeMap::new();
+                        cm.insert("scheme".into(), Json::Str(c.scheme.into()));
+                        cm.insert("cycles".into(), Json::Num(c.cycles));
+                        cm.insert(
+                            "weight_bytes".into(),
+                            Json::Num(c.weight_bytes as f64),
+                        );
+                        cm.insert("fused_pool".into(), Json::Bool(c.fused_pool));
+                        Json::Obj(cm)
+                    })
+                    .collect();
+                m.insert("candidates".into(), Json::Arr(cands));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("decisions".into(), Json::Arr(decisions));
+        Json::Obj(root)
+    }
+}
+
+impl fmt::Display for LoweringReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.render_table())
+    }
+}
+
+/// Output-column padding factor of the packed 4-wide panels: a panel pads
+/// `units` up to the next multiple of [`LANES`], and the padded lanes cost
+/// real multiplies.
+fn panel_waste(units: usize) -> f64 {
+    if units == 0 {
+        return 1.0;
+    }
+    (LANES * units.div_ceil(LANES)) as f64 / units as f64
+}
+
+/// Price every legal conv scheme for a layer. `fusible_pool` is true when
+/// a downstream max-pool can legally fuse into this conv's stores; each
+/// scheme is then priced both fused (no separate pool pass) and unfused
+/// (a ~1 cycle/element pool sweep on top). Returns an empty vec when the
+/// layer does no MAC work (the caller falls back to the geometry rule —
+/// see `ConvScheme::Auto`).
+pub fn conv_candidates(d: &ConvDims, fusible_pool: bool) -> Vec<CandidateCost> {
+    let taps = d.kh * d.kw * d.in_ch;
+    let out_pixels = d.out_h * d.out_w;
+    let macs = (out_pixels * d.out_ch * taps) as f64;
+    if macs == 0.0 {
+        return Vec::new();
+    }
+    let out_elems = (out_pixels * d.out_ch) as f64;
+    let waste = panel_waste(d.out_ch);
+    // packed panels pad out_ch to LANES; generic keeps the raw kernel
+    let packed_bytes = taps * LANES * d.out_ch.div_ceil(LANES) * 4;
+    let raw_bytes = taps * d.out_ch * 4;
+    // SAME with a multi-tap kernel pays per-row bounds handling in the
+    // inner loop; VALID and 1×1 kernels never leave bounds
+    let multi_tap_same = d.same_padding && (d.kh > 1 || d.kw > 1);
+    let direct_pen = if multi_tap_same { 0.5 } else { 0.0 };
+    // im2col gathers each input patch element once per output pixel, then
+    // all out_ch MACs reuse the gathered row → +1 load-cycle / out_ch
+    let gather_pen = 1.0 / d.out_ch as f64;
+    let simd = silvermont::simd_mac_cycles();
+    let base: [(&'static str, f64, usize); 3] = [
+        ("im2col", macs * waste * (simd + gather_pen), packed_bytes),
+        ("direct", macs * waste * (simd + direct_pen), packed_bytes),
+        ("generic", macs * silvermont::scalar_mac_cycles(), raw_bytes),
+    ];
+    let mut out = Vec::new();
+    for (scheme, cycles, weight_bytes) in base {
+        if fusible_pool {
+            // fused: the pool max happens in the conv's store loop — no
+            // separate pass. Unfused: one ~1-cycle read/compare sweep over
+            // every conv output element.
+            out.push(CandidateCost { scheme, cycles, weight_bytes, fused_pool: true });
+            out.push(CandidateCost {
+                scheme,
+                cycles: cycles + out_elems,
+                weight_bytes,
+                fused_pool: false,
+            });
+        } else {
+            out.push(CandidateCost { scheme, cycles, weight_bytes, fused_pool: false });
+        }
+    }
+    out
+}
+
+/// Price every legal dense scheme for a layer under a batch hint.
+///
+/// Full 4-item tiles always run the blocked GEMM panels; the `batch % 4`
+/// tail runs the scheme's matvec. Per-item cycles average the two. The
+/// rotated (Eq. 3) and broadcast (Eq. 2) tails are only legal on square
+/// layers with `units % 4 == 0` (rotation additionally bounded by the
+/// stack-staging limit the kernels enforce); `rotated_max` passes that
+/// bound in (callers use `nn::simd::ROTATED_STACK_MAX`). Returns an empty
+/// vec when the layer does no MAC work.
+pub fn dense_candidates(
+    d: &DenseDims,
+    batch_hint: usize,
+    rotated_max: usize,
+) -> Vec<CandidateCost> {
+    let macs = (d.in_dim * d.units) as f64;
+    if macs == 0.0 {
+        return Vec::new();
+    }
+    let batch = batch_hint.max(1);
+    let tiles = (batch / LANES) * LANES;
+    let tail = batch - tiles;
+    let waste = panel_waste(d.units);
+    let simd = silvermont::simd_mac_cycles();
+    // per-item cycles when the item lands in a full GEMM tile
+    let gemm_item = macs * waste * simd;
+    let packed_bytes = d.in_dim * LANES * d.units.div_ceil(LANES) * 4;
+    let raw_bytes = d.in_dim * d.units * 4;
+    let square = d.in_dim == d.units && d.units % LANES == 0;
+    let rotatable = square && d.units <= rotated_max;
+    // average tile + tail items under the batch hint
+    let mix = |tail_item: f64| -> f64 {
+        (tiles as f64 * gemm_item + tail as f64 * tail_item) / batch as f64
+    };
+    let mut out = Vec::new();
+    if rotatable {
+        out.push(CandidateCost {
+            scheme: "gemm+rotated",
+            cycles: mix(macs * silvermont::rotated_mac_cycles()),
+            // panels for the tiles + the rotated diagonal copy for the tail
+            weight_bytes: packed_bytes + raw_bytes,
+            fused_pool: false,
+        });
+    }
+    out.push(CandidateCost {
+        scheme: "gemm+panels",
+        cycles: mix(macs * waste * simd),
+        weight_bytes: packed_bytes,
+        fused_pool: false,
+    });
+    if square {
+        out.push(CandidateCost {
+            scheme: "gemm+broadcast",
+            cycles: mix(macs * silvermont::broadcast_mac_cycles()),
+            weight_bytes: packed_bytes + raw_bytes,
+            fused_pool: false,
+        });
+    }
+    out.push(CandidateCost {
+        scheme: "generic",
+        cycles: macs * silvermont::scalar_mac_cycles(),
+        weight_bytes: raw_bytes,
+        fused_pool: false,
+    });
+    out
+}
+
+/// Argmin over the candidates whose fused-pool flag matches the actual
+/// fusion decision. Strict `<` keeps the *first listed* candidate on ties,
+/// which is how the estimator encodes its preference order (im2col before
+/// direct for convs, rotated before panels before broadcast for dense).
+pub fn pick(cands: &[CandidateCost], fused: bool) -> Option<&CandidateCost> {
+    cands
+        .iter()
+        .filter(|c| c.fused_pool == fused)
+        .fold(None, |best: Option<&CandidateCost>, c| match best {
+            Some(b) if b.cycles <= c.cycles => Some(b),
+            _ => Some(c),
+        })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,5 +505,146 @@ mod tests {
     fn render_contains_total() {
         let t = render_table(&analyze(&tiny_cnn(1)).unwrap());
         assert!(t.contains("total MACs"));
+    }
+
+    // -- scheme estimator ---------------------------------------------------
+
+    fn conv(kh: usize, kw: usize, ic: usize, oc: usize, oh: usize, ow: usize, same: bool) -> ConvDims {
+        ConvDims { kh, kw, in_ch: ic, out_ch: oc, out_h: oh, out_w: ow, same_padding: same }
+    }
+
+    fn cycles_of(cands: &[CandidateCost], scheme: &str, fused: bool) -> f64 {
+        cands
+            .iter()
+            .find(|c| c.scheme == scheme && c.fused_pool == fused)
+            .unwrap_or_else(|| panic!("no {scheme} fused={fused} in {cands:?}"))
+            .cycles
+    }
+
+    #[test]
+    fn conv_estimator_reproduces_the_geometry_rule_on_the_lane_grid() {
+        // 3×3 SAME with oc ≥ 4: im2col's amortized gather beats direct's
+        // bounds-checked taps (tiny_cnn's conv)
+        let c = conv_candidates(&conv(3, 3, 3, 4, 8, 8, true), false);
+        assert_eq!(pick(&c, false).unwrap().scheme, "im2col");
+        // VALID and 1×1 kernels: direct wins strictly
+        let c = conv_candidates(&conv(3, 3, 3, 4, 6, 6, false), false);
+        assert_eq!(pick(&c, false).unwrap().scheme, "direct");
+        let c = conv_candidates(&conv(1, 1, 8, 4, 8, 8, true), false);
+        assert_eq!(pick(&c, false).unwrap().scheme, "direct");
+        // generic is never the argmin when SIMD candidates exist
+        for same in [false, true] {
+            let c = conv_candidates(&conv(3, 3, 4, 8, 5, 5, same), false);
+            assert_ne!(pick(&c, false).unwrap().scheme, "generic");
+        }
+    }
+
+    #[test]
+    fn fused_pool_is_never_pricier_than_unfused() {
+        let c = conv_candidates(&conv(3, 3, 3, 4, 8, 8, true), true);
+        for scheme in ["im2col", "direct", "generic"] {
+            assert!(cycles_of(&c, scheme, true) < cycles_of(&c, scheme, false), "{scheme}");
+        }
+        assert_eq!(pick(&c, true).unwrap().scheme, "im2col");
+    }
+
+    #[test]
+    fn dense_estimator_matches_the_kernel_legality_rules() {
+        let max = crate::nn::simd::ROTATED_STACK_MAX;
+        // square, 4-aligned, small: rotation is strictly cheapest
+        let c = dense_candidates(&DenseDims { in_dim: 16, units: 16 }, 1, max);
+        assert_eq!(pick(&c, false).unwrap().scheme, "gemm+rotated");
+        // rectangular: rotation/broadcast illegal, panels beat generic
+        let c = dense_candidates(&DenseDims { in_dim: 48, units: 10 }, 1, max);
+        assert!(c.iter().all(|x| x.scheme != "gemm+rotated"));
+        assert!(c.iter().all(|x| x.scheme != "gemm+broadcast"));
+        assert_eq!(pick(&c, false).unwrap().scheme, "gemm+panels");
+        // square but over the rotation staging limit: panels win the tie
+        // against broadcast (first-listed preference)
+        let c = dense_candidates(&DenseDims { in_dim: max * 2, units: max * 2 }, 1, max);
+        assert!(c.iter().all(|x| x.scheme != "gemm+rotated"));
+        assert_eq!(pick(&c, false).unwrap().scheme, "gemm+panels");
+        // a full-tile batch hint prices everything at GEMM cost, so the
+        // rotated tail advantage disappears for batch % 4 == 0
+        let c4 = dense_candidates(&DenseDims { in_dim: 16, units: 16 }, 4, max);
+        assert_eq!(
+            cycles_of(&c4, "gemm+rotated", false),
+            cycles_of(&c4, "gemm+panels", false)
+        );
+        // degenerate single-unit head: padding waste makes scalar cheaper
+        let c = dense_candidates(&DenseDims { in_dim: 64, units: 1 }, 1, max);
+        assert_eq!(pick(&c, false).unwrap().scheme, "generic");
+    }
+
+    #[test]
+    fn scheme_costs_are_monotone_in_every_dimension() {
+        // growing any conv dimension must never make any candidate cheaper
+        // (a pathological estimate would silently invert a choice)
+        let base = conv(3, 3, 4, 8, 5, 7, true);
+        let bigger = [
+            conv(5, 3, 4, 8, 5, 7, true),
+            conv(3, 5, 4, 8, 5, 7, true),
+            conv(3, 3, 9, 8, 5, 7, true),
+            conv(3, 3, 4, 12, 5, 7, true),
+            conv(3, 3, 4, 8, 11, 7, true),
+            conv(3, 3, 4, 8, 5, 13, true),
+        ];
+        let b = conv_candidates(&base, None);
+        for big in &bigger {
+            let g = conv_candidates(big, None);
+            for scheme in ["im2col", "direct", "generic"] {
+                assert!(
+                    cycles_of(&g, scheme, false) >= cycles_of(&b, scheme, false),
+                    "{scheme}: {big:?} priced below {base:?}"
+                );
+            }
+        }
+        // dense: cycles non-decreasing in in_dim and units for the two
+        // always-legal schemes, across off-lane-grid sizes
+        let max = crate::nn::simd::ROTATED_STACK_MAX;
+        for batch in [1usize, 3, 4, 8] {
+            for scheme in ["gemm+panels", "generic"] {
+                let mut prev = 0.0;
+                for units in 1..=24 {
+                    let c = dense_candidates(&DenseDims { in_dim: 32, units }, batch, max);
+                    let now = cycles_of(&c, scheme, false);
+                    assert!(now >= prev, "{scheme} units {units} batch {batch}");
+                    prev = now;
+                }
+                let mut prev = 0.0;
+                for in_dim in 1..=24 {
+                    let c = dense_candidates(&DenseDims { in_dim, units: 10 }, batch, max);
+                    let now = cycles_of(&c, scheme, false);
+                    assert!(now >= prev, "{scheme} in_dim {in_dim} batch {batch}");
+                    prev = now;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let report = LoweringReport {
+            model: "t".into(),
+            batch_hint: 1,
+            decisions: vec![LayerDecision {
+                layer: "conv1".into(),
+                op: "conv2d",
+                candidates: conv_candidates(&conv(3, 3, 3, 4, 8, 8, true), false),
+                chosen: "im2col",
+                predicted_cycles: 8640.0,
+                reason: DecisionReason::CostModel,
+                fused_pool: false,
+                elided: false,
+            }],
+            arena_bytes: 1024,
+            scratch_bytes: 432,
+        };
+        let t = report.render_table();
+        assert!(t.contains("conv1") && t.contains("cost-model"), "{t}");
+        assert!(t.contains("predicted total"), "{t}");
+        let j = report.to_json().to_string();
+        assert!(j.contains("\"decisions\"") && j.contains("\"im2col\""), "{j}");
+        assert_eq!(report.predicted_total_cycles(), 8640.0);
     }
 }

@@ -22,12 +22,15 @@ use crate::engine::{Engine, SharedInfer, WorkerScratch};
 use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
 
+/// The optimized interpreter: an `Arc`-shared lowered [`Program`] plus a
+/// per-engine [`ArenaPool`] (one pooled arena per batch size served).
 pub struct OptInterp {
     program: Arc<Program>,
     pool: ArenaPool,
 }
 
 impl OptInterp {
+    /// Lower `spec` under `opts` and wrap the program for inference.
     pub fn new(spec: &ModelSpec, opts: CompileOptions) -> Result<Self> {
         Ok(Self { program: Arc::new(Program::lower(spec, opts)?), pool: ArenaPool::new() })
     }
@@ -37,6 +40,7 @@ impl OptInterp {
         Self { program: Arc::new(program), pool: ArenaPool::new() }
     }
 
+    /// The lowered program (its `summary()` carries the lowering report).
     pub fn program(&self) -> &Program {
         &self.program
     }
@@ -46,6 +50,7 @@ impl OptInterp {
         self.pool.bytes()
     }
 
+    /// Run a `[B, ...]` input through the program over a pooled arena.
     pub fn infer(&mut self, input: &Tensor) -> Result<Vec<Tensor>> {
         self.program.infer_pooled(input, &mut self.pool)
     }
@@ -171,9 +176,12 @@ mod tests {
             for approx in [false, true] {
                 for reuse in [false, true] {
                     for fuse_pool in [false, true] {
-                        for dense in
-                            [DenseScheme::Rotated, DenseScheme::Broadcast, DenseScheme::Generic]
-                        {
+                        for dense in [
+                            DenseScheme::Auto,
+                            DenseScheme::Rotated,
+                            DenseScheme::Broadcast,
+                            DenseScheme::Generic,
+                        ] {
                             for conv in [
                                 ConvScheme::Auto,
                                 ConvScheme::Direct,
@@ -189,6 +197,7 @@ mod tests {
                                         dense,
                                         conv,
                                         fuse_pool,
+                                        batch_hint: 1,
                                     },
                                 )
                                 .unwrap();

@@ -18,12 +18,16 @@ use crate::nn::simd::CONV_BLOCK;
 /// by the optional folded-BN affine.
 #[derive(Clone, Copy)]
 pub struct Epilogue<'a> {
+    /// Activation applied to every stored element.
     pub act: Activation,
+    /// Use the §3.4 fast approximations for sigmoid/tanh stores.
     pub approx: bool,
-    pub post: Option<(&'a [f32], &'a [f32])>, // (scale, shift) per channel
+    /// Folded-BN per-channel `(scale, shift)` applied after the activation.
+    pub post: Option<(&'a [f32], &'a [f32])>,
 }
 
 impl<'a> Epilogue<'a> {
+    /// Identity epilogue: linear activation, exact math, no post-affine.
     pub const NONE: Epilogue<'static> =
         Epilogue { act: Activation::Linear, approx: false, post: None };
 
@@ -169,15 +173,24 @@ impl<'a> Epilogue<'a> {
 pub enum ConvAlgo {
     /// Scalar reference accumulation order — the bit-exact path, identical
     /// tap order to `nn::layers::conv::conv2d`.
-    Generic { kernel: Vec<f32> },
+    Generic {
+        /// HWIO weights in the spec's layout, unpacked.
+        kernel: Vec<f32>,
+    },
     /// 4-lane blocked panels read straight off the NHWC window (1×1
     /// kernels and VALID windows are always fully in bounds).
-    Direct { panels: Vec<f32> },
+    Direct {
+        /// [`simd::pack_conv_panels`] layout of the HWIO weights.
+        panels: Vec<f32>,
+    },
     /// 4-lane blocked panels over a gathered, zero-padded im2col row — one
     /// contiguous FMA stream per pixel regardless of border clipping. The
     /// row scratch (`GEMM_NR` rows of `kh*kw*c` for the batch-blocked
     /// path) is passed into [`conv2d_run`].
-    Im2col { panels: Vec<f32> },
+    Im2col {
+        /// [`simd::pack_conv_panels`] layout of the HWIO weights.
+        panels: Vec<f32>,
+    },
 }
 
 /// How a Dense layer computes its output — the §3.3 + batch-blocking
@@ -189,22 +202,36 @@ pub enum ConvAlgo {
 pub enum DenseAlgo {
     /// Scalar reference accumulation order — the bit-exact path, identical
     /// per output element to `nn::layers::dense::dense`.
-    Generic { kernel: Vec<f32> },
+    Generic {
+        /// `[in_dim, units]` weights in the spec's layout, unpacked.
+        kernel: Vec<f32>,
+    },
     /// Batch-blocked register-tiled GEMM over [`simd::pack_dense_panels`]
     /// panels: every full `GEMM_NR`-item tile streams each weight panel
     /// once for 4 batch items; leftover items (and whole batches smaller
     /// than `GEMM_NR`, including the batch=1 serving bucket) run the
     /// per-item `tail` matvec.
-    Gemm { panels: Vec<f32>, tail: DenseTail },
+    Gemm {
+        /// [`simd::pack_dense_panels`] layout of the weights.
+        panels: Vec<f32>,
+        /// Per-item matvec for batch items off the `GEMM_NR` grid.
+        tail: DenseTail,
+    },
 }
 
 /// The per-item matvec serving a GEMM-lowered dense layer's batch tail.
 pub enum DenseTail {
     /// §3.3 Eq. 3 rotated diagonals (square layers inside the stack
     /// window); needs the `2n` doubled-x scratch passed to [`dense_run`].
-    Rotated { diag: Vec<f32> },
+    Rotated {
+        /// [`simd::rotate_diagonals`] layout of the transposed weights.
+        diag: Vec<f32>,
+    },
     /// §3.3 Eq. 2 broadcast scheme (square layers).
-    Broadcast { w: Vec<f32> },
+    Broadcast {
+        /// Transposed (`y = W x` orientation) weights, unpacked.
+        w: Vec<f32>,
+    },
     /// One pass over the packed panels (rectangular layers) — the same
     /// accumulation order as a 1-wide GEMM tile, so blocks and tail agree
     /// bit-for-bit.
@@ -592,6 +619,8 @@ fn store_lanes(acc: &mut [f32; CONV_BLOCK], ob: usize, ep: Epilogue, dst: &mut [
     }
 }
 
+/// Depthwise conv2d, NHWC × HWC → NHWC (one filter per channel), scalar
+/// taps with the fused epilogue applied per output pixel.
 #[allow(clippy::too_many_arguments)]
 pub fn depthwise_conv2d_into(
     x: &[f32],
@@ -745,6 +774,8 @@ fn add_bias(dst: &mut [f32], bias: Option<&[f32]>) {
     }
 }
 
+/// Standalone NHWC max-pool (the unfused path; fused pools ride
+/// [`conv2d_run`]). Window `(kh, kw)` at `stride`, no padding.
 pub fn maxpool_into(
     x: &[f32],
     (b, h, w, c): (usize, usize, usize, usize),
@@ -772,6 +803,7 @@ pub fn maxpool_into(
     }
 }
 
+/// NHWC average-pool: window `(kh, kw)` at `stride`, no padding.
 pub fn avgpool_into(
     x: &[f32],
     (b, h, w, c): (usize, usize, usize, usize),
@@ -801,6 +833,7 @@ pub fn avgpool_into(
     }
 }
 
+/// Global average pool: NHWC → `[b, c]`, mean over every spatial position.
 pub fn globalavgpool_into(x: &[f32], (b, h, w, c): (usize, usize, usize, usize), out: &mut [f32]) {
     let inv = 1.0 / (h * w) as f32;
     for n in 0..b {
@@ -818,6 +851,7 @@ pub fn globalavgpool_into(x: &[f32], (b, h, w, c): (usize, usize, usize, usize),
     }
 }
 
+/// Nearest-neighbour upsample by an integer `factor` in both spatial dims.
 pub fn upsample_into(
     x: &[f32],
     (b, h, w, c): (usize, usize, usize, usize),
@@ -835,6 +869,7 @@ pub fn upsample_into(
     }
 }
 
+/// Zero-pad the spatial dims by `pad = [top, bottom, left, right]`.
 pub fn zeropad_into(
     x: &[f32],
     (b, h, w, c): (usize, usize, usize, usize),
@@ -901,12 +936,14 @@ pub fn softmax_rows(buf: &mut [f32], c: usize, approx_exp: bool) {
     }
 }
 
+/// `out = a + b`, elementwise (the out-of-place residual add).
 pub fn add_into(a: &[f32], b: &[f32], out: &mut [f32]) {
     for ((&x, &y), o) in a.iter().zip(b).zip(out.iter_mut()) {
         *o = x + y;
     }
 }
 
+/// Channel-axis concat of two NHWC buffers with `ca` and `cb` channels.
 pub fn concat_into(a: &[f32], ca: usize, b: &[f32], cb: usize, out: &mut [f32]) {
     let pixels = a.len() / ca;
     debug_assert_eq!(b.len() / cb, pixels);

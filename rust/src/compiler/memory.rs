@@ -29,6 +29,8 @@ pub fn can_run_in_place(op: &LayerOp) -> bool {
     )
 }
 
+/// The §3.2 planner's result: every tensor's buffer assignment plus the
+/// ablation counters (`naive_total`, `in_place_hits`).
 #[derive(Debug, Clone)]
 pub struct MemoryPlan {
     /// tensor name → buffer id ("input" included).

@@ -32,6 +32,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::compiler::cost;
 use crate::compiler::fuse;
 use crate::compiler::kernels as k;
 use crate::compiler::memory;
@@ -42,6 +43,13 @@ use crate::nn::tensor::Tensor;
 /// How Dense layers are lowered (the §3.3 matrix–vector schemes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DenseScheme {
+    /// Pick per layer by pricing every legal candidate with the §3.3
+    /// Silvermont cost model ([`cost::dense_candidates`]) under
+    /// [`CompileOptions::batch_hint`] and taking the argmin; the
+    /// chosen tail and the decision trail land in the plan summary's
+    /// [`cost::LoweringReport`]. Layers the model declines to price
+    /// (zero MACs) fall back to the blocked-GEMM panels.
+    Auto,
     /// Eq. 3: weights pre-rotated into stacked diagonals at lowering time;
     /// eligible square layers use [`simd::matvec_rotated`].
     Rotated,
@@ -57,10 +65,16 @@ pub enum DenseScheme {
 /// loop computes each output pixel's channel vector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ConvScheme {
-    /// Pick per layer from the statically known `kh/kw/stride/padding`:
-    /// 1×1 and VALID windows (always fully in bounds) go
-    /// [`ConvScheme::Direct`]; padded multi-tap windows go
-    /// [`ConvScheme::Im2col`].
+    /// Pick per layer by pricing every legal candidate — direct, im2col,
+    /// and generic, each with and without a fused max-pool — through the
+    /// §3.3 Silvermont cost model ([`cost::conv_candidates`]) and taking
+    /// the argmin among candidates matching the actual fusion decision.
+    /// The full decision trail is recorded in the plan summary's
+    /// [`cost::LoweringReport`]. If the model declines to price a layer
+    /// (it does no MAC work), lowering falls back in order: the geometry
+    /// rule (1×1 and VALID windows → [`ConvScheme::Direct`], padded
+    /// multi-tap windows → [`ConvScheme::Im2col`]), then
+    /// [`ConvScheme::Generic`].
     Auto,
     /// 4-lane output-channel-blocked FMA straight over the NHWC window
     /// ([`simd::pack_conv_panels`] layout, border taps skipped).
@@ -75,6 +89,24 @@ pub enum ConvScheme {
 
 /// Which of the paper's optimizations the lowering applies (each is an
 /// ablation axis exercised by `benches/ablations.rs`).
+///
+/// The default options give the paper's full pipeline with cost-model
+/// scheme selection; struct-update syntax overrides single axes:
+///
+/// ```
+/// use compiled_nn::compiler::program::{CompileOptions, ConvScheme, DenseScheme};
+///
+/// let opts = CompileOptions::default();
+/// assert_eq!(opts.conv, ConvScheme::Auto);
+/// assert_eq!(opts.dense, DenseScheme::Auto);
+///
+/// // force one axis, keep the rest of the pipeline on
+/// let forced = CompileOptions { conv: ConvScheme::Direct, ..opts };
+/// assert!(forced.fuse_pool && forced.fold_bn);
+///
+/// // the bit-exact reference path pins everything to the oracle's order
+/// assert_eq!(CompileOptions::bit_exact().dense, DenseScheme::Generic);
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CompileOptions {
     /// §3.5 batch-norm folding / fusion.
@@ -91,6 +123,11 @@ pub struct CompileOptions {
     /// producing conv's store loop (the conv intermediate never
     /// materializes in the arena).
     pub fuse_pool: bool,
+    /// Batch size the `Auto` cost model assumes when pricing dense layers
+    /// (full 4-item tiles run blocked GEMM, the remainder runs the matvec
+    /// tail). Purely a *pricing* hint — the lowered program still executes
+    /// any runtime batch; 1 matches the serving fast path.
+    pub batch_hint: usize,
 }
 
 impl Default for CompileOptions {
@@ -99,9 +136,10 @@ impl Default for CompileOptions {
             fold_bn: true,
             approx: true,
             reuse_memory: true,
-            dense: DenseScheme::Rotated,
+            dense: DenseScheme::Auto,
             conv: ConvScheme::Auto,
             fuse_pool: true,
+            batch_hint: 1,
         }
     }
 }
@@ -122,6 +160,7 @@ impl CompileOptions {
             dense: DenseScheme::Generic,
             conv: ConvScheme::Generic,
             fuse_pool: false,
+            batch_hint: 1,
         }
     }
 }
@@ -168,6 +207,7 @@ pub struct Arena {
 }
 
 impl Arena {
+    /// Batch size this arena was allocated for.
     pub fn batch(&self) -> usize {
         self.batch
     }
@@ -196,6 +236,7 @@ pub struct ArenaPool {
 const MAX_UNPINNED_ARENAS: usize = 4;
 
 impl ArenaPool {
+    /// An empty pool (no arenas, no pinned buckets).
     pub fn new() -> ArenaPool {
         ArenaPool::default()
     }
@@ -245,10 +286,12 @@ impl ArenaPool {
         self.arenas.iter().map(Arena::bytes).sum()
     }
 
+    /// Number of pooled arenas (one per distinct batch size in use).
     pub fn len(&self) -> usize {
         self.arenas.len()
     }
 
+    /// True when no arena has been created yet.
     pub fn is_empty(&self) -> bool {
         self.arenas.is_empty()
     }
@@ -290,7 +333,9 @@ struct Step {
 /// A model output: where it lives and its per-item shape.
 #[derive(Debug, Clone)]
 pub struct OutputSpec {
+    /// Pre-resolved arena position of the output tensor.
     pub span: Span,
+    /// Per-item output shape.
     pub shape: Vec<usize>,
 }
 
@@ -299,6 +344,7 @@ pub struct OutputSpec {
 /// and benches can assert on the lowered form instead of re-deriving it.
 #[derive(Debug, Clone, Default)]
 pub struct PlanSummary {
+    /// Model name.
     pub model: String,
     /// One label per emitted step, in execution order.
     pub steps: Vec<String>,
@@ -334,6 +380,10 @@ pub struct PlanSummary {
     /// Batch-independent per-arena scratch elements (im2col rows, fused-
     /// pool cells, rotated-dense windows) — per worker, not per program.
     pub scratch_elems: usize,
+    /// The explainable §3.3 decision trail: every scheme candidate priced
+    /// by the cost model, what was chosen per layer and why, plus the
+    /// memory the plan committed to. Rendered by `compiled-nn explain`.
+    pub report: cost::LoweringReport,
 }
 
 impl fmt::Display for PlanSummary {
@@ -400,6 +450,23 @@ impl Program {
     /// Lower `spec` through fold → plan → kernel selection. This is the
     /// entire per-model compile cost of the optimized engine; everything
     /// it resolves is resolved exactly once.
+    ///
+    /// ```
+    /// use compiled_nn::compiler::cost::DecisionReason;
+    /// use compiled_nn::compiler::program::{CompileOptions, Program};
+    /// use compiled_nn::model::builder::tiny_cnn;
+    ///
+    /// let program = Program::lower(&tiny_cnn(7), CompileOptions::default()).unwrap();
+    /// let report = &program.summary().report;
+    /// // default options: every conv/dense scheme came from the §3.3
+    /// // cost model, and the report prices the whole net
+    /// assert!(report
+    ///     .decisions
+    ///     .iter()
+    ///     .filter(|d| !d.elided)
+    ///     .all(|d| d.reason == DecisionReason::CostModel));
+    /// assert!(report.predicted_total_cycles() > 0.0);
+    /// ```
     pub fn lower(spec: &ModelSpec, opts: CompileOptions) -> Result<Program> {
         LOWER_CALLS.fetch_add(1, Ordering::SeqCst);
         let t0 = Instant::now();
@@ -410,11 +477,11 @@ impl Program {
         // §3.4 operation merging: single-consumer conv → MaxPool pairs run
         // as one kernel; the conv intermediate is elided from the §3.2 plan
         // (its buffer never exists, its input lives until the pool runs).
-        let pool_of: BTreeMap<String, String> = if opts.fuse_pool {
-            fuse::fusible_maxpool_pairs(&folded)
-        } else {
-            BTreeMap::new()
-        };
+        // Fusibility is computed even with fusion off so the cost model can
+        // price (and the report can show) both variants of each candidate.
+        let fusible_pairs = fuse::fusible_maxpool_pairs(&folded);
+        let pool_of: BTreeMap<String, String> =
+            if opts.fuse_pool { fusible_pairs.clone() } else { BTreeMap::new() };
         let conv_of: BTreeMap<&str, &str> =
             pool_of.iter().map(|(c, p)| (p.as_str(), c.as_str())).collect();
         let elided: BTreeSet<String> = pool_of.keys().cloned().collect();
@@ -441,6 +508,11 @@ impl Program {
             buffers: plan.buffer_sizes.len(),
             arena_item_elems: item_elems,
             folded_bn: bn_before - fuse::bn_count(&folded),
+            report: cost::LoweringReport {
+                model: spec.name.clone(),
+                batch_hint: opts.batch_hint.max(1),
+                ..cost::LoweringReport::default()
+            },
             ..PlanSummary::default()
         };
         let mut spans = BTreeMap::new();
@@ -478,12 +550,32 @@ impl Program {
                 };
                 let src = span_of(&conv.inputs[0]);
                 let cin = &shapes[&conv.inputs[0]];
+                let cout = &shapes[conv_name];
                 // The conv's own epilogue (activation + folded-BN affine)
                 // runs per pixel *before* the max — the unfused order.
                 let ep = ep_spec(&folded, conv, opts.approx, &mut summary)?;
-                let (algo, bias, scheme) =
-                    lower_conv_weights(&folded, conv, cin[2], opts, &mut summary)?;
+                let (algo, bias, scheme) = lower_conv_weights(
+                    &folded,
+                    conv,
+                    cin[2],
+                    (cout[0], cout[1]),
+                    ConvFusion { fusible: true, fused: true },
+                    opts,
+                    &mut summary,
+                )?;
                 summary.fused_maxpool += 1;
+                // the pool layer itself emits no kernel — record that in
+                // the decision trail
+                summary.report.decisions.push(cost::LayerDecision {
+                    layer: l.name.clone(),
+                    op: l.op.name(),
+                    candidates: Vec::new(),
+                    chosen: "fused-into-conv",
+                    predicted_cycles: 0.0,
+                    reason: cost::DecisionReason::CostModel,
+                    fused_pool: true,
+                    elided: true,
+                });
                 let kind = format!(
                     "conv2d+maxpool[{ckh}x{ckw}x{}→{out_ch} s{cs}; pool {kh}x{kw} s{stride}]\
                      [{scheme}]{}",
@@ -525,8 +617,18 @@ impl Program {
                     if in_place {
                         bail!("conv2d `{}` cannot run in place", l.name);
                     }
-                    let (algo, bias, scheme) =
-                        lower_conv_weights(&folded, l, in_shape[2], opts, &mut summary)?;
+                    let (algo, bias, scheme) = lower_conv_weights(
+                        &folded,
+                        l,
+                        in_shape[2],
+                        (out_shape[0], out_shape[1]),
+                        ConvFusion {
+                            fusible: fusible_pairs.contains_key(&l.name),
+                            fused: false,
+                        },
+                        opts,
+                        &mut summary,
+                    )?;
                     let kind = format!(
                         "conv2d[{kh}x{kw}x{}→{out_ch} s{stride}][{scheme}]{}",
                         in_shape[2],
@@ -591,7 +693,7 @@ impl Program {
                     // tail matvec layout) is accounted by lower_dense_algo
                     summary.weight_elems += bias.as_ref().map_or(0, Vec::len);
                     let (algo, scratch_len, label) =
-                        lower_dense_algo(kernel, in_dim, *units, opts.dense, &mut summary);
+                        lower_dense_algo(&l.name, kernel, in_dim, *units, opts, &mut summary);
                     let kind = format!("dense[{label} {in_dim}→{units}]{}", ep.label());
                     (
                         Box::new(DenseK {
@@ -756,6 +858,8 @@ impl Program {
             .collect();
 
         summary.scratch_elems = scratch_elems;
+        summary.report.arena_bytes = item_elems * std::mem::size_of::<f32>();
+        summary.report.scratch_bytes = scratch_elems * std::mem::size_of::<f32>();
         Ok(Program {
             steps,
             outputs,
@@ -880,14 +984,29 @@ fn ep_spec(
     Ok(EpSpec { act: l.activation, approx, post })
 }
 
+/// How a conv layer relates to a downstream max-pool at lowering time:
+/// `fusible` = a single-consumer pool pair exists in the graph (the cost
+/// model prices fused variants), `fused` = the §3.4 merge actually happens
+/// (requires `fusible` and `CompileOptions::fuse_pool`).
+#[derive(Clone, Copy)]
+struct ConvFusion {
+    fusible: bool,
+    fused: bool,
+}
+
 /// Fetch a conv layer's kernel + bias out of the blob and lower them to
 /// the selected §3.3 algo (weight accounting included). Shared by the
 /// stand-alone Conv2d arm and the §3.4 fused conv+maxpool branch so the
-/// two can never drift apart.
+/// two can never drift apart. `Auto` resolves by pricing every candidate
+/// through [`cost::conv_candidates`] and taking the argmin among those
+/// matching the fusion decision; the whole trail lands in the summary's
+/// report.
 fn lower_conv_weights(
     folded: &ModelSpec,
     conv: &Layer,
     in_ch: usize,
+    (out_h, out_w): (usize, usize),
+    fusion: ConvFusion,
     opts: CompileOptions,
     summary: &mut PlanSummary,
 ) -> Result<(k::ConvAlgo, Option<Vec<f32>>, &'static str)> {
@@ -898,36 +1017,73 @@ fn lower_conv_weights(
     let bias =
         if *use_bias { Some(folded.weight(conv, "bias")?.to_vec()) } else { None };
     summary.weight_elems += kernel.len() + bias.as_ref().map_or(0, Vec::len);
+    let dims = cost::ConvDims {
+        kh: *kh,
+        kw: *kw,
+        in_ch,
+        out_ch: *out_ch,
+        out_h,
+        out_w,
+        same_padding: *padding == Padding::Same,
+    };
+    let candidates = cost::conv_candidates(&dims, fusion.fusible);
+    let (resolved, reason) = match opts.conv {
+        ConvScheme::Auto => match cost::pick(&candidates, fusion.fused) {
+            Some(best) => (
+                match best.scheme {
+                    "direct" => ConvScheme::Direct,
+                    "generic" => ConvScheme::Generic,
+                    _ => ConvScheme::Im2col,
+                },
+                cost::DecisionReason::CostModel,
+            ),
+            // the model declined to price the layer: geometry rule first
+            // (1×1/VALID → direct, padded multi-tap → im2col), generic only
+            // if even that is ruled out — see `ConvScheme::Auto`
+            None => (
+                if (*kh == 1 && *kw == 1) || *padding == Padding::Valid {
+                    ConvScheme::Direct
+                } else {
+                    ConvScheme::Im2col
+                },
+                cost::DecisionReason::Fallback,
+            ),
+        },
+        forced => (forced, cost::DecisionReason::Forced),
+    };
     let (algo, scheme) =
-        lower_conv_algo(opts.conv, kernel, (*kh, *kw, in_ch, *out_ch), *padding, summary);
+        lower_conv_algo(resolved, kernel, (*kh, *kw, in_ch, *out_ch), summary);
+    let predicted = candidates
+        .iter()
+        .find(|c| c.scheme == scheme && c.fused_pool == fusion.fused)
+        .map_or(0.0, |c| c.cycles);
+    summary.report.decisions.push(cost::LayerDecision {
+        layer: conv.name.clone(),
+        op: conv.op.name(),
+        candidates,
+        chosen: scheme,
+        predicted_cycles: predicted,
+        reason,
+        fused_pool: fusion.fused,
+        elided: false,
+    });
     Ok((algo, bias, scheme))
 }
 
-/// Pick the §3.3 conv lowering for a layer's statically known shape and
-/// pack the kernel accordingly; returns the algo plus its summary label.
-/// `Auto` resolves from the window geometry: 1×1 and VALID windows are
-/// always fully in bounds (read NHWC directly); padded multi-tap windows
-/// gather one contiguous im2col row instead of branching per tap.
+/// Pack a conv kernel for an already-resolved §3.3 scheme; returns the
+/// algo plus its summary label. Scheme resolution (cost model, fallbacks)
+/// happens in [`lower_conv_weights`] — by this point `Auto` has been
+/// replaced by a concrete scheme.
 fn lower_conv_algo(
     scheme: ConvScheme,
     kernel: Vec<f32>,
     (kh, kw, c, oc): (usize, usize, usize, usize),
-    padding: Padding,
     summary: &mut PlanSummary,
 ) -> (k::ConvAlgo, &'static str) {
     let taps = kh * kw * c;
     debug_assert_eq!(kernel.len(), taps * oc);
-    let pick = match scheme {
-        ConvScheme::Auto => {
-            if (kh == 1 && kw == 1) || padding == Padding::Valid {
-                ConvScheme::Direct
-            } else {
-                ConvScheme::Im2col
-            }
-        }
-        forced => forced,
-    };
-    match pick {
+    debug_assert_ne!(scheme, ConvScheme::Auto, "Auto resolved by the caller");
+    match scheme {
         ConvScheme::Direct => {
             summary.direct_conv += 1;
             (k::ConvAlgo::Direct { panels: simd::pack_conv_panels(&kernel, taps, oc) }, "direct")
@@ -958,49 +1114,106 @@ fn conv_row_len(algo: &k::ConvAlgo, (kh, kw, c): (usize, usize, usize)) -> usize
 /// kernel, zero-padded panels, plus the square tails' n² matvec layout),
 /// so the summary reflects the real resident weight footprint.
 ///
-/// `Generic` stays the scalar bit-exact reference. Every other scheme
-/// lowers to the batch-blocked GEMM microkernel
-/// ([`simd::pack_dense_panels`] panels packed once here, landing in the
-/// kernel's weights — never per-call scratch) with the configured §3.3
-/// matvec kept as the per-item batch-tail path: square 4-lane-divisible
-/// layers keep their rotated/broadcast matvec (rotated additionally needs
-/// the bounded stack window), everything else re-walks the packed panels
-/// one item at a time.
+/// `Auto` resolves by pricing every legal candidate through
+/// [`cost::dense_candidates`] under `opts.batch_hint` and taking the
+/// argmin (falling back to the GEMM panels if the model declines to price
+/// the layer); forced schemes keep their legality fallbacks. `Generic`
+/// stays the scalar bit-exact reference. Every other pick lowers to the
+/// batch-blocked GEMM microkernel ([`simd::pack_dense_panels`] panels
+/// packed once here, landing in the kernel's weights — never per-call
+/// scratch) with the §3.3 matvec kept as the per-item batch-tail path:
+/// square 4-lane-divisible layers can keep their rotated/broadcast matvec
+/// (rotated additionally needs the bounded stack window), everything else
+/// re-walks the packed panels one item at a time. The decision trail lands
+/// in the summary's report.
 fn lower_dense_algo(
+    layer: &str,
     kernel: Vec<f32>,
     in_dim: usize,
     units: usize,
-    scheme: DenseScheme,
+    opts: CompileOptions,
     summary: &mut PlanSummary,
 ) -> (k::DenseAlgo, usize, &'static str) {
-    if scheme == DenseScheme::Generic {
-        summary.weight_elems += kernel.len();
-        return (k::DenseAlgo::Generic { kernel }, 0, "generic");
+    #[derive(Clone, Copy)]
+    enum Pick {
+        Rotated,
+        Broadcast,
+        Panels,
+        Generic,
     }
     let square = in_dim == units && units % 4 == 0;
     let rotatable = square && units <= simd::ROTATED_STACK_MAX;
-    let panels = simd::pack_dense_panels(&kernel, in_dim, units);
-    summary.weight_elems += panels.len();
-    summary.gemm_dense += 1;
-    let (tail, scratch_len, label) = match scheme {
-        DenseScheme::Rotated if rotatable => {
-            summary.rotated_dense += 1;
-            let diag = simd::rotate_diagonals(&transpose(&kernel, in_dim), in_dim);
-            summary.weight_elems += diag.len();
-            (k::DenseTail::Rotated { diag }, 2 * in_dim, "gemm+rotated")
-        }
-        DenseScheme::Broadcast if square => {
-            summary.broadcast_dense += 1;
-            let w = transpose(&kernel, in_dim);
-            summary.weight_elems += w.len();
-            (k::DenseTail::Broadcast { w }, 0, "gemm+broadcast")
-        }
-        _ => {
-            summary.panel_tail_dense += 1;
-            (k::DenseTail::Panels, 0, "gemm+panels")
-        }
+    let candidates = cost::dense_candidates(
+        &cost::DenseDims { in_dim, units },
+        opts.batch_hint.max(1),
+        simd::ROTATED_STACK_MAX,
+    );
+    let (pick, reason) = match opts.dense {
+        DenseScheme::Generic => (Pick::Generic, cost::DecisionReason::Forced),
+        DenseScheme::Rotated => (
+            if rotatable { Pick::Rotated } else { Pick::Panels },
+            cost::DecisionReason::Forced,
+        ),
+        DenseScheme::Broadcast => (
+            if square { Pick::Broadcast } else { Pick::Panels },
+            cost::DecisionReason::Forced,
+        ),
+        DenseScheme::Auto => match cost::pick(&candidates, false) {
+            // the estimator only lists legal candidates, so the argmin
+            // label maps straight onto a lowering
+            Some(best) => (
+                match best.scheme {
+                    "gemm+rotated" => Pick::Rotated,
+                    "gemm+broadcast" => Pick::Broadcast,
+                    "generic" => Pick::Generic,
+                    _ => Pick::Panels,
+                },
+                cost::DecisionReason::CostModel,
+            ),
+            // zero-MAC layer: the panels GEMM handles any shape
+            None => (Pick::Panels, cost::DecisionReason::Fallback),
+        },
     };
-    (k::DenseAlgo::Gemm { panels, tail }, scratch_len, label)
+    let (algo, scratch_len, label) = if matches!(pick, Pick::Generic) {
+        summary.weight_elems += kernel.len();
+        (k::DenseAlgo::Generic { kernel }, 0, "generic")
+    } else {
+        let panels = simd::pack_dense_panels(&kernel, in_dim, units);
+        summary.weight_elems += panels.len();
+        summary.gemm_dense += 1;
+        let (tail, scratch_len, label) = match pick {
+            Pick::Rotated => {
+                summary.rotated_dense += 1;
+                let diag = simd::rotate_diagonals(&transpose(&kernel, in_dim), in_dim);
+                summary.weight_elems += diag.len();
+                (k::DenseTail::Rotated { diag }, 2 * in_dim, "gemm+rotated")
+            }
+            Pick::Broadcast => {
+                summary.broadcast_dense += 1;
+                let w = transpose(&kernel, in_dim);
+                summary.weight_elems += w.len();
+                (k::DenseTail::Broadcast { w }, 0, "gemm+broadcast")
+            }
+            _ => {
+                summary.panel_tail_dense += 1;
+                (k::DenseTail::Panels, 0, "gemm+panels")
+            }
+        };
+        (k::DenseAlgo::Gemm { panels, tail }, scratch_len, label)
+    };
+    let predicted =
+        candidates.iter().find(|c| c.scheme == label).map_or(0.0, |c| c.cycles);
+    summary.report.decisions.push(cost::LayerDecision {
+        layer: layer.to_string(),
+        op: "dense",
+        candidates,
+        chosen: label,
+        predicted_cycles: predicted,
+        reason,
+        fused_pool: false,
+        elided: false,
+    });
+    (algo, scratch_len, label)
 }
 
 /// Transpose a `[n, out]`-layout Dense kernel (`y[o] = Σ_i x[i] K[i][o]`)
@@ -1491,6 +1704,58 @@ mod tests {
         assert_eq!(s.fused_maxpool, 1, "{s}");
         assert_eq!(s.im2col_conv, 1, "{s}");
         assert!(s.steps.iter().any(|l| l.contains("conv2d+maxpool")), "{s}");
+    }
+
+    #[test]
+    fn auto_schemes_come_from_the_cost_model() {
+        use crate::compiler::cost::DecisionReason;
+
+        let spec = tiny_cnn(71);
+        let p = Program::lower(&spec, CompileOptions::default()).unwrap();
+        let r = &p.summary().report;
+        assert_eq!(r.model, spec.name);
+        assert_eq!(r.batch_hint, 1);
+        assert!(r.predicted_total_cycles() > 0.0, "{r}");
+        assert_eq!(r.arena_bytes, p.summary().arena_item_elems * 4, "{r}");
+        // every emitted conv/dense decision is a genuine argmin over the
+        // candidates matching its fusion flag
+        for d in r.decisions.iter().filter(|d| !d.elided) {
+            assert_eq!(d.reason, DecisionReason::CostModel, "{d:?}");
+            let best = d
+                .candidates
+                .iter()
+                .filter(|c| c.fused_pool == d.fused_pool)
+                .fold(f64::INFINITY, |m, c| m.min(c.cycles));
+            assert_eq!(d.predicted_cycles, best, "{d:?}");
+        }
+        let conv = r.decisions.iter().find(|d| d.op == "conv2d").unwrap();
+        assert_eq!(conv.chosen, "im2col", "{conv:?}");
+        assert!(conv.fused_pool, "{conv:?}");
+        // fused candidates were priced alongside unfused ones
+        assert!(conv.candidates.iter().any(|c| c.fused_pool));
+        assert!(conv.candidates.iter().any(|c| !c.fused_pool));
+        let dense = r.decisions.iter().find(|d| d.op == "dense").unwrap();
+        assert_eq!(dense.chosen, "gemm+panels", "{dense:?}");
+        // the merged-away maxpool shows up as an elided entry
+        assert!(r.decisions.iter().any(|d| d.elided && d.fused_pool), "{r}");
+        let table = r.render_table();
+        assert!(table.contains("im2col") && table.contains("cost-model"), "{table}");
+
+        // forcing schemes flips the recorded reason (bit-exact included)
+        let be = Program::lower(&spec, CompileOptions::bit_exact()).unwrap();
+        for d in be.summary().report.decisions.iter().filter(|d| !d.elided) {
+            assert_eq!(d.chosen, "generic", "{d:?}");
+            assert_eq!(d.reason, DecisionReason::Forced, "{d:?}");
+        }
+
+        // a full-tile batch hint is recorded and keeps choices on the grid
+        let b8 = Program::lower(
+            &spec,
+            CompileOptions { batch_hint: 8, ..CompileOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(b8.summary().report.batch_hint, 8);
+        assert_eq!(b8.summary().gemm_dense, 1, "{}", b8.summary());
     }
 
     #[test]

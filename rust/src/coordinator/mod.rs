@@ -1,8 +1,13 @@
 //! L3 serving coordinator: model registry + compile cache front (via the
 //! executor thread), dynamic batcher, metrics, TCP front end + config.
+#[allow(missing_docs)]
 pub mod batcher;
+#[allow(missing_docs)]
 pub mod config;
+#[allow(missing_docs)]
 pub mod metrics;
+#[allow(missing_docs)]
 pub mod protocol;
 pub mod server;
+#[allow(missing_docs)]
 pub mod tcp;

@@ -94,13 +94,21 @@ struct Registration {
     shared: Option<Arc<dyn SharedInfer>>,
 }
 
+/// What a client learns from registering a model: the serving contract
+/// (buckets, item shape) plus compile provenance.
 #[derive(Debug, Clone)]
 pub struct RegisterInfo {
+    /// Registered model name.
     pub name: String,
+    /// Batch sizes the batcher packs to (ascending).
     pub buckets: Vec<usize>,
+    /// Per-item input shape (no batch dim) `infer` expects.
     pub input_shape: Vec<usize>,
+    /// Engine build/lowering time for this registration, milliseconds.
     pub compile_ms: f64,
+    /// True when the engine was already built (re-registration).
     pub cache_hit: bool,
+    /// Model parameter count.
     pub params: usize,
     /// Registry name of the engine serving this model.
     pub engine: String,
@@ -112,6 +120,8 @@ pub struct RegisterInfo {
 /// Coordinator configuration.
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
+    /// Longest a request may wait for its batch to fill before the batcher
+    /// flushes a partial bucket (the dynamic-batching latency bound).
     pub max_wait: Duration,
     /// Bounded queue per model (backpressure: senders block).
     pub queue_depth: usize,
@@ -141,6 +151,10 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// The serving coordinator: model registry, batcher threads, and the two
+/// execution lanes (per-model worker pools over a shared lowered artifact,
+/// and the pinned executor thread for non-`Send` engines). See the module
+/// docs for the request path.
 pub struct Coordinator {
     exec_tx: Sender<ExecMsg>,
     exec_thread: Mutex<Option<JoinHandle<()>>>,
@@ -332,10 +346,12 @@ impl Coordinator {
         self.queues.lock().unwrap().keys().cloned().collect()
     }
 
+    /// Live metrics handle for a registered model, if any.
     pub fn metrics(&self, name: &str) -> Option<Arc<ModelMetrics>> {
         self.queues.lock().unwrap().get(name).map(|(_, m, _)| m.clone())
     }
 
+    /// Render every registered model's metrics block (the `serve` report).
     pub fn render_metrics(&self) -> String {
         let queues = self.queues.lock().unwrap();
         let mut out = String::new();
@@ -388,7 +404,9 @@ impl Drop for Coordinator {
 #[derive(Clone)]
 pub struct ModelClient {
     tx: SyncSender<Request>,
+    /// Live serving metrics for this model (shared with the batcher).
     pub metrics: Arc<ModelMetrics>,
+    /// The registration contract: buckets, item shape, compile provenance.
     pub info: RegisterInfo,
 }
 

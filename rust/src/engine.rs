@@ -40,6 +40,7 @@ use crate::runtime::artifact::Manifest;
 pub struct WorkerScratch(Box<dyn Any + Send>);
 
 impl WorkerScratch {
+    /// Box a concrete scratch value (the artifact's own state type).
     pub fn new<T: Any + Send>(state: T) -> WorkerScratch {
         WorkerScratch(Box::new(state))
     }
@@ -79,6 +80,21 @@ pub trait SharedInfer: Send + Sync {
 /// size; the compiled engine only accepts batch sizes it was specialized
 /// for (see [`Engine::batch_buckets`]) — callers batch/pad accordingly,
 /// exactly like the paper's fixed-shape generated code.
+///
+/// ```
+/// use compiled_nn::engine::{build_engine_from_spec, EngineKind, EngineOptions};
+/// use compiled_nn::model::builder::tiny_cnn;
+/// use compiled_nn::nn::tensor::Tensor;
+///
+/// let spec = tiny_cnn(41);
+/// let mut engine =
+///     build_engine_from_spec(EngineKind::Optimized, &spec, &EngineOptions::default()).unwrap();
+/// let out = engine.infer(&Tensor::filled(&[2, 8, 8, 3], 0.25)).unwrap();
+/// assert_eq!(out[0].shape(), &[2, 10]);
+/// // the optimized engine exposes its lowering decisions
+/// let summary = engine.plan_summary().expect("optimized engines lower a program");
+/// assert!(summary.report.predicted_total_cycles() > 0.0);
+/// ```
 pub trait Engine {
     /// Registry name of this engine (`naive` / `optimized` / `compiled`).
     fn name(&self) -> &str;
@@ -144,10 +160,12 @@ impl EngineKind {
     pub const ALL: [EngineKind; 3] =
         [EngineKind::Compiled, EngineKind::Optimized, EngineKind::Naive];
 
+    /// [`EngineKind::ALL`] as a slice (registry iteration).
     pub fn all() -> &'static [EngineKind] {
         &Self::ALL
     }
 
+    /// Parse a CLI/registry name (`naive` / `optimized` / `compiled`).
     pub fn parse(s: &str) -> Result<EngineKind> {
         Ok(match s {
             "naive" => EngineKind::Naive,
@@ -159,6 +177,7 @@ impl EngineKind {
         })
     }
 
+    /// The kind's registry name (inverse of [`EngineKind::parse`]).
     pub fn as_str(self) -> &'static str {
         match self {
             EngineKind::Naive => "naive",

@@ -5,6 +5,7 @@
 //! compiled-nn infer --model c_bh [--engine compiled|naive|optimized] [--batch N]
 //! compiled-nn compare --model c_bh        # all engines vs the golden oracle
 //! compiled-nn inspect --model c_bh        # §3.3 cost table + §3.2 memory plan + §3.5 folding
+//! compiled-nn explain [--model c_bh] [--batch N]   # cost-model lowering report (builtin demo net without --model)
 //! compiled-nn precision                   # §3.4 approximation error table
 //! compiled-nn table1 [--iters N]          # quick Table-1 analog (benches do it properly)
 //! compiled-nn serve --model c_bh --seconds 5 [--offered RPS] [--engine KIND] [--workers N]
@@ -82,6 +83,7 @@ fn run() -> Result<()> {
         "infer" => cmd_infer(&args),
         "compare" => cmd_compare(&args),
         "inspect" => cmd_inspect(&args),
+        "explain" => cmd_explain(&args),
         "precision" => cmd_precision(),
         "table1" => cmd_table1(&args),
         "serve" => cmd_serve(&args),
@@ -95,7 +97,7 @@ fn run() -> Result<()> {
 }
 
 const HELP: &str = "compiled-nn — JIT-compiled NN inference (paper reproduction)
-commands: compile | infer | compare | inspect | precision | table1 | serve
+commands: compile | infer | compare | inspect | explain | precision | table1 | serve
 engines (--engine): compiled (needs the `pjrt` build feature) | optimized | naive
 see the module docs in rust/src/main.rs for flags";
 
@@ -248,6 +250,33 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     )?;
     println!("lowered program (folded spec → plan → lower):");
     print!("{}", program.summary());
+    Ok(())
+}
+
+/// `explain [--model NAME] [--batch N]`: lower under the default
+/// (cost-model `Auto`) options and print the per-layer lowering report —
+/// every candidate the estimator priced, the chosen scheme, and why.
+/// Without `--model` it explains the builtin demo net, so the command
+/// works even before any artifacts are baked.
+fn cmd_explain(args: &Args) -> Result<()> {
+    use compiled_nn::compiler::program::{CompileOptions, Program};
+
+    let batch = args.usize_or("batch", 1)?.max(1);
+    let spec = match args.get("model") {
+        Some(name) => {
+            let manifest = Manifest::load_default()?;
+            load_model(&manifest.models_dir, name)?
+        }
+        None => {
+            println!("(no --model given: explaining the builtin tiny_cnn demo net)");
+            compiled_nn::model::builder::tiny_cnn(7)
+        }
+    };
+    let program = Program::lower(
+        &spec,
+        CompileOptions { batch_hint: batch, ..Default::default() },
+    )?;
+    print!("{}", program.summary().report.render_table());
     Ok(())
 }
 

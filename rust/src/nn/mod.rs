@@ -1,6 +1,9 @@
 //! Neural-network substrate: tensors, exact layers, the naive interpreter,
 //! and the 4-wide §3.3 matvec kernels.
+#[allow(missing_docs)]
 pub mod interp;
+#[allow(missing_docs)]
 pub mod layers;
 pub mod simd;
+#[allow(missing_docs)]
 pub mod tensor;

@@ -30,7 +30,7 @@ fn run_ok(args: &[&str]) -> String {
 #[test]
 fn help_lists_commands() {
     let out = run_ok(&["help"]);
-    for c in ["compile", "infer", "compare", "inspect", "precision", "table1", "serve"] {
+    for c in ["compile", "infer", "compare", "inspect", "explain", "precision", "table1", "serve"] {
         assert!(out.contains(c), "help missing `{c}`:\n{out}");
     }
 }
@@ -61,6 +61,30 @@ fn inspect_reports_all_three_analyses() {
     assert!(out.contains("total MACs"), "{out}");
     // c_bh has 2 foldable BNs
     assert!(out.contains("2 batchnorm layers → 0"), "{out}");
+}
+
+#[test]
+fn explain_renders_the_lowering_report_without_artifacts() {
+    // no --model → builtin demo net, so this runs on artifact-less CI
+    let out = run_ok(&["explain"]);
+    assert!(out.contains("lowering report"), "{out}");
+    assert!(out.contains("cost-model"), "{out}");
+    assert!(out.contains("im2col"), "{out}");
+    assert!(out.contains("predicted total"), "{out}");
+
+    // the batch hint is recorded in the report header
+    let out = run_ok(&["explain", "--batch", "8"]);
+    assert!(out.contains("batch hint 8"), "{out}");
+}
+
+#[test]
+fn explain_runs_on_manifest_models() {
+    if !have_artifacts() {
+        return;
+    }
+    let out = run_ok(&["explain", "--model", "c_bh"]);
+    assert!(out.contains("lowering report"), "{out}");
+    assert!(out.contains("predicted total"), "{out}");
 }
 
 #[test]

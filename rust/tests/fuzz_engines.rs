@@ -45,6 +45,7 @@ fn combos() -> Vec<(&'static str, CompileOptions)> {
         ),
         ("no-reuse", CompileOptions { reuse_memory: false, ..base }),
         ("no-fold", CompileOptions { fold_bn: false, ..base }),
+        ("dense-rotated", CompileOptions { dense: DenseScheme::Rotated, ..base }),
         ("dense-broadcast", CompileOptions { dense: DenseScheme::Broadcast, ..base }),
         ("dense-generic", CompileOptions { dense: DenseScheme::Generic, ..base }),
     ]
