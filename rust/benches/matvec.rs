@@ -20,7 +20,8 @@ use compiled_nn::bench::{bench, bench_budget, black_box, BenchResult};
 use compiled_nn::compiler::cost::batch_elems;
 use compiled_nn::compiler::kernels::{dense_run, DenseAlgo, DenseTail, Epilogue};
 use compiled_nn::nn::simd::{
-    matvec_broadcast, matvec_naive, matvec_rotated, pack_dense_panels, rotate_diagonals,
+    matvec_broadcast, matvec_naive, matvec_rotated, pack_dense_panels,
+    pack_dense_panels_any, rotate_diagonals,
 };
 use compiled_nn::util::json::Json;
 use compiled_nn::util::rng::SplitMix64;
@@ -116,7 +117,8 @@ fn dense_grid() -> anyhow::Result<()> {
         for &batch in &[1usize, 4, 8, 32] {
             let x = rng.uniform_vec(batch * in_dim);
             let mut out = vec![0.0f32; batch * out_dim];
-            let algo = DenseAlgo::Gemm { panels: panels.clone(), tail: DenseTail::Panels };
+            let algo =
+                DenseAlgo::Gemm { panels: panels.clone(), lanes: 4, tail: DenseTail::Panels };
 
             // per-item matvec: the pre-GEMM serving path — one full pass
             // over the packed weights per batch element
@@ -130,6 +132,7 @@ fn dense_grid() -> anyhow::Result<()> {
                         Some(&bias),
                         Epilogue::NONE,
                         &mut [],
+                        1,
                         &mut out[n * out_dim..(n + 1) * out_dim],
                     );
                 }
@@ -171,6 +174,7 @@ fn dense_grid() -> anyhow::Result<()> {
                     Some(&bias),
                     Epilogue::NONE,
                     &mut [],
+                    1,
                     &mut out,
                 );
                 black_box(&out);
@@ -188,6 +192,7 @@ fn dense_grid() -> anyhow::Result<()> {
                 Some(&bias),
                 Epilogue::NONE,
                 &mut [],
+                1,
                 &mut check,
             );
             for n in 0..batch {
@@ -199,6 +204,7 @@ fn dense_grid() -> anyhow::Result<()> {
                     Some(&bias),
                     Epilogue::NONE,
                     &mut [],
+                    1,
                     &mut out[n * out_dim..(n + 1) * out_dim],
                 );
             }
@@ -226,6 +232,46 @@ fn dense_grid() -> anyhow::Result<()> {
          the per-item matvec re-streams the whole matrix per element, the \
          MR×NR tile streams each panel once per 4 items)"
     );
+
+    // Lane-width sweep (PR 7): the same 512×128 GEMM with panels packed at
+    // 4, 8 and 16 lanes — all widths are portable, so every host reports
+    // the keyed speedups (autovectorization realizes the wide gain on
+    // AVX2/AVX-512 hardware).
+    println!("\n== lane-width sweep: 512x128 GEMM, batch 8");
+    let (in_dim, out_dim, batch) = (512usize, 128usize, 8usize);
+    let kernel = rng.uniform_vec(in_dim * out_dim);
+    let bias = rng.uniform_vec(out_dim);
+    let x = rng.uniform_vec(batch * in_dim);
+    let mut out = vec![0.0f32; batch * out_dim];
+    let mut ns_of: BTreeMap<usize, f64> = BTreeMap::new();
+    for lanes in [4usize, 8, 16] {
+        let algo = DenseAlgo::Gemm {
+            panels: pack_dense_panels_any(&kernel, in_dim, out_dim, lanes),
+            lanes,
+            tail: DenseTail::Panels,
+        };
+        let r = bench_budget(&format!("512x128/b{batch}/gemm-w{lanes}"), budget, 20, || {
+            dense_run(
+                &x,
+                (batch, in_dim),
+                &algo,
+                out_dim,
+                Some(&bias),
+                Epilogue::NONE,
+                &mut [],
+                1,
+                &mut out,
+            );
+            black_box(&out);
+        });
+        let ns = per_item_ns(&r, batch);
+        println!("  w{lanes}: {ns:.1} ns/item");
+        cells.push(Cell { key: format!("512x128_gemm_w{lanes}_b{batch}"), ns_per_item: ns });
+        ns_of.insert(lanes, ns);
+    }
+    speedups.insert("speedup_w8_vs_w4_512x128".to_string(), ns_of[&4] / ns_of[&8]);
+    speedups.insert("speedup_w16_vs_w4_512x128".to_string(), ns_of[&4] / ns_of[&16]);
+
     write_json(&cells, &speedups)?;
     Ok(())
 }

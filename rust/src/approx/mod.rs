@@ -40,37 +40,78 @@ pub fn fast_sigmoid(x: f32) -> f32 {
     (fast_tanh(0.5 * x) + 1.0) * 0.5
 }
 
-/// 4-lane [`fast_tanh`]: the Eq. 5 polynomials evaluated lane-wise over
-/// one SSE-sized group — the vector form the §3.4 store-loop epilogues
-/// use. Every lane performs exactly the scalar operation sequence, so the
-/// result is **bit-identical** to [`fast_tanh`] per lane (asserted by
+/// Width-generic lane form of [`fast_tanh`]: the Eq. 5 polynomials
+/// evaluated lane-wise over one `W`-sized group — the vector form the §3.4
+/// store-loop epilogues use, instantiated at every microkernel lane width
+/// (`W ∈ {1, 4, 8, 16}`, see [`crate::nn::simd::LANE_WIDTHS`]). Every lane
+/// performs exactly the scalar operation sequence through the same
+/// separate num/den staging, so the result is **bit-identical** to
+/// [`fast_tanh`] per lane at every width (asserted by
 /// `lane_functions_bit_identical_to_scalar_over_working_ranges`).
 #[inline(always)]
-pub fn fast_tanh4(v: &mut [f32; 4]) {
-    let mut num = [0.0f32; 4];
-    let mut den = [0.0f32; 4];
-    for l in 0..4 {
+pub fn fast_tanh_w<const W: usize>(v: &mut [f32; W]) {
+    let mut num = [0.0f32; W];
+    let mut den = [0.0f32; W];
+    for l in 0..W {
         let x = v[l];
         let x2 = x * x;
         num[l] = (((36.0 * x2 + 6930.0) * x2 + 270270.0) * x2 + 2027025.0) * x;
         den[l] = (((x2 + 630.0) * x2 + 51975.0) * x2 + 945945.0) * x2 + 2027025.0;
     }
-    for l in 0..4 {
+    for l in 0..W {
         v[l] = num[l] / den[l];
     }
+}
+
+/// Width-generic lane form of [`fast_sigmoid`] (Eq. 4 over
+/// [`fast_tanh_w`]); bit-identical to the scalar form per lane at every
+/// width.
+#[inline(always)]
+pub fn fast_sigmoid_w<const W: usize>(v: &mut [f32; W]) {
+    for x in v.iter_mut() {
+        *x *= 0.5;
+    }
+    fast_tanh_w::<W>(v);
+    for x in v.iter_mut() {
+        *x = (*x + 1.0) * 0.5;
+    }
+}
+
+/// 4-lane [`fast_tanh`] — the SSE-shaped instantiation of [`fast_tanh_w`].
+#[inline(always)]
+pub fn fast_tanh4(v: &mut [f32; 4]) {
+    fast_tanh_w::<4>(v)
+}
+
+/// 8-lane (AVX2-shaped) [`fast_tanh_w`] instantiation.
+#[inline(always)]
+pub fn fast_tanh8(v: &mut [f32; 8]) {
+    fast_tanh_w::<8>(v)
+}
+
+/// 16-lane (AVX-512-shaped) [`fast_tanh_w`] instantiation.
+#[inline(always)]
+pub fn fast_tanh16(v: &mut [f32; 16]) {
+    fast_tanh_w::<16>(v)
 }
 
 /// 4-lane [`fast_sigmoid`] (Eq. 4 over [`fast_tanh4`]); bit-identical to
 /// the scalar form per lane.
 #[inline(always)]
 pub fn fast_sigmoid4(v: &mut [f32; 4]) {
-    for x in v.iter_mut() {
-        *x *= 0.5;
-    }
-    fast_tanh4(v);
-    for x in v.iter_mut() {
-        *x = (*x + 1.0) * 0.5;
-    }
+    fast_sigmoid_w::<4>(v)
+}
+
+/// 8-lane (AVX2-shaped) [`fast_sigmoid_w`] instantiation.
+#[inline(always)]
+pub fn fast_sigmoid8(v: &mut [f32; 8]) {
+    fast_sigmoid_w::<8>(v)
+}
+
+/// 16-lane (AVX-512-shaped) [`fast_sigmoid_w`] instantiation.
+#[inline(always)]
+pub fn fast_sigmoid16(v: &mut [f32; 16]) {
+    fast_sigmoid_w::<16>(v)
 }
 
 /// Two-pass fast softmax over a row (max-shifted; shift cancels in the
@@ -161,34 +202,41 @@ mod tests {
         assert!((fast_exp(1.0) - core::f32::consts::E).abs() / core::f32::consts::E < 0.04);
     }
 
-    /// §3.4 satellite property: the 4-lane epilogue forms are bit-identical
-    /// to the scalar functions — swept with the same linspace the error
-    /// tables use, in 4-lane groups over each approximation's working range.
+    /// §3.4 satellite property: every lane-form width (scalar 1, SSE 4,
+    /// AVX2 8, AVX-512 16) is bit-identical to the scalar functions —
+    /// swept with the same linspace the error tables use, in W-lane groups
+    /// over each approximation's working range.
     #[test]
     fn lane_functions_bit_identical_to_scalar_over_working_ranges() {
-        fn sweep(lo: f32, hi: f32, f4: fn(&mut [f32; 4]), f1: fn(f32) -> f32) {
+        fn sweep<const W: usize>(lo: f32, hi: f32, fw: fn(&mut [f32; W]), f1: fn(f32) -> f32) {
             let samples = 4000usize;
-            for g in (0..samples).step_by(4) {
-                let mut lanes = [0.0f32; 4];
-                for l in 0..4 {
-                    let i = g + l;
+            for g in (0..samples).step_by(W) {
+                let mut lanes = [0.0f32; W];
+                for l in 0..W {
+                    let i = (g + l).min(samples - 1);
                     lanes[l] = lo + (hi - lo) * i as f32 / (samples - 1) as f32;
                 }
                 let want = lanes.map(f1);
-                f4(&mut lanes);
-                for l in 0..4 {
+                fw(&mut lanes);
+                for l in 0..W {
                     assert_eq!(
                         lanes[l].to_bits(),
                         want[l].to_bits(),
-                        "lane {l}: {} vs {}",
+                        "W={W} lane {l}: {} vs {}",
                         lanes[l],
                         want[l]
                     );
                 }
             }
         }
-        sweep(-4.0, 4.0, fast_tanh4, fast_tanh);
-        sweep(-8.0, 8.0, fast_sigmoid4, fast_sigmoid);
+        sweep::<1>(-4.0, 4.0, fast_tanh_w::<1>, fast_tanh);
+        sweep::<4>(-4.0, 4.0, fast_tanh4, fast_tanh);
+        sweep::<8>(-4.0, 4.0, fast_tanh8, fast_tanh);
+        sweep::<16>(-4.0, 4.0, fast_tanh16, fast_tanh);
+        sweep::<1>(-8.0, 8.0, fast_sigmoid_w::<1>, fast_sigmoid);
+        sweep::<4>(-8.0, 8.0, fast_sigmoid4, fast_sigmoid);
+        sweep::<8>(-8.0, 8.0, fast_sigmoid8, fast_sigmoid);
+        sweep::<16>(-8.0, 8.0, fast_sigmoid16, fast_sigmoid);
     }
 
     #[test]

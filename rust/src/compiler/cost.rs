@@ -159,6 +159,10 @@ pub struct CandidateCost {
     /// Scheme label, matching the plan-summary naming (`"im2col"`,
     /// `"gemm+rotated"`, …).
     pub scheme: &'static str,
+    /// SIMD lane width this candidate's blocked kernels run at (1 for the
+    /// scalar schemes). Since PR 7 every blocked scheme is priced at every
+    /// width the host dispatch allows, so the argmin decides the width too.
+    pub lanes: usize,
     /// Predicted cycles per inference item for this layer under the scheme.
     pub cycles: f64,
     /// Bytes of (possibly packed/padded) weights the scheme materializes.
@@ -202,6 +206,10 @@ pub struct LayerDecision {
     pub candidates: Vec<CandidateCost>,
     /// Label of the scheme lowering actually emitted.
     pub chosen: &'static str,
+    /// SIMD lane width the emitted kernel runs at (1 = scalar).
+    pub lane_width: usize,
+    /// Intra-op tasks the kernel was planned with (1 = sequential).
+    pub parallel_tasks: usize,
     /// Predicted cycles of the chosen scheme (0 when unpriced).
     pub predicted_cycles: f64,
     /// How the choice was made.
@@ -250,15 +258,21 @@ impl LoweringReport {
                 .iter()
                 .map(|c| {
                     let fused = if c.fused_pool { "+pool" } else { "" };
-                    format!("{}{}={:.0}", c.scheme, fused, c.cycles)
+                    format!("{}/w{}{}={:.0}", c.scheme, c.lanes, fused, c.cycles)
                 })
                 .collect::<Vec<_>>()
                 .join(" ");
-            let chosen = if d.fused_pool {
+            let mut chosen = if d.fused_pool {
                 format!("{}+pool", d.chosen)
             } else {
                 d.chosen.to_string()
             };
+            if !d.elided {
+                chosen.push_str(&format!(" w{}", d.lane_width));
+                if d.parallel_tasks > 1 {
+                    chosen.push_str(&format!(" x{}", d.parallel_tasks));
+                }
+            }
             s.push_str(&format!(
                 "{:<16} {:<12} {:<16} {:<10} {:>14.0}  {}\n",
                 d.layer,
@@ -297,6 +311,11 @@ impl LoweringReport {
                 m.insert("layer".into(), Json::Str(d.layer.clone()));
                 m.insert("op".into(), Json::Str(d.op.into()));
                 m.insert("chosen".into(), Json::Str(d.chosen.into()));
+                m.insert("lane_width".into(), Json::Num(d.lane_width as f64));
+                m.insert(
+                    "parallel_tasks".into(),
+                    Json::Num(d.parallel_tasks as f64),
+                );
                 m.insert("predicted_cycles".into(), Json::Num(d.predicted_cycles));
                 m.insert("reason".into(), Json::Str(d.reason.label().into()));
                 m.insert("fused_pool".into(), Json::Bool(d.fused_pool));
@@ -307,6 +326,7 @@ impl LoweringReport {
                     .map(|c| {
                         let mut cm = std::collections::BTreeMap::new();
                         cm.insert("scheme".into(), Json::Str(c.scheme.into()));
+                        cm.insert("lanes".into(), Json::Num(c.lanes as f64));
                         cm.insert("cycles".into(), Json::Num(c.cycles));
                         cm.insert(
                             "weight_bytes".into(),
@@ -331,23 +351,69 @@ impl fmt::Display for LoweringReport {
     }
 }
 
-/// Output-column padding factor of the packed 4-wide panels: a panel pads
-/// `units` up to the next multiple of [`LANES`], and the padded lanes cost
-/// real multiplies.
-fn panel_waste(units: usize) -> f64 {
+/// Output-column padding factor of the packed `lanes`-wide panels: a panel
+/// pads `units` up to the next multiple of the lane width, and the padded
+/// lanes cost real multiplies. Wider panels waste more on small channel
+/// counts — the lever that lets the argmin keep 4-lane kernels on
+/// tail-dominated shapes even when the host has AVX-512.
+fn panel_waste(units: usize, lanes: usize) -> f64 {
     if units == 0 {
         return 1.0;
     }
-    (LANES * units.div_ceil(LANES)) as f64 / units as f64
+    let lanes = lanes.max(1);
+    (lanes * units.div_ceil(lanes)) as f64 / units as f64
+}
+
+/// Frequency/issue ramp of wider vector units, relative to the 4-lane
+/// baseline: 256-bit ops retire slightly slower per lane-group on the
+/// modelled cores and 512-bit ops pay license-based downclock. Applied
+/// multiplicatively on top of the ideal `4/lanes` speedup.
+fn lane_ramp(lanes: usize) -> f64 {
+    match lanes {
+        16 => 1.3,
+        8 => 1.1,
+        _ => 1.0,
+    }
+}
+
+/// Per-MAC cycle constant of the blocked kernels at a given lane width:
+/// the calibrated 4-lane constant scaled by the ideal `4/lanes` factor and
+/// the [`lane_ramp`] surcharge. Width 1 prices the unvectorized reference
+/// instantiation at the scalar constant.
+pub fn simd_mac_cycles_w(lanes: usize) -> f64 {
+    if lanes <= 1 {
+        return silvermont::scalar_mac_cycles();
+    }
+    silvermont::simd_mac_cycles() * (4.0 / lanes as f64) * lane_ramp(lanes)
+}
+
+/// The blocked lane widths the estimator prices under a dispatch ceiling.
+/// `max_lanes == 1` (forced scalar) restricts the blocked kernels to their
+/// width-1 reference instantiation; otherwise every hardware width up to
+/// the ceiling is a candidate, narrow first (strict-`<` argmin ties then
+/// keep the narrower, lower-waste width).
+fn blocked_widths(max_lanes: usize) -> &'static [usize] {
+    match max_lanes {
+        0 | 1 => &[1],
+        2..=7 => &[4],
+        8..=15 => &[4, 8],
+        _ => &[4, 8, 16],
+    }
 }
 
 /// Price every legal conv scheme for a layer. `fusible_pool` is true when
 /// a downstream max-pool can legally fuse into this conv's stores; each
 /// scheme is then priced both fused (no separate pool pass) and unfused
-/// (a ~1 cycle/element pool sweep on top). Returns an empty vec when the
-/// layer does no MAC work (the caller falls back to the geometry rule —
-/// see `ConvScheme::Auto`).
-pub fn conv_candidates(d: &ConvDims, fusible_pool: bool) -> Vec<CandidateCost> {
+/// (a ~1 cycle/element pool sweep on top). Every blocked scheme is priced
+/// at each lane width allowed by `max_lanes` (see [`blocked_widths`]) —
+/// the argmin therefore decides scheme *and* width. Returns an empty vec
+/// when the layer does no MAC work (the caller falls back to the geometry
+/// rule — see `ConvScheme::Auto`).
+pub fn conv_candidates(
+    d: &ConvDims,
+    fusible_pool: bool,
+    max_lanes: usize,
+) -> Vec<CandidateCost> {
     let taps = d.kh * d.kw * d.in_ch;
     let out_pixels = d.out_h * d.out_w;
     let macs = (out_pixels * d.out_ch * taps) as f64;
@@ -355,9 +421,6 @@ pub fn conv_candidates(d: &ConvDims, fusible_pool: bool) -> Vec<CandidateCost> {
         return Vec::new();
     }
     let out_elems = (out_pixels * d.out_ch) as f64;
-    let waste = panel_waste(d.out_ch);
-    // packed panels pad out_ch to LANES; generic keeps the raw kernel
-    let packed_bytes = taps * LANES * d.out_ch.div_ceil(LANES) * 4;
     let raw_bytes = taps * d.out_ch * 4;
     // SAME with a multi-tap kernel pays per-row bounds handling in the
     // inner loop; VALID and 1×1 kernels never leave bounds
@@ -366,27 +429,34 @@ pub fn conv_candidates(d: &ConvDims, fusible_pool: bool) -> Vec<CandidateCost> {
     // im2col gathers each input patch element once per output pixel, then
     // all out_ch MACs reuse the gathered row → +1 load-cycle / out_ch
     let gather_pen = 1.0 / d.out_ch as f64;
-    let simd = silvermont::simd_mac_cycles();
-    let base: [(&'static str, f64, usize); 3] = [
-        ("im2col", macs * waste * (simd + gather_pen), packed_bytes),
-        ("direct", macs * waste * (simd + direct_pen), packed_bytes),
-        ("generic", macs * silvermont::scalar_mac_cycles(), raw_bytes),
-    ];
+    let mut base: Vec<(&'static str, f64, usize, usize)> = Vec::new();
+    for scheme in ["im2col", "direct"] {
+        let pen = if scheme == "im2col" { gather_pen } else { direct_pen };
+        for &wl in blocked_widths(max_lanes) {
+            let waste = panel_waste(d.out_ch, wl);
+            // packed panels pad out_ch to the lane width; generic keeps
+            // the raw kernel
+            let packed_bytes = taps * wl * d.out_ch.div_ceil(wl) * 4;
+            base.push((scheme, macs * waste * (simd_mac_cycles_w(wl) + pen), packed_bytes, wl));
+        }
+    }
+    base.push(("generic", macs * silvermont::scalar_mac_cycles(), raw_bytes, 1));
     let mut out = Vec::new();
-    for (scheme, cycles, weight_bytes) in base {
+    for (scheme, cycles, weight_bytes, lanes) in base {
         if fusible_pool {
             // fused: the pool max happens in the conv's store loop — no
             // separate pass. Unfused: one ~1-cycle read/compare sweep over
             // every conv output element.
-            out.push(CandidateCost { scheme, cycles, weight_bytes, fused_pool: true });
+            out.push(CandidateCost { scheme, lanes, cycles, weight_bytes, fused_pool: true });
             out.push(CandidateCost {
                 scheme,
+                lanes,
                 cycles: cycles + out_elems,
                 weight_bytes,
                 fused_pool: false,
             });
         } else {
-            out.push(CandidateCost { scheme, cycles, weight_bytes, fused_pool: false });
+            out.push(CandidateCost { scheme, lanes, cycles, weight_bytes, fused_pool: false });
         }
     }
     out
@@ -399,12 +469,16 @@ pub fn conv_candidates(d: &ConvDims, fusible_pool: bool) -> Vec<CandidateCost> {
 /// rotated (Eq. 3) and broadcast (Eq. 2) tails are only legal on square
 /// layers with `units % 4 == 0` (rotation additionally bounded by the
 /// stack-staging limit the kernels enforce); `rotated_max` passes that
-/// bound in (callers use `nn::simd::ROTATED_STACK_MAX`). Returns an empty
-/// vec when the layer does no MAC work.
+/// bound in (callers use `nn::simd::ROTATED_STACK_MAX`). The tile part of
+/// every scheme is priced at each lane width allowed by `max_lanes`; the
+/// rotated/broadcast tail matvecs are fixed 4-lane algorithms and keep
+/// their calibrated constants. Returns an empty vec when the layer does no
+/// MAC work.
 pub fn dense_candidates(
     d: &DenseDims,
     batch_hint: usize,
     rotated_max: usize,
+    max_lanes: usize,
 ) -> Vec<CandidateCost> {
     let macs = (d.in_dim * d.units) as f64;
     if macs == 0.0 {
@@ -413,44 +487,54 @@ pub fn dense_candidates(
     let batch = batch_hint.max(1);
     let tiles = (batch / LANES) * LANES;
     let tail = batch - tiles;
-    let waste = panel_waste(d.units);
-    let simd = silvermont::simd_mac_cycles();
-    // per-item cycles when the item lands in a full GEMM tile
-    let gemm_item = macs * waste * simd;
-    let packed_bytes = d.in_dim * LANES * d.units.div_ceil(LANES) * 4;
     let raw_bytes = d.in_dim * d.units * 4;
     let square = d.in_dim == d.units && d.units % LANES == 0;
     let rotatable = square && d.units <= rotated_max;
     // average tile + tail items under the batch hint
-    let mix = |tail_item: f64| -> f64 {
+    let mix = |gemm_item: f64, tail_item: f64| -> f64 {
         (tiles as f64 * gemm_item + tail as f64 * tail_item) / batch as f64
     };
+    let widths = blocked_widths(max_lanes);
+    // per-item cycles when the item lands in a full GEMM tile, per width
+    let gemm_item = |wl: usize| macs * panel_waste(d.units, wl) * simd_mac_cycles_w(wl);
+    let packed_bytes = |wl: usize| d.in_dim * wl * d.units.div_ceil(wl) * 4;
     let mut out = Vec::new();
     if rotatable {
+        for &wl in widths {
+            out.push(CandidateCost {
+                scheme: "gemm+rotated",
+                lanes: wl,
+                cycles: mix(gemm_item(wl), macs * silvermont::rotated_mac_cycles()),
+                // panels for the tiles + the rotated diagonal copy for the
+                // tail
+                weight_bytes: packed_bytes(wl) + raw_bytes,
+                fused_pool: false,
+            });
+        }
+    }
+    for &wl in widths {
         out.push(CandidateCost {
-            scheme: "gemm+rotated",
-            cycles: mix(macs * silvermont::rotated_mac_cycles()),
-            // panels for the tiles + the rotated diagonal copy for the tail
-            weight_bytes: packed_bytes + raw_bytes,
+            scheme: "gemm+panels",
+            lanes: wl,
+            cycles: mix(gemm_item(wl), gemm_item(wl)),
+            weight_bytes: packed_bytes(wl),
             fused_pool: false,
         });
     }
-    out.push(CandidateCost {
-        scheme: "gemm+panels",
-        cycles: mix(macs * waste * simd),
-        weight_bytes: packed_bytes,
-        fused_pool: false,
-    });
     if square {
-        out.push(CandidateCost {
-            scheme: "gemm+broadcast",
-            cycles: mix(macs * silvermont::broadcast_mac_cycles()),
-            weight_bytes: packed_bytes + raw_bytes,
-            fused_pool: false,
-        });
+        for &wl in widths {
+            out.push(CandidateCost {
+                scheme: "gemm+broadcast",
+                lanes: wl,
+                cycles: mix(gemm_item(wl), macs * silvermont::broadcast_mac_cycles()),
+                weight_bytes: packed_bytes(wl) + raw_bytes,
+                fused_pool: false,
+            });
+        }
     }
     out.push(CandidateCost {
         scheme: "generic",
+        lanes: 1,
         cycles: macs * silvermont::scalar_mac_cycles(),
         weight_bytes: raw_bytes,
         fused_pool: false,
@@ -458,10 +542,36 @@ pub fn dense_candidates(
     out
 }
 
+// ---------------------------------------------------------------------------
+// Intra-op parallelism threshold.
+// ---------------------------------------------------------------------------
+
+/// Minimum predicted cycles of per-layer work each intra-op task must
+/// amortize before lowering splits a kernel across threads. Below this the
+/// spawn/join overhead of a scoped thread (~µs) dominates the band itself,
+/// so small nets stay single-threaded no matter how many threads the
+/// caller offers — the batch-1 latency guard of the §3 pipeline.
+pub const PARALLEL_MIN_CYCLES_PER_TASK: f64 = 100_000.0;
+
+/// Cost-model-driven intra-op task count for one kernel: the number of
+/// threads the caller offers (`intra_threads`), capped so every task keeps
+/// at least [`PARALLEL_MIN_CYCLES_PER_TASK`] predicted cycles of work
+/// (`cycles_per_item` × the batch hint). Unpriced layers
+/// (`cycles_per_item == 0`) and single-thread callers always get 1.
+pub fn parallel_tasks(cycles_per_item: f64, batch_hint: usize, intra_threads: usize) -> usize {
+    if intra_threads <= 1 || cycles_per_item <= 0.0 {
+        return 1;
+    }
+    let total = cycles_per_item * batch_hint.max(1) as f64;
+    let affordable = (total / PARALLEL_MIN_CYCLES_PER_TASK) as usize;
+    intra_threads.min(affordable.max(1))
+}
+
 /// Argmin over the candidates whose fused-pool flag matches the actual
 /// fusion decision. Strict `<` keeps the *first listed* candidate on ties,
 /// which is how the estimator encodes its preference order (im2col before
-/// direct for convs, rotated before panels before broadcast for dense).
+/// direct for convs, rotated before panels before broadcast for dense, and
+/// within a scheme the narrower lane width before the wider one).
 pub fn pick(cands: &[CandidateCost], fused: bool) -> Option<&CandidateCost> {
     cands
         .iter()
@@ -525,23 +635,52 @@ mod tests {
     fn conv_estimator_reproduces_the_geometry_rule_on_the_lane_grid() {
         // 3×3 SAME with oc ≥ 4: im2col's amortized gather beats direct's
         // bounds-checked taps (tiny_cnn's conv)
-        let c = conv_candidates(&conv(3, 3, 3, 4, 8, 8, true), false);
+        let c = conv_candidates(&conv(3, 3, 3, 4, 8, 8, true), false, 4);
         assert_eq!(pick(&c, false).unwrap().scheme, "im2col");
         // VALID and 1×1 kernels: direct wins strictly
-        let c = conv_candidates(&conv(3, 3, 3, 4, 6, 6, false), false);
+        let c = conv_candidates(&conv(3, 3, 3, 4, 6, 6, false), false, 4);
         assert_eq!(pick(&c, false).unwrap().scheme, "direct");
-        let c = conv_candidates(&conv(1, 1, 8, 4, 8, 8, true), false);
+        let c = conv_candidates(&conv(1, 1, 8, 4, 8, 8, true), false, 4);
         assert_eq!(pick(&c, false).unwrap().scheme, "direct");
         // generic is never the argmin when SIMD candidates exist
         for same in [false, true] {
-            let c = conv_candidates(&conv(3, 3, 4, 8, 5, 5, same), false);
+            let c = conv_candidates(&conv(3, 3, 4, 8, 5, 5, same), false, 4);
             assert_ne!(pick(&c, false).unwrap().scheme, "generic");
         }
     }
 
     #[test]
+    fn lane_width_choice_follows_tail_waste() {
+        // oc = 32 fills 8- and 16-lane panels: the wider instantiation's
+        // per-MAC advantage wins once the dispatch ceiling allows it
+        let full = conv(3, 3, 8, 32, 16, 16, true);
+        assert_eq!(pick(&conv_candidates(&full, false, 4), false).unwrap().lanes, 4);
+        assert_eq!(pick(&conv_candidates(&full, false, 8), false).unwrap().lanes, 8);
+        assert_eq!(pick(&conv_candidates(&full, false, 16), false).unwrap().lanes, 16);
+        // oc = 4 is tail-dominated at 8 lanes (waste 2×): the argmin keeps
+        // the 4-lane kernels even on a wide host — the ISSUE's §3.3 lever
+        let tail = conv(3, 3, 3, 4, 8, 8, true);
+        let c = conv_candidates(&tail, false, 16);
+        let best = pick(&c, false).unwrap();
+        assert_eq!((best.scheme, best.lanes), ("im2col", 4));
+        // oc = 8 fills AVX2 but wastes half an AVX-512 panel: 8 wins at
+        // ceiling 16 (ramp 1.3 < waste 2×)
+        let mid = conv(3, 3, 4, 8, 8, 8, true);
+        assert_eq!(pick(&conv_candidates(&mid, false, 16), false).unwrap().lanes, 8);
+        // forced-scalar ceiling: only width-1 blocked candidates exist
+        let c = conv_candidates(&full, false, 1);
+        assert!(c.iter().all(|x| x.lanes == 1), "{c:?}");
+        // dense mirrors conv: 512→128 GEMM prefers 8 lanes under AVX2
+        let max = crate::nn::simd::ROTATED_STACK_MAX;
+        let d = DenseDims { in_dim: 512, units: 128 };
+        let best = pick(&dense_candidates(&d, 4, max, 8), false).unwrap();
+        assert_eq!((best.scheme, best.lanes), ("gemm+panels", 8));
+        assert_eq!(pick(&dense_candidates(&d, 4, max, 4), false).unwrap().lanes, 4);
+    }
+
+    #[test]
     fn fused_pool_is_never_pricier_than_unfused() {
-        let c = conv_candidates(&conv(3, 3, 3, 4, 8, 8, true), true);
+        let c = conv_candidates(&conv(3, 3, 3, 4, 8, 8, true), true, 4);
         for scheme in ["im2col", "direct", "generic"] {
             assert!(cycles_of(&c, scheme, true) < cycles_of(&c, scheme, false), "{scheme}");
         }
@@ -552,28 +691,45 @@ mod tests {
     fn dense_estimator_matches_the_kernel_legality_rules() {
         let max = crate::nn::simd::ROTATED_STACK_MAX;
         // square, 4-aligned, small: rotation is strictly cheapest
-        let c = dense_candidates(&DenseDims { in_dim: 16, units: 16 }, 1, max);
+        let c = dense_candidates(&DenseDims { in_dim: 16, units: 16 }, 1, max, 4);
         assert_eq!(pick(&c, false).unwrap().scheme, "gemm+rotated");
         // rectangular: rotation/broadcast illegal, panels beat generic
-        let c = dense_candidates(&DenseDims { in_dim: 48, units: 10 }, 1, max);
+        let c = dense_candidates(&DenseDims { in_dim: 48, units: 10 }, 1, max, 4);
         assert!(c.iter().all(|x| x.scheme != "gemm+rotated"));
         assert!(c.iter().all(|x| x.scheme != "gemm+broadcast"));
         assert_eq!(pick(&c, false).unwrap().scheme, "gemm+panels");
         // square but over the rotation staging limit: panels win the tie
         // against broadcast (first-listed preference)
-        let c = dense_candidates(&DenseDims { in_dim: max * 2, units: max * 2 }, 1, max);
+        let c = dense_candidates(&DenseDims { in_dim: max * 2, units: max * 2 }, 1, max, 4);
         assert!(c.iter().all(|x| x.scheme != "gemm+rotated"));
         assert_eq!(pick(&c, false).unwrap().scheme, "gemm+panels");
         // a full-tile batch hint prices everything at GEMM cost, so the
         // rotated tail advantage disappears for batch % 4 == 0
-        let c4 = dense_candidates(&DenseDims { in_dim: 16, units: 16 }, 4, max);
+        let c4 = dense_candidates(&DenseDims { in_dim: 16, units: 16 }, 4, max, 4);
         assert_eq!(
             cycles_of(&c4, "gemm+rotated", false),
             cycles_of(&c4, "gemm+panels", false)
         );
         // degenerate single-unit head: padding waste makes scalar cheaper
-        let c = dense_candidates(&DenseDims { in_dim: 64, units: 1 }, 1, max);
+        let c = dense_candidates(&DenseDims { in_dim: 64, units: 1 }, 1, max, 4);
         assert_eq!(pick(&c, false).unwrap().scheme, "generic");
+    }
+
+    #[test]
+    fn parallel_threshold_keeps_small_nets_sequential() {
+        // tiny_cnn-scale work (≈9k cycles) never splits, whatever the
+        // thread budget
+        assert_eq!(parallel_tasks(8640.0, 1, 4), 1);
+        assert_eq!(parallel_tasks(8640.0, 1, 16), 1);
+        // single-thread callers and unpriced layers never split
+        assert_eq!(parallel_tasks(1.0e9, 8, 1), 1);
+        assert_eq!(parallel_tasks(0.0, 8, 4), 1);
+        // big conv work splits up to the thread budget
+        assert_eq!(parallel_tasks(2.4e6, 1, 4), 4);
+        // mid-size work is capped by per-task amortization, not threads
+        assert_eq!(parallel_tasks(250_000.0, 1, 4), 2);
+        // batch hint scales the work: 9k cycles × 64 items affords a split
+        assert!(parallel_tasks(8640.0, 64, 4) > 1);
     }
 
     #[test]
@@ -589,9 +745,9 @@ mod tests {
             conv(3, 3, 4, 8, 11, 7, true),
             conv(3, 3, 4, 8, 5, 13, true),
         ];
-        let b = conv_candidates(&base, None);
+        let b = conv_candidates(&base, false, 4);
         for big in &bigger {
-            let g = conv_candidates(big, None);
+            let g = conv_candidates(big, false, 4);
             for scheme in ["im2col", "direct", "generic"] {
                 assert!(
                     cycles_of(&g, scheme, false) >= cycles_of(&b, scheme, false),
@@ -606,14 +762,14 @@ mod tests {
             for scheme in ["gemm+panels", "generic"] {
                 let mut prev = 0.0;
                 for units in 1..=24 {
-                    let c = dense_candidates(&DenseDims { in_dim: 32, units }, batch, max);
+                    let c = dense_candidates(&DenseDims { in_dim: 32, units }, batch, max, 4);
                     let now = cycles_of(&c, scheme, false);
                     assert!(now >= prev, "{scheme} units {units} batch {batch}");
                     prev = now;
                 }
                 let mut prev = 0.0;
                 for in_dim in 1..=24 {
-                    let c = dense_candidates(&DenseDims { in_dim, units: 10 }, batch, max);
+                    let c = dense_candidates(&DenseDims { in_dim, units: 10 }, batch, max, 4);
                     let now = cycles_of(&c, scheme, false);
                     assert!(now >= prev, "{scheme} in_dim {in_dim} batch {batch}");
                     prev = now;
@@ -630,8 +786,10 @@ mod tests {
             decisions: vec![LayerDecision {
                 layer: "conv1".into(),
                 op: "conv2d",
-                candidates: conv_candidates(&conv(3, 3, 3, 4, 8, 8, true), false),
+                candidates: conv_candidates(&conv(3, 3, 3, 4, 8, 8, true), false, 4),
                 chosen: "im2col",
+                lane_width: 4,
+                parallel_tasks: 1,
                 predicted_cycles: 8640.0,
                 reason: DecisionReason::CostModel,
                 fused_pool: false,
@@ -645,6 +803,8 @@ mod tests {
         assert!(t.contains("predicted total"), "{t}");
         let j = report.to_json().to_string();
         assert!(j.contains("\"decisions\"") && j.contains("\"im2col\""), "{j}");
+        assert!(j.contains("\"lane_width\"") && j.contains("\"parallel_tasks\""), "{j}");
+        assert!(j.contains("\"lanes\""), "{j}");
         assert_eq!(report.predicted_total_cycles(), 8640.0);
     }
 }

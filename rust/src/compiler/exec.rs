@@ -17,7 +17,7 @@ use std::sync::Arc;
 use anyhow::{Context, Result};
 
 use crate::compiler::program::{ArenaPool, PlanSummary, Program};
-pub use crate::compiler::program::{CompileOptions, ConvScheme, DenseScheme};
+pub use crate::compiler::program::{CompileOptions, ConvScheme, DenseScheme, LaneSelect};
 use crate::engine::{Engine, SharedInfer, WorkerScratch};
 use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
@@ -198,6 +198,8 @@ mod tests {
                                         conv,
                                         fuse_pool,
                                         batch_hint: 1,
+                                        lanes: LaneSelect::Auto,
+                                        intra_threads: 1,
                                     },
                                 )
                                 .unwrap();

@@ -8,11 +8,22 @@
 //! the same store loop ([`conv2d_run`] with `pool`): each output pixel is
 //! computed, activated, then max-merged straight into the pool cell, so the
 //! conv intermediate never materializes in the arena.
+//!
+//! Since PR 7 the blocked paths are **width-generic**: every panel kernel
+//! and lane epilogue is instantiated at 1/4/8/16 lanes (see
+//! [`crate::nn::simd`] and [`crate::cpu`]), and the width baked into the
+//! algo at lowering selects the instantiation via a four-way dispatch at
+//! the top of [`conv2d_run`] / [`dense_run`]. The same entry points also
+//! carry the lowering-planned intra-op `tasks` count: when > 1, the output
+//! is partitioned into contiguous bands (conv output rows / pool rows /
+//! batch items) executed on scoped threads against disjoint out and
+//! scratch spans — banding is bitwise-neutral because every band runs the
+//! identical per-pixel / per-item code, and tile vs. tail agreement is
+//! pinned by `nn::simd`'s bit-equality properties.
 
 use crate::approx;
 use crate::model::spec::{same_pads, Activation, Padding};
 use crate::nn::simd;
-use crate::nn::simd::CONV_BLOCK;
 
 /// Fused store epilogue: activation (exact or §3.4 approximation) followed
 /// by the optional folded-BN affine.
@@ -91,16 +102,17 @@ impl<'a> Epilogue<'a> {
         }
     }
 
-    /// The vectorized §3.4 epilogue: apply to one full 4-lane store group
-    /// whose first lane is channel `c0` (`c0 + 4` must not exceed the real
+    /// The vectorized §3.4 epilogue: apply to one full `W`-lane store group
+    /// whose first lane is channel `c0` (`c0 + W` must not exceed the real
     /// channel count — tail groups take [`Epilogue::apply_channels`]).
     /// One `act` dispatch per group instead of per element, and the
-    /// activation approximations run their 4-lane forms
-    /// ([`approx::fast_tanh4`] / [`approx::fast_sigmoid4`]), which are
-    /// bit-identical to the scalar functions per lane — so the blocked
-    /// store loops and the scalar reference epilogue can never drift.
+    /// activation approximations run their lane forms
+    /// ([`approx::fast_tanh_w`] / [`approx::fast_sigmoid_w`]), which are
+    /// bit-identical to the scalar functions per lane at every width — so
+    /// the blocked store loops and the scalar reference epilogue can never
+    /// drift, whatever instantiation the dispatch picked.
     #[inline(always)]
-    pub fn apply_lanes(&self, lanes: &mut [f32; 4], c0: usize) {
+    pub fn apply_lanes_w<const W: usize>(&self, lanes: &mut [f32; W], c0: usize) {
         match self.act {
             Activation::Linear => {}
             Activation::Relu => {
@@ -120,7 +132,7 @@ impl<'a> Epilogue<'a> {
             }
             Activation::Sigmoid => {
                 if self.approx {
-                    approx::fast_sigmoid4(lanes);
+                    approx::fast_sigmoid_w::<W>(lanes);
                 } else {
                     for v in lanes.iter_mut() {
                         *v = 1.0 / (1.0 + (-*v).exp());
@@ -129,7 +141,7 @@ impl<'a> Epilogue<'a> {
             }
             Activation::Tanh => {
                 if self.approx {
-                    approx::fast_tanh4(lanes);
+                    approx::fast_tanh_w::<W>(lanes);
                 } else {
                     for v in lanes.iter_mut() {
                         *v = v.tanh();
@@ -142,6 +154,12 @@ impl<'a> Epilogue<'a> {
                 *v = *v * scale[c0 + l] + shift[c0 + l];
             }
         }
+    }
+
+    /// The 4-lane (SSE-shaped) instantiation of [`Epilogue::apply_lanes_w`].
+    #[inline(always)]
+    pub fn apply_lanes(&self, lanes: &mut [f32; 4], c0: usize) {
+        self.apply_lanes_w::<4>(lanes, c0)
     }
 
     /// Scalar epilogue over a channel sub-range whose first element is
@@ -177,19 +195,26 @@ pub enum ConvAlgo {
         /// HWIO weights in the spec's layout, unpacked.
         kernel: Vec<f32>,
     },
-    /// 4-lane blocked panels read straight off the NHWC window (1×1
+    /// `lanes`-wide blocked panels read straight off the NHWC window (1×1
     /// kernels and VALID windows are always fully in bounds).
     Direct {
-        /// [`simd::pack_conv_panels`] layout of the HWIO weights.
+        /// [`simd::pack_conv_panels_w`] layout of the HWIO weights, packed
+        /// at `lanes`.
         panels: Vec<f32>,
+        /// Lane width the panels were packed at and the kernel runs at
+        /// (1, 4, 8, or 16) — the §3.3 per-layer lowering decision.
+        lanes: usize,
     },
-    /// 4-lane blocked panels over a gathered, zero-padded im2col row — one
-    /// contiguous FMA stream per pixel regardless of border clipping. The
-    /// row scratch (`GEMM_NR` rows of `kh*kw*c` for the batch-blocked
-    /// path) is passed into [`conv2d_run`].
+    /// `lanes`-wide blocked panels over a gathered, zero-padded im2col
+    /// row — one contiguous FMA stream per pixel regardless of border
+    /// clipping. The row scratch (`GEMM_NR` rows of `kh*kw*c` for the
+    /// batch-blocked path) is passed into [`conv2d_run`].
     Im2col {
-        /// [`simd::pack_conv_panels`] layout of the HWIO weights.
+        /// [`simd::pack_conv_panels_w`] layout of the HWIO weights, packed
+        /// at `lanes`.
         panels: Vec<f32>,
+        /// Lane width the panels were packed at and the kernel runs at.
+        lanes: usize,
     },
 }
 
@@ -212,8 +237,12 @@ pub enum DenseAlgo {
     /// than `GEMM_NR`, including the batch=1 serving bucket) run the
     /// per-item `tail` matvec.
     Gemm {
-        /// [`simd::pack_dense_panels`] layout of the weights.
+        /// [`simd::pack_dense_panels_w`] layout of the weights, packed at
+        /// `lanes`.
         panels: Vec<f32>,
+        /// Lane width of the packed panels and the tile kernel (1, 4, 8,
+        /// or 16) — the §3.3 per-layer lowering decision.
+        lanes: usize,
         /// Per-item matvec for batch items off the `GEMM_NR` grid.
         tail: DenseTail,
     },
@@ -238,18 +267,82 @@ pub enum DenseTail {
     Panels,
 }
 
+/// Run `f` over `units` work units split into at most `tasks` contiguous
+/// bands, each band owning a disjoint span of `out` (`out_per_unit`
+/// elements per unit) and its own `scratch_per_task` stripe of `scratch` —
+/// the intra-op split planned at lowering. `tasks == 1` (the default plan,
+/// and every plan below the [`crate::compiler::cost`] threshold) runs `f`
+/// inline with zero allocation or thread traffic; larger counts run the
+/// extra bands on scoped threads while the first band stays on the caller's
+/// thread. Bands never alias: `out` is carved with `split_at_mut` and every
+/// band gets a private scratch stripe, so `f` only needs `Sync` captures.
+///
+/// `align` pins interior band boundaries to a unit grid. The batch-blocked
+/// GEMM paths pass [`simd::GEMM_NR`] so a band never reassigns an item
+/// between tile and tail relative to the sequential run — the rotated /
+/// broadcast dense tails are *different algorithms* from the tile, so an
+/// unaligned split would change bits, not just order. Per-pixel and
+/// per-row bands pass 1 (every unit is computed identically).
+fn run_bands<F>(
+    tasks: usize,
+    units: usize,
+    align: usize,
+    out_per_unit: usize,
+    scratch_per_task: usize,
+    scratch: &mut [f32],
+    out: &mut [f32],
+    f: F,
+) where
+    F: Fn(usize, usize, &mut [f32], &mut [f32]) + Sync,
+{
+    let groups = units / align.max(1);
+    let tasks = tasks.clamp(1, units.max(1)).min(groups.max(1));
+    if tasks == 1 {
+        let n = scratch_per_task.min(scratch.len());
+        f(0, units, &mut scratch[..n], out);
+        return;
+    }
+    let mut jobs = Vec::with_capacity(tasks);
+    let mut out_rest = out;
+    let mut scr_rest = scratch;
+    let mut u0 = 0usize;
+    for t in 0..tasks {
+        let u1 = if t + 1 == tasks { units } else { (groups * (t + 1) / tasks) * align };
+        let (o, rest) = std::mem::take(&mut out_rest).split_at_mut((u1 - u0) * out_per_unit);
+        out_rest = rest;
+        let (s, rest) = std::mem::take(&mut scr_rest).split_at_mut(scratch_per_task);
+        scr_rest = rest;
+        jobs.push((u0, u1, s, o));
+        u0 = u1;
+    }
+    std::thread::scope(|scope| {
+        let f = &f;
+        let mut jobs = jobs.into_iter();
+        let first = jobs.next().expect("tasks >= 1");
+        for (v0, v1, sv, ov) in jobs {
+            scope.spawn(move || f(v0, v1, sv, ov));
+        }
+        let (u0, u1, s, o) = first;
+        f(u0, u1, s, o);
+    });
+}
+
 /// conv2d, NHWC × HWIO → NHWC, fused epilogue, optional §3.4 fused MaxPool.
 ///
 /// Without `pool` this writes the conv output (epilogue applied in the
 /// store loop). With `pool = Some((pkh, pkw, ps))` it writes the **pooled**
-/// output instead: each conv pixel is computed into `cell` (len `oc`),
-/// activated, and max-merged into its pool cell — the conv tensor never
-/// exists in memory, and conv pixels no pool window covers are never
-/// computed. Pool windows must not overlap (`ps >= max(pkh, pkw)`, the
-/// lowering's fusion gate), so no conv pixel is computed twice.
+/// output instead: each conv pixel is computed into a scratch cell (len
+/// `oc`), activated, and max-merged into its pool cell — the conv tensor
+/// never materializes in memory, and conv pixels no pool window covers are
+/// never computed. Pool windows must not overlap (`ps >= max(pkh, pkw)`,
+/// the lowering's fusion gate), so no conv pixel is computed twice.
 ///
-/// All mutable scratch (`row` for the im2col gather, `cell` for the fused
-/// pool) is caller-owned, so `algo` is shared read-only across workers.
+/// `scratch` holds `tasks` stripes of `cell_len` fused-pool cell elements
+/// followed by the im2col gather rows (layout planned at lowering); all of
+/// it is caller-owned, so `algo` is shared read-only across workers. The
+/// blocked paths run at the lane width recorded in `algo` (a four-way
+/// dispatch over the width-generic body), and `tasks > 1` splits the
+/// output into row/item bands per [`run_bands`].
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_run(
     x: &[f32],
@@ -261,8 +354,49 @@ pub fn conv2d_run(
     padding: Padding,
     ep: Epilogue,
     pool: Option<(usize, usize, usize)>,
-    cell: &mut [f32],
-    row: &mut [f32],
+    (cell_len, tasks): (usize, usize),
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
+    let lanes = match algo {
+        ConvAlgo::Generic { .. } => 1,
+        ConvAlgo::Direct { lanes, .. } | ConvAlgo::Im2col { lanes, .. } => *lanes,
+    };
+    match lanes {
+        1 => conv2d_run_w::<1>(
+            x, (b, h, w, c), algo, (kh, kw, oc), bias, stride, padding, ep, pool,
+            (cell_len, tasks), scratch, out,
+        ),
+        8 => conv2d_run_w::<8>(
+            x, (b, h, w, c), algo, (kh, kw, oc), bias, stride, padding, ep, pool,
+            (cell_len, tasks), scratch, out,
+        ),
+        16 => conv2d_run_w::<16>(
+            x, (b, h, w, c), algo, (kh, kw, oc), bias, stride, padding, ep, pool,
+            (cell_len, tasks), scratch, out,
+        ),
+        _ => conv2d_run_w::<4>(
+            x, (b, h, w, c), algo, (kh, kw, oc), bias, stride, padding, ep, pool,
+            (cell_len, tasks), scratch, out,
+        ),
+    }
+}
+
+/// Width-generic [`conv2d_run`] body — one monomorphization per supported
+/// lane width.
+#[allow(clippy::too_many_arguments)]
+fn conv2d_run_w<const W: usize>(
+    x: &[f32],
+    (b, h, w, c): (usize, usize, usize, usize),
+    algo: &ConvAlgo,
+    (kh, kw, oc): (usize, usize, usize),
+    bias: Option<&[f32]>,
+    stride: usize,
+    padding: Padding,
+    ep: Epilogue,
+    pool: Option<(usize, usize, usize)>,
+    (cell_len, tasks): (usize, usize),
+    scratch: &mut [f32],
     out: &mut [f32],
 ) {
     let (pt, pl) = match padding {
@@ -270,33 +404,43 @@ pub fn conv2d_run(
         Padding::Valid => (0, 0),
     };
     let (oh, ow) = crate::model::spec::conv_out(h, w, kh, kw, stride, padding);
+    let per_task = scratch.len() / tasks.max(1);
     match pool {
         None => {
             debug_assert_eq!(out.len(), b * oh * ow * oc);
-            if let ConvAlgo::Im2col { panels } = algo {
+            if let ConvAlgo::Im2col { panels, .. } = algo {
                 if b >= simd::GEMM_NR {
-                    im2col_batch_blocked(
-                        x,
-                        (b, h, w, c),
-                        panels,
-                        (kh, kw, oc),
-                        bias,
-                        (stride, pt, pl),
-                        (oh, ow),
-                        ep,
-                        row,
-                        out,
-                    );
+                    // band over whole batch items on the GEMM_NR grid:
+                    // each band keeps exactly the sequential run's
+                    // tile/tail assignment for its item sub-range
+                    let nr = simd::GEMM_NR;
+                    run_bands(tasks, b, nr, oh * ow * oc, per_task, scratch, out, |n0, n1, s, o| {
+                        im2col_batch_blocked_w::<W>(
+                            &x[n0 * h * w * c..n1 * h * w * c],
+                            (n1 - n0, h, w, c),
+                            panels,
+                            (kh, kw, oc),
+                            bias,
+                            (stride, pt, pl),
+                            (oh, ow),
+                            ep,
+                            &mut s[cell_len..],
+                            o,
+                        );
+                    });
                     return;
                 }
             }
-            for n in 0..b {
-                for oy in 0..oh {
+            // band over (item, output row) units
+            run_bands(tasks, b * oh, 1, ow * oc, per_task, scratch, out, |u0, u1, s, o| {
+                let row = &mut s[cell_len..];
+                for u in u0..u1 {
+                    let (n, oy) = (u / oh, u % oh);
                     for ox in 0..ow {
-                        let dst = &mut out[((n * oh + oy) * ow + ox) * oc..][..oc];
+                        let dst = &mut o[((u - u0) * ow + ox) * oc..][..oc];
                         let y0 = (oy * stride) as isize - pt as isize;
                         let x0 = (ox * stride) as isize - pl as isize;
-                        conv_pixel(
+                        conv_pixel_w::<W>(
                             x,
                             (n, h, w, c),
                             algo,
@@ -310,16 +454,20 @@ pub fn conv2d_run(
                         );
                     }
                 }
-            }
+            });
         }
         Some((pkh, pkw, ps)) => {
             let (ph, pw) = ((oh - pkh) / ps + 1, (ow - pkw) / ps + 1);
             debug_assert_eq!(out.len(), b * ph * pw * oc);
-            debug_assert_eq!(cell.len(), oc);
-            for n in 0..b {
-                for py in 0..ph {
+            debug_assert!(cell_len >= oc);
+            // band over (item, pool row) units
+            run_bands(tasks, b * ph, 1, pw * oc, per_task, scratch, out, |u0, u1, s, o| {
+                let (cell, row) = s.split_at_mut(cell_len);
+                let cell = &mut cell[..oc];
+                for u in u0..u1 {
+                    let (n, py) = (u / ph, u % ph);
                     for px in 0..pw {
-                        let dst = &mut out[((n * ph + py) * pw + px) * oc..][..oc];
+                        let dst = &mut o[((u - u0) * pw + px) * oc..][..oc];
                         dst.fill(f32::NEG_INFINITY);
                         for wy in 0..pkh {
                             for wx in 0..pkw {
@@ -328,7 +476,7 @@ pub fn conv2d_run(
                                 let x0 = (ox * stride) as isize - pl as isize;
                                 // compute → epilogue (inside the pixel's
                                 // store loop) → max-merge: unfused order.
-                                conv_pixel(
+                                conv_pixel_w::<W>(
                                     x,
                                     (n, h, w, c),
                                     algo,
@@ -349,7 +497,7 @@ pub fn conv2d_run(
                         }
                     }
                 }
-            }
+            });
         }
     }
 }
@@ -362,7 +510,7 @@ pub fn conv2d_run(
 /// items run the per-item panel pass. `row` must hold `GEMM_NR` im2col
 /// rows (`GEMM_NR * kh*kw*c`, planned at lowering).
 #[allow(clippy::too_many_arguments)]
-fn im2col_batch_blocked(
+fn im2col_batch_blocked_w<const W: usize>(
     x: &[f32],
     (b, h, w, c): (usize, usize, usize, usize),
     panels: &[f32],
@@ -376,7 +524,7 @@ fn im2col_batch_blocked(
 ) {
     let taps = kh * kw * c;
     debug_assert!(row.len() >= simd::GEMM_NR * taps);
-    let blocks = oc.div_ceil(CONV_BLOCK);
+    let blocks = oc.div_ceil(W);
     let full = b / simd::GEMM_NR * simd::GEMM_NR;
     for oy in 0..oh {
         for ox in 0..ow {
@@ -395,19 +543,19 @@ fn im2col_batch_blocked(
                 }
                 let x4 = &row[..simd::GEMM_NR * taps];
                 for ob in 0..blocks {
-                    let panel = &panels[ob * taps * CONV_BLOCK..][..taps * CONV_BLOCK];
-                    let mut acc = [bias_lanes(bias, ob, oc); simd::GEMM_NR];
-                    simd::gemm_fma_run(panel, x4, taps, &mut acc);
+                    let panel = &panels[ob * taps * W..][..taps * W];
+                    let mut acc = [bias_lanes_w::<W>(bias, ob, oc); simd::GEMM_NR];
+                    simd::gemm_fma_run_w::<W>(panel, x4, taps, &mut acc);
                     for (n, lanes) in acc.iter_mut().enumerate() {
                         let dst = &mut out[(((n0 + n) * oh + oy) * ow + ox) * oc..][..oc];
-                        store_lanes(lanes, ob, ep, dst);
+                        store_lanes_w::<W>(lanes, ob, ep, dst);
                     }
                 }
             }
             for n in full..b {
                 let dst = &mut out[((n * oh + oy) * ow + ox) * oc..][..oc];
                 gather_row(x, (n, h, w, c), (kh, kw), y0, x0, &mut row[..taps]);
-                panel_row_pixel(panels, &row[..taps], oc, bias, ep, dst);
+                panel_row_pixel_w::<W>(panels, &row[..taps], oc, bias, ep, dst);
             }
         }
     }
@@ -417,12 +565,12 @@ fn im2col_batch_blocked(
 /// lowered algorithm. `(y0, x0)` is the window origin in input coordinates
 /// (may be negative under SAME padding). `row` is the caller-owned im2col
 /// gather scratch (at least `kh*kw*c` long for the im2col scheme, unused
-/// otherwise). The blocked schemes run the epilogue 4-lane inside
-/// [`store_lanes`]; the scalar `Generic` reference applies it per element
-/// after the pixel — the order `bit_exact()` pins.
+/// otherwise). The blocked schemes run the epilogue lane-wise inside
+/// [`store_lanes_w`]; the scalar `Generic` reference applies it per
+/// element after the pixel — the order `bit_exact()` pins.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn conv_pixel(
+fn conv_pixel_w<const W: usize>(
     x: &[f32],
     (n, h, w, c): (usize, usize, usize, usize),
     algo: &ConvAlgo,
@@ -439,13 +587,13 @@ fn conv_pixel(
             generic_pixel(x, (n, h, w, c), kernel, (kh, kw, oc), bias, y0, x0, dst);
             ep.apply(dst);
         }
-        ConvAlgo::Direct { panels } => {
-            direct_pixel(x, (n, h, w, c), panels, (kh, kw, oc), bias, y0, x0, ep, dst)
+        ConvAlgo::Direct { panels, .. } => {
+            direct_pixel_w::<W>(x, (n, h, w, c), panels, (kh, kw, oc), bias, y0, x0, ep, dst)
         }
-        ConvAlgo::Im2col { panels } => {
+        ConvAlgo::Im2col { panels, .. } => {
             let taps = kh * kw * c;
             gather_row(x, (n, h, w, c), (kh, kw), y0, x0, &mut row[..taps]);
-            panel_row_pixel(panels, &row[..taps], oc, bias, ep, dst)
+            panel_row_pixel_w::<W>(panels, &row[..taps], oc, bias, ep, dst)
         }
     }
 }
@@ -494,13 +642,13 @@ fn generic_pixel(
     }
 }
 
-/// §3.3 blocked direct-window path: per output-channel block of 4, the
+/// §3.3 blocked direct-window path: per output-channel block of `W`, the
 /// accumulators stay in registers across every in-bounds tap run (one
-/// contiguous channel vector per (ky, kx)); the epilogue runs 4-lane in
+/// contiguous channel vector per (ky, kx)); the epilogue runs lane-wise in
 /// the store.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn direct_pixel(
+fn direct_pixel_w<const W: usize>(
     x: &[f32],
     (n, h, w, c): (usize, usize, usize, usize),
     panels: &[f32],
@@ -512,10 +660,10 @@ fn direct_pixel(
     dst: &mut [f32],
 ) {
     let taps = kh * kw * c;
-    let blocks = oc.div_ceil(CONV_BLOCK);
+    let blocks = oc.div_ceil(W);
     for ob in 0..blocks {
-        let panel = &panels[ob * taps * CONV_BLOCK..][..taps * CONV_BLOCK];
-        let mut acc = bias_lanes(bias, ob, oc);
+        let panel = &panels[ob * taps * W..][..taps * W];
+        let mut acc = bias_lanes_w::<W>(bias, ob, oc);
         for ky in 0..kh {
             let iy = y0 + ky as isize;
             if iy < 0 || iy as usize >= h {
@@ -528,18 +676,18 @@ fn direct_pixel(
                 }
                 let px = &x[((n * h + iy as usize) * w + ix as usize) * c..][..c];
                 let t0 = (ky * kw + kx) * c;
-                simd::conv_fma_run(&panel[t0 * CONV_BLOCK..][..c * CONV_BLOCK], px, &mut acc);
+                simd::conv_fma_run_w::<W>(&panel[t0 * W..][..c * W], px, &mut acc);
             }
         }
-        store_lanes(&mut acc, ob, ep, dst);
+        store_lanes_w::<W>(&mut acc, ob, ep, dst);
     }
 }
 
 /// §3.3 blocked im2col path: one dense FMA stream over the gathered row,
-/// epilogue 4-lane in the store. Shared by the conv im2col scheme and the
-/// dense GEMM batch tail (a dense layer *is* a 1-pixel im2col conv).
+/// epilogue lane-wise in the store. Shared by the conv im2col scheme and
+/// the dense GEMM batch tail (a dense layer *is* a 1-pixel im2col conv).
 #[inline(always)]
-fn panel_row_pixel(
+fn panel_row_pixel_w<const W: usize>(
     panels: &[f32],
     row: &[f32],
     oc: usize,
@@ -548,12 +696,12 @@ fn panel_row_pixel(
     dst: &mut [f32],
 ) {
     let taps = row.len();
-    let blocks = oc.div_ceil(CONV_BLOCK);
+    let blocks = oc.div_ceil(W);
     for ob in 0..blocks {
-        let panel = &panels[ob * taps * CONV_BLOCK..][..taps * CONV_BLOCK];
-        let mut acc = bias_lanes(bias, ob, oc);
-        simd::conv_fma_run(panel, row, &mut acc);
-        store_lanes(&mut acc, ob, ep, dst);
+        let panel = &panels[ob * taps * W..][..taps * W];
+        let mut acc = bias_lanes_w::<W>(bias, ob, oc);
+        simd::conv_fma_run_w::<W>(panel, row, &mut acc);
+        store_lanes_w::<W>(&mut acc, ob, ep, dst);
     }
 }
 
@@ -589,11 +737,11 @@ fn gather_row(
 /// Accumulator init for output-channel block `ob`: bias lanes, zeros past
 /// `oc` (tail lanes are never stored).
 #[inline(always)]
-fn bias_lanes(bias: Option<&[f32]>, ob: usize, oc: usize) -> [f32; CONV_BLOCK] {
-    let mut acc = [0.0f32; CONV_BLOCK];
+fn bias_lanes_w<const W: usize>(bias: Option<&[f32]>, ob: usize, oc: usize) -> [f32; W] {
+    let mut acc = [0.0f32; W];
     if let Some(bs) = bias {
         for (l, a) in acc.iter_mut().enumerate() {
-            let o = ob * CONV_BLOCK + l;
+            let o = ob * W + l;
             if o < oc {
                 *a = bs[o];
             }
@@ -603,16 +751,16 @@ fn bias_lanes(bias: Option<&[f32]>, ob: usize, oc: usize) -> [f32; CONV_BLOCK] {
 }
 
 /// Apply the §3.4 epilogue to block `ob`'s accumulators and store the real
-/// lanes into the `oc`-length pixel vector: full groups take the 4-lane
-/// [`Epilogue::apply_lanes`] form, the final partial group (channel count
-/// off the 4 grid) falls back to the scalar tail.
+/// lanes into the `oc`-length pixel vector: full groups take the `W`-lane
+/// [`Epilogue::apply_lanes_w`] form, the final partial group (channel
+/// count off the `W` grid) falls back to the scalar tail.
 #[inline(always)]
-fn store_lanes(acc: &mut [f32; CONV_BLOCK], ob: usize, ep: Epilogue, dst: &mut [f32]) {
-    let o0 = ob * CONV_BLOCK;
-    let real = CONV_BLOCK.min(dst.len() - o0);
-    if real == CONV_BLOCK {
-        ep.apply_lanes(acc, o0);
-        dst[o0..o0 + CONV_BLOCK].copy_from_slice(acc);
+fn store_lanes_w<const W: usize>(acc: &mut [f32; W], ob: usize, ep: Epilogue, dst: &mut [f32]) {
+    let o0 = ob * W;
+    let real = W.min(dst.len() - o0);
+    if real == W {
+        ep.apply_lanes_w::<W>(acc, o0);
+        dst[o0..o0 + W].copy_from_slice(acc);
     } else {
         dst[o0..o0 + real].copy_from_slice(&acc[..real]);
         ep.apply_channels(&mut dst[o0..o0 + real], o0);
@@ -673,14 +821,16 @@ pub fn depthwise_conv2d_into(
 
 /// Dense layer under any §3.3 scheme, batch-blocked by [`simd::GEMM_NR`]
 /// when the lowering selected the GEMM path: every full tile holds a
-/// 4-output × 4-item accumulator block across one pass over each packed
-/// panel, so the weight matrix is streamed once per NR items instead of
-/// once per item (the per-item matvec re-reads all of it per batch
-/// element); tail items — and whole batches below NR, including batch=1 —
-/// fall back to the lowered per-item matvec. `scratch` is the rotated
-/// tail's doubled-x window (len `2n`, empty otherwise). Epilogues run
-/// 4-lane in the store tile; the bit-exact `Generic` algo keeps the
-/// scalar reference order end to end.
+/// `lanes`-output × 4-item accumulator block across one pass over each
+/// packed panel, so the weight matrix is streamed once per NR items
+/// instead of once per item (the per-item matvec re-reads all of it per
+/// batch element); tail items — and whole batches below NR, including
+/// batch=1 — fall back to the lowered per-item matvec. `scratch` holds
+/// `tasks` stripes of the rotated tail's doubled-x window (len `2n` each,
+/// empty otherwise); `tasks > 1` bands the batch items per [`run_bands`]
+/// (band boundaries are bitwise-neutral because tile ≡ tail is pinned in
+/// `nn::simd`). Epilogues run lane-wise in the store tile; the bit-exact
+/// `Generic` algo keeps the scalar reference order end to end.
 #[allow(clippy::too_many_arguments)]
 pub fn dense_run(
     x: &[f32],
@@ -690,10 +840,64 @@ pub fn dense_run(
     bias: Option<&[f32]>,
     ep: Epilogue,
     scratch: &mut [f32],
+    tasks: usize,
+    out: &mut [f32],
+) {
+    let lanes = match algo {
+        DenseAlgo::Generic { .. } => 1,
+        DenseAlgo::Gemm { lanes, .. } => *lanes,
+    };
+    match lanes {
+        1 => dense_run_w::<1>(x, (b, in_dim), algo, out_dim, bias, ep, scratch, tasks, out),
+        8 => dense_run_w::<8>(x, (b, in_dim), algo, out_dim, bias, ep, scratch, tasks, out),
+        16 => dense_run_w::<16>(x, (b, in_dim), algo, out_dim, bias, ep, scratch, tasks, out),
+        _ => dense_run_w::<4>(x, (b, in_dim), algo, out_dim, bias, ep, scratch, tasks, out),
+    }
+}
+
+/// Width-generic [`dense_run`] body — bands the batch, then runs each band
+/// through [`dense_band_w`].
+#[allow(clippy::too_many_arguments)]
+fn dense_run_w<const W: usize>(
+    x: &[f32],
+    (b, in_dim): (usize, usize),
+    algo: &DenseAlgo,
+    out_dim: usize,
+    bias: Option<&[f32]>,
+    ep: Epilogue,
+    scratch: &mut [f32],
+    tasks: usize,
     out: &mut [f32],
 ) {
     debug_assert_eq!(x.len(), b * in_dim);
     debug_assert_eq!(out.len(), b * out_dim);
+    let per_task = scratch.len() / tasks.max(1);
+    run_bands(tasks, b, simd::GEMM_NR, out_dim, per_task, scratch, out, |n0, n1, s, o| {
+        dense_band_w::<W>(
+            &x[n0 * in_dim..n1 * in_dim],
+            (n1 - n0, in_dim),
+            algo,
+            out_dim,
+            bias,
+            ep,
+            s,
+            o,
+        );
+    });
+}
+
+/// One contiguous band of batch items under the lowered dense scheme.
+#[allow(clippy::too_many_arguments)]
+fn dense_band_w<const W: usize>(
+    x: &[f32],
+    (b, in_dim): (usize, usize),
+    algo: &DenseAlgo,
+    out_dim: usize,
+    bias: Option<&[f32]>,
+    ep: Epilogue,
+    scratch: &mut [f32],
+    out: &mut [f32],
+) {
     match algo {
         DenseAlgo::Generic { kernel } => {
             for n in 0..b {
@@ -703,18 +907,18 @@ pub fn dense_run(
                 ep.apply(dst);
             }
         }
-        DenseAlgo::Gemm { panels, tail } => {
+        DenseAlgo::Gemm { panels, tail, .. } => {
             let full = b / simd::GEMM_NR * simd::GEMM_NR;
-            let blocks = out_dim.div_ceil(simd::GEMM_MR);
+            let blocks = out_dim.div_ceil(W);
             for n0 in (0..full).step_by(simd::GEMM_NR) {
                 let x4 = &x[n0 * in_dim..][..simd::GEMM_NR * in_dim];
                 for ob in 0..blocks {
-                    let panel = &panels[ob * in_dim * simd::GEMM_MR..][..in_dim * simd::GEMM_MR];
-                    let mut acc = [bias_lanes(bias, ob, out_dim); simd::GEMM_NR];
-                    simd::gemm_fma_run(panel, x4, in_dim, &mut acc);
+                    let panel = &panels[ob * in_dim * W..][..in_dim * W];
+                    let mut acc = [bias_lanes_w::<W>(bias, ob, out_dim); simd::GEMM_NR];
+                    simd::gemm_fma_run_w::<W>(panel, x4, in_dim, &mut acc);
                     for (n, lanes) in acc.iter_mut().enumerate() {
                         let dst = &mut out[(n0 + n) * out_dim..][..out_dim];
-                        store_lanes(lanes, ob, ep, dst);
+                        store_lanes_w::<W>(lanes, ob, ep, dst);
                     }
                 }
             }
@@ -723,7 +927,7 @@ pub fn dense_run(
                 let dst = &mut out[n * out_dim..][..out_dim];
                 match tail {
                     DenseTail::Rotated { diag } => {
-                        simd::matvec_rotated_with(diag, xrow, scratch, dst);
+                        simd::matvec_rotated_with(diag, xrow, &mut scratch[..2 * in_dim], dst);
                         add_bias(dst, bias);
                         ep.apply(dst);
                     }
@@ -732,7 +936,9 @@ pub fn dense_run(
                         add_bias(dst, bias);
                         ep.apply(dst);
                     }
-                    DenseTail::Panels => panel_row_pixel(panels, xrow, out_dim, bias, ep, dst),
+                    DenseTail::Panels => {
+                        panel_row_pixel_w::<W>(panels, xrow, out_dim, bias, ep, dst)
+                    }
                 }
             }
         }
@@ -969,11 +1175,17 @@ mod tests {
         assert_eq!(v, [1.0, 9.0]); // relu then *2+1
     }
 
-    fn algo_for(scheme: &str, kernel: &[f32], taps: usize, oc: usize) -> ConvAlgo {
+    fn algo_for(scheme: &str, kernel: &[f32], taps: usize, oc: usize, lanes: usize) -> ConvAlgo {
         match scheme {
             "generic" => ConvAlgo::Generic { kernel: kernel.to_vec() },
-            "direct" => ConvAlgo::Direct { panels: simd::pack_conv_panels(kernel, taps, oc) },
-            "im2col" => ConvAlgo::Im2col { panels: simd::pack_conv_panels(kernel, taps, oc) },
+            "direct" => ConvAlgo::Direct {
+                panels: simd::pack_conv_panels_any(kernel, taps, oc, lanes),
+                lanes,
+            },
+            "im2col" => ConvAlgo::Im2col {
+                panels: simd::pack_conv_panels_any(kernel, taps, oc, lanes),
+                lanes,
+            },
             other => panic!("unknown scheme {other}"),
         }
     }
@@ -983,7 +1195,7 @@ mod tests {
         use crate::nn::layers::conv::conv2d;
         use crate::nn::tensor::Tensor;
         // channels deliberately not multiples of 4 (c=3, oc=5) so the
-        // blocked paths exercise their padded tail lanes.
+        // blocked paths exercise their padded tail lanes at every width.
         for (stride, padding) in
             [(1, Padding::Same), (2, Padding::Same), (1, Padding::Valid), (2, Padding::Valid)]
         {
@@ -993,30 +1205,32 @@ mod tests {
             let bias = rng.uniform_vec(5);
             let r = conv2d(&x, &kernel, &[3, 3, 3, 5], Some(&bias), stride, padding);
             for scheme in ["generic", "direct", "im2col"] {
-                let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
-                let mut row = vec![0.0; 3 * 3 * 3];
-                let mut out = vec![0.0; r.len()];
-                conv2d_run(
-                    x.data(),
-                    (2, 5, 5, 3),
-                    &algo,
-                    (3, 3, 5),
-                    Some(&bias),
-                    stride,
-                    padding,
-                    Epilogue::NONE,
-                    None,
-                    &mut [],
-                    &mut row,
-                    &mut out,
-                );
-                let worst = r
-                    .data()
-                    .iter()
-                    .zip(&out)
-                    .map(|(a, b)| (a - b).abs())
-                    .fold(0.0f32, f32::max);
-                assert!(worst < 1e-5, "{scheme} s{stride} {padding:?}: {worst}");
+                for lanes in simd::LANE_WIDTHS {
+                    let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5, lanes);
+                    let mut scratch = vec![0.0; 3 * 3 * 3];
+                    let mut out = vec![0.0; r.len()];
+                    conv2d_run(
+                        x.data(),
+                        (2, 5, 5, 3),
+                        &algo,
+                        (3, 3, 5),
+                        Some(&bias),
+                        stride,
+                        padding,
+                        Epilogue::NONE,
+                        None,
+                        (0, 1),
+                        &mut scratch,
+                        &mut out,
+                    );
+                    let worst = r
+                        .data()
+                        .iter()
+                        .zip(&out)
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(worst < 1e-5, "{scheme} w{lanes} s{stride} {padding:?}: {worst}");
+                }
             }
         }
     }
@@ -1038,31 +1252,33 @@ mod tests {
         }
         let want = maxpool(&conv_ref, 2, 2, 2);
         for scheme in ["generic", "direct", "im2col"] {
-            let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
-            let mut cell = vec![0.0; 5];
-            let mut row = vec![0.0; 3 * 3 * 3];
-            let mut out = vec![0.0; want.len()];
-            conv2d_run(
-                x.data(),
-                (1, 7, 7, 3),
-                &algo,
-                (3, 3, 5),
-                Some(&bias),
-                1,
-                Padding::Same,
-                ep,
-                Some((2, 2, 2)),
-                &mut cell,
-                &mut row,
-                &mut out,
-            );
-            let worst = want
-                .data()
-                .iter()
-                .zip(&out)
-                .map(|(a, b)| (a - b).abs())
-                .fold(0.0f32, f32::max);
-            assert!(worst < 1e-5, "{scheme}: {worst}");
+            for lanes in simd::LANE_WIDTHS {
+                let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5, lanes);
+                // cell (5) + gather row (27) in one stripe
+                let mut scratch = vec![0.0; 5 + 3 * 3 * 3];
+                let mut out = vec![0.0; want.len()];
+                conv2d_run(
+                    x.data(),
+                    (1, 7, 7, 3),
+                    &algo,
+                    (3, 3, 5),
+                    Some(&bias),
+                    1,
+                    Padding::Same,
+                    ep,
+                    Some((2, 2, 2)),
+                    (5, 1),
+                    &mut scratch,
+                    &mut out,
+                );
+                let worst = want
+                    .data()
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(worst < 1e-5, "{scheme} w{lanes}: {worst}");
+            }
         }
     }
 
@@ -1081,30 +1297,32 @@ mod tests {
             let bias = rng.uniform_vec(5);
             let r = conv2d(&x, &kernel, &[3, 3, 3, 5], Some(&bias), stride, padding);
             for scheme in ["generic", "direct", "im2col"] {
-                let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5);
-                let mut row = vec![0.0; simd::GEMM_NR * 3 * 3 * 3];
-                let mut out = vec![0.0; r.len()];
-                conv2d_run(
-                    x.data(),
-                    (b, 5, 5, 3),
-                    &algo,
-                    (3, 3, 5),
-                    Some(&bias),
-                    stride,
-                    padding,
-                    Epilogue { act: Activation::Relu, approx: false, post: None },
-                    None,
-                    &mut [],
-                    &mut row,
-                    &mut out,
-                );
-                let relu_ref: Vec<f32> = r.data().iter().map(|v| v.max(0.0)).collect();
-                let worst = relu_ref
-                    .iter()
-                    .zip(&out)
-                    .map(|(a, c)| (a - c).abs())
-                    .fold(0.0f32, f32::max);
-                assert!(worst < 1e-5, "{scheme} s{stride} {padding:?}: {worst}");
+                for lanes in [1usize, 4, 8] {
+                    let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5, lanes);
+                    let mut scratch = vec![0.0; simd::GEMM_NR * 3 * 3 * 3];
+                    let mut out = vec![0.0; r.len()];
+                    conv2d_run(
+                        x.data(),
+                        (b, 5, 5, 3),
+                        &algo,
+                        (3, 3, 5),
+                        Some(&bias),
+                        stride,
+                        padding,
+                        Epilogue { act: Activation::Relu, approx: false, post: None },
+                        None,
+                        (0, 1),
+                        &mut scratch,
+                        &mut out,
+                    );
+                    let relu_ref: Vec<f32> = r.data().iter().map(|v| v.max(0.0)).collect();
+                    let worst = relu_ref
+                        .iter()
+                        .zip(&out)
+                        .map(|(a, c)| (a - c).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(worst < 1e-5, "{scheme} w{lanes} s{stride} {padding:?}: {worst}");
+                }
             }
         }
     }
@@ -1119,33 +1337,36 @@ mod tests {
         let mut rng = crate::util::rng::SplitMix64::new(5);
         let kernel = rng.uniform_vec(in_dim * out_dim);
         let bias = rng.uniform_vec(out_dim);
-        let panels = simd::pack_dense_panels(&kernel, in_dim, out_dim);
         for b in [1usize, 3, 4, 5, 8, 9] {
             let xv = rng.uniform_vec(b * in_dim);
             let x = Tensor::from_vec(&[b, in_dim], xv.clone());
             let want = dense_ref(&x, &kernel, &[in_dim, out_dim], Some(&bias));
-            for (label, algo) in [
-                ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
-                ("gemm", DenseAlgo::Gemm { panels: panels.clone(), tail: DenseTail::Panels }),
-            ] {
-                let mut out = vec![0.0; b * out_dim];
-                dense_run(
-                    &xv,
-                    (b, in_dim),
-                    &algo,
-                    out_dim,
-                    Some(&bias),
-                    Epilogue::NONE,
-                    &mut [],
-                    &mut out,
-                );
-                let worst = want
-                    .data()
-                    .iter()
-                    .zip(&out)
-                    .map(|(a, c)| (a - c).abs())
-                    .fold(0.0f32, f32::max);
-                assert!(worst < 1e-5, "{label} b={b}: {worst}");
+            for lanes in simd::LANE_WIDTHS {
+                let panels = simd::pack_dense_panels_any(&kernel, in_dim, out_dim, lanes);
+                for (label, algo) in [
+                    ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
+                    ("gemm", DenseAlgo::Gemm { panels, lanes, tail: DenseTail::Panels }),
+                ] {
+                    let mut out = vec![0.0; b * out_dim];
+                    dense_run(
+                        &xv,
+                        (b, in_dim),
+                        &algo,
+                        out_dim,
+                        Some(&bias),
+                        Epilogue::NONE,
+                        &mut [],
+                        1,
+                        &mut out,
+                    );
+                    let worst = want
+                        .data()
+                        .iter()
+                        .zip(&out)
+                        .map(|(a, c)| (a - c).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(worst < 1e-5, "{label} w{lanes} b={b}: {worst}");
+                }
             }
         }
     }
@@ -1175,7 +1396,7 @@ mod tests {
                 ("rotated", DenseTail::Rotated { diag: diag.clone() }),
                 ("broadcast", DenseTail::Broadcast { w: wt.clone() }),
             ] {
-                let algo = DenseAlgo::Gemm { panels: panels.clone(), tail };
+                let algo = DenseAlgo::Gemm { panels: panels.clone(), lanes: 4, tail };
                 let mut scratch = vec![0.0f32; 2 * n];
                 let mut out = vec![0.0; b * n];
                 dense_run(
@@ -1186,6 +1407,7 @@ mod tests {
                     Some(&bias),
                     Epilogue::NONE,
                     &mut scratch,
+                    1,
                     &mut out,
                 );
                 let worst = want
@@ -1238,6 +1460,17 @@ mod tests {
                             );
                         }
                     }
+                    // the wider store-group forms agree lane-for-lane too
+                    let mut lanes8 = [0.0f32; 8];
+                    lanes8.copy_from_slice(&vals);
+                    ep.apply_lanes_w::<8>(&mut lanes8, 0);
+                    for l in 0..8 {
+                        assert_eq!(
+                            lanes8[l].to_bits(),
+                            whole[l].to_bits(),
+                            "{act:?} approx={approx_on} post={with_post} w8 lane {l}"
+                        );
+                    }
                 }
             }
         }
@@ -1255,13 +1488,149 @@ mod tests {
         let x = [0.0f32, 1.0, -1.0, 0.5];
         for (label, algo) in [
             ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
-            ("gemm", DenseAlgo::Gemm { panels, tail: DenseTail::Panels }),
+            ("gemm", DenseAlgo::Gemm { panels, lanes: 4, tail: DenseTail::Panels }),
         ] {
             let mut out = [0.0f32; 3];
-            dense_run(&x, (1, in_dim), &algo, out_dim, None, Epilogue::NONE, &mut [], &mut out);
+            dense_run(&x, (1, in_dim), &algo, out_dim, None, Epilogue::NONE, &mut [], 1, &mut out);
             assert!(out[0].is_nan(), "{label}: 0·Inf must be NaN, got {}", out[0]);
             assert!(out[1].is_nan(), "{label}: 0·NaN must be NaN, got {}", out[1]);
             assert!((out[2] - 0.25).abs() < 1e-6, "{label}: finite lane drifted");
+        }
+    }
+
+    /// The intra-op satellite property: a banded run is **bitwise**
+    /// identical to the sequential one for every conv scheme × lane width,
+    /// both unfused and with the fused max-pool, including the
+    /// batch-blocked im2col path whose bands re-tile their item sub-range.
+    #[test]
+    fn conv_parallel_split_bitwise_matches_sequential() {
+        use crate::nn::tensor::Tensor;
+        // two full GEMM_NR item groups + one tail item, so the blocked
+        // im2col path really splits across bands on the NR grid
+        let b = 9;
+        let mut rng = crate::util::rng::SplitMix64::new(23);
+        let x = Tensor::from_vec(&[b, 6, 6, 3], rng.uniform_vec(b * 6 * 6 * 3));
+        let kernel = rng.uniform_vec(3 * 3 * 3 * 5);
+        let bias = rng.uniform_vec(5);
+        let ep = Epilogue { act: Activation::Tanh, approx: true, post: None };
+        for scheme in ["generic", "direct", "im2col"] {
+            for lanes in [1usize, 4, 8] {
+                let algo = algo_for(scheme, &kernel, 3 * 3 * 3, 5, lanes);
+                for pool in [None, Some((2, 2, 2))] {
+                    let (cell_len, out_len) = match pool {
+                        None => (0, b * 6 * 6 * 5),
+                        Some(_) => (5, b * 3 * 3 * 5),
+                    };
+                    let stripe = cell_len + simd::GEMM_NR * 3 * 3 * 3;
+                    let run = |tasks: usize| {
+                        let mut scratch = vec![0.0; stripe * tasks];
+                        let mut out = vec![0.0f32; out_len];
+                        conv2d_run(
+                            x.data(),
+                            (b, 6, 6, 3),
+                            &algo,
+                            (3, 3, 5),
+                            Some(&bias),
+                            1,
+                            Padding::Same,
+                            ep,
+                            pool,
+                            (cell_len, tasks),
+                            &mut scratch,
+                            &mut out,
+                        );
+                        out
+                    };
+                    let seq = run(1);
+                    for tasks in [2usize, 3, 4] {
+                        let par = run(tasks);
+                        for (i, (a, c)) in seq.iter().zip(&par).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                c.to_bits(),
+                                "{scheme} w{lanes} pool={pool:?} tasks={tasks} elem {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Dense mirror of the intra-op property: item bands re-tile into
+    /// their own full tiles + tails, and the result stays bit-identical to
+    /// the sequential run for every algo/tail — including the rotated tail
+    /// with its per-task doubled-x scratch stripes.
+    #[test]
+    fn dense_parallel_split_bitwise_matches_sequential() {
+        let n = 8usize;
+        let b = 9usize;
+        let mut rng = crate::util::rng::SplitMix64::new(29);
+        let kernel = rng.uniform_vec(n * n);
+        let bias = rng.uniform_vec(n);
+        let xv = rng.uniform_vec(b * n);
+        let mut wt = vec![0.0f32; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                wt[i * n + j] = kernel[j * n + i];
+            }
+        }
+        let diag = simd::rotate_diagonals(&wt, n);
+        let ep = Epilogue { act: Activation::Sigmoid, approx: true, post: None };
+        for lanes in [1usize, 4, 8] {
+            let panels = simd::pack_dense_panels_any(&kernel, n, n, lanes);
+            let algos = [
+                ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
+                (
+                    "gemm+panels",
+                    DenseAlgo::Gemm { panels: panels.clone(), lanes, tail: DenseTail::Panels },
+                ),
+                (
+                    "gemm+rotated",
+                    DenseAlgo::Gemm {
+                        panels: panels.clone(),
+                        lanes,
+                        tail: DenseTail::Rotated { diag: diag.clone() },
+                    },
+                ),
+                (
+                    "gemm+broadcast",
+                    DenseAlgo::Gemm {
+                        panels: panels.clone(),
+                        lanes,
+                        tail: DenseTail::Broadcast { w: wt.clone() },
+                    },
+                ),
+            ];
+            for (label, algo) in &algos {
+                let run = |tasks: usize| {
+                    let mut scratch = vec![0.0f32; 2 * n * tasks];
+                    let mut out = vec![0.0f32; b * n];
+                    dense_run(
+                        &xv,
+                        (b, n),
+                        algo,
+                        n,
+                        Some(&bias),
+                        ep,
+                        &mut scratch,
+                        tasks,
+                        &mut out,
+                    );
+                    out
+                };
+                let seq = run(1);
+                for tasks in [2usize, 4] {
+                    let par = run(tasks);
+                    for (i, (a, c)) in seq.iter().zip(&par).enumerate() {
+                        assert_eq!(
+                            a.to_bits(),
+                            c.to_bits(),
+                            "{label} w{lanes} tasks={tasks} elem {i}"
+                        );
+                    }
+                }
+            }
         }
     }
 

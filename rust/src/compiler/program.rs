@@ -36,6 +36,7 @@ use crate::compiler::cost;
 use crate::compiler::fuse;
 use crate::compiler::kernels as k;
 use crate::compiler::memory;
+use crate::cpu;
 use crate::model::spec::{Activation, Layer, LayerOp, ModelSpec, Padding};
 use crate::nn::simd;
 use crate::nn::tensor::Tensor;
@@ -76,8 +77,9 @@ pub enum ConvScheme {
     /// multi-tap windows → [`ConvScheme::Im2col`]), then
     /// [`ConvScheme::Generic`].
     Auto,
-    /// 4-lane output-channel-blocked FMA straight over the NHWC window
-    /// ([`simd::pack_conv_panels`] layout, border taps skipped).
+    /// Lane-blocked FMA straight over the NHWC window
+    /// ([`simd::pack_conv_panels_w`] layout at the selected width, border
+    /// taps skipped).
     Direct,
     /// The same blocked FMA over a gathered, zero-padded im2col row — one
     /// contiguous stream per pixel regardless of border clipping.
@@ -85,6 +87,44 @@ pub enum ConvScheme {
     /// The scalar reference loop (also the bit-exact path: it accumulates
     /// in the same order as the naive oracle).
     Generic,
+}
+
+/// Which SIMD lane widths the §3.3 blocked kernels may be lowered at.
+///
+/// `Auto` resolves at `Program::lower` time: an explicit
+/// `COMPILED_NN_FORCE_LANES` env override wins, otherwise the widest width
+/// the host CPU supports ([`cpu::auto_lanes`]) becomes the *ceiling* — the
+/// cost model still prices every width up to it per layer and the argmin
+/// decides (tail-dominated shapes legitimately prefer narrower lanes).
+/// Every width is a portable instantiation of the same generic kernels, so
+/// forcing a width on any host changes performance, never correctness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LaneSelect {
+    /// Ceiling = widest the host supports (env override respected).
+    #[default]
+    Auto,
+    /// Force the scalar (1-lane) instantiations — the reference used by
+    /// the differential fuzz legs and [`CompileOptions::bit_exact`].
+    Scalar,
+    /// Force 4-lane (SSE-shaped) kernels.
+    W4,
+    /// Force 8-lane (AVX2-shaped) kernels.
+    W8,
+    /// Force 16-lane (AVX-512-shaped) kernels.
+    W16,
+}
+
+impl LaneSelect {
+    /// The forced width, or `None` for `Auto`.
+    pub fn width(self) -> Option<usize> {
+        match self {
+            LaneSelect::Auto => None,
+            LaneSelect::Scalar => Some(1),
+            LaneSelect::W4 => Some(4),
+            LaneSelect::W8 => Some(8),
+            LaneSelect::W16 => Some(16),
+        }
+    }
 }
 
 /// Which of the paper's optimizations the lowering applies (each is an
@@ -128,6 +168,18 @@ pub struct CompileOptions {
     /// tail). Purely a *pricing* hint — the lowered program still executes
     /// any runtime batch; 1 matches the serving fast path.
     pub batch_hint: usize,
+    /// SIMD lane-width ceiling for the §3.3 blocked kernels (see
+    /// [`LaneSelect`]): the cost model prices every width up to it and the
+    /// per-layer argmin decides. Width is a *performance* policy — every
+    /// instantiation is portable and numerically identical per scheme.
+    pub lanes: LaneSelect,
+    /// Intra-op worker budget for a *single* [`Program::run`]: conv
+    /// output-row bands and dense batch blocks split into at most this
+    /// many tasks over disjoint arena/scratch spans. 1 (the default) keeps
+    /// the zero-overhead sequential path; the cost model holds small
+    /// layers at 1 task regardless ([`cost::parallel_tasks`]), so tiny
+    /// nets never pay thread fan-out.
+    pub intra_threads: usize,
 }
 
 impl Default for CompileOptions {
@@ -140,6 +192,8 @@ impl Default for CompileOptions {
             conv: ConvScheme::Auto,
             fuse_pool: true,
             batch_hint: 1,
+            lanes: LaneSelect::Auto,
+            intra_threads: 1,
         }
     }
 }
@@ -151,7 +205,8 @@ impl CompileOptions {
     /// multiplications; the matvec and blocked-conv schemes re-order or
     /// pad accumulation; pool fusion is off so the reference kernels run
     /// stand-alone). The §3.2 memory plan stays on — address assignment
-    /// never changes math.
+    /// never changes math. Lanes pin to scalar and intra-op splitting to a
+    /// single task, so the reference path is also scheduling-free.
     pub fn bit_exact() -> Self {
         Self {
             fold_bn: false,
@@ -161,7 +216,16 @@ impl CompileOptions {
             conv: ConvScheme::Generic,
             fuse_pool: false,
             batch_hint: 1,
+            lanes: LaneSelect::Scalar,
+            intra_threads: 1,
         }
+    }
+
+    /// The lane-width ceiling lowering prices candidates under: an explicit
+    /// [`LaneSelect`] force wins, then the `COMPILED_NN_FORCE_LANES` env
+    /// override, then the widest width the host CPU supports.
+    pub fn max_lanes(&self) -> usize {
+        self.lanes.width().unwrap_or_else(cpu::auto_lanes)
     }
 }
 
@@ -378,8 +442,15 @@ pub struct PlanSummary {
     /// Weight elements copied/transformed out of the blob into kernels.
     pub weight_elems: usize,
     /// Batch-independent per-arena scratch elements (im2col rows, fused-
-    /// pool cells, rotated-dense windows) — per worker, not per program.
+    /// pool cells, rotated-dense windows; × intra-op tasks) — per worker,
+    /// not per program.
     pub scratch_elems: usize,
+    /// Widest SIMD lane width any blocked kernel was lowered at (0 when
+    /// the program has no blocked conv/dense kernel).
+    pub lane_width: usize,
+    /// Largest intra-op task count any kernel was planned with (1 =
+    /// everything runs sequentially).
+    pub parallel_tasks: usize,
     /// The explainable §3.3 decision trail: every scheme candidate priced
     /// by the cost model, what was chosen per layer and why, plus the
     /// memory the plan committed to. Rendered by `compiled-nn explain`.
@@ -393,7 +464,7 @@ impl fmt::Display for PlanSummary {
             "{}: {} steps ({} in-place, {} elided), {} buffers × {} arena elems/item, \
              {} BN folded, dense {} gemm (tails: {} rotated / {} broadcast / {} panels), \
              conv {} direct / {} im2col, {} maxpool fused, {} weight elems, \
-             {} scratch elems/worker",
+             {} scratch elems/worker, w{} lanes × {} tasks",
             self.model,
             self.steps.len(),
             self.in_place_steps,
@@ -409,7 +480,9 @@ impl fmt::Display for PlanSummary {
             self.im2col_conv,
             self.fused_maxpool,
             self.weight_elems,
-            self.scratch_elems
+            self.scratch_elems,
+            self.lane_width,
+            self.parallel_tasks
         )?;
         for s in &self.steps {
             writeln!(f, "  {s}")?;
@@ -554,7 +627,7 @@ impl Program {
                 // The conv's own epilogue (activation + folded-BN affine)
                 // runs per pixel *before* the max — the unfused order.
                 let ep = ep_spec(&folded, conv, opts.approx, &mut summary)?;
-                let (algo, bias, scheme) = lower_conv_weights(
+                let (algo, bias, scheme, tasks) = lower_conv_weights(
                     &folded,
                     conv,
                     cin[2],
@@ -571,6 +644,8 @@ impl Program {
                     op: l.op.name(),
                     candidates: Vec::new(),
                     chosen: "fused-into-conv",
+                    lane_width: 0,
+                    parallel_tasks: 0,
                     predicted_cycles: 0.0,
                     reason: cost::DecisionReason::CostModel,
                     fused_pool: true,
@@ -598,7 +673,8 @@ impl Program {
                         ep,
                         pool: Some((*kh, *kw, *stride)),
                         cell_len,
-                        scratch: alloc_scratch(cell_len + row_len),
+                        tasks,
+                        scratch: alloc_scratch((cell_len + row_len) * tasks),
                     }),
                 });
                 continue;
@@ -617,7 +693,7 @@ impl Program {
                     if in_place {
                         bail!("conv2d `{}` cannot run in place", l.name);
                     }
-                    let (algo, bias, scheme) = lower_conv_weights(
+                    let (algo, bias, scheme, tasks) = lower_conv_weights(
                         &folded,
                         l,
                         in_shape[2],
@@ -648,7 +724,8 @@ impl Program {
                             ep,
                             pool: None,
                             cell_len: 0,
-                            scratch: alloc_scratch(row_len),
+                            tasks,
+                            scratch: alloc_scratch(row_len * tasks),
                         }),
                         kind,
                     )
@@ -692,7 +769,7 @@ impl Program {
                     // the kernel's own storage (raw kernel, padded panels,
                     // tail matvec layout) is accounted by lower_dense_algo
                     summary.weight_elems += bias.as_ref().map_or(0, Vec::len);
-                    let (algo, scratch_len, label) =
+                    let (algo, scratch_len, label, tasks) =
                         lower_dense_algo(&l.name, kernel, in_dim, *units, opts, &mut summary);
                     let kind = format!("dense[{label} {in_dim}→{units}]{}", ep.label());
                     (
@@ -703,7 +780,8 @@ impl Program {
                             units: *units,
                             algo,
                             bias,
-                            scratch: alloc_scratch(scratch_len),
+                            tasks,
+                            scratch: alloc_scratch(scratch_len * tasks),
                             ep,
                         }),
                         kind,
@@ -858,6 +936,7 @@ impl Program {
             .collect();
 
         summary.scratch_elems = scratch_elems;
+        summary.parallel_tasks = summary.parallel_tasks.max(1);
         summary.report.arena_bytes = item_elems * std::mem::size_of::<f32>();
         summary.report.scratch_bytes = scratch_elems * std::mem::size_of::<f32>();
         Ok(Program {
@@ -1009,7 +1088,7 @@ fn lower_conv_weights(
     fusion: ConvFusion,
     opts: CompileOptions,
     summary: &mut PlanSummary,
-) -> Result<(k::ConvAlgo, Option<Vec<f32>>, &'static str)> {
+) -> Result<(k::ConvAlgo, Option<Vec<f32>>, &'static str, usize)> {
     let LayerOp::Conv2d { kh, kw, out_ch, use_bias, padding, .. } = &conv.op else {
         bail!("`{}` is not a conv2d", conv.name);
     };
@@ -1026,8 +1105,9 @@ fn lower_conv_weights(
         out_w,
         same_padding: *padding == Padding::Same,
     };
-    let candidates = cost::conv_candidates(&dims, fusion.fusible);
-    let (resolved, reason) = match opts.conv {
+    let max_lanes = opts.max_lanes();
+    let candidates = cost::conv_candidates(&dims, fusion.fusible, max_lanes);
+    let (resolved, lanes, reason) = match opts.conv {
         ConvScheme::Auto => match cost::pick(&candidates, fusion.fused) {
             Some(best) => (
                 match best.scheme {
@@ -1035,6 +1115,7 @@ fn lower_conv_weights(
                     "generic" => ConvScheme::Generic,
                     _ => ConvScheme::Im2col,
                 },
+                best.lanes,
                 cost::DecisionReason::CostModel,
             ),
             // the model declined to price the layer: geometry rule first
@@ -1046,28 +1127,83 @@ fn lower_conv_weights(
                 } else {
                     ConvScheme::Im2col
                 },
+                fallback_lanes(max_lanes),
                 cost::DecisionReason::Fallback,
             ),
         },
-        forced => (forced, cost::DecisionReason::Forced),
+        forced => {
+            let label = match forced {
+                ConvScheme::Direct => "direct",
+                ConvScheme::Generic => "generic",
+                _ => "im2col",
+            };
+            (
+                forced,
+                forced_lanes(&candidates, label, fusion.fused, max_lanes),
+                cost::DecisionReason::Forced,
+            )
+        }
     };
     let (algo, scheme) =
-        lower_conv_algo(resolved, kernel, (*kh, *kw, in_ch, *out_ch), summary);
+        lower_conv_algo(resolved, kernel, (*kh, *kw, in_ch, *out_ch), lanes, summary);
     let predicted = candidates
         .iter()
-        .find(|c| c.scheme == scheme && c.fused_pool == fusion.fused)
+        .find(|c| {
+            c.scheme == scheme && c.lanes == lanes && c.fused_pool == fusion.fused
+        })
         .map_or(0.0, |c| c.cycles);
+    let tasks =
+        cost::parallel_tasks(predicted, opts.batch_hint.max(1), opts.intra_threads);
+    if !matches!(algo, k::ConvAlgo::Generic { .. }) {
+        summary.lane_width = summary.lane_width.max(lanes);
+    }
+    summary.parallel_tasks = summary.parallel_tasks.max(tasks);
     summary.report.decisions.push(cost::LayerDecision {
         layer: conv.name.clone(),
         op: conv.op.name(),
         candidates,
         chosen: scheme,
+        lane_width: lanes,
+        parallel_tasks: tasks,
         predicted_cycles: predicted,
         reason,
         fused_pool: fusion.fused,
         elided: false,
     });
-    Ok((algo, bias, scheme))
+    Ok((algo, bias, scheme, tasks))
+}
+
+/// Width lowering falls back to when the cost model declined to price a
+/// layer (zero MAC work): the narrowest blocked width under the ceiling.
+fn fallback_lanes(max_lanes: usize) -> usize {
+    if max_lanes < 4 {
+        max_lanes.max(1)
+    } else {
+        4
+    }
+}
+
+/// Cheapest priced width for a *forced* scheme — the width axis stays
+/// cost-model-driven even when the scheme does not. Ties keep the first
+/// (narrowest) candidate, matching [`cost::pick`]; unpriced layers fall
+/// back like [`fallback_lanes`] (scalar schemes always run at 1).
+fn forced_lanes(
+    candidates: &[cost::CandidateCost],
+    scheme: &str,
+    fused: bool,
+    max_lanes: usize,
+) -> usize {
+    candidates
+        .iter()
+        .filter(|c| c.scheme == scheme && c.fused_pool == fused)
+        .fold(None::<&cost::CandidateCost>, |best, c| match best {
+            Some(b) if b.cycles <= c.cycles => Some(b),
+            _ => Some(c),
+        })
+        .map_or_else(
+            || if scheme == "generic" { 1 } else { fallback_lanes(max_lanes) },
+            |c| c.lanes,
+        )
 }
 
 /// Pack a conv kernel for an already-resolved §3.3 scheme; returns the
@@ -1078,6 +1214,7 @@ fn lower_conv_algo(
     scheme: ConvScheme,
     kernel: Vec<f32>,
     (kh, kw, c, oc): (usize, usize, usize, usize),
+    lanes: usize,
     summary: &mut PlanSummary,
 ) -> (k::ConvAlgo, &'static str) {
     let taps = kh * kw * c;
@@ -1086,11 +1223,23 @@ fn lower_conv_algo(
     match scheme {
         ConvScheme::Direct => {
             summary.direct_conv += 1;
-            (k::ConvAlgo::Direct { panels: simd::pack_conv_panels(&kernel, taps, oc) }, "direct")
+            (
+                k::ConvAlgo::Direct {
+                    panels: simd::pack_conv_panels_any(&kernel, taps, oc, lanes),
+                    lanes,
+                },
+                "direct",
+            )
         }
         ConvScheme::Im2col => {
             summary.im2col_conv += 1;
-            (k::ConvAlgo::Im2col { panels: simd::pack_conv_panels(&kernel, taps, oc) }, "im2col")
+            (
+                k::ConvAlgo::Im2col {
+                    panels: simd::pack_conv_panels_any(&kernel, taps, oc, lanes),
+                    lanes,
+                },
+                "im2col",
+            )
         }
         _ => (k::ConvAlgo::Generic { kernel }, "generic"),
     }
@@ -1133,7 +1282,7 @@ fn lower_dense_algo(
     units: usize,
     opts: CompileOptions,
     summary: &mut PlanSummary,
-) -> (k::DenseAlgo, usize, &'static str) {
+) -> (k::DenseAlgo, usize, &'static str, usize) {
     #[derive(Clone, Copy)]
     enum Pick {
         Rotated,
@@ -1143,21 +1292,39 @@ fn lower_dense_algo(
     }
     let square = in_dim == units && units % 4 == 0;
     let rotatable = square && units <= simd::ROTATED_STACK_MAX;
+    let max_lanes = opts.max_lanes();
     let candidates = cost::dense_candidates(
         &cost::DenseDims { in_dim, units },
         opts.batch_hint.max(1),
         simd::ROTATED_STACK_MAX,
+        max_lanes,
     );
-    let (pick, reason) = match opts.dense {
-        DenseScheme::Generic => (Pick::Generic, cost::DecisionReason::Forced),
-        DenseScheme::Rotated => (
-            if rotatable { Pick::Rotated } else { Pick::Panels },
-            cost::DecisionReason::Forced,
-        ),
-        DenseScheme::Broadcast => (
-            if square { Pick::Broadcast } else { Pick::Panels },
-            cost::DecisionReason::Forced,
-        ),
+    let (pick, lanes, reason) = match opts.dense {
+        DenseScheme::Generic => (Pick::Generic, 1, cost::DecisionReason::Forced),
+        DenseScheme::Rotated => {
+            let (p, label) = if rotatable {
+                (Pick::Rotated, "gemm+rotated")
+            } else {
+                (Pick::Panels, "gemm+panels")
+            };
+            (
+                p,
+                forced_lanes(&candidates, label, false, max_lanes),
+                cost::DecisionReason::Forced,
+            )
+        }
+        DenseScheme::Broadcast => {
+            let (p, label) = if square {
+                (Pick::Broadcast, "gemm+broadcast")
+            } else {
+                (Pick::Panels, "gemm+panels")
+            };
+            (
+                p,
+                forced_lanes(&candidates, label, false, max_lanes),
+                cost::DecisionReason::Forced,
+            )
+        }
         DenseScheme::Auto => match cost::pick(&candidates, false) {
             // the estimator only lists legal candidates, so the argmin
             // label maps straight onto a lowering
@@ -1168,19 +1335,21 @@ fn lower_dense_algo(
                     "generic" => Pick::Generic,
                     _ => Pick::Panels,
                 },
+                best.lanes,
                 cost::DecisionReason::CostModel,
             ),
             // zero-MAC layer: the panels GEMM handles any shape
-            None => (Pick::Panels, cost::DecisionReason::Fallback),
+            None => (Pick::Panels, fallback_lanes(max_lanes), cost::DecisionReason::Fallback),
         },
     };
     let (algo, scratch_len, label) = if matches!(pick, Pick::Generic) {
         summary.weight_elems += kernel.len();
         (k::DenseAlgo::Generic { kernel }, 0, "generic")
     } else {
-        let panels = simd::pack_dense_panels(&kernel, in_dim, units);
+        let panels = simd::pack_dense_panels_any(&kernel, in_dim, units, lanes);
         summary.weight_elems += panels.len();
         summary.gemm_dense += 1;
+        summary.lane_width = summary.lane_width.max(lanes);
         let (tail, scratch_len, label) = match pick {
             Pick::Rotated => {
                 summary.rotated_dense += 1;
@@ -1199,21 +1368,28 @@ fn lower_dense_algo(
                 (k::DenseTail::Panels, 0, "gemm+panels")
             }
         };
-        (k::DenseAlgo::Gemm { panels, tail }, scratch_len, label)
+        (k::DenseAlgo::Gemm { panels, lanes, tail }, scratch_len, label)
     };
-    let predicted =
-        candidates.iter().find(|c| c.scheme == label).map_or(0.0, |c| c.cycles);
+    let predicted = candidates
+        .iter()
+        .find(|c| c.scheme == label && c.lanes == lanes)
+        .map_or(0.0, |c| c.cycles);
+    let tasks =
+        cost::parallel_tasks(predicted, opts.batch_hint.max(1), opts.intra_threads);
+    summary.parallel_tasks = summary.parallel_tasks.max(tasks);
     summary.report.decisions.push(cost::LayerDecision {
         layer: layer.to_string(),
         op: "dense",
         candidates,
         chosen: label,
+        lane_width: lanes,
+        parallel_tasks: tasks,
         predicted_cycles: predicted,
         reason,
         fused_pool: false,
         elided: false,
     });
-    (algo, scratch_len, label)
+    (algo, scratch_len, label, tasks)
 }
 
 /// Transpose a `[n, out]`-layout Dense kernel (`y[o] = Σ_i x[i] K[i][o]`)
@@ -1319,10 +1495,11 @@ fn srcs_dst(
 
 /// Conv2d under any §3.3 scheme ([`k::ConvAlgo`] chosen at lowering), with
 /// the §3.4 epilogue in the store loop and optionally a fused
-/// single-consumer MaxPool. Its [`Scratch`] span packs the per-pixel pool
-/// `cell` (first `cell_len` elements) followed by the im2col gather row,
-/// so the conv intermediate never exists in the arena and the kernel never
-/// mutates itself.
+/// single-consumer MaxPool. Its [`Scratch`] span holds `tasks` disjoint
+/// stripes, each packing the per-pixel pool `cell` (first `cell_len`
+/// elements) followed by the im2col gather row, so the conv intermediate
+/// never exists in the arena, parallel bands never alias, and the kernel
+/// never mutates itself.
 struct ConvK {
     src: Span,
     dst: Span,
@@ -1335,6 +1512,8 @@ struct ConvK {
     ep: EpSpec,
     pool: Option<(usize, usize, usize)>,
     cell_len: usize,
+    /// Intra-op task budget planned by [`cost::parallel_tasks`].
+    tasks: usize,
     scratch: Scratch,
 }
 
@@ -1342,7 +1521,6 @@ impl Kernel for ConvK {
     fn run(&self, batch: usize, data: &mut [f32], scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
-        let (cell, row) = self.scratch.slice(scratch).split_at_mut(self.cell_len);
         k::conv2d_run(
             x,
             (batch, h, w, c),
@@ -1353,8 +1531,8 @@ impl Kernel for ConvK {
             self.padding,
             self.ep.epilogue(),
             self.pool,
-            cell,
-            row,
+            (self.cell_len, self.tasks),
+            self.scratch.slice(scratch),
             out,
         );
     }
@@ -1403,6 +1581,9 @@ struct DenseK {
     units: usize,
     algo: k::DenseAlgo,
     bias: Option<Vec<f32>>,
+    /// Intra-op task budget planned by [`cost::parallel_tasks`]; the
+    /// [`Scratch`] span holds one rotated-tail window per task.
+    tasks: usize,
     scratch: Scratch,
     ep: EpSpec,
 }
@@ -1418,6 +1599,7 @@ impl Kernel for DenseK {
             self.bias.as_deref(),
             self.ep.epilogue(),
             self.scratch.slice(scratch),
+            self.tasks,
             out,
         );
     }
@@ -1975,6 +2157,86 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+    }
+
+    /// PR 7 tentpole: forcing a lane width changes only performance — every
+    /// width is the same arithmetic per scheme, so forced-scalar and
+    /// forced-8-lane lowerings stay within the existing tolerance of the
+    /// oracle, and the decision trail records the width actually emitted.
+    #[test]
+    fn lane_force_is_recorded_and_still_correct() {
+        let spec = tiny_cnn(74);
+        let mut rng = SplitMix64::new(44);
+        let x = Tensor::from_vec(&[3, 8, 8, 3], rng.uniform_vec(3 * 8 * 8 * 3));
+        let want = NaiveInterp::new(spec.clone()).unwrap().infer(&x).unwrap();
+        for (sel, width) in [
+            (LaneSelect::Scalar, 1usize),
+            (LaneSelect::W4, 4),
+            (LaneSelect::W8, 8),
+            (LaneSelect::W16, 16),
+        ] {
+            let opts =
+                CompileOptions { approx: false, lanes: sel, ..CompileOptions::default() };
+            let p = Program::lower(&spec, opts).unwrap();
+            let s = p.summary();
+            // a forced ceiling bounds every recorded width; forcing scalar
+            // pins every kernel to 1 exactly
+            for d in s.report.decisions.iter().filter(|d| !d.elided) {
+                assert!(d.lane_width <= width, "{sel:?}: {d:?}");
+                assert!(d.lane_width >= 1, "{sel:?}: {d:?}");
+            }
+            if width == 1 {
+                assert_eq!(s.lane_width, 1, "{s}");
+            } else {
+                assert!(s.lane_width >= 4, "{s}");
+            }
+            let mut arena = p.new_arena(3);
+            p.load_input(&mut arena, &x);
+            p.run(&mut arena);
+            let got = p.read_outputs(&arena);
+            let d = want[0].max_abs_diff(&got[0]);
+            assert!(d < 1e-4, "{sel:?}: diff {d}");
+        }
+    }
+
+    /// PR 7 tentpole: intra-op banding is a pure partition of the same
+    /// arithmetic over disjoint output/scratch spans, so the parallel
+    /// lowering is **bitwise** identical to the sequential one — for every
+    /// forced lane width, on a net big enough that the cost model actually
+    /// plans multi-task kernels.
+    #[test]
+    fn intra_op_parallel_matches_sequential_bitwise() {
+        use crate::model::builder::wide_cnn;
+
+        let spec = wide_cnn(91);
+        let mut rng = SplitMix64::new(41);
+        let x = Tensor::from_vec(&[2, 32, 32, 8], rng.uniform_vec(2 * 32 * 32 * 8));
+        for sel in [LaneSelect::Scalar, LaneSelect::W4, LaneSelect::W8] {
+            let base = CompileOptions { lanes: sel, ..CompileOptions::default() };
+            let seq = run_program(&spec, base, &x);
+            let par_opts = CompileOptions { intra_threads: 4, ..base };
+            let p = Program::lower(&spec, par_opts).unwrap();
+            assert!(
+                p.summary().parallel_tasks > 1,
+                "{sel:?}: cost model kept everything sequential: {}",
+                p.summary()
+            );
+            let mut arena = p.new_arena(2);
+            p.load_input(&mut arena, &x);
+            p.run(&mut arena);
+            let par = p.read_outputs(&arena);
+            let a: Vec<u32> = seq[0].data().iter().map(|v| v.to_bits()).collect();
+            let b: Vec<u32> = par[0].data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(a, b, "{sel:?}: parallel split changed bits");
+        }
+        // ...while a small net stays sequential under the same thread budget
+        let tiny = tiny_cnn(75);
+        let p = Program::lower(
+            &tiny,
+            CompileOptions { intra_threads: 4, ..CompileOptions::default() },
+        )
+        .unwrap();
+        assert_eq!(p.summary().parallel_tasks, 1, "{}", p.summary());
     }
 
     #[test]

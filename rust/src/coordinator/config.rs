@@ -37,6 +37,12 @@ pub struct ServingConfig {
     /// artifact (`"workers": 4`); default `min(4, cores)`. Engines without
     /// one (naive, PJRT) stay pinned to the executor thread.
     pub workers: usize,
+    /// Intra-op task budget compiled into each lowered program
+    /// (`"intra_threads": 4` → `CompileOptions::intra_threads`): how many
+    /// bands one inference may split a large conv/GEMM across. Default 1 —
+    /// the worker pool already spends the cores across requests; raise it
+    /// for latency-critical single-stream serving of big nets.
+    pub intra_threads: usize,
 }
 
 impl Default for ServingConfig {
@@ -48,6 +54,7 @@ impl Default for ServingConfig {
             queue_depth: 1024,
             engine: EngineKind::preferred(),
             workers: default_workers(),
+            intra_threads: 1,
         }
     }
 }
@@ -83,6 +90,11 @@ impl ServingConfig {
                 None => d.engine,
             },
             workers: j.get("workers").and_then(Json::as_usize).unwrap_or(d.workers).max(1),
+            intra_threads: j
+                .get("intra_threads")
+                .and_then(Json::as_usize)
+                .unwrap_or(d.intra_threads)
+                .max(1),
         })
     }
 
@@ -98,6 +110,7 @@ impl ServingConfig {
             queue_depth: self.queue_depth,
             engine: self.engine,
             workers: self.workers,
+            intra_threads: self.intra_threads,
         }
     }
 }
@@ -146,6 +159,19 @@ mod tests {
         // 0 would mean "no execution lane"; clamp to 1
         let z = ServingConfig::parse(r#"{"models": ["c_bh"], "workers": 0}"#).unwrap();
         assert_eq!(z.workers, 1);
+    }
+
+    #[test]
+    fn intra_threads_key_parses_and_defaults() {
+        let c =
+            ServingConfig::parse(r#"{"models": ["c_bh"], "intra_threads": 4}"#).unwrap();
+        assert_eq!(c.intra_threads, 4);
+        assert_eq!(c.coordinator_config().intra_threads, 4);
+        let d = ServingConfig::parse(r#"{"models": ["c_bh"]}"#).unwrap();
+        assert_eq!(d.intra_threads, 1);
+        // 0 would disable the kernels' band loop entirely; clamp to 1
+        let z = ServingConfig::parse(r#"{"models": ["c_bh"], "intra_threads": 0}"#).unwrap();
+        assert_eq!(z.intra_threads, 1);
     }
 
     #[test]

@@ -133,6 +133,12 @@ pub struct CoordinatorConfig {
     /// artifact. Engines without one (naive, PJRT) always get the single
     /// pinned executor thread regardless of this setting.
     pub workers: usize,
+    /// Intra-op task budget compiled into each lowered program
+    /// (`CompileOptions::intra_threads`). Default 1: the pool spends cores
+    /// across concurrent batches; raising this instead splits each large
+    /// conv/GEMM into that many bands within a single inference, which is
+    /// the better trade for single-stream big-net serving.
+    pub intra_threads: usize,
 }
 
 /// Default per-model pool size: `min(4, cores)`.
@@ -147,6 +153,7 @@ impl Default for CoordinatorConfig {
             queue_depth: 1024,
             engine: EngineKind::preferred(),
             workers: default_workers(),
+            intra_threads: 1,
         }
     }
 }
@@ -191,10 +198,11 @@ impl Coordinator {
     pub fn start(manifest: Manifest, cfg: CoordinatorConfig) -> Result<Arc<Self>> {
         let (exec_tx, exec_rx) = mpsc::channel::<ExecMsg>();
         let engine_kind = cfg.engine;
+        let intra_threads = cfg.intra_threads.max(1);
         let manifest_models = manifest.models.keys().cloned().collect();
         let exec_thread = std::thread::Builder::new()
             .name("engine-executor".into())
-            .spawn(move || executor_main(manifest, engine_kind, exec_rx))
+            .spawn(move || executor_main(manifest, engine_kind, intra_threads, exec_rx))
             .context("spawning executor thread")?;
         Ok(Arc::new(Self {
             exec_tx,
@@ -489,8 +497,17 @@ fn worker_main(
 /// is a cache hit. Shareable engines are also *built* here (one code
 /// path), but their inference traffic never arrives: the worker pool owns
 /// it.
-fn executor_main(manifest: Manifest, kind: EngineKind, rx: Receiver<ExecMsg>) {
-    let opts = EngineOptions::default();
+fn executor_main(
+    manifest: Manifest,
+    kind: EngineKind,
+    intra_threads: usize,
+    rx: Receiver<ExecMsg>,
+) {
+    let compile = crate::compiler::exec::CompileOptions {
+        intra_threads,
+        ..crate::compiler::exec::CompileOptions::default()
+    };
+    let opts = EngineOptions { compile, ..EngineOptions::default() };
     let mut engines: HashMap<String, Box<dyn Engine>> = HashMap::new();
 
     while let Ok(msg) = rx.recv() {

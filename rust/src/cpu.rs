@@ -1,0 +1,123 @@
+//! Host CPU feature probing and the lane-width dispatch policy.
+//!
+//! Every width-generic microkernel in [`crate::nn::simd`] is *correct* on
+//! any CPU — the `[f32; W]` forms are plain Rust that LLVM lowers onto
+//! whatever vector unit exists (or scalar code). Which width is *fast* is
+//! a per-host question: 8-lane groups only pay off when the host has
+//! 256-bit units (AVX2), 16-lane groups need AVX-512F. This module answers
+//! that question once, and `Program::lower` treats the answer as an input
+//! to the §3.3 cost model rather than a hard override — a tail-dominated
+//! layer can still legitimately prefer 4 lanes on an AVX-512 host.
+//!
+//! Dispatch precedence (widest to run by default, narrowest to debug):
+//!
+//! 1. an explicit width forced via `CompileOptions::lanes`,
+//! 2. the `COMPILED_NN_FORCE_LANES` environment variable
+//!    (`scalar`/`1`/`4`/`8`/`16`) — how CI exercises every dispatch path
+//!    on runners without AVX-512,
+//! 3. the widest width the probed [`Features`] support.
+
+/// The ISA features the lane dispatch cares about. Probed with
+/// `is_x86_feature_detected!` on x86-64; conservatively all-false on every
+/// other architecture (the portable 4-lane kernels remain the default
+/// there).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Features {
+    /// 256-bit vector units (AVX2 implies AVX + FMA-capable cores in
+    /// practice; the kernels don't emit intrinsics, so AVX2 alone is the
+    /// signal that 8-lane groups map onto one register).
+    pub avx2: bool,
+    /// 512-bit vector units (AVX-512 Foundation).
+    pub avx512f: bool,
+}
+
+impl Features {
+    /// Probe the host. Cheap enough to call per lowering (the macro caches
+    /// its CPUID results internally), and deterministic for a given host.
+    #[cfg(target_arch = "x86_64")]
+    pub fn detect() -> Features {
+        Features {
+            avx2: std::arch::is_x86_feature_detected!("avx2"),
+            avx512f: std::arch::is_x86_feature_detected!("avx512f"),
+        }
+    }
+
+    /// Non-x86 hosts: no wide-vector claim, 4-lane kernels stay default.
+    #[cfg(not(target_arch = "x86_64"))]
+    pub fn detect() -> Features {
+        Features::default()
+    }
+
+    /// The widest profitable lane width for these features: 16 on
+    /// AVX-512F, 8 on AVX2, else the 4-lane SSE baseline (x86-64 always
+    /// has SSE2; other ISAs get the same portable 4-lane code).
+    pub fn max_lanes(self) -> usize {
+        if self.avx512f {
+            16
+        } else if self.avx2 {
+            8
+        } else {
+            4
+        }
+    }
+}
+
+/// Parse a `COMPILED_NN_FORCE_LANES` value. Accepts `scalar` (or `1`),
+/// `4`, `8`, `16`; anything else is `None` (ignored, auto-detect wins).
+pub fn parse_force_lanes(s: &str) -> Option<usize> {
+    match s.trim() {
+        "scalar" | "1" => Some(1),
+        "4" => Some(4),
+        "8" => Some(8),
+        "16" => Some(16),
+        _ => None,
+    }
+}
+
+/// The environment override, if set and valid.
+pub fn env_force_lanes() -> Option<usize> {
+    std::env::var("COMPILED_NN_FORCE_LANES").ok().and_then(|v| parse_force_lanes(&v))
+}
+
+/// The lane width `Auto` dispatch resolves to on this host: the
+/// environment override when present, else the widest detected width.
+/// This is the *candidate ceiling* for the cost model — lowering prices
+/// every width up to this and may still pick a narrower one.
+pub fn auto_lanes() -> usize {
+    env_force_lanes().unwrap_or_else(|| Features::detect().max_lanes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_lanes_orders_the_feature_ladder() {
+        assert_eq!(Features { avx2: false, avx512f: false }.max_lanes(), 4);
+        assert_eq!(Features { avx2: true, avx512f: false }.max_lanes(), 8);
+        assert_eq!(Features { avx2: true, avx512f: true }.max_lanes(), 16);
+        // a (hypothetical) avx512f-without-avx2 report still takes 16
+        assert_eq!(Features { avx2: false, avx512f: true }.max_lanes(), 16);
+    }
+
+    #[test]
+    fn force_lanes_parses_the_documented_values_only() {
+        assert_eq!(parse_force_lanes("scalar"), Some(1));
+        assert_eq!(parse_force_lanes("1"), Some(1));
+        assert_eq!(parse_force_lanes("4"), Some(4));
+        assert_eq!(parse_force_lanes(" 8 "), Some(8));
+        assert_eq!(parse_force_lanes("16"), Some(16));
+        assert_eq!(parse_force_lanes("32"), None);
+        assert_eq!(parse_force_lanes("avx2"), None);
+        assert_eq!(parse_force_lanes(""), None);
+    }
+
+    #[test]
+    fn detect_reports_a_supported_width() {
+        // whatever the host, the resolved width must be one the kernels
+        // are instantiated at
+        let w = Features::detect().max_lanes();
+        assert!(crate::nn::simd::LANE_WIDTHS.contains(&w));
+        assert!(crate::nn::simd::LANE_WIDTHS.contains(&auto_lanes()));
+    }
+}

@@ -38,6 +38,7 @@ pub mod approx;
 pub mod bench;
 pub mod compiler;
 pub mod coordinator;
+pub mod cpu;
 pub mod engine;
 #[allow(missing_docs)]
 pub mod model;

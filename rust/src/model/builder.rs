@@ -374,6 +374,22 @@ pub fn tiny_cnn(seed: u64) -> ModelSpec {
     b.finish(&[&s])
 }
 
+/// A wider CNN (32×32×8 → 32ch → 64ch → dense head) whose conv layers do
+/// millions of MACs each — big enough that the §3.3 cost model plans
+/// multi-task intra-op splits and the lane-width choice is visible in
+/// benches, while tiny_cnn stays firmly under the parallel threshold.
+pub fn wide_cnn(seed: u64) -> ModelSpec {
+    let mut b = Builder::new("wide_cnn", &[32, 32, 8], seed);
+    let c1 = b.conv2d("input", 32, 3, 1, Activation::Relu);
+    let p1 = b.maxpool(&c1, 2);
+    let c2 = b.conv2d(&p1, 64, 3, 1, Activation::Relu);
+    let p2 = b.maxpool(&c2, 2);
+    let f = b.flatten(&p2);
+    let d = b.dense(&f, 10, Activation::Linear);
+    let s = b.softmax(&d);
+    b.finish(&[&s])
+}
+
 /// An MLP of square `n×n` dense layers (`depth` hidden + 1 head + softmax)
 /// — every layer is eligible for the §3.3 matvec schemes, which makes it
 /// the rotated-vs-broadcast ablation vehicle.

@@ -14,6 +14,14 @@
 //!
 //! Written with 4-lane arrays ([f32; 4]) so LLVM autovectorizes to SSE — the
 //! offline image has no `std::simd`/`wide`; benches/matvec.rs measures both.
+//!
+//! Since PR 7 the conv/GEMM microkernels are **width-generic**: the
+//! `_w::<W>` forms below instantiate the same algorithms over a const lane
+//! width `W ∈ {1, 4, 8, 16}` (scalar reference, SSE, AVX2, AVX-512F vector
+//! shapes — all expressed as fixed-size `[f32; W]` arrays LLVM maps onto
+//! whatever the host ISA offers, so every width is *correct* everywhere;
+//! [`crate::cpu`] decides which width is *fast* here). The historical
+//! 4-wide names are retained as `W = 4` wrappers.
 
 /// Largest `n` for which [`matvec_rotated`] stays on its stack-resident
 /// doubled-`x` window. The `Program` lowering only selects the rotated
@@ -38,6 +46,88 @@ pub const GEMM_NR: usize = 4;
 // axis by the same 4-lane unit.
 const _: () = assert!(CONV_BLOCK == GEMM_MR);
 
+/// Every lane width the microkernels are instantiated at: the scalar
+/// reference (1), SSE (4), AVX2 (8) and AVX-512F (16) vector shapes.
+/// Lowering dispatches among these; [`crate::cpu::auto_lanes`] picks the
+/// default for the host.
+pub const LANE_WIDTHS: [usize; 4] = [1, 4, 8, 16];
+
+/// Width-generic [`pack_conv_panels`]: block the output-channel axis by
+/// `W` lanes instead of 4 —
+///
+/// ```text
+/// panels[(ob * taps + t) * W + l] = kernel[t * oc + ob * W + l]
+/// ```
+///
+/// Tail lanes (oc not a multiple of `W`) are zero and never stored back,
+/// so a wider block trades tail waste for fewer passes — exactly the
+/// trade `compiler::cost` prices per layer.
+pub fn pack_conv_panels_w<const W: usize>(kernel: &[f32], taps: usize, oc: usize) -> Vec<f32> {
+    assert!(W > 0);
+    assert_eq!(kernel.len(), taps * oc);
+    let blocks = oc.div_ceil(W);
+    let mut panels = vec![0.0; blocks * taps * W];
+    for ob in 0..blocks {
+        for t in 0..taps {
+            for l in 0..W {
+                let o = ob * W + l;
+                if o < oc {
+                    panels[(ob * taps + t) * W + l] = kernel[t * oc + o];
+                }
+            }
+        }
+    }
+    panels
+}
+
+/// Width-generic [`conv_fma_run`]: `acc[l] += Σ_i x[i] * panel[i*W + l]`.
+/// At `W = 1` this is the scalar reference loop; at 4/8/16 LLVM
+/// autovectorizes the lane loop to the host's widest available unit. The
+/// per-lane accumulation order is identical at every width, so a lane
+/// computed at `W = 16` is bit-identical to the same output channel
+/// computed at `W = 1`.
+#[inline(always)]
+pub fn conv_fma_run_w<const W: usize>(panel: &[f32], x: &[f32], acc: &mut [f32; W]) {
+    debug_assert_eq!(panel.len(), x.len() * W);
+    for (lanes, &xv) in panel.chunks_exact(W).zip(x) {
+        for l in 0..W {
+            acc[l] += xv * lanes[l];
+        }
+    }
+}
+
+/// Width-generic [`pack_dense_panels`] (same layout with `taps = in_dim`).
+pub fn pack_dense_panels_w<const W: usize>(
+    kernel: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+) -> Vec<f32> {
+    pack_conv_panels_w::<W>(kernel, in_dim, out_dim)
+}
+
+/// Width-generic [`gemm_fma_run`]: a `W × GEMM_NR` register tile (`W`
+/// output lanes × 4 batch items). Accumulation over `i` is ascending per
+/// (item, lane) — the same order as a 1-wide [`conv_fma_run_w`] pass, so
+/// tiles and tails agree bit-for-bit at every width.
+#[inline(always)]
+pub fn gemm_fma_run_w<const W: usize>(
+    panel: &[f32],
+    x4: &[f32],
+    in_dim: usize,
+    acc: &mut [[f32; W]; GEMM_NR],
+) {
+    debug_assert_eq!(panel.len(), in_dim * W);
+    debug_assert_eq!(x4.len(), GEMM_NR * in_dim);
+    for (i, lanes) in panel.chunks_exact(W).enumerate() {
+        for n in 0..GEMM_NR {
+            let xv = x4[n * in_dim + i];
+            for l in 0..W {
+                acc[n][l] += xv * lanes[l];
+            }
+        }
+    }
+}
+
 /// Pre-pack an HWIO conv kernel (flattened `[taps, oc]`, `taps = kh*kw*c`)
 /// into output-channel-blocked panels:
 ///
@@ -50,20 +140,32 @@ const _: () = assert!(CONV_BLOCK == GEMM_MR);
 /// of 4) are zero and never stored back. O(taps·oc), done once at lowering
 /// — "the memory layout of the matrix can be chosen arbitrarily" (§3.3).
 pub fn pack_conv_panels(kernel: &[f32], taps: usize, oc: usize) -> Vec<f32> {
-    assert_eq!(kernel.len(), taps * oc);
-    let blocks = oc.div_ceil(CONV_BLOCK);
-    let mut panels = vec![0.0; blocks * taps * CONV_BLOCK];
-    for ob in 0..blocks {
-        for t in 0..taps {
-            for l in 0..CONV_BLOCK {
-                let o = ob * CONV_BLOCK + l;
-                if o < oc {
-                    panels[(ob * taps + t) * CONV_BLOCK + l] = kernel[t * oc + o];
-                }
-            }
-        }
+    pack_conv_panels_w::<CONV_BLOCK>(kernel, taps, oc)
+}
+
+/// Pack conv panels at a runtime-chosen lane width — the lowering-side
+/// dispatch over [`pack_conv_panels_w`]. `lanes` must be one of
+/// [`LANE_WIDTHS`] and must match the width recorded in the kernel algo
+/// that will consume the panels (unlisted widths fall back to 4, mirroring
+/// the kernels' own dispatch).
+pub fn pack_conv_panels_any(kernel: &[f32], taps: usize, oc: usize, lanes: usize) -> Vec<f32> {
+    match lanes {
+        1 => pack_conv_panels_w::<1>(kernel, taps, oc),
+        8 => pack_conv_panels_w::<8>(kernel, taps, oc),
+        16 => pack_conv_panels_w::<16>(kernel, taps, oc),
+        _ => pack_conv_panels_w::<4>(kernel, taps, oc),
     }
-    panels
+}
+
+/// Dense-layer spelling of [`pack_conv_panels_any`] (`in_dim` taps,
+/// `out_dim` channels).
+pub fn pack_dense_panels_any(
+    kernel: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    lanes: usize,
+) -> Vec<f32> {
+    pack_conv_panels_any(kernel, in_dim, out_dim, lanes)
 }
 
 /// The 4-lane FMA microkernel: `acc[l] += Σ_i x[i] * panel[i*4 + l]` over a
@@ -74,12 +176,7 @@ pub fn pack_conv_panels(kernel: &[f32], taps: usize, oc: usize) -> Vec<f32> {
 /// one store per pixel regardless of kernel size.
 #[inline(always)]
 pub fn conv_fma_run(panel: &[f32], x: &[f32], acc: &mut [f32; CONV_BLOCK]) {
-    debug_assert_eq!(panel.len(), x.len() * CONV_BLOCK);
-    for (lanes, &xv) in panel.chunks_exact(CONV_BLOCK).zip(x) {
-        for l in 0..CONV_BLOCK {
-            acc[l] += xv * lanes[l];
-        }
-    }
+    conv_fma_run_w::<CONV_BLOCK>(panel, x, acc)
 }
 
 /// Pre-pack a Dense kernel (row-major `[in_dim, out_dim]`, Keras
@@ -115,16 +212,7 @@ pub fn gemm_fma_run(
     in_dim: usize,
     acc: &mut [[f32; GEMM_MR]; GEMM_NR],
 ) {
-    debug_assert_eq!(panel.len(), in_dim * GEMM_MR);
-    debug_assert_eq!(x4.len(), GEMM_NR * in_dim);
-    for (i, lanes) in panel.chunks_exact(GEMM_MR).enumerate() {
-        for n in 0..GEMM_NR {
-            let xv = x4[n * in_dim + i];
-            for l in 0..GEMM_MR {
-                acc[n][l] += xv * lanes[l];
-            }
-        }
-    }
+    gemm_fma_run_w::<GEMM_MR>(panel, x4, in_dim, acc)
 }
 
 /// Pre-permute W (row-major `[n, n]`, `y = W x` orientation) into stacked
@@ -346,6 +434,56 @@ mod tests {
                 assert_eq!(acc[n][l].to_bits(), one[l].to_bits(), "item {n} lane {l}");
             }
         }
+    }
+
+    #[test]
+    fn wide_panels_and_fma_runs_bit_match_the_scalar_reference() {
+        // Every instantiated width must produce bit-identical output
+        // channels to the W = 1 scalar reference — the property the
+        // runtime dispatch relies on to change *speed only*.
+        fn per_width<const W: usize>(kernel: &[f32], x: &[f32], taps: usize, oc: usize) {
+            let p = pack_conv_panels_w::<W>(kernel, taps, oc);
+            assert_eq!(p.len(), oc.div_ceil(W) * taps * W);
+            for o in 0..oc {
+                let mut one = [0.0f32; 1];
+                let p1 = pack_conv_panels_w::<1>(kernel, taps, oc);
+                conv_fma_run_w::<1>(&p1[o * taps..(o + 1) * taps], x, &mut one);
+                let mut acc = [0.0f32; W];
+                let ob = o / W;
+                conv_fma_run_w::<W>(&p[ob * taps * W..(ob + 1) * taps * W], x, &mut acc);
+                assert_eq!(acc[o % W].to_bits(), one[0].to_bits(), "W={W} chan {o}");
+            }
+        }
+        let mut r = SplitMix64::new(71);
+        for (taps, oc) in [(9, 6), (5, 4), (12, 17), (3, 1)] {
+            let kernel = r.uniform_vec(taps * oc);
+            let x = r.uniform_vec(taps);
+            per_width::<4>(&kernel, &x, taps, oc);
+            per_width::<8>(&kernel, &x, taps, oc);
+            per_width::<16>(&kernel, &x, taps, oc);
+        }
+    }
+
+    #[test]
+    fn wide_gemm_tiles_bit_match_their_one_item_fma_pass() {
+        fn per_width<const W: usize>(kernel: &[f32], x4: &[f32], in_dim: usize) {
+            let p = pack_dense_panels_w::<W>(kernel, in_dim, W);
+            let mut acc = [[0.0f32; W]; GEMM_NR];
+            gemm_fma_run_w::<W>(&p, x4, in_dim, &mut acc);
+            for n in 0..GEMM_NR {
+                let mut one = [0.0f32; W];
+                conv_fma_run_w::<W>(&p, &x4[n * in_dim..(n + 1) * in_dim], &mut one);
+                for l in 0..W {
+                    assert_eq!(acc[n][l].to_bits(), one[l].to_bits(), "W={W} item {n} lane {l}");
+                }
+            }
+        }
+        let mut r = SplitMix64::new(72);
+        let in_dim = 11;
+        let kernel16 = r.uniform_vec(in_dim * 16);
+        let x4 = r.uniform_vec(GEMM_NR * in_dim);
+        per_width::<8>(&kernel16[..in_dim * 8], &x4, in_dim);
+        per_width::<16>(&kernel16, &x4, in_dim);
     }
 
     #[test]

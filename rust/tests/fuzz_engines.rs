@@ -7,14 +7,17 @@
 //! combination** at batch sizes {1, 3, 8} — covering the all-tail matvec
 //! path, full GEMM tiles, tiles + tail, and the per-batch arena spans —
 //! and must match the `NaiveInterp` oracle within 1e-4 (relative to the
-//! output magnitude). The bit-exact combo is additionally held to
-//! bit-for-bit equality on the MLPs, batched included.
+//! output magnitude). Since PR 7 the grid also forces every SIMD lane
+//! width (scalar/4/8, 16 where detected) and the intra-op parallel split,
+//! alone and combined with wide lanes. The bit-exact combo (pinned to
+//! scalar lanes and a single task) is additionally held to bit-for-bit
+//! equality on the MLPs, batched included.
 //!
 //! Failures print the propcheck seed (`PROPCHECK_SEED=0x… cargo test
 //! fuzz_`) plus the failing spec's own seed, so any case replays exactly.
 //! CI pins `PROPCHECK_SEED` so the suite is deterministic in the pipeline.
 
-use compiled_nn::compiler::exec::{CompileOptions, ConvScheme, DenseScheme};
+use compiled_nn::compiler::exec::{CompileOptions, ConvScheme, DenseScheme, LaneSelect};
 use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
 use compiled_nn::model::builder::{random_conv_net, random_mlp};
 use compiled_nn::model::spec::ModelSpec;
@@ -23,13 +26,16 @@ use compiled_nn::util::propcheck::check;
 use compiled_nn::util::rng::SplitMix64;
 
 /// Every lowering-option combination the differential suite covers: all
-/// four conv schemes, pool fusion on/off, plus the non-conv axes that
-/// change kernel selection (dense scheme, folding, memory reuse) and the
-/// fully pinned bit-exact reference path. Approximations stay off so every
-/// combo shares the oracle tolerance.
+/// four conv schemes, pool fusion on/off, the non-conv axes that change
+/// kernel selection (dense scheme, folding, memory reuse), the fully
+/// pinned bit-exact reference path, every forced lane width (16-lane only
+/// where detected — all widths are *portable*, the gate just keeps the
+/// suite representative of real dispatch), and the intra-op parallel
+/// split on its own and combined with wide lanes. Approximations stay off
+/// so every combo shares the oracle tolerance.
 fn combos() -> Vec<(&'static str, CompileOptions)> {
     let base = CompileOptions { approx: false, ..CompileOptions::default() };
-    vec![
+    let mut v = vec![
         ("auto", base),
         ("bit-exact", CompileOptions::bit_exact()),
         ("direct", CompileOptions { conv: ConvScheme::Direct, ..base }),
@@ -48,7 +54,19 @@ fn combos() -> Vec<(&'static str, CompileOptions)> {
         ("dense-rotated", CompileOptions { dense: DenseScheme::Rotated, ..base }),
         ("dense-broadcast", CompileOptions { dense: DenseScheme::Broadcast, ..base }),
         ("dense-generic", CompileOptions { dense: DenseScheme::Generic, ..base }),
-    ]
+        ("lanes-scalar", CompileOptions { lanes: LaneSelect::Scalar, ..base }),
+        ("lanes-4", CompileOptions { lanes: LaneSelect::W4, ..base }),
+        ("lanes-8", CompileOptions { lanes: LaneSelect::W8, ..base }),
+        ("parallel", CompileOptions { intra_threads: 4, ..base }),
+        (
+            "lanes-8-parallel",
+            CompileOptions { lanes: LaneSelect::W8, intra_threads: 4, ..base },
+        ),
+    ];
+    if compiled_nn::cpu::Features::detect().avx512f {
+        v.push(("lanes-16", CompileOptions { lanes: LaneSelect::W16, ..base }));
+    }
+    v
 }
 
 /// Batch sizes the suite draws: 1 (the serving fast path, all-tail
