@@ -1,21 +1,32 @@
 //! **SERVE-POOL** — the shared-`Program` worker-pool characterization: two
-//! spec-registered models served over the TCP front end by M concurrent
-//! connections, at `workers = 1` vs `workers = 4`. The paper's fixed
-//! lowered artifact makes concurrency cheap: scaling workers adds arenas,
-//! never a second lowering (asserted here via the `Program::lower` counting
-//! hook — exactly one per model per coordinator).
+//! spec-registered models served over the event-loop TCP front end under
+//! three axes:
+//!
+//! * **worker scaling** — `workers = 1` vs `workers = 4` at a fixed
+//!   connection count. The paper's fixed lowered artifact makes concurrency
+//!   cheap: scaling workers adds arenas, never a second lowering (asserted
+//!   here via the `Program::lower` counting hook — exactly one per model
+//!   per coordinator).
+//! * **connection scaling** — 1 / 8 / 64 concurrent connections at
+//!   `workers = 4`. The single-threaded readiness loop must multiplex 64
+//!   sockets without collapsing; this is the axis the old
+//!   thread-per-connection front end paid a thread apiece for.
+//! * **overload** — pipelined bursts against a tiny `max_inflight` cap:
+//!   measures the shed rate and the p99 of the requests that *were*
+//!   admitted (load-shedding exists precisely to keep that p99 sane).
 //!
 //! Runs without the artifact manifest, so CI always produces
-//! **BENCH_serving.json** (req/s + p50/p99 per worker count, and the
-//! workers=4 / workers=1 speedup) — the cross-PR record of whether the
-//! serving path actually scales with cores.
+//! **BENCH_serving.json** (req/s + p50/p99 per worker count, per-connection
+//! scaling, `shed_rate`, `p99_overload_ms`) — the cross-PR record of
+//! whether the serving path scales with cores and connections and degrades
+//! gracefully past saturation.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use compiled_nn::compiler::program::{lower_count, CompileOptions, Program};
 use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
-use compiled_nn::coordinator::tcp::{TcpClient, TcpServer};
+use compiled_nn::coordinator::tcp::{TcpClient, TcpOptions, TcpServer};
 use compiled_nn::engine::EngineKind;
 use compiled_nn::model::builder::Builder;
 use compiled_nn::model::spec::{Activation, ModelSpec};
@@ -23,10 +34,12 @@ use compiled_nn::runtime::artifact::Manifest;
 use compiled_nn::util::json::Json;
 use compiled_nn::util::rng::SplitMix64;
 
-/// Connections hammering the front end (half per model).
+/// Connections for the worker-scaling axis (half per model).
 const CONNS: usize = 8;
-/// Closed-loop measurement window per worker count.
+/// Closed-loop measurement window per configuration.
 const WINDOW: Duration = Duration::from_millis(2500);
+/// Shorter window for the connection-scaling sweep (3 extra configs).
+const CONN_WINDOW: Duration = Duration::from_millis(1500);
 
 /// A serving-weight CNN (~6 MFLOP/item over a 512-float input): execution,
 /// not wire framing, dominates — the regime where worker scaling shows.
@@ -45,6 +58,7 @@ fn serving_model(name: &str, seed: u64) -> ModelSpec {
 
 struct RunResult {
     workers: usize,
+    conns: usize,
     requests: u64,
     req_per_s: f64,
     p50_us: u64,
@@ -52,15 +66,21 @@ struct RunResult {
     lowers: u64,
 }
 
-fn run_config(workers: usize) -> anyhow::Result<RunResult> {
-    let lowers_before = lower_count();
-    let cfg = CoordinatorConfig {
+fn coordinator_config(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
         max_wait: Duration::from_micros(300),
         queue_depth: 1024,
         engine: EngineKind::Optimized,
         workers,
-    };
-    let coord = Coordinator::start(Manifest::empty(), cfg)?;
+        intra_threads: 1,
+    }
+}
+
+/// Closed-loop run: `conns` connections issue request-reply round trips
+/// for `window`, half per model.
+fn run_config(workers: usize, conns: usize, window: Duration) -> anyhow::Result<RunResult> {
+    let lowers_before = lower_count();
+    let coord = Coordinator::start(Manifest::empty(), coordinator_config(workers))?;
     coord.register_spec(&serving_model("pool_a", 61), &[1, 2, 4, 8])?;
     coord.register_spec(&serving_model("pool_b", 62), &[1, 2, 4, 8])?;
     let lowers = lower_count() - lowers_before;
@@ -68,7 +88,7 @@ fn run_config(workers: usize) -> anyhow::Result<RunResult> {
     let addr = server.addr().to_string();
 
     let item = 8 * 8 * 8;
-    let handles: Vec<_> = (0..CONNS)
+    let handles: Vec<_> = (0..conns)
         .map(|t| {
             let addr = addr.clone();
             std::thread::spawn(move || -> anyhow::Result<Vec<u64>> {
@@ -79,7 +99,7 @@ fn run_config(workers: usize) -> anyhow::Result<RunResult> {
                 // warmup outside the window
                 client.infer(name, input.clone())?;
                 let mut lat_us = Vec::with_capacity(4096);
-                let deadline = Instant::now() + WINDOW;
+                let deadline = Instant::now() + window;
                 while Instant::now() < deadline {
                     let t0 = Instant::now();
                     client.infer(name, input.clone())?;
@@ -103,11 +123,83 @@ fn run_config(workers: usize) -> anyhow::Result<RunResult> {
     let q = |p: f64| lat_us[((p * (n - 1) as f64).round() as usize).min(n - 1)];
     Ok(RunResult {
         workers,
+        conns,
         requests: n as u64,
-        req_per_s: n as f64 / WINDOW.as_secs_f64(),
+        req_per_s: n as f64 / window.as_secs_f64(),
         p50_us: q(0.5),
         p99_us: q(0.99),
         lowers,
+    })
+}
+
+struct OverloadResult {
+    sent: u64,
+    oks: u64,
+    sheds: u64,
+    shed_rate: f64,
+    p99_admitted_ms: f64,
+}
+
+/// Overload run: pipelined bursts (all requests written before any read)
+/// against a small in-flight cap. Per burst we time the whole
+/// write-everything/read-everything cycle and attribute it to every
+/// *admitted* request in the burst — a conservative upper bound on each
+/// one's latency, and exactly the number load-shedding is meant to bound.
+fn run_overload() -> anyhow::Result<OverloadResult> {
+    let coord = Coordinator::start(Manifest::empty(), coordinator_config(2))?;
+    coord.register_spec(&serving_model("pool_a", 61), &[1, 2, 4, 8])?;
+    let opts = TcpOptions { max_inflight: 8, slo_p99_ms: 0.0 };
+    let server = TcpServer::start_with(coord.clone(), "127.0.0.1:0", opts)?;
+    let addr = server.addr().to_string();
+
+    let item = 8 * 8 * 8;
+    let burst = 64usize;
+    let mut client = TcpClient::connect(&addr)?;
+    let mut rng = SplitMix64::new(4242);
+    let input = rng.uniform_vec(item);
+    client.infer("pool_a", input.clone())?; // warmup
+
+    let (mut oks, mut sheds) = (0u64, 0u64);
+    let mut admitted_ms: Vec<f64> = Vec::new();
+    let deadline = Instant::now() + WINDOW;
+    while Instant::now() < deadline {
+        let t0 = Instant::now();
+        for _ in 0..burst {
+            client.send("pool_a", input.clone())?;
+        }
+        client.flush()?;
+        let mut burst_oks = 0u64;
+        for _ in 0..burst {
+            let resp = client.recv()?;
+            if resp.is_overloaded() {
+                sheds += 1;
+            } else {
+                anyhow::ensure!(
+                    matches!(resp, compiled_nn::coordinator::protocol::Response::Ok { .. }),
+                    "overload burst produced a non-shed error: {resp:?}"
+                );
+                burst_oks += 1;
+            }
+        }
+        oks += burst_oks;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        admitted_ms.resize(admitted_ms.len() + burst_oks as usize, ms);
+    }
+    drop(server);
+    coord.shutdown();
+
+    let sent = oks + sheds;
+    anyhow::ensure!(sent > 0, "overload run completed no bursts");
+    anyhow::ensure!(oks > 0, "overload run admitted nothing — cap too small");
+    admitted_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = admitted_ms.len();
+    let p99 = admitted_ms[((0.99 * (n - 1) as f64).round() as usize).min(n - 1)];
+    Ok(OverloadResult {
+        sent,
+        oks,
+        sheds,
+        shed_rate: sheds as f64 / sent as f64,
+        p99_admitted_ms: p99,
     })
 }
 
@@ -129,19 +221,19 @@ fn main() -> anyhow::Result<()> {
         s.gemm_dense, s.rotated_dense, s.broadcast_dense, s.panel_tail_dense
     );
     println!(
-        "{:>8} {:>10} {:>12} {:>10} {:>10} {:>8}",
-        "workers", "requests", "req/s", "p50 µs", "p99 µs", "lowers"
+        "{:>8} {:>6} {:>10} {:>12} {:>10} {:>10} {:>8}",
+        "workers", "conns", "requests", "req/s", "p50 µs", "p99 µs", "lowers"
     );
 
     let mut results = Vec::new();
     for workers in [1usize, 4] {
-        let r = run_config(workers)?;
+        let r = run_config(workers, CONNS, WINDOW)?;
         // the counting-hook acceptance: one Program::lower per model, no
         // matter how many workers serve it
         assert_eq!(r.lowers, 2, "expected one lowering per model, got {}", r.lowers);
         println!(
-            "{:>8} {:>10} {:>12.0} {:>10} {:>10} {:>8}",
-            r.workers, r.requests, r.req_per_s, r.p50_us, r.p99_us, r.lowers
+            "{:>8} {:>6} {:>10} {:>12.0} {:>10} {:>10} {:>8}",
+            r.workers, r.conns, r.requests, r.req_per_s, r.p50_us, r.p99_us, r.lowers
         );
         results.push(r);
     }
@@ -153,22 +245,60 @@ fn main() -> anyhow::Result<()> {
     if cores < 4 {
         println!("(note: only {cores} cores — pool scaling is capped by the host)");
     }
-    write_json(&results, speedup, s.gemm_dense)?;
+
+    // Connection scaling: the one readiness loop vs 1 / 8 / 64 sockets.
+    let mut conn_results = Vec::new();
+    for conns in [1usize, 8, 64] {
+        let r = run_config(4, conns, CONN_WINDOW)?;
+        assert_eq!(r.lowers, 2, "expected one lowering per model, got {}", r.lowers);
+        println!(
+            "{:>8} {:>6} {:>10} {:>12.0} {:>10} {:>10} {:>8}",
+            r.workers, r.conns, r.requests, r.req_per_s, r.p50_us, r.p99_us, r.lowers
+        );
+        conn_results.push(r);
+    }
+
+    // Overload: shed rate + the p99 the admitted requests actually saw.
+    let ovl = run_overload()?;
+    println!(
+        "overload (max_inflight 8, 64-deep pipelined bursts): {} sent, {} ok, {} shed \
+         ({:.1}% shed rate), admitted p99 {:.2} ms",
+        ovl.sent,
+        ovl.oks,
+        ovl.sheds,
+        100.0 * ovl.shed_rate,
+        ovl.p99_admitted_ms
+    );
+
+    write_json(&results, &conn_results, &ovl, speedup, s.gemm_dense)?;
     Ok(())
 }
 
 /// Machine-readable results → BENCH_serving.json (uploaded as a CI
 /// artifact alongside BENCH_table1.json / BENCH_ablations.json).
-fn write_json(results: &[RunResult], speedup: f64, gemm_dense: usize) -> anyhow::Result<()> {
-    let mut configs: BTreeMap<String, Json> = BTreeMap::new();
-    for r in results {
+fn write_json(
+    results: &[RunResult],
+    conn_results: &[RunResult],
+    ovl: &OverloadResult,
+    speedup: f64,
+    gemm_dense: usize,
+) -> anyhow::Result<()> {
+    let run_obj = |r: &RunResult| {
         let mut m = BTreeMap::new();
         m.insert("requests".to_string(), Json::Num(r.requests as f64));
         m.insert("req_per_s".to_string(), Json::Num(r.req_per_s));
         m.insert("p50_us".to_string(), Json::Num(r.p50_us as f64));
         m.insert("p99_us".to_string(), Json::Num(r.p99_us as f64));
         m.insert("lower_calls".to_string(), Json::Num(r.lowers as f64));
-        configs.insert(format!("workers_{}", r.workers), Json::Obj(m));
+        Json::Obj(m)
+    };
+    let mut configs: BTreeMap<String, Json> = BTreeMap::new();
+    for r in results {
+        configs.insert(format!("workers_{}", r.workers), run_obj(r));
+    }
+    let mut conn_scaling: BTreeMap<String, Json> = BTreeMap::new();
+    for r in conn_results {
+        conn_scaling.insert(format!("conns_{}", r.conns), run_obj(r));
     }
     let mut root = BTreeMap::new();
     root.insert("bench".to_string(), Json::Str("serving".to_string()));
@@ -181,6 +311,12 @@ fn write_json(results: &[RunResult], speedup: f64, gemm_dense: usize) -> anyhow:
     root.insert("configs".to_string(), Json::Obj(configs));
     root.insert("speedup_workers4_vs_1".to_string(), Json::Num(speedup));
     root.insert("gemm_dense_layers".to_string(), Json::Num(gemm_dense as f64));
+    root.insert("conn_scaling".to_string(), Json::Obj(conn_scaling));
+    root.insert("shed_rate".to_string(), Json::Num(ovl.shed_rate));
+    root.insert("p99_overload_ms".to_string(), Json::Num(ovl.p99_admitted_ms));
+    root.insert("overload_sent".to_string(), Json::Num(ovl.sent as f64));
+    root.insert("overload_ok".to_string(), Json::Num(ovl.oks as f64));
+    root.insert("overload_shed".to_string(), Json::Num(ovl.sheds as f64));
     std::fs::write("BENCH_serving.json", format!("{}\n", Json::Obj(root)))?;
     println!("wrote BENCH_serving.json");
     Ok(())

@@ -6,6 +6,8 @@
 //!   "max_wait_us": 500,
 //!   "queue_depth": 2048,
 //!   "workers": 4,
+//!   "max_inflight": 4096,
+//!   "slo_p99_ms": 25.0,
 //!   "models": ["c_bh", "c_htwk"]
 //! }
 //! ```
@@ -23,6 +25,7 @@ use crate::engine::EngineKind;
 use crate::util::json::Json;
 
 use super::server::{CoordinatorConfig, default_workers};
+use super::tcp::TcpOptions;
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServingConfig {
@@ -43,6 +46,14 @@ pub struct ServingConfig {
     /// the worker pool already spends the cores across requests; raise it
     /// for latency-critical single-stream serving of big nets.
     pub intra_threads: usize,
+    /// Global cap on requests admitted by the TCP front end but not yet
+    /// answered (`"max_inflight": 4096`); past it, requests shed with a
+    /// structured `overloaded` error. 0 = unlimited.
+    pub max_inflight: u64,
+    /// Per-model p99 latency SLO in milliseconds (`"slo_p99_ms": 25.0`):
+    /// while a model's windowed p99 exceeds it, the front end sheds that
+    /// model's new requests with `overloaded`. Default 0 = disabled.
+    pub slo_p99_ms: f64,
 }
 
 impl Default for ServingConfig {
@@ -55,6 +66,8 @@ impl Default for ServingConfig {
             engine: EngineKind::preferred(),
             workers: default_workers(),
             intra_threads: 1,
+            max_inflight: 4096,
+            slo_p99_ms: 0.0,
         }
     }
 }
@@ -95,6 +108,17 @@ impl ServingConfig {
                 .and_then(Json::as_usize)
                 .unwrap_or(d.intra_threads)
                 .max(1),
+            max_inflight: j
+                .get("max_inflight")
+                .and_then(Json::as_u64)
+                .unwrap_or(d.max_inflight),
+            slo_p99_ms: {
+                let v = j.get("slo_p99_ms").and_then(Json::as_f64).unwrap_or(d.slo_p99_ms);
+                if v < 0.0 {
+                    bail!("slo_p99_ms must be >= 0 (0 disables SLO shedding)");
+                }
+                v
+            },
         })
     }
 
@@ -112,6 +136,11 @@ impl ServingConfig {
             workers: self.workers,
             intra_threads: self.intra_threads,
         }
+    }
+
+    /// The TCP front end's admission-control knobs.
+    pub fn tcp_options(&self) -> TcpOptions {
+        TcpOptions { max_inflight: self.max_inflight, slo_p99_ms: self.slo_p99_ms }
     }
 }
 
@@ -172,6 +201,33 @@ mod tests {
         // 0 would disable the kernels' band loop entirely; clamp to 1
         let z = ServingConfig::parse(r#"{"models": ["c_bh"], "intra_threads": 0}"#).unwrap();
         assert_eq!(z.intra_threads, 1);
+    }
+
+    #[test]
+    fn admission_keys_parse_and_default() {
+        let c = ServingConfig::parse(
+            r#"{"models": ["c_bh"], "max_inflight": 128, "slo_p99_ms": 12.5}"#,
+        )
+        .unwrap();
+        assert_eq!(c.max_inflight, 128);
+        assert!((c.slo_p99_ms - 12.5).abs() < 1e-12);
+        let o = c.tcp_options();
+        assert_eq!(o.max_inflight, 128);
+        assert!((o.slo_p99_ms - 12.5).abs() < 1e-12);
+
+        let d = ServingConfig::parse(r#"{"models": ["c_bh"]}"#).unwrap();
+        assert_eq!(d.max_inflight, 4096);
+        assert_eq!(d.slo_p99_ms, 0.0);
+
+        // 0 is meaningful for both: unlimited in-flight, SLO disabled
+        let z = ServingConfig::parse(
+            r#"{"models": ["c_bh"], "max_inflight": 0, "slo_p99_ms": 0}"#,
+        )
+        .unwrap();
+        assert_eq!(z.max_inflight, 0);
+        assert_eq!(z.slo_p99_ms, 0.0);
+
+        assert!(ServingConfig::parse(r#"{"models": ["c_bh"], "slo_p99_ms": -1}"#).is_err());
     }
 
     #[test]

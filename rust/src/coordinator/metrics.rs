@@ -57,6 +57,19 @@ impl Histogram {
         self.max_us.load(Ordering::Relaxed)
     }
 
+    /// Zero every bucket and counter. Used by windowed histograms (the SLO
+    /// shedding window): one owner resets periodically while recorders keep
+    /// writing. Racing records may land on either side of the reset — fine
+    /// for an advisory p99 window, which is the only use.
+    pub fn reset(&self) {
+        for b in &self.buckets {
+            b.store(0, Ordering::Relaxed);
+        }
+        self.count.store(0, Ordering::Relaxed);
+        self.sum_us.store(0, Ordering::Relaxed);
+        self.max_us.store(0, Ordering::Relaxed);
+    }
+
     /// Upper bound of the bucket containing quantile `q` (0..1).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let total = self.count();
@@ -121,10 +134,18 @@ pub struct ModelMetrics {
     pub exec: Histogram,
     /// time requests wait in the batcher queue
     pub queue_wait: Histogram,
+    /// end-to-end latency over the **current SLO window only** — the TCP
+    /// front end resets it periodically and compares its p99 against the
+    /// configured SLO to decide shedding (`latency` above is cumulative)
+    pub latency_window: Histogram,
     pub requests: Counter,
     pub batches: Counter,
     pub padded_slots: Counter,
     pub errors: Counter,
+    /// Requests refused by admission control with an `overloaded` response
+    /// (queue full / in-flight cap / SLO breach). Never executed, so they
+    /// appear here and **not** in `requests`.
+    pub shed: Counter,
     /// Batches currently dispatched to the execution lane; the peak shows
     /// how many the worker pool actually overlapped.
     pub inflight: Gauge,
@@ -149,7 +170,7 @@ impl ModelMetrics {
         format!(
             "{name} [{workers} worker{}]: {} reqs in {} batches (fill {:.2}, padded {}, \
              peak inflight {}), latency mean {:.0}µs p50 {}µs p95 {}µs max {}µs, \
-             exec mean {:.0}µs, queue mean {:.0}µs, errors {}",
+             exec mean {:.0}µs, queue mean {:.0}µs, errors {}, shed {}",
             if workers == 1 { "" } else { "s" },
             self.requests.get(),
             self.batches.get(),
@@ -163,6 +184,7 @@ impl ModelMetrics {
             self.exec.mean_us(),
             self.queue_wait.mean_us(),
             self.errors.get(),
+            self.shed.get(),
         )
     }
 }
@@ -206,6 +228,23 @@ mod tests {
         g.dec();
         assert_eq!(g.get(), 0);
         assert_eq!(g.peak(), 2);
+    }
+
+    #[test]
+    fn histogram_reset_zeroes_everything() {
+        let h = Histogram::new();
+        for us in [5u64, 50, 500] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count(), 3);
+        h.reset();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.max_us(), 0);
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+        // and it keeps recording after the reset
+        h.record_us(7);
+        assert_eq!(h.count(), 1);
     }
 
     #[test]

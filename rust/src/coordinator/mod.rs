@@ -7,6 +7,8 @@ pub mod config;
 #[allow(missing_docs)]
 pub mod metrics;
 #[allow(missing_docs)]
+pub mod poll;
+#[allow(missing_docs)]
 pub mod protocol;
 pub mod server;
 #[allow(missing_docs)]

@@ -1,0 +1,235 @@
+//! A minimal readiness shim over `poll(2)` for the event-loop TCP front
+//! end — no mio/tokio in the offline build, just one libc call declared by
+//! hand. Level-triggered: an entry reports readable/writable as long as
+//! the condition holds, which pairs naturally with nonblocking sockets
+//! drained until `WouldBlock`.
+//!
+//! On non-unix targets the shim degrades to "sleep briefly, report
+//! everything ready": with nonblocking sockets a spurious readiness is
+//! harmless (the read/write just returns `WouldBlock`), so the event loop
+//! stays correct and merely burns a few syscalls per tick.
+
+use std::io;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+#[cfg(unix)]
+use std::os::unix::io::{AsRawFd, RawFd};
+
+/// Anything the shim can wait on. On unix this is "has a raw fd"; the
+/// non-unix fallback needs nothing (everything is always "ready").
+pub trait Pollable {
+    /// The raw file descriptor `poll(2)` watches.
+    #[cfg(unix)]
+    fn raw_fd(&self) -> RawFd;
+}
+
+impl Pollable for TcpStream {
+    #[cfg(unix)]
+    fn raw_fd(&self) -> RawFd {
+        self.as_raw_fd()
+    }
+}
+
+impl Pollable for TcpListener {
+    #[cfg(unix)]
+    fn raw_fd(&self) -> RawFd {
+        self.as_raw_fd()
+    }
+}
+
+/// One waited-on socket: interest in (input parameters to [`poll`]) and
+/// readiness out. Rebuilt per poll round — it's three words; the win from
+/// persisting interest sets is epoll territory, deliberately out of scope.
+pub struct PollEntry {
+    #[cfg(unix)]
+    fd: RawFd,
+    want_write: bool,
+    /// Out: the socket has bytes to read (or an error/hangup to observe —
+    /// reading surfaces it, which is how the loop learns of closes).
+    pub readable: bool,
+    /// Out: the socket would accept a write.
+    pub writable: bool,
+    /// Out: the peer hung up or the socket errored.
+    pub hangup: bool,
+}
+
+impl PollEntry {
+    /// Watch `source` for readability, and for writability too when
+    /// `want_write` (set only while a write buffer is non-empty, else
+    /// level-triggered POLLOUT busy-spins the loop).
+    pub fn new(source: &impl Pollable, want_write: bool) -> PollEntry {
+        #[cfg(not(unix))]
+        let _ = source;
+        PollEntry {
+            #[cfg(unix)]
+            fd: source.raw_fd(),
+            want_write,
+            readable: false,
+            writable: false,
+            hangup: false,
+        }
+    }
+}
+
+/// Block until at least one entry is ready or `timeout` elapses, filling
+/// each entry's readiness flags. Returns the number of ready entries
+/// (0 on timeout). EINTR retries internally.
+pub fn poll(entries: &mut [PollEntry], timeout: Duration) -> io::Result<usize> {
+    sys::poll_impl(entries, timeout)
+}
+
+#[cfg(unix)]
+mod sys {
+    use super::PollEntry;
+    use std::io;
+    use std::os::raw::{c_int, c_short};
+    use std::time::Duration;
+
+    /// `struct pollfd` from `<poll.h>` — identical layout on every unix
+    /// libc this builds against.
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+    const POLLNVAL: c_short = 0x020;
+
+    #[cfg(target_os = "linux")]
+    type NFds = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NFds = std::os::raw::c_uint;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NFds, timeout: c_int) -> c_int;
+    }
+
+    pub fn poll_impl(entries: &mut [PollEntry], timeout: Duration) -> io::Result<usize> {
+        let timeout_ms = timeout.as_millis().min(i32::MAX as u128) as c_int;
+        let mut fds: Vec<PollFd> = entries
+            .iter()
+            .map(|e| PollFd {
+                fd: e.fd,
+                events: POLLIN | if e.want_write { POLLOUT } else { 0 },
+                revents: 0,
+            })
+            .collect();
+        loop {
+            // SAFETY: `fds` is a live, correctly-sized buffer of
+            // `#[repr(C)]` pollfd structs; poll(2) writes only `revents`.
+            let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NFds, timeout_ms) };
+            if rc < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    continue; // EINTR: retry (timeout precision is advisory)
+                }
+                return Err(err);
+            }
+            let mut ready = 0;
+            for (e, f) in entries.iter_mut().zip(&fds) {
+                // Fold errors into readable: the next read returns the
+                // error (or EOF), which is exactly how the loop handles it.
+                e.readable = f.revents & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0;
+                e.writable = f.revents & (POLLOUT | POLLERR | POLLNVAL) != 0;
+                e.hangup = f.revents & (POLLERR | POLLHUP | POLLNVAL) != 0;
+                if f.revents != 0 {
+                    ready += 1;
+                }
+            }
+            return Ok(ready);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod sys {
+    use super::PollEntry;
+    use std::io;
+    use std::time::Duration;
+
+    /// Degraded mode: nap briefly, then report everything ready. Spurious
+    /// readiness is safe — nonblocking reads/writes just `WouldBlock`.
+    pub fn poll_impl(entries: &mut [PollEntry], timeout: Duration) -> io::Result<usize> {
+        std::thread::sleep(timeout.min(Duration::from_millis(1)));
+        for e in entries.iter_mut() {
+            e.readable = true;
+            e.writable = e.want_write;
+            e.hangup = false;
+        }
+        Ok(entries.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn listener_becomes_readable_on_pending_accept() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        // nothing pending: poll times out
+        let mut entries = [PollEntry::new(&listener, false)];
+        let n = poll(&mut entries, Duration::from_millis(10)).unwrap();
+        #[cfg(unix)]
+        {
+            assert_eq!(n, 0);
+            assert!(!entries[0].readable);
+        }
+        let _ = n;
+
+        // a connect makes the listener readable within the timeout
+        let _client = TcpStream::connect(addr).unwrap();
+        let mut entries = [PollEntry::new(&listener, false)];
+        let n = poll(&mut entries, Duration::from_millis(2000)).unwrap();
+        assert!(n >= 1);
+        assert!(entries[0].readable);
+    }
+
+    #[test]
+    fn stream_readability_follows_data() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        client.write_all(b"ping").unwrap();
+        client.flush().unwrap();
+        let mut entries = [PollEntry::new(&server, true)];
+        let n = poll(&mut entries, Duration::from_millis(2000)).unwrap();
+        assert!(n >= 1);
+        assert!(entries[0].readable, "pending bytes → readable");
+        assert!(entries[0].writable, "empty send buffer → writable");
+
+        let mut buf = [0u8; 16];
+        let got = (&server).read(&mut buf).unwrap();
+        assert_eq!(&buf[..got], b"ping");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn peer_close_reports_readable_hangup() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        drop(client);
+
+        // give the FIN a moment, then poll: must be readable (EOF) —
+        // exactly the signal the event loop uses to reap the connection
+        let mut entries = [PollEntry::new(&server, false)];
+        let n = poll(&mut entries, Duration::from_millis(2000)).unwrap();
+        assert!(n >= 1);
+        assert!(entries[0].readable);
+    }
+}

@@ -5,9 +5,29 @@
 //! Response (one line):
 //!   {"id": 7, "ok": true, "shape": [1, 1], "output": [0.42]}
 //!   {"id": 7, "ok": false, "error": "model `x` not in manifest"}
+//!   {"id": 7, "ok": false, "error": "…", "code": "overloaded"}
 //!
 //! JSON is hand-parsed/serialized via `util::json` (same parser the model
 //! specs use). Floats round-trip through f64, lossless for f32 payloads.
+//! Ids are u64 and round-trip **losslessly** over the full range: they
+//! serialize as bare integers (`Json::UInt`, never through f64, which
+//! corrupts values ≥ 2^53) and non-integral incoming ids are rejected.
+//!
+//! Connections are pipelined: a client may write any number of request
+//! lines before reading; responses stream back in **completion order**
+//! (batches finish out of order), correlated by `id`. Ids are
+//! client-chosen; the server never interprets them beyond echoing.
+//!
+//! Error responses carry an optional machine-readable `code`:
+//!
+//! * `"overloaded"` — admission control shed the request (queue full,
+//!   in-flight cap, or latency SLO breach). Retry later, ideally with
+//!   backoff; the request was **not** executed.
+//!
+//! `id: 0` in an error response means **unattributable**: the request line
+//! was too malformed to recover an id from (not even `salvage_id` could).
+//! Pipelining clients should avoid 0 as a request id so unattributable
+//! errors are distinguishable from real replies.
 
 use std::collections::BTreeMap;
 
@@ -15,6 +35,9 @@ use anyhow::{Context, Result};
 
 use crate::nn::tensor::Tensor;
 use crate::util::json::Json;
+
+/// The machine-readable `code` on shed responses.
+pub const CODE_OVERLOADED: &str = "overloaded";
 
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
@@ -25,8 +48,18 @@ pub struct Request {
 
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
-    Ok { id: u64, shape: Vec<usize>, output: Vec<f32> },
-    Err { id: u64, error: String },
+    Ok {
+        id: u64,
+        shape: Vec<usize>,
+        output: Vec<f32>,
+    },
+    Err {
+        id: u64,
+        error: String,
+        /// Machine-readable error class (`"overloaded"`); `None` for
+        /// plain failures (unknown model, bad input, execution error).
+        code: Option<String>,
+    },
 }
 
 impl Request {
@@ -38,7 +71,7 @@ impl Request {
             .map(|v| v.as_f64().map(|f| f as f32).context("input must be numbers"))
             .collect::<Result<Vec<_>>>()?;
         Ok(Request {
-            id: j.req_usize("id")? as u64,
+            id: j.req_u64("id")?,
             model: j.req_str("model")?.to_string(),
             input,
         })
@@ -46,7 +79,7 @@ impl Request {
 
     pub fn to_line(&self) -> String {
         let mut obj = BTreeMap::new();
-        obj.insert("id".into(), Json::Num(self.id as f64));
+        obj.insert("id".into(), Json::UInt(self.id));
         obj.insert("model".into(), Json::Str(self.model.clone()));
         obj.insert(
             "input".into(),
@@ -54,6 +87,20 @@ impl Request {
         );
         Json::Obj(obj).to_string()
     }
+}
+
+/// Best-effort id recovery from a request line that failed `Request::parse`,
+/// so a pipelined client can still correlate the error. Works whenever the
+/// line is valid JSON with a well-formed integer `id` (the common failure
+/// modes: missing `model`, non-numeric `input`, …). Returns 0 — the
+/// documented "unattributable" id — when nothing can be recovered.
+pub fn salvage_id(line: &str) -> u64 {
+    if let Ok(j) = Json::parse(line) {
+        if let Some(id) = j.get("id").and_then(Json::as_u64) {
+            return id;
+        }
+    }
+    0
 }
 
 impl Response {
@@ -65,9 +112,31 @@ impl Response {
         }
     }
 
+    /// A plain (uncoded) error response.
+    pub fn err(id: u64, error: impl Into<String>) -> Response {
+        Response::Err { id, error: error.into(), code: None }
+    }
+
+    /// A structured load-shed response (`code: "overloaded"`).
+    pub fn overloaded(id: u64, error: impl Into<String>) -> Response {
+        Response::Err { id, error: error.into(), code: Some(CODE_OVERLOADED.into()) }
+    }
+
+    /// The echoed request id (0 = unattributable error).
+    pub fn id(&self) -> u64 {
+        match self {
+            Response::Ok { id, .. } | Response::Err { id, .. } => *id,
+        }
+    }
+
+    /// True when this is a shed response (`code: "overloaded"`).
+    pub fn is_overloaded(&self) -> bool {
+        matches!(self, Response::Err { code: Some(c), .. } if c == CODE_OVERLOADED)
+    }
+
     pub fn parse(line: &str) -> Result<Response> {
         let j = Json::parse(line).context("response is not valid JSON")?;
-        let id = j.req_usize("id")? as u64;
+        let id = j.req_u64("id")?;
         if j.req("ok")?.as_bool().context("ok must be bool")? {
             Ok(Response::Ok {
                 id,
@@ -79,7 +148,11 @@ impl Response {
                     .collect::<Result<Vec<_>>>()?,
             })
         } else {
-            Ok(Response::Err { id, error: j.req_str("error")?.to_string() })
+            Ok(Response::Err {
+                id,
+                error: j.req_str("error")?.to_string(),
+                code: j.get("code").and_then(Json::as_str).map(str::to_string),
+            })
         }
     }
 
@@ -87,7 +160,7 @@ impl Response {
         let mut obj = BTreeMap::new();
         match self {
             Response::Ok { id, shape, output } => {
-                obj.insert("id".into(), Json::Num(*id as f64));
+                obj.insert("id".into(), Json::UInt(*id));
                 obj.insert("ok".into(), Json::Bool(true));
                 obj.insert(
                     "shape".into(),
@@ -98,10 +171,13 @@ impl Response {
                     Json::Arr(output.iter().map(|&v| Json::Num(v as f64)).collect()),
                 );
             }
-            Response::Err { id, error } => {
-                obj.insert("id".into(), Json::Num(*id as f64));
+            Response::Err { id, error, code } => {
+                obj.insert("id".into(), Json::UInt(*id));
                 obj.insert("ok".into(), Json::Bool(false));
                 obj.insert("error".into(), Json::Str(error.clone()));
+                if let Some(code) = code {
+                    obj.insert("code".into(), Json::Str(code.clone()));
+                }
             }
         }
         Json::Obj(obj).to_string()
@@ -129,8 +205,45 @@ mod tests {
 
     #[test]
     fn response_roundtrip_err() {
-        let r = Response::Err { id: 3, error: "no such model".into() };
+        let r = Response::err(3, "no such model");
         assert_eq!(Response::parse(&r.to_line()).unwrap(), r);
+        assert!(!r.is_overloaded());
+    }
+
+    #[test]
+    fn overloaded_code_roundtrips() {
+        let r = Response::overloaded(11, "queue full for `m`");
+        let line = r.to_line();
+        assert!(line.contains("\"code\":\"overloaded\""), "{line}");
+        let back = Response::parse(&line).unwrap();
+        assert!(back.is_overloaded());
+        assert_eq!(back, r);
+        // uncoded errors don't serialize a code key at all
+        assert!(!Response::err(1, "x").to_line().contains("code"));
+    }
+
+    #[test]
+    fn ids_roundtrip_losslessly_past_2_53() {
+        // the old path (id as f64) collapses 2^53 and 2^53 + 1 into the
+        // same wire value — these must stay distinct
+        for id in [(1u64 << 53) - 1, 1u64 << 53, (1u64 << 53) + 1, u64::MAX] {
+            let req = Request { id, model: "m".into(), input: vec![0.0] };
+            assert_eq!(Request::parse(&req.to_line()).unwrap().id, id);
+            let resp = Response::err(id, "e");
+            assert_eq!(Response::parse(&resp.to_line()).unwrap().id(), id);
+            assert!(req.to_line().contains(&format!("\"id\":{id}")), "bare integer id");
+        }
+    }
+
+    #[test]
+    fn non_integral_ids_rejected() {
+        let e = Request::parse(r#"{"id": 1.5, "model": "m", "input": [0.0]}"#);
+        assert!(e.is_err(), "fractional ids must be rejected");
+        let e = Request::parse(r#"{"id": -1, "model": "m", "input": [0.0]}"#);
+        assert!(e.is_err(), "negative ids must be rejected");
+        // integral float spelling is fine — it IS an integer
+        let r = Request::parse(r#"{"id": 7.0, "model": "m", "input": [0.0]}"#).unwrap();
+        assert_eq!(r.id, 7);
     }
 
     #[test]
@@ -138,5 +251,16 @@ mod tests {
         assert!(Request::parse("not json").is_err());
         assert!(Request::parse("{\"id\": 1}").is_err());
         assert!(Request::parse("{\"id\": 1, \"model\": \"m\", \"input\": [\"x\"]}").is_err());
+    }
+
+    #[test]
+    fn salvage_recovers_ids_from_malformed_lines() {
+        // parseable JSON, unparseable request: id recovered
+        assert_eq!(salvage_id(r#"{"id": 42}"#), 42);
+        assert_eq!(salvage_id(r#"{"id": 9007199254740993, "input": 3}"#), (1 << 53) + 1);
+        // hopeless lines: the documented unattributable id
+        assert_eq!(salvage_id("not json at all"), 0);
+        assert_eq!(salvage_id(r#"{"id": "seven"}"#), 0);
+        assert_eq!(salvage_id(r#"{"id": 1.5}"#), 0);
     }
 }

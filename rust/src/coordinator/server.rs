@@ -19,7 +19,9 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError};
+use std::sync::mpsc::{
+    self, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -30,7 +32,7 @@ use crate::coordinator::batcher::{BatchPolicy, Flush};
 use crate::coordinator::metrics::ModelMetrics;
 use crate::engine::{
     build_engine, build_engine_from_spec, Engine, EngineKind, EngineOptions, SharedInfer,
-    WorkerScratch,
+    SwapCell,
 };
 use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
@@ -47,11 +49,20 @@ const IDLE_TICK: Duration = Duration::from_millis(25);
 /// so a merely slow lane never breaks the cap.
 const TICKET_PATIENCE: Duration = Duration::from_secs(5);
 
+/// Completion callback for one request: invoked exactly once with the
+/// inference result, from whichever thread executed the batch (a pool
+/// worker or the pinned executor). `FnOnce` so the reply can move its
+/// payload (a socket token, a channel sender) without cloning; `Send` so
+/// execution lanes can carry it. The event-loop front end passes callbacks
+/// that serialize the response and wake the I/O thread; `infer_async`
+/// passes one that forwards into a channel.
+pub type ReplyFn = Box<dyn FnOnce(Result<Tensor>) + Send>;
+
 /// A single inference request: one item (no batch dim); the batcher stacks.
 struct Request {
     input: Tensor,
     enqueued: Instant,
-    reply: SyncSender<Result<Tensor>>,
+    reply: ReplyFn,
 }
 
 /// A stacked batch in flight from a batcher to an execution lane. The lane
@@ -69,15 +80,21 @@ struct Job {
     done: Sender<Vec<f32>>,
 }
 
-/// Work sent to the pinned executor thread.
+/// Work sent to the pinned executor thread. `replace: true` on the
+/// register messages is the hot-swap path: rebuild the engine even when
+/// one is cached, replacing it. The executor channel is FIFO, so for a
+/// pinned lane every batch dispatched before the swap still executes on
+/// the old engine — in-flight work drains, nothing is lost.
 enum ExecMsg {
     Register {
         name: String,
+        replace: bool,
         reply: SyncSender<Result<Registration>>,
     },
     RegisterSpec {
         spec: Box<ModelSpec>,
         buckets: Vec<usize>,
+        replace: bool,
         reply: SyncSender<Result<Registration>>,
     },
     InferBatch {
@@ -115,6 +132,9 @@ pub struct RegisterInfo {
     /// Threads executing this model: the pool size for shared engines, 1
     /// for engines pinned to the executor thread.
     pub workers: usize,
+    /// Artifact generation serving this name: 1 on first registration,
+    /// bumped by every hot-swap (`Coordinator::hot_swap_spec`).
+    pub generation: u64,
 }
 
 /// Coordinator configuration.
@@ -158,6 +178,20 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// A registered model's published serving state: the bounded request
+/// queue, metrics handle, client-visible info, and — for pool lanes — the
+/// epoch-versioned artifact cell that hot-swap replaces.
+struct Lane {
+    tx: SyncSender<Request>,
+    metrics: Arc<ModelMetrics>,
+    info: RegisterInfo,
+    /// `Some` for pool lanes (workers re-load it per job, so `hot_swap_spec`
+    /// can replace the artifact under live traffic); `None` for pinned
+    /// lanes, where the executor thread owns the engine and swaps it via a
+    /// `replace: true` register message instead.
+    cell: Option<Arc<SwapCell>>,
+}
+
 /// The serving coordinator: model registry, batcher threads, and the two
 /// execution lanes (per-model worker pools over a shared lowered artifact,
 /// and the pinned executor thread for non-`Send` engines). See the module
@@ -176,7 +210,7 @@ pub struct Coordinator {
     /// batchers or leak a queue. The `queues` lock alone can't: engine
     /// construction must happen outside it, re-opening the race.
     reg_lock: Mutex<()>,
-    queues: Mutex<HashMap<String, (SyncSender<Request>, Arc<ModelMetrics>, RegisterInfo)>>,
+    queues: Mutex<HashMap<String, Lane>>,
     /// Model names the manifest can register. Unknown names are rejected
     /// here, O(1) under `reg_lock`, without a round-trip through the
     /// executor thread — a client spamming bad names must not queue work
@@ -223,6 +257,11 @@ impl Coordinator {
     /// existing client, even under concurrent callers.
     pub fn register(self: &Arc<Self>, name: &str) -> Result<ModelClient> {
         let _reg = self.reg_lock.lock().unwrap();
+        self.register_locked(name)
+    }
+
+    /// Body of [`register`](Self::register); caller holds `reg_lock`.
+    fn register_locked(&self, name: &str) -> Result<ModelClient> {
         if self.stopping.load(Ordering::SeqCst) {
             bail!("coordinator is shut down");
         }
@@ -237,7 +276,11 @@ impl Coordinator {
                 self.manifest_models.iter().collect::<Vec<_>>()
             );
         }
-        let reg = self.exec_round_trip(|reply| ExecMsg::Register { name: name.into(), reply })?;
+        let reg = self.exec_round_trip(|reply| ExecMsg::Register {
+            name: name.into(),
+            replace: false,
+            reply,
+        })?;
         self.finish_register(reg)
     }
 
@@ -254,6 +297,12 @@ impl Coordinator {
             bail!("register_spec needs at least one batch bucket");
         }
         let _reg = self.reg_lock.lock().unwrap();
+        self.register_spec_locked(spec, buckets)
+    }
+
+    /// Body of [`register_spec`](Self::register_spec); caller holds
+    /// `reg_lock`.
+    fn register_spec_locked(&self, spec: &ModelSpec, buckets: &[usize]) -> Result<ModelClient> {
         if self.stopping.load(Ordering::SeqCst) {
             bail!("coordinator is shut down");
         }
@@ -262,17 +311,115 @@ impl Coordinator {
         }
         let spec = Box::new(spec.clone());
         let buckets = buckets.to_vec();
-        let reg =
-            self.exec_round_trip(move |reply| ExecMsg::RegisterSpec { spec, buckets, reply })?;
+        let reg = self.exec_round_trip(move |reply| ExecMsg::RegisterSpec {
+            spec,
+            buckets,
+            replace: false,
+            reply,
+        })?;
         self.finish_register(reg)
+    }
+
+    /// Hot-swap: re-register a **live** model name with a new artifact
+    /// built from `spec`, without dropping a single request. The serving
+    /// lane (queue, batcher, workers, metrics) stays up; only the lowered
+    /// artifact is replaced:
+    ///
+    /// * **Pool lanes** bump the lane's [`SwapCell`] epoch. Workers load
+    ///   the cell per job, so every batch dispatched before the swap runs
+    ///   to completion on the old artifact (it drains; the old `Arc` frees
+    ///   once the last in-flight batch finishes), and every later batch
+    ///   executes the new one.
+    /// * **Pinned lanes** rebuild in place on the executor thread; its
+    ///   FIFO channel orders the rebuild after all previously dispatched
+    ///   batches.
+    ///
+    /// The new spec must keep the input shape (queued requests are already
+    /// shaped); a changed shape is an error and the old artifact keeps
+    /// serving. If the name is not live yet this is a plain registration.
+    /// On success `RegisterInfo::generation` is bumped and the refreshed
+    /// client is returned.
+    pub fn hot_swap_spec(
+        self: &Arc<Self>,
+        spec: &ModelSpec,
+        buckets: &[usize],
+    ) -> Result<ModelClient> {
+        let _reg = self.reg_lock.lock().unwrap();
+        if self.stopping.load(Ordering::SeqCst) {
+            bail!("coordinator is shut down");
+        }
+        let live = {
+            let queues = self.queues.lock().unwrap();
+            queues.get(&spec.name).map(|lane| (lane.info.clone(), lane.cell.clone()))
+        };
+        let Some((info, cell)) = live else {
+            if buckets.is_empty() {
+                bail!("register_spec needs at least one batch bucket");
+            }
+            return self.register_spec_locked(spec, buckets);
+        };
+        if spec.input_shape != info.input_shape {
+            bail!(
+                "hot-swap for `{}` would change the input shape {:?} -> {:?}; queued \
+                 requests are already shaped, register the new artifact under a new \
+                 name instead",
+                spec.name,
+                info.input_shape,
+                spec.input_shape
+            );
+        }
+        // Rebuild on the executor thread (same code path as registration,
+        // `replace` forces a fresh build past the engine cache). Keep the
+        // lane's existing buckets: the batcher's packing policy is fixed.
+        let boxed = Box::new(spec.clone());
+        let lane_buckets = info.buckets.clone();
+        let reg = self.exec_round_trip(move |reply| ExecMsg::RegisterSpec {
+            spec: boxed,
+            buckets: lane_buckets,
+            replace: true,
+            reply,
+        })?;
+        match (&cell, reg.shared) {
+            // Pool lane: publish the new artifact; workers pick it up on
+            // their next job and rebuild scratch for the new epoch.
+            (Some(cell), Some(shared)) => {
+                cell.swap(shared);
+            }
+            // Pinned lane: the executor already replaced its engine.
+            (None, None) => {}
+            (Some(_), None) => bail!(
+                "hot-swap for `{}` produced a non-shareable engine for a pooled lane",
+                spec.name
+            ),
+            (None, Some(_)) => bail!(
+                "hot-swap for `{}` produced a shareable engine for a pinned lane",
+                spec.name
+            ),
+        }
+        let client = {
+            let mut queues = self.queues.lock().unwrap();
+            let lane = queues
+                .get_mut(&spec.name)
+                .ok_or_else(|| anyhow!("lane for `{}` vanished during hot-swap", spec.name))?;
+            lane.info.generation += 1;
+            lane.info.compile_ms = reg.info.compile_ms;
+            lane.info.params = reg.info.params;
+            ModelClient {
+                tx: lane.tx.clone(),
+                metrics: lane.metrics.clone(),
+                info: lane.info.clone(),
+            }
+        };
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        Ok(client)
     }
 
     fn lookup(&self, name: &str) -> Option<ModelClient> {
         let queues = self.queues.lock().unwrap();
-        queues.get(name).map(|(tx, metrics, info)| ModelClient {
-            tx: tx.clone(),
-            metrics: metrics.clone(),
-            info: info.clone(),
+        queues.get(name).map(|lane| ModelClient {
+            tx: lane.tx.clone(),
+            metrics: lane.metrics.clone(),
+            info: lane.info.clone(),
         })
     }
 
@@ -291,10 +438,13 @@ impl Coordinator {
         let Registration { mut info, shared } = reg;
         let metrics = Arc::new(ModelMetrics::new());
 
-        let dispatch = match shared {
+        let (dispatch, cell) = match shared {
             Some(shared) => {
                 let pool = self.cfg.workers.max(1);
                 info.workers = pool;
+                // The epoch-versioned artifact slot `hot_swap_spec` writes;
+                // every worker re-loads it per job.
+                let cell = Arc::new(SwapCell::new(shared));
                 // Rendezvous-ish bounded job queue: the ticket pool below
                 // (stacking buffers) is the real in-flight cap; this bound
                 // just keeps teardown prompt.
@@ -302,23 +452,24 @@ impl Coordinator {
                 let work_rx = Arc::new(Mutex::new(work_rx));
                 let mut handles = self.workers.lock().unwrap();
                 for i in 0..pool {
-                    // One scratch (arena pool, pre-pinned for every serving
-                    // bucket) per worker; the lowered program is shared.
-                    let scratch = shared.new_scratch(&info.buckets);
-                    let shared = shared.clone();
+                    let cell = cell.clone();
+                    let buckets = info.buckets.clone();
                     let rx = work_rx.clone();
                     handles.push(
                         std::thread::Builder::new()
                             .name(format!("worker-{}-{i}", info.name))
-                            .spawn(move || worker_main(shared, scratch, rx))
+                            .spawn(move || worker_main(cell, buckets, rx))
                             .context("spawning pool worker")?,
                     );
                 }
-                Dispatch::Pool { work_tx }
+                (Dispatch::Pool { work_tx }, Some(cell))
             }
             None => {
                 info.workers = 1;
-                Dispatch::Pinned { exec_tx: self.exec_tx.clone(), name: info.name.clone() }
+                (
+                    Dispatch::Pinned { exec_tx: self.exec_tx.clone(), name: info.name.clone() },
+                    None,
+                )
             }
         };
 
@@ -338,7 +489,10 @@ impl Coordinator {
 
         let client =
             ModelClient { tx: req_tx.clone(), metrics: metrics.clone(), info: info.clone() };
-        self.queues.lock().unwrap().insert(info.name.clone(), (req_tx, metrics, info));
+        self.queues
+            .lock()
+            .unwrap()
+            .insert(info.name.clone(), Lane { tx: req_tx, metrics, info, cell });
         self.epoch.fetch_add(1, Ordering::SeqCst);
         Ok(client)
     }
@@ -356,15 +510,22 @@ impl Coordinator {
 
     /// Live metrics handle for a registered model, if any.
     pub fn metrics(&self, name: &str) -> Option<Arc<ModelMetrics>> {
-        self.queues.lock().unwrap().get(name).map(|(_, m, _)| m.clone())
+        self.queues.lock().unwrap().get(name).map(|lane| lane.metrics.clone())
+    }
+
+    /// Every registered model's live metrics handle. The TCP front end
+    /// walks these to tick the per-model SLO latency windows.
+    pub fn model_metrics(&self) -> Vec<(String, Arc<ModelMetrics>)> {
+        let queues = self.queues.lock().unwrap();
+        queues.iter().map(|(name, lane)| (name.clone(), lane.metrics.clone())).collect()
     }
 
     /// Render every registered model's metrics block (the `serve` report).
     pub fn render_metrics(&self) -> String {
         let queues = self.queues.lock().unwrap();
         let mut out = String::new();
-        for (name, (_, m, info)) in queues.iter() {
-            out.push_str(&m.render(name, info.workers));
+        for (name, lane) in queues.iter() {
+            out.push_str(&lane.metrics.render(name, lane.info.workers));
             out.push('\n');
         }
         out
@@ -418,6 +579,20 @@ pub struct ModelClient {
     pub info: RegisterInfo,
 }
 
+/// What [`ModelClient::try_submit`] did with a request.
+pub enum SubmitOutcome {
+    /// The request was queued — or terminally answered through the
+    /// callback already (shape errors are *delivered*, not returned).
+    /// Either way the callback will fire (or has fired) exactly once.
+    Accepted,
+    /// The model's bounded queue is full. The callback comes back
+    /// un-invoked so the caller can shed with a structured error.
+    Full(ReplyFn),
+    /// The model's queue is gone (coordinator shut down). The callback
+    /// comes back un-invoked.
+    Closed(ReplyFn),
+}
+
 impl ModelClient {
     /// Blocking inference of one item (`[H, W, C]`-shaped, no batch dim).
     pub fn infer(&self, input: Tensor) -> Result<Tensor> {
@@ -427,6 +602,36 @@ impl ModelClient {
 
     /// Fire-and-collect-later variant; returns the reply channel.
     pub fn infer_async(&self, input: Tensor) -> Result<Receiver<Result<Tensor>>> {
+        self.check_shape(&input)?;
+        let (tx, rx) = mpsc::sync_channel(1);
+        let reply: ReplyFn = Box::new(move |r| {
+            let _ = tx.send(r);
+        });
+        self.tx
+            .send(Request { input, enqueued: Instant::now(), reply })
+            .map_err(|_| anyhow!("model queue closed"))?;
+        Ok(rx)
+    }
+
+    /// Nonblocking submission with an arbitrary completion callback — the
+    /// event-loop front end's path, where blocking the I/O thread on a
+    /// full queue is not an option. Shape mismatches are delivered through
+    /// the callback and count as `Accepted` (the request terminated, just
+    /// not with an `Ok`); a full or closed queue hands the callback back
+    /// un-invoked so the caller can shed or fail it.
+    pub fn try_submit(&self, input: Tensor, reply: ReplyFn) -> SubmitOutcome {
+        if let Err(e) = self.check_shape(&input) {
+            reply(Err(e));
+            return SubmitOutcome::Accepted;
+        }
+        match self.tx.try_send(Request { input, enqueued: Instant::now(), reply }) {
+            Ok(()) => SubmitOutcome::Accepted,
+            Err(TrySendError::Full(req)) => SubmitOutcome::Full(req.reply),
+            Err(TrySendError::Disconnected(req)) => SubmitOutcome::Closed(req.reply),
+        }
+    }
+
+    fn check_shape(&self, input: &Tensor) -> Result<()> {
         if input.shape() != &self.info.input_shape[..] {
             bail!(
                 "expected item shape {:?}, got {:?} (submit single items; the \
@@ -435,11 +640,7 @@ impl ModelClient {
                 input.shape()
             );
         }
-        let (reply, rx) = mpsc::sync_channel(1);
-        self.tx
-            .send(Request { input, enqueued: Instant::now(), reply })
-            .map_err(|_| anyhow!("model queue closed"))?;
-        Ok(rx)
+        Ok(())
     }
 }
 
@@ -473,18 +674,26 @@ impl Dispatch {
 
 /// A pool worker: one clone of the shared artifact, one private scratch.
 /// Workers race on the job queue (`Mutex<Receiver>` — exactly one waiter
-/// gets each job) and exit when the batcher drops the sender.
-fn worker_main(
-    shared: Arc<dyn SharedInfer>,
-    mut scratch: WorkerScratch,
-    rx: Arc<Mutex<Receiver<Job>>>,
-) {
+/// gets each job) and exit when the batcher drops the sender. The artifact
+/// comes from the lane's [`SwapCell`]: the worker re-loads it before every
+/// job and rebuilds its scratch when the epoch moved (hot-swap), so a
+/// swapped-out artifact finishes its in-flight batches and is then
+/// released.
+fn worker_main(cell: Arc<SwapCell>, buckets: Vec<usize>, rx: Arc<Mutex<Receiver<Job>>>) {
+    let (mut epoch, mut shared) = cell.load();
+    let mut scratch = shared.new_scratch(&buckets);
     loop {
         // The guard is a temporary of this statement: the lock is held
         // only while *waiting*, and inference below runs unlocked so the
         // other workers execute concurrently.
         let msg = rx.lock().unwrap().recv();
         let Ok(job) = msg else { return };
+        let (now, artifact) = cell.load();
+        if now != epoch {
+            epoch = now;
+            shared = artifact;
+            scratch = shared.new_scratch(&buckets);
+        }
         let result = shared.infer_shared(&job.batch, &mut scratch).map(|mut o| o.remove(0));
         complete(job, result);
     }
@@ -513,12 +722,13 @@ fn executor_main(
     while let Ok(msg) = rx.recv() {
         match msg {
             ExecMsg::Shutdown => break,
-            ExecMsg::Register { name, reply } => {
-                let res = register_engine(&manifest, kind, &opts, &mut engines, &name);
+            ExecMsg::Register { name, replace, reply } => {
+                let res = register_engine(&manifest, kind, &opts, &mut engines, &name, replace);
                 let _ = reply.send(res);
             }
-            ExecMsg::RegisterSpec { spec, buckets, reply } => {
-                let res = register_spec_engine(kind, &opts, &mut engines, &spec, buckets);
+            ExecMsg::RegisterSpec { spec, buckets, replace, reply } => {
+                let res =
+                    register_spec_engine(kind, &opts, &mut engines, &spec, buckets, replace);
                 let _ = reply.send(res);
             }
             ExecMsg::InferBatch { name, job } => {
@@ -538,10 +748,14 @@ fn register_engine(
     opts: &EngineOptions,
     engines: &mut HashMap<String, Box<dyn Engine>>,
     name: &str,
+    replace: bool,
 ) -> Result<Registration> {
     let entry = manifest.entry(name)?.clone();
-    let cache_hit = engines.contains_key(name);
+    let cache_hit = !replace && engines.contains_key(name);
     if !cache_hit {
+        // On `replace`, a build failure propagates *before* the insert:
+        // the cached engine stays and the lane keeps serving the old
+        // artifact.
         let engine = build_engine(kind, manifest, name, opts)?;
         let buckets = engine.batch_buckets().unwrap_or_else(|| entry.batches.clone());
         finish_engine(engines, name, engine, &buckets);
@@ -561,6 +775,7 @@ fn register_engine(
             params: entry.params,
             engine: engine.name().to_string(),
             workers: 1, // finalized by the coordinator once the lane exists
+            generation: 1,
         },
     })
 }
@@ -571,8 +786,9 @@ fn register_spec_engine(
     engines: &mut HashMap<String, Box<dyn Engine>>,
     spec: &ModelSpec,
     buckets: Vec<usize>,
+    replace: bool,
 ) -> Result<Registration> {
-    let cache_hit = engines.contains_key(&spec.name);
+    let cache_hit = !replace && engines.contains_key(&spec.name);
     if !cache_hit {
         let engine = build_engine_from_spec(kind, spec, opts)?;
         finish_engine(engines, &spec.name, engine, &buckets);
@@ -589,6 +805,7 @@ fn register_spec_engine(
             params: spec.param_count(),
             engine: engine.name().to_string(),
             workers: 1,
+            generation: 1,
         },
     })
 }
@@ -625,15 +842,17 @@ fn complete(job: Job, result: Result<Tensor>) {
         Ok(out) => {
             for (i, r) in requests.into_iter().enumerate() {
                 let item = out.slice_batch(i, i + 1);
-                metrics.latency.record(r.enqueued.elapsed());
-                let _ = r.reply.send(Ok(item));
+                let waited = r.enqueued.elapsed();
+                metrics.latency.record(waited);
+                metrics.latency_window.record(waited);
+                (r.reply)(Ok(item));
             }
         }
         Err(e) => {
             metrics.errors.add(n as u64);
             let msg = e.to_string();
             for r in requests {
-                let _ = r.reply.send(Err(anyhow!("{msg}")));
+                (r.reply)(Err(anyhow!("{msg}")));
             }
         }
     }
@@ -805,6 +1024,6 @@ impl Stacker {
 
 fn fail_all(queue: &mut Vec<Request>, msg: &str) {
     for r in queue.drain(..) {
-        let _ = r.reply.send(Err(anyhow!("{msg}")));
+        (r.reply)(Err(anyhow!("{msg}")));
     }
 }

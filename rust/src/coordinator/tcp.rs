@@ -1,82 +1,298 @@
 //! TCP serving front end: newline-delimited JSON requests over plain
-//! sockets (std::net — tokio is unavailable offline; a thread per
-//! connection matches the deployment scale of the paper's robot anyway).
+//! sockets (std::net — tokio is unavailable offline), served by a single
+//! nonblocking, readiness-driven I/O thread over the `poll(2)` shim in
+//! [`super::poll`].
 //!
-//! Each connection thread parses requests, routes them to the registered
-//! `ModelClient` (the dynamic batcher then packs concurrent requests from
-//! *all* connections into shared buckets), and streams responses back in
-//! completion order per connection.
+//! One `tcp-io` thread owns the listener and every connection. Each
+//! connection is a small state machine: a recycled read buffer that
+//! complete request lines are parsed straight out of, and a write buffer
+//! that finished responses are appended to and drained as the socket
+//! accepts them — no per-line `flush()`, no thread per connection.
+//! Connections are **pipelined**: a client may write any number of
+//! requests before reading; responses stream back in completion order
+//! (the batcher packs concurrent requests from *all* connections into
+//! shared buckets, and batches finish out of order), correlated by `id`.
+//!
+//! Completed inferences re-enter the loop through a completion channel:
+//! the per-request reply callback (executed on whichever worker finished
+//! the batch) serializes the response, sends `(connection token, line)`
+//! over the channel, and wakes the poll via a loopback socket pair.
+//!
+//! Admission control sheds with a structured `overloaded` error (see the
+//! protocol docs) in three cases: the model's bounded queue is full, the
+//! global in-flight cap is reached, or the model's p99 latency over the
+//! current SLO window exceeds the configured SLO. Shed requests are never
+//! executed and are counted in [`TcpStats`] and `ModelMetrics::shed`.
+//!
+//! `shutdown()` closes every socket — including idle connections parked
+//! in the poll set — and joins the I/O thread; nothing leaks past it.
 
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::collections::{HashMap, HashSet};
+use std::io::{self, BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::nn::tensor::Tensor;
 
-use super::protocol::{Request, Response};
-use super::server::{Coordinator, ModelClient};
+use super::poll::{poll, PollEntry};
+use super::protocol::{salvage_id, Request, Response};
+use super::server::{Coordinator, ModelClient, ReplyFn, SubmitOutcome};
 
+/// Upper bound on one poll wait: bounds shutdown latency even if a wake
+/// byte is lost, and paces the SLO-window refresh.
+const POLL_TICK: Duration = Duration::from_millis(50);
+
+/// How often the per-model SLO latency windows are inspected and reset.
+const SLO_REFRESH: Duration = Duration::from_millis(250);
+
+/// Longest accepted request line; a connection exceeding it is dropped
+/// (it is either broken or hostile — there is no frame to resync to).
+const MAX_LINE: usize = 8 << 20;
+
+/// Read chunk size per `read()` call on a readable socket.
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Front-end admission-control knobs (`ServingConfig::tcp_options`).
+#[derive(Debug, Clone)]
+pub struct TcpOptions {
+    /// Global cap on requests admitted but not yet answered, across all
+    /// connections and models; past it, new requests shed with
+    /// `overloaded`. 0 = unlimited.
+    pub max_inflight: u64,
+    /// Per-model p99 latency SLO in milliseconds, measured over the
+    /// current SLO window (`ModelMetrics::latency_window`, reset every
+    /// [`SLO_REFRESH`]); while a model's windowed p99 exceeds it, new
+    /// requests for that model shed. 0 disables SLO shedding.
+    pub slo_p99_ms: f64,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        Self { max_inflight: 4096, slo_p99_ms: 0.0 }
+    }
+}
+
+/// Live front-end counters, shared between the I/O thread and callers.
+#[derive(Default)]
+pub struct TcpStats {
+    active: AtomicU64,
+    total: AtomicU64,
+    shed: AtomicU64,
+    inflight: AtomicU64,
+}
+
+impl TcpStats {
+    /// Connections currently open.
+    pub fn active_connections(&self) -> u64 {
+        self.active.load(Ordering::Relaxed)
+    }
+    /// Connections ever accepted (monotonic).
+    pub fn total_connections(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+    /// Requests shed by admission control (queue full / in-flight cap /
+    /// SLO breach) with a structured `overloaded` response.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+    /// Requests admitted but not yet answered.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+    /// One-line render for the `serve` report.
+    pub fn render(&self) -> String {
+        format!(
+            "tcp: active_connections {}, total_connections {}, inflight {}, shed {}",
+            self.active_connections(),
+            self.total_connections(),
+            self.inflight(),
+            self.shed(),
+        )
+    }
+}
+
+/// Decrements the global in-flight gauge exactly once, whether the reply
+/// callback carrying it runs or is dropped un-invoked (teardown).
+struct InflightGuard(Arc<TcpStats>);
+
+impl InflightGuard {
+    /// Try to admit one request under `cap` (0 = unlimited).
+    fn admit(stats: &Arc<TcpStats>, cap: u64) -> Option<InflightGuard> {
+        let prev = stats.inflight.fetch_add(1, Ordering::Relaxed);
+        if cap != 0 && prev >= cap {
+            stats.inflight.fetch_sub(1, Ordering::Relaxed);
+            return None;
+        }
+        Some(InflightGuard(stats.clone()))
+    }
+}
+
+impl Drop for InflightGuard {
+    fn drop(&mut self) {
+        self.0.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Wakes the I/O thread's poll from any thread: one byte down a loopback
+/// socket pair (portable — no self-pipe or eventfd needed). Nonblocking;
+/// a full pipe means a wake is already pending, which is just as good.
+#[derive(Clone)]
+struct WakeHandle {
+    tx: Arc<TcpStream>,
+}
+
+impl WakeHandle {
+    fn wake(&self) {
+        let _ = (&*self.tx).write(&[1u8]);
+    }
+}
+
+/// Build the waker socket pair (write side, read side).
+fn wake_pair() -> Result<(TcpStream, TcpStream)> {
+    let listener = TcpListener::bind("127.0.0.1:0").context("binding waker listener")?;
+    let addr = listener.local_addr()?;
+    let tx = TcpStream::connect(addr).context("connecting waker")?;
+    let (rx, _) = listener.accept().context("accepting waker")?;
+    tx.set_nonblocking(true)?;
+    tx.set_nodelay(true).ok();
+    rx.set_nonblocking(true)?;
+    Ok((tx, rx))
+}
+
+/// Per-connection request-side state, split from the socket + read buffer
+/// so parsed lines (borrowing `rbuf`) and state mutation can coexist.
+struct ConnState {
+    /// Responses not yet fully written; `wpos` is the sent prefix.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Requests admitted to the coordinator whose responses have not yet
+    /// come back over the completion channel.
+    pending: usize,
+    /// Read half hit EOF: drain remaining responses, then drop.
+    peer_closed: bool,
+    /// Model-resolution caches (per connection, same policy as the old
+    /// thread-per-connection server): resolved clients, and failed names
+    /// remembered with the registry epoch so a misspelled model costs one
+    /// lookup per registry change, not one per request.
+    clients: HashMap<String, ModelClient>,
+    failed: HashMap<String, (u64, String)>,
+}
+
+impl ConnState {
+    fn new() -> ConnState {
+        ConnState {
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: 0,
+            peer_closed: false,
+            clients: HashMap::new(),
+            failed: HashMap::new(),
+        }
+    }
+
+    fn push_response(&mut self, resp: &Response) {
+        self.wbuf.extend_from_slice(resp.to_line().as_bytes());
+        self.wbuf.push(b'\n');
+    }
+
+    /// All responses delivered and written, peer gone: safe to drop.
+    fn drained(&self) -> bool {
+        self.peer_closed && self.pending == 0 && self.wpos == self.wbuf.len()
+    }
+}
+
+/// One live connection owned by the I/O thread.
+struct Conn {
+    stream: TcpStream,
+    /// Unparsed request bytes (recycled: complete lines are parsed out and
+    /// the tail is compacted in place).
+    rbuf: Vec<u8>,
+    state: ConnState,
+}
+
+/// Shared context of the I/O thread, passed alongside the connection map
+/// (separate so a `&mut Conn` and `&mut Io` can be held at once).
+struct Io {
+    coord: Arc<Coordinator>,
+    stats: Arc<TcpStats>,
+    opts: TcpOptions,
+    done_tx: Sender<(u64, String)>,
+    wake: WakeHandle,
+    /// Models currently shedding because their windowed p99 exceeds the
+    /// SLO; refreshed every [`SLO_REFRESH`].
+    slo_shed: HashSet<String>,
+}
+
+/// The event-loop TCP server handle.
 pub struct TcpServer {
     addr: SocketAddr,
     stopping: Arc<AtomicBool>,
-    accept_thread: Option<std::thread::JoinHandle<()>>,
-    pub connections: Arc<AtomicU64>,
+    io_thread: Option<std::thread::JoinHandle<()>>,
+    wake: WakeHandle,
+    /// Live front-end counters (connections, in-flight, shed).
+    pub stats: Arc<TcpStats>,
 }
 
 impl TcpServer {
-    /// Bind and start accepting. Models are resolved **lazily per
-    /// request** (with a per-connection cache), so anything registered on
-    /// the coordinator after the server starts — or registrable from the
-    /// manifest — is immediately servable; a startup snapshot would return
-    /// "unknown model" forever for late registrations.
+    /// Bind and start serving with default [`TcpOptions`]. Models are
+    /// resolved **lazily per request** (with a per-connection cache), so
+    /// anything registered on the coordinator after the server starts —
+    /// or registrable from the manifest — is immediately servable.
     pub fn start(coord: Arc<Coordinator>, bind: &str) -> Result<TcpServer> {
+        Self::start_with(coord, bind, TcpOptions::default())
+    }
+
+    /// [`start`](Self::start) with explicit admission-control options.
+    pub fn start_with(
+        coord: Arc<Coordinator>,
+        bind: &str,
+        opts: TcpOptions,
+    ) -> Result<TcpServer> {
         let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stopping = Arc::new(AtomicBool::new(false));
-        let connections = Arc::new(AtomicU64::new(0));
+        let stats = Arc::new(TcpStats::default());
+        let (wake_tx, wake_rx) = wake_pair()?;
+        let wake = WakeHandle { tx: Arc::new(wake_tx) };
+        let (done_tx, done_rx) = mpsc::channel::<(u64, String)>();
 
+        let io = Io {
+            coord,
+            stats: stats.clone(),
+            opts,
+            done_tx,
+            wake: wake.clone(),
+            slo_shed: HashSet::new(),
+        };
         let stop2 = stopping.clone();
-        let conns2 = connections.clone();
-        let accept_thread = std::thread::Builder::new()
-            .name("tcp-accept".into())
-            .spawn(move || loop {
-                if stop2.load(Ordering::SeqCst) {
-                    return;
-                }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        conns2.fetch_add(1, Ordering::Relaxed);
-                        let coord = coord.clone();
-                        let stop3 = stop2.clone();
-                        let _ = std::thread::Builder::new()
-                            .name("tcp-conn".into())
-                            .spawn(move || {
-                                let _ = serve_connection(stream, &coord, &stop3);
-                            });
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(5));
-                    }
-                    Err(_) => return,
-                }
-            })?;
+        let io_thread = std::thread::Builder::new()
+            .name("tcp-io".into())
+            .spawn(move || io_main(io, listener, wake_rx, done_rx, stop2))
+            .context("spawning tcp-io thread")?;
 
-        Ok(TcpServer { addr, stopping, accept_thread: Some(accept_thread), connections })
+        Ok(TcpServer { addr, stopping, io_thread: Some(io_thread), wake, stats })
     }
 
+    /// The bound address (useful with a `:0` bind).
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
+    /// Stop serving: closes the listener and **every** connection —
+    /// including idle ones parked in the poll set — and joins the I/O
+    /// thread. Responses already in flight from the coordinator may be
+    /// dropped (their callbacks write into a closed completion channel).
+    /// Idempotent; also runs on drop.
     pub fn shutdown(&mut self) {
         self.stopping.store(true, Ordering::SeqCst);
-        if let Some(h) = self.accept_thread.take() {
+        self.wake.wake();
+        if let Some(h) = self.io_thread.take() {
             let _ = h.join();
         }
     }
@@ -88,90 +304,351 @@ impl Drop for TcpServer {
     }
 }
 
-fn serve_connection(
-    stream: TcpStream,
-    coord: &Arc<Coordinator>,
-    stopping: &AtomicBool,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    // Per-connection caches: resolved clients (the coordinator round-trip
-    // — a registry lock + possibly an engine build — happens once per
-    // (connection, model)) and failed names, remembered with the registry
-    // epoch so a misspelled model costs one lookup per registry change,
-    // not one per request, while late registrations are still picked up.
-    let mut clients: HashMap<String, ModelClient> = HashMap::new();
-    let mut failed: HashMap<String, (u64, String)> = HashMap::new();
-    for line in reader.lines() {
-        if stopping.load(Ordering::SeqCst) {
-            break;
+/// The I/O thread: accept, read, parse, admit, and write — all driven by
+/// one poll set, never blocking on any single socket.
+fn io_main(
+    mut io: Io,
+    listener: TcpListener,
+    wake_rx: TcpStream,
+    done_rx: Receiver<(u64, String)>,
+    stopping: Arc<AtomicBool>,
+) {
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token: u64 = 1;
+    let mut scratch = vec![0u8; READ_CHUNK];
+    let mut last_slo = Instant::now();
+
+    while !stopping.load(Ordering::SeqCst) {
+        // Deliver finished inferences into their connections' write
+        // buffers (responses for connections that died in the meantime
+        // are dropped — the peer is gone).
+        while let Ok((token, line)) = done_rx.try_recv() {
+            if let Some(conn) = conns.get_mut(&token) {
+                conn.state.pending = conn.state.pending.saturating_sub(1);
+                conn.state.wbuf.extend_from_slice(line.as_bytes());
+                conn.state.wbuf.push(b'\n');
+            }
         }
-        let line = line?;
-        if line.trim().is_empty() {
+
+        // Opportunistic flush: most responses fit the socket buffer, so
+        // they leave on this round instead of waiting one poll for the
+        // writability report.
+        let mut dead: Vec<u64> = Vec::new();
+        for (&token, conn) in conns.iter_mut() {
+            if conn.state.wpos < conn.state.wbuf.len() && flush_writes(conn).is_err() {
+                dead.push(token);
+            }
+        }
+        reap(&mut conns, &mut dead, &io.stats);
+
+        if io.opts.slo_p99_ms > 0.0 && last_slo.elapsed() >= SLO_REFRESH {
+            refresh_slo(&mut io);
+            last_slo = Instant::now();
+        }
+
+        // Poll set: [listener, waker, connections…].
+        let mut entries = Vec::with_capacity(conns.len() + 2);
+        let mut tokens = Vec::with_capacity(conns.len());
+        entries.push(PollEntry::new(&listener, false));
+        entries.push(PollEntry::new(&wake_rx, false));
+        for (&token, conn) in conns.iter() {
+            tokens.push(token);
+            entries.push(PollEntry::new(&conn.stream, conn.state.wpos < conn.state.wbuf.len()));
+        }
+        if poll(&mut entries, POLL_TICK).is_err() {
+            // A torn-down fd (racing close) yields one failed round; the
+            // next rebuild drops it. Avoid a hot error loop regardless.
+            std::thread::sleep(Duration::from_millis(1));
             continue;
         }
-        let resp = handle_line(&line, coord, &mut clients, &mut failed);
-        writer.write_all(resp.to_line().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+
+        if entries[0].readable {
+            accept_ready(&listener, &mut conns, &mut next_token, &io.stats);
+        }
+        if entries[1].readable {
+            // Drain wake bytes; the actual work happens above/below.
+            while matches!((&wake_rx).read(&mut scratch), Ok(n) if n > 0) {}
+        }
+
+        let mut dead: Vec<u64> = Vec::new();
+        for (i, &token) in tokens.iter().enumerate() {
+            let entry = &entries[i + 2];
+            let Some(conn) = conns.get_mut(&token) else { continue };
+            if entry.readable
+                && !conn.state.peer_closed
+                && read_ready(&mut io, token, conn, &mut scratch).is_err()
+            {
+                dead.push(token);
+                continue;
+            }
+            if (entry.writable || conn.state.wpos < conn.state.wbuf.len())
+                && flush_writes(conn).is_err()
+            {
+                dead.push(token);
+                continue;
+            }
+            if entry.hangup && conn.state.drained() {
+                dead.push(token);
+            }
+        }
+        reap(&mut conns, &mut dead, &io.stats);
+
+        // Graceful closes: peer sent EOF and everything owed is delivered.
+        let mut done: Vec<u64> =
+            conns.iter().filter(|(_, c)| c.state.drained()).map(|(&t, _)| t).collect();
+        reap(&mut conns, &mut done, &io.stats);
+    }
+
+    // Teardown: closing the sockets here (by dropping them) is what lets
+    // `shutdown()` guarantee no connection outlives it.
+    for _ in conns.drain() {
+        io.stats.active.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Accept every pending connection (level-triggered readiness).
+fn accept_ready(
+    listener: &TcpListener,
+    conns: &mut HashMap<u64, Conn>,
+    next_token: &mut u64,
+    stats: &Arc<TcpStats>,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                stream.set_nodelay(true).ok();
+                let token = *next_token;
+                *next_token += 1;
+                conns.insert(token, Conn { stream, rbuf: Vec::new(), state: ConnState::new() });
+                stats.active.fetch_add(1, Ordering::Relaxed);
+                stats.total.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+/// Remove dead connections, keeping the active gauge exact.
+fn reap(conns: &mut HashMap<u64, Conn>, dead: &mut Vec<u64>, stats: &Arc<TcpStats>) {
+    for token in dead.drain(..) {
+        if conns.remove(&token).is_some() {
+            stats.active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Drain a readable socket into the connection's read buffer and process
+/// every complete request line in it. An `Err` means the connection is
+/// broken (or abusive: an unterminated line past [`MAX_LINE`]) and must
+/// be dropped.
+fn read_ready(io: &mut Io, token: u64, conn: &mut Conn, scratch: &mut [u8]) -> io::Result<()> {
+    loop {
+        match (&conn.stream).read(scratch) {
+            Ok(0) => {
+                conn.state.peer_closed = true;
+                process_buffer(io, token, conn)?;
+                return Ok(());
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&scratch[..n]);
+                process_buffer(io, token, conn)?;
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => return Ok(()),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Parse complete lines straight out of the read buffer, then compact the
+/// unparsed tail to the front (the buffer is recycled across reads).
+fn process_buffer(io: &mut Io, token: u64, conn: &mut Conn) -> io::Result<()> {
+    let mut start = 0;
+    while let Some(pos) = conn.rbuf[start..].iter().position(|&b| b == b'\n') {
+        let end = start + pos;
+        match std::str::from_utf8(&conn.rbuf[start..end]) {
+            Ok(line) => {
+                let line = line.trim();
+                if !line.is_empty() {
+                    process_line(io, token, line, &mut conn.state);
+                }
+            }
+            Err(_) => {
+                conn.state.push_response(&Response::err(0, "bad request: line is not UTF-8"));
+            }
+        }
+        start = end + 1;
+    }
+    if start > 0 {
+        conn.rbuf.drain(..start);
+    }
+    if conn.rbuf.len() > MAX_LINE {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            "request line exceeds the size limit",
+        ));
     }
     Ok(())
 }
 
-fn handle_line(
-    line: &str,
-    coord: &Arc<Coordinator>,
-    clients: &mut HashMap<String, ModelClient>,
-    failed: &mut HashMap<String, (u64, String)>,
-) -> Response {
+/// One request line: parse, resolve the model, admission-check, and
+/// either hand it to the batcher (reply comes back over the completion
+/// channel) or append an error/shed response directly.
+fn process_line(io: &mut Io, token: u64, line: &str, state: &mut ConnState) {
     let req = match Request::parse(line) {
         Ok(r) => r,
-        Err(e) => return Response::Err { id: 0, error: format!("bad request: {e}") },
+        Err(e) => {
+            // Salvage the id when the line is JSON with a sane `id`, so
+            // pipelining clients can still correlate; 0 = unattributable.
+            state.push_response(&Response::err(salvage_id(line), format!("bad request: {e}")));
+            return;
+        }
     };
-    if !clients.contains_key(&req.model) {
-        if let Some((epoch, error)) = failed.get(&req.model) {
-            if *epoch == coord.registration_epoch() {
-                return Response::Err { id: req.id, error: error.clone() };
+    if !state.clients.contains_key(&req.model) {
+        if let Some((epoch, error)) = state.failed.get(&req.model) {
+            if *epoch == io.coord.registration_epoch() {
+                state.push_response(&Response::err(req.id, error.clone()));
+                return;
             }
         }
         // Epoch sampled *before* the attempt: if a registration races in
         // after the failure, the cached epoch is stale and we retry.
-        let epoch = coord.registration_epoch();
-        match coord.register(&req.model) {
+        let epoch = io.coord.registration_epoch();
+        match io.coord.register(&req.model) {
             Ok(c) => {
-                failed.remove(&req.model);
-                clients.insert(req.model.clone(), c);
+                state.failed.remove(&req.model);
+                state.clients.insert(req.model.clone(), c);
             }
             Err(e) => {
                 let error = format!("model `{}` not registered ({e})", req.model);
                 // bounded: a client cycling through unique bad names must
                 // not grow this map forever; clearing only costs a retry
-                if failed.len() >= 64 {
-                    failed.clear();
+                if state.failed.len() >= 64 {
+                    state.failed.clear();
                 }
-                failed.insert(req.model.clone(), (epoch, error.clone()));
-                return Response::Err { id: req.id, error };
+                state.failed.insert(req.model.clone(), (epoch, error.clone()));
+                state.push_response(&Response::err(req.id, error));
+                return;
             }
         }
     }
-    let client = &clients[&req.model];
+    let client = &state.clients[&req.model];
     let item: usize = client.info.input_shape.iter().product();
     if req.input.len() != item {
-        return Response::Err {
-            id: req.id,
-            error: format!("input has {} floats, model needs {item}", req.input.len()),
-        };
+        state.push_response(&Response::err(
+            req.id,
+            format!("input has {} floats, model needs {item}", req.input.len()),
+        ));
+        return;
     }
-    let x = Tensor::from_vec(&client.info.input_shape.clone(), req.input);
-    match client.infer(x) {
-        Ok(out) => Response::ok(req.id, &out),
-        Err(e) => Response::Err { id: req.id, error: e.to_string() },
+
+    // Admission control, cheapest check first. Every shed is structured
+    // (`code: "overloaded"`) and counted; the request is never executed.
+    if io.slo_shed.contains(&req.model) {
+        client.metrics.shed.add(1);
+        io.stats.shed.fetch_add(1, Ordering::Relaxed);
+        state.push_response(&Response::overloaded(
+            req.id,
+            format!("model `{}` over its p99 latency SLO; retry later", req.model),
+        ));
+        return;
+    }
+    let Some(guard) = InflightGuard::admit(&io.stats, io.opts.max_inflight) else {
+        client.metrics.shed.add(1);
+        io.stats.shed.fetch_add(1, Ordering::Relaxed);
+        state.push_response(&Response::overloaded(
+            req.id,
+            format!("server at its in-flight cap ({}); retry later", io.opts.max_inflight),
+        ));
+        return;
+    };
+
+    let id = req.id;
+    let done_tx = io.done_tx.clone();
+    let wake = io.wake.clone();
+    let reply: ReplyFn = Box::new(move |result: anyhow::Result<Tensor>| {
+        // Serialize on the execution thread (keeps the I/O thread lean),
+        // then hand the finished line to the event loop and wake it.
+        let resp = match result {
+            Ok(out) => Response::ok(id, &out),
+            Err(e) => Response::err(id, e.to_string()),
+        };
+        // Settle the in-flight gauge *before* publishing the response:
+        // anyone who has seen the reply sees the slot free too. The guard
+        // still settles on the un-invoked path via its Drop.
+        drop(guard);
+        let _ = done_tx.send((token, resp.to_line()));
+        wake.wake();
+    });
+    let input = Tensor::from_vec(&client.info.input_shape.clone(), req.input);
+    match client.try_submit(input, reply) {
+        SubmitOutcome::Accepted => {
+            state.pending += 1;
+        }
+        SubmitOutcome::Full(reply) => {
+            client.metrics.shed.add(1);
+            io.stats.shed.fetch_add(1, Ordering::Relaxed);
+            state.push_response(&Response::overloaded(
+                req.id,
+                format!("queue full for model `{}`; retry later", req.model),
+            ));
+            drop(reply); // un-invoked: the guard inside settles the gauge
+        }
+        SubmitOutcome::Closed(reply) => {
+            state.push_response(&Response::err(req.id, "coordinator is shutting down"));
+            drop(reply);
+        }
+    }
+}
+
+/// Write as much buffered response data as the socket accepts.
+fn flush_writes(conn: &mut Conn) -> io::Result<()> {
+    while conn.state.wpos < conn.state.wbuf.len() {
+        match (&conn.stream).write(&conn.state.wbuf[conn.state.wpos..]) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(n) => conn.state.wpos += n,
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    if conn.state.wpos == conn.state.wbuf.len() {
+        conn.state.wbuf.clear();
+        conn.state.wpos = 0;
+    } else if conn.state.wpos > READ_CHUNK {
+        // keep the buffer from growing unboundedly under a slow reader
+        conn.state.wbuf.drain(..conn.state.wpos);
+        conn.state.wpos = 0;
+    }
+    Ok(())
+}
+
+/// Inspect every model's SLO latency window: models whose windowed p99
+/// exceeds the SLO shed until the next refresh. Windows are reset each
+/// time, so recovery is automatic once latency subsides. A handful of
+/// samples is required before shedding — one slow cold-start request
+/// must not blackhole a model.
+fn refresh_slo(io: &mut Io) {
+    io.slo_shed.clear();
+    for (name, m) in io.coord.model_metrics() {
+        let samples = m.latency_window.count();
+        let p99_ms = m.latency_window.quantile_us(0.99) as f64 / 1000.0;
+        if samples >= 8 && p99_ms > io.opts.slo_p99_ms {
+            io.slo_shed.insert(name);
+        }
+        m.latency_window.reset();
     }
 }
 
 /// Minimal blocking client for the wire protocol (used by the CLI `client`
-/// command, the load generator, and the integration tests).
+/// command, the load generator, and the integration tests). Supports
+/// pipelining: `send` queues request lines, `flush` pushes them out, and
+/// `recv` reads responses back in the server's completion order.
 pub struct TcpClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
@@ -189,16 +666,40 @@ impl TcpClient {
         })
     }
 
-    pub fn infer(&mut self, model: &str, input: Vec<f32>) -> Result<Tensor> {
+    /// Queue one request line (buffered; `flush` to actually send) and
+    /// return its auto-assigned id for correlating the pipelined reply.
+    pub fn send(&mut self, model: &str, input: Vec<f32>) -> Result<u64> {
         let id = self.next_id;
         self.next_id += 1;
         let req = Request { id, model: model.into(), input };
         self.writer.write_all(req.to_line().as_bytes())?;
         self.writer.write_all(b"\n")?;
+        Ok(id)
+    }
+
+    /// Push every queued request line to the socket.
+    pub fn flush(&mut self) -> Result<()> {
         self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Block for the next response line (the server's completion order,
+    /// not send order — correlate by id). Errors once the server closes
+    /// the connection.
+    pub fn recv(&mut self) -> Result<Response> {
         let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        match Response::parse(&line)? {
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            anyhow::bail!("server closed connection");
+        }
+        Response::parse(&line)
+    }
+
+    /// One blocking request/response round-trip.
+    pub fn infer(&mut self, model: &str, input: Vec<f32>) -> Result<Tensor> {
+        let id = self.send(model, input)?;
+        self.flush()?;
+        match self.recv()? {
             Response::Ok { id: rid, shape, output } => {
                 anyhow::ensure!(rid == id, "response id mismatch");
                 Ok(Tensor::from_vec(&shape, output))

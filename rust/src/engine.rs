@@ -21,7 +21,7 @@
 
 use std::any::Any;
 use std::fmt;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{bail, Result};
 
@@ -70,6 +70,48 @@ pub trait SharedInfer: Send + Sync {
     /// it — e.g. that N workers report the *same* plan, lowered once).
     fn plan_summary(&self) -> Option<&PlanSummary> {
         None
+    }
+}
+
+/// An epoch-versioned slot holding a model's **current** shared artifact —
+/// the hot-swap primitive for live model re-registration.
+///
+/// The serving coordinator publishes one `Arc<SwapCell>` per pooled model.
+/// Pool workers `load()` it per job and compare the epoch against the one
+/// their scratch was built for; on a change they rebuild scratch and carry
+/// on — no worker restarts, no queue teardown. `swap()` bumps the epoch
+/// and replaces the artifact atomically (a short write lock; `load()` is a
+/// clone under a read lock, so the swap never blocks inference for longer
+/// than an `Arc` clone). The **old** artifact stays alive inside any job
+/// already dispatched with it — in-flight batches drain on the old
+/// version, new batches pick up the new one, and no request is lost.
+pub struct SwapCell {
+    slot: RwLock<(u64, Arc<dyn SharedInfer>)>,
+}
+
+impl SwapCell {
+    /// Wrap the initial artifact at epoch 1.
+    pub fn new(artifact: Arc<dyn SharedInfer>) -> SwapCell {
+        SwapCell { slot: RwLock::new((1, artifact)) }
+    }
+
+    /// The current `(epoch, artifact)` pair.
+    pub fn load(&self) -> (u64, Arc<dyn SharedInfer>) {
+        let g = self.slot.read().unwrap();
+        (g.0, g.1.clone())
+    }
+
+    /// Replace the artifact, bump the epoch, return the new epoch.
+    pub fn swap(&self, artifact: Arc<dyn SharedInfer>) -> u64 {
+        let mut g = self.slot.write().unwrap();
+        g.0 += 1;
+        g.1 = artifact;
+        g.0
+    }
+
+    /// The current artifact epoch (1 = never swapped).
+    pub fn epoch(&self) -> u64 {
+        self.slot.read().unwrap().0
     }
 }
 
@@ -416,6 +458,35 @@ mod tests {
         for w in workers {
             w.join().unwrap();
         }
+    }
+
+    #[test]
+    fn swap_cell_bumps_epoch_and_replaces_artifact() {
+        let x = crate::nn::tensor::Tensor::filled(&[1, 8, 8, 3], 0.25);
+        let mk = |seed| {
+            let opts = EngineOptions::default();
+            build_engine_from_spec(EngineKind::Optimized, &tiny_cnn(seed), &opts)
+                .unwrap()
+                .shareable()
+                .unwrap()
+        };
+        let cell = SwapCell::new(mk(47));
+        assert_eq!(cell.epoch(), 1);
+        let (e1, v1) = cell.load();
+        let mut s1 = v1.new_scratch(&[1]);
+        let out1 = v1.infer_shared(&x, &mut s1).unwrap();
+
+        assert_eq!(cell.swap(mk(48)), 2);
+        let (e2, v2) = cell.load();
+        assert!(e2 > e1, "swap must bump the epoch");
+        let mut s2 = v2.new_scratch(&[1]);
+        let out2 = v2.infer_shared(&x, &mut s2).unwrap();
+        assert!(
+            out1[0].max_abs_diff(&out2[0]) > 1e-6,
+            "swap did not change the served artifact"
+        );
+        // the pre-swap clone keeps working: in-flight batches drain on v1
+        assert_eq!(v1.infer_shared(&x, &mut s1).unwrap()[0].data(), out1[0].data());
     }
 
     #[test]

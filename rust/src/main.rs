@@ -9,6 +9,7 @@
 //! compiled-nn precision                   # §3.4 approximation error table
 //! compiled-nn table1 [--iters N]          # quick Table-1 analog (benches do it properly)
 //! compiled-nn serve --model c_bh --seconds 5 [--offered RPS] [--engine KIND] [--workers N]
+//! compiled-nn serve --config serving.json [--seconds N] [--max-inflight N] [--slo-ms MS]
 //! ```
 //!
 //! Engines are never constructed directly here: every subcommand goes
@@ -415,14 +416,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `serve --config serving.json [--seconds N]`: full TCP deployment — the
-/// launcher path. Runs until the duration elapses (0 = forever).
+/// `serve --config serving.json [--seconds N] [--max-inflight N]
+/// [--slo-ms MS]`: full TCP deployment — the launcher path. Runs until the
+/// duration elapses (0 = forever). `--max-inflight` and `--slo-ms`
+/// override the config file's admission-control keys (`max_inflight`,
+/// `slo_p99_ms`) for the run.
 fn cmd_serve_tcp(cfg_path: &str, args: &Args) -> Result<()> {
     use compiled_nn::coordinator::config::ServingConfig;
     use compiled_nn::coordinator::tcp::TcpServer;
 
     let cfg = ServingConfig::load(std::path::Path::new(cfg_path))?;
     let seconds = args.usize_or("seconds", 0)?;
+    let mut opts = cfg.tcp_options();
+    if let Some(v) = args.get("max-inflight") {
+        opts.max_inflight =
+            v.parse().with_context(|| "--max-inflight must be an integer".to_string())?;
+    }
+    if let Some(v) = args.get("slo-ms") {
+        let slo: f64 = v.parse().with_context(|| "--slo-ms must be a number".to_string())?;
+        anyhow::ensure!(slo >= 0.0, "--slo-ms must be >= 0 (0 disables SLO shedding)");
+        opts.slo_p99_ms = slo;
+    }
     let manifest = Manifest::load_default()?;
     let coord = Coordinator::start(manifest, cfg.coordinator_config())?;
     for m in &cfg.models {
@@ -432,8 +446,13 @@ fn cmd_serve_tcp(cfg_path: &str, args: &Args) -> Result<()> {
             client.info.engine, client.info.workers, client.info.buckets, client.info.compile_ms
         );
     }
-    let mut server = TcpServer::start(coord.clone(), &cfg.listen)?;
-    println!("serving {} models on {}", cfg.models.len(), server.addr());
+    let (max_inflight, slo_p99_ms) = (opts.max_inflight, opts.slo_p99_ms);
+    let mut server = TcpServer::start_with(coord.clone(), &cfg.listen, opts)?;
+    println!(
+        "serving {} models on {} (max_inflight {max_inflight}, slo_p99_ms {slo_p99_ms})",
+        cfg.models.len(),
+        server.addr(),
+    );
     if seconds == 0 {
         loop {
             std::thread::sleep(Duration::from_secs(3600));
@@ -441,6 +460,7 @@ fn cmd_serve_tcp(cfg_path: &str, args: &Args) -> Result<()> {
     }
     std::thread::sleep(Duration::from_secs(seconds as u64));
     print!("{}", coord.render_metrics());
+    println!("{}", server.stats.render());
     server.shutdown();
     coord.shutdown();
     Ok(())

@@ -3,21 +3,49 @@
 //! The paper's library "includes a custom implementation of a JSON parser to
 //! obtain the model architecture" (§3.1) — we do the same (serde is also
 //! unavailable in the offline build environment). Supports the full JSON
-//! grammar minus exotic number forms; numbers are kept as f64, which is
-//! lossless for every offset/shape/weight this repo serializes.
+//! grammar minus exotic number forms. Non-negative integer tokens parse as
+//! [`Json::UInt`] and stay exact over the full u64 range (wire-protocol
+//! request ids must not round through f64, which corrupts values ≥ 2^53);
+//! everything else numeric is kept as f64, lossless for every
+//! offset/shape/weight this repo serializes. `UInt` and `Num` compare
+//! numerically equal, so callers never care which variant a token took.
 
 use std::collections::BTreeMap;
 use std::fmt;
 
 /// A parsed JSON value.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub enum Json {
     Null,
     Bool(bool),
+    /// A non-negative integer kept exact (never rounded through f64): the
+    /// parser produces this for bare digit runs that fit u64, and id-like
+    /// fields serialize through it losslessly.
+    UInt(u64),
     Num(f64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+/// `UInt` and `Num` are two spellings of "JSON number"; values equal when
+/// the numbers are (everything else is structural). Keeps `parse(to_string
+/// (v)) == v` even where serializing code built a `Num` and the re-parse
+/// produced a `UInt`.
+impl PartialEq for Json {
+    fn eq(&self, other: &Json) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::UInt(a), Json::UInt(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::UInt(a), Json::Num(b)) | (Json::Num(b), Json::UInt(a)) => *b == *a as f64,
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 /// Parse error with byte offset for debugging malformed specs.
@@ -63,11 +91,27 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
+            Json::UInt(n) => Some(*n as f64),
             _ => None,
         }
     }
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|n| n as usize)
+        match self {
+            Json::UInt(n) => usize::try_from(*n).ok(),
+            _ => self.as_f64().map(|n| n as usize),
+        }
+    }
+    /// Exact u64 view: `UInt` verbatim; `Num` only when integral and in
+    /// range (so `7.0` passes but `7.5`, negatives and `1e300` are
+    /// rejected — the wire protocol refuses non-integral ids).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::UInt(n) => Some(*n),
+            Json::Num(n) if n.fract() == 0.0 && *n >= 0.0 && *n < u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
     }
     pub fn as_bool(&self) -> Option<bool> {
         match self {
@@ -111,6 +155,11 @@ impl Json {
         self.req(key)?
             .as_f64()
             .ok_or_else(|| anyhow::anyhow!("field `{key}` is not a number"))
+    }
+    pub fn req_u64(&self, key: &str) -> anyhow::Result<u64> {
+        self.req(key)?
+            .as_u64()
+            .ok_or_else(|| anyhow::anyhow!("field `{key}` is not an unsigned integer"))
     }
     pub fn req_arr(&self, key: &str) -> anyhow::Result<&[Json]> {
         self.req(key)?
@@ -311,6 +360,13 @@ impl<'a> Parser<'a> {
             }
         }
         let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        // Bare digit runs that fit u64 stay exact; everything else
+        // (signs, fractions, exponents, > u64 digits) goes through f64.
+        if s.bytes().all(|b| b.is_ascii_digit()) {
+            if let Ok(u) = s.parse::<u64>() {
+                return Ok(Json::UInt(u));
+            }
+        }
         s.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
@@ -333,6 +389,7 @@ impl fmt::Display for Json {
         match self {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
+            Json::UInt(n) => write!(f, "{n}"),
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 1e15 {
                     write!(f, "{}", *n as i64)
@@ -435,6 +492,47 @@ mod tests {
         let v = Json::parse("[3, 3, 1, 8]").unwrap();
         assert_eq!(v.as_usize_vec().unwrap(), vec![3, 3, 1, 8]);
         assert!(Json::parse("[3, \"x\"]").unwrap().as_usize_vec().is_none());
+    }
+
+    #[test]
+    fn u64_roundtrips_losslessly_at_the_2_53_boundary() {
+        // f64 has 53 mantissa bits: 2^53 + 1 is the first unrepresentable
+        // integer. Ids must survive parse → print → parse bit-exactly well
+        // past it, all the way to u64::MAX.
+        for v in [
+            (1u64 << 53) - 1,
+            1u64 << 53,
+            (1u64 << 53) + 1,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let line = Json::UInt(v).to_string();
+            assert_eq!(line, v.to_string(), "integer formatting must be exact");
+            let back = Json::parse(&line).unwrap();
+            assert_eq!(back.as_u64(), Some(v), "u64 corrupted through the wire");
+            assert_eq!(Json::parse(&back.to_string()).unwrap().as_u64(), Some(v));
+        }
+    }
+
+    #[test]
+    fn as_u64_rejects_non_integral_and_out_of_range() {
+        assert_eq!(Json::parse("7.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("-3").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1e300").unwrap().as_u64(), None);
+        // integral floats are accepted (7.0 is an integer id)
+        assert_eq!(Json::Num(7.0).as_u64(), Some(7));
+        assert_eq!(Json::parse("\"7\"").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn uint_and_num_compare_numerically() {
+        assert_eq!(Json::parse("42").unwrap(), Json::Num(42.0));
+        assert_eq!(Json::Num(42.0), Json::UInt(42));
+        assert_ne!(Json::UInt(42), Json::Num(42.5));
+        assert_eq!(
+            Json::parse("[1,2]").unwrap(),
+            Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])
+        );
     }
 
     #[test]

@@ -1,22 +1,29 @@
-//! Concurrent-serving stress: one coordinator, two spec-registered models
-//! (no artifact manifest needed, so this runs on every CI runner), worker
-//! pools over a shared `Program`, and ≥8 client threads hammering the TCP
-//! front end — including straight through shutdown.
+//! Concurrent-serving stress: one coordinator, spec-registered models (no
+//! artifact manifest needed, so this runs on every CI runner), worker
+//! pools over a shared `Program`, and the event-loop TCP front end under
+//! pipelined bursts, overload, hot-swap, and shutdown.
 //!
-//! Locks down the three coordinator bugs that the old single executor
-//! thread masked:
-//!   * dropped batcher `JoinHandle`s (teardown raced in-flight replies)
-//!   * the `register` check-then-insert race (two batchers, leaked queue)
-//!   * the TCP accept thread's one-shot `models()` snapshot (models
-//!     registered after server start were "unknown" forever)
+//! Locks down the serving lifecycle guarantees:
+//!   * exact reply accounting across ≥8 threads and 64 pipelined
+//!     connections (no lost, duplicated, or crossed replies)
+//!   * admission control: under synthetic overload every request gets a
+//!     result or a structured `overloaded` error — nothing vanishes
+//!   * hot-swap under fire: zero lost replies, the lane converges to the
+//!     new artifact, generation bumps
+//!   * shutdown: idle open connections neither hang `shutdown()` nor
+//!     outlive it; hammering straight through coordinator teardown loses
+//!     no replies
+//!   * the active/total connection gauges track disconnects
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use compiled_nn::compiler::program::lower_count;
+use compiled_nn::coordinator::protocol::Response;
 use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
-use compiled_nn::coordinator::tcp::{TcpClient, TcpServer};
+use compiled_nn::coordinator::tcp::{TcpClient, TcpOptions, TcpServer};
 use compiled_nn::engine::EngineKind;
 use compiled_nn::model::builder::tiny_cnn;
 use compiled_nn::model::spec::ModelSpec;
@@ -42,6 +49,17 @@ fn config(workers: usize) -> CoordinatorConfig {
         queue_depth: 512,
         engine: EngineKind::Optimized,
         workers,
+        intra_threads: 1,
+    }
+}
+
+/// Spin until `cond` holds (the event loop observes connects/disconnects
+/// asynchronously); panics after 5s.
+fn wait_for(mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while !cond() {
+        assert!(Instant::now() < deadline, "condition not reached within 5s");
+        std::thread::sleep(Duration::from_millis(5));
     }
 }
 
@@ -54,6 +72,7 @@ fn two_models_eight_tcp_threads_exact_accounting() {
     let b = coord.register_spec(&model("stress_b", 12), &[1, 4, 8]).unwrap();
     assert_eq!(a.info.workers, 4);
     assert_eq!(a.info.engine, "optimized");
+    assert_eq!(b.info.generation, 1);
     // one lowering per model, shared by all 4 workers — never one per worker
     assert_eq!(lower_count() - lowers_before, 2, "Program::lower ran per worker");
 
@@ -90,9 +109,267 @@ fn two_models_eight_tcp_threads_exact_accounting() {
         let m = coord.metrics(name).unwrap();
         assert_eq!(m.requests.get(), sent_per_model, "{name} lost/duplicated requests");
         assert_eq!(m.errors.get(), 0, "{name} had errors");
+        assert_eq!(m.shed.get(), 0, "{name} shed without overload");
         assert_eq!(m.inflight.get(), 0, "{name} leaked in-flight batches");
         assert!(m.latency.count() == sent_per_model, "{name} latency samples");
     }
+    drop(server);
+    coord.shutdown();
+}
+
+#[test]
+fn pipelined_burst_replies_all_arrive() {
+    let _serial = SERIAL.lock().unwrap();
+    let coord = Coordinator::start(Manifest::empty(), config(4)).unwrap();
+    coord.register_spec(&model("pipe", 15), &[1, 4, 8]).unwrap();
+    let server = TcpServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let mut client = TcpClient::connect(&server.addr().to_string()).unwrap();
+
+    // write the whole burst before reading anything: the event loop must
+    // keep consuming requests while responses pile into its write buffer
+    let n = 100usize;
+    let mut rng = SplitMix64::new(44);
+    let mut ids: HashSet<u64> = HashSet::new();
+    for _ in 0..n {
+        ids.insert(client.send("pipe", rng.uniform_vec(ITEM)).unwrap());
+    }
+    client.flush().unwrap();
+
+    // responses come back in completion order; every id exactly once
+    for _ in 0..n {
+        let resp = client.recv().unwrap();
+        assert!(ids.remove(&resp.id()), "duplicate or unknown id {}", resp.id());
+        match resp {
+            Response::Ok { shape, .. } => assert_eq!(shape, vec![1, 10]),
+            other => panic!("pipelined request failed: {other:?}"),
+        }
+    }
+    assert!(ids.is_empty());
+    let m = coord.metrics("pipe").unwrap();
+    assert_eq!(m.requests.get(), n as u64);
+    assert_eq!(m.errors.get(), 0);
+    assert_eq!(m.shed.get(), 0);
+    drop(server);
+    coord.shutdown();
+}
+
+#[test]
+fn sixty_four_pipelined_connections_exact_accounting() {
+    let _serial = SERIAL.lock().unwrap();
+    let coord = Coordinator::start(Manifest::empty(), config(4)).unwrap();
+    coord.register_spec(&model("wide_a", 17), &[1, 4, 8]).unwrap();
+    coord.register_spec(&model("wide_b", 18), &[1, 4, 8]).unwrap();
+    let server = TcpServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    // 64 concurrent connections, all pipelined from one driver thread —
+    // only the event loop's multiplexing keeps this from deadlocking
+    let conns = 64usize;
+    let per_conn = 20usize;
+    let mut clients: Vec<TcpClient> =
+        (0..conns).map(|_| TcpClient::connect(&addr).unwrap()).collect();
+    let mut rng = SplitMix64::new(55);
+    let mut expected: Vec<HashSet<u64>> = Vec::new();
+    for (i, client) in clients.iter_mut().enumerate() {
+        let name = if i % 2 == 0 { "wide_a" } else { "wide_b" };
+        let mut ids = HashSet::new();
+        for _ in 0..per_conn {
+            ids.insert(client.send(name, rng.uniform_vec(ITEM)).unwrap());
+        }
+        client.flush().unwrap();
+        expected.push(ids);
+    }
+    for (client, ids) in clients.iter_mut().zip(expected.iter_mut()) {
+        for _ in 0..per_conn {
+            let resp = client.recv().unwrap();
+            assert!(ids.remove(&resp.id()), "duplicate or unknown id {}", resp.id());
+            assert!(matches!(resp, Response::Ok { .. }), "request failed: {resp:?}");
+        }
+        assert!(ids.is_empty(), "connection lost replies");
+    }
+
+    let sent_per_model = (conns / 2 * per_conn) as u64;
+    for name in ["wide_a", "wide_b"] {
+        let m = coord.metrics(name).unwrap();
+        assert_eq!(m.requests.get(), sent_per_model, "{name} lost/duplicated requests");
+        assert_eq!(m.errors.get(), 0);
+    }
+    assert_eq!(server.stats.total_connections(), conns as u64);
+    drop(server);
+    coord.shutdown();
+}
+
+#[test]
+fn shed_under_overload_exact_accounting() {
+    let _serial = SERIAL.lock().unwrap();
+    let coord = Coordinator::start(Manifest::empty(), config(2)).unwrap();
+    coord.register_spec(&model("ovl", 51), &[1, 4, 8]).unwrap();
+    // synthetic overload: a tiny global in-flight cap against a big burst
+    let opts = TcpOptions { max_inflight: 4, slo_p99_ms: 0.0 };
+    let server = TcpServer::start_with(coord.clone(), "127.0.0.1:0", opts).unwrap();
+    let addr = server.addr().to_string();
+
+    let conns = 4usize;
+    let per_conn = 125usize;
+    let mut clients: Vec<TcpClient> =
+        (0..conns).map(|_| TcpClient::connect(&addr).unwrap()).collect();
+    let mut rng = SplitMix64::new(77);
+    let mut expected: Vec<HashSet<u64>> = Vec::new();
+    for client in clients.iter_mut() {
+        let mut ids = HashSet::new();
+        for _ in 0..per_conn {
+            ids.insert(client.send("ovl", rng.uniform_vec(ITEM)).unwrap());
+        }
+        client.flush().unwrap();
+        expected.push(ids);
+    }
+
+    // exact accounting: every single request gets exactly one response —
+    // a result, or a structured `overloaded` error; nothing vanishes
+    let (mut oks, mut sheds, mut other) = (0u64, 0u64, 0u64);
+    for (client, ids) in clients.iter_mut().zip(expected.iter_mut()) {
+        for _ in 0..per_conn {
+            let resp = client.recv().unwrap();
+            assert!(ids.remove(&resp.id()), "duplicate or unknown id {}", resp.id());
+            if resp.is_overloaded() {
+                sheds += 1;
+            } else if matches!(resp, Response::Ok { .. }) {
+                oks += 1;
+            } else {
+                other += 1;
+            }
+        }
+        assert!(ids.is_empty(), "connection lost replies under overload");
+    }
+    let sent = (conns * per_conn) as u64;
+    assert_eq!(oks + sheds + other, sent);
+    assert_eq!(other, 0, "only results or structured `overloaded` are allowed");
+    assert!(sheds > 0, "a 500-request burst against max_inflight=4 never shed");
+    assert!(oks > 0, "admission control starved the lane completely");
+
+    // counters agree with the wire, exactly: executed == ok replies,
+    // shed == overloaded replies, and shed requests were never executed
+    let m = coord.metrics("ovl").unwrap();
+    assert_eq!(m.requests.get(), oks);
+    assert_eq!(m.shed.get(), sheds);
+    assert_eq!(m.errors.get(), 0);
+    assert_eq!(server.stats.shed(), sheds);
+    assert_eq!(server.stats.inflight(), 0, "in-flight gauge leaked");
+    drop(server);
+    coord.shutdown();
+}
+
+#[test]
+fn hot_swap_under_fire_loses_no_replies() {
+    let _serial = SERIAL.lock().unwrap();
+    let lowers_before = lower_count();
+    let coord = Coordinator::start(Manifest::empty(), config(4)).unwrap();
+    let v1 = coord.register_spec(&model("swap_m", 61), &[1, 4, 8]).unwrap();
+    assert_eq!(v1.info.generation, 1);
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let client = v1.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(6000 + t as u64);
+                let mut oks = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let x = Tensor::from_vec(&[8, 8, 3], rng.uniform_vec(ITEM));
+                    // zero lost / failed replies across the swap
+                    let out = client.infer(x).expect("request lost across hot-swap");
+                    assert_eq!(out.shape(), &[1, 10]);
+                    oks += 1;
+                }
+                oks
+            })
+        })
+        .collect();
+
+    // let traffic build, swap mid-fire, keep firing
+    std::thread::sleep(Duration::from_millis(100));
+    let x0 = Tensor::from_vec(&[8, 8, 3], SplitMix64::new(1234).uniform_vec(ITEM));
+    let before = v1.infer(x0.clone()).unwrap();
+    let v2 = coord.hot_swap_spec(&model("swap_m", 62), &[1, 4, 8]).unwrap();
+    assert_eq!(v2.info.generation, 2, "hot-swap must bump the generation");
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::SeqCst);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "stress produced no traffic");
+
+    // the lane now serves the new weights (requests dispatched after the
+    // swap run the new artifact)…
+    let after = v2.infer(x0.clone()).unwrap();
+    assert!(before.max_abs_diff(&after) > 1e-6, "swap did not change the served artifact");
+    // …and they are exactly the weights a fresh seed-62 registration serves
+    let reference = coord.register_spec(&model("swap_ref", 62), &[1, 4, 8]).unwrap();
+    let expect = reference.infer(x0).unwrap();
+    assert!(after.max_abs_diff(&expect) < 1e-6, "swapped artifact differs from seed-62");
+
+    let m = coord.metrics("swap_m").unwrap();
+    assert_eq!(m.errors.get(), 0, "hot-swap caused request errors");
+    // lowerings: swap_m v1 + the swap rebuild + swap_ref — never per worker
+    assert_eq!(lower_count() - lowers_before, 3);
+
+    // a shape-changing swap is refused and the lane keeps serving
+    let mut wider = model("swap_m", 63);
+    wider.input_shape = vec![16, 16, 3];
+    let err = coord.hot_swap_spec(&wider, &[1, 4, 8]).unwrap_err().to_string();
+    assert!(err.contains("input shape"), "{err}");
+    let still = v2.infer(Tensor::from_vec(&[8, 8, 3], vec![0.1; ITEM])).unwrap();
+    assert_eq!(still.shape(), &[1, 10]);
+    coord.shutdown();
+}
+
+#[test]
+fn idle_connection_does_not_outlive_shutdown() {
+    let _serial = SERIAL.lock().unwrap();
+    let coord = Coordinator::start(Manifest::empty(), config(1)).unwrap();
+    let mut server = TcpServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    // an idle connection: opened, never written to
+    let mut idle = TcpClient::connect(&addr).unwrap();
+    wait_for(|| server.stats.active_connections() == 1);
+
+    // shutdown must close it and join the I/O thread promptly — the old
+    // thread-per-connection server leaked threads blocked in read here
+    let t = Instant::now();
+    server.shutdown();
+    assert!(t.elapsed() < Duration::from_secs(10), "shutdown hung on an idle connection");
+    assert_eq!(server.stats.active_connections(), 0, "connection outlived shutdown");
+
+    // client side observes the close (EOF or reset), not a hang
+    let err = idle.recv().unwrap_err().to_string().to_lowercase();
+    assert!(
+        err.contains("server closed connection") || err.contains("reset"),
+        "expected a closed connection, got: {err}"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn connection_gauges_track_disconnects() {
+    let _serial = SERIAL.lock().unwrap();
+    let coord = Coordinator::start(Manifest::empty(), config(1)).unwrap();
+    let server = TcpServer::start(coord.clone(), "127.0.0.1:0").unwrap();
+    let addr = server.addr().to_string();
+
+    let c1 = TcpClient::connect(&addr).unwrap();
+    let c2 = TcpClient::connect(&addr).unwrap();
+    let c3 = TcpClient::connect(&addr).unwrap();
+    wait_for(|| server.stats.active_connections() == 3);
+    assert_eq!(server.stats.total_connections(), 3);
+
+    drop(c1);
+    drop(c2);
+    wait_for(|| server.stats.active_connections() == 1);
+    assert_eq!(server.stats.total_connections(), 3, "total is monotonic");
+
+    drop(c3);
+    wait_for(|| server.stats.active_connections() == 0);
+    assert_eq!(server.stats.total_connections(), 3);
     drop(server);
     coord.shutdown();
 }
@@ -146,7 +423,7 @@ fn models_registered_after_server_start_are_served() {
     let err = client.infer("late", rng.uniform_vec(ITEM)).unwrap_err().to_string();
     assert!(err.contains("not registered"), "{err}");
 
-    // register AFTER the accept thread started — a startup snapshot of
+    // register AFTER the I/O thread started — a startup snapshot of
     // `coord.models()` would answer "unknown model" forever
     coord.register_spec(&model("late", 31), &[1, 4]).unwrap();
     let out = client.infer("late", rng.uniform_vec(ITEM)).unwrap();
