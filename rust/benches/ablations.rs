@@ -14,6 +14,9 @@
 //!   PR 7 lanes/threads: forced SIMD lane widths (scalar/4/8) and the
 //!                      intra-op band split at 1/2/4 threads on wide_cnn,
 //!                      plus the tiny_cnn batch-1 overhead guard
+//!   weight dtype:      f32 / bf16 / i8 weight storage on wide_cnn —
+//!                      latency plus the lowering's per-dtype panel-byte
+//!                      accounting (`weight_dtype` key in the JSON)
 //!
 //! Each variant is built through the engine registry (`EngineKind::Optimized`
 //! with per-variant `EngineOptions`); the arena footprint is read through
@@ -34,7 +37,7 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use compiled_nn::bench::{bench_budget, black_box};
-use compiled_nn::compiler::exec::{CompileOptions, ConvScheme, DenseScheme, LaneSelect};
+use compiled_nn::compiler::exec::{CompileOptions, ConvScheme, DenseScheme, LaneSelect, WeightDtype};
 use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
 use compiled_nn::model::builder::{square_mlp, tiny_cnn, wide_cnn};
 use compiled_nn::model::load::load_model;
@@ -68,11 +71,12 @@ fn main() -> anyhow::Result<()> {
     let lowering_report = conv_scheme_ablation(&mut cells)?;
     dense_scheme_ablation(&mut cells)?;
     lane_thread_ablation(&mut cells, &mut speedups)?;
+    let weight_dtype = weight_dtype_ablation(&mut cells, &mut speedups)?;
     match Manifest::load_default() {
         Ok(m) => model_ablations(&m, &mut cells)?,
         Err(e) => eprintln!("(skipping model ablations: {e})"),
     }
-    write_json(&cells, &speedups, lowering_report)
+    write_json(&cells, &speedups, lowering_report, weight_dtype)
 }
 
 /// §3.3 conv schemes × §3.4 pool fusion on the built-in tiny_cnn — the
@@ -303,6 +307,81 @@ fn lane_thread_ablation(
     Ok(())
 }
 
+/// Dtype-generic weight pipeline: the same wide_cnn lowered with f32,
+/// bf16, and i8 weight storage. Bytes come from the lowering's own
+/// per-dtype `weights_bytes` accounting, so the JSON records what the
+/// cost model actually priced: bf16 halves and i8 quarters the panel
+/// traffic, which is where the speedup on bandwidth-bound shapes comes
+/// from. Per-dtype speedup and bytes-vs-f32 land in BENCH_ablations.json
+/// under the `weight_dtype` key (CI greps for it).
+fn weight_dtype_ablation(
+    cells: &mut Vec<Cell>,
+    speedups: &mut BTreeMap<String, f64>,
+) -> anyhow::Result<Json> {
+    let budget = Duration::from_secs(2);
+    let spec = wide_cnn(17);
+    let mut rng = SplitMix64::new(31);
+    let x = Tensor::from_vec(&[1, 32, 32, 8], rng.uniform_vec(32 * 32 * 8));
+    let base = CompileOptions::default();
+
+    println!("== wide_cnn — weight storage dtype (f32 / bf16 / i8 panels)");
+    let mut ns_of: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut bytes_of: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut dtypes: BTreeMap<String, Json> = BTreeMap::new();
+    for dtype in WeightDtype::ALL {
+        let opts = EngineOptions {
+            compile: CompileOptions { weight_dtype: dtype, ..base },
+            buckets: None,
+        };
+        let mut e = build_engine_from_spec(EngineKind::Optimized, &spec, &opts)?;
+        let (bytes, quantized) = e
+            .plan_summary()
+            .map(|s| (s.weights_bytes.total(), s.quantized_layers))
+            .unwrap_or((0, 0));
+        let predicted = e.plan_summary().map(|s| s.report.predicted_total_cycles());
+        let label = dtype.label();
+        let r = bench_budget(&format!("wide_cnn/weights-{label}"), budget, 20, || {
+            black_box(e.infer(&x).unwrap());
+        });
+        println!(
+            "weights-{:<5} mean {:>9.4} ms  weights {:>8} B  {} quantized layers  [{} iters]",
+            label, r.mean_ms, bytes, quantized, r.iters
+        );
+        ns_of.insert(label, r.mean_ms * 1e6);
+        bytes_of.insert(label, bytes as f64);
+        let mut m = BTreeMap::new();
+        m.insert("ns_per_inference".to_string(), Json::Num(r.mean_ms * 1e6));
+        m.insert("weights_bytes".to_string(), Json::Num(bytes as f64));
+        m.insert("quantized_layers".to_string(), Json::Num(quantized as f64));
+        dtypes.insert(label.to_string(), Json::Obj(m));
+        cells.push(Cell {
+            case: "wide_cnn_weight_dtype".into(),
+            variant: format!("weights-{label}"),
+            ns: r.mean_ms * 1e6,
+            predicted,
+        });
+    }
+    for narrow in ["bf16", "i8"] {
+        speedups.insert(
+            format!("speedup_{narrow}_vs_f32_wide_cnn"),
+            ns_of["f32"] / ns_of[narrow],
+        );
+        if let Some(Json::Obj(m)) = dtypes.get_mut(narrow) {
+            m.insert(
+                "bytes_vs_f32".to_string(),
+                Json::Num(bytes_of[narrow] / bytes_of["f32"]),
+            );
+        }
+        println!(
+            "weights-{narrow}: ×{:.2} vs f32, {:.2}× the panel bytes",
+            ns_of["f32"] / ns_of[narrow],
+            bytes_of[narrow] / bytes_of["f32"]
+        );
+    }
+    println!();
+    Ok(Json::Obj(dtypes))
+}
+
 fn model_ablations(manifest: &Manifest, cells: &mut Vec<Cell>) -> anyhow::Result<()> {
     let budget = Duration::from_secs(2);
 
@@ -412,6 +491,7 @@ fn write_json(
     cells: &[Cell],
     speedups: &BTreeMap<String, f64>,
     lowering_report: Option<Json>,
+    weight_dtype: Json,
 ) -> anyhow::Result<()> {
     let mut cases: BTreeMap<String, Json> = BTreeMap::new();
     let mut predicted: BTreeMap<String, Json> = BTreeMap::new();
@@ -440,6 +520,7 @@ fn write_json(
         "lowering_report".to_string(),
         lowering_report.unwrap_or(Json::Null),
     );
+    root.insert("weight_dtype".to_string(), weight_dtype);
     root.insert("ranking_check".to_string(), ranking_check(cells));
     std::fs::write("BENCH_ablations.json", format!("{}\n", Json::Obj(root)))?;
     println!("wrote BENCH_ablations.json");

@@ -18,10 +18,10 @@ use std::time::Duration;
 
 use compiled_nn::bench::{bench, bench_budget, black_box, BenchResult};
 use compiled_nn::compiler::cost::batch_elems;
-use compiled_nn::compiler::kernels::{dense_run, DenseAlgo, DenseTail, Epilogue};
+use compiled_nn::compiler::kernels::{dense_run, DenseAlgo, DenseTail, Epilogue, WeightPanels};
 use compiled_nn::nn::simd::{
     matvec_broadcast, matvec_naive, matvec_rotated, pack_dense_panels,
-    pack_dense_panels_any, rotate_diagonals,
+    pack_dense_panels_any, rotate_diagonals, WeightDtype,
 };
 use compiled_nn::util::json::Json;
 use compiled_nn::util::rng::SplitMix64;
@@ -117,8 +117,11 @@ fn dense_grid() -> anyhow::Result<()> {
         for &batch in &[1usize, 4, 8, 32] {
             let x = rng.uniform_vec(batch * in_dim);
             let mut out = vec![0.0f32; batch * out_dim];
-            let algo =
-                DenseAlgo::Gemm { panels: panels.clone(), lanes: 4, tail: DenseTail::Panels };
+            let algo = DenseAlgo::Gemm {
+                panels: WeightPanels::F32(panels.clone()),
+                lanes: 4,
+                tail: DenseTail::Panels,
+            };
 
             // per-item matvec: the pre-GEMM serving path — one full pass
             // over the packed weights per batch element
@@ -246,7 +249,7 @@ fn dense_grid() -> anyhow::Result<()> {
     let mut ns_of: BTreeMap<usize, f64> = BTreeMap::new();
     for lanes in [4usize, 8, 16] {
         let algo = DenseAlgo::Gemm {
-            panels: pack_dense_panels_any(&kernel, in_dim, out_dim, lanes),
+            panels: WeightPanels::F32(pack_dense_panels_any(&kernel, in_dim, out_dim, lanes)),
             lanes,
             tail: DenseTail::Panels,
         };
@@ -272,13 +275,63 @@ fn dense_grid() -> anyhow::Result<()> {
     speedups.insert("speedup_w8_vs_w4_512x128".to_string(), ns_of[&4] / ns_of[&8]);
     speedups.insert("speedup_w16_vs_w4_512x128".to_string(), ns_of[&4] / ns_of[&16]);
 
-    write_json(&cells, &speedups)?;
+    // Weight-dtype sweep (dtype-generic weight pipeline): the same 512×128
+    // GEMM with panels stored f32 / bf16 / i8 — the bandwidth-for-accuracy
+    // trade the §3.3 cost model prices. `weight_bytes` is the resident
+    // packed footprint each pass streams (i8 includes its per-channel
+    // scale vector); the speedup keys compare per-dtype ns to the f32 row.
+    println!("\n== weight-dtype sweep: 512x128 GEMM, batch 8, 4 lanes");
+    let mut dt_ns: BTreeMap<&'static str, f64> = BTreeMap::new();
+    let mut weight_dtype: BTreeMap<String, Json> = BTreeMap::new();
+    for dtype in WeightDtype::ALL {
+        let panels = WeightPanels::pack_dense(&kernel, in_dim, out_dim, 4, dtype);
+        let bytes = panels.weight_bytes();
+        let algo = DenseAlgo::Gemm { panels, lanes: 4, tail: DenseTail::Panels };
+        let r = bench_budget(&format!("512x128/b{batch}/gemm-{dtype}"), budget, 20, || {
+            dense_run(
+                &x,
+                (batch, in_dim),
+                &algo,
+                out_dim,
+                Some(&bias),
+                Epilogue::NONE,
+                &mut [],
+                1,
+                &mut out,
+            );
+            black_box(&out);
+        });
+        let ns = per_item_ns(&r, batch);
+        println!("  {:>5}: {ns:.1} ns/item, {bytes} weight bytes", dtype.label());
+        cells.push(Cell {
+            key: format!("512x128_gemm_{}_b{batch}", dtype.label()),
+            ns_per_item: ns,
+        });
+        dt_ns.insert(dtype.label(), ns);
+        let mut m = BTreeMap::new();
+        m.insert("ns_per_item".to_string(), Json::Num(ns));
+        m.insert("weight_bytes".to_string(), Json::Num(bytes as f64));
+        m.insert(
+            "bytes_vs_f32".to_string(),
+            Json::Num(bytes as f64 / (in_dim as f64 * out_dim as f64 * 4.0)),
+        );
+        weight_dtype.insert(dtype.label().to_string(), Json::Obj(m));
+    }
+    for l in ["bf16", "i8"] {
+        speedups.insert(format!("speedup_{l}_vs_f32_512x128"), dt_ns["f32"] / dt_ns[l]);
+    }
+
+    write_json(&cells, &speedups, &weight_dtype)?;
     Ok(())
 }
 
 /// Machine-readable grid → BENCH_dense.json (uploaded as a CI artifact
 /// alongside the other bench JSONs).
-fn write_json(cells: &[Cell], speedups: &BTreeMap<String, f64>) -> anyhow::Result<()> {
+fn write_json(
+    cells: &[Cell],
+    speedups: &BTreeMap<String, f64>,
+    weight_dtype: &BTreeMap<String, Json>,
+) -> anyhow::Result<()> {
     let mut grid = BTreeMap::new();
     for c in cells {
         grid.insert(c.key.clone(), Json::Num(c.ns_per_item));
@@ -287,6 +340,7 @@ fn write_json(cells: &[Cell], speedups: &BTreeMap<String, f64>) -> anyhow::Resul
     root.insert("bench".to_string(), Json::Str("dense".to_string()));
     root.insert("unit".to_string(), Json::Str("ns_per_item".to_string()));
     root.insert("grid".to_string(), Json::Obj(grid));
+    root.insert("weight_dtype".to_string(), Json::Obj(weight_dtype.clone()));
     for (k, v) in speedups {
         root.insert(k.clone(), Json::Num(*v));
     }

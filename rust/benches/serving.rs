@@ -73,6 +73,7 @@ fn coordinator_config(workers: usize) -> CoordinatorConfig {
         engine: EngineKind::Optimized,
         workers,
         intra_threads: 1,
+        weight_dtype: compiled_nn::nn::simd::WeightDtype::F32,
     }
 }
 

@@ -25,12 +25,23 @@ use anyhow::Result;
 
 use crate::compiler::silvermont;
 use crate::model::spec::{LayerOp, ModelSpec};
+use crate::nn::simd::WeightDtype;
 use crate::util::json::Json;
 
 /// Registers available on the paper's target (x86-64 SSE: 16 XMM).
 pub const N_XMM: usize = 16;
 /// Lanes per register (4 × f32 in 128-bit XMM).
 pub const LANES: usize = 4;
+
+/// Sustained streaming bandwidth of the modelled core, in weight bytes per
+/// cycle. Prices the PR 9 bytes-moved term: every candidate pays
+/// `bytes_streamed_per_item / STREAM_BYTES_PER_CYCLE` cycles on top of its
+/// compute estimate, so storing weights in a narrower dtype (bf16 halves,
+/// i8 quarters the stream) shows up in the §3.3 argmin exactly where a
+/// layer is bandwidth-bound. Deliberately generous (an L1-resident figure):
+/// the term is a tie-breaker on compute-bound layers and only dominates
+/// when the weight footprint genuinely streams.
+pub const STREAM_BYTES_PER_CYCLE: f64 = 64.0;
 
 /// Per-layer instruction/register estimates (the §3.3 batching-rule view,
 /// independent of which kernel scheme lowering ends up choosing).
@@ -167,6 +178,11 @@ pub struct CandidateCost {
     pub cycles: f64,
     /// Bytes of (possibly packed/padded) weights the scheme materializes.
     pub weight_bytes: usize,
+    /// Storage dtype this candidate's weights would use. The scalar
+    /// `generic` path and the rotated/broadcast dense tails always store
+    /// f32 whatever the compile requested — their candidates say so, and
+    /// their bytes terms are priced accordingly.
+    pub dtype: WeightDtype,
     /// Whether this candidate fuses the downstream max-pool into its stores.
     pub fused_pool: bool,
 }
@@ -212,6 +228,13 @@ pub struct LayerDecision {
     pub parallel_tasks: usize,
     /// Predicted cycles of the chosen scheme (0 when unpriced).
     pub predicted_cycles: f64,
+    /// Storage dtype of the weights the emitted kernel actually carries
+    /// (may be `F32` under a narrower request: generic/rotated/broadcast
+    /// storage, nonfinite-weight fallback, or layers with no weights).
+    pub weight_dtype: WeightDtype,
+    /// Bytes of packed weight storage the emitted kernel owns (0 for
+    /// weightless or elided layers).
+    pub weights_bytes: usize,
     /// How the choice was made.
     pub reason: DecisionReason,
     /// The emitted kernel fuses a downstream max-pool.
@@ -272,6 +295,9 @@ impl LoweringReport {
                 if d.parallel_tasks > 1 {
                     chosen.push_str(&format!(" x{}", d.parallel_tasks));
                 }
+                if d.weight_dtype != WeightDtype::F32 {
+                    chosen.push_str(&format!(" {}", d.weight_dtype));
+                }
             }
             s.push_str(&format!(
                 "{:<16} {:<12} {:<16} {:<10} {:>14.0}  {}\n",
@@ -317,6 +343,8 @@ impl LoweringReport {
                     Json::Num(d.parallel_tasks as f64),
                 );
                 m.insert("predicted_cycles".into(), Json::Num(d.predicted_cycles));
+                m.insert("weight_dtype".into(), Json::Str(d.weight_dtype.label().into()));
+                m.insert("weights_bytes".into(), Json::Num(d.weights_bytes as f64));
                 m.insert("reason".into(), Json::Str(d.reason.label().into()));
                 m.insert("fused_pool".into(), Json::Bool(d.fused_pool));
                 m.insert("elided".into(), Json::Bool(d.elided));
@@ -332,6 +360,7 @@ impl LoweringReport {
                             "weight_bytes".into(),
                             Json::Num(c.weight_bytes as f64),
                         );
+                        cm.insert("dtype".into(), Json::Str(c.dtype.label().into()));
                         cm.insert("fused_pool".into(), Json::Bool(c.fused_pool));
                         Json::Obj(cm)
                     })
@@ -414,6 +443,20 @@ pub fn conv_candidates(
     fusible_pool: bool,
     max_lanes: usize,
 ) -> Vec<CandidateCost> {
+    conv_candidates_dt(d, fusible_pool, max_lanes, WeightDtype::F32)
+}
+
+/// [`conv_candidates`] under a requested weight storage dtype: the blocked
+/// schemes price their packed panels at the narrow element size (plus the
+/// i8 scale vector) and pay the [`STREAM_BYTES_PER_CYCLE`] bytes-moved
+/// term on what they actually stream per item; the scalar `generic` path
+/// keeps raw f32 storage whatever was requested.
+pub fn conv_candidates_dt(
+    d: &ConvDims,
+    fusible_pool: bool,
+    max_lanes: usize,
+    dtype: WeightDtype,
+) -> Vec<CandidateCost> {
     let taps = d.kh * d.kw * d.in_ch;
     let out_pixels = d.out_h * d.out_w;
     let macs = (out_pixels * d.out_ch * taps) as f64;
@@ -422,6 +465,7 @@ pub fn conv_candidates(
     }
     let out_elems = (out_pixels * d.out_ch) as f64;
     let raw_bytes = taps * d.out_ch * 4;
+    let scale_bytes = if dtype == WeightDtype::I8 { d.out_ch * 4 } else { 0 };
     // SAME with a multi-tap kernel pays per-row bounds handling in the
     // inner loop; VALID and 1×1 kernels never leave bounds
     let multi_tap_same = d.same_padding && (d.kh > 1 || d.kw > 1);
@@ -429,34 +473,64 @@ pub fn conv_candidates(
     // im2col gathers each input patch element once per output pixel, then
     // all out_ch MACs reuse the gathered row → +1 load-cycle / out_ch
     let gather_pen = 1.0 / d.out_ch as f64;
-    let mut base: Vec<(&'static str, f64, usize, usize)> = Vec::new();
+    // the full panel set streams once per output pixel
+    let mem = |bytes: usize| out_pixels as f64 * bytes as f64 / STREAM_BYTES_PER_CYCLE;
+    let mut base: Vec<(&'static str, f64, usize, usize, WeightDtype)> = Vec::new();
     for scheme in ["im2col", "direct"] {
         let pen = if scheme == "im2col" { gather_pen } else { direct_pen };
         for &wl in blocked_widths(max_lanes) {
             let waste = panel_waste(d.out_ch, wl);
             // packed panels pad out_ch to the lane width; generic keeps
             // the raw kernel
-            let packed_bytes = taps * wl * d.out_ch.div_ceil(wl) * 4;
-            base.push((scheme, macs * waste * (simd_mac_cycles_w(wl) + pen), packed_bytes, wl));
+            let packed_bytes =
+                taps * wl * d.out_ch.div_ceil(wl) * dtype.bytes_per_elem() + scale_bytes;
+            base.push((
+                scheme,
+                macs * waste * (simd_mac_cycles_w(wl) + pen) + mem(packed_bytes),
+                packed_bytes,
+                wl,
+                dtype,
+            ));
         }
     }
-    base.push(("generic", macs * silvermont::scalar_mac_cycles(), raw_bytes, 1));
+    base.push((
+        "generic",
+        macs * silvermont::scalar_mac_cycles() + mem(raw_bytes),
+        raw_bytes,
+        1,
+        WeightDtype::F32,
+    ));
     let mut out = Vec::new();
-    for (scheme, cycles, weight_bytes, lanes) in base {
+    for (scheme, cycles, weight_bytes, lanes, dtype) in base {
         if fusible_pool {
             // fused: the pool max happens in the conv's store loop — no
             // separate pass. Unfused: one ~1-cycle read/compare sweep over
             // every conv output element.
-            out.push(CandidateCost { scheme, lanes, cycles, weight_bytes, fused_pool: true });
+            out.push(CandidateCost {
+                scheme,
+                lanes,
+                cycles,
+                weight_bytes,
+                dtype,
+                fused_pool: true,
+            });
             out.push(CandidateCost {
                 scheme,
                 lanes,
                 cycles: cycles + out_elems,
                 weight_bytes,
+                dtype,
                 fused_pool: false,
             });
         } else {
-            out.push(CandidateCost { scheme, lanes, cycles, weight_bytes, fused_pool: false });
+            out.push(CandidateCost {
+                scheme,
+                lanes,
+                cycles,
+                weight_bytes,
+                dtype,
+                fused_pool: false,
+            });
         }
     }
     out
@@ -480,6 +554,23 @@ pub fn dense_candidates(
     rotated_max: usize,
     max_lanes: usize,
 ) -> Vec<CandidateCost> {
+    dense_candidates_dt(d, batch_hint, rotated_max, max_lanes, WeightDtype::F32)
+}
+
+/// [`dense_candidates`] under a requested weight storage dtype. Only the
+/// pure-panel scheme can store narrow weights end to end: the rotated and
+/// broadcast tails are f32 algorithms (their whole candidate keeps f32
+/// storage, priced at f32 bytes), which is exactly how a narrow request
+/// steers the argmin toward `gemm+panels` on bandwidth-bound layers — the
+/// tie the f32 pricing kept for the first-listed rotated scheme breaks in
+/// favour of the scheme that can actually shrink its stream.
+pub fn dense_candidates_dt(
+    d: &DenseDims,
+    batch_hint: usize,
+    rotated_max: usize,
+    max_lanes: usize,
+    dtype: WeightDtype,
+) -> Vec<CandidateCost> {
     let macs = (d.in_dim * d.units) as f64;
     if macs == 0.0 {
         return Vec::new();
@@ -497,17 +588,27 @@ pub fn dense_candidates(
     let widths = blocked_widths(max_lanes);
     // per-item cycles when the item lands in a full GEMM tile, per width
     let gemm_item = |wl: usize| macs * panel_waste(d.units, wl) * simd_mac_cycles_w(wl);
-    let packed_bytes = |wl: usize| d.in_dim * wl * d.units.div_ceil(wl) * 4;
+    let packed_elems = |wl: usize| d.in_dim * wl * d.units.div_ceil(wl);
+    let scale_bytes = if dtype == WeightDtype::I8 { d.units * 4 } else { 0 };
+    let packed_dt = |wl: usize| packed_elems(wl) * dtype.bytes_per_elem() + scale_bytes;
+    let packed_f32 = |wl: usize| packed_elems(wl) * 4;
+    // bytes-moved per item: a full tile streams the panel set once per
+    // LANES items; a tail item streams its matvec layout whole
+    let mem = |tile_bytes: usize, tail_bytes: usize| -> f64 {
+        mix(tile_bytes as f64 / LANES as f64, tail_bytes as f64) / STREAM_BYTES_PER_CYCLE
+    };
     let mut out = Vec::new();
     if rotatable {
         for &wl in widths {
             out.push(CandidateCost {
                 scheme: "gemm+rotated",
                 lanes: wl,
-                cycles: mix(gemm_item(wl), macs * silvermont::rotated_mac_cycles()),
-                // panels for the tiles + the rotated diagonal copy for the
-                // tail
-                weight_bytes: packed_bytes(wl) + raw_bytes,
+                cycles: mix(gemm_item(wl), macs * silvermont::rotated_mac_cycles())
+                    + mem(packed_f32(wl), raw_bytes),
+                // f32 panels for the tiles + the rotated diagonal copy for
+                // the tail
+                weight_bytes: packed_f32(wl) + raw_bytes,
+                dtype: WeightDtype::F32,
                 fused_pool: false,
             });
         }
@@ -516,8 +617,9 @@ pub fn dense_candidates(
         out.push(CandidateCost {
             scheme: "gemm+panels",
             lanes: wl,
-            cycles: mix(gemm_item(wl), gemm_item(wl)),
-            weight_bytes: packed_bytes(wl),
+            cycles: mix(gemm_item(wl), gemm_item(wl)) + mem(packed_dt(wl), packed_dt(wl)),
+            weight_bytes: packed_dt(wl),
+            dtype,
             fused_pool: false,
         });
     }
@@ -526,8 +628,10 @@ pub fn dense_candidates(
             out.push(CandidateCost {
                 scheme: "gemm+broadcast",
                 lanes: wl,
-                cycles: mix(gemm_item(wl), macs * silvermont::broadcast_mac_cycles()),
-                weight_bytes: packed_bytes(wl) + raw_bytes,
+                cycles: mix(gemm_item(wl), macs * silvermont::broadcast_mac_cycles())
+                    + mem(packed_f32(wl), raw_bytes),
+                weight_bytes: packed_f32(wl) + raw_bytes,
+                dtype: WeightDtype::F32,
                 fused_pool: false,
             });
         }
@@ -535,8 +639,10 @@ pub fn dense_candidates(
     out.push(CandidateCost {
         scheme: "generic",
         lanes: 1,
-        cycles: macs * silvermont::scalar_mac_cycles(),
+        cycles: macs * silvermont::scalar_mac_cycles()
+            + raw_bytes as f64 / STREAM_BYTES_PER_CYCLE,
         weight_bytes: raw_bytes,
+        dtype: WeightDtype::F32,
         fused_pool: false,
     });
     out
@@ -791,6 +897,8 @@ mod tests {
                 lane_width: 4,
                 parallel_tasks: 1,
                 predicted_cycles: 8640.0,
+                weight_dtype: WeightDtype::Bf16,
+                weights_bytes: 216,
                 reason: DecisionReason::CostModel,
                 fused_pool: false,
                 elided: false,
@@ -801,10 +909,55 @@ mod tests {
         let t = report.render_table();
         assert!(t.contains("conv1") && t.contains("cost-model"), "{t}");
         assert!(t.contains("predicted total"), "{t}");
+        assert!(t.contains("w4 bf16"), "narrow dtype must show in the table: {t}");
         let j = report.to_json().to_string();
         assert!(j.contains("\"decisions\"") && j.contains("\"im2col\""), "{j}");
         assert!(j.contains("\"lane_width\"") && j.contains("\"parallel_tasks\""), "{j}");
         assert!(j.contains("\"lanes\""), "{j}");
+        assert!(j.contains("\"weight_dtype\"") && j.contains("\"bf16\""), "{j}");
+        assert!(j.contains("\"weights_bytes\""), "{j}");
         assert_eq!(report.predicted_total_cycles(), 8640.0);
+    }
+
+    /// The PR 9 pricing lever: a narrow weight dtype shrinks the
+    /// bytes-moved term of the schemes that can store it, and leaves the
+    /// f32-only schemes (generic, rotated/broadcast tails) untouched — so
+    /// the argmin migrates to narrow-capable schemes exactly when the
+    /// layer is bandwidth-bound.
+    #[test]
+    fn narrow_dtype_pricing_steers_the_argmin() {
+        let max = crate::nn::simd::ROTATED_STACK_MAX;
+        let d = DenseDims { in_dim: 256, units: 256 };
+        // f32, full-tile batch: rotated and panels tie on compute and
+        // bytes, and the first-listed rotated keeps the strict-< argmin
+        let f = dense_candidates_dt(&d, 4, max, 4, WeightDtype::F32);
+        assert_eq!(pick(&f, false).unwrap().scheme, "gemm+rotated");
+        // i8: only the pure-panel candidate's stream narrows → flip
+        let q = dense_candidates_dt(&d, 4, max, 4, WeightDtype::I8);
+        let best = pick(&q, false).unwrap();
+        assert_eq!((best.scheme, best.dtype), ("gemm+panels", WeightDtype::I8));
+        assert!(
+            cycles_of(&q, "gemm+panels", false) < cycles_of(&q, "gemm+rotated", false)
+        );
+        // narrowing never raises a price; panel schemes strictly drop,
+        // f32-storage schemes are unchanged
+        assert!(cycles_of(&q, "gemm+panels", false) < cycles_of(&f, "gemm+panels", false));
+        assert_eq!(
+            cycles_of(&q, "gemm+rotated", false),
+            cycles_of(&f, "gemm+rotated", false)
+        );
+        assert_eq!(cycles_of(&q, "generic", false), cycles_of(&f, "generic", false));
+        // conv: bf16 halves the packed panel bytes and the price follows
+        let c = conv(3, 3, 8, 32, 16, 16, true);
+        let cf = conv_candidates_dt(&c, false, 4, WeightDtype::F32);
+        let cb = conv_candidates_dt(&c, false, 4, WeightDtype::Bf16);
+        assert!(cycles_of(&cb, "im2col", false) < cycles_of(&cf, "im2col", false));
+        let wb = |cands: &[CandidateCost], s: &str| {
+            cands.iter().find(|x| x.scheme == s && !x.fused_pool).unwrap().weight_bytes
+        };
+        assert_eq!(wb(&cb, "im2col") * 2, wb(&cf, "im2col"));
+        // the generic candidate stays f32 whatever was requested
+        let gq = cb.iter().find(|x| x.scheme == "generic").unwrap();
+        assert_eq!(gq.dtype, WeightDtype::F32);
     }
 }

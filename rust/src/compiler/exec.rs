@@ -18,6 +18,7 @@ use anyhow::{Context, Result};
 
 use crate::compiler::program::{ArenaPool, PlanSummary, Program};
 pub use crate::compiler::program::{CompileOptions, ConvScheme, DenseScheme, LaneSelect};
+pub use crate::nn::simd::WeightDtype;
 use crate::engine::{Engine, SharedInfer, WorkerScratch};
 use crate::model::spec::ModelSpec;
 use crate::nn::tensor::Tensor;
@@ -188,29 +189,37 @@ mod tests {
                                 ConvScheme::Im2col,
                                 ConvScheme::Generic,
                             ] {
-                                let mut e = OptInterp::new(
-                                    &spec,
-                                    CompileOptions {
-                                        fold_bn: fold,
-                                        approx,
-                                        reuse_memory: reuse,
-                                        dense,
-                                        conv,
-                                        fuse_pool,
-                                        batch_hint: 1,
-                                        lanes: LaneSelect::Auto,
-                                        intra_threads: 1,
-                                    },
-                                )
-                                .unwrap();
-                                let out = e.infer(&x).unwrap();
-                                assert_eq!(out[0].shape(), &[1, 10]);
-                                let s: f32 = out[0].data().iter().sum();
-                                assert!(
-                                    (s - 1.0).abs() < 1e-3,
-                                    "fold={fold} approx={approx} dense={dense:?} \
-                                     conv={conv:?} fuse_pool={fuse_pool}: {s}"
-                                );
+                                for weight_dtype in [
+                                    WeightDtype::F32,
+                                    WeightDtype::Bf16,
+                                    WeightDtype::I8,
+                                ] {
+                                    let mut e = OptInterp::new(
+                                        &spec,
+                                        CompileOptions {
+                                            fold_bn: fold,
+                                            approx,
+                                            reuse_memory: reuse,
+                                            dense,
+                                            conv,
+                                            fuse_pool,
+                                            batch_hint: 1,
+                                            lanes: LaneSelect::Auto,
+                                            intra_threads: 1,
+                                            weight_dtype,
+                                        },
+                                    )
+                                    .unwrap();
+                                    let out = e.infer(&x).unwrap();
+                                    assert_eq!(out[0].shape(), &[1, 10]);
+                                    let s: f32 = out[0].data().iter().sum();
+                                    assert!(
+                                        (s - 1.0).abs() < 1e-3,
+                                        "fold={fold} approx={approx} dense={dense:?} \
+                                         conv={conv:?} fuse_pool={fuse_pool} \
+                                         dtype={weight_dtype}: {s}"
+                                    );
+                                }
                             }
                         }
                     }

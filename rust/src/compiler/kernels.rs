@@ -182,6 +182,125 @@ impl<'a> Epilogue<'a> {
     }
 }
 
+/// Packed weight panels tagged with their storage element type — the §3.3
+/// lowering's dtype decision materialized. Every variant shares the same
+/// `[block][tap][lane]` panel layout (see [`simd::pack_conv_panels_we`]);
+/// narrow variants are widened to f32 lane-by-lane inside the FMA stream,
+/// so the accumulation *order* is identical across dtypes and only the
+/// stored weight values differ.
+#[derive(Clone)]
+pub enum WeightPanels {
+    /// Full-precision panels — the default, and the only storage
+    /// `bit_exact()` permits.
+    F32(Vec<f32>),
+    /// bf16 panels (round-to-nearest-even at pack time), widened to f32 in
+    /// the microkernel — half the weight bandwidth of `F32`.
+    Bf16(Vec<u16>),
+    /// Post-training per-output-channel i8 quantization: `data ≈ w /
+    /// scales[o]`, accumulated in f32 from a **zero** start and dequantized
+    /// in the store loop (`acc * scales[o] + bias[o]`) before the
+    /// activation — a quarter of the weight bandwidth of `F32`.
+    I8 {
+        /// Quantized panels in the shared layout.
+        data: Vec<i8>,
+        /// Per-output-channel dequantization scales (`len == oc`).
+        scales: Vec<f32>,
+    },
+}
+
+impl WeightPanels {
+    /// Pack conv HWIO weights (`taps = kh*kw*c` rows × `oc` columns) at
+    /// `lanes` under `dtype`.
+    pub fn pack_conv(
+        kernel: &[f32],
+        taps: usize,
+        oc: usize,
+        lanes: usize,
+        dtype: simd::WeightDtype,
+    ) -> WeightPanels {
+        match dtype {
+            simd::WeightDtype::F32 => {
+                WeightPanels::F32(simd::pack_conv_panels_any(kernel, taps, oc, lanes))
+            }
+            simd::WeightDtype::Bf16 => {
+                let bf: Vec<u16> = kernel.iter().map(|&v| simd::f32_to_bf16(v)).collect();
+                WeightPanels::Bf16(simd::pack_conv_panels_any_e(&bf, taps, oc, lanes))
+            }
+            simd::WeightDtype::I8 => {
+                let (q, scales) = simd::quantize_i8_per_channel(kernel, taps, oc);
+                WeightPanels::I8 {
+                    data: simd::pack_conv_panels_any_e(&q, taps, oc, lanes),
+                    scales,
+                }
+            }
+        }
+    }
+
+    /// Pack dense `[in_dim, units]` weights at `lanes` under `dtype`.
+    pub fn pack_dense(
+        kernel: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        lanes: usize,
+        dtype: simd::WeightDtype,
+    ) -> WeightPanels {
+        match dtype {
+            simd::WeightDtype::F32 => {
+                WeightPanels::F32(simd::pack_dense_panels_any(kernel, in_dim, out_dim, lanes))
+            }
+            simd::WeightDtype::Bf16 => {
+                let bf: Vec<u16> = kernel.iter().map(|&v| simd::f32_to_bf16(v)).collect();
+                WeightPanels::Bf16(simd::pack_dense_panels_any_e(&bf, in_dim, out_dim, lanes))
+            }
+            simd::WeightDtype::I8 => {
+                let (q, scales) = simd::quantize_i8_per_channel(kernel, in_dim, out_dim);
+                WeightPanels::I8 {
+                    data: simd::pack_dense_panels_any_e(&q, in_dim, out_dim, lanes),
+                    scales,
+                }
+            }
+        }
+    }
+
+    /// The storage element type of the panels.
+    pub fn dtype(&self) -> simd::WeightDtype {
+        match self {
+            WeightPanels::F32(_) => simd::WeightDtype::F32,
+            WeightPanels::Bf16(_) => simd::WeightDtype::Bf16,
+            WeightPanels::I8 { .. } => simd::WeightDtype::I8,
+        }
+    }
+
+    /// Per-output-channel dequantization scales (i8 only).
+    pub fn scales(&self) -> Option<&[f32]> {
+        match self {
+            WeightPanels::I8 { scales, .. } => Some(scales),
+            _ => None,
+        }
+    }
+
+    /// Bytes of packed weight storage one full pass streams (panel data
+    /// plus the i8 scale vector) — the number the cost model and
+    /// `PlanSummary` byte accounting price.
+    pub fn weight_bytes(&self) -> usize {
+        match self {
+            WeightPanels::F32(p) => p.len() * 4,
+            WeightPanels::Bf16(p) => p.len() * 2,
+            WeightPanels::I8 { data, scales } => data.len() + scales.len() * 4,
+        }
+    }
+
+    /// Packed panel element count (zero padding included, the i8 scale
+    /// vector excluded — [`WeightPanels::weight_bytes`] prices that).
+    pub fn elems(&self) -> usize {
+        match self {
+            WeightPanels::F32(p) => p.len(),
+            WeightPanels::Bf16(p) => p.len(),
+            WeightPanels::I8 { data, .. } => data.len(),
+        }
+    }
+}
+
 /// How one conv output pixel is computed — the §3.3 lowering decision,
 /// made once per layer at compile time (see `ConvScheme` in
 /// [`crate::compiler::program`]) and monomorphized into the kernel struct.
@@ -198,9 +317,9 @@ pub enum ConvAlgo {
     /// `lanes`-wide blocked panels read straight off the NHWC window (1×1
     /// kernels and VALID windows are always fully in bounds).
     Direct {
-        /// [`simd::pack_conv_panels_w`] layout of the HWIO weights, packed
-        /// at `lanes`.
-        panels: Vec<f32>,
+        /// [`simd::pack_conv_panels_w`]-layout panels of the HWIO weights,
+        /// packed at `lanes` in the lowering-chosen storage dtype.
+        panels: WeightPanels,
         /// Lane width the panels were packed at and the kernel runs at
         /// (1, 4, 8, or 16) — the §3.3 per-layer lowering decision.
         lanes: usize,
@@ -210,9 +329,9 @@ pub enum ConvAlgo {
     /// clipping. The row scratch (`GEMM_NR` rows of `kh*kw*c` for the
     /// batch-blocked path) is passed into [`conv2d_run`].
     Im2col {
-        /// [`simd::pack_conv_panels_w`] layout of the HWIO weights, packed
-        /// at `lanes`.
-        panels: Vec<f32>,
+        /// [`simd::pack_conv_panels_w`]-layout panels of the HWIO weights,
+        /// packed at `lanes` in the lowering-chosen storage dtype.
+        panels: WeightPanels,
         /// Lane width the panels were packed at and the kernel runs at.
         lanes: usize,
     },
@@ -237,13 +356,15 @@ pub enum DenseAlgo {
     /// than `GEMM_NR`, including the batch=1 serving bucket) run the
     /// per-item `tail` matvec.
     Gemm {
-        /// [`simd::pack_dense_panels_w`] layout of the weights, packed at
-        /// `lanes`.
-        panels: Vec<f32>,
+        /// [`simd::pack_dense_panels_w`]-layout panels of the weights,
+        /// packed at `lanes` in the lowering-chosen storage dtype.
+        panels: WeightPanels,
         /// Lane width of the packed panels and the tile kernel (1, 4, 8,
         /// or 16) — the §3.3 per-layer lowering decision.
         lanes: usize,
-        /// Per-item matvec for batch items off the `GEMM_NR` grid.
+        /// Per-item matvec for batch items off the `GEMM_NR` grid. The
+        /// rotated/broadcast tails store their own full-precision f32
+        /// weights, so lowering only pairs them with `F32` panels.
         tail: DenseTail,
     },
 }
@@ -502,18 +623,59 @@ fn conv2d_run_w<const W: usize>(
     }
 }
 
-/// The batch-blocked im2col path: for each output pixel, gather the
-/// `GEMM_NR` batch items' windows into consecutive rows of `row`, then run
-/// one MR×NR register tile per output-channel block — each weight panel is
-/// streamed once per NR items instead of once per item, and every gathered
-/// row is reused across all output-channel blocks of its tile. Leftover
-/// items run the per-item panel pass. `row` must hold `GEMM_NR` im2col
-/// rows (`GEMM_NR * kh*kw*c`, planned at lowering).
+/// The batch-blocked im2col path: dtype dispatch over the panel storage
+/// into the element-generic body.
 #[allow(clippy::too_many_arguments)]
 fn im2col_batch_blocked_w<const W: usize>(
     x: &[f32],
+    dims: (usize, usize, usize, usize),
+    panels: &WeightPanels,
+    k: (usize, usize, usize),
+    bias: Option<&[f32]>,
+    sp: (usize, usize, usize),
+    o: (usize, usize),
+    ep: Epilogue,
+    row: &mut [f32],
+    out: &mut [f32],
+) {
+    match panels {
+        WeightPanels::F32(p) => {
+            im2col_batch_blocked_we::<W, f32>(x, dims, p, None, k, bias, sp, o, ep, row, out)
+        }
+        WeightPanels::Bf16(p) => {
+            im2col_batch_blocked_we::<W, u16>(x, dims, p, None, k, bias, sp, o, ep, row, out)
+        }
+        WeightPanels::I8 { data, scales } => im2col_batch_blocked_we::<W, i8>(
+            x,
+            dims,
+            data,
+            Some(scales),
+            k,
+            bias,
+            sp,
+            o,
+            ep,
+            row,
+            out,
+        ),
+    }
+}
+
+/// Element-generic batch-blocked im2col body: for each output pixel,
+/// gather the `GEMM_NR` batch items' windows into consecutive rows of
+/// `row`, then run one MR×NR register tile per output-channel block — each
+/// weight panel is streamed once per NR items instead of once per item,
+/// and every gathered row is reused across all output-channel blocks of
+/// its tile. Leftover items run the per-item panel pass. `row` must hold
+/// `GEMM_NR` im2col rows (`GEMM_NR * kh*kw*c`, planned at lowering).
+/// `scales` is the i8 dequantization vector (accumulators start at zero
+/// and the store loop fuses `acc * scale + bias`); `None` preloads bias.
+#[allow(clippy::too_many_arguments)]
+fn im2col_batch_blocked_we<const W: usize, E: simd::PanelElem>(
+    x: &[f32],
     (b, h, w, c): (usize, usize, usize, usize),
-    panels: &[f32],
+    panels: &[E],
+    scales: Option<&[f32]>,
     (kh, kw, oc): (usize, usize, usize),
     bias: Option<&[f32]>,
     (stride, pt, pl): (usize, usize, usize),
@@ -544,18 +706,18 @@ fn im2col_batch_blocked_w<const W: usize>(
                 let x4 = &row[..simd::GEMM_NR * taps];
                 for ob in 0..blocks {
                     let panel = &panels[ob * taps * W..][..taps * W];
-                    let mut acc = [bias_lanes_w::<W>(bias, ob, oc); simd::GEMM_NR];
-                    simd::gemm_fma_run_w::<W>(panel, x4, taps, &mut acc);
+                    let mut acc = [init_lanes_w::<W>(bias, scales, ob, oc); simd::GEMM_NR];
+                    simd::gemm_fma_run_we::<W, E>(panel, x4, taps, &mut acc);
                     for (n, lanes) in acc.iter_mut().enumerate() {
                         let dst = &mut out[(((n0 + n) * oh + oy) * ow + ox) * oc..][..oc];
-                        store_lanes_w::<W>(lanes, ob, ep, dst);
+                        store_lanes_dq_w::<W>(lanes, ob, scales, bias, ep, dst);
                     }
                 }
             }
             for n in full..b {
                 let dst = &mut out[((n * oh + oy) * ow + ox) * oc..][..oc];
                 gather_row(x, (n, h, w, c), (kh, kw), y0, x0, &mut row[..taps]);
-                panel_row_pixel_w::<W>(panels, &row[..taps], oc, bias, ep, dst);
+                panel_row_pixel_we::<W, E>(panels, scales, &row[..taps], oc, bias, ep, dst);
             }
         }
     }
@@ -642,16 +804,46 @@ fn generic_pixel(
     }
 }
 
-/// §3.3 blocked direct-window path: per output-channel block of `W`, the
-/// accumulators stay in registers across every in-bounds tap run (one
-/// contiguous channel vector per (ky, kx)); the epilogue runs lane-wise in
-/// the store.
+/// §3.3 blocked direct-window path: dtype dispatch over the panel storage
+/// into the element-generic body.
 #[allow(clippy::too_many_arguments)]
 #[inline(always)]
 fn direct_pixel_w<const W: usize>(
     x: &[f32],
+    dims: (usize, usize, usize, usize),
+    panels: &WeightPanels,
+    k: (usize, usize, usize),
+    bias: Option<&[f32]>,
+    y0: isize,
+    x0: isize,
+    ep: Epilogue,
+    dst: &mut [f32],
+) {
+    match panels {
+        WeightPanels::F32(p) => {
+            direct_pixel_we::<W, f32>(x, dims, p, None, k, bias, y0, x0, ep, dst)
+        }
+        WeightPanels::Bf16(p) => {
+            direct_pixel_we::<W, u16>(x, dims, p, None, k, bias, y0, x0, ep, dst)
+        }
+        WeightPanels::I8 { data, scales } => {
+            direct_pixel_we::<W, i8>(x, dims, data, Some(scales), k, bias, y0, x0, ep, dst)
+        }
+    }
+}
+
+/// Element-generic direct-window body: per output-channel block of `W`,
+/// the accumulators stay in registers across every in-bounds tap run (one
+/// contiguous channel vector per (ky, kx)); the epilogue runs lane-wise in
+/// the store. `scales` switches the accumulators to the i8 zero-start /
+/// fused-dequant protocol.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn direct_pixel_we<const W: usize, E: simd::PanelElem>(
+    x: &[f32],
     (n, h, w, c): (usize, usize, usize, usize),
-    panels: &[f32],
+    panels: &[E],
+    scales: Option<&[f32]>,
     (kh, kw, oc): (usize, usize, usize),
     bias: Option<&[f32]>,
     y0: isize,
@@ -663,7 +855,7 @@ fn direct_pixel_w<const W: usize>(
     let blocks = oc.div_ceil(W);
     for ob in 0..blocks {
         let panel = &panels[ob * taps * W..][..taps * W];
-        let mut acc = bias_lanes_w::<W>(bias, ob, oc);
+        let mut acc = init_lanes_w::<W>(bias, scales, ob, oc);
         for ky in 0..kh {
             let iy = y0 + ky as isize;
             if iy < 0 || iy as usize >= h {
@@ -676,19 +868,41 @@ fn direct_pixel_w<const W: usize>(
                 }
                 let px = &x[((n * h + iy as usize) * w + ix as usize) * c..][..c];
                 let t0 = (ky * kw + kx) * c;
-                simd::conv_fma_run_w::<W>(&panel[t0 * W..][..c * W], px, &mut acc);
+                simd::conv_fma_run_we::<W, E>(&panel[t0 * W..][..c * W], px, &mut acc);
             }
         }
-        store_lanes_w::<W>(&mut acc, ob, ep, dst);
+        store_lanes_dq_w::<W>(&mut acc, ob, scales, bias, ep, dst);
     }
 }
 
-/// §3.3 blocked im2col path: one dense FMA stream over the gathered row,
-/// epilogue lane-wise in the store. Shared by the conv im2col scheme and
-/// the dense GEMM batch tail (a dense layer *is* a 1-pixel im2col conv).
+/// §3.3 blocked im2col row pass: dtype dispatch over the panel storage
+/// into the element-generic body.
 #[inline(always)]
 fn panel_row_pixel_w<const W: usize>(
-    panels: &[f32],
+    panels: &WeightPanels,
+    row: &[f32],
+    oc: usize,
+    bias: Option<&[f32]>,
+    ep: Epilogue,
+    dst: &mut [f32],
+) {
+    match panels {
+        WeightPanels::F32(p) => panel_row_pixel_we::<W, f32>(p, None, row, oc, bias, ep, dst),
+        WeightPanels::Bf16(p) => panel_row_pixel_we::<W, u16>(p, None, row, oc, bias, ep, dst),
+        WeightPanels::I8 { data, scales } => {
+            panel_row_pixel_we::<W, i8>(data, Some(scales), row, oc, bias, ep, dst)
+        }
+    }
+}
+
+/// Element-generic im2col row body: one dense FMA stream over the gathered
+/// row, epilogue lane-wise in the store. Shared by the conv im2col scheme
+/// and the dense GEMM batch tail (a dense layer *is* a 1-pixel im2col
+/// conv).
+#[inline(always)]
+fn panel_row_pixel_we<const W: usize, E: simd::PanelElem>(
+    panels: &[E],
+    scales: Option<&[f32]>,
     row: &[f32],
     oc: usize,
     bias: Option<&[f32]>,
@@ -699,9 +913,9 @@ fn panel_row_pixel_w<const W: usize>(
     let blocks = oc.div_ceil(W);
     for ob in 0..blocks {
         let panel = &panels[ob * taps * W..][..taps * W];
-        let mut acc = bias_lanes_w::<W>(bias, ob, oc);
-        simd::conv_fma_run_w::<W>(panel, row, &mut acc);
-        store_lanes_w::<W>(&mut acc, ob, ep, dst);
+        let mut acc = init_lanes_w::<W>(bias, scales, ob, oc);
+        simd::conv_fma_run_we::<W, E>(panel, row, &mut acc);
+        store_lanes_dq_w::<W>(&mut acc, ob, scales, bias, ep, dst);
     }
 }
 
@@ -748,6 +962,49 @@ fn bias_lanes_w<const W: usize>(bias: Option<&[f32]>, ob: usize, oc: usize) -> [
         }
     }
     acc
+}
+
+/// Accumulator init under the dtype protocol: f32/bf16 panels preload the
+/// bias ([`bias_lanes_w`]); i8 panels (`scales` present) start from zero —
+/// the integer-weight accumulation must be scaled before the bias lands,
+/// so both are fused into [`store_lanes_dq_w`] instead.
+#[inline(always)]
+fn init_lanes_w<const W: usize>(
+    bias: Option<&[f32]>,
+    scales: Option<&[f32]>,
+    ob: usize,
+    oc: usize,
+) -> [f32; W] {
+    if scales.is_some() {
+        [0.0f32; W]
+    } else {
+        bias_lanes_w::<W>(bias, ob, oc)
+    }
+}
+
+/// [`store_lanes_w`] with the i8 dequantization fused ahead of the
+/// epilogue: when `scales` is present each real lane becomes
+/// `acc * scales[o] + bias[o]` **before** the activation — the §3.4 fusion
+/// extended one affine deeper, so the quantized path still takes exactly
+/// one pass over the output vector.
+#[inline(always)]
+fn store_lanes_dq_w<const W: usize>(
+    acc: &mut [f32; W],
+    ob: usize,
+    scales: Option<&[f32]>,
+    bias: Option<&[f32]>,
+    ep: Epilogue,
+    dst: &mut [f32],
+) {
+    if let Some(sc) = scales {
+        let o0 = ob * W;
+        let real = W.min(dst.len() - o0);
+        for (l, a) in acc.iter_mut().enumerate().take(real) {
+            let o = o0 + l;
+            *a = *a * sc[o] + bias.map_or(0.0, |bs| bs[o]);
+        }
+    }
+    store_lanes_w::<W>(acc, ob, ep, dst)
 }
 
 /// Apply the §3.4 epilogue to block `ob`'s accumulators and store the real
@@ -909,18 +1166,24 @@ fn dense_band_w<const W: usize>(
         }
         DenseAlgo::Gemm { panels, tail, .. } => {
             let full = b / simd::GEMM_NR * simd::GEMM_NR;
-            let blocks = out_dim.div_ceil(W);
-            for n0 in (0..full).step_by(simd::GEMM_NR) {
-                let x4 = &x[n0 * in_dim..][..simd::GEMM_NR * in_dim];
-                for ob in 0..blocks {
-                    let panel = &panels[ob * in_dim * W..][..in_dim * W];
-                    let mut acc = [bias_lanes_w::<W>(bias, ob, out_dim); simd::GEMM_NR];
-                    simd::gemm_fma_run_w::<W>(panel, x4, in_dim, &mut acc);
-                    for (n, lanes) in acc.iter_mut().enumerate() {
-                        let dst = &mut out[(n0 + n) * out_dim..][..out_dim];
-                        store_lanes_w::<W>(lanes, ob, ep, dst);
-                    }
+            match panels {
+                WeightPanels::F32(p) => {
+                    dense_gemm_tiles_we::<W, f32>(x, full, in_dim, p, None, out_dim, bias, ep, out)
                 }
+                WeightPanels::Bf16(p) => {
+                    dense_gemm_tiles_we::<W, u16>(x, full, in_dim, p, None, out_dim, bias, ep, out)
+                }
+                WeightPanels::I8 { data, scales } => dense_gemm_tiles_we::<W, i8>(
+                    x,
+                    full,
+                    in_dim,
+                    data,
+                    Some(scales),
+                    out_dim,
+                    bias,
+                    ep,
+                    out,
+                ),
             }
             for n in full..b {
                 let xrow = &x[n * in_dim..][..in_dim];
@@ -940,6 +1203,37 @@ fn dense_band_w<const W: usize>(
                         panel_row_pixel_w::<W>(panels, xrow, out_dim, bias, ep, dst)
                     }
                 }
+            }
+        }
+    }
+}
+
+/// Element-generic dense GEMM tile loop: every full `GEMM_NR`-item tile
+/// holds a `W`-output × NR-item accumulator block across one pass over
+/// each packed panel. `scales` switches the accumulators to the i8
+/// zero-start / fused-dequant protocol; f32 and bf16 preload the bias.
+#[allow(clippy::too_many_arguments)]
+fn dense_gemm_tiles_we<const W: usize, E: simd::PanelElem>(
+    x: &[f32],
+    full: usize,
+    in_dim: usize,
+    panels: &[E],
+    scales: Option<&[f32]>,
+    out_dim: usize,
+    bias: Option<&[f32]>,
+    ep: Epilogue,
+    out: &mut [f32],
+) {
+    let blocks = out_dim.div_ceil(W);
+    for n0 in (0..full).step_by(simd::GEMM_NR) {
+        let x4 = &x[n0 * in_dim..][..simd::GEMM_NR * in_dim];
+        for ob in 0..blocks {
+            let panel = &panels[ob * in_dim * W..][..in_dim * W];
+            let mut acc = [init_lanes_w::<W>(bias, scales, ob, out_dim); simd::GEMM_NR];
+            simd::gemm_fma_run_we::<W, E>(panel, x4, in_dim, &mut acc);
+            for (n, lanes) in acc.iter_mut().enumerate() {
+                let dst = &mut out[(n0 + n) * out_dim..][..out_dim];
+                store_lanes_dq_w::<W>(lanes, ob, scales, bias, ep, dst);
             }
         }
     }
@@ -1176,14 +1470,25 @@ mod tests {
     }
 
     fn algo_for(scheme: &str, kernel: &[f32], taps: usize, oc: usize, lanes: usize) -> ConvAlgo {
+        algo_for_dtype(scheme, kernel, taps, oc, lanes, simd::WeightDtype::F32)
+    }
+
+    fn algo_for_dtype(
+        scheme: &str,
+        kernel: &[f32],
+        taps: usize,
+        oc: usize,
+        lanes: usize,
+        dtype: simd::WeightDtype,
+    ) -> ConvAlgo {
         match scheme {
             "generic" => ConvAlgo::Generic { kernel: kernel.to_vec() },
             "direct" => ConvAlgo::Direct {
-                panels: simd::pack_conv_panels_any(kernel, taps, oc, lanes),
+                panels: WeightPanels::pack_conv(kernel, taps, oc, lanes, dtype),
                 lanes,
             },
             "im2col" => ConvAlgo::Im2col {
-                panels: simd::pack_conv_panels_any(kernel, taps, oc, lanes),
+                panels: WeightPanels::pack_conv(kernel, taps, oc, lanes, dtype),
                 lanes,
             },
             other => panic!("unknown scheme {other}"),
@@ -1342,7 +1647,8 @@ mod tests {
             let x = Tensor::from_vec(&[b, in_dim], xv.clone());
             let want = dense_ref(&x, &kernel, &[in_dim, out_dim], Some(&bias));
             for lanes in simd::LANE_WIDTHS {
-                let panels = simd::pack_dense_panels_any(&kernel, in_dim, out_dim, lanes);
+                let panels =
+                    WeightPanels::F32(simd::pack_dense_panels_any(&kernel, in_dim, out_dim, lanes));
                 for (label, algo) in [
                     ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
                     ("gemm", DenseAlgo::Gemm { panels, lanes, tail: DenseTail::Panels }),
@@ -1396,7 +1702,8 @@ mod tests {
                 ("rotated", DenseTail::Rotated { diag: diag.clone() }),
                 ("broadcast", DenseTail::Broadcast { w: wt.clone() }),
             ] {
-                let algo = DenseAlgo::Gemm { panels: panels.clone(), lanes: 4, tail };
+                let algo =
+                    DenseAlgo::Gemm { panels: WeightPanels::F32(panels.clone()), lanes: 4, tail };
                 let mut scratch = vec![0.0f32; 2 * n];
                 let mut out = vec![0.0; b * n];
                 dense_run(
@@ -1484,7 +1791,7 @@ mod tests {
         let mut kernel = vec![0.5f32; in_dim * out_dim];
         kernel[0] = f32::INFINITY; // K[0][0]
         kernel[1] = f32::NAN; // K[0][1]
-        let panels = simd::pack_dense_panels(&kernel, in_dim, out_dim);
+        let panels = WeightPanels::F32(simd::pack_dense_panels(&kernel, in_dim, out_dim));
         let x = [0.0f32, 1.0, -1.0, 0.5];
         for (label, algo) in [
             ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
@@ -1578,7 +1885,7 @@ mod tests {
         let diag = simd::rotate_diagonals(&wt, n);
         let ep = Epilogue { act: Activation::Sigmoid, approx: true, post: None };
         for lanes in [1usize, 4, 8] {
-            let panels = simd::pack_dense_panels_any(&kernel, n, n, lanes);
+            let panels = WeightPanels::F32(simd::pack_dense_panels_any(&kernel, n, n, lanes));
             let algos = [
                 ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
                 (
@@ -1644,6 +1951,116 @@ mod tests {
         for (a, b) in exact.iter().zip(&fast) {
             assert!((a - b).abs() < 0.05);
         }
+    }
+
+    /// The dtype axis at the kernel level: bf16 and i8 panels run the same
+    /// blocked paths (direct, per-item im2col, batch-blocked im2col) and
+    /// land within their per-dtype tolerance of the f32 reference — bf16
+    /// tight (8-bit mantissa), i8 bounded by the per-channel scale.
+    #[test]
+    fn conv_narrow_dtypes_match_reference_within_tolerance() {
+        use crate::nn::layers::conv::conv2d;
+        use crate::nn::tensor::Tensor;
+        let b = 5; // one full GEMM tile + a tail item for the im2col path
+        let mut rng = crate::util::rng::SplitMix64::new(77);
+        let x = Tensor::from_vec(&[b, 5, 5, 3], rng.uniform_vec(b * 5 * 5 * 3));
+        let kernel = rng.uniform_vec(3 * 3 * 3 * 5);
+        let bias = rng.uniform_vec(5);
+        let r = conv2d(&x, &kernel, &[3, 3, 3, 5], Some(&bias), 1, Padding::Same);
+        for dtype in [simd::WeightDtype::Bf16, simd::WeightDtype::I8] {
+            // worst-case absolute bound: taps × per-weight storage error
+            let tol = match dtype {
+                simd::WeightDtype::I8 => 0.15,
+                _ => 0.06,
+            };
+            for scheme in ["direct", "im2col"] {
+                for lanes in [1usize, 4, 8] {
+                    let algo = algo_for_dtype(scheme, &kernel, 3 * 3 * 3, 5, lanes, dtype);
+                    let mut scratch = vec![0.0; simd::GEMM_NR * 3 * 3 * 3];
+                    let mut out = vec![0.0; r.len()];
+                    conv2d_run(
+                        x.data(),
+                        (b, 5, 5, 3),
+                        &algo,
+                        (3, 3, 5),
+                        Some(&bias),
+                        1,
+                        Padding::Same,
+                        Epilogue::NONE,
+                        None,
+                        (0, 1),
+                        &mut scratch,
+                        &mut out,
+                    );
+                    let worst = r
+                        .data()
+                        .iter()
+                        .zip(&out)
+                        .map(|(a, c)| (a - c).abs())
+                        .fold(0.0f32, f32::max);
+                    assert!(worst < tol, "{dtype} {scheme} w{lanes}: {worst}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dense_narrow_dtypes_match_reference_within_tolerance() {
+        use crate::nn::layers::dense::dense as dense_ref;
+        use crate::nn::tensor::Tensor;
+        let (in_dim, out_dim) = (10usize, 7usize);
+        let b = 5; // full tile + tail item
+        let mut rng = crate::util::rng::SplitMix64::new(79);
+        let kernel = rng.uniform_vec(in_dim * out_dim);
+        let bias = rng.uniform_vec(out_dim);
+        let xv = rng.uniform_vec(b * in_dim);
+        let x = Tensor::from_vec(&[b, in_dim], xv.clone());
+        let want = dense_ref(&x, &kernel, &[in_dim, out_dim], Some(&bias));
+        for dtype in [simd::WeightDtype::Bf16, simd::WeightDtype::I8] {
+            let tol = match dtype {
+                simd::WeightDtype::I8 => 0.08,
+                _ => 0.03,
+            };
+            for lanes in [1usize, 4, 8] {
+                let panels = WeightPanels::pack_dense(&kernel, in_dim, out_dim, lanes, dtype);
+                assert_eq!(panels.dtype(), dtype);
+                let algo = DenseAlgo::Gemm { panels, lanes, tail: DenseTail::Panels };
+                let mut out = vec![0.0; b * out_dim];
+                dense_run(
+                    &xv,
+                    (b, in_dim),
+                    &algo,
+                    out_dim,
+                    Some(&bias),
+                    Epilogue::NONE,
+                    &mut [],
+                    1,
+                    &mut out,
+                );
+                let worst = want
+                    .data()
+                    .iter()
+                    .zip(&out)
+                    .map(|(a, c)| (a - c).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(worst < tol, "{dtype} w{lanes}: {worst}");
+            }
+        }
+    }
+
+    /// Narrow-dtype storage really shrinks: byte accounting of the packed
+    /// panels is the per-dtype element size (+ the i8 scale vector).
+    #[test]
+    fn weight_panels_byte_accounting_tracks_dtype() {
+        let mut rng = crate::util::rng::SplitMix64::new(83);
+        let kernel = rng.uniform_vec(9 * 8);
+        let f = WeightPanels::pack_conv(&kernel, 9, 8, 4, simd::WeightDtype::F32);
+        let h = WeightPanels::pack_conv(&kernel, 9, 8, 4, simd::WeightDtype::Bf16);
+        let q = WeightPanels::pack_conv(&kernel, 9, 8, 4, simd::WeightDtype::I8);
+        assert_eq!(f.weight_bytes(), 9 * 8 * 4);
+        assert_eq!(h.weight_bytes(), 9 * 8 * 2);
+        assert_eq!(q.weight_bytes(), 9 * 8 + 8 * 4); // data + scales
+        assert!(f.scales().is_none() && q.scales().unwrap().len() == 8);
     }
 
     #[test]

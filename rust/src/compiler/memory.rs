@@ -12,10 +12,66 @@
 //! first-fit by size, plus explicit in-place aliasing for elementwise units.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
 
 use anyhow::Result;
 
 use crate::model::spec::{LayerOp, ModelSpec};
+use crate::nn::simd::WeightDtype;
+
+/// Per-dtype byte accounting for the weight storage a lowered program
+/// actually retains — the §3.3 dtype refactor's headline metric. Packed
+/// panels land in the bucket of their storage dtype (i8 including the
+/// dequantization scale vector); raw f32 side tables (generic kernels,
+/// rotated/broadcast tail layouts, biases are *not* counted here — see
+/// `PlanSummary::weight_elems` for the element view) stay in `f32_bytes`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WeightBytes {
+    /// Bytes stored as full-precision f32.
+    pub f32_bytes: usize,
+    /// Bytes stored as bf16 panels.
+    pub bf16_bytes: usize,
+    /// Bytes stored as i8 panels (per-channel scales included).
+    pub i8_bytes: usize,
+}
+
+impl WeightBytes {
+    /// Add `bytes` to the bucket for `dtype`.
+    pub fn add(&mut self, dtype: WeightDtype, bytes: usize) {
+        match dtype {
+            WeightDtype::F32 => self.f32_bytes += bytes,
+            WeightDtype::Bf16 => self.bf16_bytes += bytes,
+            WeightDtype::I8 => self.i8_bytes += bytes,
+        }
+    }
+
+    /// Bytes in the bucket for `dtype`.
+    pub fn of(&self, dtype: WeightDtype) -> usize {
+        match dtype {
+            WeightDtype::F32 => self.f32_bytes,
+            WeightDtype::Bf16 => self.bf16_bytes,
+            WeightDtype::I8 => self.i8_bytes,
+        }
+    }
+
+    /// Total resident packed-weight bytes across dtypes.
+    pub fn total(&self) -> usize {
+        self.f32_bytes + self.bf16_bytes + self.i8_bytes
+    }
+}
+
+impl fmt::Display for WeightBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} B (f32 {} / bf16 {} / i8 {})",
+            self.total(),
+            self.f32_bytes,
+            self.bf16_bytes,
+            self.i8_bytes
+        )
+    }
+}
 
 /// Which layers may write their output over their (dead) first input.
 pub fn can_run_in_place(op: &LayerOp) -> bool {

@@ -146,6 +146,11 @@ impl LaneSelect {
 ///
 /// // the bit-exact reference path pins everything to the oracle's order
 /// assert_eq!(CompileOptions::bit_exact().dense, DenseScheme::Generic);
+///
+/// // weight storage defaults to full precision; bit-exact pins it there
+/// use compiled_nn::nn::simd::WeightDtype;
+/// assert_eq!(opts.weight_dtype, WeightDtype::F32);
+/// assert_eq!(CompileOptions::bit_exact().weight_dtype, WeightDtype::F32);
 /// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CompileOptions {
@@ -180,6 +185,15 @@ pub struct CompileOptions {
     /// layers at 1 task regardless ([`cost::parallel_tasks`]), so tiny
     /// nets never pay thread fan-out.
     pub intra_threads: usize,
+    /// Storage element type for packed conv/dense weight panels (see
+    /// [`simd::WeightDtype`]): `F32` (default) keeps full precision,
+    /// `Bf16` halves weight bandwidth with round-to-nearest-even panels,
+    /// `I8` post-training-quantizes per output channel and dequantizes in
+    /// the store-loop epilogue. A narrow *request* is a per-layer ceiling,
+    /// not a mandate — scalar-generic kernels, rotated/broadcast dense
+    /// tails, and layers with nonfinite weights keep f32 storage, and the
+    /// dtype actually emitted lands in each [`cost::LayerDecision`].
+    pub weight_dtype: simd::WeightDtype,
 }
 
 impl Default for CompileOptions {
@@ -194,6 +208,7 @@ impl Default for CompileOptions {
             batch_hint: 1,
             lanes: LaneSelect::Auto,
             intra_threads: 1,
+            weight_dtype: simd::WeightDtype::F32,
         }
     }
 }
@@ -218,6 +233,7 @@ impl CompileOptions {
             batch_hint: 1,
             lanes: LaneSelect::Scalar,
             intra_threads: 1,
+            weight_dtype: simd::WeightDtype::F32,
         }
     }
 
@@ -441,6 +457,11 @@ pub struct PlanSummary {
     pub fused_maxpool: usize,
     /// Weight elements copied/transformed out of the blob into kernels.
     pub weight_elems: usize,
+    /// Resident packed-panel weight bytes per storage dtype (i8 scale
+    /// vectors included) — the bandwidth metric the dtype refactor moves.
+    pub weights_bytes: memory::WeightBytes,
+    /// Conv/dense layers whose panels were post-training i8-quantized.
+    pub quantized_layers: usize,
     /// Batch-independent per-arena scratch elements (im2col rows, fused-
     /// pool cells, rotated-dense windows; × intra-op tasks) — per worker,
     /// not per program.
@@ -464,6 +485,7 @@ impl fmt::Display for PlanSummary {
             "{}: {} steps ({} in-place, {} elided), {} buffers × {} arena elems/item, \
              {} BN folded, dense {} gemm (tails: {} rotated / {} broadcast / {} panels), \
              conv {} direct / {} im2col, {} maxpool fused, {} weight elems, \
+             weights {}, {} quantized layers, \
              {} scratch elems/worker, w{} lanes × {} tasks",
             self.model,
             self.steps.len(),
@@ -480,6 +502,8 @@ impl fmt::Display for PlanSummary {
             self.im2col_conv,
             self.fused_maxpool,
             self.weight_elems,
+            self.weights_bytes,
+            self.quantized_layers,
             self.scratch_elems,
             self.lane_width,
             self.parallel_tasks
@@ -647,6 +671,8 @@ impl Program {
                     lane_width: 0,
                     parallel_tasks: 0,
                     predicted_cycles: 0.0,
+                    weight_dtype: simd::WeightDtype::F32,
+                    weights_bytes: 0,
                     reason: cost::DecisionReason::CostModel,
                     fused_pool: true,
                     elided: true,
@@ -1106,7 +1132,12 @@ fn lower_conv_weights(
         same_padding: *padding == Padding::Same,
     };
     let max_lanes = opts.max_lanes();
-    let candidates = cost::conv_candidates(&dims, fusion.fusible, max_lanes);
+    // Narrow storage is a request, not a mandate: nonfinite weights pin
+    // f32 panels (i8 quantization would silently zero a NaN and break the
+    // oracle's NaN propagation), and the cost model only offers narrow
+    // storage on the blocked schemes.
+    let req_dtype = effective_weight_dtype(opts.weight_dtype, &kernel);
+    let candidates = cost::conv_candidates_dt(&dims, fusion.fusible, max_lanes, req_dtype);
     let (resolved, lanes, reason) = match opts.conv {
         ConvScheme::Auto => match cost::pick(&candidates, fusion.fused) {
             Some(best) => (
@@ -1144,8 +1175,14 @@ fn lower_conv_weights(
             )
         }
     };
-    let (algo, scheme) =
-        lower_conv_algo(resolved, kernel, (*kh, *kw, in_ch, *out_ch), lanes, summary);
+    let (algo, scheme) = lower_conv_algo(
+        resolved,
+        kernel,
+        (*kh, *kw, in_ch, *out_ch),
+        lanes,
+        req_dtype,
+        summary,
+    );
     let predicted = candidates
         .iter()
         .find(|c| {
@@ -1158,6 +1195,18 @@ fn lower_conv_weights(
         summary.lane_width = summary.lane_width.max(lanes);
     }
     summary.parallel_tasks = summary.parallel_tasks.max(tasks);
+    let (emitted_dtype, weights_bytes) = match &algo {
+        k::ConvAlgo::Direct { panels, .. } | k::ConvAlgo::Im2col { panels, .. } => {
+            (panels.dtype(), panels.weight_bytes())
+        }
+        k::ConvAlgo::Generic { kernel } => {
+            (simd::WeightDtype::F32, kernel.len() * std::mem::size_of::<f32>())
+        }
+    };
+    summary.weights_bytes.add(emitted_dtype, weights_bytes);
+    if emitted_dtype == simd::WeightDtype::I8 {
+        summary.quantized_layers += 1;
+    }
     summary.report.decisions.push(cost::LayerDecision {
         layer: conv.name.clone(),
         op: conv.op.name(),
@@ -1166,6 +1215,8 @@ fn lower_conv_weights(
         lane_width: lanes,
         parallel_tasks: tasks,
         predicted_cycles: predicted,
+        weight_dtype: emitted_dtype,
+        weights_bytes,
         reason,
         fused_pool: fusion.fused,
         elided: false,
@@ -1206,15 +1257,31 @@ fn forced_lanes(
         )
 }
 
+/// The storage dtype a layer's weights can actually be lowered at: the
+/// requested dtype, demoted to `F32` when the kernel holds nonfinite
+/// values — i8 quantization would silently map NaN/Inf taps to 0 (Rust's
+/// saturating `as` cast) and the per-channel max-abs scale itself goes
+/// nonfinite, so narrow storage would break the oracle's NaN-propagation
+/// semantics (`dense_nonfinite_weights_match_naive`).
+fn effective_weight_dtype(req: simd::WeightDtype, kernel: &[f32]) -> simd::WeightDtype {
+    if req != simd::WeightDtype::F32 && !kernel.iter().all(|w| w.is_finite()) {
+        simd::WeightDtype::F32
+    } else {
+        req
+    }
+}
+
 /// Pack a conv kernel for an already-resolved §3.3 scheme; returns the
 /// algo plus its summary label. Scheme resolution (cost model, fallbacks)
 /// happens in [`lower_conv_weights`] — by this point `Auto` has been
-/// replaced by a concrete scheme.
+/// replaced by a concrete scheme. The blocked schemes store their panels
+/// at `dtype`; the generic scheme always keeps the raw f32 kernel.
 fn lower_conv_algo(
     scheme: ConvScheme,
     kernel: Vec<f32>,
     (kh, kw, c, oc): (usize, usize, usize, usize),
     lanes: usize,
+    dtype: simd::WeightDtype,
     summary: &mut PlanSummary,
 ) -> (k::ConvAlgo, &'static str) {
     let taps = kh * kw * c;
@@ -1225,7 +1292,7 @@ fn lower_conv_algo(
             summary.direct_conv += 1;
             (
                 k::ConvAlgo::Direct {
-                    panels: simd::pack_conv_panels_any(&kernel, taps, oc, lanes),
+                    panels: k::WeightPanels::pack_conv(&kernel, taps, oc, lanes, dtype),
                     lanes,
                 },
                 "direct",
@@ -1235,7 +1302,7 @@ fn lower_conv_algo(
             summary.im2col_conv += 1;
             (
                 k::ConvAlgo::Im2col {
-                    panels: simd::pack_conv_panels_any(&kernel, taps, oc, lanes),
+                    panels: k::WeightPanels::pack_conv(&kernel, taps, oc, lanes, dtype),
                     lanes,
                 },
                 "im2col",
@@ -1293,11 +1360,15 @@ fn lower_dense_algo(
     let square = in_dim == units && units % 4 == 0;
     let rotatable = square && units <= simd::ROTATED_STACK_MAX;
     let max_lanes = opts.max_lanes();
-    let candidates = cost::dense_candidates(
+    // as for conv: narrow storage only where the blocked GEMM consumes it,
+    // and never over nonfinite weights
+    let req_dtype = effective_weight_dtype(opts.weight_dtype, &kernel);
+    let candidates = cost::dense_candidates_dt(
         &cost::DenseDims { in_dim, units },
         opts.batch_hint.max(1),
         simd::ROTATED_STACK_MAX,
         max_lanes,
+        req_dtype,
     );
     let (pick, lanes, reason) = match opts.dense {
         DenseScheme::Generic => (Pick::Generic, 1, cost::DecisionReason::Forced),
@@ -1342,34 +1413,65 @@ fn lower_dense_algo(
             None => (Pick::Panels, fallback_lanes(max_lanes), cost::DecisionReason::Fallback),
         },
     };
-    let (algo, scratch_len, label) = if matches!(pick, Pick::Generic) {
-        summary.weight_elems += kernel.len();
-        (k::DenseAlgo::Generic { kernel }, 0, "generic")
-    } else {
-        let panels = simd::pack_dense_panels_any(&kernel, in_dim, units, lanes);
-        summary.weight_elems += panels.len();
-        summary.gemm_dense += 1;
-        summary.lane_width = summary.lane_width.max(lanes);
-        let (tail, scratch_len, label) = match pick {
-            Pick::Rotated => {
-                summary.rotated_dense += 1;
-                let diag = simd::rotate_diagonals(&transpose(&kernel, in_dim), in_dim);
-                summary.weight_elems += diag.len();
-                (k::DenseTail::Rotated { diag }, 2 * in_dim, "gemm+rotated")
-            }
-            Pick::Broadcast => {
-                summary.broadcast_dense += 1;
-                let w = transpose(&kernel, in_dim);
-                summary.weight_elems += w.len();
-                (k::DenseTail::Broadcast { w }, 0, "gemm+broadcast")
-            }
-            _ => {
-                summary.panel_tail_dense += 1;
-                (k::DenseTail::Panels, 0, "gemm+panels")
-            }
+    let (algo, scratch_len, label, emitted_dtype, weights_bytes) =
+        if matches!(pick, Pick::Generic) {
+            summary.weight_elems += kernel.len();
+            let bytes = kernel.len() * std::mem::size_of::<f32>();
+            (
+                k::DenseAlgo::Generic { kernel },
+                0,
+                "generic",
+                simd::WeightDtype::F32,
+                bytes,
+            )
+        } else {
+            // the rotated/broadcast matvec tails are f32 algorithms over
+            // their own side layouts — pairing them with narrow GEMM panels
+            // would store the same weights twice at different precisions,
+            // so those picks pin the whole algo to f32 storage
+            let store_dtype = match pick {
+                Pick::Rotated | Pick::Broadcast => simd::WeightDtype::F32,
+                _ => req_dtype,
+            };
+            let panels =
+                k::WeightPanels::pack_dense(&kernel, in_dim, units, lanes, store_dtype);
+            summary.weight_elems += panels.elems();
+            summary.gemm_dense += 1;
+            summary.lane_width = summary.lane_width.max(lanes);
+            let mut bytes = panels.weight_bytes();
+            let (tail, scratch_len, label) = match pick {
+                Pick::Rotated => {
+                    summary.rotated_dense += 1;
+                    let diag =
+                        simd::rotate_diagonals(&transpose(&kernel, in_dim), in_dim);
+                    summary.weight_elems += diag.len();
+                    bytes += diag.len() * std::mem::size_of::<f32>();
+                    (k::DenseTail::Rotated { diag }, 2 * in_dim, "gemm+rotated")
+                }
+                Pick::Broadcast => {
+                    summary.broadcast_dense += 1;
+                    let w = transpose(&kernel, in_dim);
+                    summary.weight_elems += w.len();
+                    bytes += w.len() * std::mem::size_of::<f32>();
+                    (k::DenseTail::Broadcast { w }, 0, "gemm+broadcast")
+                }
+                _ => {
+                    summary.panel_tail_dense += 1;
+                    (k::DenseTail::Panels, 0, "gemm+panels")
+                }
+            };
+            (
+                k::DenseAlgo::Gemm { panels, lanes, tail },
+                scratch_len,
+                label,
+                store_dtype,
+                bytes,
+            )
         };
-        (k::DenseAlgo::Gemm { panels, lanes, tail }, scratch_len, label)
-    };
+    summary.weights_bytes.add(emitted_dtype, weights_bytes);
+    if emitted_dtype == simd::WeightDtype::I8 {
+        summary.quantized_layers += 1;
+    }
     let predicted = candidates
         .iter()
         .find(|c| c.scheme == label && c.lanes == lanes)
@@ -1385,6 +1487,8 @@ fn lower_dense_algo(
         lane_width: lanes,
         parallel_tasks: tasks,
         predicted_cycles: predicted,
+        weight_dtype: emitted_dtype,
+        weights_bytes,
         reason,
         fused_pool: false,
         elided: false,
@@ -2237,6 +2341,90 @@ mod tests {
         )
         .unwrap();
         assert_eq!(p.summary().parallel_tasks, 1, "{}", p.summary());
+    }
+
+    /// Tentpole: requesting a narrow weight dtype re-stores every blocked
+    /// kernel's panels at that dtype (byte accounting and decision trail
+    /// included) while outputs stay within the dtype's documented accuracy
+    /// band of the f32 lowering.
+    #[test]
+    fn narrow_weight_dtypes_lower_and_stay_close() {
+        use crate::nn::simd::WeightDtype;
+
+        let spec = tiny_cnn(81);
+        let mut rng = SplitMix64::new(51);
+        let x = Tensor::from_vec(&[2, 8, 8, 3], rng.uniform_vec(2 * 8 * 8 * 3));
+        let base = CompileOptions { approx: false, ..CompileOptions::default() };
+        let f32_prog = Program::lower(&spec, base).unwrap();
+        let f32_bytes = f32_prog.summary().weights_bytes;
+        assert!(f32_bytes.f32_bytes > 0, "{f32_bytes}");
+        assert_eq!(f32_bytes.bf16_bytes + f32_bytes.i8_bytes, 0, "{f32_bytes}");
+        assert_eq!(f32_prog.summary().quantized_layers, 0);
+        let want = run_program(&spec, base, &x);
+
+        for (dtype, tol) in [(WeightDtype::Bf16, 0.06), (WeightDtype::I8, 0.15)] {
+            let opts = CompileOptions { weight_dtype: dtype, ..base };
+            let p = Program::lower(&spec, opts).unwrap();
+            let s = p.summary();
+            // every blocked conv/dense stored narrow; nothing but the
+            // narrow bucket grew
+            assert!(s.weights_bytes.of(dtype) > 0, "{dtype}: {}", s.weights_bytes);
+            assert!(
+                s.weights_bytes.total() < f32_bytes.total(),
+                "{dtype}: {} !< {}",
+                s.weights_bytes,
+                f32_bytes
+            );
+            assert_eq!(
+                s.quantized_layers,
+                usize::from(dtype == WeightDtype::I8) * 2,
+                "{s}"
+            );
+            for d in s.report.decisions.iter().filter(|d| !d.elided) {
+                assert_eq!(d.weight_dtype, dtype, "{d:?}");
+                assert!(d.weights_bytes > 0, "{d:?}");
+            }
+            let mut arena = p.new_arena(2);
+            p.load_input(&mut arena, &x);
+            p.run(&mut arena);
+            let got = p.read_outputs(&arena);
+            let d = want[0].max_abs_diff(&got[0]);
+            assert!(d < tol, "{dtype}: diff {d}");
+            assert!(d > 0.0 || dtype == WeightDtype::Bf16, "{dtype}: suspiciously exact");
+        }
+    }
+
+    /// Nonfinite weights demote a narrow request back to f32 storage —
+    /// quantizing a NaN tap would silently zero it and break the oracle's
+    /// NaN-propagation semantics.
+    #[test]
+    fn nonfinite_weights_pin_f32_storage_under_narrow_request() {
+        use crate::model::builder::Builder;
+        use crate::nn::simd::WeightDtype;
+
+        let mut b = Builder::new("nonfinite-dt", &[8], 79);
+        let d = b.dense("input", 8, Activation::Linear);
+        let mut spec = b.finish(&[&d]);
+        let kref = spec.layers[0].weights["kernel"].clone();
+        spec.weights[kref.offset] = f32::NAN;
+        let opts = CompileOptions {
+            weight_dtype: WeightDtype::I8,
+            ..CompileOptions::default()
+        };
+        let p = Program::lower(&spec, opts).unwrap();
+        let s = p.summary();
+        assert_eq!(s.quantized_layers, 0, "{s}");
+        assert_eq!(s.weights_bytes.i8_bytes, 0, "{}", s.weights_bytes);
+        assert!(s.weights_bytes.f32_bytes > 0, "{}", s.weights_bytes);
+        let dec = s.report.decisions.iter().find(|d| d.op == "dense").unwrap();
+        assert_eq!(dec.weight_dtype, WeightDtype::F32, "{dec:?}");
+        // and the NaN still propagates at run time
+        let x = Tensor::from_vec(&[1, 8], vec![0.0; 8]);
+        let mut arena = p.new_arena(1);
+        p.load_input(&mut arena, &x);
+        p.run(&mut arena);
+        let got = p.read_outputs(&arena);
+        assert!(got[0].data()[0].is_nan(), "{:?}", got[0].data());
     }
 
     #[test]

@@ -22,6 +22,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::engine::EngineKind;
+use crate::nn::simd::WeightDtype;
 use crate::util::json::Json;
 
 use super::server::{CoordinatorConfig, default_workers};
@@ -46,6 +47,12 @@ pub struct ServingConfig {
     /// the worker pool already spends the cores across requests; raise it
     /// for latency-critical single-stream serving of big nets.
     pub intra_threads: usize,
+    /// Weight storage dtype compiled into each lowered program
+    /// (`"weight_dtype": "i8"` → `CompileOptions::weight_dtype`): `"f32"`
+    /// (default), `"bf16"`, or `"i8"`. Serving the same model under a new
+    /// dtype goes through the live `swap` path — registrations carry their
+    /// own artifact generation, so a flip from f32 to i8 is atomic.
+    pub weight_dtype: WeightDtype,
     /// Global cap on requests admitted by the TCP front end but not yet
     /// answered (`"max_inflight": 4096`); past it, requests shed with a
     /// structured `overloaded` error. 0 = unlimited.
@@ -66,6 +73,7 @@ impl Default for ServingConfig {
             engine: EngineKind::preferred(),
             workers: default_workers(),
             intra_threads: 1,
+            weight_dtype: WeightDtype::F32,
             max_inflight: 4096,
             slo_p99_ms: 0.0,
         }
@@ -108,6 +116,13 @@ impl ServingConfig {
                 .and_then(Json::as_usize)
                 .unwrap_or(d.intra_threads)
                 .max(1),
+            weight_dtype: match j.get("weight_dtype").and_then(Json::as_str) {
+                Some(s) => match WeightDtype::parse(s) {
+                    Some(dt) => dt,
+                    None => bail!("unknown weight_dtype `{s}` (expected f32|bf16|i8)"),
+                },
+                None => d.weight_dtype,
+            },
             max_inflight: j
                 .get("max_inflight")
                 .and_then(Json::as_u64)
@@ -135,6 +150,7 @@ impl ServingConfig {
             engine: self.engine,
             workers: self.workers,
             intra_threads: self.intra_threads,
+            weight_dtype: self.weight_dtype,
         }
     }
 
@@ -201,6 +217,22 @@ mod tests {
         // 0 would disable the kernels' band loop entirely; clamp to 1
         let z = ServingConfig::parse(r#"{"models": ["c_bh"], "intra_threads": 0}"#).unwrap();
         assert_eq!(z.intra_threads, 1);
+    }
+
+    #[test]
+    fn weight_dtype_key_parses_and_defaults() {
+        let c =
+            ServingConfig::parse(r#"{"models": ["c_bh"], "weight_dtype": "i8"}"#).unwrap();
+        assert_eq!(c.weight_dtype, WeightDtype::I8);
+        assert_eq!(c.coordinator_config().weight_dtype, WeightDtype::I8);
+        let b =
+            ServingConfig::parse(r#"{"models": ["c_bh"], "weight_dtype": "bf16"}"#).unwrap();
+        assert_eq!(b.weight_dtype, WeightDtype::Bf16);
+        let d = ServingConfig::parse(r#"{"models": ["c_bh"]}"#).unwrap();
+        assert_eq!(d.weight_dtype, WeightDtype::F32);
+        assert!(
+            ServingConfig::parse(r#"{"models": ["c_bh"], "weight_dtype": "fp8"}"#).is_err()
+        );
     }
 
     #[test]

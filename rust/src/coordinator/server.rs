@@ -95,6 +95,11 @@ enum ExecMsg {
         spec: Box<ModelSpec>,
         buckets: Vec<usize>,
         replace: bool,
+        /// Per-registration override of the coordinator's configured
+        /// weight dtype (`None` = inherit). This is how a live lane flips
+        /// f32 → i8: `hot_swap_spec_dtype` re-lowers under the override
+        /// and publishes through the lane's `SwapCell`.
+        weight_dtype: Option<crate::nn::simd::WeightDtype>,
         reply: SyncSender<Result<Registration>>,
     },
     InferBatch {
@@ -159,6 +164,13 @@ pub struct CoordinatorConfig {
     /// conv/GEMM into that many bands within a single inference, which is
     /// the better trade for single-stream big-net serving.
     pub intra_threads: usize,
+    /// Weight storage dtype compiled into every lowered program
+    /// (`CompileOptions::weight_dtype`). Default f32; `bf16`/`i8` trade a
+    /// bounded accuracy delta for weight bandwidth. A live model can flip
+    /// dtype without dropping requests via
+    /// [`Coordinator::hot_swap_spec_dtype`] — the lane's `SwapCell`
+    /// publishes the re-lowered artifact atomically.
+    pub weight_dtype: crate::nn::simd::WeightDtype,
 }
 
 /// Default per-model pool size: `min(4, cores)`.
@@ -174,6 +186,7 @@ impl Default for CoordinatorConfig {
             engine: EngineKind::preferred(),
             workers: default_workers(),
             intra_threads: 1,
+            weight_dtype: crate::nn::simd::WeightDtype::F32,
         }
     }
 }
@@ -233,10 +246,13 @@ impl Coordinator {
         let (exec_tx, exec_rx) = mpsc::channel::<ExecMsg>();
         let engine_kind = cfg.engine;
         let intra_threads = cfg.intra_threads.max(1);
+        let weight_dtype = cfg.weight_dtype;
         let manifest_models = manifest.models.keys().cloned().collect();
         let exec_thread = std::thread::Builder::new()
             .name("engine-executor".into())
-            .spawn(move || executor_main(manifest, engine_kind, intra_threads, exec_rx))
+            .spawn(move || {
+                executor_main(manifest, engine_kind, intra_threads, weight_dtype, exec_rx)
+            })
             .context("spawning executor thread")?;
         Ok(Arc::new(Self {
             exec_tx,
@@ -297,12 +313,18 @@ impl Coordinator {
             bail!("register_spec needs at least one batch bucket");
         }
         let _reg = self.reg_lock.lock().unwrap();
-        self.register_spec_locked(spec, buckets)
+        self.register_spec_locked(spec, buckets, None)
     }
 
     /// Body of [`register_spec`](Self::register_spec); caller holds
-    /// `reg_lock`.
-    fn register_spec_locked(&self, spec: &ModelSpec, buckets: &[usize]) -> Result<ModelClient> {
+    /// `reg_lock`. `weight_dtype` overrides the coordinator's configured
+    /// dtype for this registration when `Some`.
+    fn register_spec_locked(
+        &self,
+        spec: &ModelSpec,
+        buckets: &[usize],
+        weight_dtype: Option<crate::nn::simd::WeightDtype>,
+    ) -> Result<ModelClient> {
         if self.stopping.load(Ordering::SeqCst) {
             bail!("coordinator is shut down");
         }
@@ -315,6 +337,7 @@ impl Coordinator {
             spec,
             buckets,
             replace: false,
+            weight_dtype,
             reply,
         })?;
         self.finish_register(reg)
@@ -344,6 +367,30 @@ impl Coordinator {
         spec: &ModelSpec,
         buckets: &[usize],
     ) -> Result<ModelClient> {
+        self.hot_swap_spec_as(spec, buckets, None)
+    }
+
+    /// [`hot_swap_spec`](Self::hot_swap_spec) with an explicit weight-dtype
+    /// override: re-lower the **same** spec under a different storage dtype
+    /// and publish it through the lane's [`SwapCell`] — the live
+    /// f32 → i8 requantization path (and its inverse). Everything the plain
+    /// hot-swap guarantees holds: zero dropped requests, in-flight batches
+    /// drain on the old artifact, the generation bumps.
+    pub fn hot_swap_spec_dtype(
+        self: &Arc<Self>,
+        spec: &ModelSpec,
+        buckets: &[usize],
+        weight_dtype: crate::nn::simd::WeightDtype,
+    ) -> Result<ModelClient> {
+        self.hot_swap_spec_as(spec, buckets, Some(weight_dtype))
+    }
+
+    fn hot_swap_spec_as(
+        self: &Arc<Self>,
+        spec: &ModelSpec,
+        buckets: &[usize],
+        weight_dtype: Option<crate::nn::simd::WeightDtype>,
+    ) -> Result<ModelClient> {
         let _reg = self.reg_lock.lock().unwrap();
         if self.stopping.load(Ordering::SeqCst) {
             bail!("coordinator is shut down");
@@ -356,7 +403,7 @@ impl Coordinator {
             if buckets.is_empty() {
                 bail!("register_spec needs at least one batch bucket");
             }
-            return self.register_spec_locked(spec, buckets);
+            return self.register_spec_locked(spec, buckets, weight_dtype);
         };
         if spec.input_shape != info.input_shape {
             bail!(
@@ -377,6 +424,7 @@ impl Coordinator {
             spec: boxed,
             buckets: lane_buckets,
             replace: true,
+            weight_dtype,
             reply,
         })?;
         match (&cell, reg.shared) {
@@ -710,10 +758,12 @@ fn executor_main(
     manifest: Manifest,
     kind: EngineKind,
     intra_threads: usize,
+    weight_dtype: crate::nn::simd::WeightDtype,
     rx: Receiver<ExecMsg>,
 ) {
     let compile = crate::compiler::exec::CompileOptions {
         intra_threads,
+        weight_dtype,
         ..crate::compiler::exec::CompileOptions::default()
     };
     let opts = EngineOptions { compile, ..EngineOptions::default() };
@@ -726,9 +776,15 @@ fn executor_main(
                 let res = register_engine(&manifest, kind, &opts, &mut engines, &name, replace);
                 let _ = reply.send(res);
             }
-            ExecMsg::RegisterSpec { spec, buckets, replace, reply } => {
+            ExecMsg::RegisterSpec { spec, buckets, replace, weight_dtype, reply } => {
+                // Per-registration dtype override (the hot-requantization
+                // path); `None` inherits the coordinator's configured dtype.
+                let mut msg_opts = opts.clone();
+                if let Some(dt) = weight_dtype {
+                    msg_opts.compile.weight_dtype = dt;
+                }
                 let res =
-                    register_spec_engine(kind, &opts, &mut engines, &spec, buckets, replace);
+                    register_spec_engine(kind, &msg_opts, &mut engines, &spec, buckets, replace);
                 let _ = reply.send(res);
             }
             ExecMsg::InferBatch { name, job } => {

@@ -52,6 +52,234 @@ const _: () = assert!(CONV_BLOCK == GEMM_MR);
 /// default for the host.
 pub const LANE_WIDTHS: [usize; 4] = [1, 4, 8, 16];
 
+/// Element type of packed weight panels. Weights are converted **once at
+/// pack time** (the §3.3 "memory layout is free" argument applied to the
+/// element type); the microkernels widen each lane group back to f32 and
+/// accumulate in f32, so narrowing the storage halves (bf16) or quarters
+/// (i8) the weight bytes streamed per output without changing the
+/// accumulation order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum WeightDtype {
+    /// Full-precision storage — bit-identical to the pre-dtype pipeline.
+    #[default]
+    F32,
+    /// bfloat16 panels: round-to-nearest-even truncation of the high 16
+    /// mantissa/exponent bits at pack time, widened back by a 16-bit shift
+    /// in the microkernel. Half the weight bandwidth, ~3 decimal digits.
+    Bf16,
+    /// Post-training 8-bit integers with per-output-channel scales
+    /// (`q = round(w / scale)`, `scale = maxabs / 127`). The dot product
+    /// runs over widened i8 lanes in f32; the store loop folds the scale
+    /// (and bias) back before the activation — dequantization rides the
+    /// existing fused epilogue.
+    I8,
+}
+
+impl WeightDtype {
+    /// Every dtype the pipeline supports, widest first.
+    pub const ALL: [WeightDtype; 3] = [WeightDtype::F32, WeightDtype::Bf16, WeightDtype::I8];
+
+    /// Bytes one stored weight element occupies.
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            WeightDtype::F32 => 4,
+            WeightDtype::Bf16 => 2,
+            WeightDtype::I8 => 1,
+        }
+    }
+
+    /// CLI / config / report spelling.
+    pub fn label(self) -> &'static str {
+        match self {
+            WeightDtype::F32 => "f32",
+            WeightDtype::Bf16 => "bf16",
+            WeightDtype::I8 => "i8",
+        }
+    }
+
+    /// Parse the [`label`](Self::label) spelling (config files, CLI).
+    pub fn parse(s: &str) -> Option<WeightDtype> {
+        match s {
+            "f32" => Some(WeightDtype::F32),
+            "bf16" => Some(WeightDtype::Bf16),
+            "i8" | "int8" => Some(WeightDtype::I8),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for WeightDtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// f32 → bf16 with round-to-nearest-even (the pack-time conversion).
+/// NaNs keep their sign and are forced quiet so the narrowed bits can
+/// never round a payload down to an infinity.
+pub fn f32_to_bf16(v: f32) -> u16 {
+    let bits = v.to_bits();
+    if v.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// bf16 → f32: exact (every bf16 value is representable), one shift.
+#[inline(always)]
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+/// Post-training per-output-channel i8 quantization of a `[taps, oc]`
+/// kernel: `scales[o] = maxabs(channel o) / 127` (1.0 for an all-zero
+/// channel so dequantization is always well-defined), `q = round(w /
+/// scale)` clamped to ±127. Symmetric, zero-point-free — the dot product
+/// needs no correction term, only the per-channel scale folded into the
+/// store loop exactly like a BN multiplier. Caller must reject nonfinite
+/// kernels first (a NaN would cast to 0 silently).
+pub fn quantize_i8_per_channel(kernel: &[f32], taps: usize, oc: usize) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(kernel.len(), taps * oc);
+    let mut scales = vec![1.0f32; oc];
+    for o in 0..oc {
+        let mut maxabs = 0.0f32;
+        for t in 0..taps {
+            maxabs = maxabs.max(kernel[t * oc + o].abs());
+        }
+        if maxabs > 0.0 {
+            scales[o] = maxabs / 127.0;
+        }
+    }
+    let mut q = vec![0i8; kernel.len()];
+    for t in 0..taps {
+        for o in 0..oc {
+            let v = (kernel[t * oc + o] / scales[o]).round();
+            q[t * oc + o] = v.clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// A packed-panel element the microkernels can widen to f32. The f32 impl
+/// widens by identity, so the dtype-generic kernels instantiated at
+/// `E = f32` are the exact pre-dtype code path (bit-exactness preserved).
+pub trait PanelElem: Copy + Default + Send + Sync + 'static {
+    /// Widen one stored element back to f32 for accumulation.
+    fn widen(self) -> f32;
+}
+
+impl PanelElem for f32 {
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        self
+    }
+}
+
+/// `u16` carries bf16 bit patterns (the pipeline's only u16 panels).
+impl PanelElem for u16 {
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        bf16_to_f32(self)
+    }
+}
+
+impl PanelElem for i8 {
+    #[inline(always)]
+    fn widen(self) -> f32 {
+        self as f32
+    }
+}
+
+/// Dtype-generic [`pack_conv_panels_w`]: identical layout, element type
+/// `E`. Tail lanes are `E::default()` (the zero of every panel dtype).
+pub fn pack_conv_panels_we<const W: usize, E: PanelElem>(
+    kernel: &[E],
+    taps: usize,
+    oc: usize,
+) -> Vec<E> {
+    assert!(W > 0);
+    assert_eq!(kernel.len(), taps * oc);
+    let blocks = oc.div_ceil(W);
+    let mut panels = vec![E::default(); blocks * taps * W];
+    for ob in 0..blocks {
+        for t in 0..taps {
+            for l in 0..W {
+                let o = ob * W + l;
+                if o < oc {
+                    panels[(ob * taps + t) * W + l] = kernel[t * oc + o];
+                }
+            }
+        }
+    }
+    panels
+}
+
+/// Runtime-width dispatch over [`pack_conv_panels_we`] — the dtype-generic
+/// sibling of [`pack_conv_panels_any`].
+pub fn pack_conv_panels_any_e<E: PanelElem>(
+    kernel: &[E],
+    taps: usize,
+    oc: usize,
+    lanes: usize,
+) -> Vec<E> {
+    match lanes {
+        1 => pack_conv_panels_we::<1, E>(kernel, taps, oc),
+        8 => pack_conv_panels_we::<8, E>(kernel, taps, oc),
+        16 => pack_conv_panels_we::<16, E>(kernel, taps, oc),
+        _ => pack_conv_panels_we::<4, E>(kernel, taps, oc),
+    }
+}
+
+/// Dense spelling of [`pack_conv_panels_any_e`] (`in_dim` taps).
+pub fn pack_dense_panels_any_e<E: PanelElem>(
+    kernel: &[E],
+    in_dim: usize,
+    out_dim: usize,
+    lanes: usize,
+) -> Vec<E> {
+    pack_conv_panels_any_e(kernel, in_dim, out_dim, lanes)
+}
+
+/// Dtype-generic [`conv_fma_run_w`]: widen each stored lane to f32 and
+/// accumulate in f32 — identical per-lane order at every `(W, E)`, so
+/// `E = f32` is bit-identical to the historical kernel and every narrowed
+/// dtype differs only by its pack-time rounding.
+#[inline(always)]
+pub fn conv_fma_run_we<const W: usize, E: PanelElem>(
+    panel: &[E],
+    x: &[f32],
+    acc: &mut [f32; W],
+) {
+    debug_assert_eq!(panel.len(), x.len() * W);
+    for (lanes, &xv) in panel.chunks_exact(W).zip(x) {
+        for l in 0..W {
+            acc[l] += xv * lanes[l].widen();
+        }
+    }
+}
+
+/// Dtype-generic [`gemm_fma_run_w`]: the MR×NR register tile over widened
+/// panels, accumulation in f32.
+#[inline(always)]
+pub fn gemm_fma_run_we<const W: usize, E: PanelElem>(
+    panel: &[E],
+    x4: &[f32],
+    in_dim: usize,
+    acc: &mut [[f32; W]; GEMM_NR],
+) {
+    debug_assert_eq!(panel.len(), in_dim * W);
+    debug_assert_eq!(x4.len(), GEMM_NR * in_dim);
+    for (i, lanes) in panel.chunks_exact(W).enumerate() {
+        for n in 0..GEMM_NR {
+            let xv = x4[n * in_dim + i];
+            for l in 0..W {
+                acc[n][l] += xv * lanes[l].widen();
+            }
+        }
+    }
+}
+
 /// Width-generic [`pack_conv_panels`]: block the output-channel axis by
 /// `W` lanes instead of 4 —
 ///
@@ -88,12 +316,7 @@ pub fn pack_conv_panels_w<const W: usize>(kernel: &[f32], taps: usize, oc: usize
 /// computed at `W = 1`.
 #[inline(always)]
 pub fn conv_fma_run_w<const W: usize>(panel: &[f32], x: &[f32], acc: &mut [f32; W]) {
-    debug_assert_eq!(panel.len(), x.len() * W);
-    for (lanes, &xv) in panel.chunks_exact(W).zip(x) {
-        for l in 0..W {
-            acc[l] += xv * lanes[l];
-        }
-    }
+    conv_fma_run_we::<W, f32>(panel, x, acc)
 }
 
 /// Width-generic [`pack_dense_panels`] (same layout with `taps = in_dim`).
@@ -116,16 +339,7 @@ pub fn gemm_fma_run_w<const W: usize>(
     in_dim: usize,
     acc: &mut [[f32; W]; GEMM_NR],
 ) {
-    debug_assert_eq!(panel.len(), in_dim * W);
-    debug_assert_eq!(x4.len(), GEMM_NR * in_dim);
-    for (i, lanes) in panel.chunks_exact(W).enumerate() {
-        for n in 0..GEMM_NR {
-            let xv = x4[n * in_dim + i];
-            for l in 0..W {
-                acc[n][l] += xv * lanes[l];
-            }
-        }
-    }
+    gemm_fma_run_we::<W, f32>(panel, x4, in_dim, acc)
 }
 
 /// Pre-pack an HWIO conv kernel (flattened `[taps, oc]`, `taps = kh*kw*c`)
@@ -484,6 +698,128 @@ mod tests {
         let x4 = r.uniform_vec(GEMM_NR * in_dim);
         per_width::<8>(&kernel16[..in_dim * 8], &x4, in_dim);
         per_width::<16>(&kernel16, &x4, in_dim);
+    }
+
+    #[test]
+    fn bf16_round_to_nearest_even_pinned() {
+        // exactly representable values survive the round trip
+        for v in [0.0f32, -0.0, 1.0, -2.5, 0.15625, 65280.0] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(v)), v, "{v}");
+        }
+        // exact midpoint below an even mantissa rounds down (RNE), the
+        // midpoint below an odd mantissa rounds up, one ulp past a
+        // midpoint always rounds up
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::from_bits(0x3F80_8000))), 1.0);
+        assert_eq!(
+            bf16_to_f32(f32_to_bf16(f32::from_bits(0x3F81_8000))),
+            f32::from_bits(0x3F82_0000)
+        );
+        assert_eq!(
+            bf16_to_f32(f32_to_bf16(f32::from_bits(0x3F80_8001))),
+            f32::from_bits(0x3F81_0000)
+        );
+        // next representable above 1.0 rounds to itself
+        assert_eq!(bf16_to_f32(f32_to_bf16(1.0078125)), 1.0078125);
+        // infinities pass through; NaN stays NaN (quiet), never an inf
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_to_f32(f32_to_bf16(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(bf16_to_f32(f32_to_bf16(f32::NAN)).is_nan());
+        // relative error of the round trip is bounded by 2^-8
+        let mut r = SplitMix64::new(5);
+        for v in r.uniform_vec(1000) {
+            let rt = bf16_to_f32(f32_to_bf16(v));
+            assert!((rt - v).abs() <= v.abs() * 0.00390625 + 1e-38, "{v} -> {rt}");
+        }
+    }
+
+    #[test]
+    fn i8_quantization_bounds_and_scales() {
+        let mut r = SplitMix64::new(9);
+        let (taps, oc) = (7, 5);
+        let kernel: Vec<f32> = r.uniform_vec(taps * oc).iter().map(|v| v * 2.0 - 1.0).collect();
+        let (q, scales) = quantize_i8_per_channel(&kernel, taps, oc);
+        assert_eq!(scales.len(), oc);
+        for o in 0..oc {
+            let maxabs = (0..taps).map(|t| kernel[t * oc + o].abs()).fold(0.0f32, f32::max);
+            assert!((scales[o] - maxabs / 127.0).abs() < 1e-7);
+            for t in 0..taps {
+                let deq = q[t * oc + o] as f32 * scales[o];
+                // rounding error ≤ scale/2 per element
+                assert!(
+                    (deq - kernel[t * oc + o]).abs() <= scales[o] * 0.5 + 1e-7,
+                    "chan {o} tap {t}: {} vs {}",
+                    deq,
+                    kernel[t * oc + o]
+                );
+            }
+        }
+        // all-zero channels quantize to zero with scale 1 (no 0/0)
+        let (qz, sz) = quantize_i8_per_channel(&vec![0.0; 6], 3, 2);
+        assert!(qz.iter().all(|&v| v == 0) && sz.iter().all(|&s| s == 1.0));
+    }
+
+    #[test]
+    fn dtype_generic_runs_bit_match_their_scalar_reference() {
+        // For every panel dtype, the wide kernels must bit-match the W = 1
+        // instantiation of the SAME dtype — runtime lane dispatch stays a
+        // speed-only choice under narrowed weights too.
+        fn per_width<const W: usize, E: PanelElem>(kernel: &[E], x: &[f32], taps: usize, oc: usize) {
+            let p1 = pack_conv_panels_we::<1, E>(kernel, taps, oc);
+            let p = pack_conv_panels_we::<W, E>(kernel, taps, oc);
+            for o in 0..oc {
+                let mut one = [0.0f32; 1];
+                conv_fma_run_we::<1, E>(&p1[o * taps..(o + 1) * taps], x, &mut one);
+                let mut acc = [0.0f32; W];
+                let ob = o / W;
+                conv_fma_run_we::<W, E>(&p[ob * taps * W..(ob + 1) * taps * W], x, &mut acc);
+                assert_eq!(acc[o % W].to_bits(), one[0].to_bits(), "W={W} chan {o}");
+            }
+        }
+        let mut r = SplitMix64::new(81);
+        for (taps, oc) in [(9, 6), (5, 4), (12, 17)] {
+            let kernel = r.uniform_vec(taps * oc);
+            let x = r.uniform_vec(taps);
+            let kb: Vec<u16> = kernel.iter().map(|&v| f32_to_bf16(v)).collect();
+            let (ki, _) = quantize_i8_per_channel(&kernel, taps, oc);
+            per_width::<8, u16>(&kb, &x, taps, oc);
+            per_width::<16, u16>(&kb, &x, taps, oc);
+            per_width::<8, i8>(&ki, &x, taps, oc);
+            per_width::<16, i8>(&ki, &x, taps, oc);
+        }
+    }
+
+    #[test]
+    fn widened_gemm_tile_matches_widened_per_item_pass() {
+        let mut r = SplitMix64::new(82);
+        let in_dim = 11;
+        let kernel = r.uniform_vec(in_dim * 8);
+        let x4 = r.uniform_vec(GEMM_NR * in_dim);
+        let kb: Vec<u16> = kernel.iter().map(|&v| f32_to_bf16(v)).collect();
+        let p = pack_dense_panels_any_e(&kb, in_dim, 8, 8);
+        let mut acc = [[0.0f32; 8]; GEMM_NR];
+        gemm_fma_run_we::<8, u16>(&p, &x4, in_dim, &mut acc);
+        for n in 0..GEMM_NR {
+            let mut one = [0.0f32; 8];
+            conv_fma_run_we::<8, u16>(&p, &x4[n * in_dim..(n + 1) * in_dim], &mut one);
+            for l in 0..8 {
+                assert_eq!(acc[n][l].to_bits(), one[l].to_bits(), "item {n} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_dtype_parse_and_labels_roundtrip() {
+        for d in WeightDtype::ALL {
+            assert_eq!(WeightDtype::parse(d.label()), Some(d));
+            assert_eq!(d.to_string(), d.label());
+        }
+        assert_eq!(WeightDtype::parse("int8"), Some(WeightDtype::I8));
+        assert_eq!(WeightDtype::parse("fp64"), None);
+        assert_eq!(WeightDtype::default(), WeightDtype::F32);
+        assert_eq!(
+            WeightDtype::ALL.map(WeightDtype::bytes_per_elem),
+            [4, 2, 1]
+        );
     }
 
     #[test]

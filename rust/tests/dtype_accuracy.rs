@@ -1,0 +1,93 @@
+//! Accuracy deltas of the narrowed weight-storage dtypes (bf16 / i8)
+//! against the f32 lowering, on the builtin nets (always) and the keras
+//! fixture models (when `models/` is present, same gate as `tests/keras.rs`).
+//!
+//! The documented per-dtype envelopes, as multiples of the output scale:
+//!
+//! * **bf16** (`BF16_TOL` = 2e-2): each weight is rounded to 8 mantissa
+//!   bits (relative error ≤ 2⁻⁹ per weight, round-to-nearest-even at pack
+//!   time); through the fixture depths that stays well under 1%.
+//! * **i8** (`I8_TOL` = 1.5e-1): per-output-channel scales are max|w|/127,
+//!   so each weight carries ≤ scale/2 absolute error; a K-tap accumulation
+//!   is bounded by K·max|w|/254 and compounds per layer — a few percent of
+//!   the output scale in practice, and any packing/requantization bug
+//!   overshoots this envelope by orders of magnitude.
+//!
+//! Run with `--nocapture` to see the measured deltas per model.
+
+use std::path::Path;
+
+use compiled_nn::compiler::exec::{CompileOptions, OptInterp, WeightDtype};
+use compiled_nn::model::builder::{square_mlp, tiny_cnn, wide_cnn};
+use compiled_nn::model::load::load_model;
+use compiled_nn::model::spec::ModelSpec;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::util::rng::SplitMix64;
+
+/// bf16 envelope (× output scale); see the module docs for the derivation.
+const BF16_TOL: f32 = 2e-2;
+/// i8 envelope (× output scale); see the module docs for the derivation.
+const I8_TOL: f32 = 1.5e-1;
+
+/// Max-abs output delta of `dtype` storage vs the f32 lowering of the same
+/// spec (approximations off in both, so the dtype is the only difference),
+/// plus the f32 output scale the bounds are relative to.
+fn dtype_delta(spec: &ModelSpec, dtype: WeightDtype, batch: usize, seed: u64) -> (f32, f32) {
+    let item: usize = spec.input_shape.iter().product();
+    let mut shape = vec![batch];
+    shape.extend_from_slice(&spec.input_shape);
+    let x = Tensor::from_vec(&shape, SplitMix64::new(seed).uniform_vec(batch * item));
+    let base = CompileOptions { approx: false, ..CompileOptions::default() };
+    let a = OptInterp::new(spec, base).unwrap().infer(&x).unwrap();
+    let b = OptInterp::new(spec, CompileOptions { weight_dtype: dtype, ..base })
+        .unwrap()
+        .infer(&x)
+        .unwrap();
+    let scale = a[0].data().iter().fold(1.0f32, |m, &v| m.max(v.abs()));
+    (a[0].max_abs_diff(&b[0]), scale)
+}
+
+fn assert_deltas(spec: &ModelSpec, batch: usize, seed: u64) {
+    let (d_bf16, scale) = dtype_delta(spec, WeightDtype::Bf16, batch, seed);
+    let (d_i8, _) = dtype_delta(spec, WeightDtype::I8, batch, seed);
+    println!(
+        "{:>12}: bf16 Δ = {d_bf16:.3e}  i8 Δ = {d_i8:.3e}  (output scale {scale:.3e})",
+        spec.name
+    );
+    assert!(
+        d_bf16 <= BF16_TOL * scale,
+        "{}: bf16 delta {d_bf16} exceeds {BF16_TOL} × scale {scale}",
+        spec.name
+    );
+    assert!(
+        d_i8 <= I8_TOL * scale,
+        "{}: i8 delta {d_i8} exceeds {I8_TOL} × scale {scale}",
+        spec.name
+    );
+}
+
+#[test]
+fn builtin_nets_stay_inside_documented_dtype_bounds() {
+    for spec in [tiny_cnn(81), wide_cnn(82), square_mlp(83, 32, 3)] {
+        assert_deltas(&spec, 2, 910);
+    }
+    // sanity that the narrowed artifact is actually narrowed: conv panels
+    // always store the requested dtype, so i8 must move the outputs
+    let (d_i8, _) = dtype_delta(&tiny_cnn(81), WeightDtype::I8, 2, 910);
+    assert!(d_i8 > 0.0, "i8 quantization produced bit-identical outputs");
+}
+
+fn have_models() -> bool {
+    Path::new("models/c_bh.keras.json").exists()
+}
+
+#[test]
+fn keras_fixtures_stay_inside_documented_dtype_bounds() {
+    if !have_models() {
+        return;
+    }
+    for name in ["c_htwk", "c_bh", "segmenter"] {
+        let spec = load_model(Path::new("models"), name).unwrap();
+        assert_deltas(&spec, 1, 911);
+    }
+}

@@ -6,18 +6,23 @@
 //! **every available `EngineKind` × every `CompileOptions` scheme
 //! combination** at batch sizes {1, 3, 8} — covering the all-tail matvec
 //! path, full GEMM tiles, tiles + tail, and the per-batch arena spans —
-//! and must match the `NaiveInterp` oracle within 1e-4 (relative to the
-//! output magnitude). Since PR 7 the grid also forces every SIMD lane
+//! and must match the `NaiveInterp` oracle within a per-dtype tolerance
+//! (1e-4 of the output magnitude for f32 — see `tolerance_for` for the
+//! bf16/i8 bounds). Since PR 7 the grid also forces every SIMD lane
 //! width (scalar/4/8, 16 where detected) and the intra-op parallel split,
-//! alone and combined with wide lanes. The bit-exact combo (pinned to
-//! scalar lanes and a single task) is additionally held to bit-for-bit
-//! equality on the MLPs, batched included.
+//! alone and combined with wide lanes; the dtype-generic weight pipeline
+//! re-instantiates the whole scheme × lane × thread grid at bf16 and i8
+//! weight storage. The bit-exact combo (pinned to scalar lanes, a single
+//! task, and f32 storage) is additionally held to bit-for-bit equality on
+//! the MLPs, batched included.
 //!
 //! Failures print the propcheck seed (`PROPCHECK_SEED=0x… cargo test
 //! fuzz_`) plus the failing spec's own seed, so any case replays exactly.
 //! CI pins `PROPCHECK_SEED` so the suite is deterministic in the pipeline.
 
-use compiled_nn::compiler::exec::{CompileOptions, ConvScheme, DenseScheme, LaneSelect};
+use compiled_nn::compiler::exec::{
+    CompileOptions, ConvScheme, DenseScheme, LaneSelect, WeightDtype,
+};
 use compiled_nn::engine::{build_engine_from_spec, Engine, EngineKind, EngineOptions};
 use compiled_nn::model::builder::{random_conv_net, random_mlp};
 use compiled_nn::model::spec::ModelSpec;
@@ -33,40 +38,84 @@ use compiled_nn::util::rng::SplitMix64;
 /// suite representative of real dispatch), and the intra-op parallel
 /// split on its own and combined with wide lanes. Approximations stay off
 /// so every combo shares the oracle tolerance.
-fn combos() -> Vec<(&'static str, CompileOptions)> {
+///
+/// Since the dtype-generic weight pipeline, the scheme/lane/thread grid is
+/// additionally instantiated at bf16 and i8 weight storage (the f32 rows
+/// above already cover the full-precision axis); `tolerance_for` widens the
+/// oracle bound per dtype. Bit-exact stays f32-only by construction.
+fn combos() -> Vec<(String, CompileOptions)> {
     let base = CompileOptions { approx: false, ..CompileOptions::default() };
-    let mut v = vec![
-        ("auto", base),
-        ("bit-exact", CompileOptions::bit_exact()),
-        ("direct", CompileOptions { conv: ConvScheme::Direct, ..base }),
-        ("im2col", CompileOptions { conv: ConvScheme::Im2col, ..base }),
-        ("generic", CompileOptions { conv: ConvScheme::Generic, ..base }),
+    let mut v: Vec<(String, CompileOptions)> = vec![
+        ("auto".into(), base),
+        ("bit-exact".into(), CompileOptions::bit_exact()),
         (
-            "direct-nofuse",
+            "direct-nofuse".into(),
             CompileOptions { conv: ConvScheme::Direct, fuse_pool: false, ..base },
         ),
         (
-            "im2col-nofuse",
+            "im2col-nofuse".into(),
             CompileOptions { conv: ConvScheme::Im2col, fuse_pool: false, ..base },
         ),
-        ("no-reuse", CompileOptions { reuse_memory: false, ..base }),
-        ("no-fold", CompileOptions { fold_bn: false, ..base }),
-        ("dense-rotated", CompileOptions { dense: DenseScheme::Rotated, ..base }),
-        ("dense-broadcast", CompileOptions { dense: DenseScheme::Broadcast, ..base }),
-        ("dense-generic", CompileOptions { dense: DenseScheme::Generic, ..base }),
-        ("lanes-scalar", CompileOptions { lanes: LaneSelect::Scalar, ..base }),
-        ("lanes-4", CompileOptions { lanes: LaneSelect::W4, ..base }),
-        ("lanes-8", CompileOptions { lanes: LaneSelect::W8, ..base }),
-        ("parallel", CompileOptions { intra_threads: 4, ..base }),
-        (
-            "lanes-8-parallel",
-            CompileOptions { lanes: LaneSelect::W8, intra_threads: 4, ..base },
-        ),
+        ("no-reuse".into(), CompileOptions { reuse_memory: false, ..base }),
+        ("no-fold".into(), CompileOptions { fold_bn: false, ..base }),
     ];
-    if compiled_nn::cpu::Features::detect().avx512f {
-        v.push(("lanes-16", CompileOptions { lanes: LaneSelect::W16, ..base }));
+    // the dtype axis: every conv/dense scheme, every forced lane width,
+    // and the intra-op split, at every weight storage dtype
+    for dtype in WeightDtype::ALL {
+        let d = CompileOptions { weight_dtype: dtype, ..base };
+        if dtype == WeightDtype::F32 {
+            // "auto" above is the f32 default; skip the duplicate row
+        } else {
+            v.push((dtype.label().to_string(), d));
+        }
+        let rows = [
+            ("direct", CompileOptions { conv: ConvScheme::Direct, ..d }),
+            ("im2col", CompileOptions { conv: ConvScheme::Im2col, ..d }),
+            ("generic", CompileOptions { conv: ConvScheme::Generic, ..d }),
+            ("dense-rotated", CompileOptions { dense: DenseScheme::Rotated, ..d }),
+            ("dense-broadcast", CompileOptions { dense: DenseScheme::Broadcast, ..d }),
+            ("dense-generic", CompileOptions { dense: DenseScheme::Generic, ..d }),
+            ("lanes-scalar", CompileOptions { lanes: LaneSelect::Scalar, ..d }),
+            ("lanes-4", CompileOptions { lanes: LaneSelect::W4, ..d }),
+            ("lanes-8", CompileOptions { lanes: LaneSelect::W8, ..d }),
+            ("parallel", CompileOptions { intra_threads: 4, ..d }),
+            (
+                "lanes-8-parallel",
+                CompileOptions { lanes: LaneSelect::W8, intra_threads: 4, ..d },
+            ),
+        ];
+        for (tag, o) in rows {
+            v.push((format!("{}-{tag}", dtype.label()), o));
+        }
+        if compiled_nn::cpu::Features::detect().avx512f {
+            v.push((
+                format!("{}-lanes-16", dtype.label()),
+                CompileOptions { lanes: LaneSelect::W16, ..d },
+            ));
+        }
     }
     v
+}
+
+/// Oracle tolerance per weight dtype, as a multiple of the output scale.
+///
+/// * f32 panels are a reordering of the oracle's math: 1e-4 covers the
+///   reassociated accumulation alone.
+/// * bf16 rounds each weight to 8 mantissa bits (relative error ≤ 2⁻⁹);
+///   through these ≤5-layer generated nets that stays well under 1%, so
+///   2e-2 is tight while never flaking.
+/// * i8 is scale-aware by construction: per-channel scales are max|w|/127,
+///   so each weight carries ≤ scale/2 absolute error and a K-tap
+///   accumulation over O(1) activations is bounded by K·max|w|/254 —
+///   a few percent of the output scale for the generated shapes. 1.5e-1
+///   leaves margin for layer compounding while still failing loudly on any
+///   packing/dequantization bug (those are O(scale) wrong).
+fn tolerance_for(dtype: WeightDtype) -> f32 {
+    match dtype {
+        WeightDtype::F32 => 1e-4,
+        WeightDtype::Bf16 => 2e-2,
+        WeightDtype::I8 => 1.5e-1,
+    }
 }
 
 /// Batch sizes the suite draws: 1 (the serving fast path, all-tail
@@ -143,11 +192,13 @@ fn differential_case(
                 continue;
             }
             let d = want[0].max_abs_diff(&got[0]);
-            if d > 1e-4 * scale {
+            let tol = tolerance_for(opts.weight_dtype) * scale;
+            if d > tol {
                 return Err(format!(
                     "spec seed {}: batch {batch}: {kind}/{label}: \
-                     max |Δ| = {d} (scale {scale})",
-                    spec.seed
+                     max |Δ| = {d} (scale {scale}, {} tol {tol})",
+                    spec.seed,
+                    opts.weight_dtype
                 ));
             }
         }

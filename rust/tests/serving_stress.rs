@@ -20,13 +20,15 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use compiled_nn::compiler::program::lower_count;
+use compiled_nn::compiler::exec::OptInterp;
+use compiled_nn::compiler::program::{lower_count, CompileOptions};
 use compiled_nn::coordinator::protocol::Response;
 use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
 use compiled_nn::coordinator::tcp::{TcpClient, TcpOptions, TcpServer};
 use compiled_nn::engine::EngineKind;
 use compiled_nn::model::builder::tiny_cnn;
 use compiled_nn::model::spec::ModelSpec;
+use compiled_nn::nn::simd::WeightDtype;
 use compiled_nn::nn::tensor::Tensor;
 use compiled_nn::runtime::artifact::Manifest;
 use compiled_nn::util::rng::SplitMix64;
@@ -50,6 +52,7 @@ fn config(workers: usize) -> CoordinatorConfig {
         engine: EngineKind::Optimized,
         workers,
         intra_threads: 1,
+        weight_dtype: WeightDtype::F32,
     }
 }
 
@@ -319,6 +322,82 @@ fn hot_swap_under_fire_loses_no_replies() {
     assert!(err.contains("input shape"), "{err}");
     let still = v2.infer(Tensor::from_vec(&[8, 8, 3], vec![0.1; ITEM])).unwrap();
     assert_eq!(still.shape(), &[1, 10]);
+    coord.shutdown();
+}
+
+/// The dtype half of hot-swap: a live f32 model is requantized to its i8
+/// twin under fire. Zero lost replies, the generation bumps, and the lane
+/// converges to exactly what a directly-compiled i8 engine produces.
+#[test]
+fn hot_swap_to_quantized_twin_under_fire() {
+    let _serial = SERIAL.lock().unwrap();
+    let lowers_before = lower_count();
+    let coord = Coordinator::start(Manifest::empty(), config(4)).unwrap();
+    let v1 = coord.register_spec(&model("quant_m", 71), &[1, 4, 8]).unwrap();
+    assert_eq!(v1.info.generation, 1);
+
+    let x0 = Tensor::from_vec(&[8, 8, 3], SplitMix64::new(4321).uniform_vec(ITEM));
+    let f32_out = v1.infer(x0.clone()).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let client = v1.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(6100 + t as u64);
+                let mut oks = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let x = Tensor::from_vec(&[8, 8, 3], rng.uniform_vec(ITEM));
+                    // zero lost / failed replies across the requantization
+                    let out = client.infer(x).expect("request lost across dtype hot-swap");
+                    assert_eq!(out.shape(), &[1, 10]);
+                    oks += 1;
+                }
+                oks
+            })
+        })
+        .collect();
+
+    // requantize the live lane mid-fire: same spec, i8 weight storage
+    std::thread::sleep(Duration::from_millis(100));
+    let v2 = coord
+        .hot_swap_spec_dtype(&model("quant_m", 71), &[1, 4, 8], WeightDtype::I8)
+        .unwrap();
+    assert_eq!(v2.info.generation, 2, "dtype hot-swap must bump the generation");
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::SeqCst);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "stress produced no traffic");
+
+    let m = coord.metrics("quant_m").unwrap();
+    assert_eq!(m.errors.get(), 0, "dtype hot-swap caused request errors");
+    // lowerings so far: the f32 registration + the i8 rebuild — never one
+    // per worker (asserted before the reference engine below lowers again)
+    assert_eq!(lower_count() - lowers_before, 2);
+
+    // the lane now serves the quantized artifact: identical to a
+    // directly-compiled i8 engine over the same spec and options …
+    let after = v2.infer(x0.clone()).unwrap();
+    let mut reference = OptInterp::new(
+        &model("quant_m", 71),
+        CompileOptions {
+            intra_threads: 1,
+            weight_dtype: WeightDtype::I8,
+            ..CompileOptions::default()
+        },
+    )
+    .unwrap();
+    let expect = reference
+        .infer(&Tensor::from_vec(&[1, 8, 8, 3], x0.data().to_vec()))
+        .unwrap();
+    let conv = after.max_abs_diff(&expect[0]);
+    assert!(conv < 1e-6, "lane diverged from the i8 reference by {conv}");
+    // … visibly different from the f32 artifact it replaced, yet inside
+    // the i8 accuracy envelope
+    let moved = f32_out.max_abs_diff(&after);
+    assert!(moved > 1e-7, "i8 swap left the served outputs bit-identical to f32");
+    assert!(moved < 0.15, "i8 artifact drifted past the quantization envelope: {moved}");
     coord.shutdown();
 }
 
