@@ -1,0 +1,150 @@
+//! **Cold-start** — what the persistent artifact cache buys: for each
+//! model × weight dtype, the wall time of a fresh `Program::lower` (fold →
+//! plan → pack → quantize) against `load_program` mmap-loading the same
+//! program from a serialized artifact, plus the measured-tuning axis
+//! (`tune = Measured` vs the cost-model pick) on the GEMM-heavy net.
+//!
+//! Writes **BENCH_coldstart.json** with `load_vs_lower_speedup_<model>_
+//! <dtype>` keys (CI grep-gates `load_vs_lower_speedup_wide_cnn_f32 > 1`
+//! structurally) and `tune_predicted_ns` / `tune_measured_ns` per-item
+//! inference times — the cross-PR record that deserialization stays
+//! cheaper than re-lowering and that empirical tuning never ships a
+//! slower program than the cost model alone.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use compiled_nn::compiler::artifact::{load_program, save_program, spec_content_hash};
+use compiled_nn::compiler::exec::{CompileOptions, TuneMode, WeightDtype};
+use compiled_nn::compiler::program::{ArenaPool, Program};
+use compiled_nn::model::builder::{tiny_cnn, wide_cnn};
+use compiled_nn::model::spec::ModelSpec;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::util::json::Json;
+use compiled_nn::util::rng::SplitMix64;
+
+/// Median wall milliseconds of `f` over `reps` runs (1 untimed warmup).
+fn median_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut samples: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    samples.sort_by(f64::total_cmp);
+    samples[samples.len() / 2]
+}
+
+/// Mean wall nanoseconds per item of `program` over `iters` batch-8 runs.
+fn per_item_ns(program: &Program, iters: usize) -> f64 {
+    let batch = 8usize;
+    let item: usize = program.input_shape().iter().product();
+    let mut shape = vec![batch];
+    shape.extend_from_slice(program.input_shape());
+    let x = Tensor::from_vec(&shape, SplitMix64::new(7).uniform_vec(batch * item));
+    let mut pool = ArenaPool::new();
+    program.infer_pooled(&x, &mut pool).unwrap(); // warmup + arena alloc
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        program.infer_pooled(&x, &mut pool).unwrap();
+    }
+    t0.elapsed().as_nanos() as f64 / (iters * batch) as f64
+}
+
+struct ColdstartRow {
+    model: &'static str,
+    dtype: WeightDtype,
+    lower_ms: f64,
+    load_ms: f64,
+}
+
+fn coldstart_row(
+    model: &'static str,
+    spec: &ModelSpec,
+    dtype: WeightDtype,
+    dir: &Path,
+) -> anyhow::Result<ColdstartRow> {
+    let opts = CompileOptions { weight_dtype: dtype, ..CompileOptions::default() };
+    let program = Program::lower(spec, opts)?;
+    let path = dir.join(format!("{model}-{}.cnnprog", dtype.label()));
+    save_program(&program, spec_content_hash(spec), opts, &path)?;
+
+    let lower_ms = median_ms(9, || {
+        let _ = Program::lower(spec, opts).unwrap();
+    });
+    let load_ms = median_ms(9, || {
+        let _ = load_program(&path).unwrap();
+    });
+
+    // loaded and freshly-lowered programs must agree bitwise — a bench
+    // that silently compared different programs would be meaningless
+    let (loaded, _) = load_program(&path)?;
+    let item: usize = spec.input_shape.iter().product();
+    let mut shape = vec![1usize];
+    shape.extend_from_slice(&spec.input_shape);
+    let x = Tensor::from_vec(&shape, SplitMix64::new(3).uniform_vec(item));
+    let a = program.infer_pooled(&x, &mut ArenaPool::new())?;
+    let b = loaded.infer_pooled(&x, &mut ArenaPool::new())?;
+    assert_eq!(a[0].data(), b[0].data(), "{model}/{}: load diverged", dtype.label());
+
+    println!(
+        "{model:<10} {:<5} lower {lower_ms:>8.3} ms   load {load_ms:>8.3} ms   speedup {:>6.1}x",
+        dtype.label(),
+        lower_ms / load_ms
+    );
+    Ok(ColdstartRow { model, dtype, lower_ms, load_ms })
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("cnn-coldstart-{}", std::process::id()));
+    std::fs::create_dir_all(&dir)?;
+
+    println!("== cold start: fresh lowering vs artifact mmap-load (median of 9)");
+    let tiny = tiny_cnn(7);
+    let wide = wide_cnn(7);
+    let mut rows = Vec::new();
+    for (name, spec) in [("tiny_cnn", &tiny), ("wide_cnn", &wide)] {
+        for dtype in [WeightDtype::F32, WeightDtype::I8] {
+            rows.push(coldstart_row(name, spec, dtype, &dir)?);
+        }
+    }
+
+    // the tuning axis: cost-model pick vs empirically measured pick on the
+    // GEMM-heavy net (where scheme choice actually moves throughput)
+    println!("\n== tuning: cost-model pick vs measured pick (wide_cnn, batch 8)");
+    let predicted = Program::lower(&wide, CompileOptions::default())?;
+    let measured = Program::lower(
+        &wide,
+        CompileOptions { tune: TuneMode::Measured { reps: 3 }, ..CompileOptions::default() },
+    )?;
+    let overturned =
+        measured.summary().report.decisions.iter().filter(|d| d.overturned).count();
+    let tune_predicted_ns = per_item_ns(&predicted, 30);
+    let tune_measured_ns = per_item_ns(&measured, 30);
+    println!(
+        "predicted {tune_predicted_ns:>10.0} ns/item   measured {tune_measured_ns:>10.0} \
+         ns/item   ({overturned} decision(s) overturned)"
+    );
+
+    let mut root = BTreeMap::new();
+    root.insert("bench".to_string(), Json::Str("coldstart".to_string()));
+    for r in &rows {
+        let tag = format!("{}_{}", r.model, r.dtype.label());
+        root.insert(format!("lower_ms_{tag}"), Json::Num(r.lower_ms));
+        root.insert(format!("load_ms_{tag}"), Json::Num(r.load_ms));
+        root.insert(
+            format!("load_vs_lower_speedup_{tag}"),
+            Json::Num(r.lower_ms / r.load_ms),
+        );
+    }
+    root.insert("tune_predicted_ns".to_string(), Json::Num(tune_predicted_ns));
+    root.insert("tune_measured_ns".to_string(), Json::Num(tune_measured_ns));
+    root.insert("tune_overturned_layers".to_string(), Json::Num(overturned as f64));
+    std::fs::write("BENCH_coldstart.json", format!("{}\n", Json::Obj(root)))?;
+    println!("\nwrote BENCH_coldstart.json");
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}

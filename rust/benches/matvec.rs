@@ -118,7 +118,7 @@ fn dense_grid() -> anyhow::Result<()> {
             let x = rng.uniform_vec(batch * in_dim);
             let mut out = vec![0.0f32; batch * out_dim];
             let algo = DenseAlgo::Gemm {
-                panels: WeightPanels::F32(panels.clone()),
+                panels: WeightPanels::F32(panels.clone().into()),
                 lanes: 4,
                 tail: DenseTail::Panels,
             };
@@ -249,7 +249,9 @@ fn dense_grid() -> anyhow::Result<()> {
     let mut ns_of: BTreeMap<usize, f64> = BTreeMap::new();
     for lanes in [4usize, 8, 16] {
         let algo = DenseAlgo::Gemm {
-            panels: WeightPanels::F32(pack_dense_panels_any(&kernel, in_dim, out_dim, lanes)),
+            panels: WeightPanels::F32(
+                pack_dense_panels_any(&kernel, in_dim, out_dim, lanes).into(),
+            ),
             lanes,
             tail: DenseTail::Panels,
         };

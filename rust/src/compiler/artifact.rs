@@ -1,0 +1,1213 @@
+//! Persistent compiled-artifact cache: serialize a lowered [`Program`] to a
+//! versioned binary file and load it back by `mmap(2)`-ing the weight-panel
+//! blob, so a warm process start skips §3.5 folding, §3.2 planning, §3.3
+//! scheme selection and weight packing/quantization entirely — the
+//! cold-start half of the paper's compile-once amortization argument.
+//!
+//! ## File layout
+//!
+//! All scalar fields are host-native byte order (an artifact is a *local*
+//! cache entry, keyed by the host's CPU features — it is not a wire format).
+//!
+//! ```text
+//! off  len  field
+//!   0    8  magic  b"CNNPROG\0"
+//!   8    4  format version (u32, currently 1)
+//!  12    4  reserved (0)
+//!  16    8  FNV-1a checksum over bytes[24..total_len]
+//!  24    8  total_len (whole file, bytes)
+//!  32    8  spec content hash (spec_content_hash)
+//!  40    4  CPU feature bits at save time (bit0 avx2, bit1 avx512f)
+//!  44    4  required_lanes — widest SIMD width any blocked kernel uses
+//!  48   32  canonical CompileOptions bytes
+//!  80    8  meta_len
+//!  88    8  blob_off (64-byte aligned)
+//!  96    8  blob_len
+//! 104    …  meta: kernel/decision table (shapes, spans, small weights,
+//!           the lowering report) — copied into owned memory at load
+//! blob_off … 64-byte-aligned weight-panel blob: every packed conv/dense
+//!           panel, each array 64-aligned — borrowed zero-copy out of the
+//!           mapping by [`PanelStore`] at load
+//! ```
+//!
+//! ## Invalidation
+//!
+//! The load path rejects (with a structured [`ArtifactError`], never a
+//! panic): wrong magic, wrong format version, truncation, checksum
+//! mismatch, and artifacts whose `required_lanes` exceed the lane ceiling
+//! the *loading* host resolves for the stored options (an `Auto`-lowered
+//! artifact from a wider machine; explicitly forced widths are portable by
+//! construction and load anywhere). [`ProgramCache`] additionally compares
+//! the spec content hash and the full `CompileOptions`, and silently
+//! re-lowers (counting an invalidation) on any mismatch or load error.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io;
+use std::ops::Deref;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
+
+use crate::compiler::program::{CompileOptions, Program};
+use crate::cpu;
+use crate::model::spec::ModelSpec;
+
+/// Artifact file magic.
+const MAGIC: &[u8; 8] = b"CNNPROG\0";
+/// Current artifact format version. Bump on any layout change — older
+/// files are rejected with [`ArtifactError::Version`] and re-lowered.
+pub const FORMAT_VERSION: u32 = 1;
+/// Header length in bytes (the fixed part before the meta table).
+const HEADER_LEN: usize = 104;
+/// Weight-panel blob alignment.
+const BLOB_ALIGN: usize = 64;
+
+// ------------------------------------------------------------------ errors
+
+/// Structured reasons an artifact fails to load. Every variant is a clean
+/// rejection: the caller (usually [`ProgramCache`]) falls back to
+/// re-lowering; nothing panics and the mapped region is never interpreted
+/// past a failed validation.
+#[derive(Debug)]
+pub enum ArtifactError {
+    /// Filesystem error opening/reading/writing the artifact.
+    Io(io::Error),
+    /// The file does not start with the artifact magic.
+    BadMagic,
+    /// Format version mismatch.
+    Version {
+        /// Version stamped in the file.
+        found: u32,
+        /// Version this build reads.
+        want: u32,
+    },
+    /// The file is shorter than its header claims.
+    Truncated {
+        /// Bytes the header (or fixed layout) requires.
+        want: u64,
+        /// Bytes actually present.
+        have: u64,
+    },
+    /// The body checksum does not match the header.
+    Checksum {
+        /// Checksum stamped in the header.
+        want: u64,
+        /// Checksum of the bytes on disk.
+        have: u64,
+    },
+    /// The artifact needs wider SIMD lanes than this host's ceiling for
+    /// the stored options (an `Auto`-lowered artifact from a wider CPU).
+    CpuMismatch {
+        /// Widest lane width any blocked kernel in the artifact uses.
+        required_lanes: u32,
+        /// The lane ceiling the loading host resolves.
+        ceiling: u32,
+    },
+    /// Structurally invalid meta/blob contents (bad tag, range out of
+    /// bounds, unknown label, misaligned panel, …).
+    Corrupt(String),
+}
+
+impl fmt::Display for ArtifactError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ArtifactError::Io(e) => write!(f, "artifact io: {e}"),
+            ArtifactError::BadMagic => write!(f, "not a compiled-nn artifact (bad magic)"),
+            ArtifactError::Version { found, want } => {
+                write!(f, "artifact format v{found}, this build reads v{want}")
+            }
+            ArtifactError::Truncated { want, have } => {
+                write!(f, "artifact truncated: need {want} bytes, have {have}")
+            }
+            ArtifactError::Checksum { want, have } => {
+                write!(f, "artifact checksum mismatch: header {want:#018x}, body {have:#018x}")
+            }
+            ArtifactError::CpuMismatch { required_lanes, ceiling } => write!(
+                f,
+                "artifact needs {required_lanes}-lane kernels but this host's ceiling is \
+                 {ceiling} for the stored options"
+            ),
+            ArtifactError::Corrupt(why) => write!(f, "artifact corrupt: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ArtifactError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ArtifactError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for ArtifactError {
+    fn from(e: io::Error) -> Self {
+        ArtifactError::Io(e)
+    }
+}
+
+/// Shorthand for a [`ArtifactError::Corrupt`] failure.
+pub(crate) fn corrupt(why: impl Into<String>) -> ArtifactError {
+    ArtifactError::Corrupt(why.into())
+}
+
+// ------------------------------------------------------------------ hashing
+
+/// Incremental FNV-1a 64 (the repo's offline-build hash of choice).
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn write_u64(&mut self, v: u64) {
+        self.write(&v.to_ne_bytes());
+    }
+
+    /// Length-prefixed string, so `("ab","c")` ≠ `("a","bc")`.
+    fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.write(s.as_bytes());
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv::new();
+    h.write(bytes);
+    h.finish()
+}
+
+/// Content hash of a model spec: graph structure, hyper-parameters and the
+/// raw f32 weight bits. Two specs hash equal iff lowering them under equal
+/// options yields interchangeable programs — the spec half of the cache key.
+pub fn spec_content_hash(spec: &ModelSpec) -> u64 {
+    let mut h = Fnv::new();
+    h.write_str(&spec.name);
+    h.write_u64(spec.input_shape.len() as u64);
+    for &d in &spec.input_shape {
+        h.write_u64(d as u64);
+    }
+    h.write_u64(spec.seed);
+    h.write_u64(spec.layers.len() as u64);
+    for l in &spec.layers {
+        h.write_str(&l.name);
+        // the op's hyper-parameters via its canonical Debug form
+        h.write_str(&format!("{:?}", l.op));
+        h.write_u64(l.inputs.len() as u64);
+        for i in &l.inputs {
+            h.write_str(i);
+        }
+        h.write_u64(l.weights.len() as u64);
+        for (k, w) in &l.weights {
+            h.write_str(k);
+            h.write_u64(w.offset as u64);
+            h.write_u64(w.shape.len() as u64);
+            for &d in &w.shape {
+                h.write_u64(d as u64);
+            }
+        }
+        h.write_str(l.activation.name());
+        h.write_u64(l.post_scale as u64);
+    }
+    h.write_u64(spec.outputs.len() as u64);
+    for o in &spec.outputs {
+        h.write_str(o);
+    }
+    h.write_u64(spec.weights.len() as u64);
+    for &w in &spec.weights {
+        h.write(&w.to_bits().to_ne_bytes());
+    }
+    h.finish()
+}
+
+/// The host CPU feature bits stamped into artifact headers (diagnostic —
+/// validity is decided by the lane-width check, not by exact feature
+/// equality, because every lane width is a portable instantiation).
+pub fn feature_bits() -> u32 {
+    let f = cpu::Features::detect();
+    (f.avx2 as u32) | ((f.avx512f as u32) << 1)
+}
+
+// ------------------------------------------------------------------ mapping
+
+/// A read-only view of an artifact file: `mmap(2)` on unix (libc declared
+/// by hand, in the spirit of `coordinator/poll.rs`), a heap read on other
+/// targets or when the map fails. [`PanelStore::Mapped`] slices borrow
+/// straight out of this, which is what makes artifact loads zero-copy for
+/// the weight panels.
+pub struct Mapping {
+    ptr: *const u8,
+    len: usize,
+    backing: Backing,
+}
+
+enum Backing {
+    /// A live `mmap` region; unmapped on drop.
+    #[cfg(unix)]
+    Mmap,
+    /// Heap fallback: the file copied into an 8-byte-aligned buffer
+    /// (`ptr` points into it; a `Vec`'s heap allocation never moves).
+    Heap(#[allow(dead_code)] Vec<u64>),
+}
+
+// SAFETY: the region is read-only for the mapping's whole lifetime (mapped
+// PROT_READ/MAP_PRIVATE, or a heap buffer nothing mutates after open).
+unsafe impl Send for Mapping {}
+unsafe impl Sync for Mapping {}
+
+impl Mapping {
+    /// Map `path` read-only (heap fallback on non-unix or mmap failure).
+    pub fn open(path: &Path) -> io::Result<Mapping> {
+        let mut file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "artifact too large"));
+        }
+        let len = len as usize;
+        #[cfg(unix)]
+        if len > 0 {
+            if let Some(ptr) = sys::map_readonly(&file, len) {
+                return Ok(Mapping { ptr, len, backing: Backing::Mmap });
+            }
+        }
+        // Fallback: copy into a u64 buffer so the base stays 8-byte
+        // aligned (enough for every panel element type).
+        let mut buf: Vec<u64> = vec![0; len.div_ceil(8)];
+        {
+            use std::io::Read;
+            // SAFETY: the u64 buffer owns at least `len` initialized bytes.
+            let bytes =
+                unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+            file.read_exact(bytes)?;
+        }
+        let ptr = buf.as_ptr() as *const u8;
+        Ok(Mapping { ptr, len, backing: Backing::Heap(buf) })
+    }
+
+    /// Mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True for a zero-length mapping.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The whole mapped file as a byte slice.
+    pub fn bytes(&self) -> &[u8] {
+        // SAFETY: `ptr` covers `len` readable bytes for `self`'s lifetime.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for Mapping {
+    fn drop(&mut self) {
+        match self.backing {
+            #[cfg(unix)]
+            Backing::Mmap => sys::unmap(self.ptr, self.len),
+            Backing::Heap(_) => {}
+        }
+    }
+}
+
+#[cfg(unix)]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: c_int = 0x1;
+    const MAP_PRIVATE: c_int = 0x2;
+
+    #[cfg(target_os = "linux")]
+    type Off = i64;
+    #[cfg(not(target_os = "linux"))]
+    type Off = i64; // off_t is 64-bit on every modern unix this builds on
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: Off,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, length: usize) -> c_int;
+    }
+
+    /// `mmap` the first `len` bytes of `file` read-only; `None` on failure
+    /// (the caller falls back to a heap read).
+    pub fn map_readonly(file: &std::fs::File, len: usize) -> Option<*const u8> {
+        // SAFETY: len > 0 (checked by caller), fd is a live open file; a
+        // PROT_READ/MAP_PRIVATE mapping has no aliasing hazards.
+        let p = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if p as usize == usize::MAX {
+            None // MAP_FAILED
+        } else {
+            Some(p as *const u8)
+        }
+    }
+
+    /// Unmap a region obtained from [`map_readonly`].
+    pub fn unmap(ptr: *const u8, len: usize) {
+        // SAFETY: (ptr, len) is exactly what mmap returned; errors are
+        // unobservable at drop time and the region is gone either way.
+        unsafe {
+            let _ = munmap(ptr as *mut c_void, len);
+        }
+    }
+}
+
+// --------------------------------------------------------------- PanelStore
+
+/// Backing storage for packed weight panels: either an owned `Vec` (fresh
+/// lowering) or a zero-copy window into a mapped artifact. Kernels only
+/// ever see `&[T]` through `Deref`, so the hot path is identical either
+/// way; cloning a mapped store is an `Arc` bump, not a copy.
+pub enum PanelStore<T: Copy + 'static> {
+    /// Panels owned in heap memory (the fresh-lowering path).
+    Owned(Vec<T>),
+    /// Panels borrowed out of a mapped artifact file.
+    Mapped {
+        /// The artifact mapping the slice lives in (keeps it alive).
+        map: Arc<Mapping>,
+        /// Byte offset of the first element within the mapping.
+        byte_off: usize,
+        /// Element count.
+        len: usize,
+    },
+}
+
+impl<T: Copy + 'static> PanelStore<T> {
+    /// A validated zero-copy window: bounds and element alignment are
+    /// checked here, once, so `Deref` can be unconditional.
+    pub(crate) fn mapped(
+        map: Arc<Mapping>,
+        byte_off: usize,
+        len: usize,
+    ) -> Result<PanelStore<T>, ArtifactError> {
+        let size = std::mem::size_of::<T>();
+        let byte_len =
+            len.checked_mul(size).ok_or_else(|| corrupt("panel length overflows"))?;
+        let end = byte_off
+            .checked_add(byte_len)
+            .ok_or_else(|| corrupt("panel offset overflows"))?;
+        if end > map.len() {
+            return Err(corrupt(format!(
+                "panel [{byte_off}, {end}) exceeds mapping of {} bytes",
+                map.len()
+            )));
+        }
+        if (map.ptr as usize + byte_off) % std::mem::align_of::<T>() != 0 {
+            return Err(corrupt("panel misaligned for its element type"));
+        }
+        Ok(PanelStore::Mapped { map, byte_off, len })
+    }
+}
+
+impl<T: Copy + 'static> Deref for PanelStore<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        match self {
+            PanelStore::Owned(v) => v,
+            PanelStore::Mapped { map, byte_off, len } => {
+                // SAFETY: bounds and alignment validated at construction;
+                // the mapping is read-only and outlives the slice via Arc;
+                // panel element types (f32/u16/i8) accept any bit pattern.
+                unsafe {
+                    std::slice::from_raw_parts(map.ptr.add(*byte_off) as *const T, *len)
+                }
+            }
+        }
+    }
+}
+
+impl<T: Copy + 'static> Clone for PanelStore<T> {
+    fn clone(&self) -> Self {
+        match self {
+            PanelStore::Owned(v) => PanelStore::Owned(v.clone()),
+            PanelStore::Mapped { map, byte_off, len } => {
+                PanelStore::Mapped { map: map.clone(), byte_off: *byte_off, len: *len }
+            }
+        }
+    }
+}
+
+impl<T: Copy + 'static> From<Vec<T>> for PanelStore<T> {
+    fn from(v: Vec<T>) -> Self {
+        PanelStore::Owned(v)
+    }
+}
+
+// ------------------------------------------------------------------ encoder
+
+/// Byte-sink the serializer writes into: `meta` holds the kernel/decision
+/// table (small, copied at load), `blob` holds the 64-byte-aligned weight
+/// panels (mapped zero-copy at load). All multi-byte values host-native.
+#[derive(Default)]
+pub struct Encoder {
+    pub(crate) meta: Vec<u8>,
+    pub(crate) blob: Vec<u8>,
+}
+
+impl Encoder {
+    pub(crate) fn new() -> Encoder {
+        Encoder::default()
+    }
+
+    pub(crate) fn u8(&mut self, v: u8) {
+        self.meta.push(v);
+    }
+
+    pub(crate) fn bool(&mut self, v: bool) {
+        self.meta.push(v as u8);
+    }
+
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.meta.extend_from_slice(&v.to_ne_bytes());
+    }
+
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.meta.extend_from_slice(&v.to_ne_bytes());
+    }
+
+    pub(crate) fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+
+    pub(crate) fn f64(&mut self, v: f64) {
+        self.meta.extend_from_slice(&v.to_ne_bytes());
+    }
+
+    pub(crate) fn str(&mut self, s: &str) {
+        self.usize(s.len());
+        self.meta.extend_from_slice(s.as_bytes());
+    }
+
+    /// A small f32 vector stored inline in the meta table (biases, BN
+    /// scale/shift, dense tails — everything that is not a packed panel).
+    pub(crate) fn vec_f32(&mut self, v: &[f32]) {
+        self.usize(v.len());
+        // SAFETY: an f32 slice is plain bytes; format is host-native.
+        let bytes =
+            unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) };
+        self.meta.extend_from_slice(bytes);
+    }
+
+    pub(crate) fn opt_vec_f32(&mut self, v: Option<&[f32]>) {
+        match v {
+            None => self.bool(false),
+            Some(v) => {
+                self.bool(true);
+                self.vec_f32(v);
+            }
+        }
+    }
+
+    pub(crate) fn vec_usize(&mut self, v: &[usize]) {
+        self.usize(v.len());
+        for &x in v {
+            self.usize(x);
+        }
+    }
+
+    /// Append a panel array to the 64-byte-aligned blob and record its
+    /// (offset, element count) in the meta table.
+    pub(crate) fn blob_of<T: Copy>(&mut self, data: &[T]) {
+        while self.blob.len() % BLOB_ALIGN != 0 {
+            self.blob.push(0);
+        }
+        let off = self.blob.len();
+        let size = std::mem::size_of_val(data);
+        // SAFETY: panel element types are plain bytes; host-native format.
+        let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, size) };
+        self.blob.extend_from_slice(bytes);
+        self.usize(off);
+        self.usize(data.len());
+    }
+}
+
+// ------------------------------------------------------------------ decoder
+
+/// Bounds-checked reader over a mapped artifact: a cursor through the meta
+/// window plus the blob window panels are handed out of. Every read that
+/// would cross a boundary returns [`ArtifactError::Corrupt`] — the decoder
+/// never trusts a length field it has not ranged-checked.
+pub struct Decoder {
+    map: Arc<Mapping>,
+    pos: usize,
+    meta_end: usize,
+    blob_start: usize,
+    blob_len: usize,
+}
+
+impl Decoder {
+    fn take(&mut self, n: usize) -> Result<&[u8], ArtifactError> {
+        let end = self.pos.checked_add(n).ok_or_else(|| corrupt("meta cursor overflow"))?;
+        if end > self.meta_end {
+            return Err(corrupt("meta table truncated"));
+        }
+        let s = &self.map.bytes()[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8, ArtifactError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn bool(&mut self) -> Result<bool, ArtifactError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(corrupt(format!("invalid bool byte {b}"))),
+        }
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32, ArtifactError> {
+        let b = self.take(4)?;
+        Ok(u32::from_ne_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64, ArtifactError> {
+        let b = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_ne_bytes(a))
+    }
+
+    pub(crate) fn usize(&mut self) -> Result<usize, ArtifactError> {
+        let v = self.u64()?;
+        usize::try_from(v).map_err(|_| corrupt("length exceeds usize"))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64, ArtifactError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn string(&mut self) -> Result<String, ArtifactError> {
+        let n = self.usize()?;
+        let b = self.take(n)?;
+        String::from_utf8(b.to_vec()).map_err(|_| corrupt("non-utf8 string"))
+    }
+
+    pub(crate) fn vec_f32(&mut self) -> Result<Vec<f32>, ArtifactError> {
+        let n = self.usize()?;
+        let nbytes = n.checked_mul(4).ok_or_else(|| corrupt("f32 vec overflow"))?;
+        let b = self.take(nbytes)?;
+        Ok(b.chunks_exact(4)
+            .map(|c| f32::from_ne_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub(crate) fn opt_vec_f32(&mut self) -> Result<Option<Vec<f32>>, ArtifactError> {
+        if self.bool()? {
+            Ok(Some(self.vec_f32()?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    pub(crate) fn vec_usize(&mut self) -> Result<Vec<usize>, ArtifactError> {
+        let n = self.usize()?;
+        if n > self.meta_end.saturating_sub(self.pos) / 8 {
+            return Err(corrupt("usize vec longer than remaining meta"));
+        }
+        (0..n).map(|_| self.usize()).collect()
+    }
+
+    /// The zero-copy counterpart of [`Encoder::blob_of`]: read an (offset,
+    /// element count) pair and hand back a validated window into the blob.
+    pub(crate) fn blob_store<T: Copy + 'static>(
+        &mut self,
+    ) -> Result<PanelStore<T>, ArtifactError> {
+        let off = self.usize()?;
+        let len = self.usize()?;
+        let byte_len = len
+            .checked_mul(std::mem::size_of::<T>())
+            .ok_or_else(|| corrupt("blob window overflows"))?;
+        let end = off.checked_add(byte_len).ok_or_else(|| corrupt("blob window overflows"))?;
+        if end > self.blob_len {
+            return Err(corrupt(format!(
+                "blob window [{off}, {end}) exceeds blob of {} bytes",
+                self.blob_len
+            )));
+        }
+        PanelStore::mapped(self.map.clone(), self.blob_start + off, len)
+    }
+}
+
+// ------------------------------------------------------------- save / load
+
+fn align_up(n: usize, a: usize) -> usize {
+    n.div_ceil(a) * a
+}
+
+/// Everything the artifact header records about a saved program — returned
+/// by [`load_program`] for cache validation and `compiled-nn inspect`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArtifactInfo {
+    /// Format version stamped in the file.
+    pub version: u32,
+    /// [`spec_content_hash`] of the spec the program was lowered from.
+    pub spec_hash: u64,
+    /// CPU feature bits of the machine that saved the artifact.
+    pub features: u32,
+    /// Widest SIMD lane width any blocked kernel in the program uses.
+    pub required_lanes: u32,
+    /// The `CompileOptions` the program was lowered under.
+    pub options: CompileOptions,
+    /// Meta-table bytes (kernel/decision table).
+    pub meta_bytes: u64,
+    /// Weight-panel blob bytes (the zero-copy region).
+    pub blob_bytes: u64,
+    /// Whole-file length in bytes.
+    pub total_bytes: u64,
+}
+
+/// Serialize a lowered program to `path` (atomic: written to a sibling
+/// temp file, then renamed into place). `spec_hash` must be the
+/// [`spec_content_hash`] of the spec `program` was lowered from and `opts`
+/// the options it was lowered under — both land in the header and gate
+/// future loads.
+pub fn save_program(
+    program: &Program,
+    spec_hash: u64,
+    opts: CompileOptions,
+    path: &Path,
+) -> Result<(), ArtifactError> {
+    let mut e = Encoder::new();
+    program.encode_body(&mut e);
+    let Encoder { meta, blob } = e;
+    let blob_off = align_up(HEADER_LEN + meta.len(), BLOB_ALIGN);
+    let total = blob_off + blob.len();
+
+    let mut out = Vec::with_capacity(total);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&FORMAT_VERSION.to_ne_bytes());
+    out.extend_from_slice(&0u32.to_ne_bytes()); // reserved
+    out.extend_from_slice(&0u64.to_ne_bytes()); // checksum, stamped below
+    out.extend_from_slice(&(total as u64).to_ne_bytes());
+    out.extend_from_slice(&spec_hash.to_ne_bytes());
+    out.extend_from_slice(&feature_bits().to_ne_bytes());
+    out.extend_from_slice(&(program.summary().lane_width as u32).to_ne_bytes());
+    out.extend_from_slice(&opts.canonical_bytes());
+    out.extend_from_slice(&(meta.len() as u64).to_ne_bytes());
+    out.extend_from_slice(&(blob_off as u64).to_ne_bytes());
+    out.extend_from_slice(&(blob.len() as u64).to_ne_bytes());
+    debug_assert_eq!(out.len(), HEADER_LEN);
+    out.extend_from_slice(&meta);
+    out.resize(blob_off, 0);
+    out.extend_from_slice(&blob);
+
+    let sum = fnv64(&out[24..]);
+    out[16..24].copy_from_slice(&sum.to_ne_bytes());
+
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, &out)?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(ArtifactError::Io(e));
+    }
+    Ok(())
+}
+
+/// Load a program from an artifact file: validate the header (magic,
+/// version, length, checksum, CPU lane ceiling), then decode the kernel
+/// table with weight panels borrowed zero-copy out of the mapping. The
+/// loaded program's `compile_ms` is the load wall time — the number the
+/// cold-start bench compares against a fresh lowering.
+pub fn load_program(path: &Path) -> Result<(Program, ArtifactInfo), ArtifactError> {
+    let t0 = Instant::now();
+    let map = Arc::new(Mapping::open(path)?);
+    let b = map.bytes();
+    if b.len() < HEADER_LEN {
+        return Err(ArtifactError::Truncated { want: HEADER_LEN as u64, have: b.len() as u64 });
+    }
+    if &b[0..8] != MAGIC {
+        return Err(ArtifactError::BadMagic);
+    }
+    let rd_u32 = |off: usize| u32::from_ne_bytes(b[off..off + 4].try_into().expect("4 bytes"));
+    let rd_u64 = |off: usize| u64::from_ne_bytes(b[off..off + 8].try_into().expect("8 bytes"));
+    let version = rd_u32(8);
+    if version != FORMAT_VERSION {
+        return Err(ArtifactError::Version { found: version, want: FORMAT_VERSION });
+    }
+    let total = rd_u64(24);
+    if total > b.len() as u64 {
+        return Err(ArtifactError::Truncated { want: total, have: b.len() as u64 });
+    }
+    if total < HEADER_LEN as u64 {
+        return Err(corrupt("total_len shorter than the header"));
+    }
+    let want_sum = rd_u64(16);
+    let have_sum = fnv64(&b[24..total as usize]);
+    if want_sum != have_sum {
+        return Err(ArtifactError::Checksum { want: want_sum, have: have_sum });
+    }
+    let spec_hash = rd_u64(32);
+    let features = rd_u32(40);
+    let required_lanes = rd_u32(44);
+    let mut opt_bytes = [0u8; 32];
+    opt_bytes.copy_from_slice(&b[48..80]);
+    let options = CompileOptions::from_canonical_bytes(&opt_bytes)
+        .ok_or_else(|| corrupt("invalid CompileOptions encoding"))?;
+    // The lane ceiling is evaluated on the *loading* host: explicitly
+    // forced widths are portable (kernels are generic instantiations) and
+    // always pass; Auto-lowered artifacts from a wider machine fail here.
+    let ceiling = options.max_lanes() as u32;
+    if required_lanes > ceiling {
+        return Err(ArtifactError::CpuMismatch { required_lanes, ceiling });
+    }
+    let meta_len = rd_u64(80) as usize;
+    let blob_off = rd_u64(88) as usize;
+    let blob_len = rd_u64(96) as usize;
+    let meta_end = HEADER_LEN
+        .checked_add(meta_len)
+        .ok_or_else(|| corrupt("meta length overflows"))?;
+    let blob_end = blob_off.checked_add(blob_len).ok_or_else(|| corrupt("blob overflows"))?;
+    if meta_end > blob_off || blob_off % BLOB_ALIGN != 0 || blob_end as u64 != total {
+        return Err(corrupt("meta/blob windows inconsistent with total_len"));
+    }
+    let mut d = Decoder {
+        map: map.clone(),
+        pos: HEADER_LEN,
+        meta_end,
+        blob_start: blob_off,
+        blob_len,
+    };
+    let mut program = Program::decode_body(&mut d)?;
+    program.set_compile_ms(t0.elapsed().as_secs_f64() * 1e3);
+    let info = ArtifactInfo {
+        version,
+        spec_hash,
+        features,
+        required_lanes,
+        options,
+        meta_bytes: meta_len as u64,
+        blob_bytes: blob_len as u64,
+        total_bytes: total,
+    };
+    Ok((program, info))
+}
+
+// -------------------------------------------------------------------- cache
+
+/// Cache hit/miss/invalidation counts, as surfaced in `ModelMetrics` and
+/// `compiled-nn explain`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheCounters {
+    /// Lowerings skipped because a valid artifact loaded.
+    pub hits: u64,
+    /// Lowerings that ran because no artifact existed yet.
+    pub misses: u64,
+    /// Artifacts rejected (version/feature/hash/options mismatch or any
+    /// load error) and silently replaced by a re-lowering.
+    pub invalidated: u64,
+}
+
+/// The on-disk program cache: keyed by (spec content hash, canonical
+/// `CompileOptions`, lane ceiling, CPU feature bits), one artifact file per
+/// key, atomic tmp+rename writes, silent re-lower on any mismatch. With no
+/// directory configured every call is a plain [`Program::lower`] and no
+/// counter moves.
+pub struct ProgramCache {
+    dir: Option<PathBuf>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    invalidated: AtomicU64,
+}
+
+static GLOBAL_CACHE: OnceLock<ProgramCache> = OnceLock::new();
+
+impl ProgramCache {
+    /// A cache with no backing directory: `lower_or_load` always lowers.
+    pub fn disabled() -> ProgramCache {
+        ProgramCache {
+            dir: None,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            invalidated: AtomicU64::new(0),
+        }
+    }
+
+    /// A cache over `dir` (created on first save).
+    pub fn with_dir(dir: PathBuf) -> ProgramCache {
+        ProgramCache { dir: Some(dir), ..ProgramCache::disabled() }
+    }
+
+    /// The process-wide cache, configured from `COMPILED_NN_CACHE_DIR` at
+    /// first use (the `cache_dir` serving-config key exports that same
+    /// variable before the coordinator starts). Unset/empty → disabled.
+    pub fn global() -> &'static ProgramCache {
+        GLOBAL_CACHE.get_or_init(|| match std::env::var("COMPILED_NN_CACHE_DIR") {
+            Ok(d) if !d.is_empty() => ProgramCache::with_dir(PathBuf::from(d)),
+            _ => ProgramCache::disabled(),
+        })
+    }
+
+    /// The backing directory, if caching is enabled.
+    pub fn dir(&self) -> Option<&Path> {
+        self.dir.as_deref()
+    }
+
+    /// Snapshot of the hit/miss/invalidation counters.
+    pub fn counters(&self) -> CacheCounters {
+        CacheCounters {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            invalidated: self.invalidated.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The artifact path for a (spec, options) pair under this cache's key
+    /// scheme, or `None` when caching is disabled.
+    pub fn key_path(&self, spec: &ModelSpec, opts: CompileOptions) -> Option<PathBuf> {
+        let dir = self.dir.as_ref()?;
+        let mut h = Fnv::new();
+        h.write_u64(spec_content_hash(spec));
+        h.write(&opts.canonical_bytes());
+        h.write_u64(opts.max_lanes() as u64);
+        h.write_u64(feature_bits() as u64);
+        let key = h.finish();
+        // model name kept for debuggability; key carries the semantics
+        let name: String = spec
+            .name
+            .chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' { c } else { '_' })
+            .take(48)
+            .collect();
+        Some(dir.join(format!("{name}-{key:016x}.cnnprog")))
+    }
+
+    /// Load the cached artifact for (spec, opts) if a valid one exists,
+    /// else lower and (best-effort) persist the result. This is the hook
+    /// `OptInterp::new` sits on, so the coordinator's register and
+    /// hot-swap paths consult the cache without knowing it exists.
+    pub fn lower_or_load(
+        &self,
+        spec: &ModelSpec,
+        opts: CompileOptions,
+    ) -> anyhow::Result<Program> {
+        let Some(path) = self.key_path(spec, opts) else {
+            return Program::lower(spec, opts);
+        };
+        let spec_hash = spec_content_hash(spec);
+        if path.exists() {
+            match load_program(&path) {
+                Ok((program, info))
+                    if info.spec_hash == spec_hash && info.options == opts =>
+                {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(program);
+                }
+                // key collision / stale header / any structured load error:
+                // drop the entry and fall through to a fresh lowering
+                Ok(_) | Err(_) => {
+                    self.invalidated.fetch_add(1, Ordering::Relaxed);
+                    let _ = std::fs::remove_file(&path);
+                }
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let program = Program::lower(spec, opts)?;
+        // persistence is best-effort: a read-only cache dir must never
+        // fail an inference path
+        let _ = save_program(&program, spec_hash, opts, &path);
+        Ok(program)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::program::{LaneSelect, TuneMode};
+    use crate::model::builder::{tiny_cnn, wide_cnn};
+    use crate::nn::simd::WeightDtype;
+    use crate::nn::tensor::Tensor;
+    use crate::util::rng::SplitMix64;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "compiled-nn-artifact-test-{}-{tag}.cnnprog",
+            std::process::id()
+        ))
+    }
+
+    fn save_tiny(tag: &str, opts: CompileOptions) -> (PathBuf, Program, u64) {
+        let spec = tiny_cnn(41);
+        let program = Program::lower(&spec, opts).unwrap();
+        let hash = spec_content_hash(&spec);
+        let path = tmp_path(tag);
+        save_program(&program, hash, opts, &path).unwrap();
+        (path, program, hash)
+    }
+
+    fn infer_once(p: &Program, seed: u64) -> Vec<Tensor> {
+        let mut rng = SplitMix64::new(seed);
+        let x = Tensor::from_vec(&[2, 8, 8, 3], rng.uniform_vec(2 * 8 * 8 * 3));
+        let mut pool = crate::compiler::program::ArenaPool::new();
+        p.infer_pooled(&x, &mut pool).unwrap()
+    }
+
+    /// Re-stamp the body checksum after a test patches header-covered
+    /// bytes, so the patched field (not the checksum) is what rejects.
+    fn restamp(bytes: &mut [u8]) {
+        let sum = fnv64(&bytes[24..]);
+        bytes[16..24].copy_from_slice(&sum.to_ne_bytes());
+    }
+
+    #[test]
+    fn round_trip_is_bitwise_identical() {
+        let opts = CompileOptions::default();
+        let (path, fresh, hash) = save_tiny("roundtrip", opts);
+        let (loaded, info) = load_program(&path).unwrap();
+        assert_eq!(info.spec_hash, hash);
+        assert_eq!(info.options, opts);
+        assert_eq!(info.version, FORMAT_VERSION);
+        let a = infer_once(&fresh, 7);
+        let b = infer_once(&loaded, 7);
+        assert_eq!(a[0].data(), b[0].data(), "artifact-loaded program must be bit-identical");
+        assert_eq!(fresh.summary().lane_width, loaded.summary().lane_width);
+        assert_eq!(
+            fresh.summary().report.decisions.len(),
+            loaded.summary().report.decisions.len()
+        );
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn quantized_round_trip_is_bitwise_identical() {
+        let opts =
+            CompileOptions { weight_dtype: WeightDtype::I8, ..CompileOptions::default() };
+        let (path, fresh, _) = save_tiny("roundtrip-i8", opts);
+        let (loaded, info) = load_program(&path).unwrap();
+        assert_eq!(info.options.weight_dtype, WeightDtype::I8);
+        assert!(loaded.summary().quantized_layers > 0);
+        let a = infer_once(&fresh, 9);
+        let b = infer_once(&loaded, 9);
+        assert_eq!(a[0].data(), b[0].data());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn truncated_artifact_is_rejected_cleanly() {
+        let (path, _, _) = save_tiny("trunc", CompileOptions::default());
+        let bytes = std::fs::read(&path).unwrap();
+        for keep in [0usize, 10, HEADER_LEN - 1, HEADER_LEN + 5, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..keep]).unwrap();
+            let err = load_program(&path).unwrap_err();
+            assert!(
+                matches!(
+                    err,
+                    ArtifactError::Truncated { .. }
+                        | ArtifactError::BadMagic
+                        | ArtifactError::Checksum { .. }
+                        | ArtifactError::Corrupt(_)
+                ),
+                "keep={keep}: {err}"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn bit_flips_fail_the_checksum() {
+        let (path, _, _) = save_tiny("flip", CompileOptions::default());
+        let bytes = std::fs::read(&path).unwrap();
+        // flip one bit in the meta table and one deep in the blob
+        for off in [HEADER_LEN + 3, bytes.len() - 5] {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x40;
+            std::fs::write(&path, &bad).unwrap();
+            let err = load_program(&path).unwrap_err();
+            assert!(matches!(err, ArtifactError::Checksum { .. }), "off={off}: {err}");
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wrong_version_and_magic_are_structured_errors() {
+        let (path, _, _) = save_tiny("ver", CompileOptions::default());
+        let bytes = std::fs::read(&path).unwrap();
+
+        let mut bad = bytes.clone();
+        bad[8] = 99; // version is outside the checksum window
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(
+            load_program(&path).unwrap_err(),
+            ArtifactError::Version { found: 99, want: FORMAT_VERSION }
+        ));
+
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(load_program(&path).unwrap_err(), ArtifactError::BadMagic));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn wider_lane_requirement_is_a_cpu_mismatch() {
+        // An Auto-lowered artifact claiming 64-lane kernels can never pass
+        // any host's ceiling; the header field is checksummed, so restamp.
+        let (path, _, _) = save_tiny("cpu", CompileOptions::default());
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[44..48].copy_from_slice(&64u32.to_ne_bytes());
+        restamp(&mut bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(matches!(
+            load_program(&path).unwrap_err(),
+            ArtifactError::CpuMismatch { required_lanes: 64, .. }
+        ));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn forced_width_artifacts_load_under_any_ceiling() {
+        // lanes pinned to W8: the ceiling is 8 on every host (portable
+        // kernels), so the artifact loads regardless of detected features
+        let opts = CompileOptions { lanes: LaneSelect::W8, ..CompileOptions::default() };
+        let (path, fresh, _) = save_tiny("w8", opts);
+        let (loaded, info) = load_program(&path).unwrap();
+        assert!(info.required_lanes <= 8);
+        assert_eq!(infer_once(&fresh, 3)[0].data(), infer_once(&loaded, 3)[0].data());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn cache_hits_misses_and_invalidations_are_counted() {
+        let dir = std::env::temp_dir()
+            .join(format!("compiled-nn-cache-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = ProgramCache::with_dir(dir.clone());
+        let spec = tiny_cnn(42);
+        let opts = CompileOptions::default();
+
+        let before = crate::compiler::program::lower_count();
+        let p1 = cache.lower_or_load(&spec, opts).unwrap();
+        assert_eq!(cache.counters(), CacheCounters { hits: 0, misses: 1, invalidated: 0 });
+        assert_eq!(crate::compiler::program::lower_count(), before + 1);
+
+        // second build: artifact load, zero additional lowerings
+        let p2 = cache.lower_or_load(&spec, opts).unwrap();
+        assert_eq!(cache.counters().hits, 1);
+        assert_eq!(crate::compiler::program::lower_count(), before + 1);
+        assert_eq!(infer_once(&p1, 5)[0].data(), infer_once(&p2, 5)[0].data());
+
+        // different options → a different key, not an invalidation
+        let other =
+            CompileOptions { weight_dtype: WeightDtype::Bf16, ..CompileOptions::default() };
+        cache.lower_or_load(&spec, other).unwrap();
+        assert_eq!(cache.counters(), CacheCounters { hits: 1, misses: 2, invalidated: 0 });
+
+        // corrupt the entry on disk: silent re-lower + invalidation count
+        let path = cache.key_path(&spec, opts).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let p3 = cache.lower_or_load(&spec, opts).unwrap();
+        let c = cache.counters();
+        assert_eq!((c.hits, c.misses, c.invalidated), (1, 3, 1));
+        assert_eq!(infer_once(&p1, 5)[0].data(), infer_once(&p3, 5)[0].data());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disabled_cache_lowers_without_touching_counters() {
+        let cache = ProgramCache::disabled();
+        let spec = tiny_cnn(43);
+        cache.lower_or_load(&spec, CompileOptions::default()).unwrap();
+        assert_eq!(cache.counters(), CacheCounters::default());
+        assert!(cache.key_path(&spec, CompileOptions::default()).is_none());
+    }
+
+    #[test]
+    fn spec_hash_tracks_weights_and_structure() {
+        let a = tiny_cnn(44);
+        let b = tiny_cnn(44);
+        assert_eq!(spec_content_hash(&a), spec_content_hash(&b));
+        let c = tiny_cnn(45); // different seed → different weights
+        assert_ne!(spec_content_hash(&a), spec_content_hash(&c));
+        let w = wide_cnn(44);
+        assert_ne!(spec_content_hash(&a), spec_content_hash(&w));
+        let mut d = tiny_cnn(44);
+        d.weights[0] += 1.0;
+        assert_ne!(spec_content_hash(&a), spec_content_hash(&d));
+    }
+
+    #[test]
+    fn canonical_options_round_trip() {
+        for opts in [
+            CompileOptions::default(),
+            CompileOptions::bit_exact(),
+            CompileOptions {
+                weight_dtype: WeightDtype::I8,
+                lanes: LaneSelect::W8,
+                intra_threads: 4,
+                batch_hint: 8,
+                tune: TuneMode::Measured { reps: 17 },
+                ..CompileOptions::default()
+            },
+        ] {
+            let bytes = opts.canonical_bytes();
+            assert_eq!(CompileOptions::from_canonical_bytes(&bytes), Some(opts));
+        }
+        // garbage discriminants decode to None, not a panic
+        let mut bad = CompileOptions::default().canonical_bytes();
+        bad[3] = 200;
+        assert_eq!(CompileOptions::from_canonical_bytes(&bad), None);
+    }
+
+    #[test]
+    fn measured_tuning_round_trips_and_reports() {
+        let spec = wide_cnn(46);
+        let opts = CompileOptions {
+            tune: TuneMode::Measured { reps: 3 },
+            ..CompileOptions::default()
+        };
+        let program = Program::lower(&spec, opts).unwrap();
+        let decisions = &program.summary().report.decisions;
+        assert!(
+            decisions.iter().any(|d| d.measured_cycles.is_some()),
+            "measured tuning must record wall times"
+        );
+        let path = tmp_path("measured");
+        save_program(&program, spec_content_hash(&spec), opts, &path).unwrap();
+        let (loaded, info) = load_program(&path).unwrap();
+        assert_eq!(info.options.tune, TuneMode::Measured { reps: 3 });
+        let ld = &loaded.summary().report.decisions;
+        assert_eq!(decisions.len(), ld.len());
+        for (a, b) in decisions.iter().zip(ld) {
+            assert_eq!(a.measured_cycles.is_some(), b.measured_cycles.is_some());
+            assert_eq!(a.overturned, b.overturned);
+            assert_eq!(a.chosen, b.chosen);
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

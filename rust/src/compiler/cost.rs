@@ -197,6 +197,10 @@ pub enum DecisionReason {
     /// The model declined to price the layer (no legal candidates / zero
     /// work); lowering fell back to the geometry rule, then generic.
     Fallback,
+    /// `CompileOptions::tune` timed the top cost-model candidates on the
+    /// real machine and the empirical argmin won (which may differ from the
+    /// predicted pick — see [`LayerDecision::overturned`]).
+    Measured,
 }
 
 impl DecisionReason {
@@ -206,6 +210,7 @@ impl DecisionReason {
             DecisionReason::CostModel => "cost-model",
             DecisionReason::Forced => "forced",
             DecisionReason::Fallback => "fallback",
+            DecisionReason::Measured => "measured",
         }
     }
 }
@@ -241,6 +246,47 @@ pub struct LayerDecision {
     pub fused_pool: bool,
     /// The layer itself emits no kernel (e.g. a max-pool fused upstream).
     pub elided: bool,
+    /// Wall-clock nanoseconds per item the *winning* candidate measured
+    /// when `CompileOptions::tune` timed candidates on the real machine
+    /// (`None` under predicted-only tuning).
+    pub measured_cycles: Option<f64>,
+    /// Measured tuning picked a different (scheme, lanes) than the cost
+    /// model's predicted argmin would have — the §3.3 model was wrong on
+    /// this machine for this layer.
+    pub overturned: bool,
+}
+
+/// Map a scheme/op label back to its `&'static str` — the inverse the
+/// artifact decoder needs to rebuild [`LayerDecision`]s (whose labels are
+/// interned statics) from serialized bytes. Returns `None` for strings no
+/// lowering ever emits, which the decoder treats as corruption.
+pub fn intern_label(s: &str) -> Option<&'static str> {
+    const KNOWN: &[&str] = &[
+        // conv/dense scheme labels
+        "direct",
+        "im2col",
+        "generic",
+        "gemm+rotated",
+        "gemm+broadcast",
+        "gemm+panels",
+        "fused-into-conv",
+        // LayerOp::name() values
+        "conv2d",
+        "depthwise_conv2d",
+        "dense",
+        "batchnorm",
+        "maxpool",
+        "avgpool",
+        "globalavgpool",
+        "upsample",
+        "zeropad",
+        "activation",
+        "softmax",
+        "add",
+        "concat",
+        "flatten",
+    ];
+    KNOWN.iter().find(|&&k| k == s).copied()
 }
 
 /// The explainable artifact of one `Program::lower` run: what was priced,
@@ -298,6 +344,9 @@ impl LoweringReport {
                 if d.weight_dtype != WeightDtype::F32 {
                     chosen.push_str(&format!(" {}", d.weight_dtype));
                 }
+                if d.overturned {
+                    chosen.push_str(" (overturned)");
+                }
             }
             s.push_str(&format!(
                 "{:<16} {:<12} {:<16} {:<10} {:>14.0}  {}\n",
@@ -348,6 +397,10 @@ impl LoweringReport {
                 m.insert("reason".into(), Json::Str(d.reason.label().into()));
                 m.insert("fused_pool".into(), Json::Bool(d.fused_pool));
                 m.insert("elided".into(), Json::Bool(d.elided));
+                if let Some(ns) = d.measured_cycles {
+                    m.insert("measured_ns".into(), Json::Num(ns));
+                }
+                m.insert("overturned".into(), Json::Bool(d.overturned));
                 let cands = d
                     .candidates
                     .iter()
@@ -899,24 +952,37 @@ mod tests {
                 predicted_cycles: 8640.0,
                 weight_dtype: WeightDtype::Bf16,
                 weights_bytes: 216,
-                reason: DecisionReason::CostModel,
+                reason: DecisionReason::Measured,
                 fused_pool: false,
                 elided: false,
+                measured_cycles: Some(1234.5),
+                overturned: true,
             }],
             arena_bytes: 1024,
             scratch_bytes: 432,
         };
         let t = report.render_table();
-        assert!(t.contains("conv1") && t.contains("cost-model"), "{t}");
+        assert!(t.contains("conv1") && t.contains("measured"), "{t}");
         assert!(t.contains("predicted total"), "{t}");
         assert!(t.contains("w4 bf16"), "narrow dtype must show in the table: {t}");
+        assert!(t.contains("(overturned)"), "{t}");
         let j = report.to_json().to_string();
         assert!(j.contains("\"decisions\"") && j.contains("\"im2col\""), "{j}");
         assert!(j.contains("\"lane_width\"") && j.contains("\"parallel_tasks\""), "{j}");
         assert!(j.contains("\"lanes\""), "{j}");
         assert!(j.contains("\"weight_dtype\"") && j.contains("\"bf16\""), "{j}");
         assert!(j.contains("\"weights_bytes\""), "{j}");
+        assert!(j.contains("\"measured_ns\"") && j.contains("\"overturned\""), "{j}");
         assert_eq!(report.predicted_total_cycles(), 8640.0);
+    }
+
+    #[test]
+    fn intern_label_round_trips_every_emitted_label() {
+        for s in ["direct", "im2col", "generic", "gemm+rotated", "gemm+broadcast",
+                  "gemm+panels", "fused-into-conv", "conv2d", "dense", "flatten"] {
+            assert_eq!(intern_label(s), Some(s), "{s}");
+        }
+        assert_eq!(intern_label("no-such-scheme"), None);
     }
 
     /// The PR 9 pricing lever: a narrow weight dtype shrinks the

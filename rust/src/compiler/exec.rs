@@ -16,8 +16,9 @@ use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
+use crate::compiler::artifact::ProgramCache;
 use crate::compiler::program::{ArenaPool, PlanSummary, Program};
-pub use crate::compiler::program::{CompileOptions, ConvScheme, DenseScheme, LaneSelect};
+pub use crate::compiler::program::{CompileOptions, ConvScheme, DenseScheme, LaneSelect, TuneMode};
 pub use crate::nn::simd::WeightDtype;
 use crate::engine::{Engine, SharedInfer, WorkerScratch};
 use crate::model::spec::ModelSpec;
@@ -31,9 +32,13 @@ pub struct OptInterp {
 }
 
 impl OptInterp {
-    /// Lower `spec` under `opts` and wrap the program for inference.
+    /// Lower `spec` under `opts` and wrap the program for inference. When
+    /// the persistent artifact cache is enabled (`COMPILED_NN_CACHE_DIR`),
+    /// a valid cached artifact is mmap-loaded instead of re-lowering —
+    /// cold-start then skips fold, plan, pack, and quantization entirely.
     pub fn new(spec: &ModelSpec, opts: CompileOptions) -> Result<Self> {
-        Ok(Self { program: Arc::new(Program::lower(spec, opts)?), pool: ArenaPool::new() })
+        let program = ProgramCache::global().lower_or_load(spec, opts)?;
+        Ok(Self { program: Arc::new(program), pool: ArenaPool::new() })
     }
 
     /// Wrap an already-lowered program.
@@ -207,6 +212,7 @@ mod tests {
                                             lanes: LaneSelect::Auto,
                                             intra_threads: 1,
                                             weight_dtype,
+                                            tune: TuneMode::Predicted,
                                         },
                                     )
                                     .unwrap();

@@ -22,6 +22,7 @@
 //! pinned by `nn::simd`'s bit-equality properties.
 
 use crate::approx;
+use crate::compiler::artifact::{corrupt, ArtifactError, Decoder, Encoder, PanelStore};
 use crate::model::spec::{same_pads, Activation, Padding};
 use crate::nn::simd;
 
@@ -192,17 +193,17 @@ impl<'a> Epilogue<'a> {
 pub enum WeightPanels {
     /// Full-precision panels — the default, and the only storage
     /// `bit_exact()` permits.
-    F32(Vec<f32>),
+    F32(PanelStore<f32>),
     /// bf16 panels (round-to-nearest-even at pack time), widened to f32 in
     /// the microkernel — half the weight bandwidth of `F32`.
-    Bf16(Vec<u16>),
+    Bf16(PanelStore<u16>),
     /// Post-training per-output-channel i8 quantization: `data ≈ w /
     /// scales[o]`, accumulated in f32 from a **zero** start and dequantized
     /// in the store loop (`acc * scales[o] + bias[o]`) before the
     /// activation — a quarter of the weight bandwidth of `F32`.
     I8 {
         /// Quantized panels in the shared layout.
-        data: Vec<i8>,
+        data: PanelStore<i8>,
         /// Per-output-channel dequantization scales (`len == oc`).
         scales: Vec<f32>,
     },
@@ -220,16 +221,16 @@ impl WeightPanels {
     ) -> WeightPanels {
         match dtype {
             simd::WeightDtype::F32 => {
-                WeightPanels::F32(simd::pack_conv_panels_any(kernel, taps, oc, lanes))
+                WeightPanels::F32(simd::pack_conv_panels_any(kernel, taps, oc, lanes).into())
             }
             simd::WeightDtype::Bf16 => {
                 let bf: Vec<u16> = kernel.iter().map(|&v| simd::f32_to_bf16(v)).collect();
-                WeightPanels::Bf16(simd::pack_conv_panels_any_e(&bf, taps, oc, lanes))
+                WeightPanels::Bf16(simd::pack_conv_panels_any_e(&bf, taps, oc, lanes).into())
             }
             simd::WeightDtype::I8 => {
                 let (q, scales) = simd::quantize_i8_per_channel(kernel, taps, oc);
                 WeightPanels::I8 {
-                    data: simd::pack_conv_panels_any_e(&q, taps, oc, lanes),
+                    data: simd::pack_conv_panels_any_e(&q, taps, oc, lanes).into(),
                     scales,
                 }
             }
@@ -245,17 +246,19 @@ impl WeightPanels {
         dtype: simd::WeightDtype,
     ) -> WeightPanels {
         match dtype {
-            simd::WeightDtype::F32 => {
-                WeightPanels::F32(simd::pack_dense_panels_any(kernel, in_dim, out_dim, lanes))
-            }
+            simd::WeightDtype::F32 => WeightPanels::F32(
+                simd::pack_dense_panels_any(kernel, in_dim, out_dim, lanes).into(),
+            ),
             simd::WeightDtype::Bf16 => {
                 let bf: Vec<u16> = kernel.iter().map(|&v| simd::f32_to_bf16(v)).collect();
-                WeightPanels::Bf16(simd::pack_dense_panels_any_e(&bf, in_dim, out_dim, lanes))
+                WeightPanels::Bf16(
+                    simd::pack_dense_panels_any_e(&bf, in_dim, out_dim, lanes).into(),
+                )
             }
             simd::WeightDtype::I8 => {
                 let (q, scales) = simd::quantize_i8_per_channel(kernel, in_dim, out_dim);
                 WeightPanels::I8 {
-                    data: simd::pack_dense_panels_any_e(&q, in_dim, out_dim, lanes),
+                    data: simd::pack_dense_panels_any_e(&q, in_dim, out_dim, lanes).into(),
                     scales,
                 }
             }
@@ -297,6 +300,41 @@ impl WeightPanels {
             WeightPanels::F32(p) => p.len(),
             WeightPanels::Bf16(p) => p.len(),
             WeightPanels::I8 { data, .. } => data.len(),
+        }
+    }
+
+    /// Serialize to an artifact: a dtype tag, the panel array appended to
+    /// the 64-byte-aligned blob, and (for i8) the scale vector inline.
+    pub(crate) fn encode(&self, e: &mut Encoder) {
+        match self {
+            WeightPanels::F32(p) => {
+                e.u8(0);
+                e.blob_of::<f32>(p);
+            }
+            WeightPanels::Bf16(p) => {
+                e.u8(1);
+                e.blob_of::<u16>(p);
+            }
+            WeightPanels::I8 { data, scales } => {
+                e.u8(2);
+                e.blob_of::<i8>(data);
+                e.vec_f32(scales);
+            }
+        }
+    }
+
+    /// Deserialize from an artifact: the panels come back as zero-copy
+    /// windows into the mapped blob — no unpack, no quantization.
+    pub(crate) fn decode(d: &mut Decoder) -> Result<WeightPanels, ArtifactError> {
+        match d.u8()? {
+            0 => Ok(WeightPanels::F32(d.blob_store::<f32>()?)),
+            1 => Ok(WeightPanels::Bf16(d.blob_store::<u16>()?)),
+            2 => {
+                let data = d.blob_store::<i8>()?;
+                let scales = d.vec_f32()?;
+                Ok(WeightPanels::I8 { data, scales })
+            }
+            t => Err(corrupt(format!("invalid panel dtype tag {t}"))),
         }
     }
 }
@@ -386,6 +424,105 @@ pub enum DenseTail {
     /// accumulation order as a 1-wide GEMM tile, so blocks and tail agree
     /// bit-for-bit.
     Panels,
+}
+
+impl ConvAlgo {
+    /// Serialize the lowering decision and its weights to an artifact.
+    pub(crate) fn encode(&self, e: &mut Encoder) {
+        match self {
+            ConvAlgo::Generic { kernel } => {
+                e.u8(0);
+                e.vec_f32(kernel);
+            }
+            ConvAlgo::Direct { panels, lanes } => {
+                e.u8(1);
+                panels.encode(e);
+                e.usize(*lanes);
+            }
+            ConvAlgo::Im2col { panels, lanes } => {
+                e.u8(2);
+                panels.encode(e);
+                e.usize(*lanes);
+            }
+        }
+    }
+
+    /// Deserialize from an artifact (panels map zero-copy).
+    pub(crate) fn decode(d: &mut Decoder) -> Result<ConvAlgo, ArtifactError> {
+        match d.u8()? {
+            0 => Ok(ConvAlgo::Generic { kernel: d.vec_f32()? }),
+            1 => {
+                let panels = WeightPanels::decode(d)?;
+                let lanes = d.usize()?;
+                Ok(ConvAlgo::Direct { panels, lanes })
+            }
+            2 => {
+                let panels = WeightPanels::decode(d)?;
+                let lanes = d.usize()?;
+                Ok(ConvAlgo::Im2col { panels, lanes })
+            }
+            t => Err(corrupt(format!("invalid conv algo tag {t}"))),
+        }
+    }
+}
+
+impl DenseAlgo {
+    /// Serialize the lowering decision and its weights to an artifact.
+    pub(crate) fn encode(&self, e: &mut Encoder) {
+        match self {
+            DenseAlgo::Generic { kernel } => {
+                e.u8(0);
+                e.vec_f32(kernel);
+            }
+            DenseAlgo::Gemm { panels, lanes, tail } => {
+                e.u8(1);
+                panels.encode(e);
+                e.usize(*lanes);
+                tail.encode(e);
+            }
+        }
+    }
+
+    /// Deserialize from an artifact (panels map zero-copy).
+    pub(crate) fn decode(d: &mut Decoder) -> Result<DenseAlgo, ArtifactError> {
+        match d.u8()? {
+            0 => Ok(DenseAlgo::Generic { kernel: d.vec_f32()? }),
+            1 => {
+                let panels = WeightPanels::decode(d)?;
+                let lanes = d.usize()?;
+                let tail = DenseTail::decode(d)?;
+                Ok(DenseAlgo::Gemm { panels, lanes, tail })
+            }
+            t => Err(corrupt(format!("invalid dense algo tag {t}"))),
+        }
+    }
+}
+
+impl DenseTail {
+    /// Serialize the batch-tail matvec layout to an artifact.
+    pub(crate) fn encode(&self, e: &mut Encoder) {
+        match self {
+            DenseTail::Rotated { diag } => {
+                e.u8(0);
+                e.vec_f32(diag);
+            }
+            DenseTail::Broadcast { w } => {
+                e.u8(1);
+                e.vec_f32(w);
+            }
+            DenseTail::Panels => e.u8(2),
+        }
+    }
+
+    /// Deserialize from an artifact.
+    pub(crate) fn decode(d: &mut Decoder) -> Result<DenseTail, ArtifactError> {
+        match d.u8()? {
+            0 => Ok(DenseTail::Rotated { diag: d.vec_f32()? }),
+            1 => Ok(DenseTail::Broadcast { w: d.vec_f32()? }),
+            2 => Ok(DenseTail::Panels),
+            t => Err(corrupt(format!("invalid dense tail tag {t}"))),
+        }
+    }
 }
 
 /// Run `f` over `units` work units split into at most `tasks` contiguous
@@ -1647,8 +1784,9 @@ mod tests {
             let x = Tensor::from_vec(&[b, in_dim], xv.clone());
             let want = dense_ref(&x, &kernel, &[in_dim, out_dim], Some(&bias));
             for lanes in simd::LANE_WIDTHS {
-                let panels =
-                    WeightPanels::F32(simd::pack_dense_panels_any(&kernel, in_dim, out_dim, lanes));
+                let panels = WeightPanels::F32(
+                    simd::pack_dense_panels_any(&kernel, in_dim, out_dim, lanes).into(),
+                );
                 for (label, algo) in [
                     ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
                     ("gemm", DenseAlgo::Gemm { panels, lanes, tail: DenseTail::Panels }),
@@ -1702,8 +1840,11 @@ mod tests {
                 ("rotated", DenseTail::Rotated { diag: diag.clone() }),
                 ("broadcast", DenseTail::Broadcast { w: wt.clone() }),
             ] {
-                let algo =
-                    DenseAlgo::Gemm { panels: WeightPanels::F32(panels.clone()), lanes: 4, tail };
+                let algo = DenseAlgo::Gemm {
+                    panels: WeightPanels::F32(panels.clone().into()),
+                    lanes: 4,
+                    tail,
+                };
                 let mut scratch = vec![0.0f32; 2 * n];
                 let mut out = vec![0.0; b * n];
                 dense_run(
@@ -1791,7 +1932,7 @@ mod tests {
         let mut kernel = vec![0.5f32; in_dim * out_dim];
         kernel[0] = f32::INFINITY; // K[0][0]
         kernel[1] = f32::NAN; // K[0][1]
-        let panels = WeightPanels::F32(simd::pack_dense_panels(&kernel, in_dim, out_dim));
+        let panels = WeightPanels::F32(simd::pack_dense_panels(&kernel, in_dim, out_dim).into());
         let x = [0.0f32, 1.0, -1.0, 0.5];
         for (label, algo) in [
             ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
@@ -1885,7 +2026,8 @@ mod tests {
         let diag = simd::rotate_diagonals(&wt, n);
         let ep = Epilogue { act: Activation::Sigmoid, approx: true, post: None };
         for lanes in [1usize, 4, 8] {
-            let panels = WeightPanels::F32(simd::pack_dense_panels_any(&kernel, n, n, lanes));
+            let panels =
+                WeightPanels::F32(simd::pack_dense_panels_any(&kernel, n, n, lanes).into());
             let algos = [
                 ("generic", DenseAlgo::Generic { kernel: kernel.clone() }),
                 (

@@ -1,8 +1,11 @@
 //! The paper's compiler: §3.5 merging passes (`fuse`), §3.2 lifetime/memory
 //! planning (`memory`), §3.3 cost model (`cost`), fused allocation-free
 //! kernels (`kernels`), the pre-resolved execution IR (`program`: spec →
-//! fold → plan → lower → run) and the optimized-interpreter engine shell
-//! over it (`exec`).
+//! fold → plan → lower → run), the optimized-interpreter engine shell
+//! over it (`exec`), and the persistent compiled-artifact format + cache
+//! (`artifact`: save/mmap-load a lowered program so cold-start skips
+//! fold/plan/pack entirely).
+pub mod artifact;
 pub mod cost;
 pub mod exec;
 pub mod fuse;

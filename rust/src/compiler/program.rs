@@ -32,6 +32,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::compiler::artifact::{corrupt, ArtifactError, Decoder, Encoder};
 use crate::compiler::cost;
 use crate::compiler::fuse;
 use crate::compiler::kernels as k;
@@ -127,6 +128,29 @@ impl LaneSelect {
     }
 }
 
+/// How `Auto` scheme selection turns candidate prices into a decision:
+/// trust the §3.3 predicted cycles, or time the top candidates on the
+/// actual machine and let the empirical argmin win. Measured tuning is the
+/// first feedback loop into the cost model — its winners (and an
+/// `overturned` flag wherever measurement disagreed with prediction) land
+/// in each [`cost::LayerDecision`] and persist into cached artifacts, so
+/// the one-time timing cost amortizes exactly like the rest of lowering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TuneMode {
+    /// Take the cost model's predicted-cycles argmin as-is (the default;
+    /// lowering does no timing work).
+    #[default]
+    Predicted,
+    /// Time the top predicted conv/dense candidates per layer on the real
+    /// machine (one warmup + `reps` timed runs each, minimum wall time
+    /// wins) and take the empirical argmin. Only `Auto` scheme selection
+    /// measures — forced schemes and unpriced fallbacks are unaffected.
+    Measured {
+        /// Timed repetitions per candidate; the minimum is kept.
+        reps: u32,
+    },
+}
+
 /// Which of the paper's optimizations the lowering applies (each is an
 /// ablation axis exercised by `benches/ablations.rs`).
 ///
@@ -194,6 +218,9 @@ pub struct CompileOptions {
     /// tails, and layers with nonfinite weights keep f32 storage, and the
     /// dtype actually emitted lands in each [`cost::LayerDecision`].
     pub weight_dtype: simd::WeightDtype,
+    /// How `Auto` candidate prices become decisions: predicted-cycles
+    /// argmin (default) or measured on the real machine (see [`TuneMode`]).
+    pub tune: TuneMode,
 }
 
 impl Default for CompileOptions {
@@ -209,6 +236,7 @@ impl Default for CompileOptions {
             lanes: LaneSelect::Auto,
             intra_threads: 1,
             weight_dtype: simd::WeightDtype::F32,
+            tune: TuneMode::Predicted,
         }
     }
 }
@@ -234,6 +262,7 @@ impl CompileOptions {
             lanes: LaneSelect::Scalar,
             intra_threads: 1,
             weight_dtype: simd::WeightDtype::F32,
+            tune: TuneMode::Predicted,
         }
     }
 
@@ -242,6 +271,104 @@ impl CompileOptions {
     /// override, then the widest width the host CPU supports.
     pub fn max_lanes(&self) -> usize {
         self.lanes.width().unwrap_or_else(cpu::auto_lanes)
+    }
+
+    /// The fixed 32-byte encoding artifact headers store (and cache keys
+    /// hash): every field at a pinned offset, reserved tail zeroed, no
+    /// platform-dependent layout. Inverse of [`Self::from_canonical_bytes`].
+    pub(crate) fn canonical_bytes(&self) -> [u8; 32] {
+        let mut b = [0u8; 32];
+        b[0] = self.fold_bn as u8;
+        b[1] = self.approx as u8;
+        b[2] = self.reuse_memory as u8;
+        b[3] = match self.dense {
+            DenseScheme::Auto => 0,
+            DenseScheme::Rotated => 1,
+            DenseScheme::Broadcast => 2,
+            DenseScheme::Generic => 3,
+        };
+        b[4] = match self.conv {
+            ConvScheme::Auto => 0,
+            ConvScheme::Direct => 1,
+            ConvScheme::Im2col => 2,
+            ConvScheme::Generic => 3,
+        };
+        b[5] = self.fuse_pool as u8;
+        b[6] = match self.lanes {
+            LaneSelect::Auto => 0,
+            LaneSelect::Scalar => 1,
+            LaneSelect::W4 => 2,
+            LaneSelect::W8 => 3,
+            LaneSelect::W16 => 4,
+        };
+        b[7] = match self.weight_dtype {
+            simd::WeightDtype::F32 => 0,
+            simd::WeightDtype::Bf16 => 1,
+            simd::WeightDtype::I8 => 2,
+        };
+        b[8..16].copy_from_slice(&(self.batch_hint as u64).to_ne_bytes());
+        b[16..24].copy_from_slice(&(self.intra_threads as u64).to_ne_bytes());
+        match self.tune {
+            TuneMode::Predicted => b[24] = 0,
+            TuneMode::Measured { reps } => {
+                b[24] = 1;
+                b[25..29].copy_from_slice(&reps.to_ne_bytes());
+            }
+        }
+        b
+    }
+
+    /// Decode [`Self::canonical_bytes`]; `None` on any out-of-range
+    /// discriminant (a corrupt or future-format artifact header).
+    pub(crate) fn from_canonical_bytes(b: &[u8; 32]) -> Option<CompileOptions> {
+        let flag = |v: u8| match v {
+            0 => Some(false),
+            1 => Some(true),
+            _ => None,
+        };
+        Some(CompileOptions {
+            fold_bn: flag(b[0])?,
+            approx: flag(b[1])?,
+            reuse_memory: flag(b[2])?,
+            dense: match b[3] {
+                0 => DenseScheme::Auto,
+                1 => DenseScheme::Rotated,
+                2 => DenseScheme::Broadcast,
+                3 => DenseScheme::Generic,
+                _ => return None,
+            },
+            conv: match b[4] {
+                0 => ConvScheme::Auto,
+                1 => ConvScheme::Direct,
+                2 => ConvScheme::Im2col,
+                3 => ConvScheme::Generic,
+                _ => return None,
+            },
+            fuse_pool: flag(b[5])?,
+            lanes: match b[6] {
+                0 => LaneSelect::Auto,
+                1 => LaneSelect::Scalar,
+                2 => LaneSelect::W4,
+                3 => LaneSelect::W8,
+                4 => LaneSelect::W16,
+                _ => return None,
+            },
+            weight_dtype: match b[7] {
+                0 => simd::WeightDtype::F32,
+                1 => simd::WeightDtype::Bf16,
+                2 => simd::WeightDtype::I8,
+                _ => return None,
+            },
+            batch_hint: u64::from_ne_bytes(b[8..16].try_into().ok()?) as usize,
+            intra_threads: u64::from_ne_bytes(b[16..24].try_into().ok()?) as usize,
+            tune: match b[24] {
+                0 => TuneMode::Predicted,
+                1 => TuneMode::Measured {
+                    reps: u32::from_ne_bytes(b[25..29].try_into().ok()?),
+                },
+                _ => return None,
+            },
+        })
     }
 }
 
@@ -402,6 +529,10 @@ impl Scratch {
 /// [`Program`] `Send + Sync` and shareable across worker threads.
 trait Kernel: Send + Sync {
     fn run(&self, batch: usize, data: &mut [f32], scratch: &mut [f32]);
+    /// Serialize this kernel (a type tag followed by its fields) into an
+    /// artifact; [`decode_kernel`] is the exact inverse. Weight panels go
+    /// to the 64-byte-aligned blob, everything else to the meta table.
+    fn encode(&self, e: &mut Encoder);
 }
 
 /// One executed step. The human/test-readable labels live in
@@ -654,7 +785,7 @@ impl Program {
                 let (algo, bias, scheme, tasks) = lower_conv_weights(
                     &folded,
                     conv,
-                    cin[2],
+                    (cin[0], cin[1], cin[2]),
                     (cout[0], cout[1]),
                     ConvFusion { fusible: true, fused: true },
                     opts,
@@ -676,6 +807,8 @@ impl Program {
                     reason: cost::DecisionReason::CostModel,
                     fused_pool: true,
                     elided: true,
+                    measured_cycles: None,
+                    overturned: false,
                 });
                 let kind = format!(
                     "conv2d+maxpool[{ckh}x{ckw}x{}→{out_ch} s{cs}; pool {kh}x{kw} s{stride}]\
@@ -722,7 +855,7 @@ impl Program {
                     let (algo, bias, scheme, tasks) = lower_conv_weights(
                         &folded,
                         l,
-                        in_shape[2],
+                        (in_shape[0], in_shape[1], in_shape[2]),
                         (out_shape[0], out_shape[1]),
                         ConvFusion {
                             fusible: fusible_pairs.contains_key(&l.name),
@@ -1064,6 +1197,482 @@ impl Program {
     pub fn spans(&self) -> &BTreeMap<String, Span> {
         &self.spans
     }
+
+    /// Serialize everything `run` needs — spans, shapes, the full plan
+    /// summary (report included), and every kernel — into an artifact
+    /// encoder. [`Program::decode_body`] is the exact inverse.
+    pub(crate) fn encode_body(&self, e: &mut Encoder) {
+        enc_span(e, self.input);
+        e.vec_usize(&self.input_shape);
+        e.usize(self.item_elems);
+        e.usize(self.scratch_elems);
+        e.f64(self.compile_ms);
+        e.usize(self.spans.len());
+        for (name, s) in &self.spans {
+            e.str(name);
+            enc_span(e, *s);
+        }
+        e.usize(self.outputs.len());
+        for o in &self.outputs {
+            enc_span(e, o.span);
+            e.vec_usize(&o.shape);
+        }
+        encode_summary(e, &self.summary);
+        e.usize(self.steps.len());
+        for s in &self.steps {
+            s.kernel.encode(e);
+        }
+    }
+
+    /// Rebuild a program from an artifact decoder: every kernel comes back
+    /// as the same concrete struct with its weight panels borrowed
+    /// zero-copy out of the mapping — no fold, no plan, no packing, no
+    /// quantization. `compile_ms` initially carries the original lowering
+    /// time; the artifact loader restamps it with the load wall time.
+    pub(crate) fn decode_body(d: &mut Decoder) -> Result<Program, ArtifactError> {
+        let input = dec_span(d)?;
+        let input_shape = d.vec_usize()?;
+        let item_elems = d.usize()?;
+        let scratch_elems = d.usize()?;
+        let compile_ms = d.f64()?;
+        let n_spans = d.usize()?;
+        let mut spans = BTreeMap::new();
+        for _ in 0..n_spans {
+            let name = d.string()?;
+            spans.insert(name, dec_span(d)?);
+        }
+        let n_outputs = d.usize()?;
+        let mut outputs = Vec::with_capacity(n_outputs.min(64));
+        for _ in 0..n_outputs {
+            outputs.push(OutputSpec { span: dec_span(d)?, shape: d.vec_usize()? });
+        }
+        let summary = decode_summary(d)?;
+        let n_steps = d.usize()?;
+        let mut steps = Vec::with_capacity(n_steps.min(1024));
+        for _ in 0..n_steps {
+            steps.push(Step { kernel: decode_kernel(d)? });
+        }
+        Ok(Program {
+            steps,
+            outputs,
+            input,
+            input_shape,
+            item_elems,
+            scratch_elems,
+            spans,
+            summary,
+            compile_ms,
+        })
+    }
+
+    /// Restamp the compile-time figure (the artifact loader records the
+    /// load wall time here, so `compile_ms` always answers "what did it
+    /// cost to make this program runnable in this process").
+    pub(crate) fn set_compile_ms(&mut self, ms: f64) {
+        self.compile_ms = ms;
+    }
+}
+
+// ------------------------------------------------------- artifact codecs
+
+fn enc_span(e: &mut Encoder, s: Span) {
+    e.usize(s.start);
+    e.usize(s.elems);
+}
+
+fn dec_span(d: &mut Decoder) -> Result<Span, ArtifactError> {
+    Ok(Span { start: d.usize()?, elems: d.usize()? })
+}
+
+fn enc_scratch(e: &mut Encoder, s: Scratch) {
+    e.usize(s.start);
+    e.usize(s.len);
+}
+
+fn dec_scratch(d: &mut Decoder) -> Result<Scratch, ArtifactError> {
+    Ok(Scratch { start: d.usize()?, len: d.usize()? })
+}
+
+fn enc_hwc(e: &mut Encoder, (h, w, c): (usize, usize, usize)) {
+    e.usize(h);
+    e.usize(w);
+    e.usize(c);
+}
+
+fn dec_hwc(d: &mut Decoder) -> Result<(usize, usize, usize), ArtifactError> {
+    Ok((d.usize()?, d.usize()?, d.usize()?))
+}
+
+fn act_code(a: Activation) -> u8 {
+    match a {
+        Activation::Linear => 0,
+        Activation::Relu => 1,
+        Activation::Relu6 => 2,
+        Activation::LeakyRelu => 3,
+        Activation::Sigmoid => 4,
+        Activation::Tanh => 5,
+    }
+}
+
+fn act_from(code: u8) -> Result<Activation, ArtifactError> {
+    Ok(match code {
+        0 => Activation::Linear,
+        1 => Activation::Relu,
+        2 => Activation::Relu6,
+        3 => Activation::LeakyRelu,
+        4 => Activation::Sigmoid,
+        5 => Activation::Tanh,
+        c => return Err(corrupt(format!("unknown activation code {c}"))),
+    })
+}
+
+fn pad_code(p: Padding) -> u8 {
+    match p {
+        Padding::Same => 0,
+        Padding::Valid => 1,
+    }
+}
+
+fn pad_from(code: u8) -> Result<Padding, ArtifactError> {
+    Ok(match code {
+        0 => Padding::Same,
+        1 => Padding::Valid,
+        c => return Err(corrupt(format!("unknown padding code {c}"))),
+    })
+}
+
+fn dtype_code(t: simd::WeightDtype) -> u8 {
+    match t {
+        simd::WeightDtype::F32 => 0,
+        simd::WeightDtype::Bf16 => 1,
+        simd::WeightDtype::I8 => 2,
+    }
+}
+
+fn dtype_from(code: u8) -> Result<simd::WeightDtype, ArtifactError> {
+    Ok(match code {
+        0 => simd::WeightDtype::F32,
+        1 => simd::WeightDtype::Bf16,
+        2 => simd::WeightDtype::I8,
+        c => return Err(corrupt(format!("unknown weight dtype code {c}"))),
+    })
+}
+
+fn enc_ep(e: &mut Encoder, ep: &EpSpec) {
+    e.u8(act_code(ep.act));
+    e.bool(ep.approx);
+    match &ep.post {
+        None => e.bool(false),
+        Some((s, h)) => {
+            e.bool(true);
+            e.vec_f32(s);
+            e.vec_f32(h);
+        }
+    }
+}
+
+fn dec_ep(d: &mut Decoder) -> Result<EpSpec, ArtifactError> {
+    let act = act_from(d.u8()?)?;
+    let approx = d.bool()?;
+    let post = if d.bool()? { Some((d.vec_f32()?, d.vec_f32()?)) } else { None };
+    Ok(EpSpec { act, approx, post })
+}
+
+fn enc_opt_vec(e: &mut Encoder, v: &Option<Vec<f32>>) {
+    e.opt_vec_f32(v.as_deref());
+}
+
+/// Decode a label through [`cost::intern_label`] back to the `&'static
+/// str` the report types carry.
+fn dec_label(d: &mut Decoder) -> Result<&'static str, ArtifactError> {
+    let s = d.string()?;
+    cost::intern_label(&s).ok_or_else(|| corrupt(format!("unknown label `{s}`")))
+}
+
+fn reason_code(r: cost::DecisionReason) -> u8 {
+    match r {
+        cost::DecisionReason::CostModel => 0,
+        cost::DecisionReason::Forced => 1,
+        cost::DecisionReason::Fallback => 2,
+        cost::DecisionReason::Measured => 3,
+    }
+}
+
+fn reason_from(code: u8) -> Result<cost::DecisionReason, ArtifactError> {
+    Ok(match code {
+        0 => cost::DecisionReason::CostModel,
+        1 => cost::DecisionReason::Forced,
+        2 => cost::DecisionReason::Fallback,
+        3 => cost::DecisionReason::Measured,
+        c => return Err(corrupt(format!("unknown decision reason code {c}"))),
+    })
+}
+
+fn encode_summary(e: &mut Encoder, s: &PlanSummary) {
+    e.str(&s.model);
+    e.usize(s.steps.len());
+    for st in &s.steps {
+        e.str(st);
+    }
+    for v in [
+        s.buffers,
+        s.arena_item_elems,
+        s.in_place_steps,
+        s.elided_steps,
+        s.folded_bn,
+        s.gemm_dense,
+        s.rotated_dense,
+        s.broadcast_dense,
+        s.panel_tail_dense,
+        s.direct_conv,
+        s.im2col_conv,
+        s.fused_maxpool,
+        s.weight_elems,
+        s.weights_bytes.f32_bytes,
+        s.weights_bytes.bf16_bytes,
+        s.weights_bytes.i8_bytes,
+        s.quantized_layers,
+        s.scratch_elems,
+        s.lane_width,
+        s.parallel_tasks,
+    ] {
+        e.usize(v);
+    }
+    e.str(&s.report.model);
+    e.usize(s.report.batch_hint);
+    e.usize(s.report.arena_bytes);
+    e.usize(s.report.scratch_bytes);
+    e.usize(s.report.decisions.len());
+    for dn in &s.report.decisions {
+        e.str(&dn.layer);
+        e.str(dn.op);
+        e.usize(dn.candidates.len());
+        for c in &dn.candidates {
+            e.str(c.scheme);
+            e.usize(c.lanes);
+            e.f64(c.cycles);
+            e.usize(c.weight_bytes);
+            e.u8(dtype_code(c.dtype));
+            e.bool(c.fused_pool);
+        }
+        e.str(dn.chosen);
+        e.usize(dn.lane_width);
+        e.usize(dn.parallel_tasks);
+        e.f64(dn.predicted_cycles);
+        e.u8(dtype_code(dn.weight_dtype));
+        e.usize(dn.weights_bytes);
+        e.u8(reason_code(dn.reason));
+        e.bool(dn.fused_pool);
+        e.bool(dn.elided);
+        match dn.measured_cycles {
+            None => e.bool(false),
+            Some(v) => {
+                e.bool(true);
+                e.f64(v);
+            }
+        }
+        e.bool(dn.overturned);
+    }
+}
+
+fn decode_summary(d: &mut Decoder) -> Result<PlanSummary, ArtifactError> {
+    let model = d.string()?;
+    let n_steps = d.usize()?;
+    let mut steps = Vec::with_capacity(n_steps.min(1024));
+    for _ in 0..n_steps {
+        steps.push(d.string()?);
+    }
+    let mut counters = [0usize; 20];
+    for c in &mut counters {
+        *c = d.usize()?;
+    }
+    let report_model = d.string()?;
+    let batch_hint = d.usize()?;
+    let arena_bytes = d.usize()?;
+    let scratch_bytes = d.usize()?;
+    let n_dec = d.usize()?;
+    let mut decisions = Vec::with_capacity(n_dec.min(1024));
+    for _ in 0..n_dec {
+        let layer = d.string()?;
+        let op = dec_label(d)?;
+        let n_cand = d.usize()?;
+        let mut candidates = Vec::with_capacity(n_cand.min(64));
+        for _ in 0..n_cand {
+            candidates.push(cost::CandidateCost {
+                scheme: dec_label(d)?,
+                lanes: d.usize()?,
+                cycles: d.f64()?,
+                weight_bytes: d.usize()?,
+                dtype: dtype_from(d.u8()?)?,
+                fused_pool: d.bool()?,
+            });
+        }
+        decisions.push(cost::LayerDecision {
+            layer,
+            op,
+            candidates,
+            chosen: dec_label(d)?,
+            lane_width: d.usize()?,
+            parallel_tasks: d.usize()?,
+            predicted_cycles: d.f64()?,
+            weight_dtype: dtype_from(d.u8()?)?,
+            weights_bytes: d.usize()?,
+            reason: reason_from(d.u8()?)?,
+            fused_pool: d.bool()?,
+            elided: d.bool()?,
+            measured_cycles: if d.bool()? { Some(d.f64()?) } else { None },
+            overturned: d.bool()?,
+        });
+    }
+    Ok(PlanSummary {
+        model,
+        steps,
+        buffers: counters[0],
+        arena_item_elems: counters[1],
+        in_place_steps: counters[2],
+        elided_steps: counters[3],
+        folded_bn: counters[4],
+        gemm_dense: counters[5],
+        rotated_dense: counters[6],
+        broadcast_dense: counters[7],
+        panel_tail_dense: counters[8],
+        direct_conv: counters[9],
+        im2col_conv: counters[10],
+        fused_maxpool: counters[11],
+        weight_elems: counters[12],
+        weights_bytes: memory::WeightBytes {
+            f32_bytes: counters[13],
+            bf16_bytes: counters[14],
+            i8_bytes: counters[15],
+        },
+        quantized_layers: counters[16],
+        scratch_elems: counters[17],
+        lane_width: counters[18],
+        parallel_tasks: counters[19],
+        report: cost::LoweringReport {
+            model: report_model,
+            batch_hint,
+            decisions,
+            arena_bytes,
+            scratch_bytes,
+        },
+    })
+}
+
+/// Kernel type tags for the artifact format; [`Kernel::encode`] writes
+/// them, this match rebuilds the concrete struct. Order is part of the
+/// format — changing it means bumping the artifact version.
+fn decode_kernel(d: &mut Decoder) -> Result<Box<dyn Kernel>, ArtifactError> {
+    Ok(match d.u8()? {
+        1 => Box::new(ConvK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            in_hwc: dec_hwc(d)?,
+            khw_oc: dec_hwc(d)?,
+            stride: d.usize()?,
+            padding: pad_from(d.u8()?)?,
+            algo: k::ConvAlgo::decode(d)?,
+            bias: d.opt_vec_f32()?,
+            ep: dec_ep(d)?,
+            pool: if d.bool()? { Some(dec_hwc(d)?) } else { None },
+            cell_len: d.usize()?,
+            tasks: d.usize()?,
+            scratch: dec_scratch(d)?,
+        }),
+        2 => Box::new(DwConv2dK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            in_hwc: dec_hwc(d)?,
+            khw: (d.usize()?, d.usize()?),
+            stride: d.usize()?,
+            padding: pad_from(d.u8()?)?,
+            kernel: d.vec_f32()?,
+            bias: d.opt_vec_f32()?,
+            ep: dec_ep(d)?,
+        }),
+        3 => Box::new(DenseK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            in_dim: d.usize()?,
+            units: d.usize()?,
+            algo: k::DenseAlgo::decode(d)?,
+            bias: d.opt_vec_f32()?,
+            tasks: d.usize()?,
+            scratch: dec_scratch(d)?,
+            ep: dec_ep(d)?,
+        }),
+        4 => Box::new(AffineK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            c: d.usize()?,
+            scale: d.vec_f32()?,
+            shift: d.vec_f32()?,
+        }),
+        5 => Box::new(AffineInPlaceK {
+            dst: dec_span(d)?,
+            c: d.usize()?,
+            scale: d.vec_f32()?,
+            shift: d.vec_f32()?,
+        }),
+        6 => Box::new(MaxPoolK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            in_hwc: dec_hwc(d)?,
+            khw_stride: dec_hwc(d)?,
+        }),
+        7 => Box::new(AvgPoolK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            in_hwc: dec_hwc(d)?,
+            khw_stride: dec_hwc(d)?,
+        }),
+        8 => Box::new(GlobalAvgPoolK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            in_hwc: dec_hwc(d)?,
+        }),
+        9 => Box::new(UpsampleK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            in_hwc: dec_hwc(d)?,
+            factor: d.usize()?,
+        }),
+        10 => Box::new(ZeroPadK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            in_hwc: dec_hwc(d)?,
+            pad: [d.usize()?, d.usize()?, d.usize()?, d.usize()?],
+        }),
+        11 => Box::new(ActK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            c: d.usize()?,
+            ep: dec_ep(d)?,
+        }),
+        12 => Box::new(ActInPlaceK { dst: dec_span(d)?, c: d.usize()?, ep: dec_ep(d)? }),
+        13 => Box::new(SoftmaxK {
+            src: dec_span(d)?,
+            dst: dec_span(d)?,
+            c: d.usize()?,
+            approx: d.bool()?,
+        }),
+        14 => Box::new(SoftmaxInPlaceK {
+            dst: dec_span(d)?,
+            c: d.usize()?,
+            approx: d.bool()?,
+        }),
+        15 => Box::new(AddK { a: dec_span(d)?, b: dec_span(d)?, dst: dec_span(d)? }),
+        16 => Box::new(AddInPlaceK { dst: dec_span(d)?, other: dec_span(d)? }),
+        17 => Box::new(ConcatK {
+            a: dec_span(d)?,
+            b: dec_span(d)?,
+            dst: dec_span(d)?,
+            ca: d.usize()?,
+            cb: d.usize()?,
+        }),
+        18 => Box::new(CopyK { src: dec_span(d)?, dst: dec_span(d)? }),
+        t => return Err(corrupt(format!("unknown kernel tag {t}"))),
+    })
 }
 
 /// A layer's fused store epilogue (activation + §3.5 post-affine), with
@@ -1109,13 +1718,14 @@ struct ConvFusion {
 fn lower_conv_weights(
     folded: &ModelSpec,
     conv: &Layer,
-    in_ch: usize,
+    (in_h, in_w, in_ch): (usize, usize, usize),
     (out_h, out_w): (usize, usize),
     fusion: ConvFusion,
     opts: CompileOptions,
     summary: &mut PlanSummary,
 ) -> Result<(k::ConvAlgo, Option<Vec<f32>>, &'static str, usize)> {
-    let LayerOp::Conv2d { kh, kw, out_ch, use_bias, padding, .. } = &conv.op else {
+    let LayerOp::Conv2d { kh, kw, out_ch, use_bias, stride, padding, .. } = &conv.op
+    else {
         bail!("`{}` is not a conv2d", conv.name);
     };
     let kernel = folded.weight(conv, "kernel")?.to_vec();
@@ -1138,7 +1748,7 @@ fn lower_conv_weights(
     // storage on the blocked schemes.
     let req_dtype = effective_weight_dtype(opts.weight_dtype, &kernel);
     let candidates = cost::conv_candidates_dt(&dims, fusion.fusible, max_lanes, req_dtype);
-    let (resolved, lanes, reason) = match opts.conv {
+    let (mut resolved, mut lanes, mut reason) = match opts.conv {
         ConvScheme::Auto => match cost::pick(&candidates, fusion.fused) {
             Some(best) => (
                 match best.scheme {
@@ -1175,6 +1785,31 @@ fn lower_conv_weights(
             )
         }
     };
+    // Measured tuning: only second-guess the cost model where it actually
+    // decided (Auto + priced); forced schemes and geometry fallbacks stay.
+    let mut measured_cycles = None;
+    let mut overturned = false;
+    if let TuneMode::Measured { reps } = opts.tune {
+        if opts.conv == ConvScheme::Auto && reason == cost::DecisionReason::CostModel {
+            if let Some(m) = measure_conv_candidates(
+                &kernel,
+                &dims,
+                (in_h, in_w),
+                *stride,
+                *padding,
+                &candidates,
+                fusion.fused,
+                req_dtype,
+                reps,
+            ) {
+                overturned = m.scheme != resolved || m.lanes != lanes;
+                resolved = m.scheme;
+                lanes = m.lanes;
+                measured_cycles = Some(m.ns);
+                reason = cost::DecisionReason::Measured;
+            }
+        }
+    }
     let (algo, scheme) = lower_conv_algo(
         resolved,
         kernel,
@@ -1220,8 +1855,212 @@ fn lower_conv_weights(
         reason,
         fused_pool: fusion.fused,
         elided: false,
+        measured_cycles,
+        overturned,
     });
     Ok((algo, bias, scheme, tasks))
+}
+
+/// How many top predicted candidates measured tuning times per layer.
+const MEASURE_TOP_K: usize = 3;
+
+/// The empirical winner of a candidate timing run.
+struct MeasuredPick<S> {
+    scheme: S,
+    lanes: usize,
+    /// Best (minimum) wall nanoseconds over the timed repetitions.
+    ns: f64,
+}
+
+/// Time a kernel: one untimed warmup (page in panels, settle dispatch),
+/// then `reps` runs keeping the minimum wall time — the standard
+/// least-noise estimator for short kernels.
+fn time_kernel(kernel: &dyn Kernel, data: &mut [f32], scratch: &mut [f32], reps: u32) -> f64 {
+    kernel.run(1, data, scratch);
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        kernel.run(1, data, scratch);
+        best = best.min(t.elapsed().as_secs_f64() * 1e9);
+    }
+    best
+}
+
+/// Build and time each of the top-K predicted conv candidates as a real
+/// `ConvK` over synthetic batch-1 data, returning the empirical argmin.
+/// Candidates are timed without the fused-pool epilogue (its store-loop
+/// max cost is scheme-independent, and the pool geometry lives at the
+/// fused call site); `None` when fewer than two distinct candidates exist
+/// — there is nothing to overturn.
+#[allow(clippy::too_many_arguments)]
+fn measure_conv_candidates(
+    kernel: &[f32],
+    dims: &cost::ConvDims,
+    (in_h, in_w): (usize, usize),
+    stride: usize,
+    padding: Padding,
+    candidates: &[cost::CandidateCost],
+    fused: bool,
+    dtype: simd::WeightDtype,
+    reps: u32,
+) -> Option<MeasuredPick<ConvScheme>> {
+    let mut top: Vec<&cost::CandidateCost> =
+        candidates.iter().filter(|c| c.fused_pool == fused).collect();
+    top.sort_by(|a, b| a.cycles.total_cmp(&b.cycles));
+    top.dedup_by(|a, b| a.scheme == b.scheme && a.lanes == b.lanes);
+    top.truncate(MEASURE_TOP_K);
+    if top.len() < 2 {
+        return None;
+    }
+    let in_elems = in_h * in_w * dims.in_ch;
+    let out_elems = dims.out_h * dims.out_w * dims.out_ch;
+    let mut rng = crate::util::rng::SplitMix64::new(0x7E57_AB1E);
+    let mut data = rng.uniform_vec(in_elems);
+    data.resize(in_elems + out_elems, 0.0);
+    let mut best: Option<MeasuredPick<ConvScheme>> = None;
+    for c in top {
+        let scheme = match c.scheme {
+            "direct" => ConvScheme::Direct,
+            "generic" => ConvScheme::Generic,
+            _ => ConvScheme::Im2col,
+        };
+        // throwaway summary: candidate builds must not pollute the real
+        // lowering counters — only the winner is rebuilt for keeps
+        let mut scratch_summary = PlanSummary::default();
+        let (algo, _) = lower_conv_algo(
+            scheme,
+            kernel.to_vec(),
+            (dims.kh, dims.kw, dims.in_ch, dims.out_ch),
+            c.lanes,
+            dtype,
+            &mut scratch_summary,
+        );
+        let row_len = conv_row_len(&algo, (dims.kh, dims.kw, dims.in_ch));
+        let probe = ConvK {
+            src: Span { start: 0, elems: in_elems },
+            dst: Span { start: in_elems, elems: out_elems },
+            in_hwc: (in_h, in_w, dims.in_ch),
+            khw_oc: (dims.kh, dims.kw, dims.out_ch),
+            stride,
+            padding,
+            algo,
+            bias: None,
+            ep: EpSpec { act: Activation::Linear, approx: false, post: None },
+            pool: None,
+            cell_len: 0,
+            tasks: 1,
+            scratch: Scratch { start: 0, len: row_len },
+        };
+        let mut scratch = vec![0.0f32; row_len];
+        let ns = time_kernel(&probe, &mut data, &mut scratch, reps);
+        let better = match &best {
+            None => true,
+            Some(b) => ns < b.ns,
+        };
+        if better {
+            best = Some(MeasuredPick { scheme, lanes: c.lanes, ns });
+        }
+    }
+    best
+}
+
+/// The dense counterpart of [`measure_conv_candidates`]: rebuild each
+/// top-K candidate's `DenseAlgo` (panels, tails and all) and time a real
+/// `DenseK` over synthetic data at the pricing batch. Returns the
+/// empirical argmin as a scheme label.
+fn measure_dense_candidates(
+    kernel: &[f32],
+    in_dim: usize,
+    units: usize,
+    candidates: &[cost::CandidateCost],
+    dtype: simd::WeightDtype,
+    batch: usize,
+    reps: u32,
+) -> Option<MeasuredPick<&'static str>> {
+    let mut top: Vec<&cost::CandidateCost> = candidates.iter().collect();
+    top.sort_by(|a, b| a.cycles.total_cmp(&b.cycles));
+    top.dedup_by(|a, b| a.scheme == b.scheme && a.lanes == b.lanes);
+    top.truncate(MEASURE_TOP_K);
+    if top.len() < 2 {
+        return None;
+    }
+    let mut rng = crate::util::rng::SplitMix64::new(0x7E57_AB1E);
+    let mut data = rng.uniform_vec(in_dim * batch);
+    data.resize((in_dim + units) * batch, 0.0);
+    let mut best: Option<MeasuredPick<&'static str>> = None;
+    for c in top {
+        // the estimator only lists legal candidates, so the square-only
+        // tails can transpose unconditionally (same invariant Auto uses)
+        let (algo, scratch_len) = match c.scheme {
+            "generic" => (k::DenseAlgo::Generic { kernel: kernel.to_vec() }, 0),
+            "gemm+rotated" => (
+                k::DenseAlgo::Gemm {
+                    panels: k::WeightPanels::pack_dense(
+                        kernel,
+                        in_dim,
+                        units,
+                        c.lanes,
+                        simd::WeightDtype::F32,
+                    ),
+                    lanes: c.lanes,
+                    tail: k::DenseTail::Rotated {
+                        diag: simd::rotate_diagonals(&transpose(kernel, in_dim), in_dim),
+                    },
+                },
+                2 * in_dim,
+            ),
+            "gemm+broadcast" => (
+                k::DenseAlgo::Gemm {
+                    panels: k::WeightPanels::pack_dense(
+                        kernel,
+                        in_dim,
+                        units,
+                        c.lanes,
+                        simd::WeightDtype::F32,
+                    ),
+                    lanes: c.lanes,
+                    tail: k::DenseTail::Broadcast { w: transpose(kernel, in_dim) },
+                },
+                0,
+            ),
+            _ => (
+                k::DenseAlgo::Gemm {
+                    panels: k::WeightPanels::pack_dense(kernel, in_dim, units, c.lanes, dtype),
+                    lanes: c.lanes,
+                    tail: k::DenseTail::Panels,
+                },
+                0,
+            ),
+        };
+        let probe = DenseK {
+            src: Span { start: 0, elems: in_dim },
+            dst: Span { start: in_dim, elems: units },
+            in_dim,
+            units,
+            algo,
+            bias: None,
+            tasks: 1,
+            scratch: Scratch { start: 0, len: scratch_len },
+            ep: EpSpec { act: Activation::Linear, approx: false, post: None },
+        };
+        let mut scratch = vec![0.0f32; scratch_len];
+        let probe_ref: &dyn Kernel = &probe;
+        probe_ref.run(batch, &mut data, &mut scratch);
+        let mut ns = f64::INFINITY;
+        for _ in 0..reps.max(1) {
+            let t = Instant::now();
+            probe_ref.run(batch, &mut data, &mut scratch);
+            ns = ns.min(t.elapsed().as_secs_f64() * 1e9);
+        }
+        let better = match &best {
+            None => true,
+            Some(b) => ns < b.ns,
+        };
+        if better {
+            best = Some(MeasuredPick { scheme: c.scheme, lanes: c.lanes, ns });
+        }
+    }
+    best
 }
 
 /// Width lowering falls back to when the cost model declined to price a
@@ -1370,7 +2209,7 @@ fn lower_dense_algo(
         max_lanes,
         req_dtype,
     );
-    let (pick, lanes, reason) = match opts.dense {
+    let (mut pick, mut lanes, mut reason) = match opts.dense {
         DenseScheme::Generic => (Pick::Generic, 1, cost::DecisionReason::Forced),
         DenseScheme::Rotated => {
             let (p, label) = if rotatable {
@@ -1413,6 +2252,42 @@ fn lower_dense_algo(
             None => (Pick::Panels, fallback_lanes(max_lanes), cost::DecisionReason::Fallback),
         },
     };
+    // Measured tuning: only second-guess the cost model where it actually
+    // decided (Auto + CostModel), never a forced scheme or a fallback.
+    let mut measured_cycles = None;
+    let mut overturned = false;
+    if let TuneMode::Measured { reps } = opts.tune {
+        if matches!(opts.dense, DenseScheme::Auto)
+            && reason == cost::DecisionReason::CostModel
+        {
+            if let Some(m) = measure_dense_candidates(
+                &kernel,
+                in_dim,
+                units,
+                &candidates,
+                req_dtype,
+                opts.batch_hint.max(1),
+                reps,
+            ) {
+                let cur_label = match pick {
+                    Pick::Rotated => "gemm+rotated",
+                    Pick::Broadcast => "gemm+broadcast",
+                    Pick::Generic => "generic",
+                    Pick::Panels => "gemm+panels",
+                };
+                overturned = m.scheme != cur_label || m.lanes != lanes;
+                pick = match m.scheme {
+                    "gemm+rotated" => Pick::Rotated,
+                    "gemm+broadcast" => Pick::Broadcast,
+                    "generic" => Pick::Generic,
+                    _ => Pick::Panels,
+                };
+                lanes = m.lanes;
+                measured_cycles = Some(m.ns);
+                reason = cost::DecisionReason::Measured;
+            }
+        }
+    }
     let (algo, scratch_len, label, emitted_dtype, weights_bytes) =
         if matches!(pick, Pick::Generic) {
             summary.weight_elems += kernel.len();
@@ -1492,6 +2367,8 @@ fn lower_dense_algo(
         reason,
         fused_pool: false,
         elided: false,
+        measured_cycles,
+        overturned,
     });
     (algo, scratch_len, label, tasks)
 }
@@ -1640,6 +2517,29 @@ impl Kernel for ConvK {
             out,
         );
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(1);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        enc_hwc(e, self.in_hwc);
+        enc_hwc(e, self.khw_oc);
+        e.usize(self.stride);
+        e.u8(pad_code(self.padding));
+        self.algo.encode(e);
+        enc_opt_vec(e, &self.bias);
+        enc_ep(e, &self.ep);
+        match self.pool {
+            None => e.bool(false),
+            Some(p) => {
+                e.bool(true);
+                enc_hwc(e, p);
+            }
+        }
+        e.usize(self.cell_len);
+        e.usize(self.tasks);
+        enc_scratch(e, self.scratch);
+    }
 }
 
 struct DwConv2dK {
@@ -1669,6 +2569,20 @@ impl Kernel for DwConv2dK {
             self.ep.epilogue(),
             out,
         );
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(2);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        enc_hwc(e, self.in_hwc);
+        e.usize(self.khw.0);
+        e.usize(self.khw.1);
+        e.usize(self.stride);
+        e.u8(pad_code(self.padding));
+        e.vec_f32(&self.kernel);
+        enc_opt_vec(e, &self.bias);
+        enc_ep(e, &self.ep);
     }
 }
 
@@ -1707,6 +2621,19 @@ impl Kernel for DenseK {
             out,
         );
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(3);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        e.usize(self.in_dim);
+        e.usize(self.units);
+        self.algo.encode(e);
+        enc_opt_vec(e, &self.bias);
+        e.usize(self.tasks);
+        enc_scratch(e, self.scratch);
+        enc_ep(e, &self.ep);
+    }
 }
 
 /// BN lowered to its per-channel affine, scale/shift precomputed.
@@ -1723,6 +2650,15 @@ impl Kernel for AffineK {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         k::affine_into(x, self.c, &self.scale, &self.shift, out);
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(4);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        e.usize(self.c);
+        e.vec_f32(&self.scale);
+        e.vec_f32(&self.shift);
+    }
 }
 
 struct AffineInPlaceK {
@@ -1735,6 +2671,14 @@ struct AffineInPlaceK {
 impl Kernel for AffineInPlaceK {
     fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         k::affine_rows(&mut data[self.dst.range(batch)], self.c, &self.scale, &self.shift);
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(5);
+        enc_span(e, self.dst);
+        e.usize(self.c);
+        e.vec_f32(&self.scale);
+        e.vec_f32(&self.shift);
     }
 }
 
@@ -1751,6 +2695,14 @@ impl Kernel for MaxPoolK {
         let (h, w, c) = self.in_hwc;
         k::maxpool_into(x, (batch, h, w, c), self.khw_stride, out);
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(6);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        enc_hwc(e, self.in_hwc);
+        enc_hwc(e, self.khw_stride);
+    }
 }
 
 struct AvgPoolK {
@@ -1766,6 +2718,14 @@ impl Kernel for AvgPoolK {
         let (h, w, c) = self.in_hwc;
         k::avgpool_into(x, (batch, h, w, c), self.khw_stride, out);
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(7);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        enc_hwc(e, self.in_hwc);
+        enc_hwc(e, self.khw_stride);
+    }
 }
 
 struct GlobalAvgPoolK {
@@ -1779,6 +2739,13 @@ impl Kernel for GlobalAvgPoolK {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
         k::globalavgpool_into(x, (batch, h, w, c), out);
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(8);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        enc_hwc(e, self.in_hwc);
     }
 }
 
@@ -1795,6 +2762,14 @@ impl Kernel for UpsampleK {
         let (h, w, c) = self.in_hwc;
         k::upsample_into(x, (batch, h, w, c), self.factor, out);
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(9);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        enc_hwc(e, self.in_hwc);
+        e.usize(self.factor);
+    }
 }
 
 struct ZeroPadK {
@@ -1809,6 +2784,16 @@ impl Kernel for ZeroPadK {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         let (h, w, c) = self.in_hwc;
         k::zeropad_into(x, (batch, h, w, c), self.pad, out);
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(10);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        enc_hwc(e, self.in_hwc);
+        for p in self.pad {
+            e.usize(p);
+        }
     }
 }
 
@@ -1825,6 +2810,14 @@ impl Kernel for ActK {
         out.copy_from_slice(x);
         self.ep.epilogue().apply_whole(out, self.c);
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(11);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        e.usize(self.c);
+        enc_ep(e, &self.ep);
+    }
 }
 
 struct ActInPlaceK {
@@ -1837,6 +2830,13 @@ impl Kernel for ActInPlaceK {
     fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let buf = &mut data[self.dst.range(batch)];
         self.ep.epilogue().apply_whole(buf, self.c);
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(12);
+        enc_span(e, self.dst);
+        e.usize(self.c);
+        enc_ep(e, &self.ep);
     }
 }
 
@@ -1852,6 +2852,14 @@ impl Kernel for SoftmaxK {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         k::softmax_into(x, self.c, self.approx, out);
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(13);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
+        e.usize(self.c);
+        e.bool(self.approx);
+    }
 }
 
 struct SoftmaxInPlaceK {
@@ -1863,6 +2871,13 @@ struct SoftmaxInPlaceK {
 impl Kernel for SoftmaxInPlaceK {
     fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         k::softmax_rows(&mut data[self.dst.range(batch)], self.c, self.approx);
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(14);
+        enc_span(e, self.dst);
+        e.usize(self.c);
+        e.bool(self.approx);
     }
 }
 
@@ -1882,6 +2897,13 @@ impl Kernel for AddK {
         );
         k::add_into(a, b, out);
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(15);
+        enc_span(e, self.a);
+        enc_span(e, self.b);
+        enc_span(e, self.dst);
+    }
 }
 
 /// Residual add writing over its (dead) first operand — no copy of the
@@ -1895,6 +2917,12 @@ impl Kernel for AddInPlaceK {
     fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (other, buf) = src_dst(data, self.other.range(batch), self.dst.range(batch));
         k::add_assign(buf, other);
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(16);
+        enc_span(e, self.dst);
+        enc_span(e, self.other);
     }
 }
 
@@ -1916,6 +2944,15 @@ impl Kernel for ConcatK {
         );
         k::concat_into(a, self.ca, b, self.cb, out);
     }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(17);
+        enc_span(e, self.a);
+        enc_span(e, self.b);
+        enc_span(e, self.dst);
+        e.usize(self.ca);
+        e.usize(self.cb);
+    }
 }
 
 /// Out-of-place flatten: a reshape across buffers is a straight copy.
@@ -1928,6 +2965,12 @@ impl Kernel for CopyK {
     fn run(&self, batch: usize, data: &mut [f32], _scratch: &mut [f32]) {
         let (x, out) = src_dst(data, self.src.range(batch), self.dst.range(batch));
         out.copy_from_slice(x);
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(18);
+        enc_span(e, self.src);
+        enc_span(e, self.dst);
     }
 }
 

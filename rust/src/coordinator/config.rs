@@ -61,6 +61,13 @@ pub struct ServingConfig {
     /// while a model's windowed p99 exceeds it, the front end sheds that
     /// model's new requests with `overloaded`. Default 0 = disabled.
     pub slo_p99_ms: f64,
+    /// Directory for the persistent compiled-artifact cache
+    /// (`"cache_dir": "/var/cache/compiled-nn"`). When set, the launcher
+    /// exports `COMPILED_NN_CACHE_DIR` before the coordinator starts, so
+    /// every registration mmap-loads a valid cached artifact instead of
+    /// re-lowering. `None` (default) leaves the env var alone — an
+    /// already-exported `COMPILED_NN_CACHE_DIR` still wins.
+    pub cache_dir: Option<String>,
 }
 
 impl Default for ServingConfig {
@@ -76,6 +83,7 @@ impl Default for ServingConfig {
             weight_dtype: WeightDtype::F32,
             max_inflight: 4096,
             slo_p99_ms: 0.0,
+            cache_dir: None,
         }
     }
 }
@@ -134,6 +142,7 @@ impl ServingConfig {
                 }
                 v
             },
+            cache_dir: j.get("cache_dir").and_then(Json::as_str).map(str::to_string),
         })
     }
 
@@ -260,6 +269,17 @@ mod tests {
         assert_eq!(z.slo_p99_ms, 0.0);
 
         assert!(ServingConfig::parse(r#"{"models": ["c_bh"], "slo_p99_ms": -1}"#).is_err());
+    }
+
+    #[test]
+    fn cache_dir_key_parses_and_defaults() {
+        let c = ServingConfig::parse(
+            r#"{"models": ["c_bh"], "cache_dir": "/tmp/compiled-nn-cache"}"#,
+        )
+        .unwrap();
+        assert_eq!(c.cache_dir.as_deref(), Some("/tmp/compiled-nn-cache"));
+        let d = ServingConfig::parse(r#"{"models": ["c_bh"]}"#).unwrap();
+        assert_eq!(d.cache_dir, None);
     }
 
     #[test]

@@ -149,6 +149,14 @@ pub struct ModelMetrics {
     /// Batches currently dispatched to the execution lane; the peak shows
     /// how many the worker pool actually overlapped.
     pub inflight: Gauge,
+    /// Lowerings this model skipped via a compiled-artifact cache hit
+    /// (register + hot-swap paths).
+    pub cache_hits: Counter,
+    /// Lowerings that ran because no cached artifact existed for the key.
+    pub cache_misses: Counter,
+    /// Cached artifacts rejected (version/feature/hash mismatch or a
+    /// corrupt file) and silently replaced by a re-lowering.
+    pub cache_invalidated: Counter,
 }
 
 impl ModelMetrics {
@@ -170,7 +178,8 @@ impl ModelMetrics {
         format!(
             "{name} [{workers} worker{}]: {} reqs in {} batches (fill {:.2}, padded {}, \
              peak inflight {}), latency mean {:.0}µs p50 {}µs p95 {}µs max {}µs, \
-             exec mean {:.0}µs, queue mean {:.0}µs, errors {}, shed {}",
+             exec mean {:.0}µs, queue mean {:.0}µs, errors {}, shed {}, \
+             cache {}h/{}m/{}i",
             if workers == 1 { "" } else { "s" },
             self.requests.get(),
             self.batches.get(),
@@ -185,6 +194,9 @@ impl ModelMetrics {
             self.queue_wait.mean_us(),
             self.errors.get(),
             self.shed.get(),
+            self.cache_hits.get(),
+            self.cache_misses.get(),
+            self.cache_invalidated.get(),
         )
     }
 }

@@ -18,6 +18,7 @@
 //!   keep `workers + 1` batches in flight instead of round-tripping one.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{
     self, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError,
@@ -28,6 +29,8 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::compiler::artifact::{load_program, CacheCounters, ProgramCache};
+use crate::compiler::program::Program;
 use crate::coordinator::batcher::{BatchPolicy, Flush};
 use crate::coordinator::metrics::ModelMetrics;
 use crate::engine::{
@@ -102,6 +105,18 @@ enum ExecMsg {
         weight_dtype: Option<crate::nn::simd::WeightDtype>,
         reply: SyncSender<Result<Registration>>,
     },
+    /// Publish an **already-lowered** program (loaded from a compiled
+    /// artifact file) as this name's engine — the hot-swap-from-artifact
+    /// path. The program was validated and mmap-loaded on the caller's
+    /// thread; the executor only wraps it in an `OptInterp` so both lane
+    /// kinds go through the one registry code path.
+    RegisterProgram {
+        name: String,
+        program: Box<Program>,
+        buckets: Vec<usize>,
+        replace: bool,
+        reply: SyncSender<Result<Registration>>,
+    },
     InferBatch {
         name: String,
         job: Job,
@@ -114,6 +129,11 @@ enum ExecMsg {
 struct Registration {
     info: RegisterInfo,
     shared: Option<Arc<dyn SharedInfer>>,
+    /// How the global [`ProgramCache`] counters moved while this engine
+    /// was built (the executor thread builds serially, so the delta is
+    /// exactly this registration's cache activity). Lands in the lane's
+    /// `ModelMetrics`.
+    cache_delta: CacheCounters,
 }
 
 /// What a client learns from registering a model: the serving contract
@@ -452,6 +472,101 @@ impl Coordinator {
             lane.info.generation += 1;
             lane.info.compile_ms = reg.info.compile_ms;
             lane.info.params = reg.info.params;
+            record_cache_delta(&lane.metrics, reg.cache_delta);
+            ModelClient {
+                tx: lane.tx.clone(),
+                metrics: lane.metrics.clone(),
+                info: lane.info.clone(),
+            }
+        };
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        Ok(client)
+    }
+
+    /// Hot-swap a **live** model to a pre-compiled artifact file: the
+    /// artifact is validated and mmap-loaded on this thread (a corrupt or
+    /// mismatched file fails here and the old artifact keeps serving), then
+    /// published exactly like [`hot_swap_spec`](Self::hot_swap_spec) — the
+    /// input shape is pinned against the lane's registration and
+    /// `RegisterInfo::generation` bumps. A name that is not live yet is a
+    /// plain registration from the artifact (`buckets` must be non-empty).
+    pub fn hot_swap_artifact(
+        self: &Arc<Self>,
+        name: &str,
+        path: &Path,
+        buckets: &[usize],
+    ) -> Result<ModelClient> {
+        let _reg = self.reg_lock.lock().unwrap();
+        if self.stopping.load(Ordering::SeqCst) {
+            bail!("coordinator is shut down");
+        }
+        let (program, _info) = load_program(path)
+            .map_err(|e| anyhow!("loading artifact {}: {e}", path.display()))?;
+        let live = {
+            let queues = self.queues.lock().unwrap();
+            queues.get(name).map(|lane| (lane.info.clone(), lane.cell.clone()))
+        };
+        let Some((info, cell)) = live else {
+            if buckets.is_empty() {
+                bail!("registering from an artifact needs at least one batch bucket");
+            }
+            let boxed = Box::new(program);
+            let owned_name = name.to_string();
+            let buckets = buckets.to_vec();
+            let reg = self.exec_round_trip(move |reply| ExecMsg::RegisterProgram {
+                name: owned_name,
+                program: boxed,
+                buckets,
+                replace: false,
+                reply,
+            })?;
+            return self.finish_register(reg);
+        };
+        // Shape pin BEFORE any executor traffic: queued requests are
+        // already shaped, so a mismatched artifact must leave the lane
+        // untouched — identical contract to `hot_swap_spec`.
+        if program.input_shape() != &info.input_shape[..] {
+            bail!(
+                "artifact hot-swap for `{name}` would change the input shape {:?} -> {:?}; \
+                 queued requests are already shaped, register the artifact under a new \
+                 name instead",
+                info.input_shape,
+                program.input_shape()
+            );
+        }
+        let boxed = Box::new(program);
+        let owned_name = name.to_string();
+        let lane_buckets = info.buckets.clone();
+        let reg = self.exec_round_trip(move |reply| ExecMsg::RegisterProgram {
+            name: owned_name,
+            program: boxed,
+            buckets: lane_buckets,
+            replace: true,
+            reply,
+        })?;
+        match (&cell, reg.shared) {
+            (Some(cell), Some(shared)) => {
+                cell.swap(shared);
+            }
+            (None, None) => {}
+            (Some(_), None) => bail!(
+                "artifact hot-swap for `{name}` produced a non-shareable engine for a \
+                 pooled lane"
+            ),
+            (None, Some(_)) => bail!(
+                "artifact hot-swap for `{name}` produced a shareable engine for a \
+                 pinned lane"
+            ),
+        }
+        let client = {
+            let mut queues = self.queues.lock().unwrap();
+            let lane = queues
+                .get_mut(name)
+                .ok_or_else(|| anyhow!("lane for `{name}` vanished during hot-swap"))?;
+            lane.info.generation += 1;
+            lane.info.compile_ms = reg.info.compile_ms;
+            lane.info.params = reg.info.params;
+            record_cache_delta(&lane.metrics, reg.cache_delta);
             ModelClient {
                 tx: lane.tx.clone(),
                 metrics: lane.metrics.clone(),
@@ -483,8 +598,9 @@ impl Coordinator {
     /// Spawn the model's execution lane (pool or pinned dispatch) and its
     /// batcher, then publish the queue. Caller holds `reg_lock`.
     fn finish_register(&self, reg: Registration) -> Result<ModelClient> {
-        let Registration { mut info, shared } = reg;
+        let Registration { mut info, shared, cache_delta } = reg;
         let metrics = Arc::new(ModelMetrics::new());
+        record_cache_delta(&metrics, cache_delta);
 
         let (dispatch, cell) = match shared {
             Some(shared) => {
@@ -787,6 +903,10 @@ fn executor_main(
                     register_spec_engine(kind, &msg_opts, &mut engines, &spec, buckets, replace);
                 let _ = reply.send(res);
             }
+            ExecMsg::RegisterProgram { name, program, buckets, replace, reply } => {
+                let res = register_program_engine(&mut engines, &name, *program, buckets, replace);
+                let _ = reply.send(res);
+            }
             ExecMsg::InferBatch { name, job } => {
                 let result = match engines.get_mut(&name) {
                     Some(e) => e.infer(&job.batch).map(|mut outs| outs.remove(0)),
@@ -796,6 +916,30 @@ fn executor_main(
             }
         }
     }
+}
+
+/// How the global [`ProgramCache`] counters moved across `build` — the
+/// executor thread builds engines serially, so the delta is exactly the
+/// cache activity of the one registration being processed.
+fn with_cache_delta<T>(build: impl FnOnce() -> Result<T>) -> Result<(T, CacheCounters)> {
+    let before = ProgramCache::global().counters();
+    let built = build()?;
+    let after = ProgramCache::global().counters();
+    Ok((
+        built,
+        CacheCounters {
+            hits: after.hits - before.hits,
+            misses: after.misses - before.misses,
+            invalidated: after.invalidated - before.invalidated,
+        },
+    ))
+}
+
+/// Fold a registration's cache delta into the lane's metrics.
+fn record_cache_delta(metrics: &ModelMetrics, delta: CacheCounters) {
+    metrics.cache_hits.add(delta.hits);
+    metrics.cache_misses.add(delta.misses);
+    metrics.cache_invalidated.add(delta.invalidated);
 }
 
 fn register_engine(
@@ -808,17 +952,20 @@ fn register_engine(
 ) -> Result<Registration> {
     let entry = manifest.entry(name)?.clone();
     let cache_hit = !replace && engines.contains_key(name);
+    let mut cache_delta = CacheCounters::default();
     if !cache_hit {
         // On `replace`, a build failure propagates *before* the insert:
         // the cached engine stays and the lane keeps serving the old
         // artifact.
-        let engine = build_engine(kind, manifest, name, opts)?;
+        let (engine, delta) = with_cache_delta(|| build_engine(kind, manifest, name, opts))?;
+        cache_delta = delta;
         let buckets = engine.batch_buckets().unwrap_or_else(|| entry.batches.clone());
         finish_engine(engines, name, engine, &buckets);
     }
     let engine = engines.get(name).expect("engine registered above");
     Ok(Registration {
         shared: engine.shareable(),
+        cache_delta,
         info: RegisterInfo {
             name: name.to_string(),
             // Interpreters take any batch size; they still advertise the
@@ -845,13 +992,16 @@ fn register_spec_engine(
     replace: bool,
 ) -> Result<Registration> {
     let cache_hit = !replace && engines.contains_key(&spec.name);
+    let mut cache_delta = CacheCounters::default();
     if !cache_hit {
-        let engine = build_engine_from_spec(kind, spec, opts)?;
+        let (engine, delta) = with_cache_delta(|| build_engine_from_spec(kind, spec, opts))?;
+        cache_delta = delta;
         finish_engine(engines, &spec.name, engine, &buckets);
     }
     let engine = engines.get(&spec.name).expect("engine registered above");
     Ok(Registration {
         shared: engine.shareable(),
+        cache_delta,
         info: RegisterInfo {
             name: spec.name.clone(),
             buckets: engine.batch_buckets().unwrap_or(buckets),
@@ -859,6 +1009,45 @@ fn register_spec_engine(
             compile_ms: engine.compile_ms(),
             cache_hit,
             params: spec.param_count(),
+            engine: engine.name().to_string(),
+            workers: 1,
+            generation: 1,
+        },
+    })
+}
+
+/// Registry tail for a program that was already lowered (artifact load):
+/// wrap it in the optimized interpreter and publish it exactly like a
+/// spec-built engine. No lowering happens here, so the cache delta is zero
+/// by construction — the artifact *is* the cache's payload.
+fn register_program_engine(
+    engines: &mut HashMap<String, Box<dyn Engine>>,
+    name: &str,
+    program: Program,
+    buckets: Vec<usize>,
+    replace: bool,
+) -> Result<Registration> {
+    let input_shape = program.input_shape().to_vec();
+    // packed panel elements — the artifact does not carry the original
+    // spec, so the resident weight footprint stands in for param count
+    let params = program.summary().weight_elems;
+    let cache_hit = !replace && engines.contains_key(name);
+    if !cache_hit {
+        let engine: Box<dyn Engine> =
+            Box::new(crate::compiler::exec::OptInterp::from_program(program));
+        finish_engine(engines, name, engine, &buckets);
+    }
+    let engine = engines.get(name).expect("engine registered above");
+    Ok(Registration {
+        shared: engine.shareable(),
+        cache_delta: CacheCounters::default(),
+        info: RegisterInfo {
+            name: name.to_string(),
+            buckets: engine.batch_buckets().unwrap_or(buckets),
+            input_shape,
+            compile_ms: engine.compile_ms(),
+            cache_hit,
+            params,
             engine: engine.name().to_string(),
             workers: 1,
             generation: 1,

@@ -2,9 +2,12 @@
 //!
 //! ```text
 //! compiled-nn compile                      # PJRT-compile all models, print Table-1 compile row
+//! compiled-nn compile --model c_bh --out m.cnnprog [--dtype f32|bf16|i8] [--tune-reps N]
+//!                                          # lower offline into a mmap-able compiled artifact
 //! compiled-nn infer --model c_bh [--engine compiled|naive|optimized] [--batch N]
 //! compiled-nn compare --model c_bh        # all engines vs the golden oracle
 //! compiled-nn inspect --model c_bh        # §3.3 cost table + §3.2 memory plan + §3.5 folding
+//! compiled-nn inspect --artifact m.cnnprog # validate + dump a compiled artifact's header/summary
 //! compiled-nn explain [--model c_bh] [--batch N]   # cost-model lowering report (builtin demo net without --model)
 //! compiled-nn precision                   # §3.4 approximation error table
 //! compiled-nn table1 [--iters N]          # quick Table-1 analog (benches do it properly)
@@ -80,7 +83,7 @@ impl Args {
 fn run() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
-        "compile" => cmd_compile(),
+        "compile" => cmd_compile(&args),
         "infer" => cmd_infer(&args),
         "compare" => cmd_compare(&args),
         "inspect" => cmd_inspect(&args),
@@ -100,6 +103,10 @@ fn run() -> Result<()> {
 const HELP: &str = "compiled-nn — JIT-compiled NN inference (paper reproduction)
 commands: compile | infer | compare | inspect | explain | precision | table1 | serve
 engines (--engine): compiled (needs the `pjrt` build feature) | optimized | naive
+artifacts: compile --model NAME --out FILE [--dtype f32|bf16|i8] [--tune-reps N]
+           inspect --artifact FILE
+cache: export COMPILED_NN_CACHE_DIR (or the serving config's `cache_dir` key) to
+       mmap-load cached artifacts instead of re-lowering on every start
 see the module docs in rust/src/main.rs for flags";
 
 /// Deterministic golden input, bit-identical to aot.py's.
@@ -111,7 +118,13 @@ fn golden_input(seed: u64, batch: usize, item_shape: &[usize]) -> Tensor {
     Tensor::from_vec(&shape, rng.uniform_vec(n))
 }
 
-fn cmd_compile() -> Result<()> {
+/// `compile` without `--model` keeps the original PJRT Table-1 behavior;
+/// with `--model NAME --out FILE` it lowers offline into a versioned,
+/// mmap-able compiled artifact (the fleet cold-start path).
+fn cmd_compile(args: &Args) -> Result<()> {
+    if args.get("model").is_some() {
+        return cmd_compile_artifact(args);
+    }
     if !EngineKind::Compiled.available() {
         bail!(
             "`compile` needs the compiled engine, which is unavailable on this \
@@ -128,6 +141,59 @@ fn cmd_compile() -> Result<()> {
             name, entry.params, entry.baked, engine.compile_ms()
         );
     }
+    Ok(())
+}
+
+/// Resolve a model name for the artifact commands: the manifest wins when
+/// it resolves and lists the name; otherwise the builtin demo nets work
+/// with no baked artifacts at all.
+fn resolve_spec(name: &str) -> Result<compiled_nn::model::spec::ModelSpec> {
+    if let Ok(manifest) = Manifest::load_default() {
+        if manifest.models.contains_key(name) {
+            return load_model(&manifest.models_dir, name);
+        }
+    }
+    match name {
+        "tiny_cnn" => Ok(compiled_nn::model::builder::tiny_cnn(7)),
+        "wide_cnn" => Ok(compiled_nn::model::builder::wide_cnn(7)),
+        "square_mlp" => Ok(compiled_nn::model::builder::square_mlp(7, 64, 3)),
+        other => bail!(
+            "unknown model `{other}`: not in the manifest and not a builtin \
+             (tiny_cnn | wide_cnn | square_mlp)"
+        ),
+    }
+}
+
+/// `compile --model NAME --out FILE [--dtype f32|bf16|i8] [--tune-reps N]`:
+/// lower once (optionally with measured autotuning) and serialize the
+/// program to a compiled artifact that `inspect --artifact`, the serving
+/// cache, and `Coordinator::hot_swap_artifact` consume.
+fn cmd_compile_artifact(args: &Args) -> Result<()> {
+    use compiled_nn::compiler::artifact::{save_program, spec_content_hash};
+    use compiled_nn::compiler::program::{CompileOptions, Program, TuneMode};
+
+    let name = args.req("model")?;
+    let out = args.req("out")?;
+    let spec = resolve_spec(name)?;
+    let mut opts = CompileOptions::default();
+    if let Some(d) = args.get("dtype") {
+        opts.weight_dtype = compiled_nn::nn::simd::WeightDtype::parse(d)
+            .with_context(|| format!("unknown --dtype `{d}` (expected f32|bf16|i8)"))?;
+    }
+    if let Some(r) = args.get("tune-reps") {
+        let reps: u32 = r.parse().context("--tune-reps must be an integer")?;
+        opts.tune = TuneMode::Measured { reps: reps.max(1) };
+    }
+    let t0 = Instant::now();
+    let program = Program::lower(&spec, opts)?;
+    let lower_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let path = std::path::Path::new(out);
+    save_program(&program, spec_content_hash(&spec), opts, path)?;
+    let bytes = std::fs::metadata(path)?.len();
+    println!(
+        "compiled `{name}` → {} ({bytes} bytes, lowered in {lower_ms:.1} ms)",
+        path.display()
+    );
     Ok(())
 }
 
@@ -206,6 +272,9 @@ fn cmd_compare(args: &Args) -> Result<()> {
 }
 
 fn cmd_inspect(args: &Args) -> Result<()> {
+    if let Some(path) = args.get("artifact") {
+        return cmd_inspect_artifact(std::path::Path::new(path));
+    }
     let name = args.req("model")?;
     let manifest = Manifest::load_default()?;
     let spec = load_model(&manifest.models_dir, name)?;
@@ -254,13 +323,42 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `inspect --artifact FILE`: validate + mmap-load a compiled artifact and
+/// dump its header fields, the lowered-program summary, and the persisted
+/// per-layer lowering report (including any measured-tuning winners).
+fn cmd_inspect_artifact(path: &std::path::Path) -> Result<()> {
+    use compiled_nn::compiler::artifact::load_program;
+
+    let t0 = Instant::now();
+    let (program, info) = load_program(path)
+        .map_err(|e| anyhow::anyhow!("loading artifact {}: {e}", path.display()))?;
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("== artifact {}", path.display());
+    println!(
+        "format v{}, spec hash {:016x}, cpu features {:#06x}, required lanes {}",
+        info.version, info.spec_hash, info.features, info.required_lanes
+    );
+    println!(
+        "meta {} B + weight blob {} B = {} B total; validated + mapped in {load_ms:.2} ms",
+        info.meta_bytes, info.blob_bytes, info.total_bytes
+    );
+    println!("options: {:?}", info.options);
+    println!("lowered program:");
+    print!("{}", program.summary());
+    print!("{}", program.summary().report.render_table());
+    Ok(())
+}
+
 /// `explain [--model NAME] [--batch N]`: lower under the default
 /// (cost-model `Auto`) options and print the per-layer lowering report —
 /// every candidate the estimator priced, the chosen scheme, and why.
 /// Without `--model` it explains the builtin demo net, so the command
-/// works even before any artifacts are baked.
+/// works even before any artifacts are baked. The lowering goes through
+/// the artifact cache when `COMPILED_NN_CACHE_DIR` is set, and the cache's
+/// global hit/miss/invalidation counters print either way.
 fn cmd_explain(args: &Args) -> Result<()> {
-    use compiled_nn::compiler::program::{CompileOptions, Program};
+    use compiled_nn::compiler::artifact::ProgramCache;
+    use compiled_nn::compiler::program::CompileOptions;
 
     let batch = args.usize_or("batch", 1)?.max(1);
     let spec = match args.get("model") {
@@ -273,11 +371,21 @@ fn cmd_explain(args: &Args) -> Result<()> {
             compiled_nn::model::builder::tiny_cnn(7)
         }
     };
-    let program = Program::lower(
-        &spec,
-        CompileOptions { batch_hint: batch, ..Default::default() },
-    )?;
+    let cache = ProgramCache::global();
+    let program =
+        cache.lower_or_load(&spec, CompileOptions { batch_hint: batch, ..Default::default() })?;
     print!("{}", program.summary().report.render_table());
+    let c = cache.counters();
+    match cache.dir() {
+        Some(dir) => println!(
+            "artifact cache {}: {} hit(s), {} miss(es), {} invalidated",
+            dir.display(),
+            c.hits,
+            c.misses,
+            c.invalidated
+        ),
+        None => println!("artifact cache disabled (set COMPILED_NN_CACHE_DIR to enable)"),
+    }
     Ok(())
 }
 
@@ -426,6 +534,14 @@ fn cmd_serve_tcp(cfg_path: &str, args: &Args) -> Result<()> {
     use compiled_nn::coordinator::tcp::TcpServer;
 
     let cfg = ServingConfig::load(std::path::Path::new(cfg_path))?;
+    // The global artifact cache reads the env var at first use, which is
+    // the first registration below — export the config key before the
+    // coordinator starts. An operator-exported var wins over the config.
+    if let Some(dir) = &cfg.cache_dir {
+        if std::env::var_os("COMPILED_NN_CACHE_DIR").is_none() {
+            std::env::set_var("COMPILED_NN_CACHE_DIR", dir);
+        }
+    }
     let seconds = args.usize_or("seconds", 0)?;
     let mut opts = cfg.tcp_options();
     if let Some(v) = args.get("max-inflight") {

@@ -1,0 +1,113 @@
+//! Persistent compiled-artifact cache behavior, end to end: two serving
+//! rounds in ONE process against the same cache directory. The first round
+//! populates the cache (every registration lowers and saves an artifact);
+//! the second round must come up **without a single `Program::lower`
+//! call** — every registration mmap-loads its artifact — and the cache
+//! hits must land in the per-model serving metrics.
+//!
+//! This is its own test binary because it sets `COMPILED_NN_CACHE_DIR`
+//! before the global `ProgramCache` initializes; sharing a process with
+//! tests that assert exact uncached `lower_count()` deltas (serving_stress)
+//! would poison their accounting. An operator/CI-exported
+//! `COMPILED_NN_CACHE_DIR` is honored; otherwise a per-process temp dir is
+//! used so local runs start cold.
+
+use std::time::Duration;
+
+use compiled_nn::compiler::artifact::ProgramCache;
+use compiled_nn::compiler::program::lower_count;
+use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
+use compiled_nn::engine::EngineKind;
+use compiled_nn::model::builder::tiny_cnn;
+use compiled_nn::model::spec::ModelSpec;
+use compiled_nn::nn::simd::WeightDtype;
+use compiled_nn::nn::tensor::Tensor;
+use compiled_nn::runtime::artifact::Manifest;
+use compiled_nn::util::rng::SplitMix64;
+
+const ITEM: usize = 8 * 8 * 3;
+
+fn model(name: &str, seed: u64) -> ModelSpec {
+    let mut spec = tiny_cnn(seed);
+    spec.name = name.to_string();
+    spec
+}
+
+fn config() -> CoordinatorConfig {
+    CoordinatorConfig {
+        max_wait: Duration::from_micros(300),
+        queue_depth: 512,
+        engine: EngineKind::Optimized,
+        workers: 2,
+        intra_threads: 1,
+        weight_dtype: WeightDtype::F32,
+    }
+}
+
+/// One serving round: start a coordinator, register both models, push a
+/// little traffic through each, and return the outputs for a fixed input
+/// plus each model's (cache_hits, cache_misses) metric counters.
+fn serving_round(x0: &Tensor) -> (Vec<Vec<f32>>, Vec<(u64, u64)>) {
+    let coord = Coordinator::start(Manifest::empty(), config()).unwrap();
+    let mut outs = Vec::new();
+    let mut cache = Vec::new();
+    let mut rng = SplitMix64::new(9);
+    for (name, seed) in [("cache_a", 91), ("cache_b", 92)] {
+        let client = coord.register_spec(&model(name, seed), &[1, 4]).unwrap();
+        for _ in 0..8 {
+            let x = Tensor::from_vec(&[8, 8, 3], rng.uniform_vec(ITEM));
+            let out = client.infer(x).unwrap();
+            assert_eq!(out.shape(), &[1, 10]);
+        }
+        outs.push(client.infer(x0.clone()).unwrap().data().to_vec());
+        let m = coord.metrics(name).unwrap();
+        assert_eq!(m.errors.get(), 0, "{name} had errors");
+        cache.push((m.cache_hits.get(), m.cache_misses.get()));
+    }
+    coord.shutdown();
+    (outs, cache)
+}
+
+#[test]
+fn second_round_serves_from_cache_with_zero_lowerings() {
+    // Point the global cache at a directory BEFORE its first use. CI may
+    // export the var itself (the cache-behavior leg does); locally, fall
+    // back to a per-process temp dir so the first round is genuinely cold.
+    if std::env::var_os("COMPILED_NN_CACHE_DIR").is_none() {
+        let dir = std::env::temp_dir().join(format!("cnn-cache-{}", std::process::id()));
+        std::env::set_var("COMPILED_NN_CACHE_DIR", &dir);
+    }
+    assert!(ProgramCache::global().dir().is_some(), "cache did not pick up the env var");
+
+    let x0 = Tensor::from_vec(&[8, 8, 3], SplitMix64::new(424242).uniform_vec(ITEM));
+
+    // Round 1: populate. Each registration either lowers + saves (cold
+    // dir) or hits an artifact a previous CI round left behind — either
+    // way every registration is accounted for in lowers + hits.
+    let lowers0 = lower_count();
+    let c0 = ProgramCache::global().counters();
+    let (outs1, _) = serving_round(&x0);
+    let round1_lowers = lower_count() - lowers0;
+    let c1 = ProgramCache::global().counters();
+    assert_eq!(
+        round1_lowers + (c1.hits - c0.hits),
+        2,
+        "each registration must either lower once or hit the cache"
+    );
+
+    // Round 2: a fresh coordinator over the now-warm cache. Zero
+    // lowerings — both programs come off the mmap — and the hits show up
+    // in both the global counters and the per-model serving metrics.
+    let lowers1 = lower_count();
+    let (outs2, cache2) = serving_round(&x0);
+    assert_eq!(lower_count() - lowers1, 0, "warm cache still re-lowered");
+    let c2 = ProgramCache::global().counters();
+    assert!(c2.hits >= c1.hits + 2, "expected 2 more cache hits, got {:?}", c2);
+    for (name, (hits, misses)) in ["cache_a", "cache_b"].iter().zip(&cache2) {
+        assert_eq!(*hits, 1, "{name}: registration cache hit not recorded in metrics");
+        assert_eq!(*misses, 0, "{name}: warm registration counted a miss");
+    }
+
+    // and the cached artifacts serve bitwise-identical results
+    assert_eq!(outs1, outs2, "cache round-trip changed served outputs");
+}

@@ -14,7 +14,9 @@
 //! re-instantiates the whole scheme × lane × thread grid at bf16 and i8
 //! weight storage. The bit-exact combo (pinned to scalar lanes, a single
 //! task, and f32 storage) is additionally held to bit-for-bit equality on
-//! the MLPs, batched included.
+//! the MLPs, batched included. The artifact round-trip test reuses the
+//! same combo grid to prove `save_program`/`load_program` reproduce every
+//! lowered program bitwise from the mmap'd file.
 //!
 //! Failures print the propcheck seed (`PROPCHECK_SEED=0x… cargo test
 //! fuzz_`) plus the failing spec's own seed, so any case replays exactly.
@@ -228,6 +230,71 @@ fn fuzz_dense_gemm_mlps_match_naive() {
         |r: &mut SplitMix64| (random_mlp(r), r.next_u64()),
         |(spec, input_seed)| differential_case(spec, *input_seed, true),
     );
+}
+
+/// Artifact round-trip axis: every scheme × lane × dtype combo above must
+/// survive `save_program` → `load_program` **bitwise** — the loaded
+/// program's weight panels borrow straight out of the mmap'd file, so any
+/// codec slip (wrong tag, misaligned blob window, truncated scale vector)
+/// shows up as a hard diff here, not as a tolerance flake. Runs a fixed
+/// conv net and a fixed MLP through each combo at every batch size and
+/// requires the serialized twin to reproduce the in-memory program's
+/// outputs exactly.
+#[test]
+fn fuzz_artifact_roundtrip_is_bitwise_identical() {
+    use compiled_nn::compiler::artifact::{load_program, save_program, spec_content_hash};
+    use compiled_nn::compiler::program::{ArenaPool, Program};
+
+    let dir = std::env::temp_dir().join(format!("cnn-artifact-fuzz-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp artifact dir");
+
+    // fixed seeds → deterministic specs; one conv net, one dense MLP
+    let mut gen = SplitMix64::new(0xA57F_AC70_5EED_0001);
+    let specs = [random_conv_net(&mut gen), random_mlp(&mut gen)];
+
+    for spec in &specs {
+        let hash = spec_content_hash(spec);
+        let item: usize = spec.input_shape.iter().product();
+        for (label, opts) in combos() {
+            let program = Program::lower(spec, opts).unwrap_or_else(|e| {
+                panic!("spec seed {}: {label}: lowering failed: {e}", spec.seed)
+            });
+            let path = dir.join(format!("{}-{label}.cnnprog", spec.seed));
+            save_program(&program, hash, opts, &path).unwrap_or_else(|e| {
+                panic!("spec seed {}: {label}: save failed: {e}", spec.seed)
+            });
+            let (loaded, info) = load_program(&path).unwrap_or_else(|e| {
+                panic!("spec seed {}: {label}: load failed: {e}", spec.seed)
+            });
+            assert_eq!(info.spec_hash, hash, "{label}: header spec hash drifted");
+
+            let mut pool_a = ArenaPool::new();
+            let mut pool_b = ArenaPool::new();
+            for &batch in &BATCHES {
+                let mut rng = SplitMix64::new(spec.seed ^ (batch as u64));
+                let mut shape = vec![batch];
+                shape.extend_from_slice(&spec.input_shape);
+                let x = Tensor::from_vec(&shape, rng.uniform_vec(batch * item));
+                let a = program.infer_pooled(&x, &mut pool_a).unwrap_or_else(|e| {
+                    panic!("spec seed {}: {label}: in-memory run: {e}", spec.seed)
+                });
+                let b = loaded.infer_pooled(&x, &mut pool_b).unwrap_or_else(|e| {
+                    panic!("spec seed {}: {label}: loaded run: {e}", spec.seed)
+                });
+                assert_eq!(a.len(), b.len(), "{label}: output count");
+                if a[0].data() != b[0].data() {
+                    let d = a[0].max_abs_diff(&b[0]);
+                    panic!(
+                        "spec seed {}: batch {batch}: {label}: loaded artifact \
+                         is not bitwise identical (max |Δ| = {d})",
+                        spec.seed
+                    );
+                }
+            }
+            let _ = std::fs::remove_file(&path);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 /// The §3.4 merged store loops must hold up under repeated inference over

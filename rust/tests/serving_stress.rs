@@ -20,8 +20,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use compiled_nn::compiler::artifact::{save_program, spec_content_hash};
 use compiled_nn::compiler::exec::OptInterp;
-use compiled_nn::compiler::program::{lower_count, CompileOptions};
+use compiled_nn::compiler::program::{lower_count, CompileOptions, Program};
 use compiled_nn::coordinator::protocol::Response;
 use compiled_nn::coordinator::server::{Coordinator, CoordinatorConfig};
 use compiled_nn::coordinator::tcp::{TcpClient, TcpOptions, TcpServer};
@@ -398,6 +399,93 @@ fn hot_swap_to_quantized_twin_under_fire() {
     let moved = f32_out.max_abs_diff(&after);
     assert!(moved > 1e-7, "i8 swap left the served outputs bit-identical to f32");
     assert!(moved < 0.15, "i8 artifact drifted past the quantization envelope: {moved}");
+    coord.shutdown();
+}
+
+/// The persistent-artifact half of hot-swap: a live lane is swapped to a
+/// twin **loaded from a serialized artifact file** under fire. Zero lost
+/// replies, the generation bumps exactly like `hot_swap_spec`, the swap
+/// itself lowers nothing (the program comes off the mmap), and a
+/// shape-changing artifact is refused while the lane keeps serving.
+#[test]
+fn hot_swap_to_artifact_twin_under_fire() {
+    let _serial = SERIAL.lock().unwrap();
+    let lowers_before = lower_count();
+    let coord = Coordinator::start(Manifest::empty(), config(4)).unwrap();
+    let v1 = coord.register_spec(&model("art_m", 81), &[1, 4, 8]).unwrap();
+    assert_eq!(v1.info.generation, 1);
+
+    // compile the seed-82 twin to an artifact file up front (1 lowering)
+    let opts = CompileOptions { intra_threads: 1, ..CompileOptions::default() };
+    let twin = model("art_m", 82);
+    let program = Program::lower(&twin, opts).unwrap();
+    let dir = std::env::temp_dir().join(format!("cnn-swap-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("art_m-82.cnnprog");
+    save_program(&program, spec_content_hash(&twin), opts, &path).unwrap();
+
+    let x0 = Tensor::from_vec(&[8, 8, 3], SplitMix64::new(8123).uniform_vec(ITEM));
+    let before = v1.infer(x0.clone()).unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let client = v1.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(6200 + t as u64);
+                let mut oks = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    let x = Tensor::from_vec(&[8, 8, 3], rng.uniform_vec(ITEM));
+                    // zero lost / failed replies across the artifact swap
+                    let out = client.infer(x).expect("request lost across artifact hot-swap");
+                    assert_eq!(out.shape(), &[1, 10]);
+                    oks += 1;
+                }
+                oks
+            })
+        })
+        .collect();
+
+    // swap the live lane to the artifact-loaded twin mid-fire
+    std::thread::sleep(Duration::from_millis(100));
+    let v2 = coord.hot_swap_artifact("art_m", &path, &[1, 4, 8]).unwrap();
+    assert_eq!(v2.info.generation, 2, "artifact hot-swap must bump the generation");
+    std::thread::sleep(Duration::from_millis(100));
+    stop.store(true, Ordering::SeqCst);
+    let total: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert!(total > 0, "stress produced no traffic");
+
+    let m = coord.metrics("art_m").unwrap();
+    assert_eq!(m.errors.get(), 0, "artifact hot-swap caused request errors");
+    // lowerings: the v1 registration + the twin compiled above — the swap
+    // itself deserialized the program instead of lowering it
+    assert_eq!(lower_count() - lowers_before, 2, "artifact swap re-lowered");
+
+    // the lane serves the seed-82 weights the artifact carries …
+    let after = v2.infer(x0.clone()).unwrap();
+    assert!(before.max_abs_diff(&after) > 1e-6, "swap did not change the served artifact");
+    // … exactly: the mmap-loaded program is a bitwise twin of the one
+    // serialized above
+    let mut reference = OptInterp::from_program(program);
+    let expect = reference
+        .infer(&Tensor::from_vec(&[1, 8, 8, 3], x0.data().to_vec()))
+        .unwrap();
+    assert!(
+        after.max_abs_diff(&expect[0]) < 1e-6,
+        "swapped lane diverged from the serialized program"
+    );
+
+    // a shape-changing artifact is refused and the lane keeps serving
+    let wide = compiled_nn::model::builder::wide_cnn(7);
+    let wide_prog = Program::lower(&wide, opts).unwrap();
+    let wide_path = dir.join("wide.cnnprog");
+    save_program(&wide_prog, spec_content_hash(&wide), opts, &wide_path).unwrap();
+    let err = coord.hot_swap_artifact("art_m", &wide_path, &[1, 4, 8]).unwrap_err();
+    assert!(err.to_string().contains("input shape"), "{err}");
+    let still = v2.infer(Tensor::from_vec(&[8, 8, 3], vec![0.1; ITEM])).unwrap();
+    assert_eq!(still.shape(), &[1, 10]);
+    let _ = std::fs::remove_dir_all(&dir);
     coord.shutdown();
 }
 
